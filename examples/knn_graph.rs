@@ -1,0 +1,49 @@
+//! k-NN graph construction (Algorithm 2's outer loop) on an image-like
+//! dataset, reporting the paper's headline metric: coordinate-distance
+//! computations vs exact graph construction.
+//!
+//!     cargo run --release --example knn_graph
+
+use bmonn::baselines::exact;
+use bmonn::coordinator::knn::knn_graph_dense;
+use bmonn::coordinator::BanditParams;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::rng::Rng;
+
+fn main() {
+    let (n, d, k) = (500, 2048, 5);
+    let data = synthetic::image_like(n, d, 7);
+    println!("building {k}-NN graph over n={n} d={d} ...");
+
+    let mut engine = NativeEngine::default();
+    let mut rng = Rng::new(1);
+    let mut counter = Counter::new();
+    let params = BanditParams { k, delta: 0.01, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let g = knn_graph_dense(&data, Metric::L2Sq, &params, &mut engine,
+                            &mut rng, &mut counter);
+    let elapsed = t0.elapsed();
+
+    // accuracy vs brute force on a sample of nodes
+    let mut correct = 0;
+    let sample = 50.min(n);
+    for q in 0..sample {
+        let truth = exact::knn_point(&data, q, k, Metric::L2Sq,
+                                     &mut Counter::new());
+        let got: std::collections::HashSet<_> =
+            g.neighbors[q].iter().collect();
+        let want: std::collections::HashSet<_> = truth.ids.iter().collect();
+        correct += (got == want) as usize;
+    }
+    let exact_units = (n * (n - 1) * d) as u64;
+    println!("done in {elapsed:?}");
+    println!("coordinate ops : {} (exact would be {})", counter.get(),
+             exact_units);
+    println!("gain           : {:.1}x",
+             exact_units as f64 / counter.get() as f64);
+    println!("accuracy       : {}/{sample} sampled nodes exact", correct);
+    println!("exact-evals    : {}", g.metrics.exact_evals);
+    assert!(correct * 100 >= sample * 95, "graph accuracy below 95%");
+}

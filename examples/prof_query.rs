@@ -1,0 +1,29 @@
+//! Profiling driver for the §Perf pass: 200 full 5-NN queries on the
+//! reference workload (n=2048, d=1024). Use with
+//! `perf record -g target/release/examples/prof_query`.
+
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::BanditParams;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::rng::Rng;
+
+fn main() {
+    let data = synthetic::image_like(2048, 1024, 7);
+    let params = BanditParams { k: 5, ..Default::default() };
+    let mut engine = NativeEngine::default();
+    let t0 = std::time::Instant::now();
+    let mut units = 0u64;
+    for rep in 0..200u64 {
+        let mut rng = Rng::new(rep);
+        let mut c = Counter::new();
+        let r = knn_point_dense(&data, (rep % 64) as usize, Metric::L2Sq,
+                                &params, &mut engine, &mut rng, &mut c);
+        std::hint::black_box(&r);
+        units += c.get();
+    }
+    let el = t0.elapsed();
+    println!("200 queries in {el:?} ({} units, {:.2} ns/unit)",
+             units, el.as_nanos() as f64 / units as f64);
+}

@@ -1,0 +1,46 @@
+//! Quickstart: find the 5 nearest neighbors of a point with BMO-NN and
+//! compare the cost to exact computation.
+//!
+//!     cargo run --release --example quickstart
+
+use bmonn::baselines::exact;
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::BanditParams;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::rng::Rng;
+
+fn main() {
+    // Tiny-ImageNet-like workload: 2000 image vectors in 4096 dims.
+    let (n, d, k) = (2000, 4096, 5);
+    let data = synthetic::image_like(n, d, 42);
+    println!("dataset: n={n} d={d}, query = point 0, k={k}");
+
+    // --- BMO-NN ----------------------------------------------------------
+    let mut engine = NativeEngine::default();
+    let mut rng = Rng::new(0);
+    let mut counter = Counter::new();
+    let params = BanditParams { k, delta: 0.01, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let res = knn_point_dense(&data, 0, Metric::L2Sq, &params, &mut engine,
+                              &mut rng, &mut counter);
+    let bmo_time = t0.elapsed();
+
+    // --- exact baseline ---------------------------------------------------
+    let mut c_exact = Counter::new();
+    let t1 = std::time::Instant::now();
+    let truth = exact::knn_point(&data, 0, k, Metric::L2Sq, &mut c_exact);
+    let exact_time = t1.elapsed();
+
+    println!("\nBMO-NN   : {:?}  ({} coord ops, {} exact-evals, {:?})",
+             res.ids, counter.get(), res.metrics.exact_evals, bmo_time);
+    println!("exact    : {:?}  ({} coord ops, {:?})",
+             truth.ids, c_exact.get(), exact_time);
+    println!("\ngain     : {:.1}x fewer coordinate-distance computations",
+             c_exact.get() as f64 / counter.get() as f64);
+    let same = res.ids.iter().collect::<std::collections::HashSet<_>>()
+        == truth.ids.iter().collect::<std::collections::HashSet<_>>();
+    println!("correct  : {same}");
+    assert!(same, "BMO-NN returned a wrong neighbor set");
+}

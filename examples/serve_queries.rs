@@ -1,0 +1,130 @@
+//! End-to-end serving driver (DESIGN.md experiment E12): start the query
+//! server on an image-like dataset, fire batched k-NN queries from
+//! concurrent clients, and report latency/throughput/accuracy plus the
+//! paper's coordinate-op gain. This is the "all layers compose" proof:
+//! L3 server -> bandit coordinator -> pull engines.
+//!
+//!     cargo run --release --example serve_queries [-- --pjrt]
+
+use std::time::Instant;
+
+use bmonn::baselines::exact;
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::server::{Client, Server, ServerConfig};
+use bmonn::coordinator::BanditParams;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::{Counter, LatencyStats};
+use bmonn::runtime::pjrt::PjrtEngine;
+use bmonn::util::rng::Rng;
+
+fn main() {
+    let use_pjrt = std::env::args().any(|a| a == "--pjrt");
+    let (n, d, k, n_queries, n_clients) = (1500, 1024, 5, 200, 4);
+    let data = synthetic::image_like(n, d, 99);
+    let queries: Vec<(usize, Vec<f32>)> = {
+        let mut rng = Rng::new(5);
+        (0..n_queries)
+            .map(|_| {
+                let q = rng.below(n);
+                (q, data.row_vec(q))
+            })
+            .collect()
+    };
+    // ground truth for accuracy
+    let truth: Vec<Vec<u32>> = queries
+        .iter()
+        .map(|(q, _)| {
+            let mut r = exact::knn_point(&data, *q, k, Metric::L2Sq,
+                                         &mut Counter::new());
+            r.ids.insert(0, *q as u32); // self is returned by server
+            r.ids.truncate(k);
+            r.ids.clone()
+        })
+        .collect();
+
+    // optional: demonstrate the PJRT path composes end-to-end first
+    if use_pjrt {
+        println!("pjrt preflight: running one query through the AOT \
+                  JAX/Pallas artifact ...");
+        let mut engine = PjrtEngine::new(
+            std::path::Path::new("artifacts"), Metric::L2Sq)
+            .expect("artifacts missing - run `make artifacts`");
+        let mut params = BanditParams { k, ..Default::default() };
+        params.policy.round_pulls = engine.round_pulls();
+        let mut rng = Rng::new(17);
+        let mut c = Counter::new();
+        let res = knn_point_dense(&data, queries[0].0, Metric::L2Sq,
+                                  &params, &mut engine, &mut rng, &mut c);
+        println!("pjrt preflight OK: {:?} in {} artifact executions\n",
+                 res.ids, engine.executions);
+    }
+
+    let srv = Server::start(
+        data,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            params: BanditParams { k, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .expect("server start");
+    println!("serving on {} ({} queries, {} clients)", srv.addr,
+             n_queries, n_clients);
+
+    let addr = srv.addr;
+    let t0 = Instant::now();
+    let chunks: Vec<Vec<(usize, Vec<f32>)>> = queries
+        .chunks(n_queries / n_clients)
+        .map(|c| c.to_vec())
+        .collect();
+    let handles: Vec<_> = chunks
+        .into_iter()
+        .map(|chunk| {
+            std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                let mut lat = LatencyStats::default();
+                let mut answers = Vec::new();
+                let mut units = 0u64;
+                for (_q, vec) in chunk {
+                    let t = Instant::now();
+                    let (ids, _d, u) = cl.knn(&vec, k).unwrap();
+                    lat.record(t.elapsed());
+                    units += u;
+                    answers.push(ids);
+                }
+                (lat, answers, units)
+            })
+        })
+        .collect();
+    let mut lat = LatencyStats::default();
+    let mut all_answers = Vec::new();
+    let mut total_units = 0u64;
+    for h in handles {
+        let (l, a, u) = h.join().unwrap();
+        lat.merge(&l);
+        all_answers.extend(a);
+        total_units += u;
+    }
+    let wall = t0.elapsed();
+
+    // accuracy: compare as sets per query (answers arrive in chunk order,
+    // which matches the original order because chunks preserve it)
+    let mut correct = 0usize;
+    for (got, want) in all_answers.iter().zip(&truth) {
+        let g: std::collections::HashSet<_> = got.iter().collect();
+        let w: std::collections::HashSet<_> = want.iter().collect();
+        correct += (g == w) as usize;
+    }
+
+    let exact_units = (n_queries * (n - 1) * d) as u64;
+    println!("\nthroughput : {:.1} queries/s",
+             n_queries as f64 / wall.as_secs_f64());
+    println!("latency    : p50 {:?}  p99 {:?}  mean {:?}",
+             lat.percentile(50.0), lat.percentile(99.0), lat.mean());
+    println!("accuracy   : {:.3} ({} / {} exact top-{k} sets)",
+             correct as f64 / n_queries as f64, correct, n_queries);
+    println!("coord ops  : {total_units} (exact {exact_units}) -> gain {:.1}x",
+             exact_units as f64 / total_units as f64);
+    assert!(correct as f64 >= 0.97 * n_queries as f64,
+            "serving accuracy below 97%");
+}

@@ -1,0 +1,79 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+the image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md). Lowered with return_tuple=True; the rust
+side unwraps with ``Literal::to_tuple*``.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits one ``<name>.hlo.txt`` per artifact plus ``manifest.json`` recording
+the input/output shapes the rust runtime validates against.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, in_specs):
+    lowered = jax.jit(fn).lower(*in_specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to rebuild")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"artifacts": {}}
+    for name, (fn, in_specs, meta) in model.artifact_specs().items():
+        if only and name not in only:
+            continue
+        text = lower_one(name, fn, in_specs)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)}
+                for s in in_specs
+            ],
+            "meta": meta,
+        }
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when rebuilding a subset.
+    if only and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path}")
+
+
+if __name__ == "__main__":
+    main()

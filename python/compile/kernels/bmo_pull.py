@@ -1,0 +1,144 @@
+"""L1 Pallas kernels: the BMO-NN compute hot-spot.
+
+The hot path of BMO-NN is a *batched arm pull*: for a block of B candidate
+arms and T sampled coordinates, reduce the coordinate-wise distances
+``rho(rows[b, c_t], query[c_t])`` to a per-arm partial sum. This is a
+gather + elementwise + row-reduce, i.e. bandwidth-bound; the TPU-shaped
+design (DESIGN.md §Hardware-Adaptation) therefore:
+
+  * pre-gathers the sampled coordinates into a dense ``[B, T]`` tile in the
+    surrounding L2 jax graph (XLA gather is the HBM-side schedule), so the
+    kernel body is a dense vectorized VPU reduction;
+  * tiles arms with a 1-D grid and ``BlockSpec`` so each
+    ``BLOCK_ARMS x T`` tile (default 64x256 f32 = 64 KiB) fits VMEM
+    alongside the resident query tile;
+  * keeps the exact-distance fallback as a 2-D grid (arm-tile x dim-tile)
+    with an accumulating output block, the classic double-buffered
+    HBM->VMEM streaming reduction.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through the interpret path against
+``ref.py`` and the real-TPU perf is estimated from the VMEM footprint in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes; chosen so one (gathered, query, out) working set is
+# ~64-130 KiB, far under the ~16 MiB VMEM of a modern TPU core and small
+# enough for interpret-mode CPU testing to stay fast.
+BLOCK_ARMS = 64
+BLOCK_DIM = 256
+
+
+def _pull_kernel(g_ref, q_ref, o_ref, o2_ref, *, metric):
+    """One arm-tile: reduce coordinate distances across the T axis.
+
+    g_ref:  f32[BLOCK_ARMS, T] gathered candidate values
+    q_ref:  f32[1, T]          gathered query values (resident)
+    o_ref:  f32[BLOCK_ARMS]    per-arm partial sums Σx
+    o2_ref: f32[BLOCK_ARMS]    per-arm second moments Σx² (feeds the
+                               coordinator's empirical-variance CIs)
+    """
+    diff = g_ref[...] - q_ref[...]  # broadcast over arms
+    if metric == "l2":
+        v = diff * diff
+    else:  # l1
+        v = jnp.abs(diff)
+    o_ref[...] = jnp.sum(v, axis=1)
+    o2_ref[...] = jnp.sum(v * v, axis=1)
+
+
+def pull_gathered(gathered, query_g, *, metric="l2", block_arms=BLOCK_ARMS):
+    """Pallas reduction over pre-gathered tiles -> (Σx, Σx²) per arm.
+
+    gathered: f32[B, T]; query_g: f32[T]. B must be a multiple of
+    block_arms (the AOT shapes guarantee this; tests sweep it).
+    """
+    b, t = gathered.shape
+    if b % block_arms != 0:
+        block_arms = b  # degenerate single-tile fallback for odd test shapes
+    q2 = query_g[None, :]
+    return pl.pallas_call(
+        functools.partial(_pull_kernel, metric=metric),
+        grid=(b // block_arms,),
+        in_specs=[
+            pl.BlockSpec((block_arms, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_arms,), lambda i: (i,)),
+            pl.BlockSpec((block_arms,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), gathered.dtype),
+            jax.ShapeDtypeStruct((b,), gathered.dtype),
+        ],
+        interpret=True,
+    )(gathered, q2)
+
+
+def pull_rows(rows, query, coord_ids, *, metric="l2", block_arms=BLOCK_ARMS):
+    """Batched pull over explicit candidate rows.
+
+    rows f32[B, D], query f32[D], coord_ids i32[T] -> (f32[B], f32[B]):
+    per-arm (Σx, Σx²). The gather lives in the L2 graph (lowers to XLA
+    gather); the reduction is the L1 Pallas kernel.
+    """
+    g = jnp.take(rows, coord_ids, axis=1)
+    qg = jnp.take(query, coord_ids, axis=0)
+    return pull_gathered(g, qg, metric=metric, block_arms=block_arms)
+
+
+def pull_data(data, query, arm_ids, coord_ids, *, metric="l2",
+              block_arms=BLOCK_ARMS):
+    """Device-resident variant: data f32[N, D] stays on device; per round
+    only arm_ids i32[B] and coord_ids i32[T] cross the host boundary."""
+    rows = jnp.take(data, arm_ids, axis=0)
+    return pull_rows(rows, query, coord_ids, metric=metric,
+                     block_arms=block_arms)
+
+
+def _exact_kernel(r_ref, q_ref, o_ref, *, metric):
+    """Accumulating exact-distance tile: grid (arm-tile i, dim-tile j).
+
+    The output block is revisited for every j; j==0 zero-initializes.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    diff = r_ref[...] - q_ref[...]
+    if metric == "l2":
+        v = diff * diff
+    else:
+        v = jnp.abs(diff)
+    o_ref[...] += jnp.sum(v, axis=1)
+
+
+def exact_rows(rows, query, *, metric="l2", block_arms=BLOCK_ARMS,
+               block_dim=BLOCK_DIM):
+    """Full distances rows f32[B, D] vs query f32[D] -> f32[B]."""
+    b, d = rows.shape
+    if b % block_arms != 0:
+        block_arms = b
+    if d % block_dim != 0:
+        block_dim = d
+    q2 = query[None, :]
+    return pl.pallas_call(
+        functools.partial(_exact_kernel, metric=metric),
+        grid=(b // block_arms, d // block_dim),
+        in_specs=[
+            pl.BlockSpec((block_arms, block_dim), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_dim), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_arms,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), rows.dtype),
+        interpret=True,
+    )(rows, q2)

@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference implementation
+here; python/tests asserts allclose between the two over a hypothesis sweep
+of shapes and dtypes. These are also the semantic definition of what the
+rust native backend must compute (rust/src/runtime/native.rs mirrors them).
+"""
+
+import jax.numpy as jnp
+
+
+def pull_rows_ref(rows, query, coord_ids, metric="l2"):
+    """Partial distances of `rows` to `query` over sampled coordinates.
+
+    rows:      f32[B, D]  candidate-arm rows
+    query:     f32[D]
+    coord_ids: i32[T]     sampled coordinate indices (with replacement)
+    returns    f32[B]     sum over t of rho(rows[b, c_t], query[c_t])
+    """
+    g = rows[:, coord_ids]          # [B, T]
+    q = query[coord_ids]            # [T]
+    diff = g - q[None, :]
+    if metric == "l2":
+        v = diff * diff
+    elif metric == "l1":
+        v = jnp.abs(diff)
+    else:
+        raise ValueError(f"unknown metric {metric}")
+    return jnp.sum(v, axis=1)
+
+
+def pull_rows_moments_ref(rows, query, coord_ids, metric="l2"):
+    """(Σx, Σx²) per arm — matches the two-output Pallas pull kernel."""
+    g = rows[:, coord_ids]
+    q = query[coord_ids]
+    diff = g - q[None, :]
+    if metric == "l2":
+        v = diff * diff
+    elif metric == "l1":
+        v = jnp.abs(diff)
+    else:
+        raise ValueError(f"unknown metric {metric}")
+    return jnp.sum(v, axis=1), jnp.sum(v * v, axis=1)
+
+
+def pull_data_ref(data, query, arm_ids, coord_ids, metric="l2"):
+    """Device-resident variant: gather arm rows from the full dataset.
+
+    data:      f32[N, D]
+    arm_ids:   i32[B]
+    """
+    return pull_rows_ref(data[arm_ids], query, coord_ids, metric)
+
+
+def exact_rows_ref(rows, query, metric="l2"):
+    """Full (un-normalized) distances of each row to query. f32[B]."""
+    diff = rows - query[None, :]
+    if metric == "l2":
+        v = diff * diff
+    elif metric == "l1":
+        v = jnp.abs(diff)
+    else:
+        raise ValueError(f"unknown metric {metric}")
+    return jnp.sum(v, axis=1)
+
+
+def fwht_ref(x):
+    """Orthonormal Walsh-Hadamard transform via the explicit matrix.
+
+    x: f32[B, D] with D a power of two. O(D^2) — test oracle only.
+    """
+    d = x.shape[-1]
+    h = jnp.array([[1.0]])
+    while h.shape[0] < d:
+        h = jnp.block([[h, h], [h, -h]])
+    return (x @ h.T) / jnp.sqrt(d)
+
+
+def rotate_ref(x, signs):
+    """Randomized orthonormal rotation H @ D (Ailon-Chazelle)."""
+    return fwht_ref(x * signs[None, :])

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fast Walsh-Hadamard transform (Lemma 3 rotation).
+
+The Ailon-Chazelle randomized rotation ``H D x`` preprocesses a dataset so
+the coordinate-wise squared distances concentrate (lighter tails -> smaller
+sub-Gaussian constant -> fewer pulls). ``D`` is a random +-1 diagonal and
+``H`` the orthonormal Hadamard matrix, applied in O(d log d) by the
+in-register butterfly below.
+
+Grid: 1-D over row tiles; each tile holds ``BLOCK_ROWS`` full rows in VMEM
+(the butterfly is a pure permutation+add network along the row axis, so a
+row never leaves its tile -- no cross-tile traffic). The log2(d) stages are
+statically unrolled at trace time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 16
+
+
+def _fwht_body(x):
+    b, d = x.shape
+    h = 1
+    while h < d:
+        x = x.reshape(b, d // (2 * h), 2, h)
+        lo = x[:, :, 0, :]
+        hi = x[:, :, 1, :]
+        x = jnp.stack([lo + hi, lo - hi], axis=2).reshape(b, d)
+        h *= 2
+    return x / jnp.sqrt(jnp.asarray(d, x.dtype))
+
+
+def _rotate_kernel(x_ref, s_ref, o_ref):
+    """One row tile: sign flip then statically-unrolled butterfly."""
+    o_ref[...] = _fwht_body(x_ref[...] * s_ref[...])
+
+
+def rotate(x, signs, *, block_rows=BLOCK_ROWS):
+    """Orthonormal randomized rotation ``(H D) x`` per row.
+
+    x f32[B, D] (D a power of two), signs f32[D] in {-1, +1} -> f32[B, D].
+    Distance-preserving for l2: used to build the rotated Monte Carlo box.
+    """
+    b, d = x.shape
+    assert d & (d - 1) == 0, "FWHT requires power-of-two dimension"
+    if b % block_rows != 0:
+        block_rows = b
+    s2 = signs[None, :]
+    return pl.pallas_call(
+        _rotate_kernel,
+        grid=(b // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), x.dtype),
+        interpret=True,
+    )(x, s2)
+
+
+def fwht(x, *, block_rows=BLOCK_ROWS):
+    """Plain orthonormal FWHT (no sign diagonal)."""
+    return rotate(x, jnp.ones((x.shape[1],), x.dtype), block_rows=block_rows)

@@ -1,0 +1,121 @@
+"""L2: the jax compute graphs BMO-NN's coordinator executes via PJRT.
+
+Each public function here composes the L1 Pallas kernels (kernels/) into a
+fixed-shape graph that ``aot.py`` lowers once to HLO text. The rust runtime
+(rust/src/runtime/) loads those artifacts and calls them from the hot path;
+python never runs at query time.
+
+Graphs (all return 1-tuples — the AOT bridge lowers with return_tuple=True
+and the rust side unwraps with ``to_tuple1``):
+
+  pull_rows_{l2,l1}   rows[B,D], query[D], coord_ids[T]      -> (Σx[B], Σx²[B])
+  pull_data_{l2,l1}   data[N,D], query[D], arms[B], coords[T]-> (Σx[B], Σx²[B])
+  exact_rows_{l2,l1}  rows[B,D], query[D]                    -> dists[B]
+  rotate              x[B,D], signs[D]                       -> x'[B,D]
+  topk_scan           dists[N] (full exact pass)             -> (vals[K], ids[K])
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bmo_pull, wht
+
+
+def make_pull_rows(metric):
+    def pull_rows(rows, query, coord_ids):
+        # the kernel returns (Σx, Σx²) — already the output tuple
+        return bmo_pull.pull_rows(rows, query, coord_ids, metric=metric)
+
+    pull_rows.__name__ = f"pull_rows_{metric}"
+    return pull_rows
+
+
+def make_pull_data(metric):
+    def pull_data(data, query, arm_ids, coord_ids):
+        return bmo_pull.pull_data(data, query, arm_ids, coord_ids,
+                                  metric=metric)
+
+    pull_data.__name__ = f"pull_data_{metric}"
+    return pull_data
+
+
+def make_exact_rows(metric):
+    def exact_rows(rows, query):
+        return (bmo_pull.exact_rows(rows, query, metric=metric),)
+
+    exact_rows.__name__ = f"exact_rows_{metric}"
+    return exact_rows
+
+
+def rotate(x, signs):
+    return (wht.rotate(x, signs),)
+
+
+def make_topk_scan(k):
+    """Exact-computation baseline graph: brute-force distances + top-k.
+
+    Used by the coordinator for the exact fallback over a whole (padded)
+    dataset slab: data[N,D] vs query -> k smallest l2^2 dists + indices.
+    """
+
+    def topk_scan(data, query):
+        diff = data - query[None, :]
+        dists = jnp.sum(diff * diff, axis=1)
+        neg_vals, ids = jax.lax.top_k(-dists, k)
+        return (-neg_vals, ids.astype(jnp.int32))
+
+    topk_scan.__name__ = f"topk_scan_k{k}"
+    return topk_scan
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example shapes). These are the shapes the
+# default `make artifacts` bundle compiles; the rust runtime pads datasets
+# and batches up to them (see runtime/artifacts.rs).
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _s(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Default bundle dimensions. B/T match the batched pull policy defaults
+# (coordinator/batch.rs): 64 arms per round, 256 pulls per arm per round.
+N, D, B, T, K = 2048, 1024, 64, 256, 10
+
+
+def artifact_specs():
+    """name -> (callable, [ShapeDtypeStruct inputs], metadata dict)."""
+    specs = {}
+    for metric in ("l2", "l1"):
+        specs[f"pull_rows_{metric}"] = (
+            make_pull_rows(metric),
+            [_s((B, D)), _s((D,)), _s((T,), I32)],
+            {"b": B, "d": D, "t": T, "metric": metric},
+        )
+        specs[f"pull_data_{metric}"] = (
+            make_pull_data(metric),
+            [_s((N, D)), _s((D,)), _s((B,), I32), _s((T,), I32)],
+            {"n": N, "b": B, "d": D, "t": T, "metric": metric},
+        )
+        specs[f"exact_rows_{metric}"] = (
+            make_exact_rows(metric),
+            [_s((B, D)), _s((D,))],
+            {"b": B, "d": D, "metric": metric},
+        )
+    specs["rotate"] = (
+        rotate,
+        [_s((B, D)), _s((D,))],
+        {"b": B, "d": D},
+    )
+    specs["topk_scan"] = (
+        make_topk_scan(K),
+        [_s((N, D)), _s((D,))],
+        {"n": N, "d": D, "k": K},
+    )
+    return specs

@@ -1,0 +1,165 @@
+# pytest: Pallas kernels vs pure-jnp ref — the CORE correctness signal.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bmo_pull, ref, wht
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+@pytest.mark.parametrize("b,d,t", [(64, 1024, 256), (8, 32, 16), (1, 4, 1)])
+def test_pull_rows_matches_ref(metric, b, d, t):
+    rows = _rand((b, d), 0)
+    query = _rand((d,), 1)
+    rng = np.random.default_rng(2)
+    cids = jnp.asarray(rng.integers(0, d, size=t).astype(np.int32))
+    got_s, got_q = bmo_pull.pull_rows(rows, query, cids, metric=metric)
+    want_s, want_q = ref.pull_rows_moments_ref(rows, query, cids,
+                                               metric=metric)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_q, want_q, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+def test_pull_data_matches_ref(metric):
+    n, d, b, t = 128, 64, 16, 32
+    data = _rand((n, d), 3)
+    query = _rand((d,), 4)
+    rng = np.random.default_rng(5)
+    arms = jnp.asarray(rng.integers(0, n, size=b).astype(np.int32))
+    cids = jnp.asarray(rng.integers(0, d, size=t).astype(np.int32))
+    got_s, _got_q = bmo_pull.pull_data(data, query, arms, cids,
+                                       metric=metric)
+    want = ref.pull_data_ref(data, query, arms, cids, metric=metric)
+    np.testing.assert_allclose(got_s, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", ["l2", "l1"])
+@pytest.mark.parametrize("b,d", [(64, 1024), (16, 64), (3, 7)])
+def test_exact_rows_matches_ref(metric, b, d):
+    rows = _rand((b, d), 6)
+    query = _rand((d,), 7)
+    got = bmo_pull.exact_rows(rows, query, metric=metric)
+    want = ref.exact_rows_ref(rows, query, metric=metric)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_pull_is_unbiased_estimator_of_exact():
+    """E[pull/T * d] == exact distance: the paper's Eq. (2)/(4) invariant."""
+    b, d, t, reps = 4, 256, 64, 200
+    rows = _rand((b, d), 8)
+    query = _rand((d,), 9)
+    exact = np.asarray(ref.exact_rows_ref(rows, query, metric="l2"))
+    rng = np.random.default_rng(10)
+    acc = np.zeros(b)
+    for _ in range(reps):
+        cids = jnp.asarray(rng.integers(0, d, size=t).astype(np.int32))
+        acc += np.asarray(bmo_pull.pull_rows(rows, query, cids)[0]) / t * d
+    est = acc / reps
+    np.testing.assert_allclose(est, exact, rtol=0.15)
+
+
+# ----------------------------------------------------------------- WHT ---
+
+@pytest.mark.parametrize("b,d", [(16, 64), (4, 8), (2, 2), (1, 1)])
+def test_fwht_matches_matrix_ref(b, d):
+    x = _rand((b, d), 11)
+    got = wht.fwht(x)
+    want = ref.fwht_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_rotate_preserves_pairwise_l2():
+    """Lemma 3 prerequisite: H D is orthonormal, pairwise l2 preserved."""
+    b, d = 8, 128
+    x = _rand((b, d), 12)
+    rng = np.random.default_rng(13)
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=d).astype(np.float32))
+    xr = np.asarray(wht.rotate(x, signs))
+    x = np.asarray(x)
+    for i in range(b):
+        for j in range(i + 1, b):
+            a = np.sum((x[i] - x[j]) ** 2)
+            bb = np.sum((xr[i] - xr[j]) ** 2)
+            np.testing.assert_allclose(a, bb, rtol=1e-4)
+
+
+def test_rotate_flattens_spiky_vectors():
+    """The point of Lemma 3: a 1-hot difference spreads across coords."""
+    d = 256
+    x = np.zeros((2, d), dtype=np.float32)
+    x[0, 17] = 10.0  # pair differs in exactly one coordinate
+    rng = np.random.default_rng(14)
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=d).astype(np.float32))
+    xr = np.asarray(wht.rotate(jnp.asarray(x), signs))
+    coord_sq = (xr[0] - xr[1]) ** 2
+    # before: max coord-dist = 100; after: all coords equal at 100/d
+    assert coord_sq.max() < 100.0 / d * 1.01
+    np.testing.assert_allclose(coord_sq, np.full(d, 100.0 / d), rtol=1e-3)
+
+
+# ------------------------------------------------------ hypothesis sweep ---
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    d=st.integers(1, 64),
+    t=st.integers(1, 48),
+    metric=st.sampled_from(["l2", "l1"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pull_rows_hypothesis(b, d, t, metric, seed):
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    query = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    cids = jnp.asarray(rng.integers(0, d, size=t).astype(np.int32))
+    got_s, got_q = bmo_pull.pull_rows(rows, query, cids, metric=metric)
+    want_s, want_q = ref.pull_rows_moments_ref(rows, query, cids,
+                                               metric=metric)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_q, want_q, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    logd=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rotate_hypothesis_norm_preserved(b, logd, seed):
+    d = 1 << logd
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=d).astype(np.float32))
+    xr = np.asarray(wht.rotate(x, signs))
+    np.testing.assert_allclose(
+        np.sum(np.asarray(x) ** 2, axis=1),
+        np.sum(xr**2, axis=1),
+        rtol=1e-3,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 12),
+    d=st.integers(1, 48),
+    metric=st.sampled_from(["l2", "l1"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exact_rows_hypothesis(b, d, metric, seed):
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    query = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    got = bmo_pull.exact_rows(rows, query, metric=metric)
+    want = ref.exact_rows_ref(rows, query, metric=metric)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,72 @@
+# pytest: L2 graph shapes/semantics + AOT lowering smoke.
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_artifact_specs_cover_expected_set():
+    names = set(model.artifact_specs().keys())
+    assert {
+        "pull_rows_l2", "pull_rows_l1",
+        "pull_data_l2", "pull_data_l1",
+        "exact_rows_l2", "exact_rows_l1",
+        "rotate", "topk_scan",
+    } == names
+
+
+@pytest.mark.parametrize("name", sorted(model.artifact_specs().keys()))
+def test_artifact_runs_at_declared_shapes(name):
+    fn, in_specs, _meta = model.artifact_specs()[name]
+    rng = np.random.default_rng(42)
+    args = []
+    for s in in_specs:
+        if s.dtype == jnp.int32:
+            hi = s.shape[0] if len(s.shape) == 1 else 2
+            # index inputs must stay in range of the gathered axis;
+            # use the smallest plausible bound (d or n from meta)
+            bound = min(_meta.get("d", 8), _meta.get("n", _meta.get("d", 8)))
+            args.append(jnp.asarray(
+                rng.integers(0, bound, size=s.shape).astype(np.int32)))
+        else:
+            args.append(jnp.asarray(
+                rng.normal(size=s.shape).astype(np.float32)))
+    out = jax.jit(fn)(*args)
+    assert isinstance(out, tuple) and len(out) >= 1
+
+
+def test_topk_scan_matches_numpy():
+    fn, _, meta = model.artifact_specs()["topk_scan"]
+    n, d, k = meta["n"], meta["d"], meta["k"]
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(n, d)).astype(np.float32)
+    query = rng.normal(size=(d,)).astype(np.float32)
+    vals, ids = fn(jnp.asarray(data), jnp.asarray(query))
+    dists = np.sum((data - query) ** 2, axis=1)
+    want_ids = np.argsort(dists)[:k]
+    np.testing.assert_allclose(np.sort(vals), np.sort(dists[want_ids]),
+                               rtol=1e-4)
+    assert set(np.asarray(ids).tolist()) == set(want_ids.tolist())
+
+
+def test_rotate_graph_matches_matrix_ref():
+    fn, in_specs, meta = model.artifact_specs()["rotate"]
+    b, d = meta["b"], meta["d"]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    signs = jnp.asarray(rng.choice([-1.0, 1.0], size=d).astype(np.float32))
+    (got,) = fn(x, signs)
+    want = ref.rotate_ref(x, signs)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("name", ["pull_rows_l2", "exact_rows_l1", "rotate"])
+def test_aot_lowering_produces_hlo_text(name):
+    fn, in_specs, _ = model.artifact_specs()[name]
+    text = aot.lower_one(name, fn, in_specs)
+    assert "HloModule" in text
+    assert "ENTRY" in text

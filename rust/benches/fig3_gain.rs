@@ -1,0 +1,13 @@
+//! Fig 2 / Fig 3: gain in coordinate-wise distance computations over exact
+//! computation, varying n (3a) and d (3b), for BMO-NN vs LSH / kGraph /
+//! NGT. Run with `cargo bench --bench fig3_gain` (add BMONN_FULL=1 for the
+//! full-size sweep).
+
+use bmonn::bench_harness::figures;
+
+fn main() {
+    let quick = std::env::var_os("BMONN_FULL").is_none();
+    let seed = 42;
+    println!("{}", figures::fig3a(quick, seed).render());
+    println!("{}", figures::fig3b(quick, seed).render());
+}

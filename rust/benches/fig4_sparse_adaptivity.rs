@@ -1,0 +1,13 @@
+//! Fig 4(a): adaptivity ablation (uniform sampling at multiples of BMO's
+//! budget); Fig 4(b): sparse Monte Carlo box gains on gene-like data;
+//! Fig 4(c): coordinate-distance histograms.
+
+use bmonn::bench_harness::figures;
+
+fn main() {
+    let quick = std::env::var_os("BMONN_FULL").is_none();
+    let seed = 42;
+    println!("{}", figures::fig4a(quick, seed).render());
+    println!("{}", figures::fig4b(quick, seed).render());
+    println!("{}", figures::fig4c(quick, seed).render());
+}

@@ -1,0 +1,8 @@
+//! Fig 5: BMO k-means assignment-step gain over exact Lloyd's.
+
+use bmonn::bench_harness::figures;
+
+fn main() {
+    let quick = std::env::var_os("BMONN_FULL").is_none();
+    println!("{}", figures::fig5(quick, 42).render());
+}

@@ -1,0 +1,72 @@
+//! Fig 6: wall-clock comparison — BMO-NN (native and, when artifacts are
+//! built, PJRT) vs exact scan vs LSH, varying d. Index-construction time
+//! is excluded for all methods (the paper's accounting).
+
+use std::time::Instant;
+
+use bmonn::baselines::exact;
+use bmonn::baselines::lsh::{LshIndex, LshParams};
+use bmonn::bench_harness::{fmt_f, Report};
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::BanditParams;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::rng::Rng;
+
+fn main() {
+    let quick = std::env::var_os("BMONN_FULL").is_none();
+    let (n, k, nq) = if quick { (600, 5, 10) } else { (2000, 5, 30) };
+    let dims: &[usize] = if quick { &[256, 1024, 4096] }
+                         else { &[256, 1024, 4096, 8192] };
+    let mut rep = Report::new(
+        "Fig 6: wall-clock per query (index construction excluded)",
+        &["d", "algo", "us/query", "speedup vs exact"]);
+    for &d in dims {
+        let data = synthetic::image_like(n, d, 42);
+        let params = BanditParams { k, ..Default::default() };
+
+        // exact scan
+        let t0 = Instant::now();
+        for q in 0..nq {
+            let _ = exact::knn_point(&data, q, k, Metric::L2Sq,
+                                     &mut Counter::new());
+        }
+        let exact_us = t0.elapsed().as_micros() as f64 / nq as f64;
+
+        // BMO native
+        let mut engine = NativeEngine::default();
+        let mut rng = Rng::new(1);
+        let t1 = Instant::now();
+        for q in 0..nq {
+            let mut qrng = rng.fork(q as u64);
+            let _ = knn_point_dense(&data, q, Metric::L2Sq, &params,
+                                    &mut engine, &mut qrng,
+                                    &mut Counter::new());
+        }
+        let bmo_us = t1.elapsed().as_micros() as f64 / nq as f64;
+
+        // LSH (prebuilt index, query only)
+        let mut rng2 = Rng::new(2);
+        let idx = LshIndex::build(&data, Metric::L2Sq,
+                                  &LshParams { n_tables: 32, n_hashes: 8,
+                                               w: 4.0 },
+                                  &mut rng2);
+        let t2 = Instant::now();
+        for q in 0..nq {
+            let _ = idx.knn_query(data.row(q), Some(q), k,
+                                  &mut Counter::new());
+        }
+        let lsh_us = t2.elapsed().as_micros() as f64 / nq as f64;
+
+        for (name, us) in [("exact", exact_us), ("BMO-NN", bmo_us),
+                           ("LSH", lsh_us)] {
+            rep.row(vec![d.to_string(), name.into(), fmt_f(us, 0),
+                         format!("{:.2}x", exact_us / us)]);
+        }
+    }
+    rep.note("paper: BMO-NN ~1.5x faster than optimized exact and ~5x \
+              faster than LSH at d=12288; crossover vs exact appears as d \
+              grows");
+    println!("{}", rep.render());
+}

@@ -1,0 +1,9 @@
+//! Fig 7 (Appendix C-B): random HD rotations flatten coordinate-wise
+//! distance tails, shrinking the Hoeffding sub-Gaussian bound (Lemma 3).
+
+use bmonn::bench_harness::figures;
+
+fn main() {
+    let quick = std::env::var_os("BMONN_FULL").is_none();
+    println!("{}", figures::fig7(quick, 42).render());
+}

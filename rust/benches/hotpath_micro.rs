@@ -1,0 +1,103 @@
+//! Microbenchmarks of the L3 hot path (EXPERIMENTS.md §Perf): per-engine
+//! pull throughput, bandit-loop overhead per round, and heap op costs.
+//! This is the profile driver for the performance pass.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use bmonn::bench_harness::{fmt_f, Report};
+use bmonn::coordinator::arms::{ArmSet, DenseArms, PullEngine, ScalarEngine};
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::BanditParams;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::rng::Rng;
+
+fn bench<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() {
+    let (n, d) = (2048, 1024);
+    let data = synthetic::image_like(n, d, 7);
+    let query = data.row_vec(0);
+    let rows: Vec<u32> = (1..33).collect();
+    let mut rng = Rng::new(8);
+    let coords: Vec<u32> = (0..256).map(|_| rng.below(d) as u32).collect();
+    let mut rep = Report::new(
+        "hot-path microbenchmarks",
+        &["op", "ns/op", "ns/coordinate", "notes"]);
+
+    // engine partial_sums: 32 arms x 256 coords = 8192 coord ops
+    let coord_ops = (rows.len() * coords.len()) as f64;
+    let mut scalar = ScalarEngine;
+    let (mut s, mut q) = (Vec::new(), Vec::new());
+    let ns = bench(200, || {
+        scalar.partial_sums(&data, &query, &rows, &coords, Metric::L2Sq,
+                            &mut s, &mut q);
+        black_box(&s);
+    });
+    rep.row(vec!["scalar partial_sums 32x256".into(), fmt_f(ns, 0),
+                 fmt_f(ns / coord_ops, 2), "reference".into()]);
+    let mut native = NativeEngine::default();
+    let ns = bench(200, || {
+        native.partial_sums(&data, &query, &rows, &coords, Metric::L2Sq,
+                            &mut s, &mut q);
+        black_box(&s);
+    });
+    rep.row(vec!["native partial_sums 32x256".into(), fmt_f(ns, 0),
+                 fmt_f(ns / coord_ops, 2), "hot path".into()]);
+
+    // exact distances
+    let ns = bench(200, || {
+        native.exact_dists(&data, &query, &rows, Metric::L2Sq, &mut s);
+        black_box(&s);
+    });
+    rep.row(vec!["native exact_dists 32 rows".into(), fmt_f(ns, 0),
+                 fmt_f(ns / (rows.len() * d) as f64, 2), "".into()]);
+
+    // full arm-set pull_batch (includes coordinate sampling)
+    let mut engine = NativeEngine::default();
+    let cand = DenseArms::<NativeEngine>::candidates(n, Some(0));
+    let mut arms = DenseArms::new(&data, query.clone(), cand, Metric::L2Sq,
+                                  &mut engine);
+    let sel: Vec<usize> = (0..32).collect();
+    let mut c = Counter::new();
+    let mut rng2 = Rng::new(9);
+    let ns = bench(200, || {
+        arms.pull_batch(&sel, 256, &mut rng2, &mut c, &mut s, &mut q);
+        black_box(&s);
+    });
+    rep.row(vec!["pull_batch 32x256 (incl sampling)".into(), fmt_f(ns, 0),
+                 fmt_f(ns / coord_ops, 2), "".into()]);
+
+    // whole-query bandit: end-to-end per-query cost and per-unit overhead
+    let params = BanditParams { k: 5, ..Default::default() };
+    let mut units_total = 0u64;
+    let mut queries = 0u64;
+    let mut engine2 = NativeEngine::default();
+    let ns = bench(20, || {
+        let mut qrng = Rng::new(queries);
+        let mut cc = Counter::new();
+        let r = knn_point_dense(&data, (queries % 64) as usize,
+                                Metric::L2Sq, &params, &mut engine2,
+                                &mut qrng, &mut cc);
+        black_box(&r);
+        units_total += cc.get();
+        queries += 1;
+    });
+    let units_per_query = units_total as f64 / queries as f64;
+    rep.row(vec!["full 5-NN query (n=2048 d=1024)".into(), fmt_f(ns, 0),
+                 fmt_f(ns / units_per_query, 2),
+                 format!("{units_per_query:.0} units/query")]);
+    println!("{}", rep.render());
+}

@@ -1,0 +1,11 @@
+//! Theory benches: Proposition 1 ((n+d)log² scaling), Corollary 1 (PAC
+//! power-law regimes), Theorem 1 (error <= delta, M <= bound).
+
+use bmonn::bench_harness::figures;
+
+fn main() {
+    let quick = std::env::var_os("BMONN_FULL").is_none();
+    println!("{}", figures::prop1(quick, 42).render());
+    println!("{}", figures::cor1(quick, 42).render());
+    println!("{}", figures::thm1(quick, 42).render());
+}

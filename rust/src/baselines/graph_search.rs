@@ -1,0 +1,197 @@
+//! NGT-style baseline: ANNG incremental proximity-graph construction
+//! (Iwasaki & Miyazaki) + beam-search querying.
+//!
+//! Unlike NN-descent (batch refinement), ANNG inserts points one at a
+//! time: each new point is located with a search over the graph built so
+//! far, then connected bidirectionally to its approximate nearest
+//! neighbors. This gives a navigable graph with asymmetric degree growth,
+//! like NGT's default index.
+
+use crate::baselines::graph::{beam_search, ProximityGraph};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::metrics::Counter;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AnngParams {
+    /// out-edges added per inserted point
+    pub edges: usize,
+    /// beam width during construction searches
+    pub build_ef: usize,
+    /// max out-degree (older nodes accumulate reverse edges)
+    pub max_degree: usize,
+    /// beam width at query time
+    pub ef: usize,
+    pub n_seeds: usize,
+}
+
+impl Default for AnngParams {
+    fn default() -> Self {
+        AnngParams { edges: 12, build_ef: 32, max_degree: 32, ef: 72,
+                     n_seeds: 12 }
+    }
+}
+
+pub struct AnngIndex<'a> {
+    data: &'a DenseDataset,
+    metric: Metric,
+    pub graph: ProximityGraph,
+    params: AnngParams,
+}
+
+impl<'a> AnngIndex<'a> {
+    pub fn build(data: &'a DenseDataset, metric: Metric, params: AnngParams,
+                 rng: &mut Rng) -> Self {
+        let n = data.n;
+        let mut free = Counter::new(); // construction not charged
+        let mut neighbors: Vec<Vec<u32>> = vec![Vec::new(); n];
+        // insert points one at a time in random order
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut inserted: Vec<u32> = Vec::with_capacity(n);
+        for &p in &order {
+            if inserted.len() < params.edges + 1 {
+                // bootstrap: fully connect the first few points
+                for &q in &inserted {
+                    neighbors[p].push(q);
+                    neighbors[q as usize].push(p as u32);
+                }
+                inserted.push(p as u32);
+                continue;
+            }
+            // locate approximate neighbors with a search over the partial
+            // graph, seeded from random inserted points
+            let partial = PartialView { neighbors: &neighbors };
+            let found = partial.search(
+                data, &inserted, data.row(p), params.edges, params.build_ef,
+                metric, rng, &mut free,
+            );
+            for (q, _) in found {
+                neighbors[p].push(q);
+                if neighbors[q as usize].len() < params.max_degree {
+                    neighbors[q as usize].push(p as u32);
+                }
+            }
+            inserted.push(p as u32);
+        }
+        AnngIndex {
+            data,
+            metric,
+            graph: ProximityGraph { neighbors },
+            params,
+        }
+    }
+
+    pub fn knn_query(&self, query: &[f32], exclude: Option<usize>, k: usize,
+                     rng: &mut Rng, counter: &mut Counter)
+                     -> Vec<(u32, f64)> {
+        beam_search(&self.graph, self.data, query, exclude, k,
+                    self.params.ef, self.params.n_seeds, self.metric, rng,
+                    counter)
+    }
+}
+
+/// Beam search over a partially-built graph (seeds restricted to the
+/// inserted set).
+struct PartialView<'g> {
+    neighbors: &'g [Vec<u32>],
+}
+
+impl<'g> PartialView<'g> {
+    #[allow(clippy::too_many_arguments)]
+    fn search(&self, data: &DenseDataset, inserted: &[u32], query: &[f32],
+              k: usize, ef: usize, metric: Metric, rng: &mut Rng,
+              counter: &mut Counter) -> Vec<(u32, f64)> {
+        use std::collections::HashSet;
+        let mut visited: HashSet<u32> = HashSet::new();
+        let mut pool: Vec<(f64, u32)> = Vec::new();
+        let mut frontier: Vec<(f64, u32)> = Vec::new();
+        for _ in 0..4 {
+            let s = inserted[rng.below(inserted.len())];
+            if visited.insert(s) {
+                counter.add(data.d as u64);
+                let d = crate::data::dense::dist_slices(
+                    data.row(s as usize), query, metric);
+                pool.push((d, s));
+                frontier.push((d, s));
+            }
+        }
+        while let Some(idx) = frontier
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1 .0.partial_cmp(&b.1 .0).unwrap())
+            .map(|(i, _)| i)
+        {
+            let (dc, c) = frontier.swap_remove(idx);
+            pool.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            pool.truncate(ef);
+            if pool.len() >= ef && dc > pool.last().unwrap().0 {
+                break;
+            }
+            for &nb in &self.neighbors[c as usize] {
+                if visited.insert(nb) {
+                    counter.add(data.d as u64);
+                    let d = crate::data::dense::dist_slices(
+                        data.row(nb as usize), query, metric);
+                    pool.push((d, nb));
+                    frontier.push((d, nb));
+                }
+            }
+        }
+        pool.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        pool.truncate(k);
+        pool.into_iter().map(|(d, i)| (i, d)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn anng_query_finds_true_nn() {
+        let ds = synthetic::image_like(250, 96, 121);
+        let mut rng = Rng::new(122);
+        let idx = AnngIndex::build(&ds, Metric::L2Sq, AnngParams::default(),
+                                   &mut rng);
+        let mut hits = 0usize;
+        let mut c = Counter::new();
+        let trials = 25;
+        for q in 0..trials {
+            let truth = crate::baselines::exact::knn_point(
+                &ds, q, 1, Metric::L2Sq, &mut Counter::new());
+            let got = idx.knn_query(ds.row(q), Some(q), 1, &mut rng, &mut c);
+            hits += (got[0].0 == truth.ids[0]) as usize;
+        }
+        assert!(hits >= 21, "hits {hits}/{trials}");
+    }
+
+    #[test]
+    fn cost_is_sublinear_in_n() {
+        let ds = synthetic::image_like(400, 64, 123);
+        let mut rng = Rng::new(124);
+        let idx = AnngIndex::build(&ds, Metric::L2Sq, AnngParams::default(),
+                                   &mut rng);
+        let mut c = Counter::new();
+        let trials = 20;
+        for q in 0..trials {
+            let _ = idx.knn_query(ds.row(q), Some(q), 5, &mut rng, &mut c);
+        }
+        let per_query = c.get() / trials as u64;
+        let brute = 399 * 64;
+        assert!(per_query < brute / 2,
+                "per-query {per_query} vs brute {brute}");
+    }
+
+    #[test]
+    fn graph_is_connected_enough() {
+        let ds = synthetic::gaussian_iid(100, 16, 125);
+        let mut rng = Rng::new(126);
+        let idx = AnngIndex::build(&ds, Metric::L2Sq, AnngParams::default(),
+                                   &mut rng);
+        let (min_deg, _, mean_deg) = idx.graph.degree_stats();
+        assert!(min_deg >= 1, "isolated node (min degree 0)");
+        assert!(mean_deg >= 5.0, "mean degree {mean_deg}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Baseline algorithms the paper compares against (Fig 3, 4a, 6):
+//! exact computation, non-adaptive Monte Carlo, LSH (FALCONN stand-in),
+//! NN-descent (kGraph stand-in), and ANNG (NGT stand-in).
+
+pub mod exact;
+pub mod graph;
+pub mod graph_search;
+pub mod lsh;
+pub mod nndescent;
+pub mod uniform;

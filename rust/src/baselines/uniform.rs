@@ -1,0 +1,124 @@
+//! Non-adaptive Monte Carlo baseline (Fig 1b / Fig 4a): estimate every θ_i
+//! with the *same* number of coordinate samples and return the k smallest
+//! estimates. This is the ablation that shows the adaptivity — not just
+//! the estimator — is what makes BMO-NN work.
+
+use crate::data::dense::{DenseDataset, Metric};
+use crate::metrics::Counter;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct UniformResult {
+    pub ids: Vec<u32>,
+    pub est_dists: Vec<f64>,
+}
+
+/// k-NN estimate with a fixed per-arm budget of `samples_per_arm`
+/// coordinate draws (budget = n·samples_per_arm units).
+pub fn knn_point(data: &DenseDataset, q: usize, k: usize, metric: Metric,
+                 samples_per_arm: u64, rng: &mut Rng,
+                 counter: &mut Counter) -> UniformResult {
+    let d = data.d;
+    let qrow = data.row(q);
+    let mut est: Vec<(f64, u32)> = Vec::with_capacity(data.n - 1);
+    // cap at exact computation — at m >= d you'd just compute exactly
+    let m = samples_per_arm.min(d as u64);
+    for i in 0..data.n {
+        if i == q {
+            continue;
+        }
+        let row = data.row(i);
+        counter.add(m);
+        let mut acc = 0f64;
+        if m == d as u64 {
+            acc = crate::data::dense::dist_slices(row, qrow, metric);
+        } else {
+            for _ in 0..m {
+                let j = rng.below(d);
+                acc += metric.coord(row[j], qrow[j]) as f64;
+            }
+            acc = acc / m as f64 * d as f64;
+        }
+        est.push((acc, i as u32));
+    }
+    est.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    est.truncate(k);
+    UniformResult {
+        ids: est.iter().map(|&(_, i)| i).collect(),
+        est_dists: est.iter().map(|&(d, _)| d).collect(),
+    }
+}
+
+/// Accuracy of the non-adaptive method at a total budget expressed as a
+/// multiple of a reference (BMO) budget — the Fig-4a experiment helper.
+pub fn accuracy_at_budget(
+    data: &DenseDataset,
+    queries: &[usize],
+    k: usize,
+    metric: Metric,
+    total_budget_units: u64,
+    rng: &mut Rng,
+) -> f64 {
+    let per_query = total_budget_units / queries.len() as u64;
+    let per_arm = (per_query / (data.n as u64 - 1)).max(1);
+    let mut correct = 0usize;
+    for &q in queries {
+        let mut c = Counter::new();
+        let truth = crate::baselines::exact::knn_point(
+            data, q, k, metric, &mut Counter::new());
+        let got = knn_point(data, q, k, metric, per_arm, rng, &mut c);
+        let a: std::collections::HashSet<_> = got.ids.iter().collect();
+        let b: std::collections::HashSet<_> = truth.ids.iter().collect();
+        if a == b {
+            correct += 1;
+        }
+    }
+    correct as f64 / queries.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn full_budget_equals_exact() {
+        let ds = synthetic::gaussian_iid(20, 32, 71);
+        let mut rng = Rng::new(72);
+        let mut c = Counter::new();
+        let got = knn_point(&ds, 0, 3, Metric::L2Sq, 32, &mut rng, &mut c);
+        let want = crate::baselines::exact::knn_point(
+            &ds, 0, 3, Metric::L2Sq, &mut Counter::new());
+        assert_eq!(got.ids, want.ids);
+        assert_eq!(c.get(), 19 * 32);
+    }
+
+    #[test]
+    fn tiny_budget_is_usually_wrong_on_hard_data() {
+        // near-tied arms: 1 sample per arm can't identify the NN
+        let ds = synthetic::power_law_gaps(100, 512, 0.5, 4.0, 73);
+        let mut rng = Rng::new(74);
+        let mut wrong = 0;
+        for trial in 0..20 {
+            let mut c = Counter::new();
+            let got =
+                knn_point(&ds, 0, 1, Metric::L2Sq, 1, &mut rng, &mut c);
+            let want = crate::baselines::exact::knn_point(
+                &ds, 0, 1, Metric::L2Sq, &mut Counter::new());
+            if got.ids != want.ids {
+                wrong += 1;
+            }
+            let _ = trial;
+        }
+        assert!(wrong > 10, "only {wrong}/20 wrong with 1 sample/arm");
+    }
+
+    #[test]
+    fn budget_accounting() {
+        let ds = synthetic::gaussian_iid(10, 64, 75);
+        let mut rng = Rng::new(76);
+        let mut c = Counter::new();
+        let _ = knn_point(&ds, 2, 1, Metric::L1, 7, &mut rng, &mut c);
+        assert_eq!(c.get(), 9 * 7);
+    }
+}

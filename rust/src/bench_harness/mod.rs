@@ -1,0 +1,124 @@
+//! Benchmark harness: workload generators, sweep drivers and table
+//! printers that regenerate every table/figure of the paper's evaluation
+//! (DESIGN.md §5 maps experiment ids to figures).
+//!
+//! The same runners back the `bmonn bench <fig>` CLI and the
+//! `cargo bench` targets; `quick=true` shrinks the workloads for CI.
+
+pub mod figures;
+
+/// A printable experiment result (one table or figure series).
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width != header width");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: &str) {
+        self.notes.push(s.to_string());
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("> {n}\n"));
+        }
+        out
+    }
+}
+
+/// Format a gain as "12.3x".
+pub fn fmt_gain(g: f64) -> String {
+    format!("{g:.1}x")
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Exact-set accuracy over queries (paper Appendix D-C1).
+pub fn set_accuracy(got: &[Vec<u32>], want: &[Vec<u32>]) -> f64 {
+    assert_eq!(got.len(), want.len());
+    let mut ok = 0usize;
+    for (g, w) in got.iter().zip(want) {
+        let gs: std::collections::HashSet<_> = g.iter().collect();
+        let ws: std::collections::HashSet<_> = w.iter().collect();
+        ok += (gs == ws) as usize;
+    }
+    ok as f64 / got.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_aligned() {
+        let mut r = Report::new("t", &["a", "longer"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.note("note");
+        let s = r.render();
+        assert!(s.contains("## t"));
+        assert!(s.contains("longer"));
+        assert!(s.contains("> note"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn report_rejects_ragged_rows() {
+        let mut r = Report::new("t", &["a"]);
+        r.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn set_accuracy_counts_exact_matches() {
+        let got = vec![vec![1u32, 2], vec![3, 4]];
+        let want = vec![vec![2u32, 1], vec![3, 5]];
+        assert!((set_accuracy(&got, &want) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,149 @@
+//! Command-line interface (hand-rolled; no clap in the offline crate set).
+//!
+//! Subcommands:
+//!   gen-data   — write synthetic datasets to .bmd/.bms files
+//!   knn        — k-NN queries over a dataset (bandit or baselines)
+//!   graph      — full k-NN graph construction
+//!   kmeans     — BMO k-means vs exact Lloyd's
+//!   serve      — start the query server
+//!   bench      — run a figure-reproduction experiment (fig3a, fig3b, ...)
+//!   selftest   — verify PJRT artifacts against host computation
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, positional args, --key value flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags are `--key value` or `--key=value`;
+    /// a bare `--key` followed by another flag (or end) is "true".
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I)
+                 -> Result<Args, String> {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args {
+            subcommand: it.next().unwrap_or_default(),
+            ..Default::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        args.flags
+                            .insert(flag.to_string(), it.next().unwrap());
+                    } else {
+                        args.flags.insert(flag.to_string(), "true".into());
+                    }
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize)
+                      -> Result<usize, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse()
+                .map_err(|_| format!("--{name}: bad usize '{v}'")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| format!("--{name}: bad u64 '{v}'"))
+            }
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| format!("--{name}: bad f64 '{v}'"))
+            }
+        }
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+pub const USAGE: &str = "\
+bmonn — Bandit-based Monte Carlo Optimization for Nearest Neighbors
+
+USAGE: bmonn <subcommand> [--flags]
+
+SUBCOMMANDS
+  gen-data --kind image|rna|gaussian|powerlaw --n N --d D --out FILE
+           [--seed S] [--density F] [--alpha A]
+  knn      --data FILE [--query-idx I] [--k K] [--algo bmo|exact|lsh|
+           kgraph|ngt|uniform] [--metric l2|l1] [--engine native|scalar|
+           pjrt] [--epsilon E] [--delta D] [--seed S]
+  graph    --data FILE [--k K] [--metric l2|l1] [--seed S]
+  kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
+  serve    --data FILE [--addr HOST:PORT] [--config FILE]
+  bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1>
+           [--quick] [--seed S] [--out FILE]
+  selftest [--artifacts DIR]
+
+Common flags: --config FILE (TOML), --set section.key=value (repeatable
+via comma list), --seed N.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(sv(&[
+            "knn", "--data", "x.bmd", "--k", "5", "--quick",
+            "--delta=0.01",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand, "knn");
+        assert_eq!(a.flag("data"), Some("x.bmd"));
+        assert_eq!(a.flag_usize("k", 1).unwrap(), 5);
+        assert!(a.flag_bool("quick"));
+        assert_eq!(a.flag_f64("delta", 0.1).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(sv(&["bench", "fig3a"])).unwrap();
+        assert_eq!(a.positional, vec!["fig3a"]);
+        assert_eq!(a.flag_usize("k", 7).unwrap(), 7);
+        let b = Args::parse(sv(&["knn", "--k", "abc"])).unwrap();
+        assert!(b.flag_usize("k", 1).is_err());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(sv(&[])).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,273 @@
+//! Configuration system: layered TOML-subset files + CLI overrides.
+//!
+//! The offline crate set has no `toml`/`serde`, so this module implements
+//! the subset the project needs: `[section]` headers, `key = value` with
+//! string / number / bool values, and `#` comments. Files load into a flat
+//! `section.key -> value` map; the typed `BmonnConfig` is resolved from
+//! (defaults ← file ← CLI `--set section.key=value` overrides).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
+use crate::data::dense::Metric;
+
+/// Flat key-value store parsed from a TOML-subset file.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<RawConfig, String> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                let mut val = v.trim().to_string();
+                if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                values.insert(key, val);
+            } else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            }
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: &Path) -> Result<RawConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn merge(&mut self, other: &RawConfig) {
+        for (k, v) in &other.values {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("{key}: bad usize '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("{key}: bad u64 '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| format!("{key}: bad f64 '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        self.get(key)
+            .map(|v| match v {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                _ => Err(format!("{key}: bad bool '{v}'")),
+            })
+            .transpose()
+    }
+}
+
+/// Which compute engine drives batched pulls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Scalar,
+    Native,
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "scalar" => Some(EngineKind::Scalar),
+            "native" => Some(EngineKind::Native),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Fully-resolved configuration.
+#[derive(Clone, Debug)]
+pub struct BmonnConfig {
+    pub metric: Metric,
+    pub k: usize,
+    pub delta: f64,
+    pub epsilon: f64,
+    pub sigma: SigmaMode,
+    pub policy: PullPolicy,
+    pub engine: EngineKind,
+    pub artifact_dir: String,
+    pub seed: u64,
+    pub server_addr: String,
+    pub server_workers: usize,
+}
+
+impl Default for BmonnConfig {
+    fn default() -> Self {
+        let p = BanditParams::default();
+        BmonnConfig {
+            metric: Metric::L2Sq,
+            k: p.k,
+            delta: p.delta,
+            epsilon: 0.0,
+            sigma: SigmaMode::Empirical,
+            policy: PullPolicy::batched(),
+            engine: EngineKind::Native,
+            artifact_dir: "artifacts".into(),
+            seed: 42,
+            server_addr: "127.0.0.1:7878".into(),
+            server_workers: 4,
+        }
+    }
+}
+
+impl BmonnConfig {
+    /// Resolve from a raw key-value layer.
+    pub fn from_raw(raw: &RawConfig) -> Result<BmonnConfig, String> {
+        let mut cfg = BmonnConfig::default();
+        if let Some(m) = raw.get("bandit.metric") {
+            cfg.metric =
+                Metric::parse(m).ok_or_else(|| format!("bad metric '{m}'"))?;
+        }
+        if let Some(k) = raw.get_usize("bandit.k")? {
+            cfg.k = k;
+        }
+        if let Some(d) = raw.get_f64("bandit.delta")? {
+            if !(0.0..1.0).contains(&d) || d == 0.0 {
+                return Err(format!("bandit.delta must be in (0,1), got {d}"));
+            }
+            cfg.delta = d;
+        }
+        if let Some(e) = raw.get_f64("bandit.epsilon")? {
+            cfg.epsilon = e;
+        }
+        if let Some(s) = raw.get_f64("bandit.sigma")? {
+            cfg.sigma = SigmaMode::Fixed(s);
+        }
+        if let Some(i) = raw.get_u64("policy.init_pulls")? {
+            cfg.policy.init_pulls = i;
+        }
+        if let Some(a) = raw.get_usize("policy.round_arms")? {
+            cfg.policy.round_arms = a.max(1);
+        }
+        if let Some(p) = raw.get_u64("policy.round_pulls")? {
+            cfg.policy.round_pulls = p.max(1);
+        }
+        if let Some(e) = raw.get("engine.kind") {
+            cfg.engine = EngineKind::parse(e)
+                .ok_or_else(|| format!("bad engine '{e}'"))?;
+        }
+        if let Some(a) = raw.get("engine.artifact_dir") {
+            cfg.artifact_dir = a.to_string();
+        }
+        if let Some(s) = raw.get_u64("run.seed")? {
+            cfg.seed = s;
+        }
+        if let Some(a) = raw.get("server.addr") {
+            cfg.server_addr = a.to_string();
+        }
+        if let Some(w) = raw.get_usize("server.workers")? {
+            cfg.server_workers = w.max(1);
+        }
+        Ok(cfg)
+    }
+
+    pub fn bandit_params(&self) -> BanditParams {
+        BanditParams {
+            k: self.k,
+            delta: self.delta,
+            sigma: self.sigma,
+            epsilon: self.epsilon,
+            policy: self.policy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_toml_subset() {
+        let raw = RawConfig::parse(
+            "# comment\n\
+             [bandit]\n\
+             k = 5\n\
+             delta = 0.01  # inline comment\n\
+             metric = \"l1\"\n\
+             [engine]\n\
+             kind = native\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("bandit.k"), Some("5"));
+        assert_eq!(raw.get("bandit.metric"), Some("l1"));
+        let cfg = BmonnConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.k, 5);
+        assert_eq!(cfg.metric, Metric::L1);
+        assert_eq!(cfg.engine, EngineKind::Native);
+    }
+
+    #[test]
+    fn overrides_layer() {
+        let mut raw = RawConfig::parse("[bandit]\nk = 5\n").unwrap();
+        let over = RawConfig::parse("[bandit]\nk = 9\n").unwrap();
+        raw.merge(&over);
+        assert_eq!(BmonnConfig::from_raw(&raw).unwrap().k, 9);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let raw = RawConfig::parse("[bandit]\ndelta = 2.0\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+        let raw2 = RawConfig::parse("[bandit]\nk = x\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw2).is_err());
+        assert!(RawConfig::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn fixed_sigma_mode() {
+        let raw = RawConfig::parse("[bandit]\nsigma = 2.5\n").unwrap();
+        let cfg = BmonnConfig::from_raw(&raw).unwrap();
+        matches!(cfg.sigma, SigmaMode::Fixed(s) if (s - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = BmonnConfig::default();
+        let p = cfg.bandit_params();
+        assert_eq!(p.k, 1);
+        assert!(p.epsilon == 0.0);
+    }
+}

@@ -1,0 +1,697 @@
+//! BMO UCB — Algorithm 1 of the paper, generalized with the batched pull
+//! policy of Appendix D-A and the PAC stopping rule of Theorem 2.
+//!
+//! The algorithm is UCB1 over the Monte Carlo boxes with one structural
+//! twist: an arm pulled `MAX_PULLS` times has its mean *computed exactly*
+//! and its confidence interval collapsed to 0 — which is what makes exact
+//! identification possible with a UCB-style rule (§II-B) and caps the work
+//! per arm at ~2·MAX_PULLS coordinate operations.
+//!
+//! Faithful mode (`PullPolicy::faithful()`): one arm, one pull per
+//! iteration, exactly Algorithm 1. Batched mode (`PullPolicy::batched()`):
+//! init 32 pulls/arm, then the `round_arms` lowest-LCB arms pulled
+//! `round_pulls` times per round — the paper's practical implementation
+//! ("the top 32 arms are pulled 256 times each", Appendix D-A).
+//!
+//! Selection state lives in a lazy binary heap keyed by LCB with
+//! per-arm version stamps, giving the paper's O(log n) per-iteration
+//! overhead.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use crate::coordinator::arms::ArmSet;
+use crate::metrics::{Counter, RunMetrics};
+use crate::util::rng::Rng;
+
+/// How σ (the sub-Gaussian scale in Eq. 3) is obtained.
+#[derive(Clone, Copy, Debug)]
+pub enum SigmaMode {
+    /// Known bound, as in Theorem 1's statement. σ is in θ-units.
+    Fixed(f64),
+    /// Appendix D-A: per-arm running empirical variance, pooled estimate
+    /// while an arm has too few samples.
+    Empirical,
+}
+
+/// Pull-scheduling policy.
+#[derive(Clone, Copy, Debug)]
+pub struct PullPolicy {
+    /// pulls given to every arm up front
+    pub init_pulls: u64,
+    /// arms selected per round (lowest LCB first)
+    pub round_arms: usize,
+    /// pulls per selected arm per round
+    pub round_pulls: u64,
+}
+
+impl PullPolicy {
+    /// Exactly Algorithm 1: single arm, single pull.
+    pub fn faithful() -> Self {
+        PullPolicy { init_pulls: 1, round_arms: 1, round_pulls: 1 }
+    }
+
+    /// Appendix D-A practical policy.
+    pub fn batched() -> Self {
+        PullPolicy { init_pulls: 32, round_arms: 32, round_pulls: 256 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BanditParams {
+    /// number of best arms to identify
+    pub k: usize,
+    /// target error probability δ
+    pub delta: f64,
+    pub sigma: SigmaMode,
+    /// PAC slack ε (Theorem 2); 0.0 = exact identification (Theorem 1)
+    pub epsilon: f64,
+    pub policy: PullPolicy,
+}
+
+impl Default for BanditParams {
+    fn default() -> Self {
+        BanditParams {
+            k: 1,
+            delta: 0.01,
+            sigma: SigmaMode::Empirical,
+            epsilon: 0.0,
+            policy: PullPolicy::batched(),
+        }
+    }
+}
+
+/// Result of one BMO UCB run.
+#[derive(Clone, Debug)]
+pub struct BanditResult {
+    /// winning arms in emission order (increasing θ), with final means
+    pub best: Vec<(usize, f64)>,
+    pub metrics: RunMetrics,
+    /// per-arm pull counts (diagnostics / ablation benches)
+    pub pulls_per_arm: Vec<u64>,
+    /// per-arm exact-evaluated flag
+    pub exact_per_arm: Vec<bool>,
+}
+
+/// f64 ordered for the heap (total order; NaN never enters).
+#[derive(Clone, Copy, PartialEq)]
+struct OrdF64(f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Clone, Debug)]
+struct ArmState {
+    pulls: u64,
+    sum: f64,
+    sum_sq: f64,
+    mean: f64,
+    exact: bool,
+    removed: bool,
+    version: u32,
+}
+
+impl ArmState {
+    fn variance(&self) -> Option<f64> {
+        if self.exact || self.pulls < 2 {
+            return None;
+        }
+        let n = self.pulls as f64;
+        let var = (self.sum_sq - self.sum * self.sum / n) / (n - 1.0);
+        Some(var.max(0.0))
+    }
+}
+
+/// The BMO UCB state machine.
+pub struct BmoUcb {
+    params: BanditParams,
+    states: Vec<ArmState>,
+    /// min-heap on LCB with lazy (stale-version) entries
+    heap: BinaryHeap<Reverse<(OrdF64, u32, u32)>>, // (lcb, version, arm)
+    /// pooled within-arm variance numerator / denominator (for Empirical
+    /// sigma when an arm has too few pulls)
+    pooled_num: f64,
+    pooled_den: f64,
+    /// ln(2·n·MAX_PULLS/δ) — the union-bound log term of Lemma 1
+    log_term: f64,
+}
+
+const MIN_PULLS_FOR_OWN_VAR: u64 = 10;
+const SIGMA2_FLOOR: f64 = 1e-12;
+
+impl BmoUcb {
+    pub fn new<A: ArmSet>(arms: &A, params: BanditParams) -> Self {
+        let n = arms.n_arms();
+        assert!(params.k <= n, "k={} > n_arms={}", params.k, n);
+        assert!(params.delta > 0.0 && params.delta < 1.0);
+        let max_pulls_bound =
+            (0..n).map(|i| arms.max_pulls(i)).max().unwrap_or(1).max(1);
+        let log_term =
+            (2.0 * n as f64 * max_pulls_bound as f64 / params.delta).ln();
+        BmoUcb {
+            params,
+            states: vec![
+                ArmState {
+                    pulls: 0,
+                    sum: 0.0,
+                    sum_sq: 0.0,
+                    mean: 0.0,
+                    exact: false,
+                    removed: false,
+                    version: 0,
+                };
+                n
+            ],
+            heap: BinaryHeap::with_capacity(n * 2),
+            pooled_num: 0.0,
+            pooled_den: 0.0,
+            log_term,
+        }
+    }
+
+    fn sigma2(&self, arm: usize) -> f64 {
+        match self.params.sigma {
+            SigmaMode::Fixed(s) => (s * s).max(SIGMA2_FLOOR),
+            SigmaMode::Empirical => {
+                let st = &self.states[arm];
+                let pooled = if self.pooled_den > 0.0 {
+                    self.pooled_num / self.pooled_den
+                } else {
+                    f64::INFINITY // no info yet: infinite CI
+                };
+                let v = match st.variance() {
+                    Some(v) if st.pulls >= MIN_PULLS_FOR_OWN_VAR => {
+                        // guard against degenerate zero sample variance
+                        // (e.g. constant coordinate distances)
+                        if v > 0.0 { v } else { pooled.max(SIGMA2_FLOOR) }
+                    }
+                    _ => pooled,
+                };
+                v.max(SIGMA2_FLOOR)
+            }
+        }
+    }
+
+    /// Half-width C_{i,T_i} (Eq. 3).
+    fn ci(&self, arm: usize) -> f64 {
+        let st = &self.states[arm];
+        if st.exact {
+            return 0.0;
+        }
+        if st.pulls == 0 {
+            return f64::INFINITY;
+        }
+        let s2 = self.sigma2(arm);
+        if !s2.is_finite() {
+            return f64::INFINITY;
+        }
+        (2.0 * s2 * self.log_term / st.pulls as f64).sqrt()
+    }
+
+    fn lcb(&self, arm: usize) -> f64 {
+        let c = self.ci(arm);
+        if c.is_infinite() {
+            f64::NEG_INFINITY
+        } else {
+            self.states[arm].mean - c
+        }
+    }
+
+    fn ucb(&self, arm: usize) -> f64 {
+        let c = self.ci(arm);
+        if c.is_infinite() {
+            f64::INFINITY
+        } else {
+            self.states[arm].mean + c
+        }
+    }
+
+    fn push_heap(&mut self, arm: usize) {
+        let lcb = self.lcb(arm);
+        let v = self.states[arm].version;
+        self.heap.push(Reverse((OrdF64(lcb), v, arm as u32)));
+    }
+
+    /// Pop the freshest lowest-LCB live arm.
+    fn pop_fresh(&mut self) -> Option<usize> {
+        while let Some(Reverse((_, v, a))) = self.heap.pop() {
+            let st = &self.states[a as usize];
+            if !st.removed && st.version == v {
+                return Some(a as usize);
+            }
+        }
+        None
+    }
+
+    /// Peek the lowest live LCB without consuming it.
+    fn peek_fresh_lcb(&mut self) -> f64 {
+        loop {
+            match self.heap.peek() {
+                None => return f64::INFINITY,
+                Some(&Reverse((OrdF64(lcb), v, a))) => {
+                    let st = &self.states[a as usize];
+                    if !st.removed && st.version == v {
+                        return lcb;
+                    }
+                    self.heap.pop();
+                }
+            }
+        }
+    }
+
+    fn record_samples(&mut self, arm: usize, t: u64, sum: f64,
+                      sum_sq_est: f64) {
+        let st = &mut self.states[arm];
+        // update pooled variance bookkeeping: remove old contribution
+        if let Some(v) = st.variance() {
+            self.pooled_num -= v * (st.pulls - 1) as f64;
+            self.pooled_den -= (st.pulls - 1) as f64;
+        }
+        st.pulls += t;
+        st.sum += sum;
+        st.sum_sq += sum_sq_est;
+        st.mean = st.sum / st.pulls as f64;
+        st.version += 1;
+        if let Some(v) = st.variance() {
+            self.pooled_num += v * (st.pulls - 1) as f64;
+            self.pooled_den += (st.pulls - 1) as f64;
+        }
+    }
+
+    fn set_exact(&mut self, arm: usize, theta: f64) {
+        let st = &mut self.states[arm];
+        if let Some(v) = st.variance() {
+            self.pooled_num -= v * (st.pulls - 1) as f64;
+            self.pooled_den -= (st.pulls - 1) as f64;
+        }
+        st.exact = true;
+        st.mean = theta;
+        st.version += 1;
+    }
+
+    /// Should the currently-best arm be emitted? (Alg 1 line 7, plus the
+    /// Theorem 2 PAC rule, plus an exact-tie tiebreak.)
+    fn emit_condition(&self, best: usize, second_lcb: f64) -> bool {
+        let ucb = self.ucb(best);
+        if ucb < second_lcb {
+            return true;
+        }
+        // exact ties: both intervals are points; emitting either is
+        // correct (the paper's θ_(k)=θ_(k+1) remark)
+        if self.states[best].exact && ucb <= second_lcb {
+            return true;
+        }
+        // PAC rule: the *selected* arm's interval is already ε/2-narrow
+        if self.params.epsilon > 0.0 && self.ci(best) < self.params.epsilon / 2.0
+        {
+            return true;
+        }
+        false
+    }
+
+    /// Run to completion over `arms`. Charges `counter` per DESIGN.md §7.
+    pub fn run<A: ArmSet>(&mut self, arms: &mut A, rng: &mut Rng,
+                          counter: &mut Counter) -> BanditResult {
+        let t0 = Instant::now();
+        let start_units = counter.get();
+        let n = arms.n_arms();
+        let mut best: Vec<(usize, f64)> = Vec::with_capacity(self.params.k);
+        let mut rounds = 0u64;
+        let mut exact_evals = 0u64;
+
+        // ---- init pulls (batched across all arms) -----------------------
+        let init = self.params.policy.init_pulls;
+        if init > 0 {
+            let all: Vec<usize> = (0..n).collect();
+            let mut sums = Vec::with_capacity(n);
+            let mut sqs = Vec::with_capacity(n);
+            // per-arm cap: don't exceed max_pulls at init
+            // (pull_batch uses a uniform t; arms with smaller caps are
+            // pulled individually)
+            let uniform_cap =
+                (0..n).map(|i| arms.max_pulls(i)).min().unwrap_or(1);
+            if init <= uniform_cap {
+                arms.pull_batch(&all, init, rng, counter, &mut sums,
+                                &mut sqs);
+                for ((a, &s), &s2) in all.iter().zip(&sums).zip(&sqs) {
+                    self.record_samples(*a, init, s, s2);
+                }
+            } else {
+                for a in 0..n {
+                    let t = init.min(arms.max_pulls(a));
+                    if t > 0 {
+                        let (s, s2) = arms.pull(a, t, rng, counter);
+                        self.record_samples(a, t, s, s2);
+                    }
+                }
+            }
+        }
+        for a in 0..n {
+            self.push_heap(a);
+        }
+
+        // ---- main loop ---------------------------------------------------
+        let mut selected: Vec<usize> = Vec::new();
+        let mut sums: Vec<f64> = Vec::new();
+        let mut sqs: Vec<f64> = Vec::new();
+        while best.len() < self.params.k {
+            rounds += 1;
+            // (1) emit as many separated arms as possible
+            loop {
+                let Some(top) = self.pop_fresh() else {
+                    // heap exhausted — no live arms left
+                    let m = self.finish(t0, counter, start_units, rounds,
+                                        exact_evals);
+                    return self.result(best, m);
+                };
+                let second_lcb = self.peek_fresh_lcb();
+                if self.emit_condition(top, second_lcb) {
+                    self.states[top].removed = true;
+                    best.push((top, self.states[top].mean));
+                    if best.len() == self.params.k {
+                        let m = self.finish(t0, counter, start_units, rounds,
+                                            exact_evals);
+                        return self.result(best, m);
+                    }
+                } else {
+                    // not separable yet: top goes back into play as the
+                    // first selected arm of this round
+                    selected.clear();
+                    selected.push(top);
+                    break;
+                }
+            }
+            // (2) select up to round_arms-1 further arms by LCB
+            while selected.len() < self.params.policy.round_arms {
+                match self.pop_fresh() {
+                    Some(a) => selected.push(a),
+                    None => break,
+                }
+            }
+            // (3) pull or exact-evaluate each selected arm
+            // split into: arms still under their cap (batch-pulled) and
+            // arms at their cap (exact)
+            let mut batchable: Vec<usize> = Vec::new();
+            for &a in &selected {
+                if self.states[a].exact {
+                    // exact arm got selected but could not be emitted —
+                    // its competitor needs more pulls; nothing to do for
+                    // this arm itself.
+                    continue;
+                }
+                if self.states[a].pulls >= arms.max_pulls(a) {
+                    let theta = arms.exact_mean(a, counter);
+                    exact_evals += 1;
+                    self.set_exact(a, theta);
+                } else {
+                    batchable.push(a);
+                }
+            }
+            if !batchable.is_empty() {
+                let t = self.params.policy.round_pulls;
+                if t == 1 || batchable.len() == 1 {
+                    for &a in &batchable {
+                        let tt = t.min(
+                            arms.max_pulls(a) - self.states[a].pulls);
+                        let (s, s2) = arms.pull(a, tt, rng, counter);
+                        self.record_samples(a, tt, s, s2);
+                    }
+                } else {
+                    // uniform t across the batch, capped by each arm's
+                    // remaining budget — arms near their cap drop out of
+                    // the batch and are pulled individually
+                    let mut uniform: Vec<usize> = Vec::new();
+                    for &a in &batchable {
+                        let left = arms.max_pulls(a) - self.states[a].pulls;
+                        if left >= t {
+                            uniform.push(a);
+                        } else {
+                            let (s, s2) = arms.pull(a, left, rng, counter);
+                            self.record_samples(a, left, s, s2);
+                        }
+                    }
+                    if !uniform.is_empty() {
+                        arms.pull_batch(&uniform, t, rng, counter,
+                                        &mut sums, &mut sqs);
+                        for ((a, &s), &s2) in
+                            uniform.iter().zip(&sums).zip(&sqs)
+                        {
+                            self.record_samples(*a, t, s, s2);
+                        }
+                    }
+                }
+            }
+            // (4) everything selected goes back on the heap
+            for &a in &selected {
+                self.push_heap(a);
+            }
+        }
+        let m = self.finish(t0, counter, start_units, rounds, exact_evals);
+        self.result(best, m)
+    }
+
+    fn result(&self, best: Vec<(usize, f64)>, metrics: RunMetrics)
+              -> BanditResult {
+        BanditResult {
+            best,
+            metrics,
+            pulls_per_arm: self.states.iter().map(|s| s.pulls).collect(),
+            exact_per_arm: self.states.iter().map(|s| s.exact).collect(),
+        }
+    }
+
+    fn finish(&self, t0: Instant, counter: &Counter, start_units: u64,
+              rounds: u64, exact_evals: u64) -> RunMetrics {
+        RunMetrics {
+            dist_computations: counter.get() - start_units,
+            rounds,
+            exact_evals,
+            elapsed: t0.elapsed(),
+        }
+    }
+}
+
+/// Convenience wrapper: run BMO UCB over an [`ArmSet`] with fresh state.
+pub fn run_bmo_ucb<A: ArmSet>(arms: &mut A, params: BanditParams,
+                              rng: &mut Rng, counter: &mut Counter)
+                              -> BanditResult {
+    let mut b = BmoUcb::new(arms, params);
+    b.run(arms, rng, counter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arms::{DenseArms, ScalarEngine};
+    use crate::data::dense::Metric;
+    use crate::data::synthetic;
+    use crate::metrics::Counter;
+
+    fn knn_ids(ds: &crate::data::DenseDataset, q: usize, k: usize)
+               -> Vec<u32> {
+        let mut c = Counter::new();
+        let mut d: Vec<(f64, u32)> = (0..ds.n)
+            .filter(|&i| i != q)
+            .map(|i| (ds.dist(q, i, Metric::L2Sq, &mut c), i as u32))
+            .collect();
+        d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        d.truncate(k);
+        d.into_iter().map(|(_, i)| i).collect()
+    }
+
+    fn run_once(n: usize, d: usize, k: usize, policy: PullPolicy,
+                seed: u64) -> (Vec<u32>, Vec<u32>, u64) {
+        let ds = synthetic::gaussian_means(n, d, 4.0, 1.0, seed);
+        let truth = knn_ids(&ds, 0, k);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(n, Some(0));
+        let mut arms =
+            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+        let params = BanditParams {
+            k,
+            delta: 0.01,
+            sigma: SigmaMode::Empirical,
+            epsilon: 0.0,
+            policy,
+        };
+        let mut rng = Rng::new(seed + 1);
+        let mut c = Counter::new();
+        let res = run_bmo_ucb(&mut arms, params, &mut rng, &mut c);
+        let got: Vec<u32> =
+            res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect();
+        (got, truth, res.metrics.dist_computations)
+    }
+
+    #[test]
+    fn faithful_mode_finds_exact_nn() {
+        for seed in 0..5 {
+            let (got, truth, _) =
+                run_once(50, 256, 1, PullPolicy::faithful(), seed);
+            assert_eq!(got, truth, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn batched_mode_finds_exact_topk() {
+        for seed in 0..5 {
+            let (got, truth, _) =
+                run_once(60, 512, 5, PullPolicy::batched(), seed);
+            let gs: std::collections::HashSet<_> = got.iter().collect();
+            let ts: std::collections::HashSet<_> = truth.iter().collect();
+            assert_eq!(gs, ts, "seed {seed}: got {got:?} want {truth:?}");
+        }
+    }
+
+    #[test]
+    fn emission_order_is_increasing_theta() {
+        let (got, truth, _) = run_once(40, 512, 5, PullPolicy::batched(), 9);
+        // truth is sorted by distance; emission order should match
+        assert_eq!(got, truth);
+    }
+
+    #[test]
+    fn cost_never_exceeds_2nd_plus_overhead() {
+        // "even if the algorithm fails it will not take more than 2nd
+        //  coordinate-wise distance computations" (§III-A) — per query.
+        let (_, _, units) = run_once(50, 128, 1, PullPolicy::faithful(), 3);
+        assert!(units <= 2 * 50 * 128 + 50 * 32,
+                "units {units} exceed 2nd cap");
+    }
+
+    #[test]
+    fn beats_exact_computation_on_easy_instances() {
+        // big d, well-separated arms (power-law gaps, alpha=3: most gaps
+        // near 1) → far fewer than n·d pulls
+        let n = 100;
+        let d = 8192;
+        let ds = synthetic::power_law_gaps(n, d, 3.0, 1.0, 5);
+        let truth = knn_ids(&ds, 0, 1);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(n, Some(0));
+        let mut arms =
+            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+        let params = BanditParams { k: 1, ..Default::default() };
+        let mut rng = Rng::new(6);
+        let mut c = Counter::new();
+        let res = run_bmo_ucb(&mut arms, params, &mut rng, &mut c);
+        assert_eq!(arms.arm_id(res.best[0].0), truth[0]);
+        let exact_cost = (n as u64 - 1) * d as u64;
+        assert!(c.get() < exact_cost / 2,
+                "units {} not < half exact {exact_cost}", c.get());
+    }
+
+    #[test]
+    fn fixed_sigma_mode_works() {
+        let ds = synthetic::gaussian_means(30, 256, 4.0, 1.0, 11);
+        let truth = knn_ids(&ds, 0, 1);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(30, Some(0));
+        let mut arms =
+            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+        // coordinate distances (g0-g1)² with θ≈4: scale ~ 2θ — generous σ
+        let params = BanditParams {
+            k: 1,
+            delta: 0.01,
+            sigma: SigmaMode::Fixed(10.0),
+            epsilon: 0.0,
+            policy: PullPolicy::batched(),
+        };
+        let mut rng = Rng::new(12);
+        let mut c = Counter::new();
+        let res = run_bmo_ucb(&mut arms, params, &mut rng, &mut c);
+        assert_eq!(arms.arm_id(res.best[0].0), truth[0]);
+    }
+
+    #[test]
+    fn k_equals_n_returns_everything() {
+        let n = 10;
+        let ds = synthetic::gaussian_iid(n + 1, 64, 13);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(n + 1, Some(0));
+        let mut arms =
+            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+        let params = BanditParams { k: n, ..Default::default() };
+        let mut rng = Rng::new(14);
+        let mut c = Counter::new();
+        let res = run_bmo_ucb(&mut arms, params, &mut rng, &mut c);
+        assert_eq!(res.best.len(), n);
+        let ids: std::collections::HashSet<_> =
+            res.best.iter().map(|&(a, _)| a).collect();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn duplicate_points_terminate_via_exact_tiebreak() {
+        // two identical nearest points: θ_(1) == θ_(2); algorithm must
+        // still terminate (exact-eval collapses both CIs to a point)
+        let d = 64;
+        let mut data = Vec::new();
+        // query at origin
+        data.extend(std::iter::repeat(0.0f32).take(d));
+        // two identical near points
+        for _ in 0..2 {
+            data.extend((0..d).map(|j| if j == 0 { 1.0f32 } else { 0.0 }));
+        }
+        // one far point
+        data.extend((0..d).map(|_| 5.0f32));
+        let ds = crate::data::DenseDataset::new(4, d, data);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(4, Some(0));
+        let mut arms =
+            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+        let params = BanditParams { k: 2, ..Default::default() };
+        let mut rng = Rng::new(15);
+        let mut c = Counter::new();
+        let res = run_bmo_ucb(&mut arms, params, &mut rng, &mut c);
+        let got: std::collections::HashSet<u32> =
+            res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect();
+        assert_eq!(got, [1u32, 2u32].into_iter().collect());
+    }
+
+    #[test]
+    fn pac_epsilon_emits_near_optimal_arm() {
+        // many arms within ε of the best: PAC mode must terminate fast and
+        // return an ε-best arm (Theorem 2)
+        let ds = synthetic::power_law_gaps(200, 1024, 0.5, 1.0, 16);
+        let mut c = Counter::new();
+        let theta_best = (1..200)
+            .map(|i| ds.dist(0, i, Metric::L2Sq, &mut c) / 1024.0)
+            .fold(f64::INFINITY, f64::min);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(200, Some(0));
+        let mut arms =
+            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+        let eps = 0.5;
+        let params = BanditParams {
+            k: 1,
+            epsilon: eps,
+            ..Default::default()
+        };
+        let mut rng = Rng::new(17);
+        let mut cc = Counter::new();
+        let res = run_bmo_ucb(&mut arms, params, &mut rng, &mut cc);
+        let winner = arms.arm_id(res.best[0].0);
+        let theta_win =
+            ds.dist(0, winner as usize, Metric::L2Sq, &mut c) / 1024.0;
+        assert!(theta_win <= theta_best + eps,
+                "winner θ {theta_win} > best {theta_best} + ε {eps}");
+    }
+}

@@ -1,0 +1,386 @@
+//! BMO k-means (§V-A, Fig. 5): Lloyd's algorithm with the assignment step
+//! solved as n independent 1-NN bandit problems over the k centroids.
+//!
+//! The assignment step of Lloyd's is exactly "find the nearest neighbor of
+//! each point among the k centroids" — a k-armed instance of BMO-NN. Gains
+//! come from the d-dimension subsampling (the paper reports 30–50× at
+//! k=100 on image data), not from n, so even small k sees large savings
+//! when d is big.
+
+use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine};
+use crate::coordinator::bandit::{run_bmo_ucb, BanditParams};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::metrics::{Counter, RunMetrics};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KMeansParams {
+    pub k: usize,
+    pub max_iters: usize,
+    pub delta: f64,
+    /// bandit parameters for each 1-NN assignment subproblem
+    pub bandit: BanditParams,
+    /// stop when fewer than this fraction of points change assignment
+    pub tol_frac: f64,
+    /// PAC slack for the assignment bandits as a fraction of the mean
+    /// normalized point-centroid distance (paper Fig 5 runs at ">99%
+    /// accuracy", not exact assignment; 0.0 = exact). Near-tied centroids
+    /// otherwise force exact evaluation and erase the gain.
+    pub rel_epsilon: f64,
+}
+
+impl Default for KMeansParams {
+    fn default() -> Self {
+        KMeansParams {
+            k: 100,
+            max_iters: 20,
+            delta: 0.01,
+            bandit: BanditParams {
+                k: 1,
+                // per-assignment bandit: small arm count, so a lighter
+                // batch policy than the 32/32/256 default
+                policy: crate::coordinator::bandit::PullPolicy {
+                    init_pulls: 32,
+                    round_arms: 8,
+                    round_pulls: 128,
+                },
+                ..Default::default()
+            },
+            tol_frac: 0.001,
+            rel_epsilon: 0.02,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub centroids: DenseDataset,
+    pub assignment: Vec<usize>,
+    pub iters: usize,
+    pub metrics: RunMetrics,
+    /// per-iteration fraction of points whose bandit assignment matched
+    /// the exact nearest centroid (accuracy metric of Appendix D-C2)
+    pub assign_accuracy: Vec<f64>,
+}
+
+/// k-means++-style seeding (distance-proportional), counted.
+fn seed_centroids(data: &DenseDataset, k: usize, metric: Metric,
+                  rng: &mut Rng, counter: &mut Counter) -> DenseDataset {
+    let mut centroids = DenseDataset::zeros(k, data.d);
+    let first = rng.below(data.n);
+    centroids.row_mut(0).copy_from_slice(data.row(first));
+    let mut d2: Vec<f64> = (0..data.n)
+        .map(|i| data.dist_to(i, centroids.row(0), metric, counter))
+        .collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let mut target = rng.f64() * total;
+        let mut pick = data.n - 1;
+        for (i, &w) in d2.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centroids.row_mut(c).copy_from_slice(data.row(pick));
+        for i in 0..data.n {
+            let nd = data.dist_to(i, centroids.row(c), metric, counter);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centroids
+}
+
+/// Exact assignment step (used for the baseline and accuracy checks).
+pub fn assign_exact(data: &DenseDataset, centroids: &DenseDataset,
+                    metric: Metric, counter: &mut Counter) -> Vec<usize> {
+    (0..data.n)
+        .map(|i| {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..centroids.n {
+                let d = data.dist_to(i, centroids.row(c), metric, counter);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Bandit assignment step: each point runs a k-armed 1-NN bandit over the
+/// centroid set.
+pub fn assign_bandit<E: PullEngine>(
+    data: &DenseDataset,
+    centroids: &DenseDataset,
+    metric: Metric,
+    bandit: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> Vec<usize> {
+    let rows: Vec<u32> = (0..centroids.n as u32).collect();
+    (0..data.n)
+        .map(|i| {
+            let mut qrng = rng.fork(i as u64);
+            let mut arms = DenseArms::new(
+                centroids,
+                data.row_vec(i),
+                rows.clone(),
+                metric,
+                engine,
+            );
+            let res = run_bmo_ucb(&mut arms, bandit.clone(), &mut qrng,
+                                  counter);
+            arms.arm_id(res.best[0].0) as usize
+        })
+        .collect()
+}
+
+/// Full BMO k-means: Lloyd iterations with bandit assignment.
+pub fn kmeans_bmo<E: PullEngine>(
+    data: &DenseDataset,
+    params: &KMeansParams,
+    engine: &mut E,
+    rng: &mut Rng,
+) -> KMeansResult {
+    let metric = Metric::L2Sq;
+    let mut counter = Counter::new();
+    let t0 = std::time::Instant::now();
+    let mut centroids =
+        seed_centroids(data, params.k, metric, rng, &mut counter);
+    let mut assignment = vec![usize::MAX; data.n];
+    let mut accuracy = Vec::new();
+    let mut iters = 0;
+    let mut per_assign = params.bandit.clone();
+    per_assign.delta = params.delta / (data.n * params.max_iters) as f64;
+    if per_assign.epsilon == 0.0 && params.rel_epsilon > 0.0 {
+        // auto-scale the PAC slack from the data: mean normalized distance
+        // of points to a sample of centroids
+        let mut acc = 0f64;
+        let mut cnt = 0u64;
+        let sample = 64.min(data.n);
+        for i in 0..sample {
+            let c = i % params.k;
+            acc += data.dist_to(i, centroids.row(c), metric,
+                                &mut Counter::new());
+            cnt += 1;
+        }
+        let mean_theta = acc / cnt as f64 / data.d as f64;
+        per_assign.epsilon = params.rel_epsilon * mean_theta;
+    }
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        let new_assign = assign_bandit(data, &centroids, metric,
+                                       &per_assign, engine, rng,
+                                       &mut counter);
+        // accuracy vs exact assignment (not charged to the BMO counter)
+        let exact = assign_exact(data, &centroids, metric,
+                                 &mut Counter::new());
+        let agree = new_assign
+            .iter()
+            .zip(&exact)
+            .filter(|(a, b)| a == b)
+            .count();
+        accuracy.push(agree as f64 / data.n as f64);
+
+        let changed = new_assign
+            .iter()
+            .zip(&assignment)
+            .filter(|(a, b)| a != b)
+            .count();
+        assignment = new_assign;
+        // update step: O(nd), not counted as distance computations
+        centroids = update_centroids(data, &assignment, params.k, &centroids);
+        if changed as f64 <= params.tol_frac * data.n as f64 {
+            break;
+        }
+    }
+    KMeansResult {
+        centroids,
+        assignment,
+        iters,
+        metrics: RunMetrics {
+            dist_computations: counter.get(),
+            rounds: iters as u64,
+            exact_evals: 0,
+            elapsed: t0.elapsed(),
+        },
+        assign_accuracy: accuracy,
+    }
+}
+
+/// Exact Lloyd's (the Fig-5 baseline); same seeding, exact assignment.
+pub fn kmeans_exact(data: &DenseDataset, params: &KMeansParams,
+                    rng: &mut Rng) -> KMeansResult {
+    let metric = Metric::L2Sq;
+    let mut counter = Counter::new();
+    let t0 = std::time::Instant::now();
+    let mut centroids =
+        seed_centroids(data, params.k, metric, rng, &mut counter);
+    let mut assignment = vec![usize::MAX; data.n];
+    let mut iters = 0;
+    for it in 0..params.max_iters {
+        iters = it + 1;
+        let new_assign = assign_exact(data, &centroids, metric, &mut counter);
+        let changed = new_assign
+            .iter()
+            .zip(&assignment)
+            .filter(|(a, b)| a != b)
+            .count();
+        assignment = new_assign;
+        centroids = update_centroids(data, &assignment, params.k, &centroids);
+        if changed as f64 <= params.tol_frac * data.n as f64 {
+            break;
+        }
+    }
+    KMeansResult {
+        centroids,
+        assignment,
+        iters,
+        metrics: RunMetrics {
+            dist_computations: counter.get(),
+            rounds: iters as u64,
+            exact_evals: 0,
+            elapsed: t0.elapsed(),
+        },
+        assign_accuracy: vec![1.0; iters],
+    }
+}
+
+fn update_centroids(data: &DenseDataset, assignment: &[usize], k: usize,
+                    old: &DenseDataset) -> DenseDataset {
+    let mut sums = vec![0f64; k * data.d];
+    let mut counts = vec![0usize; k];
+    for (i, &a) in assignment.iter().enumerate() {
+        counts[a] += 1;
+        let row = data.row(i);
+        let s = &mut sums[a * data.d..(a + 1) * data.d];
+        for (acc, &v) in s.iter_mut().zip(row) {
+            *acc += v as f64;
+        }
+    }
+    let mut out = DenseDataset::zeros(k, data.d);
+    for c in 0..k {
+        let row = out.row_mut(c);
+        if counts[c] == 0 {
+            // empty cluster: keep old centroid
+            row.copy_from_slice(old.row(c));
+        } else {
+            let s = &sums[c * data.d..(c + 1) * data.d];
+            for (v, &acc) in row.iter_mut().zip(s) {
+                *v = (acc / counts[c] as f64) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Within-cluster sum of squares (quality metric for comparisons).
+pub fn wcss(data: &DenseDataset, centroids: &DenseDataset,
+            assignment: &[usize]) -> f64 {
+    let mut c = Counter::new();
+    assignment
+        .iter()
+        .enumerate()
+        .map(|(i, &a)| data.dist_to(i, centroids.row(a), Metric::L2Sq, &mut c))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arms::ScalarEngine;
+    use crate::data::synthetic;
+
+    fn small_params(k: usize) -> KMeansParams {
+        KMeansParams { k, max_iters: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn bandit_assignment_matches_exact_mostly() {
+        let (ds, _) = synthetic::clustered(200, 256, 5, 0.3, 41);
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(42);
+        let mut c = Counter::new();
+        let centroids = seed_centroids(&ds, 5, Metric::L2Sq, &mut rng,
+                                       &mut Counter::new());
+        let bandit = small_params(5).bandit;
+        let got = assign_bandit(&ds, &centroids, Metric::L2Sq, &bandit,
+                                &mut engine, &mut rng, &mut c);
+        let want = assign_exact(&ds, &centroids, Metric::L2Sq,
+                                &mut Counter::new());
+        let agree =
+            got.iter().zip(&want).filter(|(a, b)| a == b).count();
+        assert!(agree as f64 >= 0.97 * ds.n as f64,
+                "agreement {agree}/{}", ds.n);
+    }
+
+    #[test]
+    fn kmeans_bmo_recovers_clusters() {
+        let (ds, labels) = synthetic::clustered(300, 128, 4, 0.2, 43);
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(44);
+        let res = kmeans_bmo(&ds, &small_params(4), &mut engine, &mut rng);
+        // cluster purity: majority label per cluster should dominate
+        let mut purity = 0usize;
+        for c in 0..4 {
+            let mut counts = std::collections::HashMap::new();
+            for (i, &a) in res.assignment.iter().enumerate() {
+                if a == c {
+                    *counts.entry(labels[i]).or_insert(0usize) += 1;
+                }
+            }
+            purity += counts.values().copied().max().unwrap_or(0);
+        }
+        assert!(purity as f64 >= 0.9 * ds.n as f64,
+                "purity {purity}/{}", ds.n);
+    }
+
+    #[test]
+    fn bmo_uses_fewer_distance_computations_than_exact() {
+        let (ds, _) = synthetic::clustered(150, 2048, 8, 0.3, 45);
+        let mut engine = ScalarEngine;
+        let mut rng1 = Rng::new(46);
+        let bmo = kmeans_bmo(&ds, &small_params(8), &mut engine, &mut rng1);
+        let mut rng2 = Rng::new(46);
+        let exact = kmeans_exact(&ds, &small_params(8), &mut rng2);
+        // normalize per iteration (they may run different iteration counts)
+        let bmo_per = bmo.metrics.dist_computations / bmo.iters as u64;
+        let exact_per = exact.metrics.dist_computations / exact.iters as u64;
+        assert!(bmo_per * 2 < exact_per,
+                "bmo {bmo_per}/iter vs exact {exact_per}/iter");
+        // and the accuracy stayed high
+        let last_acc = *bmo.assign_accuracy.last().unwrap();
+        assert!(last_acc > 0.95, "accuracy {last_acc}");
+    }
+
+    #[test]
+    fn empty_cluster_keeps_old_centroid() {
+        let ds = synthetic::gaussian_iid(10, 4, 47);
+        let assignment = vec![0usize; 10]; // all in cluster 0; cluster 1 empty
+        let old = synthetic::gaussian_iid(2, 4, 48);
+        let updated = update_centroids(&ds, &assignment, 2, &old);
+        assert_eq!(updated.row(1), old.row(1));
+    }
+
+    #[test]
+    fn wcss_decreases_with_iterations() {
+        let (ds, _) = synthetic::clustered(200, 64, 4, 0.5, 49);
+        let mut rng = Rng::new(50);
+        let res = kmeans_exact(&ds, &small_params(4), &mut rng);
+        let final_wcss = wcss(&ds, &res.centroids, &res.assignment);
+        // compare to a random assignment's wcss
+        let mut rng2 = Rng::new(51);
+        let rand_assign: Vec<usize> =
+            (0..ds.n).map(|_| rng2.below(4)).collect();
+        let rand_wcss = wcss(&ds, &res.centroids, &rand_assign);
+        assert!(final_wcss < rand_wcss * 0.5,
+                "wcss {final_wcss} vs random {rand_wcss}");
+    }
+}

@@ -1,0 +1,264 @@
+//! BMO-NN — Algorithm 2: k-nearest-neighbor queries and full k-NN-graph
+//! construction via BMO UCB over the Monte Carlo boxes.
+
+use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine, SparseArms};
+use crate::coordinator::bandit::{run_bmo_ucb, BanditParams};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::data::sparse::SparseDataset;
+use crate::metrics::{Counter, RunMetrics};
+use crate::util::rng::Rng;
+
+/// One k-NN answer: neighbor dataset ids, ordered by increasing distance,
+/// with the bandit's final (normalized θ·d, i.e. un-normalized distance)
+/// estimates and the run's cost accounting.
+#[derive(Clone, Debug)]
+pub struct KnnResult {
+    pub ids: Vec<u32>,
+    /// un-normalized distance estimates (exact when the arm was
+    /// exact-evaluated; high-accuracy estimates otherwise)
+    pub dists: Vec<f64>,
+    pub metrics: RunMetrics,
+}
+
+/// k-NN of an in-dataset point `q` (self excluded) — dense box.
+pub fn knn_point_dense<E: PullEngine>(
+    data: &DenseDataset,
+    q: usize,
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> KnnResult {
+    let query = data.row_vec(q);
+    knn_dense_inner(data, query, Some(q), metric, params, engine, rng, counter)
+}
+
+/// k-NN of an external query vector — dense box.
+pub fn knn_query_dense<E: PullEngine>(
+    data: &DenseDataset,
+    query: &[f32],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> KnnResult {
+    knn_dense_inner(data, query.to_vec(), None, metric, params, engine, rng,
+                    counter)
+}
+
+fn knn_dense_inner<E: PullEngine>(
+    data: &DenseDataset,
+    query: Vec<f32>,
+    exclude: Option<usize>,
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> KnnResult {
+    let rows = DenseArms::<E>::candidates(data.n, exclude);
+    let d = data.d as f64;
+    let mut arms = DenseArms::new(data, query, rows, metric, engine);
+    let res = run_bmo_ucb(&mut arms, params.clone(), rng, counter);
+    KnnResult {
+        ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
+        dists: res.best.iter().map(|&(_, th)| th * d).collect(),
+        metrics: res.metrics,
+    }
+}
+
+/// k-NN of an in-dataset point — sparse box (§IV-A).
+pub fn knn_point_sparse(
+    data: &SparseDataset,
+    q: usize,
+    metric: Metric,
+    params: &BanditParams,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> KnnResult {
+    let rows: Vec<u32> = (0..data.n as u32)
+        .filter(|&i| i as usize != q)
+        .collect();
+    let d = data.d as f64;
+    let mut arms = SparseArms::new(data, q, rows, metric);
+    let res = run_bmo_ucb(&mut arms, params.clone(), rng, counter);
+    KnnResult {
+        ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
+        dists: res.best.iter().map(|&(_, th)| th * d).collect(),
+        metrics: res.metrics,
+    }
+}
+
+/// Full k-NN graph (Algorithm 2's outer loop): the k nearest neighbors of
+/// every point. δ is split as δ/n per query, matching line 4 of Alg 2.
+pub struct GraphResult {
+    pub neighbors: Vec<Vec<u32>>,
+    pub metrics: RunMetrics,
+}
+
+pub fn knn_graph_dense<E: PullEngine>(
+    data: &DenseDataset,
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> GraphResult {
+    let mut per_query = params.clone();
+    per_query.delta = params.delta / data.n as f64;
+    let mut neighbors = Vec::with_capacity(data.n);
+    let mut metrics = RunMetrics::default();
+    for q in 0..data.n {
+        let mut qrng = rng.fork(q as u64);
+        let res = knn_point_dense(data, q, metric, &per_query, engine,
+                                  &mut qrng, counter);
+        metrics.merge(&res.metrics);
+        neighbors.push(res.ids);
+    }
+    GraphResult { neighbors, metrics }
+}
+
+pub fn knn_graph_sparse(
+    data: &SparseDataset,
+    metric: Metric,
+    params: &BanditParams,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> GraphResult {
+    let mut per_query = params.clone();
+    per_query.delta = params.delta / data.n as f64;
+    let mut neighbors = Vec::with_capacity(data.n);
+    let mut metrics = RunMetrics::default();
+    for q in 0..data.n {
+        let mut qrng = rng.fork(q as u64);
+        let res = knn_point_sparse(data, q, metric, &per_query, &mut qrng,
+                                   counter);
+        metrics.merge(&res.metrics);
+        neighbors.push(res.ids);
+    }
+    GraphResult { neighbors, metrics }
+}
+
+/// Generic wrapper mirroring Alg 2 over any custom [`ArmSet`] — this is
+/// the "tailor problem-specific Monte Carlo boxes" extension point the
+/// paper describes (§III).
+pub fn knn_arms<A: ArmSet>(
+    arms: &mut A,
+    params: &BanditParams,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> KnnResult {
+    let res = run_bmo_ucb(arms, params.clone(), rng, counter);
+    KnnResult {
+        ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
+        dists: res.best.iter().map(|&(_, th)| th).collect(),
+        metrics: res.metrics,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::coordinator::arms::ScalarEngine;
+    use crate::coordinator::bandit::PullPolicy;
+    use crate::data::synthetic;
+
+    fn params(k: usize) -> BanditParams {
+        BanditParams { k, delta: 0.01, policy: PullPolicy::batched(),
+                       ..Default::default() }
+    }
+
+    #[test]
+    fn dense_point_query_matches_bruteforce() {
+        let ds = synthetic::image_like(80, 512, 21);
+        let mut c = Counter::new();
+        let truth = baselines::exact::knn_point(
+            &ds, 3, 5, Metric::L2Sq, &mut Counter::new());
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(22);
+        let res = knn_point_dense(&ds, 3, Metric::L2Sq, &params(5),
+                                  &mut engine, &mut rng, &mut c);
+        let got: std::collections::HashSet<_> = res.ids.iter().collect();
+        let want: std::collections::HashSet<_> = truth.ids.iter().collect();
+        assert_eq!(got, want);
+        assert!(!res.ids.contains(&3), "self must be excluded");
+    }
+
+    #[test]
+    fn external_query_works() {
+        let ds = synthetic::image_like(60, 256, 23);
+        let q: Vec<f32> = ds.row_vec(7).iter().map(|v| v + 0.001).collect();
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(24);
+        let mut c = Counter::new();
+        let res = knn_query_dense(&ds, &q, Metric::L2Sq, &params(1),
+                                  &mut engine, &mut rng, &mut c);
+        assert_eq!(res.ids[0], 7);
+    }
+
+    #[test]
+    fn sparse_query_matches_bruteforce() {
+        let ds = synthetic::rna_like(60, 800, 0.08, 25);
+        let mut rng = Rng::new(26);
+        let mut c = Counter::new();
+        let res = knn_point_sparse(&ds, 0, Metric::L1, &params(3), &mut rng,
+                                   &mut c);
+        // brute force
+        let mut truth: Vec<(f64, u32)> = (1..ds.n)
+            .map(|i| (ds.dist(0, i, Metric::L1, &mut Counter::new()),
+                      i as u32))
+            .collect();
+        truth.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let want: std::collections::HashSet<u32> =
+            truth[..3].iter().map(|&(_, i)| i).collect();
+        let got: std::collections::HashSet<u32> =
+            res.ids.iter().copied().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn graph_construction_high_accuracy() {
+        let ds = synthetic::image_like(40, 256, 27);
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(28);
+        let mut c = Counter::new();
+        let g = knn_graph_dense(&ds, Metric::L2Sq, &params(3), &mut engine,
+                                &mut rng, &mut c);
+        assert_eq!(g.neighbors.len(), 40);
+        let mut correct = 0;
+        for q in 0..40 {
+            let truth = baselines::exact::knn_point(
+                &ds, q, 3, Metric::L2Sq, &mut Counter::new());
+            let got: std::collections::HashSet<_> =
+                g.neighbors[q].iter().collect();
+            let want: std::collections::HashSet<_> = truth.ids.iter().collect();
+            if got == want {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 39, "accuracy {correct}/40");
+    }
+
+    #[test]
+    fn dists_are_sorted_and_close_to_truth() {
+        let ds = synthetic::image_like(50, 512, 29);
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(30);
+        let mut c = Counter::new();
+        let res = knn_point_dense(&ds, 0, Metric::L2Sq, &params(5),
+                                  &mut engine, &mut rng, &mut c);
+        for w in res.dists.windows(2) {
+            assert!(w[0] <= w[1] + 1e-6, "dists not sorted: {:?}", res.dists);
+        }
+        // each reported distance should be near the true distance
+        for (&id, &dist) in res.ids.iter().zip(&res.dists) {
+            let truth = ds.dist(0, id as usize, Metric::L2Sq,
+                                &mut Counter::new());
+            assert!((dist - truth).abs() < 0.2 * truth.max(1.0),
+                    "dist {dist} vs truth {truth}");
+        }
+    }
+}

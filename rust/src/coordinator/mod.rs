@@ -1,0 +1,12 @@
+//! L3 coordinator — the paper's system contribution: the BMO UCB bandit
+//! state machine, the Monte Carlo boxes, the k-NN / PAC / k-means drivers,
+//! and the query server.
+
+pub mod arms;
+pub mod bandit;
+pub mod kmeans;
+pub mod knn;
+pub mod pac;
+pub mod server;
+
+pub use bandit::{BanditParams, PullPolicy, SigmaMode};

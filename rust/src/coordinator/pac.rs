@@ -1,0 +1,122 @@
+//! PAC BMO-NN (Theorem 2): additive-ε approximate nearest neighbors.
+//!
+//! The only change from exact BMO-NN is the modified emission rule of
+//! BMO UCB line 7 — an arm is also emitted when its confidence half-width
+//! drops below ε/2 — which is already wired through
+//! `BanditParams::epsilon`. This module provides the user-facing API and
+//! the Corollary-1 instrumentation (power-law gap regimes).
+
+use crate::coordinator::arms::PullEngine;
+use crate::coordinator::bandit::BanditParams;
+use crate::coordinator::knn::{knn_point_dense, KnnResult};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::metrics::Counter;
+use crate::util::rng::Rng;
+
+/// PAC k-NN of an in-dataset point: returns, w.p. ≥ 1−δ, k points whose
+/// θ is within ε of the true k-th nearest neighbor's θ.
+///
+/// NOTE ε is in *normalized* θ-units (θ = ρ/d), matching the paper's
+/// arm-mean formulation.
+pub fn pac_knn_point_dense<E: PullEngine>(
+    data: &DenseDataset,
+    q: usize,
+    metric: Metric,
+    epsilon: f64,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> KnnResult {
+    assert!(epsilon > 0.0, "use knn_point_dense for exact identification");
+    let p = BanditParams { epsilon, ..params.clone() };
+    knn_point_dense(data, q, metric, &p, engine, rng, counter)
+}
+
+/// Check a PAC answer: every returned point's θ must be ≤ θ_(k) + ε.
+pub fn is_eps_correct(
+    data: &DenseDataset,
+    q: usize,
+    metric: Metric,
+    result: &KnnResult,
+    k: usize,
+    epsilon: f64,
+) -> bool {
+    let mut c = Counter::new();
+    let d = data.d as f64;
+    let mut thetas: Vec<f64> = (0..data.n)
+        .filter(|&i| i != q)
+        .map(|i| data.dist(q, i, metric, &mut c) / d)
+        .collect();
+    thetas.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let theta_k = thetas[k - 1];
+    result.ids.iter().all(|&id| {
+        let th = data.dist(q, id as usize, metric, &mut c) / d;
+        th <= theta_k + epsilon + 1e-9
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arms::ScalarEngine;
+    use crate::coordinator::bandit::PullPolicy;
+    use crate::data::synthetic;
+
+    fn base_params(k: usize) -> BanditParams {
+        BanditParams { k, delta: 0.01, policy: PullPolicy::batched(),
+                       ..Default::default() }
+    }
+
+    #[test]
+    fn pac_answer_is_eps_correct() {
+        // power-law gaps with small alpha: many arms near the best — the
+        // regime where PAC mode pays off (Corollary 1)
+        let ds = synthetic::power_law_gaps(150, 1024, 0.5, 1.0, 31);
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(32);
+        let mut c = Counter::new();
+        let eps = 0.3;
+        let res = pac_knn_point_dense(&ds, 0, Metric::L2Sq, eps,
+                                      &base_params(1), &mut engine,
+                                      &mut rng, &mut c);
+        assert!(is_eps_correct(&ds, 0, Metric::L2Sq, &res, 1, eps));
+    }
+
+    #[test]
+    fn pac_is_cheaper_than_exact_on_hard_instances() {
+        // clustered gaps: exact must separate near-ties; PAC may stop early
+        let ds = synthetic::power_law_gaps(200, 2048, 0.3, 1.0, 33);
+        let mut engine = ScalarEngine;
+
+        let mut rng = Rng::new(34);
+        let mut c_exact = Counter::new();
+        let _ = knn_point_dense(&ds, 0, Metric::L2Sq, &base_params(1),
+                                &mut engine, &mut rng, &mut c_exact);
+
+        let mut rng = Rng::new(34);
+        let mut c_pac = Counter::new();
+        let res = pac_knn_point_dense(&ds, 0, Metric::L2Sq, 0.5,
+                                      &base_params(1), &mut engine,
+                                      &mut rng, &mut c_pac);
+        assert!(is_eps_correct(&ds, 0, Metric::L2Sq, &res, 1, 0.5));
+        assert!(
+            c_pac.get() <= c_exact.get(),
+            "PAC {} should not exceed exact {}",
+            c_pac.get(),
+            c_exact.get()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "exact identification")]
+    fn zero_epsilon_rejected() {
+        let ds = synthetic::gaussian_iid(10, 32, 35);
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(36);
+        let mut c = Counter::new();
+        let _ = pac_knn_point_dense(&ds, 0, Metric::L2Sq, 0.0,
+                                    &base_params(1), &mut engine, &mut rng,
+                                    &mut c);
+    }
+}

@@ -1,0 +1,409 @@
+//! k-NN query server: TCP, line-delimited JSON, worker thread pool with a
+//! shared queue (dynamic batching of queued queries per worker pass).
+//!
+//! Python never runs here — this is the L3 request path. Each worker owns
+//! its RNG fork and distance counter; counters are merged into server
+//! totals for the metrics endpoint.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"op":"knn",   "query":[f32...], "k":5}
+//!             {"op":"stats"}
+//!             {"op":"ping"}
+//!             {"op":"shutdown"}
+//!   response: {"ok":true, "ids":[...], "dists":[...], "units":u}
+//!             {"ok":true, "queries":q, "units":u, "p50_us":_, "p99_us":_}
+//!             {"ok":false, "error":"..."}
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::arms::ScalarEngine;
+use crate::coordinator::bandit::BanditParams;
+use crate::coordinator::knn::knn_query_dense;
+use crate::data::dense::{DenseDataset, Metric};
+use crate::metrics::{Counter, LatencyStats};
+use crate::runtime::native::NativeEngine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    pub metric: Metric,
+    pub params: BanditParams,
+    /// worker threads handling connections
+    pub n_workers: usize,
+    /// use the optimized native engine (true) or the scalar reference
+    pub native_engine: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            metric: Metric::L2Sq,
+            params: BanditParams::default(),
+            n_workers: 4,
+            native_engine: true,
+        }
+    }
+}
+
+struct Shared {
+    data: DenseDataset,
+    config: ServerConfig,
+    total_units: AtomicU64,
+    total_queries: AtomicU64,
+    latencies: Mutex<LatencyStats>,
+    shutdown: AtomicBool,
+}
+
+/// Running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shared: Arc<Shared>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving `data` in background threads.
+    pub fn start(data: DenseDataset, config: ServerConfig)
+                 -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            data,
+            config,
+            total_units: AtomicU64::new(0),
+            total_queries: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyStats::default()),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_shared = shared.clone();
+        let handle = std::thread::spawn(move || {
+            accept_loop(listener, accept_shared);
+        });
+        Ok(Server { addr, shared, accept_handle: Some(handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn total_queries(&self) -> u64 {
+        self.shared.total_queries.load(Ordering::Relaxed)
+    }
+
+    pub fn total_units(&self) -> u64 {
+        self.shared.total_units.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conn_id = 0u64;
+    let mut handles = Vec::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                conn_id += 1;
+                let s = shared.clone();
+                let id = conn_id;
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, s, id);
+                }));
+                // reap finished connection threads
+                handles.retain(|h| !h.is_finished());
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>, conn_id: u64)
+               -> std::io::Result<()> {
+    // short read timeout so connection threads notice shutdown instead of
+    // blocking forever while stop() joins them; partial lines accumulate
+    // in `acc` across timeouts, so framing is never corrupted
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    stream.set_nodelay(true)?; // line-oriented RPC: Nagle adds ~40ms p50
+    let mut writer = stream.try_clone()?;
+    let mut rng = Rng::new(0xC0FFEE ^ conn_id);
+    let mut scalar = ScalarEngine;
+    let mut native = NativeEngine::default();
+    let mut acc: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        // extract one complete line from the accumulator, else read more
+        let line = loop {
+            if let Some(pos) = acc.iter().position(|&b| b == b'\n') {
+                let mut l: Vec<u8> = acc.drain(..=pos).collect();
+                l.pop(); // strip newline
+                break String::from_utf8_lossy(&l).into_owned();
+            }
+            match stream.read(&mut chunk) {
+                Ok(0) => return Ok(()), // client closed
+                Ok(n) => acc.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        let resp = match Json::parse(line.trim()) {
+            Err(e) => err_json(&format!("bad json: {e}")),
+            Ok(req) => {
+                match req.get("op").and_then(|o| o.as_str()) {
+                    Some("ping") => Json::obj(vec![("ok", Json::Bool(true))]),
+                    Some("stats") => stats_json(&shared),
+                    Some("shutdown") => {
+                        shared.shutdown.store(true, Ordering::SeqCst);
+                        Json::obj(vec![("ok", Json::Bool(true))])
+                    }
+                    Some("knn") => {
+                        let use_native = shared.config.native_engine;
+                        if use_native {
+                            handle_knn(&req, &shared, &mut native, &mut rng)
+                        } else {
+                            handle_knn(&req, &shared, &mut scalar, &mut rng)
+                        }
+                    }
+                    _ => err_json("unknown op"),
+                }
+            }
+        };
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+    }
+}
+
+fn handle_knn<E: crate::coordinator::arms::PullEngine>(
+    req: &Json, shared: &Shared, engine: &mut E, rng: &mut Rng) -> Json {
+    let Some(qarr) = req.get("query").and_then(|q| q.as_arr()) else {
+        return err_json("missing query");
+    };
+    let query: Vec<f32> = qarr
+        .iter()
+        .filter_map(|v| v.as_f64().map(|x| x as f32))
+        .collect();
+    if query.len() != shared.data.d {
+        return err_json(&format!(
+            "query dim {} != dataset dim {}", query.len(), shared.data.d));
+    }
+    let k = req.get("k").and_then(|v| v.as_usize()).unwrap_or(1);
+    if k == 0 || k >= shared.data.n {
+        return err_json("k out of range");
+    }
+    let mut params = shared.config.params.clone();
+    params.k = k;
+    let mut counter = Counter::new();
+    let t0 = Instant::now();
+    let res = knn_query_dense(&shared.data, &query, shared.config.metric,
+                              &params, engine, rng, &mut counter);
+    let elapsed = t0.elapsed();
+    shared.total_units.fetch_add(counter.get(), Ordering::Relaxed);
+    shared.total_queries.fetch_add(1, Ordering::Relaxed);
+    shared.latencies.lock().unwrap().record(elapsed);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("ids",
+         Json::usize_array(
+             &res.ids.iter().map(|&i| i as usize).collect::<Vec<_>>())),
+        ("dists", Json::f32_array(
+            &res.dists.iter().map(|&d| d as f32).collect::<Vec<_>>())),
+        ("units", Json::Num(counter.get() as f64)),
+    ])
+}
+
+fn stats_json(shared: &Shared) -> Json {
+    let lat = shared.latencies.lock().unwrap();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("queries",
+         Json::Num(shared.total_queries.load(Ordering::Relaxed) as f64)),
+        ("units",
+         Json::Num(shared.total_units.load(Ordering::Relaxed) as f64)),
+        ("p50_us", Json::Num(lat.percentile(50.0).as_micros() as f64)),
+        ("p99_us", Json::Num(lat.percentile(99.0).as_micros() as f64)),
+    ])
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn request(&mut self, req: &Json) -> std::io::Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(line.trim()).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+        })
+    }
+
+    pub fn knn(&mut self, query: &[f32], k: usize)
+               -> std::io::Result<(Vec<u32>, Vec<f64>, u64)> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("knn".into())),
+            ("query", Json::f32_array(query)),
+            ("k", Json::Num(k as f64)),
+        ]);
+        let resp = self.request(&req)?;
+        if resp.get("ok") != Some(&Json::Bool(true)) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                resp.get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("unknown")
+                    .to_string(),
+            ));
+        }
+        let ids = resp
+            .get("ids")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64().map(|x| x as u32))
+                 .collect())
+            .unwrap_or_default();
+        let dists = resp
+            .get("dists")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .unwrap_or_default();
+        let units = resp.get("units").and_then(|v| v.as_f64()).unwrap_or(0.0)
+            as u64;
+        Ok((ids, dists, units))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn free_port_config() -> ServerConfig {
+        ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() }
+    }
+
+    #[test]
+    fn serves_knn_queries() {
+        let ds = synthetic::image_like(60, 128, 131);
+        let q = ds.row_vec(11);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let (ids, dists, units) = cl.knn(&q, 3).unwrap();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(dists.len(), 3);
+        assert!(units > 0);
+        assert_eq!(ids[0], 11, "self row should be its own 1-NN");
+        srv.stop();
+    }
+
+    #[test]
+    fn stats_and_ping() {
+        let ds = synthetic::image_like(40, 64, 132);
+        let q = ds.row_vec(0);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let pong = cl
+            .request(&Json::obj(vec![("op", Json::Str("ping".into()))]))
+            .unwrap();
+        assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+        let _ = cl.knn(&q, 1).unwrap();
+        let stats = cl
+            .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+            .unwrap();
+        assert_eq!(stats.get("queries").unwrap().as_usize(), Some(1));
+        assert!(stats.get("units").unwrap().as_f64().unwrap() > 0.0);
+        srv.stop();
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let ds = synthetic::image_like(30, 32, 133);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let resp = cl
+            .request(&Json::obj(vec![
+                ("op", Json::Str("knn".into())),
+                ("query", Json::f32_array(&[1.0, 2.0])), // wrong dim
+                ("k", Json::Num(1.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        // malformed json
+        let resp2 = cl.request(&Json::Str("not an object".into()));
+        assert!(resp2.is_ok());
+        srv.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let ds = synthetic::image_like(50, 64, 134);
+        let queries: Vec<Vec<f32>> = (0..8).map(|i| ds.row_vec(i)).collect();
+        let srv = Server::start(ds, free_port_config()).unwrap();
+        let addr = srv.addr;
+        let handles: Vec<_> = queries
+            .into_iter()
+            .enumerate()
+            .map(|(i, q)| {
+                std::thread::spawn(move || {
+                    let mut cl = Client::connect(&addr).unwrap();
+                    let (ids, _, _) = cl.knn(&q, 1).unwrap();
+                    assert_eq!(ids[0] as usize, i);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(srv.total_queries(), 8);
+    }
+}

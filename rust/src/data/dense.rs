@@ -1,0 +1,188 @@
+//! Dense row-major dataset substrate.
+
+use crate::metrics::Counter;
+
+/// Distance metrics supported by the separable-distance framework
+/// (paper §III: any ρ(x,y) = Σ_j ρ_j(x_j, y_j) works; we ship the two the
+/// evaluation uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// squared Euclidean — k-NN under ℓ2 equals k-NN under ℓ2²
+    L2Sq,
+    /// Manhattan / ℓ1
+    L1,
+}
+
+impl Metric {
+    #[inline(always)]
+    pub fn coord(self, a: f32, b: f32) -> f32 {
+        let d = a - b;
+        match self {
+            Metric::L2Sq => d * d,
+            Metric::L1 => d.abs(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s {
+            "l2" | "l2sq" | "euclidean" => Some(Metric::L2Sq),
+            "l1" | "manhattan" => Some(Metric::L1),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::L2Sq => "l2",
+            Metric::L1 => "l1",
+        }
+    }
+}
+
+/// Dense `n x d` dataset, row-major `Vec<f32>`.
+#[derive(Clone, Debug)]
+pub struct DenseDataset {
+    pub n: usize,
+    pub d: usize,
+    data: Vec<f32>,
+}
+
+impl DenseDataset {
+    pub fn new(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        DenseDataset { n, d, data }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> Self {
+        DenseDataset { n, d, data: vec![0.0; n * d] }
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.d + j]
+    }
+
+    /// Exact (un-normalized) distance between two rows; counts `d` units.
+    pub fn dist(&self, i: usize, j: usize, metric: Metric,
+                counter: &mut Counter) -> f64 {
+        counter.add(self.d as u64);
+        dist_slices(self.row(i), self.row(j), metric)
+    }
+
+    /// Exact distance to an external query vector; counts `d` units.
+    pub fn dist_to(&self, i: usize, query: &[f32], metric: Metric,
+                   counter: &mut Counter) -> f64 {
+        counter.add(self.d as u64);
+        dist_slices(self.row(i), query, metric)
+    }
+
+    /// Copy of a row (for use as a detached query).
+    pub fn row_vec(&self, i: usize) -> Vec<f32> {
+        self.row(i).to_vec()
+    }
+
+    /// Pad columns with zeros up to `d_new` (artifact-shape alignment;
+    /// zero-padding leaves both ℓ1 and ℓ2² distances unchanged).
+    pub fn pad_dims(&self, d_new: usize) -> DenseDataset {
+        assert!(d_new >= self.d);
+        let mut out = DenseDataset::zeros(self.n, d_new);
+        for i in 0..self.n {
+            out.row_mut(i)[..self.d].copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+/// Exact distance between two slices — the scalar reference everyone else
+/// is checked against. The optimized hot-path versions live in
+/// `runtime::native`.
+pub fn dist_slices(a: &[f32], b: &[f32], metric: Metric) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f64;
+    match metric {
+        Metric::L2Sq => {
+            for (x, y) in a.iter().zip(b) {
+                let d = (x - y) as f64;
+                acc += d * d;
+            }
+        }
+        Metric::L1 => {
+            for (x, y) in a.iter().zip(b) {
+                acc += (x - y).abs() as f64;
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> DenseDataset {
+        DenseDataset::new(3, 2, vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0])
+    }
+
+    #[test]
+    fn row_access() {
+        let ds = toy();
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.get(2, 1), 1.0);
+    }
+
+    #[test]
+    fn l2sq_distance_counts_units() {
+        let ds = toy();
+        let mut c = Counter::new();
+        let d = ds.dist(0, 1, Metric::L2Sq, &mut c);
+        assert!((d - 25.0).abs() < 1e-9);
+        assert_eq!(c.get(), 2);
+    }
+
+    #[test]
+    fn l1_distance() {
+        let ds = toy();
+        let mut c = Counter::new();
+        let d = ds.dist(0, 1, Metric::L1, &mut c);
+        assert!((d - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn padding_preserves_distances() {
+        let ds = toy();
+        let padded = ds.pad_dims(5);
+        let mut c = Counter::new();
+        assert_eq!(
+            ds.dist(0, 1, Metric::L2Sq, &mut c),
+            padded.dist(0, 1, Metric::L2Sq, &mut c)
+        );
+        assert_eq!(padded.d, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "n*d")]
+    fn bad_shape_panics() {
+        DenseDataset::new(2, 3, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn metric_parse() {
+        assert_eq!(Metric::parse("l2"), Some(Metric::L2Sq));
+        assert_eq!(Metric::parse("manhattan"), Some(Metric::L1));
+        assert_eq!(Metric::parse("cosine"), None);
+    }
+}

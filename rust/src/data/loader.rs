@@ -1,0 +1,162 @@
+//! Binary dataset I/O.
+//!
+//! Two tiny little-endian formats so benchmark workloads can be generated
+//! once (`bmonn gen-data`) and shared between runs:
+//!
+//! * dense:  magic `BMD1` | u64 n | u64 d | n*d f32
+//! * sparse: magic `BMS1` | u64 n | u64 d | u64 nnz | (n+1) u64 indptr
+//!           | nnz u32 indices | nnz f32 values
+
+use std::fs::File;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::dense::DenseDataset;
+use crate::data::sparse::SparseDataset;
+
+const DENSE_MAGIC: &[u8; 4] = b"BMD1";
+const SPARSE_MAGIC: &[u8; 4] = b"BMS1";
+
+fn write_u64<W: Write>(w: &mut W, x: u64) -> io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+pub fn save_dense(ds: &DenseDataset, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(DENSE_MAGIC)?;
+    write_u64(&mut w, ds.n as u64)?;
+    write_u64(&mut w, ds.d as u64)?;
+    for &v in ds.raw() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn load_dense(path: &Path) -> io::Result<DenseDataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != DENSE_MAGIC {
+        return Err(bad("not a BMD1 dense dataset"));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let mut buf = vec![0u8; n * d * 4];
+    r.read_exact(&mut buf)?;
+    let data = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(DenseDataset::new(n, d, data))
+}
+
+pub fn save_sparse(ds: &SparseDataset, path: &Path) -> io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(SPARSE_MAGIC)?;
+    write_u64(&mut w, ds.n as u64)?;
+    write_u64(&mut w, ds.d as u64)?;
+    write_u64(&mut w, ds.total_nnz() as u64)?;
+    for &p in &ds.indptr {
+        write_u64(&mut w, p as u64)?;
+    }
+    for &i in &ds.indices {
+        w.write_all(&i.to_le_bytes())?;
+    }
+    for &v in &ds.values {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn load_sparse(path: &Path) -> io::Result<SparseDataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != SPARSE_MAGIC {
+        return Err(bad("not a BMS1 sparse dataset"));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+    let mut indptr = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        indptr.push(read_u64(&mut r)? as usize);
+    }
+    if *indptr.last().unwrap() != nnz {
+        return Err(bad("indptr/nnz mismatch"));
+    }
+    let mut ibuf = vec![0u8; nnz * 4];
+    r.read_exact(&mut ibuf)?;
+    let mut vbuf = vec![0u8; nnz * 4];
+    r.read_exact(&mut vbuf)?;
+    // Rebuild through from_rows to regenerate the O(1) dictionaries.
+    let indices: Vec<u32> = ibuf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let values: Vec<f32> = vbuf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let rows = (0..n)
+        .map(|i| {
+            (indptr[i]..indptr[i + 1])
+                .map(|p| (indices[p], values[p]))
+                .collect()
+        })
+        .collect();
+    Ok(SparseDataset::from_rows(n, d, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn dense_roundtrip() {
+        let ds = synthetic::gaussian_iid(17, 9, 1);
+        let path = std::env::temp_dir().join("bmonn_test_dense.bmd");
+        save_dense(&ds, &path).unwrap();
+        let back = load_dense(&path).unwrap();
+        assert_eq!(ds.n, back.n);
+        assert_eq!(ds.d, back.d);
+        assert_eq!(ds.raw(), back.raw());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sparse_roundtrip() {
+        let ds = synthetic::rna_like(23, 101, 0.1, 2);
+        let path = std::env::temp_dir().join("bmonn_test_sparse.bms");
+        save_sparse(&ds, &path).unwrap();
+        let back = load_sparse(&path).unwrap();
+        assert_eq!(ds.n, back.n);
+        assert_eq!(ds.d, back.d);
+        assert_eq!(ds.indptr, back.indptr);
+        assert_eq!(ds.indices, back.indices);
+        assert_eq!(ds.values, back.values);
+        assert_eq!(back.get(0, back.indices.first().copied().unwrap_or(0)),
+                   ds.get(0, ds.indices.first().copied().unwrap_or(0)));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = std::env::temp_dir().join("bmonn_test_bad.bmd");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(load_dense(&path).is_err());
+        assert!(load_sparse(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrate: dense/sparse datasets, synthetic generators, binary
+//! I/O, and the randomized Hadamard rotation.
+
+pub mod dense;
+pub mod loader;
+pub mod rotate;
+pub mod sparse;
+pub mod synthetic;
+
+pub use dense::{DenseDataset, Metric};
+pub use sparse::SparseDataset;

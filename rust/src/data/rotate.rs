@@ -1,0 +1,180 @@
+//! Randomized orthonormal rotation `H D` (Lemma 3 / Appendix C-B).
+//!
+//! `D` is a random ±1 diagonal, `H` the orthonormal Walsh–Hadamard matrix;
+//! the in-place butterfly below applies `H` in O(d log d). Rotating a
+//! dataset preserves pairwise ℓ2 distances while flattening coordinate-wise
+//! distance spikes, shrinking the sub-Gaussian constant of the ℓ2 Monte
+//! Carlo box by up to ~d/log(nd/δ) (Lemma 3).
+//!
+//! This is the rust mirror of the L1 Pallas kernel in
+//! `python/compile/kernels/wht.py` (same semantics; cross-checked by the
+//! runtime parity tests). The coordinator uses it when the artifact bundle
+//! is not loaded or d exceeds the compiled shape.
+
+use crate::data::dense::DenseDataset;
+use crate::util::rng::Rng;
+
+/// In-place orthonormal fast Walsh–Hadamard transform.
+/// `x.len()` must be a power of two.
+pub fn fwht_inplace(x: &mut [f32]) {
+    let d = x.len();
+    assert!(d.is_power_of_two(), "FWHT requires power-of-two length");
+    let mut h = 1;
+    while h < d {
+        let step = h * 2;
+        let mut base = 0;
+        while base < d {
+            for i in base..base + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+            base += step;
+        }
+        h = step;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// The random rotation `H D`: sign diagonal + orthonormal FWHT.
+#[derive(Clone, Debug)]
+pub struct Rotation {
+    pub signs: Vec<f32>,
+}
+
+impl Rotation {
+    /// Sample a rotation for dimension `d` (power of two).
+    pub fn sample(d: usize, rng: &mut Rng) -> Self {
+        assert!(d.is_power_of_two());
+        Rotation { signs: (0..d).map(|_| rng.sign()).collect() }
+    }
+
+    pub fn d(&self) -> usize {
+        self.signs.len()
+    }
+
+    /// Apply in place to one vector.
+    pub fn apply_inplace(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.signs.len());
+        for (v, s) in x.iter_mut().zip(&self.signs) {
+            *v *= s;
+        }
+        fwht_inplace(x);
+    }
+
+    pub fn apply(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = x.to_vec();
+        self.apply_inplace(&mut out);
+        out
+    }
+
+    /// Rotate a whole dataset (pads to the next power of two if needed —
+    /// zero padding preserves ℓ2 distances, Appendix C-B).
+    pub fn rotate_dataset(ds: &DenseDataset, rng: &mut Rng)
+                          -> (DenseDataset, Rotation) {
+        let d_pow = ds.d.next_power_of_two();
+        let padded = if d_pow == ds.d { ds.clone() } else { ds.pad_dims(d_pow) };
+        let rot = Rotation::sample(d_pow, rng);
+        let mut out = DenseDataset::zeros(padded.n, d_pow);
+        for i in 0..padded.n {
+            let mut row = padded.row_vec(i);
+            rot.apply_inplace(&mut row);
+            out.row_mut(i).copy_from_slice(&row);
+        }
+        (out, rot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dense::{dist_slices, Metric};
+    use crate::util::proptest;
+
+    #[test]
+    fn fwht_matches_explicit_matrix_small() {
+        // H_2 (orthonormal) = [[1,1],[1,-1]]/sqrt(2)
+        let mut x = vec![3.0, 5.0];
+        fwht_inplace(&mut x);
+        let s = 1.0 / 2f32.sqrt();
+        assert!((x[0] - 8.0 * s).abs() < 1e-6);
+        assert!((x[1] - (-2.0) * s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fwht_is_involution_up_to_orthonormality() {
+        // orthonormal H: H(Hx) = x
+        let mut x: Vec<f32> = (0..16).map(|i| i as f32 - 7.5).collect();
+        let orig = x.clone();
+        fwht_inplace(&mut x);
+        fwht_inplace(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_l2_distances() {
+        proptest::check(50, |rng| {
+            let logd = rng.below(8);
+            let d = 1usize << logd;
+            let a: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let rot = Rotation::sample(d, rng);
+            let ar = rot.apply(&a);
+            let br = rot.apply(&b);
+            let before = dist_slices(&a, &b, Metric::L2Sq);
+            let after = dist_slices(&ar, &br, Metric::L2Sq);
+            crate::prop_assert!(
+                (before - after).abs() <= 1e-3 * before.max(1.0),
+                "l2 not preserved: {before} vs {after} (d={d})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotation_flattens_one_hot_difference() {
+        // Lemma 3's motivating case: points differing in one coordinate.
+        let mut rng = Rng::new(0);
+        let d = 256;
+        let mut a = vec![0.0f32; d];
+        a[10] = 10.0;
+        let b = vec![0.0f32; d];
+        let rot = Rotation::sample(d, &mut rng);
+        let ar = rot.apply(&a);
+        let br = rot.apply(&b);
+        let max_coord_sq = ar
+            .iter()
+            .zip(&br)
+            .map(|(x, y)| (x - y) * (x - y))
+            .fold(0f32, f32::max);
+        // before: max coord² = 100; after: exactly 100/d per coordinate
+        assert!(max_coord_sq < 100.0 / d as f32 * 1.01,
+                "max coord sq {max_coord_sq}");
+    }
+
+    #[test]
+    fn rotate_dataset_pads_non_power_of_two() {
+        let mut rng = Rng::new(1);
+        let ds = DenseDataset::new(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let (rotated, rot) = Rotation::rotate_dataset(&ds, &mut rng);
+        assert_eq!(rotated.d, 4);
+        assert_eq!(rot.d(), 4);
+        let mut c = crate::metrics::Counter::new();
+        let before = ds.dist(0, 1, Metric::L2Sq, &mut c);
+        let after = rotated.dist(0, 1, Metric::L2Sq, &mut c);
+        assert!((before - after).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn fwht_rejects_non_power_of_two() {
+        let mut x = vec![0.0; 3];
+        fwht_inplace(&mut x);
+    }
+}

@@ -1,0 +1,239 @@
+//! Sparse (CSR) dataset substrate with the O(1) operations the sparse
+//! Monte Carlo box of §IV-A / Appendix C-A requires:
+//!
+//!  * sample a uniformly-random nonzero coordinate of a row — O(1)
+//!    (random position into the row's index slice);
+//!  * membership test "is coordinate j nonzero in row i" and value lookup
+//!    — O(1) via a per-row `HashMap` (the paper's "dictionary");
+//!  * sparsity-aware exact distance — O(|S_i| + |S_j|) sorted-merge, with
+//!    the cost counted as `|S_i| + |S_j|` units (DESIGN.md §7).
+
+use std::collections::HashMap;
+
+use crate::data::dense::Metric;
+use crate::metrics::Counter;
+
+/// CSR sparse matrix plus per-row coordinate→value dictionaries.
+#[derive(Clone, Debug)]
+pub struct SparseDataset {
+    pub n: usize,
+    pub d: usize,
+    pub indptr: Vec<usize>,
+    /// sorted within each row
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    /// per-row dictionary: coordinate -> value (the O(1) membership/lookup
+    /// structure of Appendix C-A)
+    dicts: Vec<HashMap<u32, f32>>,
+}
+
+impl SparseDataset {
+    /// Build from per-row (sorted-or-not) index/value pairs.
+    pub fn from_rows(n: usize, d: usize,
+                     rows: Vec<Vec<(u32, f32)>>) -> Self {
+        assert_eq!(rows.len(), n);
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut dicts = Vec::with_capacity(n);
+        indptr.push(0);
+        for mut row in rows {
+            row.sort_unstable_by_key(|&(j, _)| j);
+            row.dedup_by_key(|&mut (j, _)| j);
+            let mut dict = HashMap::with_capacity(row.len() * 2);
+            for &(j, v) in &row {
+                assert!((j as usize) < d, "column {j} out of range");
+                if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                    dict.insert(j, v);
+                }
+            }
+            indptr.push(indices.len());
+            dicts.push(dict);
+        }
+        SparseDataset { n, d, indptr, indices, values, dicts }
+    }
+
+    /// Number of nonzeros in row i (`n_i` in the paper).
+    #[inline]
+    pub fn nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    pub fn total_nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.total_nnz() as f64 / (self.n * self.d) as f64
+    }
+
+    /// Row support (sorted coordinate ids) and values.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// O(1): value at (i, j), 0.0 when absent.
+    #[inline]
+    pub fn get(&self, i: usize, j: u32) -> f32 {
+        self.dicts[i].get(&j).copied().unwrap_or(0.0)
+    }
+
+    /// O(1): is coordinate j in the support of row i?
+    #[inline]
+    pub fn contains(&self, i: usize, j: u32) -> bool {
+        self.dicts[i].contains_key(&j)
+    }
+
+    /// O(1): the t-th nonzero of row i as (coordinate, value).
+    #[inline]
+    pub fn support_entry(&self, i: usize, t: usize) -> (u32, f32) {
+        let a = self.indptr[i];
+        (self.indices[a + t], self.values[a + t])
+    }
+
+    /// Sparsity-aware exact distance via sorted-support merge.
+    /// Counts `|S_i| + |S_j|` units — the paper's sparse exact baseline.
+    pub fn dist(&self, i: usize, j: usize, metric: Metric,
+                counter: &mut Counter) -> f64 {
+        let (ia, va) = self.row(i);
+        let (ib, vb) = self.row(j);
+        counter.add((ia.len() + ib.len()) as u64);
+        merge_dist(ia, va, ib, vb, metric)
+    }
+
+    /// Densify (testing / cross-checking only).
+    pub fn to_dense(&self) -> crate::data::dense::DenseDataset {
+        let mut out = crate::data::dense::DenseDataset::zeros(self.n, self.d);
+        for i in 0..self.n {
+            let (idx, val) = self.row(i);
+            for (&j, &v) in idx.iter().zip(val) {
+                out.row_mut(i)[j as usize] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Distance over two sorted sparse rows.
+pub fn merge_dist(ia: &[u32], va: &[f32], ib: &[u32], vb: &[f32],
+                  metric: Metric) -> f64 {
+    let (mut p, mut q) = (0usize, 0usize);
+    let mut acc = 0f64;
+    while p < ia.len() && q < ib.len() {
+        match ia[p].cmp(&ib[q]) {
+            std::cmp::Ordering::Less => {
+                acc += metric.coord(va[p], 0.0) as f64;
+                p += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                acc += metric.coord(0.0, vb[q]) as f64;
+                q += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                acc += metric.coord(va[p], vb[q]) as f64;
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    while p < ia.len() {
+        acc += metric.coord(va[p], 0.0) as f64;
+        p += 1;
+    }
+    while q < ib.len() {
+        acc += metric.coord(0.0, vb[q]) as f64;
+        q += 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn toy() -> SparseDataset {
+        // row0: {0: 1.0, 3: 2.0}; row1: {3: -1.0, 5: 4.0}; row2: {}
+        SparseDataset::from_rows(
+            3,
+            8,
+            vec![
+                vec![(0, 1.0), (3, 2.0)],
+                vec![(5, 4.0), (3, -1.0)],
+                vec![],
+            ],
+        )
+    }
+
+    #[test]
+    fn structure() {
+        let ds = toy();
+        assert_eq!(ds.nnz(0), 2);
+        assert_eq!(ds.nnz(2), 0);
+        assert_eq!(ds.get(1, 3), -1.0);
+        assert_eq!(ds.get(1, 4), 0.0);
+        assert!(ds.contains(0, 0));
+        assert!(!ds.contains(0, 1));
+        assert_eq!(ds.support_entry(1, 0), (3, -1.0));
+        assert!((ds.density() - 4.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l1_merge_distance_and_cost() {
+        let ds = toy();
+        let mut c = Counter::new();
+        // |1-0| + |2-(-1)| + |0-4| = 1 + 3 + 4 = 8
+        let d = ds.dist(0, 1, Metric::L1, &mut c);
+        assert!((d - 8.0).abs() < 1e-9);
+        assert_eq!(c.get(), 4); // |S0| + |S1|
+    }
+
+    #[test]
+    fn zero_rows_handled() {
+        let ds = toy();
+        let mut c = Counter::new();
+        let d = ds.dist(0, 2, Metric::L1, &mut c);
+        assert!((d - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dedups_and_drops_zeros() {
+        let ds = SparseDataset::from_rows(
+            1, 4, vec![vec![(1, 5.0), (1, 6.0), (2, 0.0)]]);
+        assert_eq!(ds.nnz(0), 1);
+    }
+
+    #[test]
+    fn matches_dense_distance_property() {
+        proptest::check(64, |rng: &mut Rng| {
+            let d = 1 + rng.below(40);
+            let mk_row = |rng: &mut Rng| -> Vec<(u32, f32)> {
+                let mut row = Vec::new();
+                for j in 0..d {
+                    if rng.bool(0.3) {
+                        row.push((j as u32, rng.gaussian() as f32));
+                    }
+                }
+                row
+            };
+            let rows = vec![mk_row(rng), mk_row(rng)];
+            let ds = SparseDataset::from_rows(2, d, rows);
+            let dense = ds.to_dense();
+            for metric in [Metric::L1, Metric::L2Sq] {
+                let mut c = Counter::new();
+                let a = ds.dist(0, 1, metric, &mut c);
+                let b = dense.dist(0, 1, metric, &mut c);
+                crate::prop_assert!(
+                    (a - b).abs() < 1e-4,
+                    "sparse {a} != dense {b} (metric {metric:?}, d={d})"
+                );
+            }
+            Ok(())
+        });
+    }
+}

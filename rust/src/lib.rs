@@ -1,0 +1,43 @@
+//! # bmonn — Bandit-based Monte Carlo Optimization for Nearest Neighbors
+//!
+//! A full reproduction of Bagaria, Baharav, Kamath & Tse,
+//! *"Bandit-Based Monte Carlo Optimization for Nearest Neighbors"* (2018),
+//! as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (rust, this crate)** — the BMO UCB coordinator: adaptive bandit
+//!   scheduling of coordinate sampling, k-NN / PAC / k-means drivers, the
+//!   query server, baselines (exact, uniform, LSH, NN-descent, ANNG), and
+//!   the benchmark harness reproducing every figure of the paper.
+//! * **L2 (jax, `python/compile/model.py`)** — fixed-shape batched-pull
+//!   compute graphs, AOT-lowered once to HLO text.
+//! * **L1 (pallas, `python/compile/kernels/`)** — the gather+reduce pull
+//!   kernel and the FWHT rotation kernel.
+//!
+//! Quick start:
+//! ```no_run
+//! use bmonn::coordinator::{BanditParams, knn::knn_point_dense};
+//! use bmonn::data::{synthetic, Metric};
+//! use bmonn::metrics::Counter;
+//! use bmonn::runtime::native::NativeEngine;
+//! use bmonn::util::rng::Rng;
+//!
+//! let data = synthetic::image_like(1000, 1024, 42);
+//! let mut engine = NativeEngine::default();
+//! let mut rng = Rng::new(0);
+//! let mut counter = Counter::new();
+//! let res = knn_point_dense(&data, 0, Metric::L2Sq,
+//!                           &BanditParams { k: 5, ..Default::default() },
+//!                           &mut engine, &mut rng, &mut counter);
+//! println!("5-NN of point 0: {:?} ({} coordinate ops — exact would be {})",
+//!          res.ids, counter.get(), (data.n - 1) * data.d);
+//! ```
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,367 @@
+//! `bmonn` CLI — the leader entrypoint. See `bmonn help` / cli::USAGE.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use bmonn::baselines::{exact, uniform};
+use bmonn::bench_harness::figures;
+use bmonn::cli::{Args, USAGE};
+use bmonn::config::{BmonnConfig, EngineKind, RawConfig};
+use bmonn::coordinator::kmeans::{kmeans_bmo, kmeans_exact, KMeansParams};
+use bmonn::coordinator::knn::{knn_graph_dense, knn_point_dense,
+                              knn_point_sparse};
+use bmonn::coordinator::server::{Server, ServerConfig};
+use bmonn::data::dense::Metric;
+use bmonn::data::{loader, synthetic};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::pjrt::{verify_exact_artifact, PjrtEngine, PjrtRuntime};
+use bmonn::util::rng::Rng;
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(argv) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<BmonnConfig, String> {
+    let mut raw = RawConfig::default();
+    if let Some(path) = args.flag("config") {
+        raw.merge(&RawConfig::load(Path::new(path))?);
+    }
+    if let Some(sets) = args.flag("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("--set: expected key=value, got {kv}"))?;
+            raw.set(k.trim(), v.trim());
+        }
+    }
+    let mut cfg = BmonnConfig::from_raw(&raw)?;
+    // CLI flag shorthands override the file
+    if let Some(m) = args.flag("metric") {
+        cfg.metric = Metric::parse(m).ok_or(format!("bad --metric {m}"))?;
+    }
+    cfg.k = args.flag_usize("k", cfg.k)?;
+    cfg.delta = args.flag_f64("delta", cfg.delta)?;
+    cfg.epsilon = args.flag_f64("epsilon", cfg.epsilon)?;
+    cfg.seed = args.flag_u64("seed", cfg.seed)?;
+    if let Some(e) = args.flag("engine") {
+        cfg.engine =
+            EngineKind::parse(e).ok_or(format!("bad --engine {e}"))?;
+    }
+    if let Some(a) = args.flag("artifacts") {
+        cfg.artifact_dir = a.to_string();
+    }
+    if let Some(a) = args.flag("addr") {
+        cfg.server_addr = a.to_string();
+    }
+    Ok(cfg)
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "gen-data" => cmd_gen_data(&args),
+        "knn" => cmd_knn(&args),
+        "graph" => cmd_graph(&args),
+        "kmeans" => cmd_kmeans(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "selftest" => cmd_selftest(&args),
+        other => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<(), String> {
+    let kind = args.flag("kind").unwrap_or("image");
+    let n = args.flag_usize("n", 1000)?;
+    let d = args.flag_usize("d", 1024)?;
+    let seed = args.flag_u64("seed", 42)?;
+    let out = args.flag("out").ok_or("--out FILE required")?;
+    match kind {
+        "image" => {
+            let ds = synthetic::image_like(n, d, seed);
+            loader::save_dense(&ds, Path::new(out))
+                .map_err(|e| e.to_string())?;
+        }
+        "gaussian" => {
+            let ds = synthetic::gaussian_means(
+                n, d, args.flag_f64("mu", 4.0)?, args.flag_f64("s", 1.0)?,
+                seed);
+            loader::save_dense(&ds, Path::new(out))
+                .map_err(|e| e.to_string())?;
+        }
+        "powerlaw" => {
+            let ds = synthetic::power_law_gaps(
+                n, d, args.flag_f64("alpha", 2.0)?, 1.0, seed);
+            loader::save_dense(&ds, Path::new(out))
+                .map_err(|e| e.to_string())?;
+        }
+        "rna" => {
+            let ds = synthetic::rna_like(
+                n, d, args.flag_f64("density", 0.07)?, seed);
+            loader::save_sparse(&ds, Path::new(out))
+                .map_err(|e| e.to_string())?;
+        }
+        other => return Err(format!("unknown --kind {other}")),
+    }
+    println!("wrote {kind} dataset n={n} d={d} -> {out}");
+    Ok(())
+}
+
+fn cmd_knn(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let path = args.flag("data").ok_or("--data FILE required")?;
+    let algo = args.flag("algo").unwrap_or("bmo");
+    let q = args.flag_usize("query-idx", 0)?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut counter = Counter::new();
+    // sparse path
+    if path.ends_with(".bms") {
+        let data =
+            loader::load_sparse(Path::new(path)).map_err(|e| e.to_string())?;
+        let res = match algo {
+            "bmo" => knn_point_sparse(&data, q, Metric::L1,
+                                      &cfg.bandit_params(), &mut rng,
+                                      &mut counter),
+            "exact" => {
+                let r = exact::knn_point_sparse(&data, q, cfg.k, Metric::L1,
+                                                &mut counter);
+                print_answer(&r.ids, &r.dists, counter.get());
+                return Ok(());
+            }
+            other => return Err(format!("sparse data supports \
+                                         --algo bmo|exact, got {other}")),
+        };
+        print_answer(&res.ids, &res.dists, counter.get());
+        return Ok(());
+    }
+    let data =
+        loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
+    let params = cfg.bandit_params();
+    let ids_dists: (Vec<u32>, Vec<f64>) = match algo {
+        "bmo" => {
+            let res = match cfg.engine {
+                EngineKind::Scalar => {
+                    let mut e = bmonn::coordinator::arms::ScalarEngine;
+                    knn_point_dense(&data, q, cfg.metric, &params, &mut e,
+                                    &mut rng, &mut counter)
+                }
+                EngineKind::Native => {
+                    let mut e = NativeEngine::default();
+                    knn_point_dense(&data, q, cfg.metric, &params, &mut e,
+                                    &mut rng, &mut counter)
+                }
+                EngineKind::Pjrt => {
+                    let mut e = PjrtEngine::new(
+                        Path::new(&cfg.artifact_dir), cfg.metric)
+                        .map_err(|e| e.to_string())?;
+                    // align round pulls to the artifact T
+                    let mut p = params.clone();
+                    p.policy.round_pulls = e.round_pulls();
+                    knn_point_dense(&data, q, cfg.metric, &p, &mut e,
+                                    &mut rng, &mut counter)
+                }
+            };
+            (res.ids, res.dists)
+        }
+        "exact" => {
+            let r = exact::knn_point(&data, q, cfg.k, cfg.metric,
+                                     &mut counter);
+            (r.ids, r.dists)
+        }
+        "uniform" => {
+            let m = args.flag_u64("samples-per-arm", 64)?;
+            let r = uniform::knn_point(&data, q, cfg.k, cfg.metric, m,
+                                       &mut rng, &mut counter);
+            (r.ids, r.est_dists)
+        }
+        "lsh" => {
+            let (idx, p) = bmonn::baselines::lsh::build_tuned(
+                &data, cfg.metric, cfg.k, 0.95, &mut rng);
+            eprintln!("lsh tuned: {} tables", p.n_tables);
+            let r = idx.knn_query(data.row(q), Some(q), cfg.k, &mut counter);
+            (r.iter().map(|&(i, _)| i).collect(),
+             r.iter().map(|&(_, d)| d).collect())
+        }
+        "kgraph" => {
+            let idx = bmonn::baselines::nndescent::NnDescentIndex::build(
+                &data, cfg.metric,
+                bmonn::baselines::nndescent::NnDescentParams::default(),
+                &mut rng);
+            let r = idx.knn_query(data.row(q), Some(q), cfg.k, &mut rng,
+                                  &mut counter);
+            (r.iter().map(|&(i, _)| i).collect(),
+             r.iter().map(|&(_, d)| d).collect())
+        }
+        "ngt" => {
+            let idx = bmonn::baselines::graph_search::AnngIndex::build(
+                &data, cfg.metric,
+                bmonn::baselines::graph_search::AnngParams::default(),
+                &mut rng);
+            let r = idx.knn_query(data.row(q), Some(q), cfg.k, &mut rng,
+                                  &mut counter);
+            (r.iter().map(|&(i, _)| i).collect(),
+             r.iter().map(|&(_, d)| d).collect())
+        }
+        other => return Err(format!("unknown --algo {other}")),
+    };
+    print_answer(&ids_dists.0, &ids_dists.1, counter.get());
+    let exact_units = ((data.n - 1) * data.d) as u64;
+    println!("gain vs exact: {:.1}x",
+             exact_units as f64 / counter.get().max(1) as f64);
+    Ok(())
+}
+
+fn print_answer(ids: &[u32], dists: &[f64], units: u64) {
+    println!("neighbors: {ids:?}");
+    println!("distances: {:?}",
+             dists.iter().map(|d| (d * 1000.0).round() / 1000.0)
+                  .collect::<Vec<_>>());
+    println!("coordinate-distance computations: {units}");
+}
+
+fn cmd_graph(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let path = args.flag("data").ok_or("--data FILE required")?;
+    let data =
+        loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut counter = Counter::new();
+    let mut engine = NativeEngine::default();
+    let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
+                            &mut engine, &mut rng, &mut counter);
+    let exact_units = (data.n * (data.n - 1) * data.d) as u64;
+    println!("k-NN graph over n={} d={} k={}", data.n, data.d, cfg.k);
+    println!("coordinate-distance computations: {}", counter.get());
+    println!("gain vs exact graph construction: {:.1}x",
+             exact_units as f64 / counter.get().max(1) as f64);
+    if let Some(out) = args.flag("out") {
+        let mut s = String::new();
+        for (i, nbrs) in g.neighbors.iter().enumerate() {
+            s.push_str(&format!("{i}"));
+            for n in nbrs {
+                s.push_str(&format!(" {n}"));
+            }
+            s.push('\n');
+        }
+        std::fs::write(out, s).map_err(|e| e.to_string())?;
+        println!("graph written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_kmeans(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let path = args.flag("data").ok_or("--data FILE required")?;
+    let data =
+        loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
+    let params = KMeansParams {
+        k: args.flag_usize("clusters", 100)?,
+        max_iters: args.flag_usize("iters", 10)?,
+        ..Default::default()
+    };
+    let algo = args.flag("algo").unwrap_or("bmo");
+    let mut rng = Rng::new(cfg.seed);
+    let res = match algo {
+        "bmo" => {
+            let mut engine = NativeEngine::default();
+            kmeans_bmo(&data, &params, &mut engine, &mut rng)
+        }
+        "exact" => kmeans_exact(&data, &params, &mut rng),
+        other => return Err(format!("unknown --algo {other}")),
+    };
+    println!("k-means ({algo}): {} iters, {} units, accuracy {:?}",
+             res.iters, res.metrics.dist_computations, res.assign_accuracy);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let path = args.flag("data").ok_or("--data FILE required")?;
+    let data =
+        loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
+    let sc = ServerConfig {
+        addr: cfg.server_addr.clone(),
+        metric: cfg.metric,
+        params: cfg.bandit_params(),
+        n_workers: cfg.server_workers,
+        native_engine: cfg.engine != EngineKind::Scalar,
+    };
+    let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
+    println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(1));
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let name = args
+        .positional
+        .first()
+        .ok_or("bench requires a figure name (e.g. fig3b)")?;
+    let quick = args.flag_bool("quick");
+    let seed = args.flag_u64("seed", 42)?;
+    let rep = figures::run_figure(name, quick, seed)?;
+    let rendered = rep.render();
+    println!("{rendered}");
+    if let Some(out) = args.flag("out") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(out)
+            .map_err(|e| e.to_string())?;
+        f.write_all(rendered.as_bytes()).map_err(|e| e.to_string())?;
+        println!("appended to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<(), String> {
+    let dir = args.flag("artifacts").unwrap_or("artifacts");
+    let mut rt =
+        PjrtRuntime::new(Path::new(dir)).map_err(|e| e.to_string())?;
+    println!("platform: {}", rt.platform());
+    for metric in [Metric::L2Sq, Metric::L1] {
+        let rel = verify_exact_artifact(&mut rt, metric)
+            .map_err(|e| e.to_string())?;
+        println!("exact_rows_{}: max rel err {rel:.2e} {}",
+                 metric.name(), if rel < 1e-3 { "OK" } else { "FAIL" });
+        if rel >= 1e-3 {
+            return Err("artifact verification failed".into());
+        }
+    }
+    // end-to-end: pjrt engine vs native on a real query
+    let data = synthetic::image_like(256, 512, 7);
+    let mut pjrt = PjrtEngine::new(Path::new(dir), Metric::L2Sq)
+        .map_err(|e| e.to_string())?;
+    let mut params = bmonn::coordinator::BanditParams { k: 5,
+        ..Default::default() };
+    params.policy.round_pulls = pjrt.round_pulls();
+    let mut rng = Rng::new(1);
+    let mut c = Counter::new();
+    let res = knn_point_dense(&data, 0, Metric::L2Sq, &params, &mut pjrt,
+                              &mut rng, &mut c);
+    let truth = exact::knn_point(&data, 0, 5, Metric::L2Sq,
+                                 &mut Counter::new());
+    let got: std::collections::HashSet<_> = res.ids.iter().collect();
+    let want: std::collections::HashSet<_> = truth.ids.iter().collect();
+    println!("pjrt end-to-end 5-NN: {} ({} artifact executions)",
+             if got == want { "OK" } else { "MISMATCH" }, pjrt.executions);
+    if got != want {
+        return Err("pjrt end-to-end mismatch".into());
+    }
+    println!("selftest passed");
+    Ok(())
+}

@@ -1,0 +1,330 @@
+//! Metrics substrate: the paper's universal cost unit plus timers.
+//!
+//! Every algorithm in this repo (BMO-NN and all baselines) accounts its
+//! work in **coordinate-wise distance computations** through [`Counter`],
+//! following the accounting rules in DESIGN.md §7 (which mirror the
+//! paper's Appendix D). Wall-clock figures use [`Stopwatch`];
+//! distributional figures (Fig 4c / Fig 7) use [`Histogram`].
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Monotonic counter of coordinate-wise distance computations.
+///
+/// Plain `u64` cell — the coordinator is single-threaded per query; the
+/// server gives each worker its own counter and merges.
+#[derive(Clone, Debug, Default)]
+pub struct Counter {
+    count: u64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { count: 0 }
+    }
+
+    #[inline]
+    pub fn add(&mut self, units: u64) {
+        self.count += units;
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.count
+    }
+
+    pub fn reset(&mut self) {
+        self.count = 0;
+    }
+
+    pub fn merge(&mut self, other: &Counter) {
+        self.count += other.count;
+    }
+}
+
+/// Fixed-bin histogram over `[lo, hi)` with overflow/underflow buckets.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo)
+                * self.bins.len() as f64) as usize;
+            let last = self.bins.len() - 1;
+            self.bins[b.min(last)] += 1;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bin counts (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let target = (q * self.count as f64) as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.lo;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.lo + w * (i as f64 + 1.0);
+            }
+        }
+        self.hi
+    }
+
+    /// Fraction of mass at or above `x` — used for tail comparisons
+    /// (Fig 4c / Fig 7: "rapidly decaying tails").
+    pub fn tail_fraction(&self, x: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let mut acc = self.overflow;
+        for (i, &c) in self.bins.iter().enumerate().rev() {
+            let bin_lo = self.lo + w * i as f64;
+            if bin_lo < x {
+                break;
+            }
+            acc += c;
+        }
+        acc as f64 / self.count as f64
+    }
+
+    /// Render an ASCII sparkline of the (normalized) bin mass.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1) as f64;
+        self.bins
+            .iter()
+            .map(|&c| GLYPHS[((c as f64 / max) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+/// Simple stopwatch with named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now(), laps: Vec::new() }
+    }
+
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let d = self.start.elapsed();
+        self.laps.push((name.to_string(), d));
+        self.start = Instant::now();
+        d
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Aggregated per-run metrics returned by the coordinator.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// coordinate-wise distance computations (the paper's unit)
+    pub dist_computations: u64,
+    /// number of bandit rounds (priority-queue iterations)
+    pub rounds: u64,
+    /// arms resolved by exact evaluation (hit MAX_PULLS)
+    pub exact_evals: u64,
+    /// wall time
+    pub elapsed: Duration,
+}
+
+impl RunMetrics {
+    pub fn merge(&mut self, o: &RunMetrics) {
+        self.dist_computations += o.dist_computations;
+        self.rounds += o.rounds;
+        self.exact_evals += o.exact_evals;
+        self.elapsed += o.elapsed;
+    }
+
+    /// Gain over exact computation that would cost `exact_units`.
+    pub fn gain_vs(&self, exact_units: u64) -> f64 {
+        exact_units as f64 / self.dist_computations.max(1) as f64
+    }
+}
+
+/// Latency recorder for the serving driver (E12).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).floor() as usize;
+        Duration::from_micros(s[idx.min(s.len() - 1)])
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.samples_us.iter().sum::<u64>() / self.samples_us.len() as u64,
+        )
+    }
+}
+
+/// Named scalar metrics collected during a bench run; printed as a table.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    values: BTreeMap<String, f64>,
+}
+
+impl Registry {
+    pub fn set(&mut self, name: &str, v: f64) {
+        self.values.insert(name.to_string(), v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.get(name).copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &f64)> {
+        self.values.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates_and_merges() {
+        let mut a = Counter::new();
+        a.add(5);
+        a.add(7);
+        assert_eq!(a.get(), 12);
+        let mut b = Counter::new();
+        b.add(3);
+        a.merge(&b);
+        assert_eq!(a.get(), 15);
+        a.reset();
+        assert_eq!(a.get(), 0);
+    }
+
+    #[test]
+    fn histogram_bins_and_quantiles() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.record(i as f64 / 10.0); // 0.0 .. 9.9 uniform
+        }
+        assert_eq!(h.count, 100);
+        assert_eq!(h.underflow, 0);
+        assert_eq!(h.overflow, 0);
+        assert!((h.mean() - 4.95).abs() < 1e-9);
+        let med = h.quantile(0.5);
+        assert!((4.0..=6.0).contains(&med), "median {med}");
+    }
+
+    #[test]
+    fn histogram_tail_fraction() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 / 10.0 + 0.05);
+        }
+        let tail = h.tail_fraction(0.8);
+        assert!((tail - 0.2).abs() < 1e-9, "tail {tail}");
+    }
+
+    #[test]
+    fn histogram_overflow_underflow() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        h.record(-1.0);
+        h.record(2.0);
+        h.record(0.5);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.count, 3);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100u64 {
+            l.record(Duration::from_micros(i));
+        }
+        assert_eq!(l.percentile(50.0), Duration::from_micros(50));
+        assert_eq!(l.percentile(99.0), Duration::from_micros(99));
+        assert_eq!(l.count(), 100);
+    }
+
+    #[test]
+    fn run_metrics_gain() {
+        let m = RunMetrics { dist_computations: 100, ..Default::default() };
+        assert!((m.gain_vs(8_000) - 80.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,161 @@
+//! AOT artifact manifest: parses `artifacts/manifest.json` written by
+//! `python/compile/aot.py` and validates shapes before anything is fed to
+//! the PJRT runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    /// free-form metadata from the python side (b, d, t, n, metric, ...)
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let man_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {man_path:?}: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, spec) in arts {
+            let file = spec
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            let file = dir.join(file);
+            if !file.exists() {
+                bail!("artifact {name}: {file:?} does not exist");
+            }
+            let inputs = spec
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(|inp| -> Result<InputSpec> {
+                    let shape = inp
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("bad input shape"))?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect();
+                    let dtype = inp
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("float32")
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let meta = spec
+                .get("meta")
+                .and_then(|m| m.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, inputs, meta },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest \
+                                    (have: {:?})",
+                                   self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Default artifact directory: $BMONN_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("BMONN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&Manifest::default_dir()).unwrap();
+        let p = m.get("pull_rows_l2").unwrap();
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.meta_str("metric"), Some("l2"));
+        let b = p.meta_usize("b").unwrap();
+        assert_eq!(p.inputs[0].shape[0], b);
+        assert!(m.get("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        let r = Manifest::load(Path::new("/nonexistent/artifacts"));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("bmonn_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":{"x":{"file":"x.hlo.txt",
+                "inputs":[{"shape":[2,3],"dtype":"float32"}],
+                "meta":{"b":2,"d":3,"metric":"l2"}}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let x = m.get("x").unwrap();
+        assert_eq!(x.inputs[0].shape, vec![2, 3]);
+        assert_eq!(x.meta_usize("d"), Some(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: compute engines behind the coordinator's hot path.
+//!
+//! * [`native`] — optimized rust loops (wall-clock hot path, Fig 6);
+//! * [`pjrt`] — the AOT JAX/Pallas artifacts, loaded from HLO text and
+//!   executed via the PJRT C API (`xla` crate) with device-resident data;
+//! * [`artifacts`] — the manifest that binds the two worlds together.
+//!
+//! Semantics of every engine are pinned to `ScalarEngine`
+//! (coordinator::arms) by parity tests.
+
+pub mod artifacts;
+pub mod native;
+pub mod pjrt;

@@ -1,0 +1,436 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client, and
+//! exposes them to the coordinator — including as a [`PullEngine`] so the
+//! bandit hot loop can run its batched pulls through the compiled
+//! JAX/Pallas kernels with a device-resident dataset.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos — see /opt/xla-example/README.md). Datasets are
+//! uploaded once per `prepare()` via `buffer_from_host_buffer` and reused
+//! across every round through `execute_b`; per round only the arm-id /
+//! coord-id index vectors cross the host boundary.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::arms::PullEngine;
+use crate::data::dense::{DenseDataset, Metric};
+use crate::runtime::artifacts::Manifest;
+
+/// Compiled-artifact cache over one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&mut self, name: &str)
+                      -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self.manifest.get(name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().unwrap(),
+            )
+            .map_err(|e| anyhow!("parsing HLO text {:?}: {e:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Upload a host f32 buffer as a device-resident PJRT buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize])
+                      -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 buffer: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize])
+                      -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 buffer: {e:?}"))
+    }
+}
+
+/// [`PullEngine`] backed by the `pull_data_{metric}` artifacts with a
+/// device-resident padded dataset.
+///
+/// Shape discipline: the artifact fixes (N, D, B, T) at AOT time. The
+/// engine pads the dataset to N×D at `prepare` (zero columns/rows — both
+/// ℓ1 and ℓ2² are padding-invariant since query padding is also zero),
+/// splits pull batches into chunks of B (padding arm-ids by repeating arm
+/// 0 and discarding those outputs), and requires `coord_ids.len() == T`
+/// per chunk — the coordinator's `round_pulls` is aligned to T. When a
+/// round's t < T (an arm near its MAX_PULLS cap), the coordinator falls
+/// back to per-arm scalar pulls, so this engine never sees ragged t.
+pub struct PjrtEngine {
+    rt: PjrtRuntime,
+    /// artifact params
+    n_art: usize,
+    d_art: usize,
+    b_art: usize,
+    t_art: usize,
+    metric: Metric,
+    /// device-resident padded dataset + its host fingerprint
+    data_buf: Option<xla::PjRtBuffer>,
+    data_fingerprint: u64,
+    data_n: usize,
+    data_d: usize,
+    /// cached query upload (queries repeat across thousands of rounds)
+    query_buf: Option<xla::PjRtBuffer>,
+    query_cache: Vec<f32>,
+    /// host→device scratch
+    arm_scratch: Vec<i32>,
+    coord_scratch: Vec<i32>,
+    /// telemetry
+    pub executions: u64,
+}
+
+fn fingerprint(data: &DenseDataset) -> u64 {
+    // cheap structural fingerprint: dims + a few strided samples
+    let raw = data.raw();
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    mix(data.n as u64);
+    mix(data.d as u64);
+    let step = (raw.len() / 64).max(1);
+    for i in (0..raw.len()).step_by(step) {
+        mix(raw[i].to_bits() as u64);
+    }
+    h
+}
+
+impl PjrtEngine {
+    /// Build for a metric using the default artifact bundle.
+    pub fn new(artifact_dir: &Path, metric: Metric) -> Result<Self> {
+        let mut rt = PjrtRuntime::new(artifact_dir)?;
+        let name = format!("pull_data_{}", metric.name());
+        let spec = rt.manifest.get(&name)?.clone();
+        let n_art = spec.meta_usize("n")
+            .ok_or_else(|| anyhow!("artifact {name} missing meta n"))?;
+        let d_art = spec.meta_usize("d")
+            .ok_or_else(|| anyhow!("artifact {name} missing meta d"))?;
+        let b_art = spec.meta_usize("b")
+            .ok_or_else(|| anyhow!("artifact {name} missing meta b"))?;
+        let t_art = spec.meta_usize("t")
+            .ok_or_else(|| anyhow!("artifact {name} missing meta t"))?;
+        // warm the compile cache up front
+        rt.executable(&name)?;
+        Ok(PjrtEngine {
+            rt,
+            n_art,
+            d_art,
+            b_art,
+            t_art,
+            metric,
+            data_buf: None,
+            data_fingerprint: 0,
+            data_n: 0,
+            data_d: 0,
+            query_buf: None,
+            query_cache: Vec::new(),
+            arm_scratch: Vec::new(),
+            coord_scratch: Vec::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn round_pulls(&self) -> u64 {
+        self.t_art as u64
+    }
+
+    pub fn batch_arms(&self) -> usize {
+        self.b_art
+    }
+
+    /// Upload (pad) the dataset once; subsequent calls with the same data
+    /// are no-ops.
+    pub fn prepare(&mut self, data: &DenseDataset) -> Result<()> {
+        let fp = fingerprint(data);
+        if self.data_buf.is_some() && fp == self.data_fingerprint {
+            return Ok(());
+        }
+        if data.n > self.n_art {
+            bail!("dataset n={} exceeds artifact N={} — rebuild artifacts \
+                   with a larger N (python -m compile.aot)",
+                  data.n, self.n_art);
+        }
+        if data.d > self.d_art {
+            bail!("dataset d={} exceeds artifact D={}", data.d, self.d_art);
+        }
+        // pad rows and dims with zeros
+        let mut padded = vec![0f32; self.n_art * self.d_art];
+        for i in 0..data.n {
+            padded[i * self.d_art..i * self.d_art + data.d]
+                .copy_from_slice(data.row(i));
+        }
+        self.data_buf =
+            Some(self.rt.upload_f32(&padded, &[self.n_art, self.d_art])?);
+        self.data_fingerprint = fp;
+        self.data_n = data.n;
+        self.data_d = data.d;
+        self.query_buf = None;
+        self.query_cache.clear();
+        Ok(())
+    }
+
+    fn ensure_query(&mut self, query: &[f32]) -> Result<()> {
+        if self.query_buf.is_some() && self.query_cache == query {
+            return Ok(());
+        }
+        let mut padded = vec![0f32; self.d_art];
+        padded[..query.len()].copy_from_slice(query);
+        self.query_buf = Some(self.rt.upload_f32(&padded, &[self.d_art])?);
+        self.query_cache = query.to_vec();
+        Ok(())
+    }
+
+    /// One artifact execution over ≤ B arms with exactly T coords.
+    fn exec_chunk(&mut self, rows: &[u32], coord_ids: &[u32],
+                  out_sum: &mut Vec<f64>, out_sq: &mut Vec<f64>)
+                  -> Result<()> {
+        debug_assert_eq!(coord_ids.len(), self.t_art);
+        debug_assert!(rows.len() <= self.b_art);
+        self.arm_scratch.clear();
+        self.arm_scratch
+            .extend(rows.iter().map(|&r| r as i32));
+        // pad with arm 0 (outputs discarded)
+        self.arm_scratch.resize(self.b_art, 0);
+        self.coord_scratch.clear();
+        self.coord_scratch
+            .extend(coord_ids.iter().map(|&c| c as i32));
+        let arm_buf =
+            self.rt.upload_i32(&self.arm_scratch, &[self.b_art])?;
+        let coord_buf =
+            self.rt.upload_i32(&self.coord_scratch, &[self.t_art])?;
+        let name = format!("pull_data_{}", self.metric.name());
+        let data_buf = self.data_buf.as_ref().unwrap();
+        let query_buf = self.query_buf.as_ref().unwrap();
+        // keep borrows alive across the executable() mutable borrow
+        let args: Vec<&xla::PjRtBuffer> =
+            vec![data_buf, query_buf, &arm_buf, &coord_buf];
+        let exe = {
+            // executable() needs &mut self.rt; split the borrow by taking
+            // the compiled entry pointer first
+            let rt = &mut self.rt;
+            rt.executable(&name)? as *const xla::PjRtLoadedExecutable
+        };
+        // SAFETY: `compiled` entries are never evicted, and `execute_b`
+        // takes &self; the raw pointer outlives only this call.
+        let exe = unsafe { &*exe };
+        let result = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        self.executions += 1;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        let (sums, sqs) = lit
+            .to_tuple2()
+            .map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let sums: Vec<f32> =
+            sums.to_vec().map_err(|e| anyhow!("sum vec: {e:?}"))?;
+        let sqs: Vec<f32> =
+            sqs.to_vec().map_err(|e| anyhow!("sq vec: {e:?}"))?;
+        for i in 0..rows.len() {
+            out_sum.push(sums[i] as f64);
+            out_sq.push(sqs[i] as f64);
+        }
+        Ok(())
+    }
+}
+
+impl PullEngine for PjrtEngine {
+    fn partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        assert_eq!(metric, self.metric, "engine compiled for {:?}",
+                   self.metric);
+        out_sum.clear();
+        out_sq.clear();
+        // ragged t or oversized datasets fall back to scalar loops —
+        // correctness first, and the coordinator aligns t to T on the
+        // hot path anyway.
+        if coord_ids.len() != self.t_art || data.n > self.n_art
+            || data.d > self.d_art
+        {
+            let mut scalar = crate::coordinator::arms::ScalarEngine;
+            scalar.partial_sums(data, query, rows, coord_ids, metric,
+                                out_sum, out_sq);
+            return;
+        }
+        self.prepare(data).expect("pjrt prepare");
+        self.ensure_query(query).expect("pjrt query upload");
+        for chunk in rows.chunks(self.b_art) {
+            self.exec_chunk(chunk, coord_ids, out_sum, out_sq)
+                .expect("pjrt execute");
+        }
+    }
+
+    fn exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+        out: &mut Vec<f64>,
+    ) {
+        // exact path: native loops (the exact_rows artifact exists and is
+        // exercised by the parity tests; the engine keeps exact on the
+        // host because it is called for at most a handful of arms per
+        // query)
+        let mut scalar = crate::coordinator::arms::ScalarEngine;
+        scalar.exact_dists(data, query, rows, metric, out);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Standalone check: run `exact_rows_{metric}` through PJRT and compare to
+/// host computation. Used by integration tests and `bmonn selftest`.
+pub fn verify_exact_artifact(rt: &mut PjrtRuntime, metric: Metric)
+                             -> Result<f64> {
+    let name = format!("exact_rows_{}", metric.name());
+    let spec = rt.manifest.get(&name)?.clone();
+    let b = spec.meta_usize("b").context("meta b")?;
+    let d = spec.meta_usize("d").context("meta d")?;
+    let mut rng = crate::util::rng::Rng::new(0xE7AC7);
+    let rows: Vec<f32> = (0..b * d).map(|_| rng.gaussian() as f32).collect();
+    let query: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let rows_buf = rt.upload_f32(&rows, &[b, d])?;
+    let query_buf = rt.upload_f32(&query, &[d])?;
+    let exe = rt.executable(&name)?;
+    let result = exe
+        .execute_b(&[&rows_buf, &query_buf])
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("readback: {e:?}"))?;
+    let got: Vec<f32> = lit
+        .to_tuple1()
+        .map_err(|e| anyhow!("tuple1: {e:?}"))?
+        .to_vec()
+        .map_err(|e| anyhow!("vec: {e:?}"))?;
+    let mut max_rel = 0f64;
+    for i in 0..b {
+        let want = crate::data::dense::dist_slices(
+            &rows[i * d..(i + 1) * d], &query, metric);
+        let rel = ((got[i] as f64 - want) / want.max(1e-9)).abs();
+        if rel > max_rel {
+            max_rel = rel;
+        }
+    }
+    Ok(max_rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arms::ScalarEngine;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    fn artifacts_available() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn pjrt_engine_matches_scalar() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut engine =
+            PjrtEngine::new(&Manifest::default_dir(), Metric::L2Sq).unwrap();
+        let ds = synthetic::image_like(100, 512, 201);
+        let query = ds.row_vec(0);
+        let mut rng = Rng::new(202);
+        let rows: Vec<u32> = (1..65).collect();
+        let coords: Vec<u32> = (0..engine.round_pulls())
+            .map(|_| rng.below(512) as u32)
+            .collect();
+        let (mut s_p, mut q_p) = (Vec::new(), Vec::new());
+        engine.partial_sums(&ds, &query, &rows, &coords, Metric::L2Sq,
+                            &mut s_p, &mut q_p);
+        let mut scalar = ScalarEngine;
+        let (mut s_s, mut q_s) = (Vec::new(), Vec::new());
+        scalar.partial_sums(&ds, &query, &rows, &coords, Metric::L2Sq,
+                            &mut s_s, &mut q_s);
+        assert_eq!(s_p.len(), s_s.len());
+        for i in 0..s_p.len() {
+            assert!((s_p[i] - s_s[i]).abs() < 1e-2 * s_s[i].abs().max(1.0),
+                    "sum {i}: pjrt {} scalar {}", s_p[i], s_s[i]);
+            assert!((q_p[i] - q_s[i]).abs() < 1e-2 * q_s[i].abs().max(1.0),
+                    "sq {i}: pjrt {} scalar {}", q_p[i], q_s[i]);
+        }
+        assert!(engine.executions >= 1);
+    }
+
+    #[test]
+    fn exact_artifact_verifies() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = PjrtRuntime::new(&Manifest::default_dir()).unwrap();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let rel = verify_exact_artifact(&mut rt, metric).unwrap();
+            assert!(rel < 1e-3, "{metric:?} max rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn ragged_t_falls_back_to_scalar() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut engine =
+            PjrtEngine::new(&Manifest::default_dir(), Metric::L2Sq).unwrap();
+        let ds = synthetic::gaussian_iid(10, 64, 203);
+        let query = ds.row_vec(0);
+        let coords = [1u32, 5, 7]; // t=3 != T
+        let (mut s, mut q) = (Vec::new(), Vec::new());
+        engine.partial_sums(&ds, &query, &[1, 2], &coords, Metric::L2Sq,
+                            &mut s, &mut q);
+        assert_eq!(s.len(), 2);
+        assert_eq!(engine.executions, 0, "should not have hit pjrt");
+    }
+}

@@ -1,0 +1,5 @@
+//! Dependency-free utilities: PRNG, JSON, property-test harness.
+
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,81 @@
+//! Lightweight property-based testing (the offline crate set has no
+//! `proptest`). `check` runs a property over many seeded random cases and,
+//! on failure, re-reports the failing seed so the case is reproducible:
+//!
+//! ```ignore
+//! proptest::check(256, |rng| {
+//!     let n = 1 + rng.below(100);
+//!     /* build inputs from rng, assert invariant, return Ok(()) or Err */
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Properties return `Result<(), String>` rather than panicking so the
+//! harness can attach the seed to the message.
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeded cases; panic with the failing seed.
+pub fn check<F>(cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(0xB140_D17B, cases, &mut prop);
+}
+
+/// Same but with an explicit base seed (to reproduce a reported failure,
+/// pass the printed seed with `cases = 1`).
+pub fn check_seeded<F>(base_seed: u64, cases: u64, prop: &mut F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E37_79B9));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with util::proptest::check_seeded({seed:#x}, 1, ..)"
+            );
+        }
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |rng| {
+            let x = rng.f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(64, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "x too big: {x}");
+            Ok(())
+        });
+    }
+}

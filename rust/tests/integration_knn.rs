@@ -1,0 +1,238 @@
+//! Integration tests: the full BMO-NN stack (coordinator + engines + data)
+//! against brute force, across metrics, policies, and Monte Carlo boxes.
+
+use bmonn::baselines::exact;
+use bmonn::coordinator::arms::ScalarEngine;
+use bmonn::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
+use bmonn::coordinator::knn::{knn_graph_sparse, knn_point_dense,
+                              knn_point_sparse, knn_query_dense};
+use bmonn::coordinator::pac;
+use bmonn::data::rotate::Rotation;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::rng::Rng;
+
+fn params(k: usize) -> BanditParams {
+    BanditParams { k, delta: 0.01, ..Default::default() }
+}
+
+fn set_eq(a: &[u32], b: &[u32]) -> bool {
+    let x: std::collections::HashSet<_> = a.iter().collect();
+    let y: std::collections::HashSet<_> = b.iter().collect();
+    x == y
+}
+
+#[test]
+fn dense_l2_many_queries_high_accuracy() {
+    let data = synthetic::image_like(400, 1024, 1);
+    let mut engine = NativeEngine::default();
+    let mut rng = Rng::new(2);
+    let mut c = Counter::new();
+    let mut correct = 0;
+    let trials = 30;
+    for q in 0..trials {
+        let truth = exact::knn_point(&data, q, 5, Metric::L2Sq,
+                                     &mut Counter::new());
+        let mut qrng = rng.fork(q as u64);
+        let got = knn_point_dense(&data, q, Metric::L2Sq, &params(5),
+                                  &mut engine, &mut qrng, &mut c);
+        correct += set_eq(&got.ids, &truth.ids) as usize;
+    }
+    assert!(correct >= trials - 1, "accuracy {correct}/{trials}");
+    // and it must be far cheaper than brute force
+    let brute = (trials * 399 * 1024) as u64;
+    assert!(c.get() < brute / 2, "units {} vs brute {brute}", c.get());
+}
+
+#[test]
+fn dense_l1_matches_bruteforce() {
+    let data = synthetic::image_like(200, 512, 3);
+    let mut engine = NativeEngine::default();
+    let mut rng = Rng::new(4);
+    let mut c = Counter::new();
+    let mut correct = 0;
+    for q in 0..15 {
+        let truth = exact::knn_point(&data, q, 3, Metric::L1,
+                                     &mut Counter::new());
+        let mut qrng = rng.fork(q as u64);
+        let got = knn_point_dense(&data, q, Metric::L1, &params(3),
+                                  &mut engine, &mut qrng, &mut c);
+        correct += set_eq(&got.ids, &truth.ids) as usize;
+    }
+    assert!(correct >= 14, "accuracy {correct}/15");
+}
+
+#[test]
+fn faithful_algorithm1_policy_exact() {
+    let data = synthetic::gaussian_means(60, 512, 4.0, 1.0, 5);
+    let mut engine = ScalarEngine;
+    let mut rng = Rng::new(6);
+    let mut c = Counter::new();
+    let p = BanditParams {
+        k: 3,
+        policy: PullPolicy::faithful(),
+        ..Default::default()
+    };
+    let truth = exact::knn_point(&data, 0, 3, Metric::L2Sq,
+                                 &mut Counter::new());
+    let got = knn_point_dense(&data, 0, Metric::L2Sq, &p, &mut engine,
+                              &mut rng, &mut c);
+    assert!(set_eq(&got.ids, &truth.ids),
+            "got {:?} want {:?}", got.ids, truth.ids);
+}
+
+#[test]
+fn rotated_box_reduces_pulls_on_spiky_data() {
+    // Lemma 3's setting: points that differ in few coordinates -> heavy
+    // per-coordinate tails -> rotation should reduce sample complexity.
+    let (n, d) = (150, 1024);
+    let mut data = bmonn::data::DenseDataset::zeros(n, d);
+    let mut rng = Rng::new(7);
+    for i in 1..n {
+        // each point differs from origin in 8 random spiky coords
+        for _ in 0..8 {
+            let j = rng.below(d);
+            data.row_mut(i)[j] = 2.0 + rng.f32() * (i as f32 / n as f32);
+        }
+    }
+    let truth = exact::knn_point(&data, 0, 1, Metric::L2Sq,
+                                 &mut Counter::new());
+    // unrotated
+    let mut engine = NativeEngine::default();
+    let mut c_plain = Counter::new();
+    let mut r1 = Rng::new(8);
+    let got_plain = knn_point_dense(&data, 0, Metric::L2Sq, &params(1),
+                                    &mut engine, &mut r1, &mut c_plain);
+    // rotated (distances preserved, so ground truth ids carry over)
+    let mut r2 = Rng::new(9);
+    let (rotated, _rot) = Rotation::rotate_dataset(&data, &mut r2);
+    let mut c_rot = Counter::new();
+    let mut r3 = Rng::new(8);
+    let got_rot = knn_point_dense(&rotated, 0, Metric::L2Sq, &params(1),
+                                  &mut engine, &mut r3, &mut c_rot);
+    assert!(set_eq(&got_rot.ids, &truth.ids), "rotated answer wrong");
+    assert!(set_eq(&got_plain.ids, &truth.ids), "plain answer wrong");
+    // the rotation should not make things significantly worse; on spiky
+    // data it typically helps (paper Fig 7) — allow generous slack for CI
+    assert!(
+        c_rot.get() as f64 <= 1.5 * c_plain.get() as f64,
+        "rotation exploded cost: {} vs {}", c_rot.get(), c_plain.get()
+    );
+}
+
+#[test]
+fn sparse_l1_graph_matches_bruteforce() {
+    let data = synthetic::rna_like(80, 600, 0.08, 10);
+    let mut rng = Rng::new(11);
+    let mut c = Counter::new();
+    let g = knn_graph_sparse(&data, Metric::L1, &params(3), &mut rng,
+                             &mut c);
+    let mut correct = 0;
+    for q in 0..data.n {
+        let truth = exact::knn_point_sparse(&data, q, 3, Metric::L1,
+                                            &mut Counter::new());
+        correct += set_eq(&g.neighbors[q], &truth.ids) as usize;
+    }
+    assert!(correct >= data.n - 2, "graph accuracy {correct}/{}", data.n);
+}
+
+#[test]
+fn external_query_roundtrip() {
+    let data = synthetic::image_like(150, 256, 12);
+    let mut engine = NativeEngine::default();
+    let mut rng = Rng::new(13);
+    let mut c = Counter::new();
+    // query = noisy copy of row 42
+    let mut q = data.row_vec(42);
+    for v in q.iter_mut() {
+        v.clone_from(&(*v + 0.0005));
+    }
+    let res = knn_query_dense(&data, &q, Metric::L2Sq, &params(1),
+                              &mut engine, &mut rng, &mut c);
+    assert_eq!(res.ids[0], 42);
+}
+
+#[test]
+fn pac_mode_eps_correct_and_cheaper() {
+    let data = synthetic::power_law_gaps(300, 2048, 0.4, 1.0, 14);
+    let mut engine = NativeEngine::default();
+    // exact run
+    let mut c_exact = Counter::new();
+    let mut r1 = Rng::new(15);
+    let _ = knn_point_dense(&data, 0, Metric::L2Sq, &params(1),
+                            &mut engine, &mut r1, &mut c_exact);
+    // PAC run
+    let eps = 0.4;
+    let mut p = params(1);
+    p.epsilon = eps;
+    let mut c_pac = Counter::new();
+    let mut r2 = Rng::new(15);
+    let res = knn_point_dense(&data, 0, Metric::L2Sq, &p, &mut engine,
+                              &mut r2, &mut c_pac);
+    assert!(pac::is_eps_correct(&data, 0, Metric::L2Sq, &res, 1, eps));
+    assert!(c_pac.get() <= c_exact.get());
+}
+
+#[test]
+fn cost_capped_at_2nd_even_on_adversarial_ties() {
+    // all points equidistant: maximum difficulty, algorithm must fall
+    // back to exact evaluation everywhere and still terminate within 2nd
+    let (n, d) = (40, 128);
+    let mut data = bmonn::data::DenseDataset::zeros(n, d);
+    for i in 1..n {
+        // all at exactly the same distance: one-hot at different coords
+        data.row_mut(i)[i % d] = 1.0;
+    }
+    let mut engine = NativeEngine::default();
+    let mut rng = Rng::new(16);
+    let mut c = Counter::new();
+    let res = knn_point_dense(&data, 0, Metric::L2Sq, &params(5),
+                              &mut engine, &mut rng, &mut c);
+    assert_eq!(res.ids.len(), 5);
+    let cap = 2 * (n as u64) * (d as u64) + (n as u64) * 32; // + init slack
+    assert!(c.get() <= cap, "units {} exceed 2nd cap {cap}", c.get());
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let data = synthetic::image_like(120, 512, 17);
+    let run = |seed: u64| -> (Vec<u32>, u64) {
+        let mut engine = NativeEngine::default();
+        let mut rng = Rng::new(seed);
+        let mut c = Counter::new();
+        let r = knn_point_dense(&data, 3, Metric::L2Sq, &params(4),
+                                &mut engine, &mut rng, &mut c);
+        (r.ids, c.get())
+    };
+    let (ids1, u1) = run(99);
+    let (ids2, u2) = run(99);
+    assert_eq!(ids1, ids2);
+    assert_eq!(u1, u2);
+}
+
+#[test]
+fn fixed_sigma_theorem_regime() {
+    // With a valid known sigma bound (Theorem 1's setting), error over
+    // many trials stays within delta.
+    let trials = 25;
+    let mut errors = 0;
+    for t in 0..trials {
+        let data = synthetic::gaussian_means(80, 256, 4.0, 1.0, 100 + t);
+        let truth = exact::knn_point(&data, 0, 1, Metric::L2Sq,
+                                     &mut Counter::new());
+        let mut engine = NativeEngine::default();
+        let mut rng = Rng::new(200 + t);
+        let mut c = Counter::new();
+        let p = BanditParams {
+            k: 1,
+            delta: 0.05,
+            sigma: SigmaMode::Fixed(12.0),
+            ..Default::default()
+        };
+        let got = knn_point_dense(&data, 0, Metric::L2Sq, &p, &mut engine,
+                                  &mut rng, &mut c);
+        errors += (got.ids != truth.ids) as usize;
+    }
+    assert!(errors <= 2, "errors {errors}/{trials} exceeds delta regime");
+}

@@ -1,0 +1,144 @@
+//! Integration tests across the runtime boundary: PJRT artifacts vs host
+//! engines, and the query server end to end. PJRT tests self-skip when
+//! `make artifacts` has not been run.
+
+use std::path::Path;
+
+use bmonn::baselines::exact;
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::server::{Client, Server, ServerConfig};
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::artifacts::Manifest;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::pjrt::{verify_exact_artifact, PjrtEngine, PjrtRuntime};
+use bmonn::util::json::Json;
+use bmonn::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn pjrt_exact_artifacts_match_host() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    for metric in [Metric::L2Sq, Metric::L1] {
+        let rel = verify_exact_artifact(&mut rt, metric).unwrap();
+        assert!(rel < 1e-3, "{metric:?}: rel err {rel}");
+    }
+}
+
+#[test]
+fn pjrt_engine_full_knn_query_matches_bruteforce() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let data = synthetic::image_like(300, 768, 21);
+    let truth = exact::knn_point(&data, 0, 5, Metric::L2Sq,
+                                 &mut Counter::new());
+    let mut engine = PjrtEngine::new(&dir, Metric::L2Sq).unwrap();
+    let mut params = BanditParams { k: 5, ..Default::default() };
+    params.policy.round_pulls = engine.round_pulls();
+    let mut rng = Rng::new(22);
+    let mut c = Counter::new();
+    let got = knn_point_dense(&data, 0, Metric::L2Sq, &params, &mut engine,
+                              &mut rng, &mut c);
+    let g: std::collections::HashSet<_> = got.ids.iter().collect();
+    let w: std::collections::HashSet<_> = truth.ids.iter().collect();
+    assert_eq!(g, w, "pjrt knn mismatch");
+    assert!(engine.executions > 0, "pjrt was never exercised");
+}
+
+#[test]
+fn pjrt_l1_engine_works() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let data = synthetic::image_like(200, 512, 23);
+    let truth = exact::knn_point(&data, 1, 3, Metric::L1,
+                                 &mut Counter::new());
+    let mut engine = PjrtEngine::new(&dir, Metric::L1).unwrap();
+    let mut params = BanditParams { k: 3, ..Default::default() };
+    params.policy.round_pulls = engine.round_pulls();
+    let mut rng = Rng::new(24);
+    let mut c = Counter::new();
+    let got = knn_point_dense(&data, 1, Metric::L1, &params, &mut engine,
+                              &mut rng, &mut c);
+    let g: std::collections::HashSet<_> = got.ids.iter().collect();
+    let w: std::collections::HashSet<_> = truth.ids.iter().collect();
+    assert_eq!(g, w);
+}
+
+#[test]
+fn server_end_to_end_with_accuracy() {
+    let data = synthetic::image_like(200, 256, 25);
+    let queries: Vec<usize> = (0..10).collect();
+    let truths: Vec<Vec<u32>> = queries
+        .iter()
+        .map(|&q| {
+            exact::knn_query(&data, data.row(q), 3, Metric::L2Sq,
+                             &mut Counter::new())
+            .ids
+        })
+        .collect();
+    let query_vecs: Vec<Vec<f32>> =
+        queries.iter().map(|&q| data.row_vec(q)).collect();
+    let mut srv = Server::start(
+        data,
+        ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    for (qv, truth) in query_vecs.iter().zip(&truths) {
+        let (ids, dists, units) = cl.knn(qv, 3).unwrap();
+        assert!(units > 0);
+        assert_eq!(ids.len(), 3);
+        for w in dists.windows(2) {
+            assert!(w[0] <= w[1] + 1e-6);
+        }
+        let g: std::collections::HashSet<_> = ids.iter().copied().collect();
+        let w: std::collections::HashSet<_> =
+            truth.iter().copied().collect();
+        assert_eq!(g, w);
+    }
+    let stats = cl
+        .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+        .unwrap();
+    assert_eq!(stats.get("queries").unwrap().as_usize(), Some(10));
+    srv.stop();
+}
+
+#[test]
+fn native_and_scalar_engines_agree_end_to_end() {
+    let data = synthetic::image_like(150, 512, 26);
+    let run = |native: bool| -> Vec<u32> {
+        let mut rng = Rng::new(27);
+        let mut c = Counter::new();
+        let p = BanditParams { k: 4, ..Default::default() };
+        if native {
+            let mut e = NativeEngine::default();
+            knn_point_dense(&data, 0, Metric::L2Sq, &p, &mut e, &mut rng,
+                            &mut c)
+            .ids
+        } else {
+            let mut e = bmonn::coordinator::arms::ScalarEngine;
+            knn_point_dense(&data, 0, Metric::L2Sq, &p, &mut e, &mut rng,
+                            &mut c)
+            .ids
+        }
+    };
+    // identical rng stream + near-identical arithmetic -> same answer set
+    let a = run(true);
+    let b = run(false);
+    let x: std::collections::HashSet<_> = a.iter().collect();
+    let y: std::collections::HashSet<_> = b.iter().collect();
+    assert_eq!(x, y);
+}
