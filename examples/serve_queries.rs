@@ -1,8 +1,10 @@
 //! End-to-end serving driver (DESIGN.md experiment E12): start the query
-//! server on an image-like dataset, fire batched k-NN queries from
-//! concurrent clients, and report latency/throughput/accuracy plus the
-//! paper's coordinate-op gain. This is the "all layers compose" proof:
-//! L3 server -> bandit coordinator -> pull engines.
+//! server on an image-like dataset, fire k-NN queries from concurrent
+//! clients, and report latency/throughput/accuracy plus the paper's
+//! coordinate-op gain — and the server's dynamic-batching stats, since
+//! with 8 concurrent clients the worker pool coalesces queued queries
+//! into multi-query bandit passes. This is the "all layers compose"
+//! proof: L3 server -> batched coordinator -> pull engines.
 //!
 //!     cargo run --release --example serve_queries [-- --pjrt]
 
@@ -15,11 +17,12 @@ use bmonn::coordinator::BanditParams;
 use bmonn::data::{synthetic, Metric};
 use bmonn::metrics::{Counter, LatencyStats};
 use bmonn::runtime::pjrt::PjrtEngine;
+use bmonn::util::json::Json;
 use bmonn::util::rng::Rng;
 
 fn main() {
     let use_pjrt = std::env::args().any(|a| a == "--pjrt");
-    let (n, d, k, n_queries, n_clients) = (1500, 1024, 5, 200, 4);
+    let (n, d, k, n_queries, n_clients) = (1500, 1024, 5, 200, 8);
     let data = synthetic::image_like(n, d, 99);
     let queries: Vec<(usize, Vec<f32>)> = {
         let mut rng = Rng::new(5);
@@ -125,6 +128,17 @@ fn main() {
              correct as f64 / n_queries as f64, correct, n_queries);
     println!("coord ops  : {total_units} (exact {exact_units}) -> gain {:.1}x",
              exact_units as f64 / total_units as f64);
+
+    // dynamic-batching telemetry from the worker pool
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    let stats = cl
+        .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+        .unwrap();
+    let f = |key: &str| stats.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!("batching   : {} worker passes over {} queries \
+              (mean batch {:.2}, max {}, batch p99 {}us)",
+             f("batches"), f("queries"), f("mean_batch"), f("max_batch"),
+             f("batch_p99_us"));
     assert!(correct as f64 >= 0.97 * n_queries as f64,
             "serving accuracy below 97%");
 }

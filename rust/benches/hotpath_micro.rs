@@ -68,7 +68,7 @@ fn main() {
     // full arm-set pull_batch (includes coordinate sampling)
     let mut engine = NativeEngine::default();
     let cand = DenseArms::<NativeEngine>::candidates(n, Some(0));
-    let mut arms = DenseArms::new(&data, query.clone(), cand, Metric::L2Sq,
+    let mut arms = DenseArms::new(&data, &query, &cand, Metric::L2Sq,
                                   &mut engine);
     let sel: Vec<usize> = (0..32).collect();
     let mut c = Counter::new();

@@ -11,7 +11,8 @@ use crate::baselines::{exact, uniform};
 use crate::bench_harness::{fmt_f, fmt_gain, set_accuracy, Report};
 use crate::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
 use crate::coordinator::kmeans::{kmeans_bmo, kmeans_exact, KMeansParams};
-use crate::coordinator::knn::{knn_point_dense, knn_point_sparse};
+use crate::coordinator::knn::{knn_batch_points_dense, knn_batch_sparse,
+                              knn_point_dense};
 use crate::coordinator::pac;
 use crate::data::dense::{DenseDataset, Metric};
 use crate::data::rotate::Rotation;
@@ -62,19 +63,17 @@ fn make_workload(n: usize, d: usize, k: usize, n_queries: usize, seed: u64)
 }
 
 fn run_bmo(w: &Workload, seed: u64) -> AlgoStats {
+    // the whole query set runs through the batched multi-query driver —
+    // the same coalesced path the server uses
     let mut engine = NativeEngine::default();
     let mut rng = Rng::new(seed);
     let mut c = Counter::new();
     let params = bmo_params(w.k);
-    let answers = w
-        .queries
-        .iter()
-        .map(|&q| {
-            let mut qrng = rng.fork(q as u64);
-            knn_point_dense(&w.data, q, Metric::L2Sq, &params, &mut engine,
-                            &mut qrng, &mut c)
-            .ids
-        })
+    let answers = knn_batch_points_dense(&w.data, &w.queries, Metric::L2Sq,
+                                         &params, &mut engine, &mut rng,
+                                         &mut c)
+        .into_iter()
+        .map(|r| r.ids)
         .collect();
     AlgoStats { units: c.get(), answers }
 }
@@ -234,32 +233,26 @@ pub fn fig4b(quick: bool, seed: u64) -> Report {
         .map(|&q| exact::knn_point_sparse(&data, q, k, Metric::L1,
                                           &mut c_exact).ids)
         .collect();
-    // BMO with the sparse MC box
+    // BMO with the sparse MC box, through the batched lockstep driver
     let mut c_bmo = Counter::new();
     let params = bmo_params(k);
-    let got: Vec<Vec<u32>> = queries
-        .iter()
-        .map(|&q| {
-            let mut qrng = rng.fork(q as u64);
-            knn_point_sparse(&data, q, Metric::L1, &params, &mut qrng,
-                             &mut c_bmo)
-            .ids
-        })
-        .collect();
+    let got: Vec<Vec<u32>> =
+        knn_batch_sparse(&data, &queries, Metric::L1, &params, &mut rng,
+                         &mut c_bmo)
+            .into_iter()
+            .map(|r| r.ids)
+            .collect();
     // dense-box-on-sparse-data contrast (what §IV-A warns against):
     // the dense estimator wastes samples on zero coordinates
     let dense_data = data.to_dense();
     let mut c_dense = Counter::new();
     let mut engine = NativeEngine::default();
-    let got_dense: Vec<Vec<u32>> = queries
-        .iter()
-        .map(|&q| {
-            let mut qrng = rng.fork(q as u64 ^ 0x77);
-            knn_point_dense(&dense_data, q, Metric::L1, &params,
-                            &mut engine, &mut qrng, &mut c_dense)
-            .ids
-        })
-        .collect();
+    let got_dense: Vec<Vec<u32>> =
+        knn_batch_points_dense(&dense_data, &queries, Metric::L1, &params,
+                               &mut engine, &mut rng, &mut c_dense)
+            .into_iter()
+            .map(|r| r.ids)
+            .collect();
     let mut rep = Report::new(
         "Fig 4(b): sparse gene-like dataset (l1), gain vs sparse-aware exact",
         &["algo", "gain vs sparse-exact", "accuracy", "units/query"]);

@@ -96,9 +96,11 @@ USAGE: bmonn <subcommand> [--flags]
 SUBCOMMANDS
   gen-data --kind image|rna|gaussian|powerlaw --n N --d D --out FILE
            [--seed S] [--density F] [--alpha A]
-  knn      --data FILE [--query-idx I] [--k K] [--algo bmo|exact|lsh|
-           kgraph|ngt|uniform] [--metric l2|l1] [--engine native|scalar|
-           pjrt] [--epsilon E] [--delta D] [--seed S]
+  knn      --data FILE [--query-idx I] [--k K] [--batch B] [--algo bmo|
+           exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
+           native|scalar|pjrt] [--epsilon E] [--delta D] [--seed S]
+           (--batch B > 1 answers B consecutive query points through the
+           coalesced multi-query driver, bmo only)
   graph    --data FILE [--k K] [--metric l2|l1] [--seed S]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE]

@@ -132,6 +132,8 @@ pub struct BmonnConfig {
     pub seed: u64,
     pub server_addr: String,
     pub server_workers: usize,
+    /// max queued queries a server worker coalesces into one batched pass
+    pub server_batch: usize,
 }
 
 impl Default for BmonnConfig {
@@ -149,6 +151,7 @@ impl Default for BmonnConfig {
             seed: 42,
             server_addr: "127.0.0.1:7878".into(),
             server_workers: 4,
+            server_batch: 8,
         }
     }
 }
@@ -200,6 +203,9 @@ impl BmonnConfig {
         }
         if let Some(w) = raw.get_usize("server.workers")? {
             cfg.server_workers = w.max(1);
+        }
+        if let Some(b) = raw.get_usize("server.batch")? {
+            cfg.server_batch = b.max(1);
         }
         Ok(cfg)
     }

@@ -19,6 +19,20 @@ use crate::data::sparse::SparseDataset;
 use crate::metrics::Counter;
 use crate::util::rng::Rng;
 
+/// One query's pull work within a multi-query coalesced round: the staged
+/// coordinate draws of a single bandit instance, to be resolved against
+/// the shared dataset together with every other in-flight query's pulls
+/// (see [`PullEngine::pull_batch`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PullRequest<'a> {
+    /// the query vector this request's bandit is serving
+    pub query: &'a [f32],
+    /// dataset rows (arm ids) to pull
+    pub rows: &'a [u32],
+    /// shared coordinate draws for every row of this request
+    pub coord_ids: &'a [u32],
+}
+
 /// Batched compute engine for dense pulls. Implementations:
 /// [`ScalarEngine`] (reference), `runtime::native::NativeEngine`
 /// (optimized hot path), `runtime::pjrt::PjrtEngine` (AOT artifact).
@@ -48,6 +62,36 @@ pub trait PullEngine {
         metric: Metric,
         out: &mut Vec<f64>,
     );
+
+    /// Resolve many concurrent queries' pull requests against one shared
+    /// dataset in a single pass. Results are concatenated in request
+    /// order: the outputs for `reqs[i]` are exactly what
+    /// [`PullEngine::partial_sums`] would produce for
+    /// `(reqs[i].query, reqs[i].rows, reqs[i].coord_ids)` — engines may
+    /// reorder the *work* (e.g. sweep the dataset block-by-block so a row
+    /// shared by many queries is loaded once) but not the results.
+    ///
+    /// The default implementation is the semantic reference: one
+    /// `partial_sums` call per request.
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        out_sum.clear();
+        out_sq.clear();
+        let mut s = Vec::new();
+        let mut q = Vec::new();
+        for r in reqs {
+            self.partial_sums(data, r.query, r.rows, r.coord_ids, metric,
+                              &mut s, &mut q);
+            out_sum.extend_from_slice(&s);
+            out_sq.extend_from_slice(&q);
+        }
+    }
 
     fn name(&self) -> &'static str;
 }
@@ -149,11 +193,15 @@ pub trait ArmSet {
 }
 
 /// Dense Monte Carlo box over a [`DenseDataset`] (Eq. 4).
+///
+/// Borrows its query vector and candidate-row list so the multi-query
+/// batch driver can rebuild a view per scheduling round without cloning
+/// O(n) state (the bandit owns all persistent per-query state).
 pub struct DenseArms<'a, E: PullEngine> {
     data: &'a DenseDataset,
-    query: Vec<f32>,
+    query: &'a [f32],
     /// candidate rows (query excluded by the caller)
-    rows: Vec<u32>,
+    rows: &'a [u32],
     metric: Metric,
     engine: &'a mut E,
     scratch_coords: Vec<u32>,
@@ -162,7 +210,7 @@ pub struct DenseArms<'a, E: PullEngine> {
 }
 
 impl<'a, E: PullEngine> DenseArms<'a, E> {
-    pub fn new(data: &'a DenseDataset, query: Vec<f32>, rows: Vec<u32>,
+    pub fn new(data: &'a DenseDataset, query: &'a [f32], rows: &'a [u32],
                metric: Metric, engine: &'a mut E) -> Self {
         assert_eq!(query.len(), data.d);
         assert!(!rows.is_empty(), "need at least one candidate arm");
@@ -192,6 +240,22 @@ impl<'a, E: PullEngine> DenseArms<'a, E> {
             self.scratch_coords.push(rng.below(d) as u32);
         }
     }
+
+    /// Stage a uniform `t`-pull of `arms` for a coalesced multi-query
+    /// round: sample the shared coordinates, charge the counter, and
+    /// resolve arm indices to dataset rows — but do *not* touch the
+    /// engine. RNG and counter effects are identical to
+    /// [`ArmSet::pull_batch`]; the caller must execute the staged request
+    /// via [`PullEngine::pull_batch`] and feed the per-arm (Σx, Σx²) back
+    /// to the bandit, which makes the batch driver bitwise-identical to
+    /// the per-query path under a fixed per-query RNG.
+    pub fn stage_pull(&mut self, arms: &[usize], t: u64, rng: &mut Rng,
+                      c: &mut Counter) -> (Vec<u32>, Vec<u32>) {
+        self.sample_coords(t, rng);
+        c.add(t * arms.len() as u64);
+        let rows: Vec<u32> = arms.iter().map(|&a| self.rows[a]).collect();
+        (rows, self.scratch_coords.clone())
+    }
 }
 
 impl<'a, E: PullEngine> ArmSet for DenseArms<'a, E> {
@@ -218,7 +282,7 @@ impl<'a, E: PullEngine> ArmSet for DenseArms<'a, E> {
         let row = [self.rows[arm]];
         self.engine.partial_sums(
             self.data,
-            &self.query,
+            self.query,
             &row,
             &self.scratch_coords,
             self.metric,
@@ -240,7 +304,7 @@ impl<'a, E: PullEngine> ArmSet for DenseArms<'a, E> {
         }
         self.engine.partial_sums(
             self.data,
-            &self.query,
+            self.query,
             &row_ids,
             &self.scratch_coords,
             self.metric,
@@ -258,7 +322,7 @@ impl<'a, E: PullEngine> ArmSet for DenseArms<'a, E> {
         let row = [self.rows[arm]];
         // engine path: the unrolled native kernel is ~5x faster than the
         // scalar reference here, and exact evals dominate hard queries
-        self.engine.exact_dists(self.data, &self.query, &row, self.metric,
+        self.engine.exact_dists(self.data, self.query, &row, self.metric,
                                 &mut self.scratch_sums);
         self.scratch_sums[0] / self.data.d as f64
     }
@@ -278,12 +342,12 @@ impl<'a, E: PullEngine> ArmSet for DenseArms<'a, E> {
 pub struct SparseArms<'a> {
     data: &'a SparseDataset,
     query_row: usize,
-    rows: Vec<u32>,
+    rows: &'a [u32],
     metric: Metric,
 }
 
 impl<'a> SparseArms<'a> {
-    pub fn new(data: &'a SparseDataset, query_row: usize, rows: Vec<u32>,
+    pub fn new(data: &'a SparseDataset, query_row: usize, rows: &'a [u32],
                metric: Metric) -> Self {
         assert!(query_row < data.n);
         assert!(!rows.is_empty());
@@ -368,7 +432,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(4, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let mut rng = Rng::new(2);
         let mut c = Counter::new();
         let theta_exact = arms.exact_mean(0, &mut c);
@@ -388,7 +452,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(8, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L1, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L1, &mut engine);
         let mut rng = Rng::new(4);
         let mut c = Counter::new();
         let (mut out, mut out_sq) = (Vec::new(), Vec::new());
@@ -405,13 +469,49 @@ mod tests {
     }
 
     #[test]
+    fn stage_pull_matches_pull_batch_rng_counter_and_values() {
+        // staging + PullEngine::pull_batch must be indistinguishable from
+        // ArmSet::pull_batch: same rng draws, same counter charge, same
+        // (Σx, Σx²) — this is what makes the multi-query driver
+        // bitwise-identical to the per-query path.
+        let ds = synthetic::gaussian_iid(6, 32, 8);
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(6, Some(0));
+        let mut e1 = ScalarEngine;
+        let mut a1 =
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut e1);
+        let mut rng1 = Rng::new(77);
+        let mut c1 = Counter::new();
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        a1.pull_batch(&[0, 2, 4], 8, &mut rng1, &mut c1, &mut s1, &mut q1);
+        let mut e2 = ScalarEngine;
+        let mut a2 =
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut e2);
+        let mut rng2 = Rng::new(77);
+        let mut c2 = Counter::new();
+        let (rids, coords) = a2.stage_pull(&[0, 2, 4], 8, &mut rng2,
+                                           &mut c2);
+        drop(a2);
+        assert_eq!(rids, vec![rows[0], rows[2], rows[4]]);
+        assert_eq!(c1.get(), c2.get());
+        assert_eq!(rng1.next_u64(), rng2.next_u64(), "rng streams diverged");
+        let req =
+            PullRequest { query: &query, rows: &rids, coord_ids: &coords };
+        let (mut s2, mut q2) = (Vec::new(), Vec::new());
+        ScalarEngine.pull_batch(&ds, &[req], Metric::L2Sq, &mut s2,
+                                &mut q2);
+        assert_eq!(s1, s2);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
     fn dense_exact_matches_dataset_dist() {
         let ds = synthetic::gaussian_iid(5, 32, 5);
         let mut engine = ScalarEngine;
         let query = ds.row_vec(2);
         let rows = DenseArms::<ScalarEngine>::candidates(5, Some(2));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let mut c = Counter::new();
         // arm 0 maps to dataset row 0
         let got = arms.exact_mean(0, &mut c) * 32.0;
@@ -440,7 +540,7 @@ mod tests {
             if ds.nnz(0) + ds.nnz(1) == 0 {
                 return Ok(());
             }
-            let mut arms = SparseArms::new(&ds, 0, vec![1], Metric::L1);
+            let mut arms = SparseArms::new(&ds, 0, &[1], Metric::L1);
             let mut c = Counter::new();
             let theta = arms.exact_mean(0, &mut c);
             let t = 60_000u64;
@@ -464,7 +564,7 @@ mod tests {
                 vec![],
             ],
         );
-        let arms = SparseArms::new(&ds, 0, vec![1, 2], Metric::L1);
+        let arms = SparseArms::new(&ds, 0, &[1, 2], Metric::L1);
         assert_eq!(arms.max_pulls(0), 3); // 2 + 1
         assert_eq!(arms.max_pulls(1), 2); // 2 + 0, max(1) applies at 0+0 only
     }
@@ -472,7 +572,7 @@ mod tests {
     #[test]
     fn sparse_empty_pair_is_zero() {
         let ds = SparseDataset::from_rows(2, 8, vec![vec![], vec![]]);
-        let mut arms = SparseArms::new(&ds, 0, vec![1], Metric::L1);
+        let mut arms = SparseArms::new(&ds, 0, &[1], Metric::L1);
         let mut rng = Rng::new(7);
         let mut c = Counter::new();
         assert_eq!(arms.pull(0, 10, &mut rng, &mut c), (0.0, 0.0));

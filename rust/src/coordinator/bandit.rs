@@ -134,7 +134,29 @@ impl ArmState {
     }
 }
 
+/// What the caller of [`BmoUcb::begin_round`] must do to advance the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundAction {
+    /// All `k` arms were emitted (or the arm set is exhausted): the run is
+    /// complete; read it off with [`BmoUcb::result`].
+    Done,
+    /// The bandit staged a uniform pull of `t` samples for each arm in
+    /// [`BmoUcb::pending_arms`]. Execute it — via [`ArmSet::pull_batch`]
+    /// for a standalone run, or coalesced with other queries through
+    /// `PullEngine::pull_batch` — and feed the per-arm (Σx, Σx²) back with
+    /// [`BmoUcb::end_round`].
+    Pull { t: u64 },
+}
+
 /// The BMO UCB state machine.
+///
+/// Two ways to drive it: [`BmoUcb::run`] owns the whole loop for a single
+/// query, while the [`BmoUcb::begin_round`] / [`BmoUcb::end_round`] pair
+/// exposes one scheduling round at a time so a multi-query driver
+/// (`coordinator::knn::knn_batch_dense`) can advance many instances in
+/// lockstep and coalesce their staged pulls into one engine pass per
+/// round. `run` is implemented on top of the pair, so both paths execute
+/// identical pull sequences.
 pub struct BmoUcb {
     params: BanditParams,
     states: Vec<ArmState>,
@@ -146,6 +168,22 @@ pub struct BmoUcb {
     pooled_den: f64,
     /// ln(2·n·MAX_PULLS/δ) — the union-bound log term of Lemma 1
     log_term: f64,
+    /// winning arms in emission order (increasing θ)
+    best: Vec<(usize, f64)>,
+    /// arms selected in the current round (returned to the heap at
+    /// end_round)
+    selected: Vec<usize>,
+    /// arms of the staged uniform pull awaiting end_round
+    pending: Vec<usize>,
+    pending_t: u64,
+    /// true while the staged pull is the init round (heap not yet built)
+    init_heap_pending: bool,
+    init_done: bool,
+    finished: bool,
+    rounds: u64,
+    exact_evals: u64,
+    t0: Option<Instant>,
+    start_units: u64,
 }
 
 const MIN_PULLS_FOR_OWN_VAR: u64 = 10;
@@ -160,6 +198,7 @@ impl BmoUcb {
             (0..n).map(|i| arms.max_pulls(i)).max().unwrap_or(1).max(1);
         let log_term =
             (2.0 * n as f64 * max_pulls_bound as f64 / params.delta).ln();
+        let k = params.k;
         BmoUcb {
             params,
             states: vec![
@@ -178,6 +217,17 @@ impl BmoUcb {
             pooled_num: 0.0,
             pooled_den: 0.0,
             log_term,
+            best: Vec::with_capacity(k),
+            selected: Vec::new(),
+            pending: Vec::new(),
+            pending_t: 0,
+            init_heap_pending: false,
+            init_done: false,
+            finished: false,
+            rounds: 0,
+            exact_evals: 0,
+            t0: None,
+            start_units: 0,
         }
     }
 
@@ -321,34 +371,48 @@ impl BmoUcb {
         false
     }
 
-    /// Run to completion over `arms`. Charges `counter` per DESIGN.md §7.
-    pub fn run<A: ArmSet>(&mut self, arms: &mut A, rng: &mut Rng,
-                          counter: &mut Counter) -> BanditResult {
-        let t0 = Instant::now();
-        let start_units = counter.get();
-        let n = arms.n_arms();
-        let mut best: Vec<(usize, f64)> = Vec::with_capacity(self.params.k);
-        let mut rounds = 0u64;
-        let mut exact_evals = 0u64;
+    /// Arms of the pull staged by the last [`BmoUcb::begin_round`] that
+    /// returned [`RoundAction::Pull`].
+    pub fn pending_arms(&self) -> &[usize] {
+        &self.pending
+    }
 
+    /// Advance scheduling until the run either completes or needs a
+    /// uniform batch pull executed by the caller.
+    ///
+    /// Everything that cannot be coalesced across queries — init-phase
+    /// ragged pulls, arms within `round_pulls` of their MAX_PULLS cap, and
+    /// exact evaluations — is resolved directly against `arms` here; only
+    /// the uniform `round_pulls`-sized batches (the hot path) are staged
+    /// for the caller. The rng/counter effects and pull sequencing are
+    /// identical to what the pre-refactor monolithic loop produced.
+    pub fn begin_round<A: ArmSet>(&mut self, arms: &mut A, rng: &mut Rng,
+                                  counter: &mut Counter) -> RoundAction {
+        assert!(self.pending.is_empty(),
+                "begin_round called with a staged pull outstanding");
+        if self.finished || self.best.len() >= self.params.k {
+            self.finished = true;
+            return RoundAction::Done;
+        }
+        let n = self.states.len();
         // ---- init pulls (batched across all arms) -----------------------
-        let init = self.params.policy.init_pulls;
-        if init > 0 {
-            let all: Vec<usize> = (0..n).collect();
-            let mut sums = Vec::with_capacity(n);
-            let mut sqs = Vec::with_capacity(n);
-            // per-arm cap: don't exceed max_pulls at init
-            // (pull_batch uses a uniform t; arms with smaller caps are
-            // pulled individually)
-            let uniform_cap =
-                (0..n).map(|i| arms.max_pulls(i)).min().unwrap_or(1);
-            if init <= uniform_cap {
-                arms.pull_batch(&all, init, rng, counter, &mut sums,
-                                &mut sqs);
-                for ((a, &s), &s2) in all.iter().zip(&sums).zip(&sqs) {
-                    self.record_samples(*a, init, s, s2);
+        if !self.init_done {
+            self.init_done = true;
+            self.t0 = Some(Instant::now());
+            self.start_units = counter.get();
+            let init = self.params.policy.init_pulls;
+            if init > 0 {
+                // per-arm cap: don't exceed max_pulls at init (a staged
+                // pull uses a uniform t; arm sets with smaller caps are
+                // pulled individually instead)
+                let uniform_cap =
+                    (0..n).map(|i| arms.max_pulls(i)).min().unwrap_or(1);
+                if init <= uniform_cap {
+                    self.pending = (0..n).collect();
+                    self.pending_t = init;
+                    self.init_heap_pending = true;
+                    return RoundAction::Pull { t: init };
                 }
-            } else {
                 for a in 0..n {
                     let t = init.min(arms.max_pulls(a));
                     if t > 0 {
@@ -357,54 +421,52 @@ impl BmoUcb {
                     }
                 }
             }
+            for a in 0..n {
+                self.push_heap(a);
+            }
         }
-        for a in 0..n {
-            self.push_heap(a);
-        }
-
-        // ---- main loop ---------------------------------------------------
-        let mut selected: Vec<usize> = Vec::new();
-        let mut sums: Vec<f64> = Vec::new();
-        let mut sqs: Vec<f64> = Vec::new();
-        while best.len() < self.params.k {
-            rounds += 1;
+        // ---- main rounds ------------------------------------------------
+        // Rounds that need no engine batch (every selected arm was exact
+        // or near its cap) are completed inline and the loop continues, so
+        // callers only ever see Done or a staged Pull.
+        loop {
+            self.rounds += 1;
             // (1) emit as many separated arms as possible
             loop {
                 let Some(top) = self.pop_fresh() else {
                     // heap exhausted — no live arms left
-                    let m = self.finish(t0, counter, start_units, rounds,
-                                        exact_evals);
-                    return self.result(best, m);
+                    self.finished = true;
+                    return RoundAction::Done;
                 };
                 let second_lcb = self.peek_fresh_lcb();
                 if self.emit_condition(top, second_lcb) {
                     self.states[top].removed = true;
-                    best.push((top, self.states[top].mean));
-                    if best.len() == self.params.k {
-                        let m = self.finish(t0, counter, start_units, rounds,
-                                            exact_evals);
-                        return self.result(best, m);
+                    self.best.push((top, self.states[top].mean));
+                    if self.best.len() == self.params.k {
+                        self.finished = true;
+                        return RoundAction::Done;
                     }
                 } else {
                     // not separable yet: top goes back into play as the
                     // first selected arm of this round
-                    selected.clear();
-                    selected.push(top);
+                    self.selected.clear();
+                    self.selected.push(top);
                     break;
                 }
             }
             // (2) select up to round_arms-1 further arms by LCB
-            while selected.len() < self.params.policy.round_arms {
+            while self.selected.len() < self.params.policy.round_arms {
                 match self.pop_fresh() {
-                    Some(a) => selected.push(a),
+                    Some(a) => self.selected.push(a),
                     None => break,
                 }
             }
-            // (3) pull or exact-evaluate each selected arm
-            // split into: arms still under their cap (batch-pulled) and
-            // arms at their cap (exact)
+            // (3) pull or exact-evaluate each selected arm: arms at their
+            // cap are exact-evaluated, ragged (near-cap) arms are pulled
+            // individually, and the remaining uniform batch is staged
             let mut batchable: Vec<usize> = Vec::new();
-            for &a in &selected {
+            for i in 0..self.selected.len() {
+                let a = self.selected[i];
                 if self.states[a].exact {
                     // exact arm got selected but could not be emitted —
                     // its competitor needs more pulls; nothing to do for
@@ -413,14 +475,15 @@ impl BmoUcb {
                 }
                 if self.states[a].pulls >= arms.max_pulls(a) {
                     let theta = arms.exact_mean(a, counter);
-                    exact_evals += 1;
+                    self.exact_evals += 1;
                     self.set_exact(a, theta);
                 } else {
                     batchable.push(a);
                 }
             }
+            let t = self.params.policy.round_pulls;
+            let mut uniform: Vec<usize> = Vec::new();
             if !batchable.is_empty() {
-                let t = self.params.policy.round_pulls;
                 if t == 1 || batchable.len() == 1 {
                     for &a in &batchable {
                         let tt = t.min(
@@ -432,7 +495,6 @@ impl BmoUcb {
                     // uniform t across the batch, capped by each arm's
                     // remaining budget — arms near their cap drop out of
                     // the batch and are pulled individually
-                    let mut uniform: Vec<usize> = Vec::new();
                     for &a in &batchable {
                         let left = arms.max_pulls(a) - self.states[a].pulls;
                         if left >= t {
@@ -442,43 +504,81 @@ impl BmoUcb {
                             self.record_samples(a, left, s, s2);
                         }
                     }
-                    if !uniform.is_empty() {
-                        arms.pull_batch(&uniform, t, rng, counter,
-                                        &mut sums, &mut sqs);
-                        for ((a, &s), &s2) in
-                            uniform.iter().zip(&sums).zip(&sqs)
-                        {
-                            self.record_samples(*a, t, s, s2);
-                        }
-                    }
                 }
             }
-            // (4) everything selected goes back on the heap
+            if uniform.is_empty() {
+                // nothing to stage: requeue the round's arms and continue
+                for i in 0..self.selected.len() {
+                    let a = self.selected[i];
+                    self.push_heap(a);
+                }
+                continue;
+            }
+            self.pending = uniform;
+            self.pending_t = t;
+            return RoundAction::Pull { t };
+        }
+    }
+
+    /// Absorb the (Σx, Σx²) of the staged pull (one pair per arm of
+    /// [`BmoUcb::pending_arms`], `pending` order) and requeue the round's
+    /// arms. Must follow a `begin_round` that returned
+    /// [`RoundAction::Pull`].
+    pub fn end_round(&mut self, sums: &[f64], sqs: &[f64]) {
+        assert_eq!(sums.len(), self.pending.len(),
+                   "end_round: wrong result length");
+        assert_eq!(sqs.len(), self.pending.len());
+        let t = self.pending_t;
+        let pending = std::mem::take(&mut self.pending);
+        for ((&a, &s), &s2) in pending.iter().zip(sums).zip(sqs) {
+            self.record_samples(a, t, s, s2);
+        }
+        if self.init_heap_pending {
+            self.init_heap_pending = false;
+            for a in 0..self.states.len() {
+                self.push_heap(a);
+            }
+        } else {
+            let selected = std::mem::take(&mut self.selected);
             for &a in &selected {
                 self.push_heap(a);
             }
+            self.selected = selected;
+            self.selected.clear();
         }
-        let m = self.finish(t0, counter, start_units, rounds, exact_evals);
-        self.result(best, m)
     }
 
-    fn result(&self, best: Vec<(usize, f64)>, metrics: RunMetrics)
-              -> BanditResult {
+    /// Run to completion over `arms`. Charges `counter` per DESIGN.md §7.
+    pub fn run<A: ArmSet>(&mut self, arms: &mut A, rng: &mut Rng,
+                          counter: &mut Counter) -> BanditResult {
+        let mut sums: Vec<f64> = Vec::new();
+        let mut sqs: Vec<f64> = Vec::new();
+        loop {
+            match self.begin_round(arms, rng, counter) {
+                RoundAction::Done => return self.result(counter),
+                RoundAction::Pull { t } => {
+                    arms.pull_batch(&self.pending, t, rng, counter,
+                                    &mut sums, &mut sqs);
+                    self.end_round(&sums, &sqs);
+                }
+            }
+        }
+    }
+
+    /// Snapshot the run's outcome (call after [`RoundAction::Done`]; `run`
+    /// calls it for you). `counter` must be the same counter the run was
+    /// charged to.
+    pub fn result(&self, counter: &Counter) -> BanditResult {
         BanditResult {
-            best,
-            metrics,
+            best: self.best.clone(),
+            metrics: RunMetrics {
+                dist_computations: counter.get() - self.start_units,
+                rounds: self.rounds,
+                exact_evals: self.exact_evals,
+                elapsed: self.t0.map(|t| t.elapsed()).unwrap_or_default(),
+            },
             pulls_per_arm: self.states.iter().map(|s| s.pulls).collect(),
             exact_per_arm: self.states.iter().map(|s| s.exact).collect(),
-        }
-    }
-
-    fn finish(&self, t0: Instant, counter: &Counter, start_units: u64,
-              rounds: u64, exact_evals: u64) -> RunMetrics {
-        RunMetrics {
-            dist_computations: counter.get() - start_units,
-            rounds,
-            exact_evals,
-            elapsed: t0.elapsed(),
         }
     }
 }
@@ -519,7 +619,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(n, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let params = BanditParams {
             k,
             delta: 0.01,
@@ -583,7 +683,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(n, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let params = BanditParams { k: 1, ..Default::default() };
         let mut rng = Rng::new(6);
         let mut c = Counter::new();
@@ -602,7 +702,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(30, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         // coordinate distances (g0-g1)² with θ≈4: scale ~ 2θ — generous σ
         let params = BanditParams {
             k: 1,
@@ -625,7 +725,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(n + 1, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let params = BanditParams { k: n, ..Default::default() };
         let mut rng = Rng::new(14);
         let mut c = Counter::new();
@@ -655,7 +755,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(4, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let params = BanditParams { k: 2, ..Default::default() };
         let mut rng = Rng::new(15);
         let mut c = Counter::new();
@@ -678,7 +778,7 @@ mod tests {
         let query = ds.row_vec(0);
         let rows = DenseArms::<ScalarEngine>::candidates(200, Some(0));
         let mut arms =
-            DenseArms::new(&ds, query, rows, Metric::L2Sq, &mut engine);
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
         let eps = 0.5;
         let params = BanditParams {
             k: 1,

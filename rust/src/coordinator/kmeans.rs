@@ -128,13 +128,9 @@ pub fn assign_bandit<E: PullEngine>(
     (0..data.n)
         .map(|i| {
             let mut qrng = rng.fork(i as u64);
-            let mut arms = DenseArms::new(
-                centroids,
-                data.row_vec(i),
-                rows.clone(),
-                metric,
-                engine,
-            );
+            let query = data.row_vec(i);
+            let mut arms =
+                DenseArms::new(centroids, &query, &rows, metric, engine);
             let res = run_bmo_ucb(&mut arms, bandit.clone(), &mut qrng,
                                   counter);
             arms.arm_id(res.best[0].0) as usize

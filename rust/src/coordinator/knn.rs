@@ -1,8 +1,25 @@
 //! BMO-NN — Algorithm 2: k-nearest-neighbor queries and full k-NN-graph
 //! construction via BMO UCB over the Monte Carlo boxes.
+//!
+//! Two execution modes:
+//!
+//! * **Per-query** ([`knn_point_dense`] / [`knn_query_dense`] /
+//!   [`knn_point_sparse`]): one bandit run to completion.
+//! * **Batched multi-query** ([`knn_batch_dense`],
+//!   [`knn_batch_points_dense`], [`knn_batch_sparse`]): many concurrent
+//!   [`BmoUcb`] instances advanced in lockstep rounds over the shared
+//!   dataset, with every instance's staged coordinate pulls coalesced into
+//!   a single [`PullEngine::pull_batch`] pass per round — each data block
+//!   is swept once per round instead of once per query. Query `i` of a
+//!   batch is answered with the rng stream `rng.fork(i as u64)` and is
+//!   bitwise-identical to the per-query path under that same stream, for
+//!   any batch size (the equivalence is pinned by `tests/property_knn`).
+//!   The query server and graph construction both run on this driver.
 
-use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine, SparseArms};
-use crate::coordinator::bandit::{run_bmo_ucb, BanditParams};
+use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine, PullRequest,
+                               SparseArms};
+use crate::coordinator::bandit::{run_bmo_ucb, BanditParams, BmoUcb,
+                                 RoundAction};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::data::sparse::SparseDataset;
 use crate::metrics::{Counter, RunMetrics};
@@ -11,6 +28,12 @@ use crate::util::rng::Rng;
 /// One k-NN answer: neighbor dataset ids, ordered by increasing distance,
 /// with the bandit's final (normalized θ·d, i.e. un-normalized distance)
 /// estimates and the run's cost accounting.
+///
+/// `metrics.dist_computations` is exact per-query in every mode. In the
+/// batched drivers `metrics.elapsed` is the query's *in-flight wall time*
+/// (first round → emission, spanning the whole lockstep wave), i.e. a
+/// latency, not an exclusive-compute time — summing it across a batch
+/// overcounts wall clock.
 #[derive(Clone, Debug)]
 pub struct KnnResult {
     pub ids: Vec<u32>,
@@ -31,7 +54,8 @@ pub fn knn_point_dense<E: PullEngine>(
     counter: &mut Counter,
 ) -> KnnResult {
     let query = data.row_vec(q);
-    knn_dense_inner(data, query, Some(q), metric, params, engine, rng, counter)
+    knn_dense_inner(data, &query, Some(q), metric, params, engine, rng,
+                    counter)
 }
 
 /// k-NN of an external query vector — dense box.
@@ -44,13 +68,12 @@ pub fn knn_query_dense<E: PullEngine>(
     rng: &mut Rng,
     counter: &mut Counter,
 ) -> KnnResult {
-    knn_dense_inner(data, query.to_vec(), None, metric, params, engine, rng,
-                    counter)
+    knn_dense_inner(data, query, None, metric, params, engine, rng, counter)
 }
 
 fn knn_dense_inner<E: PullEngine>(
     data: &DenseDataset,
-    query: Vec<f32>,
+    query: &[f32],
     exclude: Option<usize>,
     metric: Metric,
     params: &BanditParams,
@@ -60,13 +83,172 @@ fn knn_dense_inner<E: PullEngine>(
 ) -> KnnResult {
     let rows = DenseArms::<E>::candidates(data.n, exclude);
     let d = data.d as f64;
-    let mut arms = DenseArms::new(data, query, rows, metric, engine);
+    let mut arms = DenseArms::new(data, query, &rows, metric, engine);
     let res = run_bmo_ucb(&mut arms, params.clone(), rng, counter);
     KnnResult {
         ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
         dists: res.best.iter().map(|&(_, th)| th * d).collect(),
         metrics: res.metrics,
     }
+}
+
+/// One query's staged pull within a multi-query round.
+struct StagedPull {
+    slot: usize,
+    rows: Vec<u32>,
+    coords: Vec<u32>,
+}
+
+/// Per-query state of the batch driver (the query vector itself stays in
+/// the caller's slice — no per-slot copy).
+struct DenseSlot {
+    rows: Vec<u32>,
+    bandit: BmoUcb,
+    rng: Rng,
+    counter: Counter,
+    done: bool,
+}
+
+/// Batched k-NN for external query vectors (the server's request path).
+///
+/// Advances one [`BmoUcb`] per query in lockstep rounds; per round, every
+/// live query's uniform pull is staged ([`DenseArms::stage_pull`]) and the
+/// whole wave is resolved with a single [`PullEngine::pull_batch`] call,
+/// so the engine sweeps each data block once per round instead of once
+/// per query. Query `i` uses the rng stream `rng.fork(i as u64)` and its
+/// answer (ids, dists, unit count) is bitwise-identical to
+/// `knn_query_dense(data, &queries[i], .., &mut rng.fork(i), ..)` for any
+/// batch size. Per-query units are merged into `counter`.
+pub fn knn_batch_dense<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> Vec<KnnResult> {
+    let excludes = vec![None; queries.len()];
+    knn_batch_dense_inner(data, queries, &excludes, metric, params, engine,
+                          rng, counter)
+}
+
+/// Batched k-NN for in-dataset points (self excluded) — the figure
+/// harness and graph-construction entry point.
+pub fn knn_batch_points_dense<E: PullEngine>(
+    data: &DenseDataset,
+    points: &[usize],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> Vec<KnnResult> {
+    // query vectors are the dataset's own rows — borrow, don't copy
+    let queries: Vec<&[f32]> =
+        points.iter().map(|&q| data.row(q)).collect();
+    let excludes: Vec<Option<usize>> =
+        points.iter().map(|&q| Some(q)).collect();
+    knn_batch_dense_inner(data, &queries, &excludes, metric, params, engine,
+                          rng, counter)
+}
+
+fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    excludes: &[Option<usize>],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> Vec<KnnResult> {
+    assert_eq!(queries.len(), excludes.len());
+    let d = data.d as f64;
+    let mut slots: Vec<DenseSlot> = Vec::with_capacity(queries.len());
+    for (i, q) in queries.iter().enumerate() {
+        let q = q.as_ref();
+        assert_eq!(q.len(), data.d, "query {i} has wrong dimension");
+        let qrng = rng.fork(i as u64);
+        let rows = DenseArms::<E>::candidates(data.n, excludes[i]);
+        let bandit = {
+            let arms_view =
+                DenseArms::new(data, q, &rows, metric, engine);
+            BmoUcb::new(&arms_view, params.clone())
+        };
+        slots.push(DenseSlot {
+            rows,
+            bandit,
+            rng: qrng,
+            counter: Counter::new(),
+            done: false,
+        });
+    }
+    let mut results: Vec<Option<KnnResult>> =
+        (0..slots.len()).map(|_| None).collect();
+    let mut remaining = slots.len();
+    let (mut out_sum, mut out_sq) = (Vec::new(), Vec::new());
+    while remaining > 0 {
+        // phase 1: advance every live bandit to its next staged pull (or
+        // completion), resolving exact evals and ragged pulls inline
+        let mut staged: Vec<StagedPull> = Vec::new();
+        for (si, slot) in slots.iter_mut().enumerate() {
+            if slot.done {
+                continue;
+            }
+            let mut arms = DenseArms::new(data, queries[si].as_ref(),
+                                          &slot.rows, metric, engine);
+            match slot.bandit.begin_round(&mut arms, &mut slot.rng,
+                                          &mut slot.counter) {
+                RoundAction::Done => {
+                    let res = slot.bandit.result(&slot.counter);
+                    results[si] = Some(KnnResult {
+                        ids: res.best.iter()
+                            .map(|&(a, _)| slot.rows[a])
+                            .collect(),
+                        dists: res.best.iter()
+                            .map(|&(_, th)| th * d)
+                            .collect(),
+                        metrics: res.metrics,
+                    });
+                    slot.done = true;
+                }
+                RoundAction::Pull { t } => {
+                    let (rows, coords) = arms.stage_pull(
+                        slot.bandit.pending_arms(), t, &mut slot.rng,
+                        &mut slot.counter);
+                    staged.push(StagedPull { slot: si, rows, coords });
+                }
+            }
+        }
+        // phase 2: one coalesced engine pass over every staged pull
+        if !staged.is_empty() {
+            let reqs: Vec<PullRequest> = staged
+                .iter()
+                .map(|s| PullRequest {
+                    query: queries[s.slot].as_ref(),
+                    rows: &s.rows,
+                    coord_ids: &s.coords,
+                })
+                .collect();
+            engine.pull_batch(data, &reqs, metric, &mut out_sum,
+                              &mut out_sq);
+            drop(reqs);
+            // phase 3: scatter the results back into each bandit
+            let mut off = 0usize;
+            for s in &staged {
+                let m = s.rows.len();
+                slots[s.slot].bandit.end_round(&out_sum[off..off + m],
+                                               &out_sq[off..off + m]);
+                off += m;
+            }
+        }
+        remaining = slots.iter().filter(|s| !s.done).count();
+    }
+    for slot in &slots {
+        counter.add(slot.counter.get());
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
 }
 
 /// k-NN of an in-dataset point — sparse box (§IV-A).
@@ -82,7 +264,7 @@ pub fn knn_point_sparse(
         .filter(|&i| i as usize != q)
         .collect();
     let d = data.d as f64;
-    let mut arms = SparseArms::new(data, q, rows, metric);
+    let mut arms = SparseArms::new(data, q, &rows, metric);
     let res = run_bmo_ucb(&mut arms, params.clone(), rng, counter);
     KnnResult {
         ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
@@ -91,12 +273,103 @@ pub fn knn_point_sparse(
     }
 }
 
+/// Batched sparse k-NN: many in-dataset query points advanced in lockstep
+/// rounds. The sparse Monte Carlo box samples in O(1) per pull with no
+/// dense blocks to sweep, so there is no cross-query engine coalescing to
+/// do — the driver provides the same lockstep scheduling, rng-forking and
+/// accounting contract as [`knn_batch_dense`] (query `i` ≡ per-query run
+/// under `rng.fork(i as u64)`, bitwise).
+pub fn knn_batch_sparse(
+    data: &SparseDataset,
+    points: &[usize],
+    metric: Metric,
+    params: &BanditParams,
+    rng: &mut Rng,
+    counter: &mut Counter,
+) -> Vec<KnnResult> {
+    struct SparseSlot {
+        point: usize,
+        rows: Vec<u32>,
+        bandit: BmoUcb,
+        rng: Rng,
+        counter: Counter,
+        done: bool,
+    }
+    let d = data.d as f64;
+    let mut slots: Vec<SparseSlot> = Vec::with_capacity(points.len());
+    for (i, &q) in points.iter().enumerate() {
+        let qrng = rng.fork(i as u64);
+        let rows: Vec<u32> = (0..data.n as u32)
+            .filter(|&r| r as usize != q)
+            .collect();
+        let bandit = {
+            let arms_view = SparseArms::new(data, q, &rows, metric);
+            BmoUcb::new(&arms_view, params.clone())
+        };
+        slots.push(SparseSlot {
+            point: q,
+            rows,
+            bandit,
+            rng: qrng,
+            counter: Counter::new(),
+            done: false,
+        });
+    }
+    let mut results: Vec<Option<KnnResult>> =
+        (0..slots.len()).map(|_| None).collect();
+    let mut remaining = slots.len();
+    let (mut sums, mut sqs) = (Vec::new(), Vec::new());
+    while remaining > 0 {
+        for (si, slot) in slots.iter_mut().enumerate() {
+            if slot.done {
+                continue;
+            }
+            let mut arms =
+                SparseArms::new(data, slot.point, &slot.rows, metric);
+            match slot.bandit.begin_round(&mut arms, &mut slot.rng,
+                                          &mut slot.counter) {
+                RoundAction::Done => {
+                    let res = slot.bandit.result(&slot.counter);
+                    results[si] = Some(KnnResult {
+                        ids: res.best.iter()
+                            .map(|&(a, _)| slot.rows[a])
+                            .collect(),
+                        dists: res.best.iter()
+                            .map(|&(_, th)| th * d)
+                            .collect(),
+                        metrics: res.metrics,
+                    });
+                    slot.done = true;
+                }
+                RoundAction::Pull { t } => {
+                    arms.pull_batch(slot.bandit.pending_arms(), t,
+                                    &mut slot.rng, &mut slot.counter,
+                                    &mut sums, &mut sqs);
+                    slot.bandit.end_round(&sums, &sqs);
+                }
+            }
+        }
+        remaining = slots.iter().filter(|s| !s.done).count();
+    }
+    for slot in &slots {
+        counter.add(slot.counter.get());
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
 /// Full k-NN graph (Algorithm 2's outer loop): the k nearest neighbors of
 /// every point. δ is split as δ/n per query, matching line 4 of Alg 2.
+/// `metrics.elapsed` sums per-query in-flight times (see [`KnnResult`]),
+/// which exceeds wall clock under the batched driver.
 pub struct GraphResult {
     pub neighbors: Vec<Vec<u32>>,
     pub metrics: RunMetrics,
 }
+
+/// Queries per batch wave during graph construction: bounds the driver's
+/// resident bandit state (each in-flight query keeps O(n) arm state) while
+/// still giving the engine wide coalesced rounds.
+const GRAPH_WAVE: usize = 64;
 
 pub fn knn_graph_dense<E: PullEngine>(
     data: &DenseDataset,
@@ -110,12 +383,17 @@ pub fn knn_graph_dense<E: PullEngine>(
     per_query.delta = params.delta / data.n as f64;
     let mut neighbors = Vec::with_capacity(data.n);
     let mut metrics = RunMetrics::default();
-    for q in 0..data.n {
-        let mut qrng = rng.fork(q as u64);
-        let res = knn_point_dense(data, q, metric, &per_query, engine,
-                                  &mut qrng, counter);
-        metrics.merge(&res.metrics);
-        neighbors.push(res.ids);
+    let mut q = 0;
+    while q < data.n {
+        let hi = (q + GRAPH_WAVE).min(data.n);
+        let points: Vec<usize> = (q..hi).collect();
+        let wave = knn_batch_points_dense(data, &points, metric, &per_query,
+                                          engine, rng, counter);
+        for res in wave {
+            metrics.merge(&res.metrics);
+            neighbors.push(res.ids);
+        }
+        q = hi;
     }
     GraphResult { neighbors, metrics }
 }
@@ -131,12 +409,17 @@ pub fn knn_graph_sparse(
     per_query.delta = params.delta / data.n as f64;
     let mut neighbors = Vec::with_capacity(data.n);
     let mut metrics = RunMetrics::default();
-    for q in 0..data.n {
-        let mut qrng = rng.fork(q as u64);
-        let res = knn_point_sparse(data, q, metric, &per_query, &mut qrng,
-                                   counter);
-        metrics.merge(&res.metrics);
-        neighbors.push(res.ids);
+    let mut q = 0;
+    while q < data.n {
+        let hi = (q + GRAPH_WAVE).min(data.n);
+        let points: Vec<usize> = (q..hi).collect();
+        let wave = knn_batch_sparse(data, &points, metric, &per_query, rng,
+                                    counter);
+        for res in wave {
+            metrics.merge(&res.metrics);
+            neighbors.push(res.ids);
+        }
+        q = hi;
     }
     GraphResult { neighbors, metrics }
 }
@@ -240,6 +523,82 @@ mod tests {
             }
         }
         assert!(correct >= 39, "accuracy {correct}/40");
+    }
+
+    #[test]
+    fn knn_batch_dense_single_query_equals_solo_bitwise() {
+        let ds = synthetic::image_like(50, 128, 31);
+        let q = ds.row_vec(5);
+        let mut e1 = ScalarEngine;
+        let mut base1 = Rng::new(32);
+        let mut r1 = base1.fork(0);
+        let mut c1 = Counter::new();
+        let solo = knn_query_dense(&ds, &q, Metric::L2Sq, &params(3),
+                                   &mut e1, &mut r1, &mut c1);
+        let mut e2 = ScalarEngine;
+        let mut base2 = Rng::new(32);
+        let mut c2 = Counter::new();
+        let batch = knn_batch_dense(&ds, &[q.clone()], Metric::L2Sq,
+                                    &params(3), &mut e2, &mut base2,
+                                    &mut c2);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(solo.ids, batch[0].ids);
+        assert_eq!(solo.dists, batch[0].dists);
+        assert_eq!(c1.get(), c2.get());
+        assert_eq!(solo.metrics.dist_computations,
+                   batch[0].metrics.dist_computations);
+    }
+
+    #[test]
+    fn knn_batch_points_dense_matches_bruteforce() {
+        let ds = synthetic::image_like(70, 512, 33);
+        let points: Vec<usize> = (0..10).map(|i| i * 5).collect();
+        let mut engine = ScalarEngine;
+        let mut rng = Rng::new(34);
+        let mut c = Counter::new();
+        let batch = knn_batch_points_dense(&ds, &points, Metric::L2Sq,
+                                           &params(4), &mut engine,
+                                           &mut rng, &mut c);
+        assert_eq!(batch.len(), points.len());
+        for (&q, res) in points.iter().zip(&batch) {
+            let truth = baselines::exact::knn_point(
+                &ds, q, 4, Metric::L2Sq, &mut Counter::new());
+            let got: std::collections::HashSet<_> = res.ids.iter().collect();
+            let want: std::collections::HashSet<_> =
+                truth.ids.iter().collect();
+            assert_eq!(got, want, "query {q}");
+            assert!(!res.ids.contains(&(q as u32)), "self must be excluded");
+        }
+        // shared counter must equal the sum of per-query accounting
+        let total: u64 =
+            batch.iter().map(|r| r.metrics.dist_computations).sum();
+        assert_eq!(c.get(), total);
+    }
+
+    #[test]
+    fn knn_batch_sparse_matches_per_query_bitwise() {
+        let ds = synthetic::rna_like(40, 400, 0.1, 35);
+        let p = params(2);
+        let points: Vec<usize> = (0..4).map(|i| i * 3).collect();
+        let mut base1 = Rng::new(36);
+        let solo: Vec<KnnResult> = points
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                let mut r = base1.fork(i as u64);
+                let mut c = Counter::new();
+                knn_point_sparse(&ds, q, Metric::L1, &p, &mut r, &mut c)
+            })
+            .collect();
+        let mut base2 = Rng::new(36);
+        let mut c2 = Counter::new();
+        let batch =
+            knn_batch_sparse(&ds, &points, Metric::L1, &p, &mut base2,
+                             &mut c2);
+        for (s, b) in solo.iter().zip(&batch) {
+            assert_eq!(s.ids, b.ids);
+            assert_eq!(s.dists, b.dists);
+        }
     }
 
     #[test]

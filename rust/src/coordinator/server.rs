@@ -1,9 +1,23 @@
-//! k-NN query server: TCP, line-delimited JSON, worker thread pool with a
-//! shared queue (dynamic batching of queued queries per worker pass).
+//! k-NN query server: TCP, line-delimited JSON, with a **fixed compute
+//! worker pool** fed by a shared queue.
 //!
-//! Python never runs here — this is the L3 request path. Each worker owns
-//! its RNG fork and distance counter; counters are merged into server
-//! totals for the metrics endpoint.
+//! Architecture (the L3 request path — Python never runs here):
+//!
+//! * One accept thread hands each connection to a lightweight I/O thread
+//!   that does framing, parsing and validation only. `ping` / `stats` /
+//!   `shutdown` are answered inline; `knn` requests are enqueued on the
+//!   shared queue and the I/O thread blocks until its response is ready —
+//!   which keeps the line protocol's request/response ordering per
+//!   connection while letting *different* connections' queries coalesce.
+//! * `n_workers` compute workers drain up to `batch_size` queued queries
+//!   per pass and resolve the whole wave with one
+//!   `coordinator::knn::knn_batch_dense` call: every in-flight query's
+//!   bandit advances in lockstep and their per-round coordinate pulls are
+//!   coalesced into a single `PullEngine::pull_batch` sweep of the
+//!   dataset, so under concurrent load each data block is read once per
+//!   round instead of once per query.
+//! * Each worker owns its RNG and engine; counters and per-batch latency
+//!   (`metrics::BatchStats`) merge into server totals for `stats`.
 //!
 //! Protocol (one JSON object per line):
 //!   request:  {"op":"knn",   "query":[f32...], "k":5}
@@ -11,20 +25,23 @@
 //!             {"op":"ping"}
 //!             {"op":"shutdown"}
 //!   response: {"ok":true, "ids":[...], "dists":[...], "units":u}
-//!             {"ok":true, "queries":q, "units":u, "p50_us":_, "p99_us":_}
+//!             {"ok":true, "queries":q, "units":u, "p50_us":_, "p99_us":_,
+//!              "batches":b, "mean_batch":_, "max_batch":_,
+//!              "batch_p50_us":_, "batch_p99_us":_, "workers":w}
 //!             {"ok":false, "error":"..."}
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::arms::ScalarEngine;
 use crate::coordinator::bandit::BanditParams;
-use crate::coordinator::knn::knn_query_dense;
+use crate::coordinator::knn::knn_batch_dense;
 use crate::data::dense::{DenseDataset, Metric};
-use crate::metrics::{Counter, LatencyStats};
+use crate::metrics::{BatchStats, Counter, LatencyStats};
 use crate::runtime::native::NativeEngine;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -34,8 +51,10 @@ pub struct ServerConfig {
     pub addr: String,
     pub metric: Metric,
     pub params: BanditParams,
-    /// worker threads handling connections
+    /// compute worker threads draining the shared query queue
     pub n_workers: usize,
+    /// max queued queries coalesced into one worker pass
+    pub batch_size: usize,
     /// use the optimized native engine (true) or the scalar reference
     pub native_engine: bool,
 }
@@ -47,17 +66,31 @@ impl Default for ServerConfig {
             metric: Metric::L2Sq,
             params: BanditParams::default(),
             n_workers: 4,
+            batch_size: 8,
             native_engine: true,
         }
     }
 }
 
+/// A validated `knn` request waiting on the shared queue. The submitting
+/// I/O thread parks on `done` until a worker publishes the response.
+struct Job {
+    query: Vec<f32>,
+    k: usize,
+    done: Arc<(Mutex<Option<Json>>, Condvar)>,
+}
+
 struct Shared {
     data: DenseDataset,
     config: ServerConfig,
+    queue: Mutex<VecDeque<Job>>,
+    queue_cv: Condvar,
     total_units: AtomicU64,
     total_queries: AtomicU64,
+    /// per-query latency, enqueue → response ready (includes queue wait)
     latencies: Mutex<LatencyStats>,
+    /// per-worker-pass batch accounting
+    batches: Mutex<BatchStats>,
     shutdown: AtomicBool,
 }
 
@@ -66,6 +99,7 @@ pub struct Server {
     pub addr: std::net::SocketAddr,
     shared: Arc<Shared>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
@@ -75,24 +109,43 @@ impl Server {
         let listener = TcpListener::bind(&config.addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let n_workers = config.n_workers.max(1);
         let shared = Arc::new(Shared {
             data,
             config,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
             total_units: AtomicU64::new(0),
             total_queries: AtomicU64::new(0),
             latencies: Mutex::new(LatencyStats::default()),
+            batches: Mutex::new(BatchStats::default()),
             shutdown: AtomicBool::new(false),
         });
+        let worker_handles = (0..n_workers)
+            .map(|w| {
+                let s = shared.clone();
+                std::thread::spawn(move || worker_loop(s, w as u64))
+            })
+            .collect();
         let accept_shared = shared.clone();
         let handle = std::thread::spawn(move || {
             accept_loop(listener, accept_shared);
         });
-        Ok(Server { addr, shared, accept_handle: Some(handle) })
+        Ok(Server {
+            addr,
+            shared,
+            accept_handle: Some(handle),
+            worker_handles,
+        })
     }
 
     pub fn stop(&mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue_cv.notify_all();
         if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -112,17 +165,134 @@ impl Drop for Server {
     }
 }
 
+/// Compute worker: drain up to `batch_size` queued queries, resolve the
+/// wave with one batched multi-query bandit pass, publish responses.
+fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
+    let mut rng = Rng::new(0xBA7C4_ED ^ worker_id);
+    let mut scalar = ScalarEngine;
+    let mut native = NativeEngine::default();
+    loop {
+        let jobs: Vec<Job> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let (guard, _) = shared
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+            let take = q.len().min(shared.config.batch_size.max(1));
+            q.drain(..take).collect()
+        };
+        let t0 = Instant::now();
+        let mut responses: Vec<Option<Json>> =
+            (0..jobs.len()).map(|_| None).collect();
+        let mut batch_units = 0u64;
+        // group by k — the driver runs one k per wave; real traffic is
+        // nearly always uniform in k, so this rarely splits a batch
+        let mut by_k: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, job) in jobs.iter().enumerate() {
+            by_k.entry(job.k).or_default().push(i);
+        }
+        for (k, idxs) in by_k {
+            let queries: Vec<&[f32]> =
+                idxs.iter().map(|&i| jobs[i].query.as_slice()).collect();
+            let mut params = shared.config.params.clone();
+            params.k = k;
+            let mut counter = Counter::new();
+            let results = if shared.config.native_engine {
+                knn_batch_dense(&shared.data, &queries,
+                                shared.config.metric, &params, &mut native,
+                                &mut rng, &mut counter)
+            } else {
+                knn_batch_dense(&shared.data, &queries,
+                                shared.config.metric, &params, &mut scalar,
+                                &mut rng, &mut counter)
+            };
+            for (&i, res) in idxs.iter().zip(&results) {
+                let units = res.metrics.dist_computations;
+                batch_units += units;
+                responses[i] = Some(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("ids",
+                     Json::usize_array(
+                         &res.ids.iter().map(|&x| x as usize)
+                             .collect::<Vec<_>>())),
+                    ("dists",
+                     Json::f32_array(
+                         &res.dists.iter().map(|&d| d as f32)
+                             .collect::<Vec<_>>())),
+                    ("units", Json::Num(units as f64)),
+                ]));
+            }
+        }
+        let elapsed = t0.elapsed();
+        shared.total_units.fetch_add(batch_units, Ordering::Relaxed);
+        shared
+            .total_queries
+            .fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        shared.batches.lock().unwrap().record(jobs.len(), elapsed);
+        for (job, resp) in jobs.into_iter().zip(responses) {
+            let (lock, cv) = &*job.done;
+            *lock.lock().unwrap() =
+                Some(resp.unwrap_or_else(|| err_json("internal error")));
+            cv.notify_all();
+        }
+    }
+}
+
+/// Enqueue a validated knn job and block until a worker answers (or the
+/// server shuts down under us).
+fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize) -> Json {
+    let done = Arc::new((Mutex::new(None), Condvar::new()));
+    {
+        let mut q = shared.queue.lock().unwrap();
+        q.push_back(Job { query, k, done: done.clone() });
+    }
+    shared.queue_cv.notify_one();
+    let (lock, cv) = &*done;
+    let mut guard = lock.lock().unwrap();
+    loop {
+        if let Some(resp) = guard.take() {
+            return resp;
+        }
+        let (g, timeout) = cv
+            .wait_timeout(guard, Duration::from_millis(100))
+            .unwrap();
+        guard = g;
+        if guard.is_none() && timeout.timed_out()
+            && shared.shutdown.load(Ordering::SeqCst)
+        {
+            // grace period for the drain, then give up
+            let (g2, t2) = cv
+                .wait_timeout(guard, Duration::from_millis(500))
+                .unwrap();
+            guard = g2;
+            if let Some(resp) = guard.take() {
+                return resp;
+            }
+            if t2.timed_out() {
+                return err_json("server shutting down");
+            }
+        }
+    }
+}
+
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
-    let mut conn_id = 0u64;
     let mut handles = Vec::new();
     while !shared.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
-                conn_id += 1;
                 let s = shared.clone();
-                let id = conn_id;
                 handles.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, s, id);
+                    let _ = handle_conn(stream, s);
                 }));
                 // reap finished connection threads
                 handles.retain(|h| !h.is_finished());
@@ -138,7 +308,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
-fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>, conn_id: u64)
+/// Per-connection I/O thread: framing + parsing + validation. Compute
+/// never happens here — `knn` goes through the shared queue.
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>)
                -> std::io::Result<()> {
     // short read timeout so connection threads notice shutdown instead of
     // blocking forever while stop() joins them; partial lines accumulate
@@ -146,9 +318,6 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>, conn_id: u64)
     stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
     stream.set_nodelay(true)?; // line-oriented RPC: Nagle adds ~40ms p50
     let mut writer = stream.try_clone()?;
-    let mut rng = Rng::new(0xC0FFEE ^ conn_id);
-    let mut scalar = ScalarEngine;
-    let mut native = NativeEngine::default();
     let mut acc: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 4096];
     loop {
@@ -181,16 +350,10 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>, conn_id: u64)
                     Some("stats") => stats_json(&shared),
                     Some("shutdown") => {
                         shared.shutdown.store(true, Ordering::SeqCst);
+                        shared.queue_cv.notify_all();
                         Json::obj(vec![("ok", Json::Bool(true))])
                     }
-                    Some("knn") => {
-                        let use_native = shared.config.native_engine;
-                        if use_native {
-                            handle_knn(&req, &shared, &mut native, &mut rng)
-                        } else {
-                            handle_knn(&req, &shared, &mut scalar, &mut rng)
-                        }
-                    }
+                    Some("knn") => handle_knn(&req, &shared),
                     _ => err_json("unknown op"),
                 }
             }
@@ -204,8 +367,8 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>, conn_id: u64)
     }
 }
 
-fn handle_knn<E: crate::coordinator::arms::PullEngine>(
-    req: &Json, shared: &Shared, engine: &mut E, rng: &mut Rng) -> Json {
+/// Validate a knn request and route it through the worker pool.
+fn handle_knn(req: &Json, shared: &Shared) -> Json {
     let Some(qarr) = req.get("query").and_then(|q| q.as_arr()) else {
         return err_json("missing query");
     };
@@ -221,29 +384,18 @@ fn handle_knn<E: crate::coordinator::arms::PullEngine>(
     if k == 0 || k >= shared.data.n {
         return err_json("k out of range");
     }
-    let mut params = shared.config.params.clone();
-    params.k = k;
-    let mut counter = Counter::new();
     let t0 = Instant::now();
-    let res = knn_query_dense(&shared.data, &query, shared.config.metric,
-                              &params, engine, rng, &mut counter);
-    let elapsed = t0.elapsed();
-    shared.total_units.fetch_add(counter.get(), Ordering::Relaxed);
-    shared.total_queries.fetch_add(1, Ordering::Relaxed);
-    shared.latencies.lock().unwrap().record(elapsed);
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("ids",
-         Json::usize_array(
-             &res.ids.iter().map(|&i| i as usize).collect::<Vec<_>>())),
-        ("dists", Json::f32_array(
-            &res.dists.iter().map(|&d| d as f32).collect::<Vec<_>>())),
-        ("units", Json::Num(counter.get() as f64)),
-    ])
+    let resp = submit_and_wait(shared, query, k);
+    if resp.get("ok") == Some(&Json::Bool(true)) {
+        shared.latencies.lock().unwrap().record(t0.elapsed());
+    }
+    resp
 }
 
 fn stats_json(shared: &Shared) -> Json {
     let lat = shared.latencies.lock().unwrap();
+    let batches = shared.batches.lock().unwrap();
+    let blat = batches.latency();
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("queries",
@@ -252,6 +404,15 @@ fn stats_json(shared: &Shared) -> Json {
          Json::Num(shared.total_units.load(Ordering::Relaxed) as f64)),
         ("p50_us", Json::Num(lat.percentile(50.0).as_micros() as f64)),
         ("p99_us", Json::Num(lat.percentile(99.0).as_micros() as f64)),
+        ("batches", Json::Num(batches.batches() as f64)),
+        ("mean_batch", Json::Num(batches.mean_batch())),
+        ("max_batch", Json::Num(batches.max_batch() as f64)),
+        ("batch_p50_us",
+         Json::Num(blat.percentile(50.0).as_micros() as f64)),
+        ("batch_p99_us",
+         Json::Num(blat.percentile(99.0).as_micros() as f64)),
+        ("workers",
+         Json::Num(shared.config.n_workers.max(1) as f64)),
     ])
 }
 
@@ -279,12 +440,18 @@ impl Client {
     }
 
     pub fn request(&mut self, req: &Json) -> std::io::Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
+        self.send_raw(&req.to_string())
+    }
+
+    /// Send a raw line (not necessarily valid JSON) and parse the
+    /// response — lets tests exercise the malformed-input path.
+    pub fn send_raw(&mut self, line: &str) -> std::io::Result<Json> {
+        self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Json::parse(line.trim()).map_err(|e| {
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Json::parse(resp.trim()).map_err(|e| {
             std::io::Error::new(std::io::ErrorKind::InvalidData, e)
         })
     }
@@ -362,6 +529,8 @@ mod tests {
             .unwrap();
         assert_eq!(stats.get("queries").unwrap().as_usize(), Some(1));
         assert!(stats.get("units").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(stats.get("batches").unwrap().as_usize(), Some(1));
+        assert!(stats.get("mean_batch").unwrap().as_f64().unwrap() >= 1.0);
         srv.stop();
     }
 
@@ -379,8 +548,8 @@ mod tests {
             .unwrap();
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
         // malformed json
-        let resp2 = cl.request(&Json::Str("not an object".into()));
-        assert!(resp2.is_ok());
+        let resp2 = cl.send_raw("{not json").unwrap();
+        assert_eq!(resp2.get("ok"), Some(&Json::Bool(false)));
         srv.stop();
     }
 

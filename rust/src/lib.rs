@@ -13,7 +13,7 @@
 //! * **L1 (pallas, `python/compile/kernels/`)** — the gather+reduce pull
 //!   kernel and the FWHT rotation kernel.
 //!
-//! Quick start:
+//! Quick start (single query):
 //! ```no_run
 //! use bmonn::coordinator::{BanditParams, knn::knn_point_dense};
 //! use bmonn::data::{synthetic, Metric};
@@ -30,6 +30,29 @@
 //!                           &mut engine, &mut rng, &mut counter);
 //! println!("5-NN of point 0: {:?} ({} coordinate ops — exact would be {})",
 //!          res.ids, counter.get(), (data.n - 1) * data.d);
+//! ```
+//!
+//! Batched serving path — many concurrent queries advanced in lockstep,
+//! their per-round coordinate pulls coalesced into one engine sweep of
+//! the dataset (this is what the query server runs):
+//! ```no_run
+//! use bmonn::coordinator::{BanditParams, knn::knn_batch_dense};
+//! use bmonn::data::{synthetic, Metric};
+//! use bmonn::metrics::Counter;
+//! use bmonn::runtime::native::NativeEngine;
+//! use bmonn::util::rng::Rng;
+//!
+//! let data = synthetic::image_like(1000, 1024, 42);
+//! let queries: Vec<Vec<f32>> = (0..64).map(|i| data.row_vec(i)).collect();
+//! let mut engine = NativeEngine::default();
+//! let mut rng = Rng::new(0);
+//! let mut counter = Counter::new();
+//! let results = knn_batch_dense(
+//!     &data, &queries, Metric::L2Sq,
+//!     &BanditParams { k: 5, ..Default::default() },
+//!     &mut engine, &mut rng, &mut counter);
+//! println!("{} answers in {} coordinate ops", results.len(),
+//!          counter.get());
 //! ```
 
 pub mod baselines;

@@ -149,6 +149,13 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
     let data =
         loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
     let params = cfg.bandit_params();
+    let batch = args.flag_usize("batch", 1)?;
+    if batch > 1 {
+        if algo != "bmo" {
+            return Err("--batch requires --algo bmo".into());
+        }
+        return cmd_knn_batch(&cfg, &data, q, batch);
+    }
     let ids_dists: (Vec<u32>, Vec<f64>) = match algo {
         "bmo" => {
             let res = match cfg.engine {
@@ -219,6 +226,49 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
     print_answer(&ids_dists.0, &ids_dists.1, counter.get());
     let exact_units = ((data.n - 1) * data.d) as u64;
     println!("gain vs exact: {:.1}x",
+             exact_units as f64 / counter.get().max(1) as f64);
+    Ok(())
+}
+
+/// `knn --batch B`: answer B consecutive query points through the
+/// coalesced multi-query driver (the server's execution path).
+fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
+                 q0: usize, batch: usize) -> Result<(), String> {
+    use bmonn::coordinator::knn::knn_batch_points_dense;
+    let points: Vec<usize> =
+        (q0..q0 + batch).map(|i| i % data.n).collect();
+    let params = cfg.bandit_params();
+    let mut rng = Rng::new(cfg.seed);
+    let mut counter = Counter::new();
+    let results = match cfg.engine {
+        EngineKind::Scalar => {
+            let mut e = bmonn::coordinator::arms::ScalarEngine;
+            knn_batch_points_dense(data, &points, cfg.metric, &params,
+                                   &mut e, &mut rng, &mut counter)
+        }
+        EngineKind::Native => {
+            let mut e = NativeEngine::default();
+            knn_batch_points_dense(data, &points, cfg.metric, &params,
+                                   &mut e, &mut rng, &mut counter)
+        }
+        EngineKind::Pjrt => {
+            let mut e =
+                PjrtEngine::new(Path::new(&cfg.artifact_dir), cfg.metric)
+                    .map_err(|e| e.to_string())?;
+            let mut p = params.clone();
+            p.policy.round_pulls = e.round_pulls();
+            knn_batch_points_dense(data, &points, cfg.metric, &p, &mut e,
+                                   &mut rng, &mut counter)
+        }
+    };
+    for (&q, res) in points.iter().zip(&results) {
+        println!("query {q}:");
+        print_answer(&res.ids, &res.dists,
+                     res.metrics.dist_computations);
+    }
+    let exact_units = (batch * (data.n - 1) * data.d) as u64;
+    println!("batch of {batch}: {} total units, gain vs exact {:.1}x",
+             counter.get(),
              exact_units as f64 / counter.get().max(1) as f64);
     Ok(())
 }
@@ -296,6 +346,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         metric: cfg.metric,
         params: cfg.bandit_params(),
         n_workers: cfg.server_workers,
+        batch_size: cfg.server_batch,
         native_engine: cfg.engine != EngineKind::Scalar,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;

@@ -238,6 +238,53 @@ impl LatencyStats {
     }
 }
 
+/// Per-batch accounting for the batched serving path: how many coalesced
+/// passes ran, how full they were, and how long each took wall-clock.
+/// The server merges one record per worker pass; `stats` reports the
+/// aggregate so operators can see whether dynamic batching is actually
+/// amortizing work (mean batch ≈ 1 means the queue never backs up).
+#[derive(Clone, Debug, Default)]
+pub struct BatchStats {
+    batches: u64,
+    queries: u64,
+    max_batch: u64,
+    lat: LatencyStats,
+}
+
+impl BatchStats {
+    pub fn record(&mut self, batch_size: usize, elapsed: Duration) {
+        self.batches += 1;
+        self.queries += batch_size as u64;
+        self.max_batch = self.max_batch.max(batch_size as u64);
+        self.lat.record(elapsed);
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    pub fn queries(&self) -> u64 {
+        self.queries
+    }
+
+    pub fn max_batch(&self) -> u64 {
+        self.max_batch
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.queries as f64 / self.batches as f64
+        }
+    }
+
+    /// Per-batch wall-clock latency distribution.
+    pub fn latency(&self) -> &LatencyStats {
+        &self.lat
+    }
+}
+
 /// Named scalar metrics collected during a bench run; printed as a table.
 #[derive(Clone, Debug, Default)]
 pub struct Registry {
@@ -320,6 +367,19 @@ mod tests {
         assert_eq!(l.percentile(50.0), Duration::from_micros(50));
         assert_eq!(l.percentile(99.0), Duration::from_micros(99));
         assert_eq!(l.count(), 100);
+    }
+
+    #[test]
+    fn batch_stats_aggregates() {
+        let mut b = BatchStats::default();
+        b.record(4, Duration::from_micros(100));
+        b.record(8, Duration::from_micros(300));
+        b.record(1, Duration::from_micros(50));
+        assert_eq!(b.batches(), 3);
+        assert_eq!(b.queries(), 13);
+        assert_eq!(b.max_batch(), 8);
+        assert!((b.mean_batch() - 13.0 / 3.0).abs() < 1e-12);
+        assert_eq!(b.latency().count(), 3);
     }
 
     #[test]

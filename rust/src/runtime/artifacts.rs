@@ -5,9 +5,11 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
 use crate::util::json::Json;
+
+/// Manifest errors are plain strings: this module must build in the
+/// dependency-free offline configuration (no `anyhow`).
+pub type Result<T> = std::result::Result<T, String>;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct InputSpec {
@@ -43,34 +45,37 @@ pub struct Manifest {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let man_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&man_path)
-            .with_context(|| format!("reading {man_path:?} — run `make artifacts` first"))?;
+        let text = std::fs::read_to_string(&man_path).map_err(|e| {
+            format!("reading {man_path:?} — run `make artifacts` first: {e}")
+        })?;
         let json = Json::parse(&text)
-            .map_err(|e| anyhow!("parsing {man_path:?}: {e}"))?;
+            .map_err(|e| format!("parsing {man_path:?}: {e}"))?;
         let arts = json
             .get("artifacts")
             .and_then(|a| a.as_obj())
-            .ok_or_else(|| anyhow!("manifest missing 'artifacts' object"))?;
+            .ok_or_else(|| "manifest missing 'artifacts' object".to_string())?;
         let mut artifacts = BTreeMap::new();
         for (name, spec) in arts {
             let file = spec
                 .get("file")
                 .and_then(|f| f.as_str())
-                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+                .ok_or_else(|| format!("artifact {name}: missing file"))?;
             let file = dir.join(file);
             if !file.exists() {
-                bail!("artifact {name}: {file:?} does not exist");
+                return Err(format!(
+                    "artifact {name}: {file:?} does not exist"
+                ));
             }
             let inputs = spec
                 .get("inputs")
                 .and_then(|i| i.as_arr())
-                .ok_or_else(|| anyhow!("artifact {name}: missing inputs"))?
+                .ok_or_else(|| format!("artifact {name}: missing inputs"))?
                 .iter()
                 .map(|inp| -> Result<InputSpec> {
                     let shape = inp
                         .get("shape")
                         .and_then(|s| s.as_arr())
-                        .ok_or_else(|| anyhow!("bad input shape"))?
+                        .ok_or_else(|| "bad input shape".to_string())?
                         .iter()
                         .map(|v| v.as_usize().unwrap_or(0))
                         .collect();
@@ -96,11 +101,10 @@ impl Manifest {
     }
 
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest \
-                                    (have: {:?})",
-                                   self.artifacts.keys().collect::<Vec<_>>()))
+        self.artifacts.get(name).ok_or_else(|| {
+            format!("artifact '{name}' not in manifest (have: {:?})",
+                    self.artifacts.keys().collect::<Vec<_>>())
+        })
     }
 
     /// Default artifact directory: $BMONN_ARTIFACTS or ./artifacts.

@@ -10,4 +10,14 @@
 
 pub mod artifacts;
 pub mod native;
+
+// The real PJRT runtime needs the `xla` bindings and `anyhow`, neither of
+// which is available in the offline crate set. The default build compiles
+// an API-compatible stub whose constructors return errors, so every caller
+// (CLI `selftest`, integration tests, `serve_queries --pjrt`) still builds
+// and degrades gracefully at runtime.
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;

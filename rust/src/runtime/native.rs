@@ -6,7 +6,7 @@
 //! hoisted out of the inner loop, and a coordinate-major gather order that
 //! walks each data row once.
 
-use crate::coordinator::arms::PullEngine;
+use crate::coordinator::arms::{PullEngine, PullRequest};
 use crate::data::dense::{DenseDataset, Metric};
 
 #[derive(Default, Clone, Debug)]
@@ -205,6 +205,64 @@ impl PullEngine for NativeEngine {
         }
     }
 
+    /// Multi-query coalesced pulls, swept in dataset-row order.
+    ///
+    /// Every request's query values are gathered once (as in
+    /// `partial_sums`), then the (row, request) jobs are sorted by row so
+    /// the pass walks the dataset block-by-block: a data row pulled by
+    /// many concurrent queries is loaded from memory once per round
+    /// instead of once per query. Per-job arithmetic reuses the unrolled
+    /// row kernels, so outputs are bit-identical to per-request
+    /// `partial_sums` calls.
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        let total: usize = reqs.iter().map(|r| r.rows.len()).sum();
+        out_sum.clear();
+        out_sq.clear();
+        out_sum.resize(total, 0.0);
+        out_sq.resize(total, 0.0);
+        // one shared gather buffer, one offset per request
+        self.qg.clear();
+        let mut offsets = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            offsets.push(self.qg.len());
+            for &j in r.coord_ids {
+                self.qg.push(r.query[j as usize]);
+            }
+        }
+        // (data row, request, output slot) jobs in row-major order
+        let mut jobs: Vec<(u32, u32, u32)> = Vec::with_capacity(total);
+        let mut out_idx = 0u32;
+        for (ri, r) in reqs.iter().enumerate() {
+            for &row in r.rows {
+                jobs.push((row, ri as u32, out_idx));
+                out_idx += 1;
+            }
+        }
+        jobs.sort_unstable_by_key(|&(row, _, _)| row);
+        for &(row, ri, oi) in &jobs {
+            let r = &reqs[ri as usize];
+            let off = offsets[ri as usize];
+            let qg = &self.qg[off..off + r.coord_ids.len()];
+            let (s, q) = match metric {
+                Metric::L2Sq => {
+                    partial_row_l2(data.row(row as usize), qg, r.coord_ids)
+                }
+                Metric::L1 => {
+                    partial_row_l1(data.row(row as usize), qg, r.coord_ids)
+                }
+            };
+            out_sum[oi as usize] = s;
+            out_sq[oi as usize] = q;
+        }
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -261,6 +319,66 @@ mod tests {
                         "exact mismatch {metric:?} row {i}"
                     );
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pull_batch_bitwise_matches_per_request_partial_sums() {
+        // The row-major sweep may reorder the work but never the results:
+        // each request's outputs must be bit-identical to a standalone
+        // partial_sums call.
+        proptest::check(20, |rng: &mut Rng| {
+            let n = 2 + rng.below(20);
+            let d = 4 + rng.below(120);
+            let ds = synthetic::gaussian_iid(n, d, rng.next_u64());
+            let n_reqs = 1 + rng.below(4);
+            let queries: Vec<Vec<f32>> = (0..n_reqs)
+                .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+                .collect();
+            let rowsets: Vec<Vec<u32>> = (0..n_reqs)
+                .map(|_| {
+                    let m = 1 + rng.below(n);
+                    (0..m).map(|_| rng.below(n) as u32).collect()
+                })
+                .collect();
+            let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+                .map(|_| {
+                    let t = 1 + rng.below(70);
+                    (0..t).map(|_| rng.below(d) as u32).collect()
+                })
+                .collect();
+            for metric in [Metric::L2Sq, Metric::L1] {
+                let reqs: Vec<PullRequest> = (0..n_reqs)
+                    .map(|i| PullRequest {
+                        query: &queries[i],
+                        rows: &rowsets[i],
+                        coord_ids: &coordsets[i],
+                    })
+                    .collect();
+                let mut native = NativeEngine::default();
+                let (mut bs, mut bq) = (Vec::new(), Vec::new());
+                native.pull_batch(&ds, &reqs, metric, &mut bs, &mut bq);
+                let mut off = 0usize;
+                for i in 0..n_reqs {
+                    let (mut s, mut q) = (Vec::new(), Vec::new());
+                    let mut solo = NativeEngine::default();
+                    solo.partial_sums(&ds, &queries[i], &rowsets[i],
+                                      &coordsets[i], metric, &mut s,
+                                      &mut q);
+                    for (j, (&ss, &qq)) in s.iter().zip(&q).enumerate() {
+                        crate::prop_assert!(
+                            bs[off + j] == ss && bq[off + j] == qq,
+                            "req {i} row {j} {metric:?}: batch ({}, {}) \
+                             vs solo ({ss}, {qq})",
+                            bs[off + j], bq[off + j]
+                        );
+                    }
+                    off += s.len();
+                }
+                crate::prop_assert!(off == bs.len(),
+                                    "output length mismatch");
             }
             Ok(())
         });

@@ -28,7 +28,7 @@ pub struct PjrtRuntime {
 
 impl PjrtRuntime {
     pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
+        let manifest = Manifest::load(artifact_dir).map_err(|e| anyhow!(e))?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
         Ok(PjrtRuntime { client, manifest, compiled: HashMap::new() })
@@ -46,7 +46,7 @@ impl PjrtRuntime {
     pub fn executable(&mut self, name: &str)
                       -> Result<&xla::PjRtLoadedExecutable> {
         if !self.compiled.contains_key(name) {
-            let spec = self.manifest.get(name)?;
+            let spec = self.manifest.get(name).map_err(|e| anyhow!(e))?;
             let proto = xla::HloModuleProto::from_text_file(
                 spec.file.to_str().unwrap(),
             )
@@ -133,7 +133,7 @@ impl PjrtEngine {
     pub fn new(artifact_dir: &Path, metric: Metric) -> Result<Self> {
         let mut rt = PjrtRuntime::new(artifact_dir)?;
         let name = format!("pull_data_{}", metric.name());
-        let spec = rt.manifest.get(&name)?.clone();
+        let spec = rt.manifest.get(&name).map_err(|e| anyhow!(e))?.clone();
         let n_art = spec.meta_usize("n")
             .ok_or_else(|| anyhow!("artifact {name} missing meta n"))?;
         let d_art = spec.meta_usize("d")
@@ -328,7 +328,7 @@ impl PullEngine for PjrtEngine {
 pub fn verify_exact_artifact(rt: &mut PjrtRuntime, metric: Metric)
                              -> Result<f64> {
     let name = format!("exact_rows_{}", metric.name());
-    let spec = rt.manifest.get(&name)?.clone();
+    let spec = rt.manifest.get(&name).map_err(|e| anyhow!(e))?.clone();
     let b = spec.meta_usize("b").context("meta b")?;
     let d = spec.meta_usize("d").context("meta d")?;
     let mut rng = crate::util::rng::Rng::new(0xE7AC7);

@@ -1,0 +1,130 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off (the
+//! default in the offline crate set, which has neither the `xla` PJRT
+//! bindings nor `anyhow`).
+//!
+//! The stub mirrors the public API of the real `runtime::pjrt` module so
+//! that the CLI `selftest` subcommand, the integration tests, and
+//! `serve_queries --pjrt` all compile unchanged; every constructor returns
+//! an error explaining how to enable the real runtime. The [`PullEngine`]
+//! impl delegates to the scalar reference so the type remains usable in
+//! generic positions (it can never be constructed, so the delegation is
+//! unreachable in practice).
+
+use std::path::Path;
+
+use crate::coordinator::arms::{PullEngine, PullRequest, ScalarEngine};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::runtime::artifacts::Manifest;
+
+pub type Result<T> = std::result::Result<T, String>;
+
+const UNAVAILABLE: &str =
+    "bmonn was built without the `pjrt` feature; rebuild with \
+     `--features pjrt` in a workspace that vendors the `xla` and `anyhow` \
+     crates to run AOT JAX/Pallas artifacts";
+
+/// Stub counterpart of the compiled-artifact cache.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        // Validate the manifest anyway so error messages stay precise.
+        let _ = Manifest::load(artifact_dir)?;
+        Err(UNAVAILABLE.to_string())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature off)".to_string()
+    }
+}
+
+/// Stub counterpart of the artifact-backed pull engine.
+pub struct PjrtEngine {
+    /// telemetry (always 0 — the stub can never be constructed)
+    pub executions: u64,
+}
+
+impl PjrtEngine {
+    pub fn new(_artifact_dir: &Path, _metric: Metric) -> Result<Self> {
+        Err(UNAVAILABLE.to_string())
+    }
+
+    /// Mirrors the artifact T of the real engine's default bundle.
+    pub fn round_pulls(&self) -> u64 {
+        256
+    }
+
+    pub fn batch_arms(&self) -> usize {
+        64
+    }
+}
+
+impl PullEngine for PjrtEngine {
+    fn partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        ScalarEngine.partial_sums(data, query, rows, coord_ids, metric,
+                                  out_sum, out_sq);
+    }
+
+    fn exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+        out: &mut Vec<f64>,
+    ) {
+        ScalarEngine.exact_dists(data, query, rows, metric, out);
+    }
+
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        ScalarEngine.pull_batch(data, reqs, metric, out_sum, out_sq);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+/// Stub counterpart of the artifact self-check.
+pub fn verify_exact_artifact(_rt: &mut PjrtRuntime, _metric: Metric)
+                             -> Result<f64> {
+    Err(UNAVAILABLE.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_report_missing_feature() {
+        let e = PjrtEngine::new(Path::new("/nonexistent"), Metric::L2Sq)
+            .unwrap_err();
+        assert!(e.contains("pjrt"), "unexpected error: {e}");
+        // runtime: with no manifest present the manifest error wins
+        let e = PjrtRuntime::new(Path::new("/nonexistent")).unwrap_err();
+        assert!(e.contains("manifest") || e.contains("pjrt"),
+                "unexpected error: {e}");
+    }
+}

@@ -56,6 +56,26 @@ macro_rules! prop_assert {
     };
 }
 
+/// Equality assert producing `Result` (with Debug-printed operands) for
+/// use inside properties.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($left:expr, $right:expr, $($fmt:tt)+) => {{
+        let (l, r) = (&$left, &$right);
+        if l != r {
+            return Err(format!("{}: left {:?} != right {:?}",
+                               format!($($fmt)+), l, r));
+        }
+    }};
+    ($left:expr, $right:expr) => {{
+        let (l, r) = (&$left, &$right);
+        if l != r {
+            return Err(format!("{} != {}: left {:?} != right {:?}",
+                               stringify!($left), stringify!($right), l, r));
+        }
+    }};
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +95,23 @@ mod tests {
         check(64, |rng| {
             let x = rng.below(10);
             prop_assert!(x < 5, "x too big: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_assert_eq_passes_on_equal() {
+        check(1, |_rng| {
+            crate::prop_assert_eq!(2 + 2, 4);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "left 1")]
+    fn prop_assert_eq_reports_both_sides() {
+        check(1, |_rng| {
+            crate::prop_assert_eq!(1, 2, "mismatch");
             Ok(())
         });
     }

@@ -1,0 +1,145 @@
+//! Engine parity: `ScalarEngine` (the semantic reference) vs
+//! `NativeEngine` (unrolled f32 hot path) must agree within 1e-5
+//! relative error on pull estimates and exact distances, across both
+//! metrics, across the kernels' unroll/block boundaries, and through the
+//! new coalesced multi-query `pull_batch` path.
+
+use bmonn::coordinator::arms::{PullEngine, PullRequest, ScalarEngine};
+use bmonn::data::{synthetic, Metric};
+use bmonn::prop_assert;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::proptest;
+use bmonn::util::rng::Rng;
+
+const REL_TOL: f64 = 1e-5;
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_TOL * a.abs().max(b.abs()).max(1.0)
+}
+
+/// t values straddling the 4-way (l2) and 2-way (l1) unrolls and the
+/// larger pull sizes the batched policy issues.
+const PULL_SIZES: &[usize] = &[1, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33, 255,
+                               256];
+
+#[test]
+fn partial_sums_parity_across_block_boundaries() {
+    let d = 300;
+    let n = 12;
+    let ds = synthetic::gaussian_iid(n, d, 71);
+    let mut rng = Rng::new(72);
+    let query: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let rows: Vec<u32> = (0..n as u32).collect();
+    for &t in PULL_SIZES {
+        let coords: Vec<u32> =
+            (0..t).map(|_| rng.below(d) as u32).collect();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let mut scalar = ScalarEngine;
+            let mut native = NativeEngine::default();
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            let (mut s2, mut q2) = (Vec::new(), Vec::new());
+            scalar.partial_sums(&ds, &query, &rows, &coords, metric,
+                                &mut s1, &mut q1);
+            native.partial_sums(&ds, &query, &rows, &coords, metric,
+                                &mut s2, &mut q2);
+            for i in 0..n {
+                // compare per-pull estimates (sum/t), the quantity the
+                // bandit actually consumes
+                let td = t as f64;
+                assert!(close(s1[i] / td, s2[i] / td),
+                        "{metric:?} t={t} row {i} mean: {} vs {}",
+                        s1[i] / td, s2[i] / td);
+                assert!(close(q1[i] / td, q2[i] / td),
+                        "{metric:?} t={t} row {i} sq-mean: {} vs {}",
+                        q1[i] / td, q2[i] / td);
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_dists_parity_across_dims() {
+    // dims straddling the 8-way unroll of the exact kernels
+    for &d in &[1usize, 2, 7, 8, 9, 15, 16, 17, 63, 64, 65, 200, 256] {
+        let n = 6;
+        let ds = synthetic::gaussian_iid(n, d, 73 + d as u64);
+        let mut rng = Rng::new(74);
+        let query: Vec<f32> =
+            (0..d).map(|_| rng.gaussian() as f32).collect();
+        let rows: Vec<u32> = (0..n as u32).collect();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let mut e1 = Vec::new();
+            let mut e2 = Vec::new();
+            ScalarEngine.exact_dists(&ds, &query, &rows, metric, &mut e1);
+            NativeEngine::default().exact_dists(&ds, &query, &rows, metric,
+                                                &mut e2);
+            for i in 0..n {
+                assert!(close(e1[i], e2[i]),
+                        "{metric:?} d={d} row {i}: {} vs {}", e1[i], e2[i]);
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_query_pull_batch_parity() {
+    // the coalesced path: scalar's reference pull_batch (per-request
+    // partial_sums) vs native's row-major swept implementation
+    proptest::check(25, |rng| {
+        let n = 2 + rng.below(24);
+        let d = 4 + rng.below(200);
+        let ds = synthetic::gaussian_iid(n, d, rng.next_u64());
+        let n_reqs = 1 + rng.below(6);
+        let queries: Vec<Vec<f32>> = (0..n_reqs)
+            .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let rowsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|_| {
+                let m = 1 + rng.below(n);
+                (0..m).map(|_| rng.below(n) as u32).collect()
+            })
+            .collect();
+        let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|_| {
+                let t = PULL_SIZES[rng.below(PULL_SIZES.len())];
+                (0..t).map(|_| rng.below(d) as u32).collect()
+            })
+            .collect();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let reqs: Vec<PullRequest> = (0..n_reqs)
+                .map(|i| PullRequest {
+                    query: &queries[i],
+                    rows: &rowsets[i],
+                    coord_ids: &coordsets[i],
+                })
+                .collect();
+            let mut scalar = ScalarEngine;
+            let mut native = NativeEngine::default();
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            let (mut s2, mut q2) = (Vec::new(), Vec::new());
+            scalar.pull_batch(&ds, &reqs, metric, &mut s1, &mut q1);
+            native.pull_batch(&ds, &reqs, metric, &mut s2, &mut q2);
+            prop_assert!(s1.len() == s2.len() && q1.len() == q2.len(),
+                         "output shape mismatch");
+            let mut off = 0usize;
+            for (ri, r) in reqs.iter().enumerate() {
+                let t = r.coord_ids.len() as f64;
+                for j in 0..r.rows.len() {
+                    let i = off + j;
+                    prop_assert!(
+                        close(s1[i] / t, s2[i] / t),
+                        "{metric:?} req {ri} row {j} mean: {} vs {}",
+                        s1[i] / t, s2[i] / t
+                    );
+                    prop_assert!(
+                        close(q1[i] / t, q2[i] / t),
+                        "{metric:?} req {ri} row {j} sq-mean: {} vs {}",
+                        q1[i] / t, q2[i] / t
+                    );
+                }
+                off += r.rows.len();
+            }
+        }
+        Ok(())
+    });
+}

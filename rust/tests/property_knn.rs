@@ -1,0 +1,153 @@
+//! Property tests for the k-NN drivers (using the in-repo
+//! `util::proptest` harness):
+//!
+//! 1. Under exact pulls — a sigma bound so conservative that no
+//!    estimate-based confidence interval can ever separate arms — BMO-UCB
+//!    must exact-evaluate every contender, so its top-k equals brute
+//!    force deterministically, for random dense and sparse instances.
+//! 2. The batched multi-query driver is bitwise-identical (ids, dists,
+//!    unit counts) to the per-query path under the documented rng
+//!    contract (query `i` of a batch ≡ solo run under `rng.fork(i)`),
+//!    for batch size 1 and larger batches alike.
+
+use bmonn::baselines::exact;
+use bmonn::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
+use bmonn::coordinator::knn::{knn_batch_dense, knn_point_dense,
+                              knn_point_sparse, knn_query_dense, KnnResult};
+use bmonn::coordinator::arms::ScalarEngine;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::prop_assert_eq;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::util::proptest;
+use bmonn::util::rng::Rng;
+
+/// Parameters that force the exact-pull regime: the fixed sigma is so
+/// large that every estimate-based interval stays wider than any gap, so
+/// an arm can only be emitted once it (and its runner-up) have collapsed
+/// to exact means via the MAX_PULLS cap.
+fn exact_pull_params(k: usize) -> BanditParams {
+    BanditParams {
+        k,
+        delta: 0.01,
+        sigma: SigmaMode::Fixed(1e6),
+        epsilon: 0.0,
+        policy: PullPolicy { init_pulls: 4, round_arms: 8, round_pulls: 16 },
+    }
+}
+
+#[test]
+fn exact_pull_regime_equals_bruteforce_dense() {
+    proptest::check(10, |rng| {
+        let n = 8 + rng.below(32);
+        let d = 16 + rng.below(80);
+        let k = 1 + rng.below(3);
+        let ds = synthetic::gaussian_iid(n, d, rng.next_u64());
+        let truth = exact::knn_point(&ds, 0, k, Metric::L2Sq,
+                                     &mut Counter::new());
+        let mut engine = ScalarEngine;
+        let mut qrng = rng.fork(1);
+        let mut c = Counter::new();
+        let res = knn_point_dense(&ds, 0, Metric::L2Sq,
+                                  &exact_pull_params(k), &mut engine,
+                                  &mut qrng, &mut c);
+        // emission order is increasing θ, so this matches the sorted
+        // brute-force ids exactly (continuous data: no ties)
+        prop_assert_eq!(res.ids, truth.ids, "dense n={n} d={d} k={k}");
+        Ok(())
+    });
+}
+
+#[test]
+fn exact_pull_regime_equals_bruteforce_sparse() {
+    proptest::check(8, |rng| {
+        let n = 8 + rng.below(24);
+        let d = 60 + rng.below(100);
+        let ds = synthetic::rna_like(n, d, 0.2, rng.next_u64());
+        let truth = exact::knn_point_sparse(&ds, 0, 2, Metric::L1,
+                                            &mut Counter::new());
+        let mut params = exact_pull_params(2);
+        // sparse MAX_PULLS is |S_q|+|S_i|, often below the dense init —
+        // keep init within every arm's cap
+        params.policy.init_pulls = 1;
+        let mut qrng = rng.fork(1);
+        let mut c = Counter::new();
+        let res = knn_point_sparse(&ds, 0, Metric::L1, &params, &mut qrng,
+                                   &mut c);
+        prop_assert_eq!(res.ids, truth.ids, "sparse n={n} d={d}");
+        Ok(())
+    });
+}
+
+/// Solo answers under the batch driver's rng contract.
+fn solo_answers(ds: &bmonn::data::DenseDataset, queries: &[Vec<f32>],
+                params: &BanditParams, seed: u64)
+                -> (Vec<KnnResult>, u64) {
+    let mut base = Rng::new(seed);
+    let mut engine = NativeEngine::default();
+    let rngs: Vec<Rng> =
+        (0..queries.len()).map(|i| base.fork(i as u64)).collect();
+    let mut total = 0u64;
+    let res = queries
+        .iter()
+        .zip(rngs)
+        .map(|(q, mut r)| {
+            let mut c = Counter::new();
+            let out = knn_query_dense(ds, q, Metric::L2Sq, params,
+                                      &mut engine, &mut r, &mut c);
+            total += c.get();
+            out
+        })
+        .collect();
+    (res, total)
+}
+
+#[test]
+fn batch_matches_per_query_on_1k_by_256() {
+    // acceptance-criteria scale: fixed seed, 1000×256 synthetic dataset —
+    // the batch driver must return the same neighbor ids as per-query
+    // knn_query_dense (it is in fact bitwise-identical, which is stronger
+    // than set equality)
+    let ds = synthetic::image_like(1000, 256, 77);
+    let queries: Vec<Vec<f32>> =
+        (0..16).map(|i| ds.row_vec((i * 61) % 1000)).collect();
+    let params = BanditParams { k: 5, ..Default::default() };
+    let (solo, _) = solo_answers(&ds, &queries, &params, 78);
+    let mut base = Rng::new(78);
+    let mut engine = NativeEngine::default();
+    let mut c = Counter::new();
+    let batch = knn_batch_dense(&ds, &queries, Metric::L2Sq, &params,
+                                &mut engine, &mut base, &mut c);
+    for (i, (s, b)) in solo.iter().zip(&batch).enumerate() {
+        assert_eq!(s.ids, b.ids, "query {i}");
+    }
+}
+
+#[test]
+fn batch_driver_bitwise_identical_to_per_query() {
+    for &(nq, seed) in &[(1usize, 51u64), (4, 52), (9, 53)] {
+        let ds = synthetic::image_like(80, 128, seed);
+        let queries: Vec<Vec<f32>> =
+            (0..nq).map(|i| ds.row_vec((i * 7) % 80)).collect();
+        let params = BanditParams { k: 3, ..Default::default() };
+        let (solo, solo_units) = solo_answers(&ds, &queries, &params, seed);
+        let mut base = Rng::new(seed);
+        let mut engine = NativeEngine::default();
+        let mut c = Counter::new();
+        let batch = knn_batch_dense(&ds, &queries, Metric::L2Sq, &params,
+                                    &mut engine, &mut base, &mut c);
+        assert_eq!(batch.len(), nq);
+        for (i, (s, b)) in solo.iter().zip(&batch).enumerate() {
+            assert_eq!(s.ids, b.ids, "ids diverged (nq={nq}, query {i})");
+            // f64 equality on purpose: the coalesced engine pass must be
+            // bit-identical, not merely close
+            assert_eq!(s.dists, b.dists,
+                       "dists diverged (nq={nq}, query {i})");
+            assert_eq!(s.metrics.dist_computations,
+                       b.metrics.dist_computations,
+                       "unit accounting diverged (nq={nq}, query {i})");
+        }
+        assert_eq!(solo_units, c.get(),
+                   "shared counter diverged (nq={nq})");
+    }
+}

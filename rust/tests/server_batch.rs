@@ -1,0 +1,118 @@
+//! Worker-pool server integration: the batched serving path under real
+//! concurrent load — protocol round-trips from many simultaneous
+//! connections, the malformed-input error path, and aggregate `stats`
+//! consistency with per-response accounting.
+
+use bmonn::coordinator::server::{Client, Server, ServerConfig};
+use bmonn::data::synthetic;
+use bmonn::util::json::Json;
+
+fn stats(cl: &mut Client) -> Json {
+    cl.request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+        .unwrap()
+}
+
+#[test]
+fn worker_pool_under_concurrent_load() {
+    let ds = synthetic::image_like(120, 96, 41);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 3,
+        batch_size: 4,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let addr = srv.addr;
+    let n_clients = 10usize;
+    let per_client = 5usize;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|ci| {
+            let qs: Vec<(usize, Vec<f32>)> = (0..per_client)
+                .map(|j| {
+                    let r = (ci * 7 + j * 11) % 120;
+                    (r, ds.row_vec(r))
+                })
+                .collect();
+            std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                // ping round-trip on every connection
+                let pong = cl
+                    .request(&Json::obj(vec![(
+                        "op",
+                        Json::Str("ping".into()),
+                    )]))
+                    .unwrap();
+                assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+                let mut units = 0u64;
+                for (r, q) in qs {
+                    let (ids, dists, u) = cl.knn(&q, 3).unwrap();
+                    assert_eq!(ids.len(), 3);
+                    assert_eq!(ids[0] as usize, r,
+                               "self row must be its own 1-NN");
+                    assert!(u > 0, "response must carry its unit cost");
+                    for w in dists.windows(2) {
+                        assert!(w[0] <= w[1] + 1e-6, "dists not sorted");
+                    }
+                    units += u;
+                }
+                units
+            })
+        })
+        .collect();
+    let client_units: u64 =
+        handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let total = (n_clients * per_client) as u64;
+    assert_eq!(srv.total_queries(), total);
+    // aggregate unit total must equal the sum of per-response units
+    assert_eq!(srv.total_units(), client_units);
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    let st = stats(&mut cl);
+    assert_eq!(st.get("queries").unwrap().as_usize(),
+               Some(total as usize));
+    assert_eq!(st.get("units").unwrap().as_f64().unwrap() as u64,
+               client_units);
+    // batching actually happened and the accounting is self-consistent
+    let batches = st.get("batches").unwrap().as_f64().unwrap();
+    let mean_batch = st.get("mean_batch").unwrap().as_f64().unwrap();
+    let max_batch = st.get("max_batch").unwrap().as_f64().unwrap();
+    assert!(batches >= 1.0 && batches <= total as f64);
+    assert!((mean_batch * batches - total as f64).abs() < 1e-6,
+            "mean_batch * batches must equal queries");
+    assert!((1.0..=4.0).contains(&max_batch),
+            "max batch bounded by batch_size");
+    assert!(st.get("batch_p99_us").and_then(|v| v.as_f64()).is_some(),
+            "per-batch latency must be reported");
+    srv.stop();
+}
+
+#[test]
+fn malformed_json_and_protocol_roundtrips() {
+    let ds = synthetic::image_like(40, 32, 43);
+    let q = ds.row_vec(3);
+    let mut srv = Server::start(
+        ds,
+        ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    // malformed JSON gets an error response, not a dropped connection
+    let bad = cl.send_raw("{\"op\": \"knn\", oops}").unwrap();
+    assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+    assert!(bad.get("error").unwrap().as_str().unwrap()
+        .contains("bad json"));
+    // the same connection still serves valid traffic afterwards
+    let (ids, _, _) = cl.knn(&q, 1).unwrap();
+    assert_eq!(ids[0], 3);
+    // unknown op
+    let unk = cl
+        .request(&Json::obj(vec![("op", Json::Str("nope".into()))]))
+        .unwrap();
+    assert_eq!(unk.get("ok"), Some(&Json::Bool(false)));
+    // shutdown round-trip: acked, then the server winds down cleanly
+    let ack = cl
+        .request(&Json::obj(vec![("op", Json::Str("shutdown".into()))]))
+        .unwrap();
+    assert_eq!(ack.get("ok"), Some(&Json::Bool(true)));
+    srv.stop();
+    assert_eq!(srv.total_queries(), 1);
+}
