@@ -7,7 +7,11 @@ use bmonn::bench_harness::figures;
 
 fn main() {
     let quick = std::env::var_os("BMONN_FULL").is_none();
+    let shards = std::env::var("BMONN_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
     let seed = 42;
-    println!("{}", figures::fig3a(quick, seed).render());
-    println!("{}", figures::fig3b(quick, seed).render());
+    println!("{}", figures::fig3a(quick, seed, shards).render());
+    println!("{}", figures::fig3b(quick, seed, shards).render());
 }

@@ -9,6 +9,7 @@ use crate::baselines::graph_search::{AnngIndex, AnngParams};
 use crate::baselines::nndescent::{NnDescentIndex, NnDescentParams};
 use crate::baselines::{exact, uniform};
 use crate::bench_harness::{fmt_f, fmt_gain, set_accuracy, Report};
+use crate::config::EngineKind;
 use crate::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
 use crate::coordinator::kmeans::{kmeans_bmo, kmeans_exact, KMeansParams};
 use crate::coordinator::knn::{knn_batch_points_dense, knn_batch_sparse,
@@ -62,10 +63,14 @@ fn make_workload(n: usize, d: usize, k: usize, n_queries: usize, seed: u64)
     }
 }
 
-fn run_bmo(w: &Workload, seed: u64) -> AlgoStats {
+fn run_bmo(w: &Workload, seed: u64, shards: usize) -> AlgoStats {
     // the whole query set runs through the batched multi-query driver —
-    // the same coalesced path the server uses
-    let mut engine = NativeEngine::default();
+    // the same coalesced path the server uses; shards > 1 additionally
+    // fans each round's pull wave across a row-sharded worker pool
+    // (answers are bitwise-independent of the shard count)
+    let mut engine =
+        crate::runtime::build_host_engine(EngineKind::Native, shards)
+            .expect("native host engine");
     let mut rng = Rng::new(seed);
     let mut c = Counter::new();
     let params = bmo_params(w.k);
@@ -143,7 +148,7 @@ fn gain_row(label: String, w: &Workload, stats: &AlgoStats) -> Vec<String> {
 }
 
 /// Fig 3(a): gain vs number of points n (d fixed).
-pub fn fig3a(quick: bool, seed: u64) -> Report {
+pub fn fig3a(quick: bool, seed: u64, shards: usize) -> Report {
     let (d, k, nq) = if quick { (512, 5, 8) } else { (2048, 5, 16) };
     let ns: &[usize] = if quick { &[200, 400, 800] }
                        else { &[500, 1000, 2000, 4000] };
@@ -153,7 +158,7 @@ pub fn fig3a(quick: bool, seed: u64) -> Report {
     for &n in ns {
         let w = make_workload(n, d, k, nq, seed);
         for (name, stats) in [
-            ("BMO-NN", run_bmo(&w, seed + 1)),
+            ("BMO-NN", run_bmo(&w, seed + 1, shards)),
             ("LSH", run_lsh(&w, seed + 2)),
             ("kGraph", run_kgraph(&w, seed + 3)),
             ("NGT", run_ngt(&w, seed + 4)),
@@ -168,7 +173,7 @@ pub fn fig3a(quick: bool, seed: u64) -> Report {
 }
 
 /// Fig 2 / Fig 3(b): gain vs dimension d (n fixed).
-pub fn fig3b(quick: bool, seed: u64) -> Report {
+pub fn fig3b(quick: bool, seed: u64, shards: usize) -> Report {
     let (n, k, nq) = if quick { (400, 5, 8) } else { (2000, 5, 16) };
     let ds: &[usize] = if quick { &[128, 256, 512, 1024] }
                        else { &[256, 512, 1024, 2048, 4096] };
@@ -178,7 +183,7 @@ pub fn fig3b(quick: bool, seed: u64) -> Report {
     for &d in ds {
         let w = make_workload(n, d, k, nq, seed);
         for (name, stats) in [
-            ("BMO-NN", run_bmo(&w, seed + 1)),
+            ("BMO-NN", run_bmo(&w, seed + 1, shards)),
             ("LSH", run_lsh(&w, seed + 2)),
             ("kGraph", run_kgraph(&w, seed + 3)),
             ("NGT", run_ngt(&w, seed + 4)),
@@ -194,11 +199,11 @@ pub fn fig3b(quick: bool, seed: u64) -> Report {
 }
 
 /// Fig 4(a): non-adaptive sampling accuracy at multiples of BMO's budget.
-pub fn fig4a(quick: bool, seed: u64) -> Report {
+pub fn fig4a(quick: bool, seed: u64, shards: usize) -> Report {
     let (n, d, k, nq) = if quick { (300, 512, 1, 10) }
                         else { (1000, 2048, 1, 20) };
     let w = make_workload(n, d, k, nq, seed);
-    let bmo = run_bmo(&w, seed + 1);
+    let bmo = run_bmo(&w, seed + 1, shards);
     let bmo_acc = set_accuracy(&bmo.answers, &w.truth);
     let mut rep = Report::new(
         "Fig 4(a): non-adaptive uniform sampling at x times BMO's budget",
@@ -543,13 +548,15 @@ pub fn thm1(quick: bool, seed: u64) -> Report {
     rep
 }
 
-/// Dispatch by name (CLI `bmonn bench <name>`).
-pub fn run_figure(name: &str, quick: bool, seed: u64)
+/// Dispatch by name (CLI `bmonn bench <name>`). `shards` fans the BMO
+/// runners' pull waves across a row-sharded pool (gain/accuracy numbers
+/// are shard-count-independent; only wall clock changes).
+pub fn run_figure(name: &str, quick: bool, seed: u64, shards: usize)
                   -> Result<Report, String> {
     Ok(match name {
-        "fig3a" => fig3a(quick, seed),
-        "fig2" | "fig3b" => fig3b(quick, seed),
-        "fig4a" => fig4a(quick, seed),
+        "fig3a" => fig3a(quick, seed, shards),
+        "fig2" | "fig3b" => fig3b(quick, seed, shards),
+        "fig4a" => fig4a(quick, seed, shards),
         "fig4b" => fig4b(quick, seed),
         "fig4c" => fig4c(quick, seed),
         "fig5" => fig5(quick, seed),
@@ -559,7 +566,8 @@ pub fn run_figure(name: &str, quick: bool, seed: u64)
         "thm1" => thm1(quick, seed),
         _ => return Err(format!(
             "unknown figure '{name}' (try fig3a fig3b fig4a fig4b fig4c \
-             fig5 fig7 prop1 cor1 thm1; fig6 is `cargo bench --bench \
+             fig5 fig7 prop1 cor1 thm1; `bench pull` is the sharded \
+             pull-throughput baseline; fig6 is `cargo bench --bench \
              fig6_wallclock`)")),
     })
 }
@@ -581,7 +589,7 @@ mod tests {
 
     #[test]
     fn fig3b_quick_bmo_beats_exact_and_wins_overall() {
-        let rep = fig3b(true, 7);
+        let rep = fig3b(true, 7, 1);
         // find BMO rows; gain should exceed 1x at the largest d
         let bmo_rows: Vec<&Vec<String>> = rep
             .rows
@@ -598,7 +606,9 @@ mod tests {
 
     #[test]
     fn fig4a_quick_shows_adaptivity_gap() {
-        let rep = fig4a(true, 11);
+        // 2 shards: free end-to-end coverage of the sharded engine (the
+        // report is bitwise-independent of the shard count)
+        let rep = fig4a(true, 11, 2);
         let bmo_acc: f64 = rep.rows[0][2].parse().unwrap();
         let uni_1x: f64 = rep.rows[1][2].parse().unwrap();
         assert!(bmo_acc > uni_1x,
@@ -628,8 +638,8 @@ mod tests {
 
     #[test]
     fn run_figure_dispatch() {
-        assert!(run_figure("nope", true, 0).is_err());
-        let r = run_figure("fig7", true, 0).unwrap();
+        assert!(run_figure("nope", true, 0, 1).is_err());
+        let r = run_figure("fig7", true, 0, 1).unwrap();
         assert!(!r.rows.is_empty());
     }
 }

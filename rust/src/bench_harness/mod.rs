@@ -6,6 +6,7 @@
 //! `cargo bench` targets; `quick=true` shrinks the workloads for CI.
 
 pub mod figures;
+pub mod pull_bench;
 
 /// A printable experiment result (one table or figure series).
 #[derive(Clone, Debug)]

@@ -1,0 +1,296 @@
+//! `bmonn bench pull` — the tracked pull-phase throughput baseline.
+//!
+//! Runs the 1k×256 batched multi-query workload (the server's execution
+//! path: many bandits in lockstep, one coalesced `pull_batch` sweep per
+//! round) plus a single-query latency sweep, on 1/2/4 shards, and emits
+//! the numbers as JSON for `BENCH_pull.json` so the perf trajectory has
+//! data points that survive across PRs:
+//!
+//! * `pull_rows_per_s` — (row, query) jobs resolved per second inside
+//!   `PullEngine::pull_batch` only (the parallelized hot phase);
+//! * `wall_per_round_us` — mean wall clock of one coalesced round;
+//! * `solo_p50_us` / `solo_p99_us` — per-query wall time of the
+//!   single-query sweep (dominated by small waves, so largely
+//!   shard-count-insensitive — that contrast is the point of tracking
+//!   both).
+//!
+//! Answers are asserted identical across shard counts before any number
+//! is reported: a throughput figure from a diverging engine is a bug,
+//! not a data point. `smoke` shrinks the workload to a seconds-long CI
+//! check.
+
+use std::time::{Duration, Instant};
+
+use crate::bench_harness::{fmt_f, Report};
+use crate::config::EngineKind;
+use crate::coordinator::arms::{PullEngine, PullRequest};
+use crate::coordinator::bandit::BanditParams;
+use crate::coordinator::knn::{knn_batch_points_dense, knn_point_dense};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::data::synthetic;
+use crate::metrics::{Counter, LatencyStats};
+use crate::runtime::build_host_engine;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Shard counts the baseline sweeps; the acceptance tracking compares
+/// the last entry against the first.
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Forwarding engine that clocks `pull_batch` calls — the coalesced pull
+/// phase — without touching their results.
+struct TimingEngine<E> {
+    inner: E,
+    pull_wall: Duration,
+    pull_calls: u64,
+    /// (row, query) jobs resolved across all pull_batch calls
+    pull_jobs: u64,
+}
+
+impl<E: PullEngine> TimingEngine<E> {
+    fn new(inner: E) -> TimingEngine<E> {
+        TimingEngine {
+            inner,
+            pull_wall: Duration::ZERO,
+            pull_calls: 0,
+            pull_jobs: 0,
+        }
+    }
+}
+
+impl<E: PullEngine> PullEngine for TimingEngine<E> {
+    fn partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        self.inner.partial_sums(data, query, rows, coord_ids, metric,
+                                out_sum, out_sq)
+    }
+
+    fn exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+        out: &mut Vec<f64>,
+    ) {
+        self.inner.exact_dists(data, query, rows, metric, out)
+    }
+
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        let jobs: u64 = reqs.iter().map(|r| r.rows.len() as u64).sum();
+        let t0 = Instant::now();
+        self.inner.pull_batch(data, reqs, metric, out_sum, out_sq);
+        self.pull_wall += t0.elapsed();
+        self.pull_calls += 1;
+        self.pull_jobs += jobs;
+    }
+
+    fn name(&self) -> &'static str {
+        "timing"
+    }
+}
+
+/// Per-shard-count measurement row.
+struct ShardRun {
+    shards: usize,
+    rows_per_s: f64,
+    wall_per_round_us: f64,
+    rounds: u64,
+    jobs: u64,
+    batch_wall_ms: f64,
+    solo_p50_us: f64,
+    solo_p99_us: f64,
+}
+
+/// Run the baseline; returns the printable table plus the JSON document
+/// written to `BENCH_pull.json`.
+pub fn run_pull_bench(smoke: bool, seed: u64)
+                      -> Result<(Report, Json), String> {
+    let (n, d, batch, solo_q, reps) =
+        if smoke { (256, 64, 16, 4, 2) } else { (1000, 256, 64, 32, 5) };
+    let data = synthetic::image_like(n, d, seed);
+    let points: Vec<usize> = (0..batch).map(|i| i % n).collect();
+    let solo_points: Vec<usize> =
+        (0..solo_q).map(|i| (i * 7) % n).collect();
+    // round_pulls below MAX_PULLS-after-init so the run issues several
+    // coalesced uniform waves per query instead of going straight from
+    // the init wave to capped/ragged pulls — this is the phase the
+    // baseline exists to track
+    let mut params = BanditParams { k: 5, ..Default::default() };
+    params.policy.round_pulls = 64;
+    let mut runs: Vec<ShardRun> = Vec::new();
+    let mut baseline_answers: Option<Vec<Vec<u32>>> = None;
+    for &shards in &SHARD_COUNTS {
+        // --- batched multi-query workload (the server's path), timed
+        // over `reps` identical repetitions for a steadier pull clock ---
+        let inner = build_host_engine(EngineKind::Native, shards)?;
+        let mut engine = TimingEngine::new(inner);
+        let mut batch_wall = Duration::ZERO;
+        let mut answers: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..reps {
+            let mut rng = Rng::new(seed + 1);
+            let mut counter = Counter::new();
+            let t0 = Instant::now();
+            let results = knn_batch_points_dense(&data, &points,
+                                                 Metric::L2Sq, &params,
+                                                 &mut engine, &mut rng,
+                                                 &mut counter);
+            batch_wall += t0.elapsed();
+            answers = results.into_iter().map(|r| r.ids).collect();
+        }
+        match &baseline_answers {
+            None => baseline_answers = Some(answers),
+            Some(base) => {
+                if *base != answers {
+                    return Err(format!(
+                        "sharded answers diverged at {shards} shards — \
+                         refusing to report throughput for a broken \
+                         engine"));
+                }
+            }
+        }
+        let pull_secs = engine.pull_wall.as_secs_f64().max(1e-9);
+        let rows_per_s = engine.pull_jobs as f64 / pull_secs;
+        let wall_per_round_us = if engine.pull_calls > 0 {
+            engine.pull_wall.as_secs_f64() * 1e6
+                / engine.pull_calls as f64
+        } else {
+            0.0
+        };
+        // --- single-query sweep (per-query latency) -------------------
+        let mut solo_engine = build_host_engine(EngineKind::Native,
+                                                shards)?;
+        let mut lat = LatencyStats::default();
+        for (i, &q) in solo_points.iter().enumerate() {
+            let mut qrng = Rng::new(seed + 100 + i as u64);
+            let mut c = Counter::new();
+            let t = Instant::now();
+            let _ = knn_point_dense(&data, q, Metric::L2Sq, &params,
+                                    &mut solo_engine, &mut qrng, &mut c);
+            lat.record(t.elapsed());
+        }
+        runs.push(ShardRun {
+            shards,
+            rows_per_s,
+            wall_per_round_us,
+            rounds: engine.pull_calls,
+            jobs: engine.pull_jobs,
+            batch_wall_ms: batch_wall.as_secs_f64() * 1e3,
+            solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+            solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        });
+    }
+    let speedup = runs.last().unwrap().rows_per_s
+        / runs.first().unwrap().rows_per_s.max(1e-9);
+    let mut rep = Report::new(
+        "bench pull: sharded pull-phase throughput baseline \
+         (BENCH_pull.json)",
+        &["shards", "pull rows/s", "wall/round us", "rounds",
+          "batch wall ms", "solo p50 us", "solo p99 us"]);
+    for r in &runs {
+        rep.row(vec![
+            r.shards.to_string(),
+            format!("{:.0}", r.rows_per_s),
+            fmt_f(r.wall_per_round_us, 1),
+            r.rounds.to_string(),
+            fmt_f(r.batch_wall_ms, 1),
+            fmt_f(r.solo_p50_us, 0),
+            fmt_f(r.solo_p99_us, 0),
+        ]);
+    }
+    rep.note(&format!(
+        "workload: n={n} d={d}, {batch} batched queries x{reps} reps + \
+         {solo_q} solo queries; pull-phase speedup at {} shards vs 1: \
+         {speedup:.2}x",
+        SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
+    let shard_objs: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("shards", Json::Num(r.shards as f64)),
+                ("pull_rows_per_s", Json::Num(r.rows_per_s)),
+                ("wall_per_round_us", Json::Num(r.wall_per_round_us)),
+                ("pull_rounds", Json::Num(r.rounds as f64)),
+                ("pull_jobs", Json::Num(r.jobs as f64)),
+                ("batch_wall_ms", Json::Num(r.batch_wall_ms)),
+                ("solo_p50_us", Json::Num(r.solo_p50_us)),
+                ("solo_p99_us", Json::Num(r.solo_p99_us)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("workload", Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(d as f64)),
+            ("batch_queries", Json::Num(batch as f64)),
+            ("batch_reps", Json::Num(reps as f64)),
+            ("solo_queries", Json::Num(solo_q as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("seed", Json::Num(seed as f64)),
+        ])),
+        ("shards", Json::Arr(shard_objs)),
+        ("speedup_pull_max_vs_1", Json::Num(speedup)),
+    ]);
+    Ok((rep, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_reports_consistent_nonzero_numbers() {
+        let (rep, json) = run_pull_bench(true, 7).unwrap();
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len());
+        let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(shards.len(), SHARD_COUNTS.len());
+        for s in shards {
+            let rps = s.get("pull_rows_per_s")
+                .and_then(|v| v.as_f64())
+                .unwrap();
+            assert!(rps > 0.0 && rps.is_finite(), "rows/s {rps}");
+            assert!(s.get("pull_rounds").and_then(|v| v.as_f64()).unwrap()
+                    > 0.0);
+        }
+        // round-trips through the parser (what the CI step asserts)
+        let text = json.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(parsed.get("speedup_pull_max_vs_1").is_some());
+    }
+
+    #[test]
+    fn timing_engine_is_transparent() {
+        use crate::runtime::native::NativeEngine;
+        let ds = synthetic::gaussian_iid(8, 32, 3);
+        let q = ds.row_vec(0);
+        let rows: Vec<u32> = (1..8).collect();
+        let coords: Vec<u32> = vec![0, 5, 9, 13, 30];
+        let req = PullRequest { query: &q, rows: &rows,
+                                coord_ids: &coords };
+        let mut timed = TimingEngine::new(NativeEngine::default());
+        let mut plain = NativeEngine::default();
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        let (mut s2, mut q2) = (Vec::new(), Vec::new());
+        timed.pull_batch(&ds, &[req], Metric::L2Sq, &mut s1, &mut q1);
+        plain.pull_batch(&ds, &[req], Metric::L2Sq, &mut s2, &mut q2);
+        assert_eq!(s1, s2);
+        assert_eq!(q1, q2);
+        assert_eq!(timed.pull_calls, 1);
+        assert_eq!(timed.pull_jobs, 7);
+    }
+}

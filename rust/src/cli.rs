@@ -98,18 +98,28 @@ SUBCOMMANDS
            [--seed S] [--density F] [--alpha A]
   knn      --data FILE [--query-idx I] [--k K] [--batch B] [--algo bmo|
            exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
-           native|scalar|pjrt] [--epsilon E] [--delta D] [--seed S]
+           native|scalar|pjrt] [--shards S] [--epsilon E] [--delta D]
+           [--seed S]
            (--batch B > 1 answers B consecutive query points through the
-           coalesced multi-query driver, bmo only)
-  graph    --data FILE [--k K] [--metric l2|l1] [--seed S]
+           coalesced multi-query driver, bmo only; --shards S > 1 fans
+           each pull wave across S contiguous row shards on a worker
+           pool — results are bitwise-identical to --shards 1)
+  graph    --data FILE [--k K] [--metric l2|l1] [--shards S] [--seed S]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
-  serve    --data FILE [--addr HOST:PORT] [--config FILE]
-  bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1>
-           [--quick] [--seed S] [--out FILE]
+  serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
+  bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1|pull>
+           [--quick] [--seed S] [--out FILE] [--shards S]
+           (--shards fans the figure benches' BMO runs out across S row
+           shards; pull rejects it — it is the tracked pull-phase
+           throughput baseline, always sweeping a fixed 1/2/4 shard
+           ladder over the 1k x 256 batched workload plus a single-query
+           sweep, overwriting --out [default BENCH_pull.json] with
+           rows/s, wall per round and per-query p50/p99; --smoke shrinks
+           it to a seconds-long CI check)
   selftest [--artifacts DIR]
 
-Common flags: --config FILE (TOML), --set section.key=value (repeatable
-via comma list), --seed N.
+Common flags: --config FILE (TOML; [engine] kind/shards pick the pull
+engine), --set section.key=value (repeatable via comma list), --seed N.
 ";
 
 #[cfg(test)]

@@ -128,6 +128,11 @@ pub struct BmonnConfig {
     pub sigma: SigmaMode,
     pub policy: PullPolicy,
     pub engine: EngineKind,
+    /// contiguous dataset-row shards the host engine fans pull waves
+    /// across (`[engine] shards` / `--shards S`); 1 = single-threaded.
+    /// Sharded execution is bitwise-identical to single-threaded for any
+    /// value — it only changes which core computes each row.
+    pub shards: usize,
     pub artifact_dir: String,
     pub seed: u64,
     pub server_addr: String,
@@ -147,6 +152,7 @@ impl Default for BmonnConfig {
             sigma: SigmaMode::Empirical,
             policy: PullPolicy::batched(),
             engine: EngineKind::Native,
+            shards: 1,
             artifact_dir: "artifacts".into(),
             seed: 42,
             server_addr: "127.0.0.1:7878".into(),
@@ -192,6 +198,9 @@ impl BmonnConfig {
             cfg.engine = EngineKind::parse(e)
                 .ok_or_else(|| format!("bad engine '{e}'"))?;
         }
+        if let Some(s) = raw.get_usize("engine.shards")? {
+            cfg.shards = s.max(1);
+        }
         if let Some(a) = raw.get("engine.artifact_dir") {
             cfg.artifact_dir = a.to_string();
         }
@@ -234,7 +243,8 @@ mod tests {
              delta = 0.01  # inline comment\n\
              metric = \"l1\"\n\
              [engine]\n\
-             kind = native\n",
+             kind = native\n\
+             shards = 4\n",
         )
         .unwrap();
         assert_eq!(raw.get("bandit.k"), Some("5"));
@@ -243,6 +253,14 @@ mod tests {
         assert_eq!(cfg.k, 5);
         assert_eq!(cfg.metric, Metric::L1);
         assert_eq!(cfg.engine, EngineKind::Native);
+        assert_eq!(cfg.shards, 4);
+    }
+
+    #[test]
+    fn shards_clamps_to_one() {
+        let raw = RawConfig::parse("[engine]\nshards = 0\n").unwrap();
+        assert_eq!(BmonnConfig::from_raw(&raw).unwrap().shards, 1);
+        assert_eq!(BmonnConfig::default().shards, 1);
     }
 
     #[test]

@@ -96,6 +96,53 @@ pub trait PullEngine {
     fn name(&self) -> &'static str;
 }
 
+/// Forwarding impl so a boxed engine (e.g. from
+/// `runtime::build_host_engine`, which picks scalar/native/sharded from
+/// config) can drive the generic knn/batch drivers directly. Each call
+/// dynamically dispatches to the inner engine's own implementation —
+/// including its `pull_batch` override.
+impl PullEngine for Box<dyn PullEngine + Send> {
+    fn partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        (**self).partial_sums(data, query, rows, coord_ids, metric,
+                              out_sum, out_sq)
+    }
+
+    fn exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+        out: &mut Vec<f64>,
+    ) {
+        (**self).exact_dists(data, query, rows, metric, out)
+    }
+
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        (**self).pull_batch(data, reqs, metric, out_sum, out_sq)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
 /// Straightforward scalar loops — the semantic reference for every other
 /// engine (runtime parity tests compare against this).
 #[derive(Default, Clone, Debug)]

@@ -15,6 +15,12 @@
 //!   bitwise-identical to the per-query path under that same stream, for
 //!   any batch size (the equivalence is pinned by `tests/property_knn`).
 //!   The query server and graph construction both run on this driver.
+//!
+//! Both modes are generic over the [`PullEngine`], so the same drivers
+//! run single-threaded (`NativeEngine`/`ScalarEngine`), multi-core
+//! (`runtime::sharded::ShardedEngine`, selected via `[engine] shards` /
+//! `--shards` — per-wave row-sharding that is bitwise-identical to
+//! single-threaded execution), or on the PJRT artifact path.
 
 use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine, PullRequest,
                                SparseArms};

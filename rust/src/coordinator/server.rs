@@ -37,12 +37,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::coordinator::arms::ScalarEngine;
+use crate::config::EngineKind;
 use crate::coordinator::bandit::BanditParams;
 use crate::coordinator::knn::knn_batch_dense;
 use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{BatchStats, Counter, LatencyStats};
-use crate::runtime::native::NativeEngine;
+use crate::runtime::build_host_engine;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -57,6 +57,9 @@ pub struct ServerConfig {
     pub batch_size: usize,
     /// use the optimized native engine (true) or the scalar reference
     pub native_engine: bool,
+    /// row shards each worker's engine fans pull waves across (1 =
+    /// single-threaded per worker; results are identical either way)
+    pub shards: usize,
 }
 
 impl Default for ServerConfig {
@@ -68,6 +71,7 @@ impl Default for ServerConfig {
             n_workers: 4,
             batch_size: 8,
             native_engine: true,
+            shards: 1,
         }
     }
 }
@@ -169,8 +173,13 @@ impl Drop for Server {
 /// wave with one batched multi-query bandit pass, publish responses.
 fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
     let mut rng = Rng::new(0xBA7C4_ED ^ worker_id);
-    let mut scalar = ScalarEngine;
-    let mut native = NativeEngine::default();
+    let kind = if shared.config.native_engine {
+        EngineKind::Native
+    } else {
+        EngineKind::Scalar
+    };
+    let mut engine = build_host_engine(kind, shared.config.shards)
+        .expect("host engine construction is infallible for scalar/native");
     loop {
         let jobs: Vec<Job> = {
             let mut q = shared.queue.lock().unwrap();
@@ -207,14 +216,30 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
             let mut params = shared.config.params.clone();
             params.k = k;
             let mut counter = Counter::new();
-            let results = if shared.config.native_engine {
-                knn_batch_dense(&shared.data, &queries,
-                                shared.config.metric, &params, &mut native,
-                                &mut rng, &mut counter)
-            } else {
-                knn_batch_dense(&shared.data, &queries,
-                                shared.config.metric, &params, &mut scalar,
-                                &mut rng, &mut counter)
+            // a panic in the compute path must not kill this shared
+            // worker: the drained jobs' waiters would hang forever and
+            // the pool would be permanently down a thread — catch it,
+            // answer the affected queries with an error, and rebuild the
+            // engine (its internals may be poisoned mid-wave)
+            let outcome = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    knn_batch_dense(&shared.data, &queries,
+                                    shared.config.metric, &params,
+                                    &mut engine, &mut rng, &mut counter)
+                }));
+            let results = match outcome {
+                Ok(results) => results,
+                Err(_) => {
+                    for &i in &idxs {
+                        responses[i] =
+                            Some(err_json("internal error: compute \
+                                           panicked"));
+                    }
+                    engine = build_host_engine(kind, shared.config.shards)
+                        .expect("host engine construction is infallible \
+                                 for scalar/native");
+                    continue;
+                }
             };
             for (&i, res) in idxs.iter().zip(&results) {
                 let units = res.metrics.dist_computations;

@@ -4,7 +4,7 @@ use std::path::Path;
 use std::process::ExitCode;
 
 use bmonn::baselines::{exact, uniform};
-use bmonn::bench_harness::figures;
+use bmonn::bench_harness::{figures, pull_bench};
 use bmonn::cli::{Args, USAGE};
 use bmonn::config::{BmonnConfig, EngineKind, RawConfig};
 use bmonn::coordinator::kmeans::{kmeans_bmo, kmeans_exact, KMeansParams};
@@ -14,6 +14,7 @@ use bmonn::coordinator::server::{Server, ServerConfig};
 use bmonn::data::dense::Metric;
 use bmonn::data::{loader, synthetic};
 use bmonn::metrics::Counter;
+use bmonn::runtime::build_host_engine;
 use bmonn::runtime::native::NativeEngine;
 use bmonn::runtime::pjrt::{verify_exact_artifact, PjrtEngine, PjrtRuntime};
 use bmonn::util::rng::Rng;
@@ -55,6 +56,7 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
         cfg.engine =
             EngineKind::parse(e).ok_or(format!("bad --engine {e}"))?;
     }
+    cfg.shards = args.flag_usize("shards", cfg.shards)?.max(1);
     if let Some(a) = args.flag("artifacts") {
         cfg.artifact_dir = a.to_string();
     }
@@ -159,17 +161,11 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
     let ids_dists: (Vec<u32>, Vec<f64>) = match algo {
         "bmo" => {
             let res = match cfg.engine {
-                EngineKind::Scalar => {
-                    let mut e = bmonn::coordinator::arms::ScalarEngine;
-                    knn_point_dense(&data, q, cfg.metric, &params, &mut e,
-                                    &mut rng, &mut counter)
-                }
-                EngineKind::Native => {
-                    let mut e = NativeEngine::default();
-                    knn_point_dense(&data, q, cfg.metric, &params, &mut e,
-                                    &mut rng, &mut counter)
-                }
                 EngineKind::Pjrt => {
+                    if cfg.shards > 1 {
+                        return Err("--shards applies to host engines \
+                                    (native|scalar), not pjrt".into());
+                    }
                     let mut e = PjrtEngine::new(
                         Path::new(&cfg.artifact_dir), cfg.metric)
                         .map_err(|e| e.to_string())?;
@@ -177,6 +173,13 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
                     let mut p = params.clone();
                     p.policy.round_pulls = e.round_pulls();
                     knn_point_dense(&data, q, cfg.metric, &p, &mut e,
+                                    &mut rng, &mut counter)
+                }
+                kind => {
+                    // scalar/native, sharded across a row-partitioned
+                    // worker pool when --shards > 1
+                    let mut e = build_host_engine(kind, cfg.shards)?;
+                    knn_point_dense(&data, q, cfg.metric, &params, &mut e,
                                     &mut rng, &mut counter)
                 }
             };
@@ -241,17 +244,11 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
     let mut rng = Rng::new(cfg.seed);
     let mut counter = Counter::new();
     let results = match cfg.engine {
-        EngineKind::Scalar => {
-            let mut e = bmonn::coordinator::arms::ScalarEngine;
-            knn_batch_points_dense(data, &points, cfg.metric, &params,
-                                   &mut e, &mut rng, &mut counter)
-        }
-        EngineKind::Native => {
-            let mut e = NativeEngine::default();
-            knn_batch_points_dense(data, &points, cfg.metric, &params,
-                                   &mut e, &mut rng, &mut counter)
-        }
         EngineKind::Pjrt => {
+            if cfg.shards > 1 {
+                return Err("--shards applies to host engines \
+                            (native|scalar), not pjrt".into());
+            }
             let mut e =
                 PjrtEngine::new(Path::new(&cfg.artifact_dir), cfg.metric)
                     .map_err(|e| e.to_string())?;
@@ -259,6 +256,11 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
             p.policy.round_pulls = e.round_pulls();
             knn_batch_points_dense(data, &points, cfg.metric, &p, &mut e,
                                    &mut rng, &mut counter)
+        }
+        kind => {
+            let mut e = build_host_engine(kind, cfg.shards)?;
+            knn_batch_points_dense(data, &points, cfg.metric, &params,
+                                   &mut e, &mut rng, &mut counter)
         }
     };
     for (&q, res) in points.iter().zip(&results) {
@@ -288,7 +290,14 @@ fn cmd_graph(args: &Args) -> Result<(), String> {
         loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
     let mut rng = Rng::new(cfg.seed);
     let mut counter = Counter::new();
-    let mut engine = NativeEngine::default();
+    // graph construction runs on the host engines; pjrt selection falls
+    // back to native here (the batched graph driver realigns pulls)
+    let kind = if cfg.engine == EngineKind::Scalar {
+        EngineKind::Scalar
+    } else {
+        EngineKind::Native
+    };
+    let mut engine = build_host_engine(kind, cfg.shards)?;
     let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
                             &mut engine, &mut rng, &mut counter);
     let exact_units = (data.n * (data.n - 1) * data.d) as u64;
@@ -348,6 +357,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         n_workers: cfg.server_workers,
         batch_size: cfg.server_batch,
         native_engine: cfg.engine != EngineKind::Scalar,
+        shards: cfg.shards,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
@@ -360,10 +370,28 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let name = args
         .positional
         .first()
-        .ok_or("bench requires a figure name (e.g. fig3b)")?;
+        .ok_or("bench requires a figure name (e.g. fig3b, pull)")?;
     let quick = args.flag_bool("quick");
     let seed = args.flag_u64("seed", 42)?;
-    let rep = figures::run_figure(name, quick, seed)?;
+    let shards = args.flag_usize("shards", 1)?.max(1);
+    if name == "pull" {
+        // the tracked pull-phase throughput baseline: writes (overwrites)
+        // BENCH_pull.json so the perf trajectory has data points
+        if args.flag("shards").is_some() {
+            return Err("bench pull sweeps a fixed 1/2/4 shard ladder so \
+                        baselines stay comparable across runs; --shards \
+                        applies to the figure benches only".into());
+        }
+        let smoke = args.flag_bool("smoke") || quick;
+        let out = args.flag("out").unwrap_or("BENCH_pull.json");
+        let (rep, json) = pull_bench::run_pull_bench(smoke, seed)?;
+        println!("{}", rep.render());
+        std::fs::write(out, format!("{json}\n"))
+            .map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+        return Ok(());
+    }
+    let rep = figures::run_figure(name, quick, seed, shards)?;
     let rendered = rep.render();
     println!("{rendered}");
     if let Some(out) = args.flag("out") {

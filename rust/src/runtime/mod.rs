@@ -1,6 +1,9 @@
 //! Runtime layer: compute engines behind the coordinator's hot path.
 //!
 //! * [`native`] — optimized rust loops (wall-clock hot path, Fig 6);
+//! * [`sharded`] — multi-core wrapper fanning waves across contiguous
+//!   row shards on a persistent worker pool, bit-identical to the
+//!   wrapped engine run single-threaded;
 //! * [`pjrt`] — the AOT JAX/Pallas artifacts, loaded from HLO text and
 //!   executed via the PJRT C API (`xla` crate) with device-resident data;
 //! * [`artifacts`] — the manifest that binds the two worlds together.
@@ -10,6 +13,39 @@
 
 pub mod artifacts;
 pub mod native;
+pub mod sharded;
+
+use crate::config::EngineKind;
+use crate::coordinator::arms::{PullEngine, ScalarEngine};
+
+/// Build the configured host-side pull engine, wrapped in
+/// [`sharded::ShardedEngine`] when `shards > 1` (`[engine] shards` /
+/// `--shards S`). The PJRT engine is constructed separately by its
+/// callers (it needs an artifact dir + metric and aligns `round_pulls`
+/// to the artifact shape), so requesting it here is an error.
+pub fn build_host_engine(kind: EngineKind, shards: usize)
+                         -> Result<Box<dyn PullEngine + Send>, String> {
+    let shards = shards.max(1);
+    Ok(match kind {
+        EngineKind::Scalar if shards == 1 => Box::new(ScalarEngine),
+        EngineKind::Scalar => {
+            Box::new(sharded::ShardedEngine::new(ScalarEngine, shards))
+        }
+        EngineKind::Native if shards == 1 => {
+            Box::new(native::NativeEngine::default())
+        }
+        EngineKind::Native => Box::new(sharded::ShardedEngine::new(
+            native::NativeEngine::default(),
+            shards,
+        )),
+        EngineKind::Pjrt => {
+            return Err("pjrt engine is built from its artifact dir by the \
+                        caller; --shards applies to host engines \
+                        (native|scalar)"
+                .into())
+        }
+    })
+}
 
 // The real PJRT runtime needs the `xla` bindings and `anyhow`, neither of
 // which is available in the offline crate set. The default build compiles

@@ -16,6 +16,12 @@ pub struct NativeEngine {
     /// random load (row) + one sequential load (qg) per coordinate
     /// instead of two random loads (§Perf iteration 2)
     qg: Vec<f32>,
+    /// (data row, request, output slot) jobs of the current pull_batch
+    /// wave — engine scratch reused across rounds so the per-round
+    /// allocation churn is one-time, not per-wave
+    jobs: Vec<(u32, u32, u32)>,
+    /// per-request offset into `qg` (pull_batch scratch, same reuse)
+    offsets: Vec<usize>,
 }
 
 #[inline(always)]
@@ -65,24 +71,35 @@ fn partial_row_l2(row: &[f32], qg: &[f32], coords: &[u32]) -> (f64, f64) {
 
 #[inline(always)]
 fn partial_row_l1(row: &[f32], qg: &[f32], coords: &[u32]) -> (f64, f64) {
+    // 4-way unrolled accumulators, matching the ℓ2 kernel above
     let mut s0 = 0f32;
     let mut s1 = 0f32;
+    let mut s2 = 0f32;
+    let mut s3 = 0f32;
     let mut q0 = 0f32;
     let mut q1 = 0f32;
-    let chunks = coords.chunks_exact(2);
+    let mut q2 = 0f32;
+    let mut q3 = 0f32;
+    let chunks = coords.chunks_exact(4);
     let rem = chunks.remainder();
     let mut t = 0usize;
     for c in chunks {
         let v0 = (row[c[0] as usize] - qg[t]).abs();
         let v1 = (row[c[1] as usize] - qg[t + 1]).abs();
-        t += 2;
+        let v2 = (row[c[2] as usize] - qg[t + 2]).abs();
+        let v3 = (row[c[3] as usize] - qg[t + 3]).abs();
+        t += 4;
         s0 += v0;
         s1 += v1;
+        s2 += v2;
+        s3 += v3;
         q0 += v0 * v0;
         q1 += v1 * v1;
+        q2 += v2 * v2;
+        q3 += v3 * v3;
     }
-    let mut s = s0 as f64 + s1 as f64;
-    let mut q = q0 as f64 + q1 as f64;
+    let mut s = (s0 + s1) as f64 + (s2 + s3) as f64;
+    let mut q = (q0 + q1) as f64 + (q2 + q3) as f64;
     for &j in rem {
         let v = (row[j as usize] - qg[t]).abs() as f64;
         t += 1;
@@ -227,28 +244,31 @@ impl PullEngine for NativeEngine {
         out_sq.clear();
         out_sum.resize(total, 0.0);
         out_sq.resize(total, 0.0);
-        // one shared gather buffer, one offset per request
+        // one shared gather buffer, one offset per request (both engine
+        // scratch: reused across rounds, no per-wave allocation)
         self.qg.clear();
-        let mut offsets = Vec::with_capacity(reqs.len());
+        self.offsets.clear();
+        self.offsets.reserve(reqs.len());
         for r in reqs {
-            offsets.push(self.qg.len());
+            self.offsets.push(self.qg.len());
             for &j in r.coord_ids {
                 self.qg.push(r.query[j as usize]);
             }
         }
         // (data row, request, output slot) jobs in row-major order
-        let mut jobs: Vec<(u32, u32, u32)> = Vec::with_capacity(total);
+        self.jobs.clear();
+        self.jobs.reserve(total);
         let mut out_idx = 0u32;
         for (ri, r) in reqs.iter().enumerate() {
             for &row in r.rows {
-                jobs.push((row, ri as u32, out_idx));
+                self.jobs.push((row, ri as u32, out_idx));
                 out_idx += 1;
             }
         }
-        jobs.sort_unstable_by_key(|&(row, _, _)| row);
-        for &(row, ri, oi) in &jobs {
+        self.jobs.sort_unstable_by_key(|&(row, _, _)| row);
+        for &(row, ri, oi) in &self.jobs {
             let r = &reqs[ri as usize];
-            let off = offsets[ri as usize];
+            let off = self.offsets[ri as usize];
             let qg = &self.qg[off..off + r.coord_ids.len()];
             let (s, q) = match metric {
                 Metric::L2Sq => {

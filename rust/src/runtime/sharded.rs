@@ -1,0 +1,533 @@
+//! Sharded multi-core pull execution: fan each engine wave out across
+//! contiguous dataset-row shards, merge bit-identically.
+//!
+//! [`ShardedEngine<E>`] wraps any [`PullEngine`] and partitions dataset
+//! rows into `S` contiguous shards, each owned by one worker of a
+//! persistent [`ScopedPool`] (std threads only — the default build stays
+//! dependency-free). Every `partial_sums` / `exact_dists` / `pull_batch`
+//! wave is split by row ownership, executed per shard by a per-shard
+//! clone of the inner engine, and scattered back into the caller's
+//! request-major output layout.
+//!
+//! **Determinism.** Every engine in this repo computes each (row, query,
+//! coords) job independently of the other jobs in a wave — the unrolled
+//! row kernels accumulate within a row only. A shard therefore runs the
+//! exact same per-row float summation the single-threaded engine would,
+//! and the merge only *places* results, so sharded output is bitwise
+//! identical to `E` run single-threaded, for any shard count
+//! (`tests/sharded_parity.rs` pins this for 1–8 shards, uneven splits,
+//! zero-row shards and n < S).
+//!
+//! Small waves (a ragged single-arm pull, one exact evaluation) are run
+//! inline on shard 0: the condvar dispatch round-trip costs more than
+//! the arithmetic it would spread. The cutoff only moves work between
+//! the inline and pooled paths — results are identical either way.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::arms::{PullEngine, PullRequest};
+use crate::data::dense::{DenseDataset, Metric};
+
+/// Waves below this many coordinate operations run inline on shard 0
+/// instead of paying the pool dispatch round-trip (~tens of µs).
+const MIN_PARALLEL_OPS: usize = 16384;
+
+/// Shard owning dataset row `row` under the contiguous equal partition
+/// of `n_rows` rows into `n_shards` shards: shard `s` covers
+/// `[floor(s·n/S), floor((s+1)·n/S))`.
+#[inline]
+fn shard_of(row: usize, n_rows: usize, n_shards: usize) -> usize {
+    debug_assert!(row < n_rows);
+    (((row + 1) * n_shards).saturating_sub(1) / n_rows).min(n_shards - 1)
+}
+
+/// Lifetime-erased `&(dyn Fn(usize) + Sync)` handed to pool workers.
+/// Safe to send because [`ScopedPool::run`] blocks until every worker
+/// has finished calling it.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for TaskPtr {}
+
+struct PoolState {
+    task: Option<TaskPtr>,
+    /// bumped once per dispatched wave; workers run each generation once
+    generation: u64,
+    /// workers still executing the current generation
+    remaining: usize,
+    /// a worker's task panicked this wave (re-raised by `run`, so the
+    /// dispatcher fails loudly instead of hanging on `remaining`)
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// A persistent pool of workers executing *borrowed* closures: `run`
+/// publishes a `&dyn Fn(worker_index)`, wakes every worker, and blocks
+/// until all have finished — so the task may borrow from the caller's
+/// stack ("scoped" dispatch without re-spawning threads per wave).
+pub struct ScopedPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ScopedPool {
+    pub fn new(n_workers: usize) -> ScopedPool {
+        assert!(n_workers > 0);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                task: None,
+                generation: 0,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..n_workers)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("bmonn-shard-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        ScopedPool { shared, workers }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `task(i)` for every worker index `i`, returning once all have
+    /// finished (which is what makes the borrow in `task` sound).
+    pub fn run(&mut self, task: &(dyn Fn(usize) + Sync)) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.task = Some(TaskPtr(task as *const _));
+            st.generation += 1;
+            st.remaining = self.workers.len();
+        }
+        self.shared.work_cv.notify_all();
+        let mut st = self.shared.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.task = None;
+        if st.panicked {
+            st.panicked = false;
+            drop(st);
+            panic!("sharded pull worker panicked");
+        }
+    }
+}
+
+impl Drop for ScopedPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen {
+                    if let Some(t) = st.task {
+                        seen = st.generation;
+                        break t;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: `run` holds its caller (and thus the referent of the
+        // erased borrow) blocked until `remaining` hits 0, which happens
+        // strictly after this call returns.
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*task.0 };
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(idx)
+            }));
+        let mut st = shared.state.lock().unwrap();
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Per-shard slice of the current wave plus the shard's own engine.
+/// Workers touch only their own entry (behind an uncontended Mutex).
+struct ShardState<E> {
+    engine: E,
+    /// row ids of this shard's jobs, wave order (pull_batch: grouped by
+    /// request, ascending)
+    rows: Vec<u32>,
+    /// caller-layout output slot per entry of `rows`
+    slots: Vec<u32>,
+    /// (request index, start, len) ranges into `rows` — pull_batch only
+    req_ranges: Vec<(u32, u32, u32)>,
+    out_sum: Vec<f64>,
+    out_sq: Vec<f64>,
+}
+
+/// Sharded parallel wrapper around any [`PullEngine`] — see the module
+/// docs for the determinism contract. Construct via
+/// [`ShardedEngine::new`] or the [`crate::runtime::build_host_engine`]
+/// factory (`[engine] shards` / `--shards`).
+pub struct ShardedEngine<E> {
+    shards: Vec<Mutex<ShardState<E>>>,
+    /// present only when there is more than one shard
+    pool: Option<ScopedPool>,
+}
+
+impl<E: PullEngine + Clone + Send> ShardedEngine<E> {
+    /// `n_shards` is clamped to at least 1; each shard gets a clone of
+    /// `engine` (engines carry only scratch state, so clones are cheap).
+    pub fn new(engine: E, n_shards: usize) -> ShardedEngine<E> {
+        let s = n_shards.max(1);
+        let shards = (0..s)
+            .map(|_| {
+                Mutex::new(ShardState {
+                    engine: engine.clone(),
+                    rows: Vec::new(),
+                    slots: Vec::new(),
+                    req_ranges: Vec::new(),
+                    out_sum: Vec::new(),
+                    out_sq: Vec::new(),
+                })
+            })
+            .collect();
+        let pool = if s > 1 { Some(ScopedPool::new(s)) } else { None };
+        ShardedEngine { shards, pool }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Clear per-shard wave scratch.
+    fn reset_waves(&mut self) {
+        for sh in &mut self.shards {
+            let st = sh.get_mut().unwrap();
+            st.rows.clear();
+            st.slots.clear();
+            st.req_ranges.clear();
+        }
+    }
+}
+
+impl<E: PullEngine + Clone + Send> PullEngine for ShardedEngine<E> {
+    fn partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        let s = self.shards.len();
+        let work = rows.len() * coord_ids.len().max(1);
+        if s == 1 || work < MIN_PARALLEL_OPS {
+            let st = self.shards[0].get_mut().unwrap();
+            st.engine.partial_sums(data, query, rows, coord_ids, metric,
+                                   out_sum, out_sq);
+            return;
+        }
+        out_sum.clear();
+        out_sq.clear();
+        out_sum.resize(rows.len(), 0.0);
+        out_sq.resize(rows.len(), 0.0);
+        self.reset_waves();
+        for (i, &r) in rows.iter().enumerate() {
+            let o = shard_of(r as usize, data.n, s);
+            let st = self.shards[o].get_mut().unwrap();
+            st.rows.push(r);
+            st.slots.push(i as u32);
+        }
+        let shards = &self.shards;
+        self.pool.as_mut().unwrap().run(&|i: usize| {
+            let mut guard = shards[i].lock().unwrap();
+            let st = &mut *guard;
+            st.engine.partial_sums(data, query, &st.rows, coord_ids,
+                                   metric, &mut st.out_sum,
+                                   &mut st.out_sq);
+        });
+        for sh in &mut self.shards {
+            let st = sh.get_mut().unwrap();
+            for (j, &slot) in st.slots.iter().enumerate() {
+                out_sum[slot as usize] = st.out_sum[j];
+                out_sq[slot as usize] = st.out_sq[j];
+            }
+        }
+    }
+
+    fn exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+        out: &mut Vec<f64>,
+    ) {
+        let s = self.shards.len();
+        let work = rows.len() * data.d.max(1);
+        if s == 1 || work < MIN_PARALLEL_OPS {
+            let st = self.shards[0].get_mut().unwrap();
+            st.engine.exact_dists(data, query, rows, metric, out);
+            return;
+        }
+        out.clear();
+        out.resize(rows.len(), 0.0);
+        self.reset_waves();
+        for (i, &r) in rows.iter().enumerate() {
+            let o = shard_of(r as usize, data.n, s);
+            let st = self.shards[o].get_mut().unwrap();
+            st.rows.push(r);
+            st.slots.push(i as u32);
+        }
+        let shards = &self.shards;
+        self.pool.as_mut().unwrap().run(&|i: usize| {
+            let mut guard = shards[i].lock().unwrap();
+            let st = &mut *guard;
+            st.engine.exact_dists(data, query, &st.rows, metric,
+                                  &mut st.out_sum);
+        });
+        for sh in &mut self.shards {
+            let st = sh.get_mut().unwrap();
+            for (j, &slot) in st.slots.iter().enumerate() {
+                out[slot as usize] = st.out_sum[j];
+            }
+        }
+    }
+
+    /// The multi-query wave: split every request's row list by shard
+    /// ownership (request-major, so each shard sees its sub-requests in
+    /// the caller's order), run the inner engine's own `pull_batch` per
+    /// shard, scatter back into the caller's request-major layout.
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        let s = self.shards.len();
+        let work: usize = reqs
+            .iter()
+            .map(|r| r.rows.len() * r.coord_ids.len().max(1))
+            .sum();
+        if s == 1 || work < MIN_PARALLEL_OPS {
+            let st = self.shards[0].get_mut().unwrap();
+            st.engine.pull_batch(data, reqs, metric, out_sum, out_sq);
+            return;
+        }
+        let total: usize = reqs.iter().map(|r| r.rows.len()).sum();
+        out_sum.clear();
+        out_sq.clear();
+        out_sum.resize(total, 0.0);
+        out_sq.resize(total, 0.0);
+        self.reset_waves();
+        let mut starts = vec![0u32; s];
+        let mut slot = 0u32;
+        for (ri, r) in reqs.iter().enumerate() {
+            for (o, start) in starts.iter_mut().enumerate() {
+                *start = self.shards[o].get_mut().unwrap().rows.len() as u32;
+            }
+            for &row in r.rows {
+                let o = shard_of(row as usize, data.n, s);
+                let st = self.shards[o].get_mut().unwrap();
+                st.rows.push(row);
+                st.slots.push(slot);
+                slot += 1;
+            }
+            for (o, &start) in starts.iter().enumerate() {
+                let st = self.shards[o].get_mut().unwrap();
+                let len = st.rows.len() as u32 - start;
+                if len > 0 {
+                    st.req_ranges.push((ri as u32, start, len));
+                }
+            }
+        }
+        let shards = &self.shards;
+        self.pool.as_mut().unwrap().run(&|i: usize| {
+            let mut guard = shards[i].lock().unwrap();
+            let st = &mut *guard;
+            let rows = &st.rows;
+            let sub: Vec<PullRequest> = st
+                .req_ranges
+                .iter()
+                .map(|&(ri, start, len)| {
+                    let r = &reqs[ri as usize];
+                    PullRequest {
+                        query: r.query,
+                        rows: &rows[start as usize..(start + len) as usize],
+                        coord_ids: r.coord_ids,
+                    }
+                })
+                .collect();
+            st.engine.pull_batch(data, &sub, metric, &mut st.out_sum,
+                                 &mut st.out_sq);
+        });
+        for sh in &mut self.shards {
+            let st = sh.get_mut().unwrap();
+            for (j, &sl) in st.slots.iter().enumerate() {
+                out_sum[sl as usize] = st.out_sum[j];
+                out_sq[sl as usize] = st.out_sq[j];
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arms::ScalarEngine;
+    use crate::data::synthetic;
+    use crate::runtime::native::NativeEngine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pool_runs_every_worker_each_wave() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mut pool = ScopedPool::new(4);
+        let hits = AtomicUsize::new(0);
+        for wave in 1..=3usize {
+            pool.run(&|i: usize| {
+                hits.fetch_add(i + 1, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), wave * (1 + 2 + 3 + 4));
+        }
+        assert_eq!(pool.n_workers(), 4);
+    }
+
+    #[test]
+    fn shard_partition_is_contiguous_and_complete() {
+        for n in [1usize, 2, 3, 5, 8, 16, 33] {
+            for s in 1..=8usize {
+                let owners: Vec<usize> =
+                    (0..n).map(|r| shard_of(r, n, s)).collect();
+                // monotone non-decreasing, within range, and matching the
+                // floor-boundary sizes (zero-row shards allowed)
+                for w in owners.windows(2) {
+                    assert!(w[0] <= w[1]);
+                }
+                for (r, &o) in owners.iter().enumerate() {
+                    assert!(o < s, "row {r} of {n} -> shard {o} >= {s}");
+                    assert!(r >= o * n / s && r < (o + 1) * n / s,
+                            "row {r} outside shard {o}'s range (n={n} s={s})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_waves_run_inline_and_match() {
+        // below MIN_PARALLEL_OPS both paths are the same engine anyway;
+        // this pins the empty/tiny-wave plumbing
+        let ds = synthetic::gaussian_iid(6, 16, 9);
+        let q = ds.row_vec(0);
+        let mut sharded = ShardedEngine::new(NativeEngine::default(), 3);
+        let mut solo = NativeEngine::default();
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        let (mut s2, mut q2) = (Vec::new(), Vec::new());
+        sharded.partial_sums(&ds, &q, &[1, 3, 5], &[0, 2, 7],
+                             Metric::L2Sq, &mut s1, &mut q1);
+        solo.partial_sums(&ds, &q, &[1, 3, 5], &[0, 2, 7], Metric::L2Sq,
+                          &mut s2, &mut q2);
+        assert_eq!(s1, s2);
+        assert_eq!(q1, q2);
+        sharded.partial_sums(&ds, &q, &[], &[1], Metric::L1, &mut s1,
+                             &mut q1);
+        assert!(s1.is_empty() && q1.is_empty());
+    }
+
+    #[test]
+    fn big_wave_parallel_path_is_bitwise_identical() {
+        // a wave large enough to cross MIN_PARALLEL_OPS so the pool
+        // actually dispatches; compare against the single-threaded engine
+        let n = 64;
+        let d = 128;
+        let ds = synthetic::gaussian_iid(n, d, 11);
+        let mut rng = Rng::new(12);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let rows: Vec<u32> = (0..8 * n as u32).map(|i| i % n as u32)
+            .collect();
+        let coords: Vec<u32> =
+            (0..512).map(|_| rng.below(d) as u32).collect();
+        assert!(rows.len() * coords.len() >= MIN_PARALLEL_OPS);
+        for shards in [2usize, 3, 5, 8] {
+            for metric in [Metric::L2Sq, Metric::L1] {
+                let mut sharded =
+                    ShardedEngine::new(NativeEngine::default(), shards);
+                let mut solo = NativeEngine::default();
+                let (mut s1, mut q1) = (Vec::new(), Vec::new());
+                let (mut s2, mut q2) = (Vec::new(), Vec::new());
+                sharded.partial_sums(&ds, &q, &rows, &coords, metric,
+                                     &mut s1, &mut q1);
+                solo.partial_sums(&ds, &q, &rows, &coords, metric,
+                                  &mut s2, &mut q2);
+                assert_eq!(s1, s2, "{metric:?} {shards} shards");
+                assert_eq!(q1, q2, "{metric:?} {shards} shards");
+                let mut e1 = Vec::new();
+                let mut e2 = Vec::new();
+                sharded.exact_dists(&ds, &q, &rows, metric, &mut e1);
+                solo.exact_dists(&ds, &q, &rows, metric, &mut e2);
+                assert_eq!(e1, e2, "{metric:?} {shards} shards exact");
+            }
+        }
+    }
+
+    #[test]
+    fn wraps_scalar_engine_too() {
+        let ds = synthetic::gaussian_iid(10, 8, 3);
+        let q = ds.row_vec(0);
+        let rows: Vec<u32> = (0..10).collect();
+        let mut sharded = ShardedEngine::new(ScalarEngine, 4);
+        let mut solo = ScalarEngine;
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        let (mut s2, mut q2) = (Vec::new(), Vec::new());
+        sharded.partial_sums(&ds, &q, &rows, &[1, 2, 3], Metric::L1,
+                             &mut s1, &mut q1);
+        solo.partial_sums(&ds, &q, &rows, &[1, 2, 3], Metric::L1, &mut s2,
+                          &mut q2);
+        assert_eq!(s1, s2);
+        assert_eq!(q1, q2);
+        assert_eq!(sharded.name(), "sharded");
+        assert_eq!(sharded.n_shards(), 4);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let e = ShardedEngine::new(NativeEngine::default(), 0);
+        assert_eq!(e.n_shards(), 1);
+    }
+}

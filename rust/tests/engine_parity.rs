@@ -17,7 +17,7 @@ fn close(a: f64, b: f64) -> bool {
     (a - b).abs() <= REL_TOL * a.abs().max(b.abs()).max(1.0)
 }
 
-/// t values straddling the 4-way (l2) and 2-way (l1) unrolls and the
+/// t values straddling the 4-way unrolls (both l2 and l1) and the
 /// larger pull sizes the batched policy issues.
 const PULL_SIZES: &[usize] = &[1, 2, 3, 4, 5, 7, 8, 9, 31, 32, 33, 255,
                                256];

@@ -1,0 +1,205 @@
+//! Shard determinism: `ShardedEngine<NativeEngine>` must be **bitwise**
+//! identical to a single-threaded `NativeEngine` for every shard count —
+//! including uneven splits, shards with zero rows, and n < S — across
+//! `partial_sums`, `exact_dists` and the coalesced `pull_batch` path,
+//! and end-to-end through the batched k-NN driver.
+
+use bmonn::coordinator::arms::{PullEngine, PullRequest};
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::knn::knn_batch_points_dense;
+use bmonn::data::{synthetic, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::sharded::ShardedEngine;
+use bmonn::util::rng::Rng;
+
+/// Dataset sizes that produce uneven splits, zero-row shards (n < S for
+/// the larger shard counts), and exact divisions.
+const SIZES: &[usize] = &[3, 5, 8, 16, 33];
+
+#[test]
+fn partial_sums_and_exact_dists_bitwise_for_shard_counts_1_to_8() {
+    for &n in SIZES {
+        let d = 40;
+        let ds = synthetic::gaussian_iid(n, d, 1000 + n as u64);
+        let mut rng = Rng::new(n as u64);
+        let query: Vec<f32> =
+            (0..d).map(|_| rng.gaussian() as f32).collect();
+        // duplicate and out-of-order rows are legal pull targets
+        let rows: Vec<u32> = (0..3 * n)
+            .map(|_| rng.below(n) as u32)
+            .collect();
+        let coords: Vec<u32> =
+            (0..17).map(|_| rng.below(d) as u32).collect();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let mut solo = NativeEngine::default();
+            let (mut s0, mut q0) = (Vec::new(), Vec::new());
+            solo.partial_sums(&ds, &query, &rows, &coords, metric,
+                              &mut s0, &mut q0);
+            let mut e0 = Vec::new();
+            solo.exact_dists(&ds, &query, &rows, metric, &mut e0);
+            for shards in 1..=8usize {
+                let mut sharded =
+                    ShardedEngine::new(NativeEngine::default(), shards);
+                let (mut s1, mut q1) = (Vec::new(), Vec::new());
+                sharded.partial_sums(&ds, &query, &rows, &coords, metric,
+                                     &mut s1, &mut q1);
+                assert_eq!(s0, s1, "sums n={n} shards={shards} {metric:?}");
+                assert_eq!(q0, q1, "sqs n={n} shards={shards} {metric:?}");
+                let mut e1 = Vec::new();
+                sharded.exact_dists(&ds, &query, &rows, metric, &mut e1);
+                assert_eq!(e0, e1,
+                           "exact n={n} shards={shards} {metric:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pull_batch_bitwise_for_shard_counts_1_to_8() {
+    for &n in SIZES {
+        let d = 64;
+        let ds = synthetic::gaussian_iid(n, d, 2000 + n as u64);
+        let mut rng = Rng::new(77 + n as u64);
+        let n_reqs = 4;
+        let queries: Vec<Vec<f32>> = (0..n_reqs)
+            .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let rowsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|i| {
+                // one empty request exercises the zero-length range path
+                let m = if i == 2 { 0 } else { 1 + rng.below(2 * n) };
+                (0..m).map(|_| rng.below(n) as u32).collect()
+            })
+            .collect();
+        let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|_| {
+                let t = 1 + rng.below(40);
+                (0..t).map(|_| rng.below(d) as u32).collect()
+            })
+            .collect();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let reqs: Vec<PullRequest> = (0..n_reqs)
+                .map(|i| PullRequest {
+                    query: &queries[i],
+                    rows: &rowsets[i],
+                    coord_ids: &coordsets[i],
+                })
+                .collect();
+            let mut solo = NativeEngine::default();
+            let (mut s0, mut q0) = (Vec::new(), Vec::new());
+            solo.pull_batch(&ds, &reqs, metric, &mut s0, &mut q0);
+            for shards in 1..=8usize {
+                let mut sharded =
+                    ShardedEngine::new(NativeEngine::default(), shards);
+                let (mut s1, mut q1) = (Vec::new(), Vec::new());
+                sharded.pull_batch(&ds, &reqs, metric, &mut s1, &mut q1);
+                assert_eq!(s0, s1,
+                           "pull sums n={n} shards={shards} {metric:?}");
+                assert_eq!(q0, q1,
+                           "pull sqs n={n} shards={shards} {metric:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn big_pull_batch_wave_crosses_the_parallel_threshold_bitwise() {
+    // waves large enough that the pool actually dispatches (the small
+    // tests above mostly exercise the inline path): 16 requests over all
+    // rows with 256 coords each is ~1M coordinate ops per wave
+    let n = 256;
+    let d = 128;
+    let ds = synthetic::gaussian_iid(n, d, 9);
+    let mut rng = Rng::new(10);
+    let n_reqs = 16;
+    let queries: Vec<Vec<f32>> = (0..n_reqs)
+        .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+    let rows_all: Vec<u32> = (0..n as u32).collect();
+    let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+        .map(|_| (0..256).map(|_| rng.below(d) as u32).collect())
+        .collect();
+    for metric in [Metric::L2Sq, Metric::L1] {
+        let reqs: Vec<PullRequest> = (0..n_reqs)
+            .map(|i| PullRequest {
+                query: &queries[i],
+                rows: &rows_all,
+                coord_ids: &coordsets[i],
+            })
+            .collect();
+        let mut solo = NativeEngine::default();
+        let (mut s0, mut q0) = (Vec::new(), Vec::new());
+        solo.pull_batch(&ds, &reqs, metric, &mut s0, &mut q0);
+        for shards in 1..=8usize {
+            let mut sharded =
+                ShardedEngine::new(NativeEngine::default(), shards);
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            sharded.pull_batch(&ds, &reqs, metric, &mut s1, &mut q1);
+            assert_eq!(s0, s1, "big wave sums shards={shards} {metric:?}");
+            assert_eq!(q0, q1, "big wave sqs shards={shards} {metric:?}");
+        }
+    }
+}
+
+#[test]
+fn parallel_path_with_fewer_rows_than_shards_bitwise() {
+    // n = 4 dataset rows but a wave big enough to dispatch on the pool:
+    // with 6-8 shards most shards own zero rows, and row-repeats pile
+    // every job onto the few owners
+    let n = 4;
+    let d = 96;
+    let ds = synthetic::gaussian_iid(n, d, 13);
+    let mut rng = Rng::new(14);
+    let query: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let rows: Vec<u32> = (0..4096).map(|i| (i % n) as u32).collect();
+    let coords: Vec<u32> = (0..64).map(|_| rng.below(d) as u32).collect();
+    for metric in [Metric::L2Sq, Metric::L1] {
+        let mut solo = NativeEngine::default();
+        let (mut s0, mut q0) = (Vec::new(), Vec::new());
+        solo.partial_sums(&ds, &query, &rows, &coords, metric, &mut s0,
+                          &mut q0);
+        for shards in [2usize, 6, 8] {
+            let mut sharded =
+                ShardedEngine::new(NativeEngine::default(), shards);
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            sharded.partial_sums(&ds, &query, &rows, &coords, metric,
+                                 &mut s1, &mut q1);
+            assert_eq!(s0, s1, "n<S sums shards={shards} {metric:?}");
+            assert_eq!(q0, q1, "n<S sqs shards={shards} {metric:?}");
+        }
+    }
+}
+
+#[test]
+fn batched_knn_driver_is_bitwise_identical_under_sharding() {
+    // end-to-end: the multi-query driver over a sharded engine must
+    // produce byte-identical answers, distances and unit accounting —
+    // the rng stream is outside the engine, so this holds exactly
+    let ds = synthetic::image_like(150, 192, 55);
+    let points: Vec<usize> = (0..12).map(|i| i * 11 % 150).collect();
+    let params = BanditParams { k: 3, ..Default::default() };
+    let mut solo_engine = NativeEngine::default();
+    let mut rng0 = Rng::new(56);
+    let mut c0 = Counter::new();
+    let base = knn_batch_points_dense(&ds, &points, Metric::L2Sq, &params,
+                                      &mut solo_engine, &mut rng0,
+                                      &mut c0);
+    for shards in [2usize, 3, 5] {
+        let mut engine =
+            ShardedEngine::new(NativeEngine::default(), shards);
+        let mut rng = Rng::new(56);
+        let mut c = Counter::new();
+        let got = knn_batch_points_dense(&ds, &points, Metric::L2Sq,
+                                         &params, &mut engine, &mut rng,
+                                         &mut c);
+        assert_eq!(c0.get(), c.get(), "units diverged at {shards} shards");
+        for (b, g) in base.iter().zip(&got) {
+            assert_eq!(b.ids, g.ids, "ids diverged at {shards} shards");
+            assert_eq!(b.dists, g.dists,
+                       "dists diverged at {shards} shards");
+            assert_eq!(b.metrics.dist_computations,
+                       g.metrics.dist_computations);
+        }
+    }
+}
