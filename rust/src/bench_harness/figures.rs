@@ -69,7 +69,7 @@ fn run_bmo(w: &Workload, seed: u64, shards: usize) -> AlgoStats {
     // fans each round's pull wave across a row-sharded worker pool
     // (answers are bitwise-independent of the shard count)
     let mut engine =
-        crate::runtime::build_host_engine(EngineKind::Native, shards)
+        crate::runtime::build_host_engine(EngineKind::Native, shards, &[])
             .expect("native host engine");
     let mut rng = Rng::new(seed);
     let mut c = Counter::new();

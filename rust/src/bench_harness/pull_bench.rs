@@ -2,19 +2,26 @@
 //!
 //! Runs the 1k×256 batched multi-query workload (the server's execution
 //! path: many bandits in lockstep, one coalesced `pull_batch` sweep per
-//! round) plus a single-query latency sweep, on 1/2/4 shards, and emits
-//! the numbers as JSON for `BENCH_pull.json` so the perf trajectory has
-//! data points that survive across PRs:
+//! round) plus a single-query latency sweep, on 1/2/4 local shards **and
+//! on a 2-shard TCP-loopback remote ring** (in-process `shard-serve`
+//! servers driven through `runtime::remote::RemoteEngine` — the tracked
+//! distributed data point), and emits the numbers as JSON for
+//! `BENCH_pull.json` so the perf trajectory has data points that survive
+//! across PRs:
 //!
 //! * `pull_rows_per_s` — (row, query) jobs resolved per second inside
 //!   `PullEngine::pull_batch` only (the parallelized hot phase);
 //! * `wall_per_round_us` — mean wall clock of one coalesced round;
 //! * `solo_p50_us` / `solo_p99_us` — per-query wall time of the
-//!   single-query sweep (dominated by small waves, so largely
-//!   shard-count-insensitive — that contrast is the point of tracking
-//!   both).
+//!   single-query sweep (dominated by small waves, so it isolates the
+//!   per-wave overhead each substrate adds: pool dispatch for local
+//!   shards, a TCP round-trip for remote — that contrast is the point
+//!   of tracking both).
 //!
-//! Answers are asserted identical across shard counts before any number
+//! `--remote host:p,host:p` adds one more rung measured against a user
+//! ring (its servers must load the bench dataset — see `--help`).
+//!
+//! Answers are asserted identical across every rung before any number
 //! is reported: a throughput figure from a diverging engine is a bug,
 //! not a data point. `smoke` shrinks the workload to a seconds-long CI
 //! check.
@@ -29,13 +36,16 @@ use crate::coordinator::knn::{knn_batch_points_dense, knn_point_dense};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::data::synthetic;
 use crate::metrics::{Counter, LatencyStats};
-use crate::runtime::build_host_engine;
+use crate::runtime::{build_host_engine, remote};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Shard counts the baseline sweeps; the acceptance tracking compares
-/// the last entry against the first.
+/// Local shard counts the baseline sweeps; the acceptance tracking
+/// compares the last entry against the first.
 const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Shard count of the always-on in-process TCP-loopback remote rung.
+const LOOPBACK_SHARDS: usize = 2;
 
 /// Forwarding engine that clocks `pull_batch` calls — the coalesced pull
 /// phase — without touching their results.
@@ -105,9 +115,11 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
     }
 }
 
-/// Per-shard-count measurement row.
+/// Per-rung measurement row.
 struct ShardRun {
     shards: usize,
+    /// "local" | "tcp-loopback" | "tcp-remote"
+    transport: &'static str,
     rows_per_s: f64,
     wall_per_round_us: f64,
     rounds: u64,
@@ -117,9 +129,102 @@ struct ShardRun {
     solo_p99_us: f64,
 }
 
+/// Workload shape shared by every rung.
+struct Workload<'a> {
+    data: &'a DenseDataset,
+    points: &'a [usize],
+    solo_points: &'a [usize],
+    params: &'a BanditParams,
+    reps: usize,
+    seed: u64,
+}
+
+/// Run the batched workload + solo sweep through one engine substrate
+/// (`mk` builds it fresh for each of the two phases), asserting its
+/// answers match every previous rung's.
+fn measure_rung<F>(w: &Workload<'_>, shards: usize,
+                   transport: &'static str, mk: F,
+                   baseline_answers: &mut Option<Vec<Vec<u32>>>)
+                   -> Result<ShardRun, String>
+where
+    F: Fn() -> Result<Box<dyn PullEngine + Send>, String>,
+{
+    // --- batched multi-query workload (the server's path), timed over
+    // `reps` identical repetitions for a steadier pull clock -----------
+    let mut engine = TimingEngine::new(mk()?);
+    let mut batch_wall = Duration::ZERO;
+    let mut answers: Vec<Vec<u32>> = Vec::new();
+    for _ in 0..w.reps {
+        let mut rng = Rng::new(w.seed + 1);
+        let mut counter = Counter::new();
+        let t0 = Instant::now();
+        let results = knn_batch_points_dense(w.data, w.points,
+                                             Metric::L2Sq, w.params,
+                                             &mut engine, &mut rng,
+                                             &mut counter);
+        batch_wall += t0.elapsed();
+        answers = results.into_iter().map(|r| r.ids).collect();
+    }
+    match baseline_answers {
+        None => *baseline_answers = Some(answers),
+        Some(base) => {
+            if *base != answers {
+                return Err(format!(
+                    "answers diverged on the {transport} rung at {shards} \
+                     shards — refusing to report throughput for a broken \
+                     engine"));
+            }
+        }
+    }
+    let pull_secs = engine.pull_wall.as_secs_f64().max(1e-9);
+    let rows_per_s = engine.pull_jobs as f64 / pull_secs;
+    let wall_per_round_us = if engine.pull_calls > 0 {
+        engine.pull_wall.as_secs_f64() * 1e6 / engine.pull_calls as f64
+    } else {
+        0.0
+    };
+    // --- single-query sweep (per-query latency) -----------------------
+    let mut solo_engine = mk()?;
+    let mut lat = LatencyStats::default();
+    for (i, &q) in w.solo_points.iter().enumerate() {
+        let mut qrng = Rng::new(w.seed + 100 + i as u64);
+        let mut c = Counter::new();
+        let t = Instant::now();
+        let _ = knn_point_dense(w.data, q, Metric::L2Sq, w.params,
+                                &mut solo_engine, &mut qrng, &mut c);
+        lat.record(t.elapsed());
+    }
+    Ok(ShardRun {
+        shards,
+        transport,
+        rows_per_s,
+        wall_per_round_us,
+        rounds: engine.pull_calls,
+        jobs: engine.pull_jobs,
+        batch_wall_ms: batch_wall.as_secs_f64() * 1e3,
+        solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+        solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+    })
+}
+
+fn run_json(r: &ShardRun) -> Json {
+    Json::obj(vec![
+        ("shards", Json::Num(r.shards as f64)),
+        ("transport", Json::Str(r.transport.to_string())),
+        ("pull_rows_per_s", Json::Num(r.rows_per_s)),
+        ("wall_per_round_us", Json::Num(r.wall_per_round_us)),
+        ("pull_rounds", Json::Num(r.rounds as f64)),
+        ("pull_jobs", Json::Num(r.jobs as f64)),
+        ("batch_wall_ms", Json::Num(r.batch_wall_ms)),
+        ("solo_p50_us", Json::Num(r.solo_p50_us)),
+        ("solo_p99_us", Json::Num(r.solo_p99_us)),
+    ])
+}
+
 /// Run the baseline; returns the printable table plus the JSON document
-/// written to `BENCH_pull.json`.
-pub fn run_pull_bench(smoke: bool, seed: u64)
+/// written to `BENCH_pull.json`. `extra_remote` (from `--remote`) adds a
+/// rung against a user-provided shard-serve ring.
+pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
                       -> Result<(Report, Json), String> {
     let (n, d, batch, solo_q, reps) =
         if smoke { (256, 64, 16, 4, 2) } else { (1000, 256, 64, 32, 5) };
@@ -133,78 +238,67 @@ pub fn run_pull_bench(smoke: bool, seed: u64)
     // baseline exists to track
     let mut params = BanditParams { k: 5, ..Default::default() };
     params.policy.round_pulls = 64;
-    let mut runs: Vec<ShardRun> = Vec::new();
+    let w = Workload {
+        data: &data,
+        points: &points,
+        solo_points: &solo_points,
+        params: &params,
+        reps,
+        seed,
+    };
     let mut baseline_answers: Option<Vec<Vec<u32>>> = None;
+    let mut local_runs: Vec<ShardRun> = Vec::new();
     for &shards in &SHARD_COUNTS {
-        // --- batched multi-query workload (the server's path), timed
-        // over `reps` identical repetitions for a steadier pull clock ---
-        let inner = build_host_engine(EngineKind::Native, shards)?;
-        let mut engine = TimingEngine::new(inner);
-        let mut batch_wall = Duration::ZERO;
-        let mut answers: Vec<Vec<u32>> = Vec::new();
-        for _ in 0..reps {
-            let mut rng = Rng::new(seed + 1);
-            let mut counter = Counter::new();
-            let t0 = Instant::now();
-            let results = knn_batch_points_dense(&data, &points,
-                                                 Metric::L2Sq, &params,
-                                                 &mut engine, &mut rng,
-                                                 &mut counter);
-            batch_wall += t0.elapsed();
-            answers = results.into_iter().map(|r| r.ids).collect();
-        }
-        match &baseline_answers {
-            None => baseline_answers = Some(answers),
-            Some(base) => {
-                if *base != answers {
-                    return Err(format!(
-                        "sharded answers diverged at {shards} shards — \
-                         refusing to report throughput for a broken \
-                         engine"));
-                }
-            }
-        }
-        let pull_secs = engine.pull_wall.as_secs_f64().max(1e-9);
-        let rows_per_s = engine.pull_jobs as f64 / pull_secs;
-        let wall_per_round_us = if engine.pull_calls > 0 {
-            engine.pull_wall.as_secs_f64() * 1e6
-                / engine.pull_calls as f64
-        } else {
-            0.0
-        };
-        // --- single-query sweep (per-query latency) -------------------
-        let mut solo_engine = build_host_engine(EngineKind::Native,
-                                                shards)?;
-        let mut lat = LatencyStats::default();
-        for (i, &q) in solo_points.iter().enumerate() {
-            let mut qrng = Rng::new(seed + 100 + i as u64);
-            let mut c = Counter::new();
-            let t = Instant::now();
-            let _ = knn_point_dense(&data, q, Metric::L2Sq, &params,
-                                    &mut solo_engine, &mut qrng, &mut c);
-            lat.record(t.elapsed());
-        }
-        runs.push(ShardRun {
+        local_runs.push(measure_rung(
+            &w,
             shards,
-            rows_per_s,
-            wall_per_round_us,
-            rounds: engine.pull_calls,
-            jobs: engine.pull_jobs,
-            batch_wall_ms: batch_wall.as_secs_f64() * 1e3,
-            solo_p50_us: lat.percentile(50.0).as_micros() as f64,
-            solo_p99_us: lat.percentile(99.0).as_micros() as f64,
-        });
+            "local",
+            || build_host_engine(EngineKind::Native, shards, &[]),
+            &mut baseline_answers,
+        )?);
     }
-    let speedup = runs.last().unwrap().rows_per_s
-        / runs.first().unwrap().rows_per_s.max(1e-9);
+    // --- distributed rungs: the identical workload through RemoteEngine
+    // over an in-process loopback ring (answers must stay identical —
+    // the wire moves float bits verbatim), plus a user ring if given ---
+    let mut remote_runs: Vec<ShardRun> = Vec::new();
+    {
+        let (_ring, endpoints) =
+            remote::spawn_loopback_ring(&data, LOOPBACK_SHARDS)?;
+        remote_runs.push(measure_rung(
+            &w,
+            LOOPBACK_SHARDS,
+            "tcp-loopback",
+            || {
+                remote::RemoteEngine::connect(&endpoints)
+                    .map(|e| Box::new(e) as Box<dyn PullEngine + Send>)
+            },
+            &mut baseline_answers,
+        )?);
+        // _ring stops (and its servers drop) at the end of this scope
+    }
+    if !extra_remote.is_empty() {
+        remote_runs.push(measure_rung(
+            &w,
+            extra_remote.len(),
+            "tcp-remote",
+            || {
+                remote::RemoteEngine::connect(extra_remote)
+                    .map(|e| Box::new(e) as Box<dyn PullEngine + Send>)
+            },
+            &mut baseline_answers,
+        )?);
+    }
+    let speedup = local_runs.last().unwrap().rows_per_s
+        / local_runs.first().unwrap().rows_per_s.max(1e-9);
     let mut rep = Report::new(
         "bench pull: sharded pull-phase throughput baseline \
          (BENCH_pull.json)",
-        &["shards", "pull rows/s", "wall/round us", "rounds",
+        &["shards", "transport", "pull rows/s", "wall/round us", "rounds",
           "batch wall ms", "solo p50 us", "solo p99 us"]);
-    for r in &runs {
+    for r in local_runs.iter().chain(&remote_runs) {
         rep.row(vec![
             r.shards.to_string(),
+            r.transport.to_string(),
             format!("{:.0}", r.rows_per_s),
             fmt_f(r.wall_per_round_us, 1),
             r.rounds.to_string(),
@@ -214,25 +308,12 @@ pub fn run_pull_bench(smoke: bool, seed: u64)
         ]);
     }
     rep.note(&format!(
-        "workload: n={n} d={d}, {batch} batched queries x{reps} reps + \
-         {solo_q} solo queries; pull-phase speedup at {} shards vs 1: \
-         {speedup:.2}x",
+        "workload: n={n} d={d} (shard-serve --synthetic \
+         image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
+         {solo_q} solo queries; pull-phase speedup at {} local shards vs \
+         1: {speedup:.2}x; remote rung: {LOOPBACK_SHARDS}-shard TCP \
+         loopback ring, answers asserted identical to local",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
-    let shard_objs: Vec<Json> = runs
-        .iter()
-        .map(|r| {
-            Json::obj(vec![
-                ("shards", Json::Num(r.shards as f64)),
-                ("pull_rows_per_s", Json::Num(r.rows_per_s)),
-                ("wall_per_round_us", Json::Num(r.wall_per_round_us)),
-                ("pull_rounds", Json::Num(r.rounds as f64)),
-                ("pull_jobs", Json::Num(r.jobs as f64)),
-                ("batch_wall_ms", Json::Num(r.batch_wall_ms)),
-                ("solo_p50_us", Json::Num(r.solo_p50_us)),
-                ("solo_p99_us", Json::Num(r.solo_p99_us)),
-            ])
-        })
-        .collect();
     let json = Json::obj(vec![
         ("workload", Json::obj(vec![
             ("n", Json::Num(n as f64)),
@@ -243,7 +324,8 @@ pub fn run_pull_bench(smoke: bool, seed: u64)
             ("smoke", Json::Bool(smoke)),
             ("seed", Json::Num(seed as f64)),
         ])),
-        ("shards", Json::Arr(shard_objs)),
+        ("shards", Json::Arr(local_runs.iter().map(run_json).collect())),
+        ("remote", Json::Arr(remote_runs.iter().map(run_json).collect())),
         ("speedup_pull_max_vs_1", Json::Num(speedup)),
     ]);
     Ok((rep, json))
@@ -255,17 +337,20 @@ mod tests {
 
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
-        let (rep, json) = run_pull_bench(true, 7).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len());
+        let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 1);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
-        for s in shards {
+        let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(remote.len(), 1, "loopback rung always present");
+        for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())
                 .unwrap();
             assert!(rps > 0.0 && rps.is_finite(), "rows/s {rps}");
             assert!(s.get("pull_rounds").and_then(|v| v.as_f64()).unwrap()
                     > 0.0);
+            assert!(s.get("transport").and_then(|v| v.as_str()).is_some());
         }
         // round-trips through the parser (what the CI step asserts)
         let text = json.to_string();

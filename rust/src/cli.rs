@@ -6,6 +6,7 @@
 //!   graph      — full k-NN graph construction
 //!   kmeans     — BMO k-means vs exact Lloyd's
 //!   serve      — start the query server
+//!   shard-serve— serve one row shard of a dataset to remote coordinators
 //!   bench      — run a figure-reproduction experiment (fig3a, fig3b, ...)
 //!   selftest   — verify PJRT artifacts against host computation
 
@@ -98,28 +99,48 @@ SUBCOMMANDS
            [--seed S] [--density F] [--alpha A]
   knn      --data FILE [--query-idx I] [--k K] [--batch B] [--algo bmo|
            exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
-           native|scalar|pjrt] [--shards S] [--epsilon E] [--delta D]
-           [--seed S]
+           native|scalar|pjrt] [--shards S] [--remote H:P,H:P]
+           [--epsilon E] [--delta D] [--seed S]
            (--batch B > 1 answers B consecutive query points through the
            coalesced multi-query driver, bmo only; --shards S > 1 fans
            each pull wave across S contiguous row shards on a worker
-           pool — results are bitwise-identical to --shards 1)
-  graph    --data FILE [--k K] [--metric l2|l1] [--shards S] [--seed S]
+           pool; --remote fans waves over a shard-serve ring instead —
+           either way results are bitwise-identical to local
+           single-threaded execution)
+  graph    --data FILE [--k K] [--metric l2|l1] [--shards S]
+           [--remote H:P,...] [--seed S]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
+           [--remote H:P,...]
+           (with --remote this box coordinates a multi-machine ring: its
+           workers batch queries as usual but fan every pull wave over
+           the ring; workers reconnect if a shard server dies)
+  shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
+           --of S [--addr HOST:PORT]
+           (loads rows [floor(I*n/S), floor((I+1)*n/S)) — the same
+           floor-boundary partition --shards uses — and answers
+           partial_sums / exact_dists / pull_batch waves over the
+           length-prefixed binary wire protocol [runtime::wire]; a ring
+           of S such servers, shard indices 0..S on matching endpoints,
+           backs --remote; a shutdown frame or ctrl-c stops it)
   bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1|pull>
            [--quick] [--seed S] [--out FILE] [--shards S]
            (--shards fans the figure benches' BMO runs out across S row
            shards; pull rejects it — it is the tracked pull-phase
            throughput baseline, always sweeping a fixed 1/2/4 shard
            ladder over the 1k x 256 batched workload plus a single-query
-           sweep, overwriting --out [default BENCH_pull.json] with
-           rows/s, wall per round and per-query p50/p99; --smoke shrinks
-           it to a seconds-long CI check)
+           sweep and a 2-shard TCP-loopback remote rung, overwriting
+           --out [default BENCH_pull.json] with rows/s, wall per round
+           and per-query p50/p99; --smoke shrinks it to a seconds-long
+           CI check; --remote H:P,H:P adds a rung measured against your
+           own ring, whose servers must load the bench dataset, e.g.
+           shard-serve --synthetic image:1000:256:SEED for the full
+           ladder or image:256:64:SEED for --smoke)
   selftest [--artifacts DIR]
 
-Common flags: --config FILE (TOML; [engine] kind/shards pick the pull
-engine), --set section.key=value (repeatable via comma list), --seed N.
+Common flags: --config FILE (TOML; [engine] kind/shards/remote pick the
+pull engine), --set section.key=value (repeatable via comma list),
+--seed N.
 ";
 
 #[cfg(test)]

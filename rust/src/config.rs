@@ -99,6 +99,17 @@ impl RawConfig {
     }
 }
 
+/// Parse a `host:port,host:port` endpoint list (`[engine] remote` /
+/// `--remote`). Commas and whitespace both separate; empty entries are
+/// dropped, so a trailing comma is harmless.
+pub fn parse_endpoints(s: &str) -> Vec<String> {
+    s.split(|c: char| c == ',' || c.is_whitespace())
+        .map(|e| e.trim())
+        .filter(|e| !e.is_empty())
+        .map(|e| e.to_string())
+        .collect()
+}
+
 /// Which compute engine drives batched pulls.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
@@ -133,6 +144,15 @@ pub struct BmonnConfig {
     /// Sharded execution is bitwise-identical to single-threaded for any
     /// value — it only changes which core computes each row.
     pub shards: usize,
+    /// shard-server endpoints (`[engine] remote = "host:p,host:p"` /
+    /// `--remote`): when non-empty, pull waves fan out over this ring via
+    /// `runtime::remote::RemoteEngine` instead of computing locally.
+    /// Endpoint `i` must serve shard `i` of the ring (`bmonn shard-serve
+    /// --shard i --of S`). Mutually exclusive with `shards`. Shard
+    /// servers always compute with the native engine, so results are
+    /// bitwise-identical to local *native* execution (requesting the
+    /// scalar or pjrt engine together with `remote` is an error).
+    pub remote: Vec<String>,
     pub artifact_dir: String,
     pub seed: u64,
     pub server_addr: String,
@@ -153,6 +173,7 @@ impl Default for BmonnConfig {
             policy: PullPolicy::batched(),
             engine: EngineKind::Native,
             shards: 1,
+            remote: Vec::new(),
             artifact_dir: "artifacts".into(),
             seed: 42,
             server_addr: "127.0.0.1:7878".into(),
@@ -200,6 +221,9 @@ impl BmonnConfig {
         }
         if let Some(s) = raw.get_usize("engine.shards")? {
             cfg.shards = s.max(1);
+        }
+        if let Some(r) = raw.get("engine.remote") {
+            cfg.remote = parse_endpoints(r);
         }
         if let Some(a) = raw.get("engine.artifact_dir") {
             cfg.artifact_dir = a.to_string();
@@ -254,6 +278,22 @@ mod tests {
         assert_eq!(cfg.metric, Metric::L1);
         assert_eq!(cfg.engine, EngineKind::Native);
         assert_eq!(cfg.shards, 4);
+    }
+
+    #[test]
+    fn remote_endpoint_list_parses() {
+        let raw = RawConfig::parse(
+            "[engine]\nremote = \"10.0.0.1:7979, 10.0.0.2:7979,\"\n",
+        )
+        .unwrap();
+        let cfg = BmonnConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.remote,
+                   vec!["10.0.0.1:7979".to_string(),
+                        "10.0.0.2:7979".to_string()]);
+        assert!(BmonnConfig::default().remote.is_empty());
+        assert_eq!(parse_endpoints("  a:1  b:2 "),
+                   vec!["a:1".to_string(), "b:2".to_string()]);
+        assert!(parse_endpoints(" , ").is_empty());
     }
 
     #[test]

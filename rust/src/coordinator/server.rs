@@ -38,6 +38,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::config::EngineKind;
+use crate::coordinator::arms::PullEngine;
 use crate::coordinator::bandit::BanditParams;
 use crate::coordinator::knn::knn_batch_dense;
 use crate::data::dense::{DenseDataset, Metric};
@@ -60,6 +61,12 @@ pub struct ServerConfig {
     /// row shards each worker's engine fans pull waves across (1 =
     /// single-threaded per worker; results are identical either way)
     pub shards: usize,
+    /// shard-server endpoints: when non-empty each worker's engine is a
+    /// `runtime::remote::RemoteEngine` over this ring (`--remote`), so
+    /// this box becomes the coordinator of a multi-machine deployment.
+    /// Workers (re)connect lazily and survive ring outages by answering
+    /// error responses until the ring is reachable again.
+    pub remote: Vec<String>,
 }
 
 impl Default for ServerConfig {
@@ -72,6 +79,7 @@ impl Default for ServerConfig {
             batch_size: 8,
             native_engine: true,
             shards: 1,
+            remote: Vec::new(),
         }
     }
 }
@@ -178,8 +186,11 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
     } else {
         EngineKind::Scalar
     };
-    let mut engine = build_host_engine(kind, shared.config.shards)
-        .expect("host engine construction is infallible for scalar/native");
+    // The engine is built lazily and rebuilt after a compute panic.
+    // Local engines build infallibly, but a remote ring may be down —
+    // then the worker answers error responses (never hangs waiters) and
+    // retries the connection on the next batch.
+    let mut engine: Option<Box<dyn PullEngine + Send>> = None;
     loop {
         let jobs: Vec<Job> = {
             let mut q = shared.queue.lock().unwrap();
@@ -203,60 +214,99 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
         let mut responses: Vec<Option<Json>> =
             (0..jobs.len()).map(|_| None).collect();
         let mut batch_units = 0u64;
-        // group by k — the driver runs one k per wave; real traffic is
-        // nearly always uniform in k, so this rarely splits a batch
-        let mut by_k: std::collections::BTreeMap<usize, Vec<usize>> =
-            std::collections::BTreeMap::new();
-        for (i, job) in jobs.iter().enumerate() {
-            by_k.entry(job.k).or_default().push(i);
-        }
-        for (k, idxs) in by_k {
-            let queries: Vec<&[f32]> =
-                idxs.iter().map(|&i| jobs[i].query.as_slice()).collect();
-            let mut params = shared.config.params.clone();
-            params.k = k;
-            let mut counter = Counter::new();
-            // a panic in the compute path must not kill this shared
-            // worker: the drained jobs' waiters would hang forever and
-            // the pool would be permanently down a thread — catch it,
-            // answer the affected queries with an error, and rebuild the
-            // engine (its internals may be poisoned mid-wave)
-            let outcome = std::panic::catch_unwind(
-                std::panic::AssertUnwindSafe(|| {
-                    knn_batch_dense(&shared.data, &queries,
-                                    shared.config.metric, &params,
-                                    &mut engine, &mut rng, &mut counter)
-                }));
-            let results = match outcome {
-                Ok(results) => results,
-                Err(_) => {
-                    for &i in &idxs {
-                        responses[i] =
-                            Some(err_json("internal error: compute \
-                                           panicked"));
+        if engine.is_none() {
+            match build_host_engine(kind, shared.config.shards,
+                                    &shared.config.remote) {
+                Ok(e) => engine = Some(e),
+                Err(e) => {
+                    let msg = format!("engine unavailable: {e}");
+                    for r in responses.iter_mut() {
+                        *r = Some(err_json(&msg));
                     }
-                    engine = build_host_engine(kind, shared.config.shards)
-                        .expect("host engine construction is infallible \
-                                 for scalar/native");
-                    continue;
                 }
-            };
-            for (&i, res) in idxs.iter().zip(&results) {
-                let units = res.metrics.dist_computations;
-                batch_units += units;
-                responses[i] = Some(Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("ids",
-                     Json::usize_array(
-                         &res.ids.iter().map(|&x| x as usize)
-                             .collect::<Vec<_>>())),
-                    ("dists",
-                     Json::f32_array(
-                         &res.dists.iter().map(|&d| d as f32)
-                             .collect::<Vec<_>>())),
-                    ("units", Json::Num(units as f64)),
-                ]));
             }
+        }
+        let mut poisoned = false;
+        if let Some(eng) = engine.as_mut() {
+            // group by k — the driver runs one k per wave; real traffic
+            // is nearly always uniform in k, so this rarely splits a
+            // batch
+            let mut by_k: std::collections::BTreeMap<usize, Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for (i, job) in jobs.iter().enumerate() {
+                by_k.entry(job.k).or_default().push(i);
+            }
+            'groups: for (k, idxs) in by_k {
+                let queries: Vec<&[f32]> = idxs
+                    .iter()
+                    .map(|&i| jobs[i].query.as_slice())
+                    .collect();
+                let mut params = shared.config.params.clone();
+                params.k = k;
+                let mut counter = Counter::new();
+                // a panic in the compute path (including a remote shard
+                // dying mid-wave) must not kill this shared worker: the
+                // drained jobs' waiters would hang forever and the pool
+                // would be permanently down a thread — catch it, answer
+                // the affected queries with an error, and rebuild the
+                // engine (its internals may be poisoned mid-wave; a
+                // remote engine reconnects to the ring)
+                let outcome = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        knn_batch_dense(&shared.data, &queries,
+                                        shared.config.metric, &params,
+                                        eng, &mut rng, &mut counter)
+                    }));
+                let results = match outcome {
+                    Ok(results) => results,
+                    Err(_) => {
+                        for &i in &idxs {
+                            responses[i] =
+                                Some(err_json("internal error: compute \
+                                               panicked"));
+                        }
+                        match build_host_engine(kind, shared.config.shards,
+                                                &shared.config.remote) {
+                            Ok(fresh) => *eng = fresh,
+                            Err(e) => {
+                                // ring unreachable: answer the rest of
+                                // this batch, drop the engine, retry on
+                                // the next batch
+                                let msg =
+                                    format!("engine unavailable: {e}");
+                                for r in responses
+                                    .iter_mut()
+                                    .filter(|r| r.is_none())
+                                {
+                                    *r = Some(err_json(&msg));
+                                }
+                                poisoned = true;
+                                break 'groups;
+                            }
+                        }
+                        continue;
+                    }
+                };
+                for (&i, res) in idxs.iter().zip(&results) {
+                    let units = res.metrics.dist_computations;
+                    batch_units += units;
+                    responses[i] = Some(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("ids",
+                         Json::usize_array(
+                             &res.ids.iter().map(|&x| x as usize)
+                                 .collect::<Vec<_>>())),
+                        ("dists",
+                         Json::f32_array(
+                             &res.dists.iter().map(|&d| d as f32)
+                                 .collect::<Vec<_>>())),
+                        ("units", Json::Num(units as f64)),
+                    ]));
+                }
+            }
+        }
+        if poisoned {
+            engine = None;
         }
         let elapsed = t0.elapsed();
         shared.total_units.fetch_add(batch_units, Ordering::Relaxed);

@@ -6,7 +6,7 @@ use std::process::ExitCode;
 use bmonn::baselines::{exact, uniform};
 use bmonn::bench_harness::{figures, pull_bench};
 use bmonn::cli::{Args, USAGE};
-use bmonn::config::{BmonnConfig, EngineKind, RawConfig};
+use bmonn::config::{parse_endpoints, BmonnConfig, EngineKind, RawConfig};
 use bmonn::coordinator::kmeans::{kmeans_bmo, kmeans_exact, KMeansParams};
 use bmonn::coordinator::knn::{knn_graph_dense, knn_point_dense,
                               knn_point_sparse};
@@ -16,6 +16,8 @@ use bmonn::data::{loader, synthetic};
 use bmonn::metrics::Counter;
 use bmonn::runtime::build_host_engine;
 use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::partition::shard_range;
+use bmonn::runtime::remote::ShardServer;
 use bmonn::runtime::pjrt::{verify_exact_artifact, PjrtEngine, PjrtRuntime};
 use bmonn::util::rng::Rng;
 
@@ -57,6 +59,9 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
             EngineKind::parse(e).ok_or(format!("bad --engine {e}"))?;
     }
     cfg.shards = args.flag_usize("shards", cfg.shards)?.max(1);
+    if let Some(r) = args.flag("remote") {
+        cfg.remote = parse_endpoints(r);
+    }
     if let Some(a) = args.flag("artifacts") {
         cfg.artifact_dir = a.to_string();
     }
@@ -78,6 +83,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "graph" => cmd_graph(&args),
         "kmeans" => cmd_kmeans(&args),
         "serve" => cmd_serve(&args),
+        "shard-serve" => cmd_shard_serve(&args),
         "bench" => cmd_bench(&args),
         "selftest" => cmd_selftest(&args),
         other => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
@@ -162,9 +168,10 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
         "bmo" => {
             let res = match cfg.engine {
                 EngineKind::Pjrt => {
-                    if cfg.shards > 1 {
-                        return Err("--shards applies to host engines \
-                                    (native|scalar), not pjrt".into());
+                    if cfg.shards > 1 || !cfg.remote.is_empty() {
+                        return Err("--shards/--remote apply to host \
+                                    engines (native|scalar), not pjrt"
+                            .into());
                     }
                     let mut e = PjrtEngine::new(
                         Path::new(&cfg.artifact_dir), cfg.metric)
@@ -176,9 +183,11 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
                                     &mut rng, &mut counter)
                 }
                 kind => {
-                    // scalar/native, sharded across a row-partitioned
-                    // worker pool when --shards > 1
-                    let mut e = build_host_engine(kind, cfg.shards)?;
+                    // scalar/native; sharded across a row-partitioned
+                    // worker pool when --shards > 1, or fanned over a
+                    // shard-serve ring when --remote is given
+                    let mut e =
+                        build_host_engine(kind, cfg.shards, &cfg.remote)?;
                     knn_point_dense(&data, q, cfg.metric, &params, &mut e,
                                     &mut rng, &mut counter)
                 }
@@ -245,8 +254,8 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
     let mut counter = Counter::new();
     let results = match cfg.engine {
         EngineKind::Pjrt => {
-            if cfg.shards > 1 {
-                return Err("--shards applies to host engines \
+            if cfg.shards > 1 || !cfg.remote.is_empty() {
+                return Err("--shards/--remote apply to host engines \
                             (native|scalar), not pjrt".into());
             }
             let mut e =
@@ -258,7 +267,7 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
                                    &mut rng, &mut counter)
         }
         kind => {
-            let mut e = build_host_engine(kind, cfg.shards)?;
+            let mut e = build_host_engine(kind, cfg.shards, &cfg.remote)?;
             knn_batch_points_dense(data, &points, cfg.metric, &params,
                                    &mut e, &mut rng, &mut counter)
         }
@@ -297,7 +306,7 @@ fn cmd_graph(args: &Args) -> Result<(), String> {
     } else {
         EngineKind::Native
     };
-    let mut engine = build_host_engine(kind, cfg.shards)?;
+    let mut engine = build_host_engine(kind, cfg.shards, &cfg.remote)?;
     let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
                             &mut engine, &mut rng, &mut counter);
     let exact_units = (data.n * (data.n - 1) * data.d) as u64;
@@ -347,6 +356,12 @@ fn cmd_kmeans(args: &Args) -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
+    if !cfg.remote.is_empty() && cfg.engine != EngineKind::Native {
+        // fail at startup, not one "engine unavailable" reply at a time
+        return Err("--remote always computes with the native engine; \
+                    combine it with --engine native or drop the engine \
+                    flag".into());
+    }
     let path = args.flag("data").ok_or("--data FILE required")?;
     let data =
         loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
@@ -358,11 +373,67 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         batch_size: cfg.server_batch,
         native_engine: cfg.engine != EngineKind::Scalar,
         shards: cfg.shards,
+        remote: cfg.remote.clone(),
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(1));
+    }
+}
+
+/// `shard-serve`: load (or regenerate) one contiguous row shard of a
+/// dataset and answer pull waves over the binary wire protocol until a
+/// `shutdown` frame (or ctrl-c). A ring of `--of S` such processes —
+/// shard indices 0..S — backs `--remote` on knn/graph/serve/bench pull.
+fn cmd_shard_serve(args: &Args) -> Result<(), String> {
+    let shard = args.flag_usize("shard", 0)?;
+    let of = args.flag_usize("of", 1)?.max(1);
+    if shard >= of {
+        return Err(format!("--shard {shard} out of range for --of {of}"));
+    }
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:7979");
+    let data = if let Some(path) = args.flag("data") {
+        loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?
+    } else if let Some(spec) = args.flag("synthetic") {
+        parse_synthetic(spec)?
+    } else {
+        return Err("--data FILE or --synthetic image:N:D:SEED required"
+            .into());
+    };
+    let srv = ShardServer::start_shard_of(addr, &data, shard, of)
+        .map_err(|e| e.to_string())?;
+    let (a, b) = shard_range(shard, data.n, of);
+    println!("bmonn shard-serve: rows [{a}, {b}) of n={} d={} on {} \
+              (shard {shard}/{of}; ctrl-c or a shutdown frame stops it)",
+             data.n, data.d, srv.addr);
+    while !srv.shutdown_requested() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    println!("shutdown requested, exiting");
+    Ok(())
+}
+
+/// `kind:n:d:seed` — regenerate a synthetic dataset in-process so a ring
+/// can serve bench workloads without shipping a file around.
+fn parse_synthetic(spec: &str) -> Result<bmonn::data::DenseDataset, String> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if parts.len() != 4 {
+        return Err(format!(
+            "--synthetic expects kind:N:D:SEED (e.g. image:1000:256:42), \
+             got '{spec}'"));
+    }
+    let n: usize = parts[1].parse().map_err(|_| format!("bad N '{}'",
+                                                        parts[1]))?;
+    let d: usize = parts[2].parse().map_err(|_| format!("bad D '{}'",
+                                                        parts[2]))?;
+    let seed: u64 = parts[3].parse().map_err(|_| format!("bad SEED '{}'",
+                                                         parts[3]))?;
+    match parts[0] {
+        "image" => Ok(synthetic::image_like(n, d, seed)),
+        "gaussian" => Ok(synthetic::gaussian_iid(n, d, seed)),
+        other => Err(format!("unknown synthetic kind '{other}' \
+                              (image|gaussian)")),
     }
 }
 
@@ -384,12 +455,22 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         }
         let smoke = args.flag_bool("smoke") || quick;
         let out = args.flag("out").unwrap_or("BENCH_pull.json");
-        let (rep, json) = pull_bench::run_pull_bench(smoke, seed)?;
+        // loopback ring always runs; --remote adds a user-ring rung (its
+        // servers must load the bench dataset: shard-serve --synthetic
+        // image:N:D:SEED with the workload shape printed in the report)
+        let remote = args.flag("remote").map(parse_endpoints)
+            .unwrap_or_default();
+        let (rep, json) = pull_bench::run_pull_bench(smoke, seed, &remote)?;
         println!("{}", rep.render());
         std::fs::write(out, format!("{json}\n"))
             .map_err(|e| e.to_string())?;
         println!("wrote {out}");
         return Ok(());
+    }
+    if args.flag("remote").is_some() {
+        return Err("--remote applies to knn/graph/serve and bench pull; \
+                    figure benches generate their workloads in-process, \
+                    so no external ring can serve their rows".into());
     }
     let rep = figures::run_figure(name, quick, seed, shards)?;
     let rendered = rep.render();

@@ -1,9 +1,17 @@
 //! Runtime layer: compute engines behind the coordinator's hot path.
 //!
 //! * [`native`] — optimized rust loops (wall-clock hot path, Fig 6);
+//! * [`partition`] — the shared wave splitter: contiguous floor-boundary
+//!   row shards, slot bookkeeping, scatter-merge. Both sharded backends
+//!   below plan their waves here, so they provably split identically;
 //! * [`sharded`] — multi-core wrapper fanning waves across contiguous
 //!   row shards on a persistent worker pool, bit-identical to the
 //!   wrapped engine run single-threaded;
+//! * [`wire`] — the length-prefixed binary protocol `PullRequest` waves
+//!   and replies travel over between machines;
+//! * [`remote`] — multi-machine wrapper: a `shard-serve` TCP server per
+//!   row shard plus the [`remote::RemoteEngine`] client fanning waves
+//!   over the ring, bit-identical to a local `NativeEngine`;
 //! * [`pjrt`] — the AOT JAX/Pallas artifacts, loaded from HLO text and
 //!   executed via the PJRT C API (`xla` crate) with device-resident data;
 //! * [`artifacts`] — the manifest that binds the two worlds together.
@@ -13,19 +21,48 @@
 
 pub mod artifacts;
 pub mod native;
+pub mod partition;
+pub mod remote;
 pub mod sharded;
+pub mod wire;
 
 use crate::config::EngineKind;
 use crate::coordinator::arms::{PullEngine, ScalarEngine};
 
-/// Build the configured host-side pull engine, wrapped in
-/// [`sharded::ShardedEngine`] when `shards > 1` (`[engine] shards` /
-/// `--shards S`). The PJRT engine is constructed separately by its
-/// callers (it needs an artifact dir + metric and aligns `round_pulls`
-/// to the artifact shape), so requesting it here is an error.
-pub fn build_host_engine(kind: EngineKind, shards: usize)
+/// Build the configured host-side pull engine.
+///
+/// * `remote` non-empty (`[engine] remote` / `--remote host:p,host:p`):
+///   connect a [`remote::RemoteEngine`] to that shard-server ring — the
+///   ring's servers compute with the native engine, and a coordinator
+///   box built this way composes unchanged with the batch drivers and
+///   the query server's worker pool. Mutually exclusive with `shards`
+///   (the ring is already sharded across its endpoints).
+/// * otherwise: the local scalar/native engine, wrapped in
+///   [`sharded::ShardedEngine`] when `shards > 1` (`[engine] shards` /
+///   `--shards S`).
+///
+/// The PJRT engine is constructed separately by its callers (it needs an
+/// artifact dir + metric and aligns `round_pulls` to the artifact
+/// shape), so requesting it here is an error.
+pub fn build_host_engine(kind: EngineKind, shards: usize,
+                         remote: &[String])
                          -> Result<Box<dyn PullEngine + Send>, String> {
     let shards = shards.max(1);
+    if !remote.is_empty() {
+        if shards > 1 {
+            return Err("--shards and --remote are mutually exclusive: a \
+                        remote ring is already sharded across its \
+                        endpoints"
+                .into());
+        }
+        if kind != EngineKind::Native {
+            return Err("--remote always computes with the native engine \
+                        (that is what shard servers run); combine it \
+                        with --engine native or drop the engine flag"
+                .into());
+        }
+        return Ok(Box::new(remote::RemoteEngine::connect(remote)?));
+    }
     Ok(match kind {
         EngineKind::Scalar if shards == 1 => Box::new(ScalarEngine),
         EngineKind::Scalar => {

@@ -1,0 +1,273 @@
+//! Shared wave partitioning: the **one** splitter every sharded execution
+//! substrate uses to fan engine waves across contiguous dataset-row
+//! shards and scatter results back.
+//!
+//! Both the multi-core [`crate::runtime::sharded::ShardedEngine`] and the
+//! networked [`crate::runtime::remote::RemoteEngine`] plan their waves
+//! through [`WavePartition`], so a wave is split identically whether a
+//! shard is a worker thread or a TCP endpoint. That is what makes the two
+//! substrates provably interchangeable: `tests/sharded_parity.rs` and
+//! `tests/remote_parity.rs` pin the same bitwise contract against the
+//! same plan.
+//!
+//! The partition itself is the contiguous floor-boundary split: shard `s`
+//! of `S` owns rows `[floor(s·n/S), floor((s+1)·n/S))`. Splitting only
+//! routes each (row, request) job to its owner and remembers the caller's
+//! output slot; merging only *places* per-shard results back into those
+//! slots. No arithmetic is reordered, which is why sharded output is
+//! bitwise identical to single-threaded output for engines that compute
+//! each job independently (every engine in this repo does).
+
+use crate::coordinator::arms::PullRequest;
+
+/// Row range `[start, end)` owned by `shard` under the contiguous
+/// floor-boundary partition of `n_rows` rows into `n_shards` shards.
+#[inline]
+pub fn shard_range(shard: usize, n_rows: usize, n_shards: usize)
+                   -> (usize, usize) {
+    debug_assert!(shard < n_shards);
+    (shard * n_rows / n_shards, (shard + 1) * n_rows / n_shards)
+}
+
+/// Shard owning dataset row `row`: the unique `s` with
+/// `shard_range(s, n, S).0 <= row < shard_range(s, n, S).1`.
+#[inline]
+pub fn shard_of(row: usize, n_rows: usize, n_shards: usize) -> usize {
+    debug_assert!(row < n_rows);
+    (((row + 1) * n_shards).saturating_sub(1) / n_rows).min(n_shards - 1)
+}
+
+/// One shard's slice of the current wave: which rows it computes, where
+/// each result lands in the caller's request-major output layout, and —
+/// for `pull_batch` waves — how its rows group back into sub-requests.
+#[derive(Default)]
+pub struct ShardWave {
+    /// row ids of this shard's jobs, wave order (pull_batch: grouped by
+    /// request, in the caller's request order)
+    pub rows: Vec<u32>,
+    /// caller-layout output slot per entry of `rows`
+    pub slots: Vec<u32>,
+    /// (request index, start, len) ranges into `rows` — pull_batch only
+    pub req_ranges: Vec<(u32, u32, u32)>,
+}
+
+impl ShardWave {
+    fn clear(&mut self) {
+        self.rows.clear();
+        self.slots.clear();
+        self.req_ranges.clear();
+    }
+
+    /// Place this shard's per-job results (aligned with `rows`) back into
+    /// the caller's output layout.
+    pub fn scatter(&self, vals: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(vals.len(), self.slots.len());
+        for (&slot, &v) in self.slots.iter().zip(vals) {
+            out[slot as usize] = v;
+        }
+    }
+
+    /// Rebuild this shard's sub-requests of a batch wave: each original
+    /// request restricted to the rows this shard owns (possibly empty
+    /// sub-requests are omitted — `req_ranges` only stores non-empty
+    /// ranges). The sub-requests cover `rows` contiguously in order, so
+    /// an engine's request-major concatenated output aligns with `slots`.
+    pub fn subrequests<'a>(
+        &'a self,
+        reqs: &'a [PullRequest<'a>],
+    ) -> impl Iterator<Item = PullRequest<'a>> + 'a {
+        self.req_ranges.iter().map(move |&(ri, start, len)| {
+            let r = &reqs[ri as usize];
+            PullRequest {
+                query: r.query,
+                rows: &self.rows[start as usize..(start + len) as usize],
+                coord_ids: r.coord_ids,
+            }
+        })
+    }
+}
+
+/// Reusable per-engine wave planner: split a wave by row ownership, hand
+/// each shard its [`ShardWave`], scatter results back. Buffers are
+/// retained across waves so steady-state planning allocates nothing.
+pub struct WavePartition {
+    waves: Vec<ShardWave>,
+}
+
+impl WavePartition {
+    pub fn new(n_shards: usize) -> WavePartition {
+        assert!(n_shards > 0, "need at least one shard");
+        WavePartition {
+            waves: (0..n_shards).map(|_| ShardWave::default()).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.waves.len()
+    }
+
+    pub fn wave(&self, shard: usize) -> &ShardWave {
+        &self.waves[shard]
+    }
+
+    fn clear(&mut self) {
+        for w in &mut self.waves {
+            w.clear();
+        }
+    }
+
+    /// Plan a single-query wave (`partial_sums` / `exact_dists`): route
+    /// each of `rows` to its owning shard, remembering the caller index.
+    pub fn split_rows(&mut self, n_rows: usize, rows: &[u32]) {
+        self.clear();
+        let s = self.waves.len();
+        for (i, &r) in rows.iter().enumerate() {
+            let w = &mut self.waves[shard_of(r as usize, n_rows, s)];
+            w.rows.push(r);
+            w.slots.push(i as u32);
+        }
+    }
+
+    /// Plan a multi-request `pull_batch` wave request-major: each
+    /// request's row list is split by ownership, every shard sees its
+    /// sub-requests in the caller's request order, and slots index the
+    /// concatenated request-major output. Returns the total job count.
+    pub fn split_batch(&mut self, n_rows: usize, reqs: &[PullRequest<'_>])
+                       -> usize {
+        self.clear();
+        let s = self.waves.len();
+        let mut starts = vec![0u32; s];
+        let mut slot = 0u32;
+        for (ri, r) in reqs.iter().enumerate() {
+            for (o, start) in starts.iter_mut().enumerate() {
+                *start = self.waves[o].rows.len() as u32;
+            }
+            for &row in r.rows {
+                let w = &mut self.waves[shard_of(row as usize, n_rows, s)];
+                w.rows.push(row);
+                w.slots.push(slot);
+                slot += 1;
+            }
+            for (o, &start) in starts.iter().enumerate() {
+                let w = &mut self.waves[o];
+                let len = w.rows.len() as u32 - start;
+                if len > 0 {
+                    w.req_ranges.push((ri as u32, start, len));
+                }
+            }
+        }
+        slot as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_partition_is_contiguous_and_complete() {
+        for n in [1usize, 2, 3, 5, 8, 16, 33] {
+            for s in 1..=8usize {
+                let owners: Vec<usize> =
+                    (0..n).map(|r| shard_of(r, n, s)).collect();
+                // monotone non-decreasing, within range, and matching the
+                // floor-boundary sizes (zero-row shards allowed)
+                for w in owners.windows(2) {
+                    assert!(w[0] <= w[1]);
+                }
+                for (r, &o) in owners.iter().enumerate() {
+                    assert!(o < s, "row {r} of {n} -> shard {o} >= {s}");
+                    let (a, b) = shard_range(o, n, s);
+                    assert!(r >= a && r < b,
+                            "row {r} outside shard {o}'s range (n={n} s={s})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_tile_the_rows() {
+        for n in [0usize, 1, 4, 7, 33] {
+            for s in 1..=8usize {
+                let mut next = 0usize;
+                for o in 0..s {
+                    let (a, b) = shard_range(o, n, s);
+                    assert_eq!(a, next, "gap before shard {o} (n={n} s={s})");
+                    assert!(b >= a);
+                    next = b;
+                }
+                assert_eq!(next, n, "ranges must cover all rows");
+            }
+        }
+    }
+
+    #[test]
+    fn split_rows_scatter_roundtrips() {
+        // scatter(row id as payload) must reconstruct the caller's layout
+        let rows: Vec<u32> = vec![6, 0, 6, 3, 5, 1, 2, 4, 0];
+        let n = 7usize;
+        for s in 1..=8usize {
+            let mut part = WavePartition::new(s);
+            part.split_rows(n, &rows);
+            let mut out = vec![-1.0f64; rows.len()];
+            let mut total = 0usize;
+            for o in 0..s {
+                let w = part.wave(o);
+                assert_eq!(w.rows.len(), w.slots.len());
+                total += w.rows.len();
+                let vals: Vec<f64> =
+                    w.rows.iter().map(|&r| r as f64).collect();
+                w.scatter(&vals, &mut out);
+            }
+            assert_eq!(total, rows.len(), "every job routed exactly once");
+            let want: Vec<f64> = rows.iter().map(|&r| r as f64).collect();
+            assert_eq!(out, want, "s={s}");
+        }
+    }
+
+    #[test]
+    fn split_batch_slots_are_a_permutation_and_subrequests_align() {
+        let queries: Vec<Vec<f32>> =
+            (0..3).map(|i| vec![i as f32; 4]).collect();
+        let rowsets: Vec<Vec<u32>> =
+            vec![vec![0, 4, 2, 4], vec![], vec![3, 1, 0]];
+        let coords: Vec<u32> = vec![0, 2];
+        let reqs: Vec<PullRequest> = (0..3)
+            .map(|i| PullRequest {
+                query: &queries[i],
+                rows: &rowsets[i],
+                coord_ids: &coords,
+            })
+            .collect();
+        let n = 5usize;
+        for s in 1..=6usize {
+            let mut part = WavePartition::new(s);
+            let total = part.split_batch(n, &reqs);
+            assert_eq!(total, 7);
+            let mut seen = vec![false; total];
+            for o in 0..s {
+                let w = part.wave(o);
+                for &slot in &w.slots {
+                    assert!(!seen[slot as usize], "slot {slot} routed twice");
+                    seen[slot as usize] = true;
+                }
+                // sub-requests tile this shard's rows in order
+                let mut covered = 0usize;
+                for sub in w.subrequests(&reqs) {
+                    assert!(!sub.rows.is_empty());
+                    assert_eq!(sub.rows.as_ptr(),
+                               w.rows[covered..].as_ptr());
+                    covered += sub.rows.len();
+                }
+                assert_eq!(covered, w.rows.len());
+            }
+            assert!(seen.iter().all(|&b| b), "every slot filled (s={s})");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        let _ = WavePartition::new(0);
+    }
+}

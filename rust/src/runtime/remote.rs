@@ -1,0 +1,802 @@
+//! Network-distributed pull execution: fan engine waves over a ring of
+//! TCP **shard servers**, each owning a contiguous row range of the
+//! dataset.
+//!
+//! Two halves:
+//!
+//! * [`ShardServer`] — the `bmonn shard-serve` backend. It holds rows
+//!   `[row_start, row_end)` of the global dataset and answers
+//!   `partial_sums` / `exact_dists` / `pull_batch` waves over the
+//!   length-prefixed binary protocol in [`crate::runtime::wire`],
+//!   computing with a per-connection `NativeEngine`. Rows travel as
+//!   global ids and are rebased locally; anything outside the owned
+//!   range is answered with a wire `Error`, never a crash.
+//! * [`RemoteEngine`] — a [`PullEngine`] holding one persistent
+//!   connection per shard endpoint. Every wave is split with the same
+//!   [`crate::runtime::partition::WavePartition`] the in-process
+//!   [`crate::runtime::sharded::ShardedEngine`] uses (one splitter,
+//!   shared code), sub-waves fan out concurrently on scoped threads, and
+//!   replies scatter back by slot — so remote output is **bitwise
+//!   identical** to a single-threaded `NativeEngine` for any ring size
+//!   (`tests/remote_parity.rs` pins this case-for-case against
+//!   `tests/sharded_parity.rs`).
+//!
+//! **Ring contract.** Endpoint `i` of `S` must serve exactly
+//! `shard_range(i, n, S)`; [`RemoteEngine::connect`] verifies this
+//! against each server's handshake and refuses a ring that tiles the
+//! dataset any other way. The coordinator's dataset must match the
+//! ring's (n, d) — a mismatched wave panics with a clear message.
+//!
+//! **Fault model.** A shard death mid-wave surfaces as a panic from the
+//! wave call (reads carry a timeout, so a hung peer cannot strand the
+//! caller). The query server's worker loop catches that panic, answers
+//! the affected queries with error responses, and rebuilds — i.e.
+//! reconnects — the engine (`coordinator::server`), extending the
+//! in-process worker-survival guarantee across the network boundary
+//! (`tests/remote_fault.rs`).
+
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
+               ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::arms::{PullEngine, PullRequest};
+use crate::data::dense::{DenseDataset, Metric};
+use crate::runtime::native::NativeEngine;
+use crate::runtime::partition::{shard_range, ShardWave, WavePartition};
+use crate::runtime::wire::{self, Message, WireRequest};
+
+/// Default per-connection read/write timeout: long enough for a big wave
+/// to compute server-side, short enough that a wedged peer can never
+/// strand a coordinator worker forever.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------
+// shard server
+// ---------------------------------------------------------------------
+
+struct ShardShared {
+    /// this shard's rows only (global rows `[row_start, row_start + n)`)
+    local: DenseDataset,
+    n_total: usize,
+    row_start: usize,
+    shutdown: AtomicBool,
+    /// live connections (by id), shut down on stop so blocked I/O
+    /// unblocks; each entry is removed when its handler thread exits, so
+    /// a long-running server does not leak one fd per past connection
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+}
+
+/// A running shard server (see module docs). Stops on drop; a wire
+/// `Shutdown` message also stops it (that is how a `shard-serve` CLI
+/// process is told to exit remotely).
+pub struct ShardServer {
+    pub addr: SocketAddr,
+    shared: Arc<ShardShared>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Serve `local` (the rows `[row_start, row_start + local.n)` of a
+    /// global `n_total`-row dataset) on `addr` (`"host:0"` picks an
+    /// ephemeral port; see `self.addr`).
+    pub fn start(addr: &str, local: DenseDataset, n_total: usize,
+                 row_start: usize) -> io::Result<ShardServer> {
+        assert!(row_start + local.n <= n_total,
+                "shard rows [{row_start}, {}) exceed n_total={n_total}",
+                row_start + local.n);
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(ShardShared {
+            local,
+            n_total,
+            row_start,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("bmonn-shard-serve".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .expect("spawn shard-serve accept thread");
+        Ok(ShardServer { addr, shared, accept_handle: Some(accept_handle) })
+    }
+
+    /// Slice shard `shard` of `n_shards` out of `data` (the same
+    /// floor-boundary partition `RemoteEngine` splits waves with) and
+    /// serve it.
+    pub fn start_shard_of(addr: &str, data: &DenseDataset, shard: usize,
+                          n_shards: usize) -> io::Result<ShardServer> {
+        let (a, b) = shard_range(shard, data.n, n_shards);
+        let mut rows = Vec::with_capacity((b - a) * data.d);
+        for r in a..b {
+            rows.extend_from_slice(data.row(r));
+        }
+        Self::start(addr, DenseDataset::new(b - a, data.d, rows), data.n, a)
+    }
+
+    pub fn endpoint(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// True once a wire `Shutdown` was received (or `stop` was called) —
+    /// the `shard-serve` CLI polls this to know when to exit.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop serving: kills live connections (blocked peer reads see EOF,
+    /// like a process death would produce) and joins the accept thread.
+    pub fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for (_, s) in self.shared.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start one in-process shard server per shard of `data` on loopback
+/// ephemeral ports — the zero-infrastructure ring used by the parity
+/// tests and the `bench pull` distributed rung.
+pub fn spawn_loopback_ring(data: &DenseDataset, n_shards: usize)
+                           -> Result<(Vec<ShardServer>, Vec<String>), String> {
+    let mut servers = Vec::with_capacity(n_shards);
+    let mut endpoints = Vec::with_capacity(n_shards);
+    for i in 0..n_shards {
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", data, i,
+                                              n_shards)
+            .map_err(|e| format!("starting loopback shard {i}: {e}"))?;
+        endpoints.push(srv.endpoint());
+        servers.push(srv);
+    }
+    Ok((servers, endpoints))
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ShardShared>) {
+    let mut handles = Vec::new();
+    let mut next_id = 0u64;
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let id = next_id;
+                next_id += 1;
+                if let Ok(clone) = stream.try_clone() {
+                    shared.conns.lock().unwrap().push((id, clone));
+                }
+                let sh = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    let _ = serve_conn(stream, sh.clone());
+                    // deregister so past connections don't pin fds
+                    sh.conns.lock().unwrap().retain(|(c, _)| *c != id);
+                }));
+                handles.retain(|h| !h.is_finished());
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+    // a wire Shutdown set the flag without going through stop(): kill
+    // the remaining connections so their blocked reads return, then reap
+    for (_, s) in shared.conns.lock().unwrap().iter() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// One connection: framed request/reply until disconnect or `Shutdown`.
+/// A panic in the compute path answers with a wire `Error` and a fresh
+/// engine instead of dropping the connection.
+fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
+              -> io::Result<()> {
+    stream.set_nodelay(true)?;
+    let mut engine = NativeEngine::default();
+    let mut inbuf = Vec::new();
+    let mut outbuf = Vec::new();
+    let mut sums = Vec::new();
+    let mut sqs = Vec::new();
+    loop {
+        if wire::read_frame(&mut stream, &mut inbuf).is_err() {
+            return Ok(()); // disconnect, kill, or corrupt framing
+        }
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                handle_frame(&shared, &mut engine, &inbuf, &mut outbuf,
+                             &mut sums, &mut sqs)
+            }));
+        let quit = match outcome {
+            Ok(q) => q,
+            Err(_) => {
+                engine = NativeEngine::default();
+                wire::encode_error(&mut outbuf,
+                                   "internal error: shard compute panicked");
+                false
+            }
+        };
+        wire::write_frame(&mut stream, &outbuf)?;
+        if quit {
+            return Ok(());
+        }
+    }
+}
+
+/// Decode + dispatch one request; returns true when the connection (and
+/// server) should wind down.
+fn handle_frame(sh: &ShardShared, engine: &mut NativeEngine, payload: &[u8],
+                out: &mut Vec<u8>, sums: &mut Vec<f64>, sqs: &mut Vec<f64>)
+                -> bool {
+    let msg = match Message::decode(payload) {
+        Err(e) => {
+            wire::encode_error(out, &format!("bad frame: {e}"));
+            return false;
+        }
+        Ok(m) => m,
+    };
+    match msg {
+        Message::Hello => wire::encode_hello_ack(
+            out,
+            sh.n_total as u64,
+            sh.local.d as u64,
+            sh.row_start as u64,
+            (sh.row_start + sh.local.n) as u64,
+        ),
+        Message::Shutdown => {
+            sh.shutdown.store(true, Ordering::SeqCst);
+            wire::encode_ack(out);
+            return true;
+        }
+        Message::PartialSums { metric, query, rows, coord_ids } => {
+            match validate_and_rebase(sh, &query, &rows, Some(&coord_ids)) {
+                Err(e) => wire::encode_error(out, &e),
+                Ok(local_rows) => {
+                    engine.partial_sums(&sh.local, &query, &local_rows,
+                                        &coord_ids, metric, sums, sqs);
+                    wire::encode_sums(out, sums, sqs);
+                }
+            }
+        }
+        Message::ExactDists { metric, query, rows } => {
+            match validate_and_rebase(sh, &query, &rows, None) {
+                Err(e) => wire::encode_error(out, &e),
+                Ok(local_rows) => {
+                    engine.exact_dists(&sh.local, &query, &local_rows,
+                                       metric, sums);
+                    wire::encode_dists(out, sums);
+                }
+            }
+        }
+        Message::PullBatch { metric, reqs } => {
+            match batch_compute(sh, engine, metric, &reqs, sums, sqs) {
+                Err(e) => wire::encode_error(out, &e),
+                Ok(()) => wire::encode_sums(out, sums, sqs),
+            }
+        }
+        other => wire::encode_error(
+            out,
+            &format!("unexpected {} request", other.kind()),
+        ),
+    }
+    false
+}
+
+/// Check dims/coords and map global row ids onto this shard's local
+/// `[0, local.n)` range.
+fn validate_and_rebase(sh: &ShardShared, query: &[f32], rows: &[u32],
+                       coord_ids: Option<&[u32]>)
+                       -> Result<Vec<u32>, String> {
+    if query.len() != sh.local.d {
+        return Err(format!("query dim {} != dataset dim {}", query.len(),
+                           sh.local.d));
+    }
+    if let Some(cs) = coord_ids {
+        if let Some(&j) = cs.iter().find(|&&j| j as usize >= sh.local.d) {
+            return Err(format!("coordinate {j} out of range (d={})",
+                               sh.local.d));
+        }
+    }
+    let (a, b) = (sh.row_start, sh.row_start + sh.local.n);
+    let mut local = Vec::with_capacity(rows.len());
+    for &r in rows {
+        let r = r as usize;
+        if r < a || r >= b {
+            return Err(format!(
+                "row {r} outside this shard's range [{a}, {b})"));
+        }
+        local.push((r - a) as u32);
+    }
+    Ok(local)
+}
+
+/// Rebase and resolve a `PullBatch` wave with one engine pass; outputs
+/// land in `sums`/`sqs` concatenated request-major, exactly as
+/// [`PullEngine::pull_batch`] specifies.
+fn batch_compute(sh: &ShardShared, engine: &mut NativeEngine,
+                 metric: Metric, reqs: &[WireRequest], sums: &mut Vec<f64>,
+                 sqs: &mut Vec<f64>) -> Result<(), String> {
+    let mut flat: Vec<u32> = Vec::new();
+    let mut bounds = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        let start = flat.len();
+        let local = validate_and_rebase(sh, &r.query, &r.rows,
+                                        Some(&r.coord_ids))?;
+        flat.extend_from_slice(&local);
+        bounds.push((start, flat.len()));
+    }
+    let views: Vec<PullRequest> = reqs
+        .iter()
+        .zip(&bounds)
+        .map(|(r, &(a, b))| PullRequest {
+            query: &r.query,
+            rows: &flat[a..b],
+            coord_ids: &r.coord_ids,
+        })
+        .collect();
+    engine.pull_batch(&sh.local, &views, metric, sums, sqs);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// remote engine (client)
+// ---------------------------------------------------------------------
+
+/// One persistent shard connection plus its reusable frame buffers.
+struct RemoteShard {
+    endpoint: String,
+    stream: TcpStream,
+    sendbuf: Vec<u8>,
+    recvbuf: Vec<u8>,
+}
+
+type ShardReply = Result<(Vec<f64>, Vec<f64>), String>;
+
+impl RemoteShard {
+    fn round_trip(&mut self) -> Result<Message, String> {
+        wire::write_frame(&mut self.stream, &self.sendbuf)
+            .map_err(|e| format!("shard {}: send failed: {e}",
+                                 self.endpoint))?;
+        wire::read_frame(&mut self.stream, &mut self.recvbuf)
+            .map_err(|e| format!("shard {}: recv failed: {e}",
+                                 self.endpoint))?;
+        Message::decode(&self.recvbuf)
+            .map_err(|e| format!("shard {}: bad reply: {e}", self.endpoint))
+    }
+
+    fn expect_sums(&mut self, expected: usize) -> ShardReply {
+        match self.round_trip()? {
+            Message::Sums { sum, sq } => {
+                if sum.len() != expected {
+                    return Err(format!(
+                        "shard {}: {} results for {expected} requested rows",
+                        self.endpoint,
+                        sum.len()
+                    ));
+                }
+                Ok((sum, sq))
+            }
+            Message::Error { msg } => {
+                Err(format!("shard {}: {msg}", self.endpoint))
+            }
+            other => Err(format!("shard {}: unexpected {} reply",
+                                 self.endpoint, other.kind())),
+        }
+    }
+
+    fn expect_dists(&mut self, expected: usize) -> Result<Vec<f64>, String> {
+        match self.round_trip()? {
+            Message::Dists { vals } => {
+                if vals.len() != expected {
+                    return Err(format!(
+                        "shard {}: {} results for {expected} requested rows",
+                        self.endpoint,
+                        vals.len()
+                    ));
+                }
+                Ok(vals)
+            }
+            Message::Error { msg } => {
+                Err(format!("shard {}: {msg}", self.endpoint))
+            }
+            other => Err(format!("shard {}: unexpected {} reply",
+                                 self.endpoint, other.kind())),
+        }
+    }
+}
+
+/// Run `per_shard` for every shard that owns part of the current wave.
+/// With more than one live sub-wave the round trips overlap on scoped
+/// threads; a single live sub-wave skips the spawn and runs inline.
+fn fan_out<F>(conns: &mut [RemoteShard], part: &WavePartition,
+              per_shard: F) -> Vec<ShardReply>
+where
+    F: Fn(&mut RemoteShard, &ShardWave) -> ShardReply + Sync,
+{
+    let live = (0..conns.len())
+        .filter(|&i| !part.wave(i).rows.is_empty())
+        .count();
+    if live <= 1 {
+        return conns
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| {
+                let w = part.wave(i);
+                if w.rows.is_empty() {
+                    Ok((Vec::new(), Vec::new()))
+                } else {
+                    per_shard(c, w)
+                }
+            })
+            .collect();
+    }
+    let n = conns.len();
+    std::thread::scope(|sc| {
+        let per_shard = &per_shard;
+        // spawn only for shards that actually own work — an 8-endpoint
+        // ring serving a 2-shard wave pays 2 spawns, not 8
+        let handles: Vec<_> = conns
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| !part.wave(*i).rows.is_empty())
+            .map(|(i, c)| {
+                let w = part.wave(i);
+                (i, sc.spawn(move || per_shard(c, w)))
+            })
+            .collect();
+        let mut results: Vec<ShardReply> =
+            (0..n).map(|_| Ok((Vec::new(), Vec::new()))).collect();
+        for (i, h) in handles {
+            results[i] = h.join().unwrap_or_else(|_| {
+                Err("remote shard I/O thread panicked".into())
+            });
+        }
+        results
+    })
+}
+
+/// Dial one endpoint, honoring `timeout` during the connect phase too —
+/// a blackholed host (no RST) must not strand the caller for the OS SYN
+/// retry window.
+fn connect_endpoint(ep: &str, timeout: Option<Duration>)
+                    -> io::Result<TcpStream> {
+    let Some(t) = timeout else {
+        return TcpStream::connect(ep);
+    };
+    let addrs: Vec<SocketAddr> = ep.to_socket_addrs()?.collect();
+    let mut last_err = None;
+    for addr in addrs {
+        match TcpStream::connect_timeout(&addr, t) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidInput,
+                       "endpoint resolved to no addresses")
+    }))
+}
+
+/// Networked [`PullEngine`] over a ring of shard servers — see the
+/// module docs for the ring contract, determinism and fault model.
+pub struct RemoteEngine {
+    conns: Vec<RemoteShard>,
+    n_total: usize,
+    d: usize,
+    partition: WavePartition,
+}
+
+impl RemoteEngine {
+    /// Connect to every endpoint, handshake, and verify the ring tiles
+    /// the dataset with the canonical floor-boundary partition.
+    pub fn connect(endpoints: &[String]) -> Result<RemoteEngine, String> {
+        Self::connect_with_timeout(endpoints, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// [`RemoteEngine::connect`] with an explicit per-connection I/O
+    /// timeout (`None` = block forever; tests use short timeouts).
+    pub fn connect_with_timeout(endpoints: &[String],
+                                timeout: Option<Duration>)
+                                -> Result<RemoteEngine, String> {
+        if endpoints.is_empty() {
+            return Err("remote engine needs at least one shard endpoint"
+                .into());
+        }
+        let s = endpoints.len();
+        let mut conns = Vec::with_capacity(s);
+        let mut shape: Option<(usize, usize)> = None;
+        for (i, ep) in endpoints.iter().enumerate() {
+            let stream = connect_endpoint(ep, timeout)
+                .map_err(|e| format!("connecting shard {i} ({ep}): {e}"))?;
+            stream.set_nodelay(true).map_err(|e| e.to_string())?;
+            stream.set_read_timeout(timeout).map_err(|e| e.to_string())?;
+            stream.set_write_timeout(timeout).map_err(|e| e.to_string())?;
+            let mut shard = RemoteShard {
+                endpoint: ep.clone(),
+                stream,
+                sendbuf: Vec::new(),
+                recvbuf: Vec::new(),
+            };
+            wire::encode_hello(&mut shard.sendbuf);
+            let (n, d, a, b) = match shard.round_trip()? {
+                Message::HelloAck { n_total, d, row_start, row_end } => {
+                    (n_total as usize, d as usize, row_start as usize,
+                     row_end as usize)
+                }
+                other => {
+                    return Err(format!(
+                        "shard {i} ({ep}): unexpected {} handshake reply",
+                        other.kind()))
+                }
+            };
+            match shape {
+                None => shape = Some((n, d)),
+                Some((n0, d0)) if (n0, d0) != (n, d) => {
+                    return Err(format!(
+                        "shard {i} ({ep}) serves n={n} d={d} but shard 0 \
+                         serves n={n0} d={d0} — the ring must load one \
+                         dataset"))
+                }
+                Some(_) => {}
+            }
+            let (want_a, want_b) = shard_range(i, n, s);
+            if (a, b) != (want_a, want_b) {
+                return Err(format!(
+                    "shard {i} ({ep}) serves rows [{a}, {b}) but the \
+                     {s}-way partition of n={n} assigns [{want_a}, \
+                     {want_b}) — start it as shard {i} of {s}"));
+            }
+            conns.push(shard);
+        }
+        let (n_total, d) = shape.unwrap();
+        Ok(RemoteEngine {
+            conns,
+            n_total,
+            d,
+            partition: WavePartition::new(s),
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// The ring's global dataset shape, learned at handshake.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n_total, self.d)
+    }
+
+    fn check_dataset(&self, data: &DenseDataset) {
+        assert!(
+            data.n == self.n_total && data.d == self.d,
+            "remote ring serves n={} d={} but this wave's dataset is n={} \
+             d={} — every shard server must load the same dataset as the \
+             coordinator",
+            self.n_total, self.d, data.n, data.d
+        );
+    }
+
+    fn scatter2(&self, results: Vec<ShardReply>, out_sum: &mut [f64],
+                out_sq: &mut [f64]) {
+        for (i, res) in results.into_iter().enumerate() {
+            match res {
+                Ok((sum, sq)) => {
+                    let w = self.partition.wave(i);
+                    w.scatter(&sum, out_sum);
+                    w.scatter(&sq, out_sq);
+                }
+                Err(e) => panic!("remote pull wave failed: {e}"),
+            }
+        }
+    }
+}
+
+impl PullEngine for RemoteEngine {
+    fn partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        self.check_dataset(data);
+        out_sum.clear();
+        out_sq.clear();
+        out_sum.resize(rows.len(), 0.0);
+        out_sq.resize(rows.len(), 0.0);
+        self.partition.split_rows(data.n, rows);
+        let results = fan_out(&mut self.conns, &self.partition,
+                              |shard, wave| {
+            wire::encode_partial_sums(&mut shard.sendbuf, metric, query,
+                                      &wave.rows, coord_ids);
+            shard.expect_sums(wave.rows.len())
+        });
+        self.scatter2(results, out_sum, out_sq);
+    }
+
+    fn exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+        out: &mut Vec<f64>,
+    ) {
+        self.check_dataset(data);
+        out.clear();
+        out.resize(rows.len(), 0.0);
+        self.partition.split_rows(data.n, rows);
+        let results = fan_out(&mut self.conns, &self.partition,
+                              |shard, wave| {
+            wire::encode_exact_dists(&mut shard.sendbuf, metric, query,
+                                     &wave.rows);
+            shard.expect_dists(wave.rows.len()).map(|v| (v, Vec::new()))
+        });
+        for (i, res) in results.into_iter().enumerate() {
+            match res {
+                Ok((vals, _)) => self.partition.wave(i).scatter(&vals, out),
+                Err(e) => panic!("remote exact wave failed: {e}"),
+            }
+        }
+    }
+
+    fn pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+        out_sum: &mut Vec<f64>,
+        out_sq: &mut Vec<f64>,
+    ) {
+        self.check_dataset(data);
+        let total = self.partition.split_batch(data.n, reqs);
+        out_sum.clear();
+        out_sq.clear();
+        out_sum.resize(total, 0.0);
+        out_sq.resize(total, 0.0);
+        let results = fan_out(&mut self.conns, &self.partition,
+                              |shard, wave| {
+            let sub: Vec<PullRequest> = wave.subrequests(reqs).collect();
+            wire::encode_pull_batch(&mut shard.sendbuf, metric, &sub);
+            shard.expect_sums(wave.rows.len())
+        });
+        self.scatter2(results, out_sum, out_sq);
+    }
+
+    fn name(&self) -> &'static str {
+        "remote"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn raw_round_trip(stream: &mut TcpStream, payload: &[u8]) -> Message {
+        wire::write_frame(stream, payload).unwrap();
+        let mut buf = Vec::new();
+        wire::read_frame(stream, &mut buf).unwrap();
+        Message::decode(&buf).unwrap()
+    }
+
+    #[test]
+    fn handshake_reports_shape_and_shutdown_stops_the_server() {
+        let ds = synthetic::gaussian_iid(10, 8, 1);
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 1, 2)
+            .unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        let mut buf = Vec::new();
+        wire::encode_hello(&mut buf);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::HelloAck { n_total, d, row_start, row_end } => {
+                assert_eq!((n_total, d), (10, 8));
+                assert_eq!((row_start, row_end), (5, 10));
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        wire::encode_shutdown(&mut buf);
+        assert_eq!(raw_round_trip(&mut stream, &buf), Message::Ack);
+        assert!(srv.shutdown_requested());
+    }
+
+    #[test]
+    fn server_answers_errors_for_invalid_requests() {
+        let ds = synthetic::gaussian_iid(12, 6, 2);
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 3)
+            .unwrap(); // owns rows [0, 4)
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        let q = vec![0.0f32; 6];
+        let mut buf = Vec::new();
+        // out-of-range row
+        wire::encode_partial_sums(&mut buf, Metric::L2Sq, &q, &[7], &[0]);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::Error { msg } => assert!(msg.contains("row 7")),
+            other => panic!("unexpected {}", other.kind()),
+        }
+        // wrong query dim
+        wire::encode_exact_dists(&mut buf, Metric::L1, &[1.0], &[0]);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::Error { msg } => assert!(msg.contains("dim")),
+            other => panic!("unexpected {}", other.kind()),
+        }
+        // coordinate out of range
+        wire::encode_partial_sums(&mut buf, Metric::L1, &q, &[1], &[99]);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::Error { msg } => assert!(msg.contains("coordinate")),
+            other => panic!("unexpected {}", other.kind()),
+        }
+        // garbage payload: error reply, connection stays usable
+        match raw_round_trip(&mut stream, &[42, 1, 2]) {
+            Message::Error { msg } => assert!(msg.contains("bad frame")),
+            other => panic!("unexpected {}", other.kind()),
+        }
+        wire::encode_partial_sums(&mut buf, Metric::L1, &q, &[1], &[0]);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::Sums { sum, sq } => {
+                assert_eq!(sum.len(), 1);
+                assert_eq!(sq.len(), 1);
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn connect_rejects_a_ring_that_does_not_tile_the_dataset() {
+        let ds = synthetic::gaussian_iid(9, 4, 3);
+        // both servers claim shard 0 of 2 — the second endpoint's range
+        // does not match the partition's assignment for index 1
+        let s0 = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 2)
+            .unwrap();
+        let s1 = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 2)
+            .unwrap();
+        let eps = vec![s0.endpoint(), s1.endpoint()];
+        let err = RemoteEngine::connect(&eps).unwrap_err();
+        assert!(err.contains("partition"), "got: {err}");
+        // mismatched dataset shapes are rejected too
+        let other = synthetic::gaussian_iid(7, 4, 4);
+        let s2 = ShardServer::start_shard_of("127.0.0.1:0", &other, 1, 2)
+            .unwrap();
+        let eps = vec![s0.endpoint(), s2.endpoint()];
+        let err = RemoteEngine::connect(&eps).unwrap_err();
+        assert!(err.contains("one dataset") || err.contains("partition"),
+                "got: {err}");
+    }
+
+    #[test]
+    fn wave_against_a_mismatched_dataset_panics_with_context() {
+        let ds = synthetic::gaussian_iid(8, 4, 5);
+        let (_ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
+        let mut eng = RemoteEngine::connect(&eps).unwrap();
+        assert_eq!(eng.shape(), (8, 4));
+        assert_eq!(eng.n_shards(), 2);
+        assert_eq!(eng.name(), "remote");
+        let wrong = synthetic::gaussian_iid(9, 4, 6);
+        let q = wrong.row_vec(0);
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let (mut s, mut sq) = (Vec::new(), Vec::new());
+                eng.partial_sums(&wrong, &q, &[0], &[0], Metric::L2Sq,
+                                 &mut s, &mut sq);
+            }))
+            .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("same dataset"), "got: {msg}");
+    }
+}

@@ -5,9 +5,11 @@
 //! rows into `S` contiguous shards, each owned by one worker of a
 //! persistent [`ScopedPool`] (std threads only — the default build stays
 //! dependency-free). Every `partial_sums` / `exact_dists` / `pull_batch`
-//! wave is split by row ownership, executed per shard by a per-shard
-//! clone of the inner engine, and scattered back into the caller's
-//! request-major output layout.
+//! wave is planned by the shared splitter in
+//! [`crate::runtime::partition`] — the same [`WavePartition`] the
+//! networked `runtime::remote::RemoteEngine` fans waves over TCP with —
+//! executed per shard by a per-shard clone of the inner engine, and
+//! scattered back into the caller's request-major output layout.
 //!
 //! **Determinism.** Every engine in this repo computes each (row, query,
 //! coords) job independently of the other jobs in a wave — the unrolled
@@ -28,19 +30,11 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::arms::{PullEngine, PullRequest};
 use crate::data::dense::{DenseDataset, Metric};
+use crate::runtime::partition::WavePartition;
 
 /// Waves below this many coordinate operations run inline on shard 0
 /// instead of paying the pool dispatch round-trip (~tens of µs).
 const MIN_PARALLEL_OPS: usize = 16384;
-
-/// Shard owning dataset row `row` under the contiguous equal partition
-/// of `n_rows` rows into `n_shards` shards: shard `s` covers
-/// `[floor(s·n/S), floor((s+1)·n/S))`.
-#[inline]
-fn shard_of(row: usize, n_rows: usize, n_shards: usize) -> usize {
-    debug_assert!(row < n_rows);
-    (((row + 1) * n_shards).saturating_sub(1) / n_rows).min(n_shards - 1)
-}
 
 /// Lifetime-erased `&(dyn Fn(usize) + Sync)` handed to pool workers.
 /// Safe to send because [`ScopedPool::run`] blocks until every worker
@@ -177,17 +171,11 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
     }
 }
 
-/// Per-shard slice of the current wave plus the shard's own engine.
-/// Workers touch only their own entry (behind an uncontended Mutex).
+/// One shard's engine plus its output scratch. Workers touch only their
+/// own entry (behind an uncontended Mutex); the wave plan itself lives
+/// in the engine-level [`WavePartition`], shared read-only.
 struct ShardState<E> {
     engine: E,
-    /// row ids of this shard's jobs, wave order (pull_batch: grouped by
-    /// request, ascending)
-    rows: Vec<u32>,
-    /// caller-layout output slot per entry of `rows`
-    slots: Vec<u32>,
-    /// (request index, start, len) ranges into `rows` — pull_batch only
-    req_ranges: Vec<(u32, u32, u32)>,
     out_sum: Vec<f64>,
     out_sq: Vec<f64>,
 }
@@ -198,6 +186,7 @@ struct ShardState<E> {
 /// factory (`[engine] shards` / `--shards`).
 pub struct ShardedEngine<E> {
     shards: Vec<Mutex<ShardState<E>>>,
+    partition: WavePartition,
     /// present only when there is more than one shard
     pool: Option<ScopedPool>,
 }
@@ -211,30 +200,17 @@ impl<E: PullEngine + Clone + Send> ShardedEngine<E> {
             .map(|_| {
                 Mutex::new(ShardState {
                     engine: engine.clone(),
-                    rows: Vec::new(),
-                    slots: Vec::new(),
-                    req_ranges: Vec::new(),
                     out_sum: Vec::new(),
                     out_sq: Vec::new(),
                 })
             })
             .collect();
         let pool = if s > 1 { Some(ScopedPool::new(s)) } else { None };
-        ShardedEngine { shards, pool }
+        ShardedEngine { shards, partition: WavePartition::new(s), pool }
     }
 
     pub fn n_shards(&self) -> usize {
         self.shards.len()
-    }
-
-    /// Clear per-shard wave scratch.
-    fn reset_waves(&mut self) {
-        for sh in &mut self.shards {
-            let st = sh.get_mut().unwrap();
-            st.rows.clear();
-            st.slots.clear();
-            st.req_ranges.clear();
-        }
     }
 }
 
@@ -261,27 +237,22 @@ impl<E: PullEngine + Clone + Send> PullEngine for ShardedEngine<E> {
         out_sq.clear();
         out_sum.resize(rows.len(), 0.0);
         out_sq.resize(rows.len(), 0.0);
-        self.reset_waves();
-        for (i, &r) in rows.iter().enumerate() {
-            let o = shard_of(r as usize, data.n, s);
-            let st = self.shards[o].get_mut().unwrap();
-            st.rows.push(r);
-            st.slots.push(i as u32);
-        }
+        self.partition.split_rows(data.n, rows);
+        let part = &self.partition;
         let shards = &self.shards;
         self.pool.as_mut().unwrap().run(&|i: usize| {
             let mut guard = shards[i].lock().unwrap();
             let st = &mut *guard;
-            st.engine.partial_sums(data, query, &st.rows, coord_ids,
+            let wave = part.wave(i);
+            st.engine.partial_sums(data, query, &wave.rows, coord_ids,
                                    metric, &mut st.out_sum,
                                    &mut st.out_sq);
         });
-        for sh in &mut self.shards {
+        for (i, sh) in self.shards.iter_mut().enumerate() {
             let st = sh.get_mut().unwrap();
-            for (j, &slot) in st.slots.iter().enumerate() {
-                out_sum[slot as usize] = st.out_sum[j];
-                out_sq[slot as usize] = st.out_sq[j];
-            }
+            let wave = self.partition.wave(i);
+            wave.scatter(&st.out_sum, out_sum);
+            wave.scatter(&st.out_sq, out_sq);
         }
     }
 
@@ -302,25 +273,19 @@ impl<E: PullEngine + Clone + Send> PullEngine for ShardedEngine<E> {
         }
         out.clear();
         out.resize(rows.len(), 0.0);
-        self.reset_waves();
-        for (i, &r) in rows.iter().enumerate() {
-            let o = shard_of(r as usize, data.n, s);
-            let st = self.shards[o].get_mut().unwrap();
-            st.rows.push(r);
-            st.slots.push(i as u32);
-        }
+        self.partition.split_rows(data.n, rows);
+        let part = &self.partition;
         let shards = &self.shards;
         self.pool.as_mut().unwrap().run(&|i: usize| {
             let mut guard = shards[i].lock().unwrap();
             let st = &mut *guard;
-            st.engine.exact_dists(data, query, &st.rows, metric,
+            let wave = part.wave(i);
+            st.engine.exact_dists(data, query, &wave.rows, metric,
                                   &mut st.out_sum);
         });
-        for sh in &mut self.shards {
+        for (i, sh) in self.shards.iter_mut().enumerate() {
             let st = sh.get_mut().unwrap();
-            for (j, &slot) in st.slots.iter().enumerate() {
-                out[slot as usize] = st.out_sum[j];
-            }
+            self.partition.wave(i).scatter(&st.out_sum, out);
         }
     }
 
@@ -346,59 +311,26 @@ impl<E: PullEngine + Clone + Send> PullEngine for ShardedEngine<E> {
             st.engine.pull_batch(data, reqs, metric, out_sum, out_sq);
             return;
         }
-        let total: usize = reqs.iter().map(|r| r.rows.len()).sum();
+        let total = self.partition.split_batch(data.n, reqs);
         out_sum.clear();
         out_sq.clear();
         out_sum.resize(total, 0.0);
         out_sq.resize(total, 0.0);
-        self.reset_waves();
-        let mut starts = vec![0u32; s];
-        let mut slot = 0u32;
-        for (ri, r) in reqs.iter().enumerate() {
-            for (o, start) in starts.iter_mut().enumerate() {
-                *start = self.shards[o].get_mut().unwrap().rows.len() as u32;
-            }
-            for &row in r.rows {
-                let o = shard_of(row as usize, data.n, s);
-                let st = self.shards[o].get_mut().unwrap();
-                st.rows.push(row);
-                st.slots.push(slot);
-                slot += 1;
-            }
-            for (o, &start) in starts.iter().enumerate() {
-                let st = self.shards[o].get_mut().unwrap();
-                let len = st.rows.len() as u32 - start;
-                if len > 0 {
-                    st.req_ranges.push((ri as u32, start, len));
-                }
-            }
-        }
+        let part = &self.partition;
         let shards = &self.shards;
         self.pool.as_mut().unwrap().run(&|i: usize| {
             let mut guard = shards[i].lock().unwrap();
             let st = &mut *guard;
-            let rows = &st.rows;
-            let sub: Vec<PullRequest> = st
-                .req_ranges
-                .iter()
-                .map(|&(ri, start, len)| {
-                    let r = &reqs[ri as usize];
-                    PullRequest {
-                        query: r.query,
-                        rows: &rows[start as usize..(start + len) as usize],
-                        coord_ids: r.coord_ids,
-                    }
-                })
-                .collect();
+            let wave = part.wave(i);
+            let sub: Vec<PullRequest> = wave.subrequests(reqs).collect();
             st.engine.pull_batch(data, &sub, metric, &mut st.out_sum,
                                  &mut st.out_sq);
         });
-        for sh in &mut self.shards {
+        for (i, sh) in self.shards.iter_mut().enumerate() {
             let st = sh.get_mut().unwrap();
-            for (j, &sl) in st.slots.iter().enumerate() {
-                out_sum[sl as usize] = st.out_sum[j];
-                out_sq[sl as usize] = st.out_sq[j];
-            }
+            let wave = self.partition.wave(i);
+            wave.scatter(&st.out_sum, out_sum);
+            wave.scatter(&st.out_sq, out_sq);
         }
     }
 
@@ -427,26 +359,6 @@ mod tests {
             assert_eq!(hits.load(Ordering::SeqCst), wave * (1 + 2 + 3 + 4));
         }
         assert_eq!(pool.n_workers(), 4);
-    }
-
-    #[test]
-    fn shard_partition_is_contiguous_and_complete() {
-        for n in [1usize, 2, 3, 5, 8, 16, 33] {
-            for s in 1..=8usize {
-                let owners: Vec<usize> =
-                    (0..n).map(|r| shard_of(r, n, s)).collect();
-                // monotone non-decreasing, within range, and matching the
-                // floor-boundary sizes (zero-row shards allowed)
-                for w in owners.windows(2) {
-                    assert!(w[0] <= w[1]);
-                }
-                for (r, &o) in owners.iter().enumerate() {
-                    assert!(o < s, "row {r} of {n} -> shard {o} >= {s}");
-                    assert!(r >= o * n / s && r < (o + 1) * n / s,
-                            "row {r} outside shard {o}'s range (n={n} s={s})");
-                }
-            }
-        }
     }
 
     #[test]

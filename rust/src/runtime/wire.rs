@@ -1,0 +1,658 @@
+//! Length-prefixed binary wire protocol for network-distributed pull
+//! execution (`runtime::remote`).
+//!
+//! Framing: every message travels as `u32 payload_len (LE) | payload`,
+//! where `payload[0]` is an opcode byte and the rest is a fixed-layout
+//! little-endian body. [`read_frame`] rejects frames whose declared
+//! length exceeds [`MAX_FRAME`] *before* allocating, and
+//! [`Message::decode`] rejects truncated payloads, trailing garbage,
+//! unknown opcodes and bad metric codes with an `Err` — never a panic
+//! (property-tested below: every strict prefix of a valid payload fails
+//! to decode).
+//!
+//! Requests (coordinator → shard server):
+//! * `Hello` — handshake; the server answers [`Message::HelloAck`] with
+//!   the global dataset shape and the row range it owns, which lets the
+//!   client prove the ring tiles the dataset with the same floor-boundary
+//!   partition the in-process sharded engine uses
+//!   (`runtime::partition::shard_range`).
+//! * `PartialSums` / `ExactDists` / `PullBatch` — one engine wave, rows
+//!   given as **global** ids; the server rebases them onto its local
+//!   row range and rejects anything outside it.
+//! * `Shutdown` — acked with [`Message::Ack`], then the server exits.
+//!
+//! Replies (shard server → coordinator): `HelloAck`, `Sums { sum, sq }`
+//! (for `PartialSums` and `PullBatch`, concatenated request-major),
+//! `Dists { vals }`, `Error { msg }`, `Ack`.
+//!
+//! All floats cross the wire via `to_le_bytes`/`from_le_bytes`, i.e. by
+//! exact bit pattern — the transport can never perturb the bitwise
+//! parity the engines are pinned to.
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::arms::PullRequest;
+use crate::data::dense::Metric;
+
+/// Hard cap on a single frame's payload (1 GiB). A real wave is far
+/// smaller (a 4M-job reply is ~64 MiB); a length header beyond this is a
+/// corrupt or hostile stream and is rejected before any allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+const OP_HELLO: u8 = 1;
+const OP_HELLO_ACK: u8 = 2;
+const OP_PARTIAL_SUMS: u8 = 3;
+const OP_EXACT_DISTS: u8 = 4;
+const OP_PULL_BATCH: u8 = 5;
+const OP_SUMS: u8 = 6;
+const OP_DISTS: u8 = 7;
+const OP_ERROR: u8 = 8;
+const OP_SHUTDOWN: u8 = 9;
+const OP_ACK: u8 = 10;
+
+fn metric_code(m: Metric) -> u8 {
+    match m {
+        Metric::L2Sq => 0,
+        Metric::L1 => 1,
+    }
+}
+
+fn metric_from(code: u8) -> Result<Metric, String> {
+    match code {
+        0 => Ok(Metric::L2Sq),
+        1 => Ok(Metric::L1),
+        x => Err(format!("bad metric code {x}")),
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding — each `encode_*` clears `out` and writes one full payload;
+// the client-side helpers take borrowed slices so the hot path never
+// copies a wave into an owned message first
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn encode_hello(out: &mut Vec<u8>) {
+    out.clear();
+    out.push(OP_HELLO);
+}
+
+pub fn encode_hello_ack(out: &mut Vec<u8>, n_total: u64, d: u64,
+                        row_start: u64, row_end: u64) {
+    out.clear();
+    out.push(OP_HELLO_ACK);
+    put_u64(out, n_total);
+    put_u64(out, d);
+    put_u64(out, row_start);
+    put_u64(out, row_end);
+}
+
+pub fn encode_partial_sums(out: &mut Vec<u8>, metric: Metric,
+                           query: &[f32], rows: &[u32],
+                           coord_ids: &[u32]) {
+    out.clear();
+    out.push(OP_PARTIAL_SUMS);
+    out.push(metric_code(metric));
+    put_f32s(out, query);
+    put_u32s(out, rows);
+    put_u32s(out, coord_ids);
+}
+
+pub fn encode_exact_dists(out: &mut Vec<u8>, metric: Metric, query: &[f32],
+                          rows: &[u32]) {
+    out.clear();
+    out.push(OP_EXACT_DISTS);
+    out.push(metric_code(metric));
+    put_f32s(out, query);
+    put_u32s(out, rows);
+}
+
+pub fn encode_pull_batch(out: &mut Vec<u8>, metric: Metric,
+                         reqs: &[PullRequest<'_>]) {
+    out.clear();
+    out.push(OP_PULL_BATCH);
+    out.push(metric_code(metric));
+    put_u32(out, reqs.len() as u32);
+    for r in reqs {
+        put_f32s(out, r.query);
+        put_u32s(out, r.rows);
+        put_u32s(out, r.coord_ids);
+    }
+}
+
+/// `sum` and `sq` must have equal length (one shared count on the wire).
+pub fn encode_sums(out: &mut Vec<u8>, sum: &[f64], sq: &[f64]) {
+    assert_eq!(sum.len(), sq.len());
+    out.clear();
+    out.push(OP_SUMS);
+    put_u32(out, sum.len() as u32);
+    for &x in sum {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    for &x in sq {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn encode_dists(out: &mut Vec<u8>, vals: &[f64]) {
+    out.clear();
+    out.push(OP_DISTS);
+    put_f64s(out, vals);
+}
+
+pub fn encode_error(out: &mut Vec<u8>, msg: &str) {
+    out.clear();
+    out.push(OP_ERROR);
+    let bytes = msg.as_bytes();
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+pub fn encode_shutdown(out: &mut Vec<u8>) {
+    out.clear();
+    out.push(OP_SHUTDOWN);
+}
+
+pub fn encode_ack(out: &mut Vec<u8>) {
+    out.clear();
+    out.push(OP_ACK);
+}
+
+// ---------------------------------------------------------------------
+// decoding
+// ---------------------------------------------------------------------
+
+/// One sub-request of a decoded [`Message::PullBatch`] wave.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub query: Vec<f32>,
+    pub rows: Vec<u32>,
+    pub coord_ids: Vec<u32>,
+}
+
+/// A decoded wire message (owned). Clients encode straight from borrowed
+/// slices via the `encode_*` helpers; `Message::encode` delegates to the
+/// same helpers so there is exactly one byte layout.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    Hello,
+    HelloAck { n_total: u64, d: u64, row_start: u64, row_end: u64 },
+    PartialSums {
+        metric: Metric,
+        query: Vec<f32>,
+        rows: Vec<u32>,
+        coord_ids: Vec<u32>,
+    },
+    ExactDists { metric: Metric, query: Vec<f32>, rows: Vec<u32> },
+    PullBatch { metric: Metric, reqs: Vec<WireRequest> },
+    Sums { sum: Vec<f64>, sq: Vec<f64> },
+    Dists { vals: Vec<f64> },
+    Error { msg: String },
+    Shutdown,
+    Ack,
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| "length overflow".to_string())?;
+        if end > self.b.len() {
+            return Err(format!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            ));
+        }
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n.checked_mul(4).ok_or("length overflow")?)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n.checked_mul(4).ok_or("length overflow")?)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn f64s_n(&mut self, n: usize) -> Result<Vec<f64>, String> {
+        let s = self.take(n.checked_mul(8).ok_or("length overflow")?)?;
+        Ok(s.chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.u32()? as usize;
+        self.f64s_n(n)
+    }
+
+    fn done(self) -> Result<(), String> {
+        if self.pos != self.b.len() {
+            return Err(format!("{} trailing bytes", self.b.len() - self.pos));
+        }
+        Ok(())
+    }
+}
+
+impl Message {
+    /// Short tag for diagnostics (no payload dump).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Message::Hello => "hello",
+            Message::HelloAck { .. } => "hello_ack",
+            Message::PartialSums { .. } => "partial_sums",
+            Message::ExactDists { .. } => "exact_dists",
+            Message::PullBatch { .. } => "pull_batch",
+            Message::Sums { .. } => "sums",
+            Message::Dists { .. } => "dists",
+            Message::Error { .. } => "error",
+            Message::Shutdown => "shutdown",
+            Message::Ack => "ack",
+        }
+    }
+
+    /// Encode into `out` (cleared first) — delegates to the borrowed
+    /// `encode_*` helpers so both paths share one layout.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Message::Hello => encode_hello(out),
+            Message::HelloAck { n_total, d, row_start, row_end } => {
+                encode_hello_ack(out, *n_total, *d, *row_start, *row_end)
+            }
+            Message::PartialSums { metric, query, rows, coord_ids } => {
+                encode_partial_sums(out, *metric, query, rows, coord_ids)
+            }
+            Message::ExactDists { metric, query, rows } => {
+                encode_exact_dists(out, *metric, query, rows)
+            }
+            Message::PullBatch { metric, reqs } => {
+                let views: Vec<PullRequest> = reqs
+                    .iter()
+                    .map(|r| PullRequest {
+                        query: &r.query,
+                        rows: &r.rows,
+                        coord_ids: &r.coord_ids,
+                    })
+                    .collect();
+                encode_pull_batch(out, *metric, &views);
+            }
+            Message::Sums { sum, sq } => encode_sums(out, sum, sq),
+            Message::Dists { vals } => encode_dists(out, vals),
+            Message::Error { msg } => encode_error(out, msg),
+            Message::Shutdown => encode_shutdown(out),
+            Message::Ack => encode_ack(out),
+        }
+    }
+
+    /// Decode one payload. Rejects truncation, trailing bytes, unknown
+    /// opcodes and bad metric codes; never panics on malformed input.
+    pub fn decode(payload: &[u8]) -> Result<Message, String> {
+        let mut c = Cur { b: payload, pos: 0 };
+        let op = c.u8().map_err(|_| "empty frame".to_string())?;
+        let msg = match op {
+            OP_HELLO => Message::Hello,
+            OP_HELLO_ACK => Message::HelloAck {
+                n_total: c.u64()?,
+                d: c.u64()?,
+                row_start: c.u64()?,
+                row_end: c.u64()?,
+            },
+            OP_PARTIAL_SUMS => {
+                let metric = metric_from(c.u8()?)?;
+                Message::PartialSums {
+                    metric,
+                    query: c.f32s()?,
+                    rows: c.u32s()?,
+                    coord_ids: c.u32s()?,
+                }
+            }
+            OP_EXACT_DISTS => {
+                let metric = metric_from(c.u8()?)?;
+                Message::ExactDists {
+                    metric,
+                    query: c.f32s()?,
+                    rows: c.u32s()?,
+                }
+            }
+            OP_PULL_BATCH => {
+                let metric = metric_from(c.u8()?)?;
+                let n = c.u32()? as usize;
+                // each sub-request needs at least its three length words:
+                // a count beyond that bound is a corrupt header
+                if n > payload.len() / 12 + 1 {
+                    return Err(format!("pull_batch count {n} exceeds frame"));
+                }
+                // reservation stays modest even for a hostile count that
+                // passed the bound — growth is paid only as sub-requests
+                // actually parse (each consumes >= 12 payload bytes)
+                let mut reqs = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    reqs.push(WireRequest {
+                        query: c.f32s()?,
+                        rows: c.u32s()?,
+                        coord_ids: c.u32s()?,
+                    });
+                }
+                Message::PullBatch { metric, reqs }
+            }
+            OP_SUMS => {
+                let n = c.u32()? as usize;
+                let sum = c.f64s_n(n)?;
+                let sq = c.f64s_n(n)?;
+                Message::Sums { sum, sq }
+            }
+            OP_DISTS => Message::Dists { vals: c.f64s()? },
+            OP_ERROR => {
+                let n = c.u32()? as usize;
+                let bytes = c.take(n)?;
+                Message::Error {
+                    msg: String::from_utf8_lossy(bytes).into_owned(),
+                }
+            }
+            OP_SHUTDOWN => Message::Shutdown,
+            OP_ACK => Message::Ack,
+            x => return Err(format!("unknown opcode {x}")),
+        };
+        c.done()?;
+        Ok(msg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+/// Write one `u32 len | payload` frame.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds MAX_FRAME", payload.len()),
+        ));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame into `buf`. A declared length beyond [`MAX_FRAME`] is
+/// rejected before allocating, and the buffer grows only as bytes
+/// actually arrive — a forged length header cannot force a huge up-front
+/// allocation from a peer that never sends the payload.
+pub fn read_frame<R: Read>(r: &mut R, buf: &mut Vec<u8>) -> io::Result<()> {
+    let mut len_b = [0u8; 4];
+    r.read_exact(&mut len_b)?;
+    let len = u32::from_le_bytes(len_b) as usize;
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds MAX_FRAME"),
+        ));
+    }
+    buf.clear();
+    let got = r.by_ref().take(len as u64).read_to_end(buf)?;
+    if got < len {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!("truncated frame: {got} of {len} bytes"),
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    fn arb_f32s(rng: &mut Rng) -> Vec<f32> {
+        let n = rng.below(20); // 0..=19 — empty slices included
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    fn arb_u32s(rng: &mut Rng) -> Vec<u32> {
+        let n = rng.below(20);
+        (0..n).map(|_| rng.below(1 << 20) as u32).collect()
+    }
+
+    fn arb_f64s(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.gaussian()).collect()
+    }
+
+    fn arb_metric(rng: &mut Rng) -> Metric {
+        if rng.bool(0.5) { Metric::L2Sq } else { Metric::L1 }
+    }
+
+    fn arb_msg(rng: &mut Rng) -> Message {
+        match rng.below(10) {
+            0 => Message::Hello,
+            1 => Message::HelloAck {
+                n_total: rng.next_u64(),
+                d: rng.next_u64(),
+                row_start: rng.next_u64(),
+                row_end: rng.next_u64(),
+            },
+            2 => Message::PartialSums {
+                metric: arb_metric(rng),
+                query: arb_f32s(rng),
+                rows: arb_u32s(rng),
+                coord_ids: arb_u32s(rng),
+            },
+            3 => Message::ExactDists {
+                metric: arb_metric(rng),
+                query: arb_f32s(rng),
+                rows: arb_u32s(rng),
+            },
+            4 => {
+                let n = rng.below(5); // empty waves included
+                Message::PullBatch {
+                    metric: arb_metric(rng),
+                    reqs: (0..n)
+                        .map(|_| WireRequest {
+                            query: arb_f32s(rng),
+                            rows: arb_u32s(rng),
+                            coord_ids: arb_u32s(rng),
+                        })
+                        .collect(),
+                }
+            }
+            5 => {
+                let n = rng.below(16);
+                Message::Sums {
+                    sum: arb_f64s(rng, n),
+                    sq: arb_f64s(rng, n),
+                }
+            }
+            6 => {
+                let n = rng.below(16);
+                Message::Dists { vals: arb_f64s(rng, n) }
+            }
+            7 => Message::Error {
+                msg: format!("e{}", rng.below(1000)),
+            },
+            8 => Message::Shutdown,
+            _ => Message::Ack,
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_arbitrary_messages() {
+        proptest::check(400, |rng| {
+            let msg = arb_msg(rng);
+            let mut buf = Vec::new();
+            msg.encode(&mut buf);
+            let got = Message::decode(&buf)
+                .map_err(|e| format!("{} failed to decode: {e}",
+                                     msg.kind()))?;
+            crate::prop_assert!(got == msg,
+                                "{} did not round-trip", msg.kind());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn every_strict_prefix_is_rejected_without_panicking() {
+        proptest::check(120, |rng| {
+            let msg = arb_msg(rng);
+            let mut buf = Vec::new();
+            msg.encode(&mut buf);
+            for cut in 0..buf.len() {
+                crate::prop_assert!(
+                    Message::decode(&buf[..cut]).is_err(),
+                    "{} truncated to {cut}/{} bytes decoded",
+                    msg.kind(),
+                    buf.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        proptest::check(80, |rng| {
+            let msg = arb_msg(rng);
+            let mut buf = Vec::new();
+            msg.encode(&mut buf);
+            buf.push(0);
+            crate::prop_assert!(Message::decode(&buf).is_err(),
+                                "{} accepted a trailing byte", msg.kind());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn client_encoders_match_owned_message_encoding() {
+        // one byte layout: the borrowed hot-path encoders and
+        // Message::encode must agree (they delegate, this pins it)
+        let query = vec![1.5f32, -2.0, 0.25];
+        let rows = vec![7u32, 3];
+        let coords = vec![0u32, 2, 2];
+        let mut a = Vec::new();
+        encode_partial_sums(&mut a, Metric::L1, &query, &rows, &coords);
+        let mut b = Vec::new();
+        Message::PartialSums {
+            metric: Metric::L1,
+            query: query.clone(),
+            rows: rows.clone(),
+            coord_ids: coords.clone(),
+        }
+        .encode(&mut b);
+        assert_eq!(a, b);
+        let req = PullRequest { query: &query, rows: &rows,
+                                coord_ids: &coords };
+        encode_pull_batch(&mut a, Metric::L2Sq, &[req]);
+        Message::PullBatch {
+            metric: Metric::L2Sq,
+            reqs: vec![WireRequest { query, rows, coord_ids: coords }],
+        }
+        .encode(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bad_opcode_and_bad_metric_are_rejected() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        // PartialSums with metric code 7
+        assert!(Message::decode(&[3, 7, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_and_oversized_headers_are_rejected() {
+        let payload = vec![1u8, 2, 3, 4, 5];
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, &payload).unwrap();
+        let mut cur = std::io::Cursor::new(pipe);
+        let mut got = Vec::new();
+        read_frame(&mut cur, &mut got).unwrap();
+        assert_eq!(got, payload);
+        // forged header claiming a 2 GiB payload: rejected, no allocation
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes().to_vec();
+        let mut cur = std::io::Cursor::new(huge);
+        let err = read_frame(&mut cur, &mut got).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // truncated stream: header promises more than arrives
+        let mut short = 10u32.to_le_bytes().to_vec();
+        short.extend_from_slice(&[1, 2, 3]);
+        let mut cur = std::io::Cursor::new(short);
+        assert!(read_frame(&mut cur, &mut got).is_err());
+    }
+
+    #[test]
+    fn float_bits_survive_the_wire_exactly() {
+        // bitwise parity across the network hinges on this: encode odd
+        // bit patterns (negative zero, subnormals, inf) and compare bits
+        let vals = vec![-0.0f64, f64::INFINITY, 1e-310, -3.5];
+        let mut buf = Vec::new();
+        encode_dists(&mut buf, &vals);
+        match Message::decode(&buf).unwrap() {
+            Message::Dists { vals: got } => {
+                for (a, b) in vals.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+}

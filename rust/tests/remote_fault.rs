@@ -1,0 +1,158 @@
+//! Fault injection across the network boundary: killing a shard server
+//! mid-stream must surface as clean, prompt errors — never hung waiters
+//! — and the coordinator must heal once the shard is back.
+//!
+//! Engine level: a dead shard turns the in-flight wave into a panic
+//! (caught by callers) within the I/O timeout; a fresh connect after the
+//! shard restarts is bitwise-correct again.
+//!
+//! Coordinator level: the query server's worker catches that panic,
+//! answers the affected queries with error responses, and rebuilds (=
+//! reconnects) its engine — extending the PR 2 in-process
+//! worker-survival guarantee across the wire. While the ring is down,
+//! queries get `engine unavailable` errors; after the shard restarts on
+//! the same endpoint, the same server answers correctly again.
+
+use std::time::{Duration, Instant};
+
+use bmonn::coordinator::arms::PullEngine;
+use bmonn::coordinator::server::{Client, Server, ServerConfig};
+use bmonn::data::{synthetic, DenseDataset, Metric};
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::remote::{spawn_loopback_ring, RemoteEngine,
+                             ShardServer};
+use bmonn::util::json::Json;
+
+/// Rebind a shard on the endpoint it died on (the listener socket may
+/// take a moment to become reusable).
+fn restart_shard(addr: &str, data: &DenseDataset, shard: usize,
+                 n_shards: usize) -> ShardServer {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match ShardServer::start_shard_of(addr, data, shard, n_shards) {
+            Ok(srv) => return srv,
+            Err(e) => {
+                assert!(Instant::now() < deadline,
+                        "could not rebind {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+#[test]
+fn shard_death_mid_wave_panics_promptly_and_a_reconnect_recovers() {
+    let ds = synthetic::gaussian_iid(64, 32, 21);
+    let q = ds.row_vec(0);
+    let rows: Vec<u32> = (0..64).collect();
+    let coords: Vec<u32> = (0..16).collect();
+    let (mut servers, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let mut engine = RemoteEngine::connect_with_timeout(
+        &endpoints, Some(Duration::from_secs(5))).unwrap();
+    // reference answer while the ring is healthy
+    let mut solo = NativeEngine::default();
+    let (mut s0, mut q0) = (Vec::new(), Vec::new());
+    solo.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s0,
+                      &mut q0);
+    let (mut s1, mut q1) = (Vec::new(), Vec::new());
+    engine.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s1,
+                        &mut q1);
+    assert_eq!(s0, s1);
+    // kill shard 1 while waves keep flowing: some wave must fail — as a
+    // caught panic, promptly — and none may hang
+    let dead_endpoint = servers[1].endpoint();
+    let killer = std::thread::spawn({
+        let mut victim = servers.remove(1);
+        move || {
+            std::thread::sleep(Duration::from_millis(50));
+            victim.stop();
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(20);
+    let mut saw_failure = false;
+    while Instant::now() < deadline {
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let (mut s, mut sq) = (Vec::new(), Vec::new());
+                engine.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq,
+                                    &mut s, &mut sq);
+                s
+            }));
+        match outcome {
+            Ok(s) => assert_eq!(s0, s, "healthy waves must stay bitwise"),
+            Err(e) => {
+                let msg = e.downcast_ref::<String>().cloned()
+                    .unwrap_or_default();
+                assert!(msg.contains("remote pull wave failed"),
+                        "unexpected panic: {msg}");
+                saw_failure = true;
+                break;
+            }
+        }
+    }
+    killer.join().unwrap();
+    assert!(saw_failure,
+            "waves kept succeeding for 20s after the shard died");
+    // restart the shard on the endpoint the ring was built around; a
+    // fresh connect (what the server worker's rebuild does) heals
+    let _revived = restart_shard(&dead_endpoint, &ds, 1, 2);
+    let mut engine = RemoteEngine::connect(&endpoints).unwrap();
+    let (mut s2, mut q2) = (Vec::new(), Vec::new());
+    engine.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s2,
+                        &mut q2);
+    assert_eq!(s0, s2, "recovered ring must be bitwise-identical again");
+    assert_eq!(q0, q2);
+}
+
+#[test]
+fn coordinator_answers_errors_while_a_shard_is_down_then_heals() {
+    let ds = synthetic::image_like(80, 64, 99);
+    let (mut ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1, // deterministic: one engine to break and heal
+        batch_size: 4,
+        remote: endpoints.clone(),
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    // healthy round-trip through the ring
+    let (ids, _, units) = cl.knn(&ds.row_vec(5), 3).unwrap();
+    assert_eq!(ids[0], 5);
+    assert!(units > 0);
+    // kill shard 0; the in-flight engine connection dies with it
+    let shard0_endpoint = ring[0].endpoint();
+    ring[0].stop();
+    // the next query's wave hits the dead shard: the worker catches the
+    // panic and answers an error response — promptly, no hung waiter
+    let t0 = Instant::now();
+    let err = cl.knn(&ds.row_vec(6), 3).unwrap_err();
+    assert!(t0.elapsed() < Duration::from_secs(30),
+            "error response must not wait on a dead peer");
+    assert!(err.to_string().contains("compute panicked"),
+            "got: {err}");
+    // while the ring is down the worker cannot rebuild: clean errors,
+    // and the connection keeps serving (ping still answers)
+    let err2 = cl.knn(&ds.row_vec(7), 3).unwrap_err();
+    assert!(err2.to_string().contains("engine unavailable"),
+            "got: {err2}");
+    let pong = cl
+        .request(&Json::obj(vec![("op", Json::Str("ping".into()))]))
+        .unwrap();
+    assert_eq!(pong.get("ok"), Some(&Json::Bool(true)));
+    // restart the shard on the same endpoint: the worker's lazy rebuild
+    // reconnects and the very same server answers correctly again
+    let _revived = restart_shard(&shard0_endpoint, &ds, 0, 2);
+    let (ids, dists, units) = cl.knn(&ds.row_vec(9), 3).unwrap();
+    assert_eq!(ids[0], 9, "healed ring must answer correctly");
+    assert_eq!(dists.len(), 3);
+    assert!(units > 0);
+    // accounting stayed consistent: every query (failed ones included)
+    // was counted, none lost
+    let stats = cl
+        .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+        .unwrap();
+    assert_eq!(stats.get("queries").unwrap().as_usize(), Some(4));
+    srv.stop();
+}

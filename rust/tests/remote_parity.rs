@@ -1,0 +1,231 @@
+//! Network determinism: `RemoteEngine` over a ring of in-process
+//! loopback shard servers must be **bitwise** identical to a
+//! single-threaded `NativeEngine` for every ring size — including uneven
+//! splits, servers owning zero rows (n < S), and empty requests — across
+//! `partial_sums`, `exact_dists` and the coalesced `pull_batch` path,
+//! and end-to-end through the batched k-NN driver. Mirrors
+//! `tests/sharded_parity.rs` case-for-case: both substrates plan waves
+//! with the same `runtime::partition` splitter, and the wire moves float
+//! bits verbatim, so the distributed answer is the local answer.
+
+use bmonn::coordinator::arms::{PullEngine, PullRequest};
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::knn::knn_batch_points_dense;
+use bmonn::data::{synthetic, DenseDataset, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::remote::{spawn_loopback_ring, RemoteEngine,
+                             ShardServer};
+use bmonn::util::rng::Rng;
+
+/// Dataset sizes that produce uneven splits, zero-row shard servers
+/// (n < S for the larger ring sizes), and exact divisions.
+const SIZES: &[usize] = &[3, 5, 8, 16, 33];
+
+fn ring(data: &DenseDataset, shards: usize)
+        -> (Vec<ShardServer>, RemoteEngine) {
+    let (servers, endpoints) = spawn_loopback_ring(data, shards).unwrap();
+    let engine = RemoteEngine::connect(&endpoints).unwrap();
+    (servers, engine)
+}
+
+#[test]
+fn partial_sums_and_exact_dists_bitwise_over_loopback_rings() {
+    for &n in SIZES {
+        let d = 40;
+        let ds = synthetic::gaussian_iid(n, d, 1000 + n as u64);
+        let mut rng = Rng::new(n as u64);
+        let query: Vec<f32> =
+            (0..d).map(|_| rng.gaussian() as f32).collect();
+        // duplicate and out-of-order rows are legal pull targets
+        let rows: Vec<u32> = (0..3 * n)
+            .map(|_| rng.below(n) as u32)
+            .collect();
+        let coords: Vec<u32> =
+            (0..17).map(|_| rng.below(d) as u32).collect();
+        for shards in 1..=3usize {
+            let (_servers, mut remote) = ring(&ds, shards);
+            for metric in [Metric::L2Sq, Metric::L1] {
+                let mut solo = NativeEngine::default();
+                let (mut s0, mut q0) = (Vec::new(), Vec::new());
+                solo.partial_sums(&ds, &query, &rows, &coords, metric,
+                                  &mut s0, &mut q0);
+                let (mut s1, mut q1) = (Vec::new(), Vec::new());
+                remote.partial_sums(&ds, &query, &rows, &coords, metric,
+                                    &mut s1, &mut q1);
+                assert_eq!(s0, s1, "sums n={n} ring={shards} {metric:?}");
+                assert_eq!(q0, q1, "sqs n={n} ring={shards} {metric:?}");
+                let mut e0 = Vec::new();
+                solo.exact_dists(&ds, &query, &rows, metric, &mut e0);
+                let mut e1 = Vec::new();
+                remote.exact_dists(&ds, &query, &rows, metric, &mut e1);
+                assert_eq!(e0, e1, "exact n={n} ring={shards} {metric:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pull_batch_bitwise_over_loopback_rings() {
+    for &n in SIZES {
+        let d = 64;
+        let ds = synthetic::gaussian_iid(n, d, 2000 + n as u64);
+        let mut rng = Rng::new(77 + n as u64);
+        let n_reqs = 4;
+        let queries: Vec<Vec<f32>> = (0..n_reqs)
+            .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let rowsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|i| {
+                // one empty request exercises the zero-length range path
+                let m = if i == 2 { 0 } else { 1 + rng.below(2 * n) };
+                (0..m).map(|_| rng.below(n) as u32).collect()
+            })
+            .collect();
+        let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|_| {
+                let t = 1 + rng.below(40);
+                (0..t).map(|_| rng.below(d) as u32).collect()
+            })
+            .collect();
+        for shards in 1..=3usize {
+            let (_servers, mut remote) = ring(&ds, shards);
+            for metric in [Metric::L2Sq, Metric::L1] {
+                let reqs: Vec<PullRequest> = (0..n_reqs)
+                    .map(|i| PullRequest {
+                        query: &queries[i],
+                        rows: &rowsets[i],
+                        coord_ids: &coordsets[i],
+                    })
+                    .collect();
+                let mut solo = NativeEngine::default();
+                let (mut s0, mut q0) = (Vec::new(), Vec::new());
+                solo.pull_batch(&ds, &reqs, metric, &mut s0, &mut q0);
+                let (mut s1, mut q1) = (Vec::new(), Vec::new());
+                remote.pull_batch(&ds, &reqs, metric, &mut s1, &mut q1);
+                assert_eq!(s0, s1,
+                           "pull sums n={n} ring={shards} {metric:?}");
+                assert_eq!(q0, q1,
+                           "pull sqs n={n} ring={shards} {metric:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn big_pull_batch_wave_fans_out_concurrently_bitwise() {
+    // waves large enough that every server gets real work and the client
+    // fans sub-waves out on concurrent I/O threads: 16 requests over all
+    // rows with 256 coords each is ~1M coordinate ops per wave
+    let n = 256;
+    let d = 128;
+    let ds = synthetic::gaussian_iid(n, d, 9);
+    let mut rng = Rng::new(10);
+    let n_reqs = 16;
+    let queries: Vec<Vec<f32>> = (0..n_reqs)
+        .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+    let rows_all: Vec<u32> = (0..n as u32).collect();
+    let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+        .map(|_| (0..256).map(|_| rng.below(d) as u32).collect())
+        .collect();
+    for shards in [2usize, 3] {
+        let (_servers, mut remote) = ring(&ds, shards);
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let reqs: Vec<PullRequest> = (0..n_reqs)
+                .map(|i| PullRequest {
+                    query: &queries[i],
+                    rows: &rows_all,
+                    coord_ids: &coordsets[i],
+                })
+                .collect();
+            let mut solo = NativeEngine::default();
+            let (mut s0, mut q0) = (Vec::new(), Vec::new());
+            solo.pull_batch(&ds, &reqs, metric, &mut s0, &mut q0);
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            remote.pull_batch(&ds, &reqs, metric, &mut s1, &mut q1);
+            assert_eq!(s0, s1, "big wave sums ring={shards} {metric:?}");
+            assert_eq!(q0, q1, "big wave sqs ring={shards} {metric:?}");
+        }
+    }
+}
+
+#[test]
+fn rings_larger_than_the_dataset_bitwise() {
+    // n = 4 dataset rows served by up to 8 shard servers: most servers
+    // own zero rows (and never see traffic), and row-repeats pile every
+    // job onto the few owners
+    let n = 4;
+    let d = 96;
+    let ds = synthetic::gaussian_iid(n, d, 13);
+    let mut rng = Rng::new(14);
+    let query: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+    let rows: Vec<u32> = (0..4096).map(|i| (i % n) as u32).collect();
+    let coords: Vec<u32> = (0..64).map(|_| rng.below(d) as u32).collect();
+    for shards in [2usize, 6, 8] {
+        let (_servers, mut remote) = ring(&ds, shards);
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let mut solo = NativeEngine::default();
+            let (mut s0, mut q0) = (Vec::new(), Vec::new());
+            solo.partial_sums(&ds, &query, &rows, &coords, metric,
+                              &mut s0, &mut q0);
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            remote.partial_sums(&ds, &query, &rows, &coords, metric,
+                                &mut s1, &mut q1);
+            assert_eq!(s0, s1, "n<S sums ring={shards} {metric:?}");
+            assert_eq!(q0, q1, "n<S sqs ring={shards} {metric:?}");
+        }
+    }
+}
+
+#[test]
+fn empty_waves_produce_empty_outputs_without_traffic() {
+    let ds = synthetic::gaussian_iid(6, 16, 17);
+    let q = ds.row_vec(0);
+    let (_servers, mut remote) = ring(&ds, 2);
+    let (mut s, mut sq) = (Vec::new(), Vec::new());
+    remote.partial_sums(&ds, &q, &[], &[1], Metric::L1, &mut s, &mut sq);
+    assert!(s.is_empty() && sq.is_empty());
+    let mut e = Vec::new();
+    remote.exact_dists(&ds, &q, &[], Metric::L2Sq, &mut e);
+    assert!(e.is_empty());
+    // a pull_batch wave whose every request has an empty row list
+    let reqs = [
+        PullRequest { query: &q, rows: &[], coord_ids: &[0, 1] },
+        PullRequest { query: &q, rows: &[], coord_ids: &[] },
+    ];
+    remote.pull_batch(&ds, &reqs, Metric::L2Sq, &mut s, &mut sq);
+    assert!(s.is_empty() && sq.is_empty());
+}
+
+#[test]
+fn batched_knn_driver_is_bitwise_identical_over_the_wire() {
+    // end-to-end: the multi-query driver over a remote ring must produce
+    // byte-identical answers, distances and unit accounting — the rng
+    // stream is outside the engine, so this holds exactly
+    let ds = synthetic::image_like(150, 192, 55);
+    let points: Vec<usize> = (0..12).map(|i| i * 11 % 150).collect();
+    let params = BanditParams { k: 3, ..Default::default() };
+    let mut solo_engine = NativeEngine::default();
+    let mut rng0 = Rng::new(56);
+    let mut c0 = Counter::new();
+    let base = knn_batch_points_dense(&ds, &points, Metric::L2Sq, &params,
+                                      &mut solo_engine, &mut rng0,
+                                      &mut c0);
+    for shards in [2usize, 3] {
+        let (_servers, mut engine) = ring(&ds, shards);
+        let mut rng = Rng::new(56);
+        let mut c = Counter::new();
+        let got = knn_batch_points_dense(&ds, &points, Metric::L2Sq,
+                                         &params, &mut engine, &mut rng,
+                                         &mut c);
+        assert_eq!(c0.get(), c.get(), "units diverged at ring={shards}");
+        for (b, g) in base.iter().zip(&got) {
+            assert_eq!(b.ids, g.ids, "ids diverged at ring={shards}");
+            assert_eq!(b.dists, g.dists,
+                       "dists diverged at ring={shards}");
+            assert_eq!(b.metrics.dist_computations,
+                       g.metrics.dist_computations);
+        }
+    }
+}

@@ -86,6 +86,57 @@ fn worker_pool_under_concurrent_load() {
 }
 
 #[test]
+fn client_disconnecting_while_queued_does_not_derail_the_batch() {
+    // A client that vanishes between enqueue and response makes the
+    // reply write fail on its I/O thread. The batch must still complete
+    // for co-batched queries, the worker must survive, and `stats`
+    // accounting must count the orphaned query consistently.
+    use std::io::Write;
+
+    let ds = synthetic::image_like(100, 96, 47);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1, // FIFO: the orphaned query computes with/before B's
+        batch_size: 8,
+        ..Default::default()
+    };
+    let srv = Server::start(ds.clone(), cfg).unwrap();
+    let addr = srv.addr;
+    // client A: enqueue one query, then vanish without reading the reply
+    {
+        let mut a = std::net::TcpStream::connect(addr).unwrap();
+        let req = Json::obj(vec![
+            ("op", Json::Str("knn".into())),
+            ("query", Json::f32_array(&ds.row_vec(3))),
+            ("k", Json::Num(2.0)),
+        ]);
+        a.write_all(req.to_string().as_bytes()).unwrap();
+        a.write_all(b"\n").unwrap();
+        a.flush().unwrap();
+        // give the I/O thread time to parse + enqueue before the drop
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    } // A's socket closes here; the pending reply write will fail
+    // client B keeps the worker busy and must be unaffected
+    let mut b = Client::connect(&addr).unwrap();
+    for i in 0..3usize {
+        let r = (11 + i * 13) % 100;
+        let (ids, _, units) = b.knn(&ds.row_vec(r), 2).unwrap();
+        assert_eq!(ids[0] as usize, r, "co-batched query {i} broke");
+        assert!(units > 0);
+    }
+    // single FIFO worker: by the time B's queries are answered, A's
+    // orphaned query has been computed and accounted
+    let st = stats(&mut b);
+    assert_eq!(st.get("queries").unwrap().as_usize(), Some(4),
+               "orphaned query must still be counted");
+    let batches = st.get("batches").unwrap().as_f64().unwrap();
+    let mean_batch = st.get("mean_batch").unwrap().as_f64().unwrap();
+    assert!((mean_batch * batches - 4.0).abs() < 1e-6,
+            "batch accounting must include the orphaned query");
+    assert_eq!(srv.total_queries(), 4);
+}
+
+#[test]
 fn malformed_json_and_protocol_roundtrips() {
     let ds = synthetic::image_like(40, 32, 43);
     let q = ds.row_vec(3);
