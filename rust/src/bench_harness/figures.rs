@@ -68,9 +68,9 @@ fn run_bmo(w: &Workload, seed: u64, shards: usize) -> AlgoStats {
     // the same coalesced path the server uses; shards > 1 additionally
     // fans each round's pull wave across a row-sharded worker pool
     // (answers are bitwise-independent of the shard count)
-    let mut engine =
-        crate::runtime::build_host_engine(EngineKind::Native, shards, &[])
-            .expect("native host engine");
+    let mut engine = crate::runtime::build_host_engine(
+        EngineKind::Native, shards, &[], false)
+        .expect("native host engine");
     let mut rng = Rng::new(seed);
     let mut c = Counter::new();
     let params = bmo_params(w.k);

@@ -2,12 +2,15 @@
 //!
 //! Runs the 1k×256 batched multi-query workload (the server's execution
 //! path: many bandits in lockstep, one coalesced `pull_batch` sweep per
-//! round) plus a single-query latency sweep, on 1/2/4 local shards **and
-//! on a 2-shard TCP-loopback remote ring** (in-process `shard-serve`
+//! round) plus a single-query latency sweep, on 1/2/4 local shards, **on
+//! a 2-shard TCP-loopback remote ring** (in-process `shard-serve`
 //! servers driven through `runtime::remote::RemoteEngine` — the tracked
-//! distributed data point), and emits the numbers as JSON for
-//! `BENCH_pull.json` so the perf trajectory has data points that survive
-//! across PRs:
+//! distributed data point), **and on a 2-shard failover rung** (a
+//! replicated loopback ring whose primaries are all dead, so every wave
+//! reaches the data through the replica-failover path — pinning that
+//! failover steady-state costs the same as a healthy connection), and
+//! emits the numbers as JSON for `BENCH_pull.json` so the perf
+//! trajectory has data points that survive across PRs:
 //!
 //! * `pull_rows_per_s` — (row, query) jobs resolved per second inside
 //!   `PullEngine::pull_batch` only (the parallelized hot phase);
@@ -108,6 +111,10 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
         self.pull_wall += t0.elapsed();
         self.pull_calls += 1;
         self.pull_jobs += jobs;
+    }
+
+    fn coverage(&mut self) -> Option<crate::coordinator::arms::Coverage> {
+        self.inner.coverage()
     }
 
     fn name(&self) -> &'static str {
@@ -253,7 +260,7 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             &w,
             shards,
             "local",
-            || build_host_engine(EngineKind::Native, shards, &[]),
+            || build_host_engine(EngineKind::Native, shards, &[], false),
             &mut baseline_answers,
         )?);
     }
@@ -275,6 +282,31 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             &mut baseline_answers,
         )?);
         // _ring stops (and its servers drop) at the end of this scope
+    }
+    {
+        // failover rung: a replicated ring whose primaries are all dead
+        // before the first connect, so every wave reaches the data via
+        // the replica-failover path — same workload, same answers
+        let (primaries, p_eps) =
+            remote::spawn_loopback_ring(&data, LOOPBACK_SHARDS)?;
+        let (_replicas, r_eps) =
+            remote::spawn_loopback_ring(&data, LOOPBACK_SHARDS)?;
+        let specs: Vec<String> = p_eps
+            .iter()
+            .zip(&r_eps)
+            .map(|(p, r)| format!("{p}|{r}"))
+            .collect();
+        drop(primaries); // kill every primary: failover must carry it
+        remote_runs.push(measure_rung(
+            &w,
+            LOOPBACK_SHARDS,
+            "tcp-failover",
+            || {
+                remote::RemoteEngine::connect(&specs)
+                    .map(|e| Box::new(e) as Box<dyn PullEngine + Send>)
+            },
+            &mut baseline_answers,
+        )?);
     }
     if !extra_remote.is_empty() {
         remote_runs.push(measure_rung(
@@ -311,8 +343,9 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         "workload: n={n} d={d} (shard-serve --synthetic \
          image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
          {solo_q} solo queries; pull-phase speedup at {} local shards vs \
-         1: {speedup:.2}x; remote rung: {LOOPBACK_SHARDS}-shard TCP \
-         loopback ring, answers asserted identical to local",
+         1: {speedup:.2}x; remote rungs: {LOOPBACK_SHARDS}-shard TCP \
+         loopback ring + {LOOPBACK_SHARDS}-shard failover ring (dead \
+         primaries, replicas serve), answers asserted identical to local",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
     let json = Json::obj(vec![
         ("workload", Json::obj(vec![
@@ -338,11 +371,14 @@ mod tests {
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
         let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 1);
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 2);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
         let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
-        assert_eq!(remote.len(), 1, "loopback rung always present");
+        assert_eq!(remote.len(), 2,
+                   "loopback + failover rungs always present");
+        assert_eq!(remote[1].get("transport").and_then(|v| v.as_str()),
+                   Some("tcp-failover"));
         for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())

@@ -7,6 +7,7 @@
 //!   kmeans     — BMO k-means vs exact Lloyd's
 //!   serve      — start the query server
 //!   shard-serve— serve one row shard of a dataset to remote coordinators
+//!   ring-stats — probe a shard-serve ring's health via the Stats wire op
 //!   bench      — run a figure-reproduction experiment (fig3a, fig3b, ...)
 //!   selftest   — verify PJRT artifacts against host computation
 
@@ -99,22 +100,30 @@ SUBCOMMANDS
            [--seed S] [--density F] [--alpha A]
   knn      --data FILE [--query-idx I] [--k K] [--batch B] [--algo bmo|
            exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
-           native|scalar|pjrt] [--shards S] [--remote H:P,H:P]
-           [--epsilon E] [--delta D] [--seed S]
+           native|scalar|pjrt] [--shards S] [--remote SPECS]
+           [--degraded] [--epsilon E] [--delta D] [--seed S]
            (--batch B > 1 answers B consecutive query points through the
            coalesced multi-query driver, bmo only; --shards S > 1 fans
            each pull wave across S contiguous row shards on a worker
            pool; --remote fans waves over a shard-serve ring instead —
            either way results are bitwise-identical to local
-           single-threaded execution)
+           single-threaded execution. SPECS is one entry per shard,
+           comma-separated; an entry may be a |-separated replica list
+           (H:P|H:P) and sub-waves fail over between a shard's replicas
+           transparently. --degraded answers with exact distances over
+           the surviving rows — coverage-annotated — when every replica
+           of some shard is dead, instead of erroring)
   graph    --data FILE [--k K] [--metric l2|l1] [--shards S]
-           [--remote H:P,...] [--seed S]
+           [--remote SPECS] [--degraded] [--seed S]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
-           [--remote H:P,...]
+           [--remote SPECS] [--degraded]
            (with --remote this box coordinates a multi-machine ring: its
            workers batch queries as usual but fan every pull wave over
-           the ring; workers reconnect if a shard server dies)
+           the ring, failing over between replicas; with --degraded,
+           knn responses gain coverage/rows_live/rows_total fields
+           while part of the ring is down, instead of turning into
+           errors; workers reconnect if a whole shard dies)
   shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
            --of S [--addr HOST:PORT]
            (loads rows [floor(I*n/S), floor((I+1)*n/S)) — the same
@@ -122,14 +131,24 @@ SUBCOMMANDS
            partial_sums / exact_dists / pull_batch waves over the
            length-prefixed binary wire protocol [runtime::wire]; a ring
            of S such servers, shard indices 0..S on matching endpoints,
-           backs --remote; a shutdown frame or ctrl-c stops it)
+           backs --remote, and starting shard I on several machines
+           makes them replicas; a shutdown frame or ctrl-c stops it)
+  ring-stats  --remote SPECS [--timeout-ms T]
+           (probes every endpoint with the Stats wire op and prints
+           shard identity, row range, dataset shape and live-connection
+           count per replica, plus ring coverage; exits nonzero when
+           some shard has no live replica. The reported "of" from any
+           single endpoint tells you the ring size S, so a coordinator
+           can size --remote from one known endpoint)
   bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1|pull>
            [--quick] [--seed S] [--out FILE] [--shards S]
            (--shards fans the figure benches' BMO runs out across S row
            shards; pull rejects it — it is the tracked pull-phase
            throughput baseline, always sweeping a fixed 1/2/4 shard
            ladder over the 1k x 256 batched workload plus a single-query
-           sweep and a 2-shard TCP-loopback remote rung, overwriting
+           sweep, a 2-shard TCP-loopback remote rung and a 2-shard
+           failover rung (replicated ring with every primary dead, so
+           each wave takes the failover path), overwriting
            --out [default BENCH_pull.json] with rows/s, wall per round
            and per-query p50/p99; --smoke shrinks it to a seconds-long
            CI check; --remote H:P,H:P adds a rung measured against your
@@ -138,9 +157,9 @@ SUBCOMMANDS
            ladder or image:256:64:SEED for --smoke)
   selftest [--artifacts DIR]
 
-Common flags: --config FILE (TOML; [engine] kind/shards/remote pick the
-pull engine), --set section.key=value (repeatable via comma list),
---seed N.
+Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded
+pick the pull engine — see docs/CONFIG.md), --set section.key=value
+(repeatable via comma list), --seed N.
 ";
 
 #[cfg(test)]

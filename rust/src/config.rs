@@ -99,9 +99,13 @@ impl RawConfig {
     }
 }
 
-/// Parse a `host:port,host:port` endpoint list (`[engine] remote` /
-/// `--remote`). Commas and whitespace both separate; empty entries are
-/// dropped, so a trailing comma is harmless.
+/// Parse a shard-endpoint list (`[engine] remote` / `--remote`): one
+/// entry per logical shard, separated by commas or whitespace (empty
+/// entries are dropped, so a trailing comma is harmless). Each entry may
+/// itself be a `|`-separated **replica list** for that shard —
+/// `"a:1|b:1, c:2|d:2"` is a 2-shard ring with two replicas per shard.
+/// The `|` groups are kept intact here;
+/// `runtime::placement::PlacementMap::parse` splits them.
 pub fn parse_endpoints(s: &str) -> Vec<String> {
     s.split(|c: char| c == ',' || c.is_whitespace())
         .map(|e| e.trim())
@@ -146,13 +150,23 @@ pub struct BmonnConfig {
     pub shards: usize,
     /// shard-server endpoints (`[engine] remote = "host:p,host:p"` /
     /// `--remote`): when non-empty, pull waves fan out over this ring via
-    /// `runtime::remote::RemoteEngine` instead of computing locally.
-    /// Endpoint `i` must serve shard `i` of the ring (`bmonn shard-serve
-    /// --shard i --of S`). Mutually exclusive with `shards`. Shard
-    /// servers always compute with the native engine, so results are
-    /// bitwise-identical to local *native* execution (requesting the
+    /// `runtime::remote::RemoteEngine` instead of computing locally. The
+    /// `i`-th entry names shard `i`'s servers (`bmonn shard-serve
+    /// --shard i --of S`) and may be a `|`-separated replica list — on
+    /// an I/O error or wire error the sub-wave transparently fails over
+    /// to the shard's next live replica. Mutually exclusive with
+    /// `shards`. Shard servers always compute with the native engine,
+    /// so results are bitwise-identical to local *native* execution
+    /// whenever any replica of every shard survives (requesting the
     /// scalar or pjrt engine together with `remote` is an error).
     pub remote: Vec<String>,
+    /// degraded mode (`[engine] degraded` / `--degraded`, remote rings
+    /// only): when every replica of some shard is dead, answer queries
+    /// with exact distances over the surviving shards' rows and a
+    /// coverage annotation instead of erroring. Off by default — a full
+    /// ring outage then surfaces as query errors, never silent partial
+    /// answers.
+    pub degraded: bool,
     pub artifact_dir: String,
     pub seed: u64,
     pub server_addr: String,
@@ -174,6 +188,7 @@ impl Default for BmonnConfig {
             engine: EngineKind::Native,
             shards: 1,
             remote: Vec::new(),
+            degraded: false,
             artifact_dir: "artifacts".into(),
             seed: 42,
             server_addr: "127.0.0.1:7878".into(),
@@ -224,6 +239,9 @@ impl BmonnConfig {
         }
         if let Some(r) = raw.get("engine.remote") {
             cfg.remote = parse_endpoints(r);
+        }
+        if let Some(dg) = raw.get_bool("engine.degraded")? {
+            cfg.degraded = dg;
         }
         if let Some(a) = raw.get("engine.artifact_dir") {
             cfg.artifact_dir = a.to_string();
@@ -294,6 +312,19 @@ mod tests {
         assert_eq!(parse_endpoints("  a:1  b:2 "),
                    vec!["a:1".to_string(), "b:2".to_string()]);
         assert!(parse_endpoints(" , ").is_empty());
+        // replica groups stay intact within one shard's slot
+        assert_eq!(parse_endpoints("a:1|b:1, c:2|d:2"),
+                   vec!["a:1|b:1".to_string(), "c:2|d:2".to_string()]);
+    }
+
+    #[test]
+    fn degraded_flag_parses_and_defaults_off() {
+        assert!(!BmonnConfig::default().degraded);
+        let raw =
+            RawConfig::parse("[engine]\ndegraded = true\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).unwrap().degraded);
+        let raw = RawConfig::parse("[engine]\ndegraded = maybe\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
     }
 
     #[test]

@@ -33,6 +33,31 @@ pub struct PullRequest<'a> {
     pub coord_ids: &'a [u32],
 }
 
+/// Which global dataset rows an engine can currently answer — reported
+/// by substrates with failure modes (the replicated remote ring) while
+/// part of the dataset is unreachable, and threaded through
+/// [`crate::coordinator::knn::KnnResult`] as the degraded-mode coverage
+/// annotation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coverage {
+    /// live global row ranges `[start, end)`, sorted and disjoint
+    pub live: Vec<(u32, u32)>,
+    /// total rows of the dataset (`n`)
+    pub rows_total: usize,
+}
+
+impl Coverage {
+    /// Number of rows inside the live ranges.
+    pub fn rows_live(&self) -> usize {
+        self.live.iter().map(|&(a, b)| (b - a) as usize).sum()
+    }
+
+    /// Fraction of the dataset that is answerable (`rows_live / n`).
+    pub fn fraction(&self) -> f64 {
+        self.rows_live() as f64 / self.rows_total.max(1) as f64
+    }
+}
+
 /// Batched compute engine for dense pulls. Implementations:
 /// [`ScalarEngine`] (reference), `runtime::native::NativeEngine`
 /// (optimized hot path), `runtime::pjrt::PjrtEngine` (AOT artifact).
@@ -93,6 +118,17 @@ pub trait PullEngine {
         }
     }
 
+    /// The rows this engine can answer right now. `None` (the default,
+    /// and the only value local engines ever report) means the full
+    /// dataset. A remote engine running in degraded mode returns
+    /// `Some(coverage)` while shards with no live replica exist — the
+    /// k-NN drivers then answer exact top-k over the surviving rows
+    /// with the coverage annotation instead of erroring. Callers must
+    /// not send waves touching rows outside a reported coverage.
+    fn coverage(&mut self) -> Option<Coverage> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -136,6 +172,10 @@ impl PullEngine for Box<dyn PullEngine + Send> {
         out_sq: &mut Vec<f64>,
     ) {
         (**self).pull_batch(data, reqs, metric, out_sum, out_sq)
+    }
+
+    fn coverage(&mut self) -> Option<Coverage> {
+        (**self).coverage()
     }
 
     fn name(&self) -> &'static str {

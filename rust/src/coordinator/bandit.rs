@@ -17,6 +17,8 @@
 //! per-arm version stamps, giving the paper's O(log n) per-iteration
 //! overhead.
 
+#![deny(missing_docs)]
+
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::time::Instant;
@@ -58,15 +60,18 @@ impl PullPolicy {
     }
 }
 
+/// Full parameter set of one BMO UCB run.
 #[derive(Clone, Debug)]
 pub struct BanditParams {
     /// number of best arms to identify
     pub k: usize,
     /// target error probability δ
     pub delta: f64,
+    /// how the sub-Gaussian scale σ is obtained (Eq. 3)
     pub sigma: SigmaMode,
     /// PAC slack ε (Theorem 2); 0.0 = exact identification (Theorem 1)
     pub epsilon: f64,
+    /// pull-scheduling policy (faithful Algorithm 1 vs batched D-A)
     pub policy: PullPolicy,
 }
 
@@ -87,6 +92,7 @@ impl Default for BanditParams {
 pub struct BanditResult {
     /// winning arms in emission order (increasing θ), with final means
     pub best: Vec<(usize, f64)>,
+    /// cost accounting of the run
     pub metrics: RunMetrics,
     /// per-arm pull counts (diagnostics / ablation benches)
     pub pulls_per_arm: Vec<u64>,
@@ -190,6 +196,8 @@ const MIN_PULLS_FOR_OWN_VAR: u64 = 10;
 const SIGMA2_FLOOR: f64 = 1e-12;
 
 impl BmoUcb {
+    /// Fresh state machine over `arms.n_arms()` arms (no pulls issued
+    /// yet — the first [`BmoUcb::begin_round`] stages the init round).
     pub fn new<A: ArmSet>(arms: &A, params: BanditParams) -> Self {
         let n = arms.n_arms();
         assert!(params.k <= n, "k={} > n_arms={}", params.k, n);

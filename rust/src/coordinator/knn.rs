@@ -20,10 +20,26 @@
 //! run single-threaded (`NativeEngine`/`ScalarEngine`), multi-core
 //! (`runtime::sharded::ShardedEngine`, selected via `[engine] shards` /
 //! `--shards` — per-wave row-sharding that is bitwise-identical to
-//! single-threaded execution), or on the PJRT artifact path.
+//! single-threaded execution), on a replicated shard-server ring
+//! (`runtime::remote::RemoteEngine`), or on the PJRT artifact path.
+//!
+//! **Degraded mode.** Before running the bandit, the dense drivers ask
+//! the engine for its [`Coverage`]. Local engines always report full
+//! coverage; a remote ring in degraded mode (`--degraded`) reports the
+//! surviving row ranges while some shard has no live replica. Under
+//! partial coverage the drivers skip the bandit entirely and answer
+//! **exact** top-k over the surviving rows (adaptive sampling needs
+//! every arm reachable; exact distances over the covered subset is the
+//! strongest answer the surviving data supports), annotating each
+//! [`KnnResult`] with the coverage so callers — and the query server's
+//! JSON clients — can tell a partial answer from a full one.
 
-use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine, PullRequest,
-                               SparseArms};
+#![deny(missing_docs)]
+
+use std::time::Instant;
+
+use crate::coordinator::arms::{ArmSet, Coverage, DenseArms, PullEngine,
+                               PullRequest, SparseArms};
 use crate::coordinator::bandit::{run_bmo_ucb, BanditParams, BmoUcb,
                                  RoundAction};
 use crate::data::dense::{DenseDataset, Metric};
@@ -42,11 +58,18 @@ use crate::util::rng::Rng;
 /// overcounts wall clock.
 #[derive(Clone, Debug)]
 pub struct KnnResult {
+    /// neighbor dataset row ids, ordered by increasing distance
     pub ids: Vec<u32>,
     /// un-normalized distance estimates (exact when the arm was
     /// exact-evaluated; high-accuracy estimates otherwise)
     pub dists: Vec<f64>,
+    /// cost accounting for this query's run
     pub metrics: RunMetrics,
+    /// `None` for a full answer; `Some(coverage)` when the engine could
+    /// only reach part of the dataset (degraded remote ring) — then
+    /// `ids`/`dists` are the exact top-k over the covered rows only,
+    /// and `coverage.fraction()` is the answered share of the dataset
+    pub coverage: Option<Coverage>,
 }
 
 /// k-NN of an in-dataset point `q` (self excluded) — dense box.
@@ -87,6 +110,12 @@ fn knn_dense_inner<E: PullEngine>(
     rng: &mut Rng,
     counter: &mut Counter,
 ) -> KnnResult {
+    if let Some(cov) = engine.coverage() {
+        let mut res = knn_degraded_dense(data, &[query], &[exclude],
+                                         metric, params.k, engine, &cov,
+                                         counter);
+        return res.pop().unwrap();
+    }
     let rows = DenseArms::<E>::candidates(data.n, exclude);
     let d = data.d as f64;
     let mut arms = DenseArms::new(data, query, &rows, metric, engine);
@@ -95,7 +124,62 @@ fn knn_dense_inner<E: PullEngine>(
         ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
         dists: res.best.iter().map(|&(_, th)| th * d).collect(),
         metrics: res.metrics,
+        coverage: None,
     }
+}
+
+/// Degraded-mode answer (see the module docs): the exact top-k of each
+/// query over the engine's surviving rows only, each result annotated
+/// with the coverage. Returns fewer than `k` neighbors when fewer
+/// candidate rows survive. Units are charged at the exact-scan rate
+/// (covered rows × d per query).
+fn knn_degraded_dense<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    excludes: &[Option<usize>],
+    metric: Metric,
+    k: usize,
+    engine: &mut E,
+    cov: &Coverage,
+    counter: &mut Counter,
+) -> Vec<KnnResult> {
+    let mut results = Vec::with_capacity(queries.len());
+    let mut dists = Vec::new();
+    for (qi, q) in queries.iter().enumerate() {
+        let q = q.as_ref();
+        assert_eq!(q.len(), data.d, "query {qi} has wrong dimension");
+        let t0 = Instant::now();
+        let rows: Vec<u32> = cov
+            .live
+            .iter()
+            .flat_map(|&(a, b)| a..b)
+            .filter(|&r| Some(r as usize) != excludes[qi])
+            .collect();
+        if !rows.is_empty() {
+            engine.exact_dists(data, q, &rows, metric, &mut dists);
+        } else {
+            dists.clear();
+        }
+        let units = (rows.len() * data.d) as u64;
+        counter.add(units);
+        let mut order: Vec<usize> = (0..rows.len()).collect();
+        order.sort_by(|&x, &y| {
+            dists[x].total_cmp(&dists[y]).then(rows[x].cmp(&rows[y]))
+        });
+        order.truncate(k.min(rows.len()));
+        results.push(KnnResult {
+            ids: order.iter().map(|&j| rows[j]).collect(),
+            dists: order.iter().map(|&j| dists[j]).collect(),
+            metrics: RunMetrics {
+                dist_computations: units,
+                rounds: 0,
+                exact_evals: rows.len() as u64,
+                elapsed: t0.elapsed(),
+            },
+            coverage: Some(cov.clone()),
+        });
+    }
+    results
 }
 
 /// One query's staged pull within a multi-query round.
@@ -170,6 +254,10 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     counter: &mut Counter,
 ) -> Vec<KnnResult> {
     assert_eq!(queries.len(), excludes.len());
+    if let Some(cov) = engine.coverage() {
+        return knn_degraded_dense(data, queries, excludes, metric,
+                                  params.k, engine, &cov, counter);
+    }
     let d = data.d as f64;
     let mut slots: Vec<DenseSlot> = Vec::with_capacity(queries.len());
     for (i, q) in queries.iter().enumerate() {
@@ -216,6 +304,7 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
                             .map(|&(_, th)| th * d)
                             .collect(),
                         metrics: res.metrics,
+                        coverage: None,
                     });
                     slot.done = true;
                 }
@@ -276,6 +365,7 @@ pub fn knn_point_sparse(
         ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
         dists: res.best.iter().map(|&(_, th)| th * d).collect(),
         metrics: res.metrics,
+        coverage: None,
     }
 }
 
@@ -344,6 +434,7 @@ pub fn knn_batch_sparse(
                             .map(|&(_, th)| th * d)
                             .collect(),
                         metrics: res.metrics,
+                        coverage: None,
                     });
                     slot.done = true;
                 }
@@ -368,8 +459,16 @@ pub fn knn_batch_sparse(
 /// `metrics.elapsed` sums per-query in-flight times (see [`KnnResult`]),
 /// which exceeds wall clock under the batched driver.
 pub struct GraphResult {
+    /// `neighbors[i]` = the k nearest neighbors of point `i`
     pub neighbors: Vec<Vec<u32>>,
+    /// cost accounting summed over every per-point query
     pub metrics: RunMetrics,
+    /// `None` when every wave ran at full coverage; otherwise the
+    /// *worst* (fewest surviving rows) coverage any wave was answered
+    /// under — the graph's neighbor lists are then restricted to
+    /// surviving rows for those waves and callers must surface that
+    /// rather than present the graph as complete
+    pub coverage: Option<Coverage>,
 }
 
 /// Queries per batch wave during graph construction: bounds the driver's
@@ -377,6 +476,8 @@ pub struct GraphResult {
 /// still giving the engine wide coalesced rounds.
 const GRAPH_WAVE: usize = 64;
 
+/// Full k-NN graph over a dense dataset, built in batched waves of
+/// `GRAPH_WAVE` lockstep queries through [`knn_batch_points_dense`].
 pub fn knn_graph_dense<E: PullEngine>(
     data: &DenseDataset,
     metric: Metric,
@@ -389,6 +490,7 @@ pub fn knn_graph_dense<E: PullEngine>(
     per_query.delta = params.delta / data.n as f64;
     let mut neighbors = Vec::with_capacity(data.n);
     let mut metrics = RunMetrics::default();
+    let mut coverage: Option<Coverage> = None;
     let mut q = 0;
     while q < data.n {
         let hi = (q + GRAPH_WAVE).min(data.n);
@@ -397,13 +499,24 @@ pub fn knn_graph_dense<E: PullEngine>(
                                           engine, rng, counter);
         for res in wave {
             metrics.merge(&res.metrics);
+            if let Some(c) = res.coverage {
+                let worse = match &coverage {
+                    None => true,
+                    Some(old) => c.rows_live() < old.rows_live(),
+                };
+                if worse {
+                    coverage = Some(c);
+                }
+            }
             neighbors.push(res.ids);
         }
         q = hi;
     }
-    GraphResult { neighbors, metrics }
+    GraphResult { neighbors, metrics, coverage }
 }
 
+/// Full k-NN graph over a sparse dataset — the sparse counterpart of
+/// [`knn_graph_dense`], on the [`knn_batch_sparse`] driver.
 pub fn knn_graph_sparse(
     data: &SparseDataset,
     metric: Metric,
@@ -427,7 +540,9 @@ pub fn knn_graph_sparse(
         }
         q = hi;
     }
-    GraphResult { neighbors, metrics }
+    // the sparse box samples locally — there is no remote substrate to
+    // lose coverage on
+    GraphResult { neighbors, metrics, coverage: None }
 }
 
 /// Generic wrapper mirroring Alg 2 over any custom [`ArmSet`] — this is
@@ -444,6 +559,7 @@ pub fn knn_arms<A: ArmSet>(
         ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
         dists: res.best.iter().map(|&(_, th)| th).collect(),
         metrics: res.metrics,
+        coverage: None,
     }
 }
 

@@ -25,6 +25,9 @@
 //!             {"op":"ping"}
 //!             {"op":"shutdown"}
 //!   response: {"ok":true, "ids":[...], "dists":[...], "units":u}
+//!             (degraded remote rings add "coverage" (fraction),
+//!             "rows_live" and "rows_total" when a partial answer was
+//!             computed over the surviving shards only)
 //!             {"ok":true, "queries":q, "units":u, "p50_us":_, "p99_us":_,
 //!              "batches":b, "mean_batch":_, "max_batch":_,
 //!              "batch_p50_us":_, "batch_p99_us":_, "workers":w}
@@ -62,11 +65,18 @@ pub struct ServerConfig {
     /// single-threaded per worker; results are identical either way)
     pub shards: usize,
     /// shard-server endpoints: when non-empty each worker's engine is a
-    /// `runtime::remote::RemoteEngine` over this ring (`--remote`), so
-    /// this box becomes the coordinator of a multi-machine deployment.
-    /// Workers (re)connect lazily and survive ring outages by answering
-    /// error responses until the ring is reachable again.
+    /// `runtime::remote::RemoteEngine` over this ring (`--remote`; each
+    /// entry may be a `|`-separated replica list), so this box becomes
+    /// the coordinator of a multi-machine deployment. Workers
+    /// (re)connect lazily, fail sub-waves over between a shard's
+    /// replicas, and survive ring outages by answering error responses
+    /// until the ring is reachable again.
     pub remote: Vec<String>,
+    /// degraded mode (`--degraded`, remote rings only): when a shard has
+    /// no live replica, `knn` responses carry exact answers over the
+    /// surviving rows plus `coverage`/`rows_live`/`rows_total` fields
+    /// instead of errors.
+    pub degraded: bool,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +90,7 @@ impl Default for ServerConfig {
             native_engine: true,
             shards: 1,
             remote: Vec::new(),
+            degraded: false,
         }
     }
 }
@@ -216,7 +227,8 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
         let mut batch_units = 0u64;
         if engine.is_none() {
             match build_host_engine(kind, shared.config.shards,
-                                    &shared.config.remote) {
+                                    &shared.config.remote,
+                                    shared.config.degraded) {
                 Ok(e) => engine = Some(e),
                 Err(e) => {
                     let msg = format!("engine unavailable: {e}");
@@ -266,7 +278,8 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                                                panicked"));
                         }
                         match build_host_engine(kind, shared.config.shards,
-                                                &shared.config.remote) {
+                                                &shared.config.remote,
+                                                shared.config.degraded) {
                             Ok(fresh) => *eng = fresh,
                             Err(e) => {
                                 // ring unreachable: answer the rest of
@@ -290,7 +303,7 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                 for (&i, res) in idxs.iter().zip(&results) {
                     let units = res.metrics.dist_computations;
                     batch_units += units;
-                    responses[i] = Some(Json::obj(vec![
+                    let mut fields = vec![
                         ("ok", Json::Bool(true)),
                         ("ids",
                          Json::usize_array(
@@ -301,7 +314,18 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                              &res.dists.iter().map(|&d| d as f32)
                                  .collect::<Vec<_>>())),
                         ("units", Json::Num(units as f64)),
-                    ]));
+                    ];
+                    // degraded (partial-ring) answers carry an explicit
+                    // coverage annotation; full answers stay unchanged
+                    if let Some(cov) = &res.coverage {
+                        fields.push(("coverage",
+                                     Json::Num(cov.fraction())));
+                        fields.push(("rows_live",
+                                     Json::Num(cov.rows_live() as f64)));
+                        fields.push(("rows_total",
+                                     Json::Num(cov.rows_total as f64)));
+                    }
+                    responses[i] = Some(Json::obj(fields));
                 }
             }
         }

@@ -62,6 +62,9 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
     if let Some(r) = args.flag("remote") {
         cfg.remote = parse_endpoints(r);
     }
+    if args.flag_bool("degraded") {
+        cfg.degraded = true;
+    }
     if let Some(a) = args.flag("artifacts") {
         cfg.artifact_dir = a.to_string();
     }
@@ -84,6 +87,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "kmeans" => cmd_kmeans(&args),
         "serve" => cmd_serve(&args),
         "shard-serve" => cmd_shard_serve(&args),
+        "ring-stats" => cmd_ring_stats(&args),
         "bench" => cmd_bench(&args),
         "selftest" => cmd_selftest(&args),
         other => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
@@ -164,6 +168,7 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
         }
         return cmd_knn_batch(&cfg, &data, q, batch);
     }
+    let mut coverage = None;
     let ids_dists: (Vec<u32>, Vec<f64>) = match algo {
         "bmo" => {
             let res = match cfg.engine {
@@ -186,12 +191,14 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
                     // scalar/native; sharded across a row-partitioned
                     // worker pool when --shards > 1, or fanned over a
                     // shard-serve ring when --remote is given
-                    let mut e =
-                        build_host_engine(kind, cfg.shards, &cfg.remote)?;
+                    let mut e = build_host_engine(kind, cfg.shards,
+                                                  &cfg.remote,
+                                                  cfg.degraded)?;
                     knn_point_dense(&data, q, cfg.metric, &params, &mut e,
                                     &mut rng, &mut counter)
                 }
             };
+            coverage = res.coverage.clone();
             (res.ids, res.dists)
         }
         "exact" => {
@@ -236,6 +243,9 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown --algo {other}")),
     };
     print_answer(&ids_dists.0, &ids_dists.1, counter.get());
+    if let Some(cov) = &coverage {
+        print_coverage(cov);
+    }
     let exact_units = ((data.n - 1) * data.d) as u64;
     println!("gain vs exact: {:.1}x",
              exact_units as f64 / counter.get().max(1) as f64);
@@ -267,7 +277,8 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
                                    &mut rng, &mut counter)
         }
         kind => {
-            let mut e = build_host_engine(kind, cfg.shards, &cfg.remote)?;
+            let mut e = build_host_engine(kind, cfg.shards, &cfg.remote,
+                                          cfg.degraded)?;
             knn_batch_points_dense(data, &points, cfg.metric, &params,
                                    &mut e, &mut rng, &mut counter)
         }
@@ -276,6 +287,9 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
         println!("query {q}:");
         print_answer(&res.ids, &res.dists,
                      res.metrics.dist_computations);
+    }
+    if let Some(cov) = results.iter().find_map(|r| r.coverage.as_ref()) {
+        print_coverage(cov);
     }
     let exact_units = (batch * (data.n - 1) * data.d) as u64;
     println!("batch of {batch}: {} total units, gain vs exact {:.1}x",
@@ -292,6 +306,14 @@ fn print_answer(ids: &[u32], dists: &[f64], units: u64) {
     println!("coordinate-distance computations: {units}");
 }
 
+/// A degraded (partial-ring) answer must never look like a full one on
+/// stdout — every CLI surface that can receive one prints this.
+fn print_coverage(cov: &bmonn::coordinator::arms::Coverage) {
+    println!("DEGRADED: answered over {}/{} surviving rows ({:.1}% \
+              coverage) — dead shards' rows were not searched",
+             cov.rows_live(), cov.rows_total, 100.0 * cov.fraction());
+}
+
 fn cmd_graph(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let path = args.flag("data").ok_or("--data FILE required")?;
@@ -306,11 +328,17 @@ fn cmd_graph(args: &Args) -> Result<(), String> {
     } else {
         EngineKind::Native
     };
-    let mut engine = build_host_engine(kind, cfg.shards, &cfg.remote)?;
+    let mut engine = build_host_engine(kind, cfg.shards, &cfg.remote,
+                                       cfg.degraded)?;
     let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
                             &mut engine, &mut rng, &mut counter);
     let exact_units = (data.n * (data.n - 1) * data.d) as u64;
     println!("k-NN graph over n={} d={} k={}", data.n, data.d, cfg.k);
+    if let Some(cov) = &g.coverage {
+        print_coverage(cov);
+        println!("(the graph above is NOT complete: waves answered while \
+                  a shard was down searched surviving rows only)");
+    }
     println!("coordinate-distance computations: {}", counter.get());
     println!("gain vs exact graph construction: {:.1}x",
              exact_units as f64 / counter.get().max(1) as f64);
@@ -365,6 +393,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let path = args.flag("data").ok_or("--data FILE required")?;
     let data =
         loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
+    if cfg.degraded && cfg.remote.is_empty() {
+        return Err("--degraded applies to --remote rings: local engines \
+                    have no shards to lose".into());
+    }
     let sc = ServerConfig {
         addr: cfg.server_addr.clone(),
         metric: cfg.metric,
@@ -374,6 +406,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         native_engine: cfg.engine != EngineKind::Scalar,
         shards: cfg.shards,
         remote: cfg.remote.clone(),
+        degraded: cfg.degraded,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
@@ -411,6 +444,78 @@ fn cmd_shard_serve(args: &Args) -> Result<(), String> {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }
     println!("shutdown requested, exiting");
+    Ok(())
+}
+
+/// `ring-stats`: probe every replica of every shard spec with the wire
+/// `Stats` health op and print the ring's layout, per-endpoint load and
+/// row coverage. Exits with an error when some shard has no live
+/// replica, so scripts can gate deploys on ring health.
+fn cmd_ring_stats(args: &Args) -> Result<(), String> {
+    use bmonn::runtime::placement::PlacementMap;
+    use bmonn::runtime::remote::endpoint_stats;
+    let specs = args
+        .flag("remote")
+        .map(parse_endpoints)
+        .ok_or("--remote SPECS required (one entry per shard; replicas \
+                separated by '|')")?;
+    let timeout_ms = args.flag_u64("timeout-ms", 5000)?;
+    let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
+    let map = PlacementMap::parse(&specs)?;
+    let mut covered_rows = 0usize;
+    let mut n_total: Option<usize> = None;
+    let mut dead_shards: Vec<usize> = Vec::new();
+    for shard in 0..map.n_shards() {
+        let mut shard_live = false;
+        for (ri, ep) in map.replicas(shard).iter().enumerate() {
+            match endpoint_stats(ep, Some(timeout)) {
+                Ok(st) => {
+                    println!(
+                        "shard {shard} replica {ri} {ep}: UP — serves \
+                         shard {}/{} rows [{}, {}) of n={} d={}, {} live \
+                         conns",
+                        st.shard, st.of, st.row_start, st.row_end,
+                        st.n_total, st.d, st.live_conns);
+                    if st.of != map.n_shards() || st.shard != shard {
+                        // a mis-wired endpoint would fail RemoteEngine's
+                        // handshake validation, so it does NOT count as
+                        // a live replica of this shard
+                        println!(
+                            "  MISCONFIGURED: endpoint identifies as \
+                             shard {}/{} but this spec lists it as shard \
+                             {shard}/{} — fix --remote or restart the \
+                             server with matching --shard/--of (not \
+                             counted as coverage)",
+                            st.shard, st.of, map.n_shards());
+                    } else if !shard_live {
+                        shard_live = true;
+                        covered_rows += st.row_end - st.row_start;
+                        n_total = n_total.or(Some(st.n_total));
+                    }
+                }
+                Err(e) => println!("shard {shard} replica {ri} {ep}: \
+                                    DOWN — {e}"),
+            }
+        }
+        if !shard_live {
+            dead_shards.push(shard);
+        }
+    }
+    if let Some(n) = n_total {
+        println!(
+            "ring coverage: {covered_rows}/{n} rows ({:.1}%), {} of {} \
+             shards live",
+            100.0 * covered_rows as f64 / n.max(1) as f64,
+            map.n_shards() - dead_shards.len(),
+            map.n_shards());
+    }
+    if !dead_shards.is_empty() {
+        return Err(format!(
+            "ring unhealthy: shard(s) {dead_shards:?} have no live \
+             replica — queries over their rows will fail (or degrade, \
+             with --degraded)"));
+    }
+    println!("ring healthy: every shard has a live replica");
     Ok(())
 }
 

@@ -9,9 +9,13 @@
 //!   wrapped engine run single-threaded;
 //! * [`wire`] — the length-prefixed binary protocol `PullRequest` waves
 //!   and replies travel over between machines;
+//! * [`placement`] — replica placement for the ring: ordered replica
+//!   lists per logical shard plus the per-endpoint backoff/blacklist
+//!   state the failover path uses;
 //! * [`remote`] — multi-machine wrapper: a `shard-serve` TCP server per
-//!   row shard plus the [`remote::RemoteEngine`] client fanning waves
-//!   over the ring, bit-identical to a local `NativeEngine`;
+//!   row shard (replicated at will) plus the [`remote::RemoteEngine`]
+//!   client fanning waves over the ring with transparent replica
+//!   failover, bit-identical to a local `NativeEngine`;
 //! * [`pjrt`] — the AOT JAX/Pallas artifacts, loaded from HLO text and
 //!   executed via the PJRT C API (`xla` crate) with device-resident data;
 //! * [`artifacts`] — the manifest that binds the two worlds together.
@@ -22,6 +26,7 @@
 pub mod artifacts;
 pub mod native;
 pub mod partition;
+pub mod placement;
 pub mod remote;
 pub mod sharded;
 pub mod wire;
@@ -31,21 +36,26 @@ use crate::coordinator::arms::{PullEngine, ScalarEngine};
 
 /// Build the configured host-side pull engine.
 ///
-/// * `remote` non-empty (`[engine] remote` / `--remote host:p,host:p`):
-///   connect a [`remote::RemoteEngine`] to that shard-server ring — the
-///   ring's servers compute with the native engine, and a coordinator
-///   box built this way composes unchanged with the batch drivers and
-///   the query server's worker pool. Mutually exclusive with `shards`
-///   (the ring is already sharded across its endpoints).
+/// * `remote` non-empty (`[engine] remote` / `--remote`, one spec per
+///   shard, replicas `|`-separated within a spec): connect a
+///   [`remote::RemoteEngine`] to that shard-server ring — the ring's
+///   servers compute with the native engine, and a coordinator box
+///   built this way composes unchanged with the batch drivers and the
+///   query server's worker pool. Mutually exclusive with `shards` (the
+///   ring is already sharded across its endpoints). `degraded`
+///   (`[engine] degraded` / `--degraded`) opts the ring into
+///   coverage-annotated answers over surviving rows while a shard has
+///   no live replica, instead of hard query errors.
 /// * otherwise: the local scalar/native engine, wrapped in
 ///   [`sharded::ShardedEngine`] when `shards > 1` (`[engine] shards` /
-///   `--shards S`).
+///   `--shards S`). `degraded` is meaningless without a ring and is
+///   rejected.
 ///
 /// The PJRT engine is constructed separately by its callers (it needs an
 /// artifact dir + metric and aligns `round_pulls` to the artifact
 /// shape), so requesting it here is an error.
 pub fn build_host_engine(kind: EngineKind, shards: usize,
-                         remote: &[String])
+                         remote: &[String], degraded: bool)
                          -> Result<Box<dyn PullEngine + Send>, String> {
     let shards = shards.max(1);
     if !remote.is_empty() {
@@ -61,7 +71,17 @@ pub fn build_host_engine(kind: EngineKind, shards: usize,
                         with --engine native or drop the engine flag"
                 .into());
         }
-        return Ok(Box::new(remote::RemoteEngine::connect(remote)?));
+        let map = placement::PlacementMap::parse(remote)?;
+        return Ok(Box::new(remote::RemoteEngine::connect_opts(
+            &map,
+            remote::RemoteOptions { degraded,
+                                    ..remote::RemoteOptions::default() },
+        )?));
+    }
+    if degraded {
+        return Err("--degraded applies to --remote rings: local engines \
+                    have no shards to lose"
+            .into());
     }
     Ok(match kind {
         EngineKind::Scalar if shards == 1 => Box::new(ScalarEngine),

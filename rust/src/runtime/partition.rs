@@ -10,6 +10,9 @@
 //! `tests/remote_parity.rs` pin the same bitwise contract against the
 //! same plan.
 //!
+//! See `docs/ARCHITECTURE.md` for how the partition slots into the wave
+//! lifecycle.
+//!
 //! The partition itself is the contiguous floor-boundary split: shard `s`
 //! of `S` owns rows `[floor(s·n/S), floor((s+1)·n/S))`. Splitting only
 //! routes each (row, request) job to its owner and remembers the caller's
@@ -17,6 +20,8 @@
 //! slots. No arithmetic is reordered, which is why sharded output is
 //! bitwise identical to single-threaded output for engines that compute
 //! each job independently (every engine in this repo does).
+
+#![deny(missing_docs)]
 
 use crate::coordinator::arms::PullRequest;
 
@@ -95,6 +100,7 @@ pub struct WavePartition {
 }
 
 impl WavePartition {
+    /// A planner for `n_shards` contiguous row shards (must be > 0).
     pub fn new(n_shards: usize) -> WavePartition {
         assert!(n_shards > 0, "need at least one shard");
         WavePartition {
@@ -102,10 +108,12 @@ impl WavePartition {
         }
     }
 
+    /// Number of shards this planner splits waves across.
     pub fn n_shards(&self) -> usize {
         self.waves.len()
     }
 
+    /// Shard `shard`'s slice of the most recently split wave.
     pub fn wave(&self, shard: usize) -> &ShardWave {
         &self.waves[shard]
     }

@@ -1,0 +1,225 @@
+//! Shard placement for replicated rings: which endpoints serve which
+//! logical shard, plus the per-endpoint retry bookkeeping the failover
+//! path uses.
+//!
+//! PR 3's ring contract was *fixed*: endpoint `i` of the `--remote` list
+//! served shard `i` of `S`, and a single endpoint death turned every
+//! touching wave into a hard error. A [`PlacementMap`] generalizes that
+//! to an **ordered replica list per logical shard**: the endpoint-list
+//! syntax grows a `|` separator (`primary|replica|...` within one
+//! shard's slot, shards still separated by commas), so
+//!
+//! ```text
+//! [engine]
+//! remote = "10.0.0.1:7979|10.0.1.1:7979, 10.0.0.2:7979|10.0.1.2:7979"
+//! ```
+//!
+//! is a 2-shard ring with two replicas per shard. Every replica of shard
+//! `i` must serve exactly `shard_range(i, n, S)` of the same dataset
+//! (verified at handshake, exactly like the unreplicated ring), which is
+//! what makes failover answer **bitwise-identically**: any replica of a
+//! shard computes the same jobs with the same kernel.
+//!
+//! Retry policy: each endpoint carries an [`EndpointState`]. A failed
+//! connect, I/O error or wire `Error` reply records a failure, putting
+//! the endpoint on a blacklist for an exponentially growing backoff
+//! window ([`RetryPolicy`]); a successful reconnect + handshake heals it
+//! completely. All state transitions take an explicit `now` so the
+//! policy is unit-testable without a clock.
+
+#![deny(missing_docs)]
+
+use std::time::{Duration, Instant};
+
+/// Per-shard ordered replica lists: `shards[i]` holds the endpoints that
+/// (claim to) serve logical shard `i`, preferred first. Parsed from the
+/// `[engine] remote` / `--remote` endpoint syntax by
+/// [`PlacementMap::parse`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementMap {
+    shards: Vec<Vec<String>>,
+}
+
+impl PlacementMap {
+    /// Build a placement from one spec per logical shard, each spec an
+    /// ordered `|`-separated replica list (a bare `host:port` is a
+    /// single-replica shard, so unreplicated PR 3 rings parse
+    /// unchanged). Empty replica entries and duplicate endpoints within
+    /// one shard are rejected.
+    pub fn parse(specs: &[String]) -> Result<PlacementMap, String> {
+        if specs.is_empty() {
+            return Err("remote engine needs at least one shard endpoint"
+                .into());
+        }
+        let mut shards = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let reps: Vec<String> = spec
+                .split('|')
+                .map(|e| e.trim().to_string())
+                .collect();
+            if reps.iter().any(|e| e.is_empty()) {
+                return Err(format!(
+                    "shard {i}: empty replica endpoint in '{spec}'"));
+            }
+            for (a, ea) in reps.iter().enumerate() {
+                if reps[..a].contains(ea) {
+                    return Err(format!(
+                        "shard {i}: endpoint {ea} listed twice in '{spec}'"));
+                }
+            }
+            shards.push(reps);
+        }
+        Ok(PlacementMap { shards })
+    }
+
+    /// Number of logical shards (the ring size `S`).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Ordered replica endpoints of logical shard `shard`.
+    pub fn replicas(&self, shard: usize) -> &[String] {
+        &self.shards[shard]
+    }
+
+    /// Total endpoint count across every shard's replica list.
+    pub fn n_endpoints(&self) -> usize {
+        self.shards.iter().map(|r| r.len()).sum()
+    }
+}
+
+/// Backoff schedule applied to a failing endpoint: the `f`-th
+/// consecutive failure blacklists it for
+/// `min(backoff_base * 2^(f-1), backoff_max)`.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// blacklist window after the first failure (doubles per failure)
+    pub backoff_base: Duration,
+    /// cap on the blacklist window
+    pub backoff_max: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            backoff_base: Duration::from_millis(250),
+            backoff_max: Duration::from_secs(4),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Blacklist window after `fails` consecutive failures (>= 1).
+    pub fn backoff(&self, fails: u32) -> Duration {
+        let exp = fails.saturating_sub(1).min(16);
+        let w = self
+            .backoff_base
+            .checked_mul(1u32 << exp)
+            .unwrap_or(self.backoff_max);
+        w.min(self.backoff_max)
+    }
+}
+
+/// Failure bookkeeping for one endpoint: consecutive-failure count and
+/// the blacklist deadline. Heals fully on [`EndpointState::record_success`]
+/// (a working reconnect + handshake), so a restarted shard server is
+/// preferred again as soon as its backoff window has passed once.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EndpointState {
+    fails: u32,
+    down_until: Option<Instant>,
+}
+
+impl EndpointState {
+    /// May this endpoint be dialed at `now`? (Not currently blacklisted.)
+    pub fn eligible(&self, now: Instant) -> bool {
+        match self.down_until {
+            None => true,
+            Some(t) => now >= t,
+        }
+    }
+
+    /// Record a failed connect / request at `now`: bumps the consecutive
+    /// count and extends the blacklist per `policy`.
+    pub fn record_failure(&mut self, policy: &RetryPolicy, now: Instant) {
+        self.fails = self.fails.saturating_add(1);
+        self.down_until = Some(now + policy.backoff(self.fails));
+    }
+
+    /// Record a working reconnect: clears the failure count and the
+    /// blacklist (the heal half of the failover contract).
+    pub fn record_success(&mut self) {
+        self.fails = 0;
+        self.down_until = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn bare_endpoints_parse_as_single_replica_shards() {
+        let p = PlacementMap::parse(&sv(&["a:1", "b:2"])).unwrap();
+        assert_eq!(p.n_shards(), 2);
+        assert_eq!(p.replicas(0), &["a:1".to_string()]);
+        assert_eq!(p.replicas(1), &["b:2".to_string()]);
+        assert_eq!(p.n_endpoints(), 2);
+    }
+
+    #[test]
+    fn pipe_separated_replicas_parse_in_order() {
+        let p = PlacementMap::parse(&sv(&["a:1|b:1 | c:1", "d:2"])).unwrap();
+        assert_eq!(p.n_shards(), 2);
+        assert_eq!(p.replicas(0),
+                   &["a:1".to_string(), "b:1".to_string(), "c:1".to_string()]);
+        assert_eq!(p.n_endpoints(), 4);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(PlacementMap::parse(&[]).is_err());
+        assert!(PlacementMap::parse(&sv(&["a:1|"])).is_err());
+        assert!(PlacementMap::parse(&sv(&["|a:1"])).is_err());
+        let err = PlacementMap::parse(&sv(&["a:1|a:1"])).unwrap_err();
+        assert!(err.contains("twice"), "got: {err}");
+    }
+
+    #[test]
+    fn backoff_doubles_to_the_cap() {
+        let p = RetryPolicy {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_millis(450),
+        };
+        assert_eq!(p.backoff(1), Duration::from_millis(100));
+        assert_eq!(p.backoff(2), Duration::from_millis(200));
+        assert_eq!(p.backoff(3), Duration::from_millis(400));
+        assert_eq!(p.backoff(4), Duration::from_millis(450));
+        assert_eq!(p.backoff(40), Duration::from_millis(450));
+    }
+
+    #[test]
+    fn endpoint_state_blacklists_and_heals() {
+        let policy = RetryPolicy {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(1),
+        };
+        let t0 = Instant::now();
+        let mut st = EndpointState::default();
+        assert!(st.eligible(t0));
+        st.record_failure(&policy, t0);
+        assert!(!st.eligible(t0 + Duration::from_millis(99)));
+        assert!(st.eligible(t0 + Duration::from_millis(100)));
+        // second consecutive failure doubles the window
+        st.record_failure(&policy, t0);
+        assert!(!st.eligible(t0 + Duration::from_millis(199)));
+        assert!(st.eligible(t0 + Duration::from_millis(200)));
+        // a working reconnect heals completely
+        st.record_success();
+        assert!(st.eligible(t0));
+    }
+}

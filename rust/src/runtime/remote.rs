@@ -1,6 +1,8 @@
-//! Network-distributed pull execution: fan engine waves over a ring of
-//! TCP **shard servers**, each owning a contiguous row range of the
-//! dataset.
+//! Network-distributed pull execution: fan engine waves over a
+//! **replicated ring** of TCP shard servers, each owning a contiguous
+//! row range of the dataset, with transparent failover between a
+//! shard's replicas and an opt-in degraded mode when a whole shard is
+//! unreachable.
 //!
 //! Two halves:
 //!
@@ -10,9 +12,13 @@
 //!   length-prefixed binary protocol in [`crate::runtime::wire`],
 //!   computing with a per-connection `NativeEngine`. Rows travel as
 //!   global ids and are rebased locally; anything outside the owned
-//!   range is answered with a wire `Error`, never a crash.
-//! * [`RemoteEngine`] — a [`PullEngine`] holding one persistent
-//!   connection per shard endpoint. Every wave is split with the same
+//!   range is answered with a wire `Error`, never a crash. A `Stats`
+//!   frame (the health op) reports the server's shard identity, row
+//!   range and live-connection count without touching the compute path.
+//! * [`RemoteEngine`] — a [`PullEngine`] over a
+//!   [`crate::runtime::placement::PlacementMap`]: each logical shard has
+//!   an **ordered replica list** of endpoints and one live connection at
+//!   a time. Every wave is split with the same
 //!   [`crate::runtime::partition::WavePartition`] the in-process
 //!   [`crate::runtime::sharded::ShardedEngine`] uses (one splitter,
 //!   shared code), sub-waves fan out concurrently on scoped threads, and
@@ -21,19 +27,39 @@
 //!   (`tests/remote_parity.rs` pins this case-for-case against
 //!   `tests/sharded_parity.rs`).
 //!
-//! **Ring contract.** Endpoint `i` of `S` must serve exactly
-//! `shard_range(i, n, S)`; [`RemoteEngine::connect`] verifies this
-//! against each server's handshake and refuses a ring that tiles the
-//! dataset any other way. The coordinator's dataset must match the
-//! ring's (n, d) — a mismatched wave panics with a clear message.
+//! **Ring contract.** Every replica of logical shard `i` of `S` must
+//! serve exactly `shard_range(i, n, S)` of the same dataset;
+//! [`RemoteEngine::connect_opts`] (and the failover path, lazily)
+//! verifies this against each server's handshake and refuses a replica
+//! that tiles the dataset any other way. The coordinator's dataset must
+//! match the ring's (n, d) — a mismatched wave panics with a clear
+//! message.
 //!
-//! **Fault model.** A shard death mid-wave surfaces as a panic from the
-//! wave call (reads carry a timeout, so a hung peer cannot strand the
-//! caller). The query server's worker loop catches that panic, answers
-//! the affected queries with error responses, and rebuilds — i.e.
-//! reconnects — the engine (`coordinator::server`), extending the
-//! in-process worker-survival guarantee across the network boundary
-//! (`tests/remote_fault.rs`).
+//! **Failover.** An I/O error or corrupt reply on a sub-wave
+//! blacklists the replica it came from (exponential backoff,
+//! [`crate::runtime::placement::RetryPolicy`]); a wire `Error` reply
+//! fails over without blacklisting (the connection is healthy — only
+//! this request failed server-side). Either way the *same* sub-wave is
+//! transparently re-issued to the shard's next live replica — each
+//! endpoint is tried at most once per wave, so retries are bounded. Because every replica computes the same jobs with the same
+//! kernel, a failed-over wave is bitwise identical to a healthy one:
+//! killing any single endpoint of a replicated ring mid-stream yields
+//! no query errors at all (`tests/remote_fault.rs`). A blacklisted
+//! endpoint heals the moment a reconnect + handshake succeeds after its
+//! backoff window, so a restarted server rejoins automatically.
+//!
+//! **Degraded mode.** With every replica of some shard dead, a wave
+//! touching that shard's rows still panics (promptly — reads carry a
+//! timeout) and the query server answers errors, exactly as in the
+//! unreplicated ring. Opting in via `[engine] degraded = true` /
+//! `--degraded` changes that: `RemoteEngine::coverage` then reports
+//! the surviving row ranges, and the k-NN drivers
+//! (`coordinator::knn`) answer **exact** top-k over the surviving rows
+//! only, threading a `coverage` annotation (rows answered / n) through
+//! [`crate::coordinator::knn::KnnResult`] and the query server's JSON
+//! responses instead of erroring.
+
+#![deny(missing_docs)]
 
 use std::io;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
@@ -41,12 +67,13 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::arms::{PullEngine, PullRequest};
+use crate::coordinator::arms::{Coverage, PullEngine, PullRequest};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::runtime::native::NativeEngine;
 use crate::runtime::partition::{shard_range, ShardWave, WavePartition};
+use crate::runtime::placement::{EndpointState, PlacementMap, RetryPolicy};
 use crate::runtime::wire::{self, Message, WireRequest};
 
 /// Default per-connection read/write timeout: long enough for a big wave
@@ -63,6 +90,9 @@ struct ShardShared {
     local: DenseDataset,
     n_total: usize,
     row_start: usize,
+    /// shard identity reported by the `Stats` health op
+    shard: u64,
+    of: u64,
     shutdown: AtomicBool,
     /// live connections (by id), shut down on stop so blocked I/O
     /// unblocks; each entry is removed when its handler thread exits, so
@@ -74,6 +104,7 @@ struct ShardShared {
 /// `Shutdown` message also stops it (that is how a `shard-serve` CLI
 /// process is told to exit remotely).
 pub struct ShardServer {
+    /// bound address (resolved, so `host:0` shows the ephemeral port)
     pub addr: SocketAddr,
     shared: Arc<ShardShared>,
     accept_handle: Option<JoinHandle<()>>,
@@ -82,9 +113,12 @@ pub struct ShardServer {
 impl ShardServer {
     /// Serve `local` (the rows `[row_start, row_start + local.n)` of a
     /// global `n_total`-row dataset) on `addr` (`"host:0"` picks an
-    /// ephemeral port; see `self.addr`).
+    /// ephemeral port; see `self.addr`). `shard`/`of` are the identity
+    /// the `Stats` health op reports — they do not affect computation
+    /// (the row range is what waves validate against).
     pub fn start(addr: &str, local: DenseDataset, n_total: usize,
-                 row_start: usize) -> io::Result<ShardServer> {
+                 row_start: usize, shard: usize, of: usize)
+                 -> io::Result<ShardServer> {
         assert!(row_start + local.n <= n_total,
                 "shard rows [{row_start}, {}) exceed n_total={n_total}",
                 row_start + local.n);
@@ -95,6 +129,8 @@ impl ShardServer {
             local,
             n_total,
             row_start,
+            shard: shard as u64,
+            of: of as u64,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
         });
@@ -108,7 +144,8 @@ impl ShardServer {
 
     /// Slice shard `shard` of `n_shards` out of `data` (the same
     /// floor-boundary partition `RemoteEngine` splits waves with) and
-    /// serve it.
+    /// serve it. Starting the same shard index on several machines
+    /// creates replicas — any of them can serve the shard's sub-waves.
     pub fn start_shard_of(addr: &str, data: &DenseDataset, shard: usize,
                           n_shards: usize) -> io::Result<ShardServer> {
         let (a, b) = shard_range(shard, data.n, n_shards);
@@ -116,9 +153,11 @@ impl ShardServer {
         for r in a..b {
             rows.extend_from_slice(data.row(r));
         }
-        Self::start(addr, DenseDataset::new(b - a, data.d, rows), data.n, a)
+        Self::start(addr, DenseDataset::new(b - a, data.d, rows), data.n, a,
+                    shard, n_shards)
     }
 
+    /// `host:port` string of the bound address.
     pub fn endpoint(&self) -> String {
         self.addr.to_string()
     }
@@ -256,6 +295,21 @@ fn handle_frame(sh: &ShardShared, engine: &mut NativeEngine, payload: &[u8],
             sh.row_start as u64,
             (sh.row_start + sh.local.n) as u64,
         ),
+        Message::Stats => {
+            // the health op: identity + load, computed without touching
+            // the engine (safe to poll while waves are in flight)
+            let live_conns = sh.conns.lock().unwrap().len() as u64;
+            wire::encode_stats_reply(
+                out,
+                sh.shard,
+                sh.of,
+                sh.n_total as u64,
+                sh.local.d as u64,
+                sh.row_start as u64,
+                (sh.row_start + sh.local.n) as u64,
+                live_conns,
+            );
+        }
         Message::Shutdown => {
             sh.shutdown.store(true, Ordering::SeqCst);
             wire::encode_ack(out);
@@ -352,68 +406,309 @@ fn batch_compute(sh: &ShardShared, engine: &mut NativeEngine,
 }
 
 // ---------------------------------------------------------------------
+// health probe (client side of the Stats op)
+// ---------------------------------------------------------------------
+
+/// Health snapshot of one shard-server endpoint (the wire `Stats` op):
+/// what shard it serves, of which ring size, over which dataset, and how
+/// many connections it currently holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EndpointStats {
+    /// shard index this server was started as (`shard-serve --shard`)
+    pub shard: usize,
+    /// ring size it was started for (`shard-serve --of`) — this is what
+    /// lets a coordinator size `--remote` from a single live endpoint
+    pub of: usize,
+    /// global dataset row count
+    pub n_total: usize,
+    /// dataset dimension
+    pub d: usize,
+    /// first owned global row
+    pub row_start: usize,
+    /// one past the last owned global row
+    pub row_end: usize,
+    /// connections the server currently holds (including this probe's)
+    pub live_conns: usize,
+}
+
+/// Probe one endpoint with the wire `Stats` health op over a fresh
+/// connection. Used by `bmonn ring-stats` to survey a ring's health and
+/// layout without issuing any compute.
+pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
+                      -> Result<EndpointStats, String> {
+    let mut stream = connect_endpoint(endpoint, timeout)
+        .map_err(|e| format!("{endpoint}: connect failed: {e}"))?;
+    stream.set_nodelay(true).map_err(|e| e.to_string())?;
+    stream.set_read_timeout(timeout).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(timeout).map_err(|e| e.to_string())?;
+    let mut buf = Vec::new();
+    wire::encode_stats(&mut buf);
+    wire::write_frame(&mut stream, &buf)
+        .map_err(|e| format!("{endpoint}: send failed: {e}"))?;
+    wire::read_frame(&mut stream, &mut buf)
+        .map_err(|e| format!("{endpoint}: recv failed: {e}"))?;
+    match Message::decode(&buf)
+        .map_err(|e| format!("{endpoint}: bad reply: {e}"))?
+    {
+        Message::StatsReply {
+            shard, of, n_total, d, row_start, row_end, live_conns,
+        } => Ok(EndpointStats {
+            shard: shard as usize,
+            of: of as usize,
+            n_total: n_total as usize,
+            d: d as usize,
+            row_start: row_start as usize,
+            row_end: row_end as usize,
+            live_conns: live_conns as usize,
+        }),
+        Message::Error { msg } => Err(format!("{endpoint}: {msg}")),
+        other => Err(format!("{endpoint}: unexpected {} reply",
+                             other.kind())),
+    }
+}
+
+// ---------------------------------------------------------------------
 // remote engine (client)
 // ---------------------------------------------------------------------
 
-/// One persistent shard connection plus its reusable frame buffers.
-struct RemoteShard {
-    endpoint: String,
-    stream: TcpStream,
-    sendbuf: Vec<u8>,
-    recvbuf: Vec<u8>,
-}
-
 type ShardReply = Result<(Vec<f64>, Vec<f64>), String>;
 
-impl RemoteShard {
-    fn round_trip(&mut self) -> Result<Message, String> {
-        wire::write_frame(&mut self.stream, &self.sendbuf)
-            .map_err(|e| format!("shard {}: send failed: {e}",
-                                 self.endpoint))?;
-        wire::read_frame(&mut self.stream, &mut self.recvbuf)
-            .map_err(|e| format!("shard {}: recv failed: {e}",
-                                 self.endpoint))?;
-        Message::decode(&self.recvbuf)
-            .map_err(|e| format!("shard {}: bad reply: {e}", self.endpoint))
+/// One framed request/reply on an established connection.
+fn round_trip(stream: &mut TcpStream, send: &[u8], recv: &mut Vec<u8>,
+              ep: &str) -> Result<Message, String> {
+    wire::write_frame(stream, send)
+        .map_err(|e| format!("{ep}: send failed: {e}"))?;
+    wire::read_frame(stream, recv)
+        .map_err(|e| format!("{ep}: recv failed: {e}"))?;
+    Message::decode(recv).map_err(|e| format!("{ep}: bad reply: {e}"))
+}
+
+/// One logical shard's ordered replica endpoints, its single live
+/// connection (if any), per-endpoint blacklist state and reusable frame
+/// buffers. All failover logic lives here — the wave code above only
+/// stages a payload in `sendbuf` and calls `ReplicaSet::request`.
+struct ReplicaSet {
+    shard: usize,
+    n_shards: usize,
+    endpoints: Vec<String>,
+    states: Vec<EndpointState>,
+    /// (endpoint index, stream) of the live connection
+    conn: Option<(usize, TcpStream)>,
+    sendbuf: Vec<u8>,
+    recvbuf: Vec<u8>,
+    timeout: Option<Duration>,
+    retry: RetryPolicy,
+    /// global (n, d) the ring serves — adopted from the first successful
+    /// handshake anywhere in the ring, then required of every later one
+    /// (including replicas that heal after a restart)
+    shape: Option<(usize, usize)>,
+}
+
+impl ReplicaSet {
+    fn new(shard: usize, n_shards: usize, endpoints: Vec<String>,
+           timeout: Option<Duration>, retry: RetryPolicy) -> ReplicaSet {
+        let n_eps = endpoints.len();
+        ReplicaSet {
+            shard,
+            n_shards,
+            endpoints,
+            states: vec![EndpointState::default(); n_eps],
+            conn: None,
+            sendbuf: Vec::new(),
+            recvbuf: Vec::new(),
+            timeout,
+            retry,
+            shape: None,
+        }
+    }
+
+    /// Dial endpoint `idx`, handshake, and verify it serves this shard's
+    /// exact row range of the ring's dataset. On success the connection
+    /// is installed and the endpoint's blacklist state heals.
+    fn try_endpoint(&mut self, idx: usize) -> Result<(), String> {
+        let ep = self.endpoints[idx].clone();
+        let mut stream = connect_endpoint(&ep, self.timeout)
+            .map_err(|e| format!("{ep}: connect failed: {e}"))?;
+        stream.set_nodelay(true).map_err(|e| format!("{ep}: {e}"))?;
+        stream
+            .set_read_timeout(self.timeout)
+            .map_err(|e| format!("{ep}: {e}"))?;
+        stream
+            .set_write_timeout(self.timeout)
+            .map_err(|e| format!("{ep}: {e}"))?;
+        // handshake on a scratch buffer: `sendbuf` may hold a wave
+        // payload mid-failover and must survive the reconnect
+        let mut buf = Vec::new();
+        wire::encode_hello(&mut buf);
+        wire::write_frame(&mut stream, &buf)
+            .map_err(|e| format!("{ep}: handshake send failed: {e}"))?;
+        wire::read_frame(&mut stream, &mut buf)
+            .map_err(|e| format!("{ep}: handshake recv failed: {e}"))?;
+        let (n, d, a, b) = match Message::decode(&buf)
+            .map_err(|e| format!("{ep}: bad handshake reply: {e}"))?
+        {
+            Message::HelloAck { n_total, d, row_start, row_end } => {
+                (n_total as usize, d as usize, row_start as usize,
+                 row_end as usize)
+            }
+            other => {
+                return Err(format!("{ep}: unexpected {} handshake reply",
+                                   other.kind()))
+            }
+        };
+        if let Some((n0, d0)) = self.shape {
+            if (n0, d0) != (n, d) {
+                return Err(format!(
+                    "{ep} serves n={n} d={d} but the ring serves n={n0} \
+                     d={d0} — every replica must load one dataset"));
+            }
+        }
+        let (wa, wb) = shard_range(self.shard, n, self.n_shards);
+        if (a, b) != (wa, wb) {
+            return Err(format!(
+                "{ep} serves rows [{a}, {b}) but the {}-way partition of \
+                 n={n} assigns [{wa}, {wb}) to shard {} — start it as \
+                 shard {} of {}",
+                self.n_shards, self.shard, self.shard, self.n_shards));
+        }
+        self.shape = Some((n, d));
+        self.states[idx].record_success();
+        self.conn = Some((idx, stream));
+        Ok(())
+    }
+
+    /// Walk the replica list in order, skipping blacklisted endpoints
+    /// and those already attempted during this request, until one
+    /// connects. Failures are recorded (extending each endpoint's
+    /// backoff) and appended to `errors`.
+    fn reconnect(&mut self, attempted: &mut [bool],
+                 errors: &mut Vec<String>) -> bool {
+        for i in 0..self.endpoints.len() {
+            if attempted[i] || !self.states[i].eligible(Instant::now()) {
+                continue;
+            }
+            attempted[i] = true;
+            match self.try_endpoint(i) {
+                Ok(()) => return true,
+                Err(e) => {
+                    self.states[i].record_failure(&self.retry,
+                                                  Instant::now());
+                    errors.push(e);
+                }
+            }
+        }
+        false
+    }
+
+    /// Try to have a live connection without violating any endpoint's
+    /// backoff — the degraded-mode coverage probe. An existing
+    /// connection is verified with a `Stats` round-trip (a dead peer's
+    /// socket looks open until I/O touches it, and stale coverage would
+    /// panic the wave that trusts it); only degraded mode pays this RTT,
+    /// once per shard per coverage query. Returns whether the shard is
+    /// reachable right now.
+    fn probe(&mut self) -> bool {
+        if self.conn.is_some() {
+            let (idx, stream) = self.conn.as_mut().unwrap();
+            let idx = *idx;
+            let mut send = Vec::new();
+            wire::encode_stats(&mut send);
+            let mut recv = Vec::new();
+            match round_trip(stream, &send, &mut recv,
+                             &self.endpoints[idx]) {
+                Ok(Message::StatsReply { .. }) => return true,
+                Ok(_) | Err(_) => {
+                    self.states[idx].record_failure(&self.retry,
+                                                    Instant::now());
+                    self.conn = None;
+                }
+            }
+        }
+        let mut attempted = vec![false; self.endpoints.len()];
+        let mut errors = Vec::new();
+        self.reconnect(&mut attempted, &mut errors)
+    }
+
+    /// Send the payload staged in `sendbuf` and return the decoded
+    /// reply, transparently failing over: an I/O error or corrupt reply
+    /// blacklists the current replica (the connection is unusable), a
+    /// wire `Error` reply fails over *without* blacklisting (the server
+    /// answered — the connection is healthy, only this request failed
+    /// server-side, so an unreplicated ring keeps working on the very
+    /// next wave). Every endpoint is attempted at most once per
+    /// request, so retries are bounded.
+    fn request(&mut self) -> Result<Message, String> {
+        let mut attempted = vec![false; self.endpoints.len()];
+        let mut errors: Vec<String> = Vec::new();
+        loop {
+            // need a connection on an endpoint not yet tried this wave
+            let reusable =
+                matches!(&self.conn, Some((idx, _)) if !attempted[*idx]);
+            if !reusable && !self.reconnect(&mut attempted, &mut errors) {
+                let detail = if errors.is_empty() {
+                    "all replicas are backed off after recent failures"
+                        .to_string()
+                } else {
+                    errors.join("; ")
+                };
+                return Err(format!("shard {}: no live replica: {detail}",
+                                   self.shard));
+            }
+            let (idx, stream) = self.conn.as_mut().unwrap();
+            let idx = *idx;
+            attempted[idx] = true;
+            match round_trip(stream, &self.sendbuf, &mut self.recvbuf,
+                             &self.endpoints[idx]) {
+                Ok(Message::Error { msg }) => {
+                    // server-side failure on a healthy connection: keep
+                    // the conn (and the endpoint's clean record), just
+                    // fail this request over to the next replica
+                    errors.push(format!("{}: {msg}", self.endpoints[idx]));
+                }
+                Ok(m) => return Ok(m),
+                Err(e) => {
+                    // I/O failure: the connection is gone — blacklist
+                    // the replica and fail over
+                    errors.push(e);
+                    self.states[idx].record_failure(&self.retry,
+                                                    Instant::now());
+                    self.conn = None;
+                }
+            }
+        }
     }
 
     fn expect_sums(&mut self, expected: usize) -> ShardReply {
-        match self.round_trip()? {
+        match self.request()? {
             Message::Sums { sum, sq } => {
                 if sum.len() != expected {
                     return Err(format!(
                         "shard {}: {} results for {expected} requested rows",
-                        self.endpoint,
+                        self.shard,
                         sum.len()
                     ));
                 }
                 Ok((sum, sq))
             }
-            Message::Error { msg } => {
-                Err(format!("shard {}: {msg}", self.endpoint))
-            }
             other => Err(format!("shard {}: unexpected {} reply",
-                                 self.endpoint, other.kind())),
+                                 self.shard, other.kind())),
         }
     }
 
     fn expect_dists(&mut self, expected: usize) -> Result<Vec<f64>, String> {
-        match self.round_trip()? {
+        match self.request()? {
             Message::Dists { vals } => {
                 if vals.len() != expected {
                     return Err(format!(
                         "shard {}: {} results for {expected} requested rows",
-                        self.endpoint,
+                        self.shard,
                         vals.len()
                     ));
                 }
                 Ok(vals)
             }
-            Message::Error { msg } => {
-                Err(format!("shard {}: {msg}", self.endpoint))
-            }
             other => Err(format!("shard {}: unexpected {} reply",
-                                 self.endpoint, other.kind())),
+                                 self.shard, other.kind())),
         }
     }
 }
@@ -421,16 +716,16 @@ impl RemoteShard {
 /// Run `per_shard` for every shard that owns part of the current wave.
 /// With more than one live sub-wave the round trips overlap on scoped
 /// threads; a single live sub-wave skips the spawn and runs inline.
-fn fan_out<F>(conns: &mut [RemoteShard], part: &WavePartition,
+fn fan_out<F>(sets: &mut [ReplicaSet], part: &WavePartition,
               per_shard: F) -> Vec<ShardReply>
 where
-    F: Fn(&mut RemoteShard, &ShardWave) -> ShardReply + Sync,
+    F: Fn(&mut ReplicaSet, &ShardWave) -> ShardReply + Sync,
 {
-    let live = (0..conns.len())
+    let live = (0..sets.len())
         .filter(|&i| !part.wave(i).rows.is_empty())
         .count();
     if live <= 1 {
-        return conns
+        return sets
             .iter_mut()
             .enumerate()
             .map(|(i, c)| {
@@ -443,12 +738,12 @@ where
             })
             .collect();
     }
-    let n = conns.len();
+    let n = sets.len();
     std::thread::scope(|sc| {
         let per_shard = &per_shard;
         // spawn only for shards that actually own work — an 8-endpoint
         // ring serving a 2-shard wave pays 2 spawns, not 8
-        let handles: Vec<_> = conns
+        let handles: Vec<_> = sets
             .iter_mut()
             .enumerate()
             .filter(|(i, _)| !part.wave(*i).rows.is_empty())
@@ -490,20 +785,50 @@ fn connect_endpoint(ep: &str, timeout: Option<Duration>)
     }))
 }
 
-/// Networked [`PullEngine`] over a ring of shard servers — see the
-/// module docs for the ring contract, determinism and fault model.
+/// Connection options for [`RemoteEngine::connect_opts`].
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteOptions {
+    /// per-connection I/O timeout, applied to connects, reads and writes
+    /// (`None` = block forever; tests use short timeouts)
+    pub timeout: Option<Duration>,
+    /// opt into degraded answers: with every replica of a shard dead,
+    /// `RemoteEngine::coverage` reports the surviving rows instead of
+    /// waves panicking (`[engine] degraded` / `--degraded`)
+    pub degraded: bool,
+    /// per-endpoint backoff schedule for the failover blacklist
+    pub retry: RetryPolicy,
+}
+
+impl Default for RemoteOptions {
+    fn default() -> Self {
+        RemoteOptions {
+            timeout: Some(DEFAULT_IO_TIMEOUT),
+            degraded: false,
+            retry: RetryPolicy::default(),
+        }
+    }
+}
+
+/// Networked [`PullEngine`] over a replicated ring of shard servers —
+/// see the module docs for the ring contract, determinism, failover and
+/// degraded-mode semantics.
 pub struct RemoteEngine {
-    conns: Vec<RemoteShard>,
+    sets: Vec<ReplicaSet>,
     n_total: usize,
     d: usize,
+    degraded: bool,
     partition: WavePartition,
 }
 
 impl RemoteEngine {
-    /// Connect to every endpoint, handshake, and verify the ring tiles
-    /// the dataset with the canonical floor-boundary partition.
+    /// Connect to a ring given one spec per shard (replicas separated by
+    /// `|` within a spec), verify every reachable replica serves the
+    /// canonical floor-boundary partition, and fail unless each shard
+    /// has at least one live replica. Defaults: [`DEFAULT_IO_TIMEOUT`],
+    /// degraded off.
     pub fn connect(endpoints: &[String]) -> Result<RemoteEngine, String> {
-        Self::connect_with_timeout(endpoints, Some(DEFAULT_IO_TIMEOUT))
+        Self::connect_opts(&PlacementMap::parse(endpoints)?,
+                           RemoteOptions::default())
     }
 
     /// [`RemoteEngine::connect`] with an explicit per-connection I/O
@@ -511,67 +836,64 @@ impl RemoteEngine {
     pub fn connect_with_timeout(endpoints: &[String],
                                 timeout: Option<Duration>)
                                 -> Result<RemoteEngine, String> {
-        if endpoints.is_empty() {
-            return Err("remote engine needs at least one shard endpoint"
-                .into());
-        }
-        let s = endpoints.len();
-        let mut conns = Vec::with_capacity(s);
+        Self::connect_opts(&PlacementMap::parse(endpoints)?,
+                           RemoteOptions { timeout,
+                                           ..RemoteOptions::default() })
+    }
+
+    /// Connect to every shard's first live replica of `placement` and
+    /// verify the ring tiles the dataset with the canonical
+    /// floor-boundary partition. Without `opts.degraded`, a shard with
+    /// no live replica fails the connect; with it, the shard starts out
+    /// down (its rows are excluded from `RemoteEngine::coverage`) and
+    /// is re-probed as its endpoints' backoffs expire — at least one
+    /// shard must be reachable either way, to learn the dataset shape.
+    pub fn connect_opts(placement: &PlacementMap, opts: RemoteOptions)
+                        -> Result<RemoteEngine, String> {
+        let s = placement.n_shards();
+        let mut sets = Vec::with_capacity(s);
         let mut shape: Option<(usize, usize)> = None;
-        for (i, ep) in endpoints.iter().enumerate() {
-            let stream = connect_endpoint(ep, timeout)
-                .map_err(|e| format!("connecting shard {i} ({ep}): {e}"))?;
-            stream.set_nodelay(true).map_err(|e| e.to_string())?;
-            stream.set_read_timeout(timeout).map_err(|e| e.to_string())?;
-            stream.set_write_timeout(timeout).map_err(|e| e.to_string())?;
-            let mut shard = RemoteShard {
-                endpoint: ep.clone(),
-                stream,
-                sendbuf: Vec::new(),
-                recvbuf: Vec::new(),
-            };
-            wire::encode_hello(&mut shard.sendbuf);
-            let (n, d, a, b) = match shard.round_trip()? {
-                Message::HelloAck { n_total, d, row_start, row_end } => {
-                    (n_total as usize, d as usize, row_start as usize,
-                     row_end as usize)
-                }
-                other => {
-                    return Err(format!(
-                        "shard {i} ({ep}): unexpected {} handshake reply",
-                        other.kind()))
-                }
-            };
-            match shape {
-                None => shape = Some((n, d)),
-                Some((n0, d0)) if (n0, d0) != (n, d) => {
-                    return Err(format!(
-                        "shard {i} ({ep}) serves n={n} d={d} but shard 0 \
-                         serves n={n0} d={d0} — the ring must load one \
-                         dataset"))
-                }
-                Some(_) => {}
+        for i in 0..s {
+            let mut set = ReplicaSet::new(i, s,
+                                          placement.replicas(i).to_vec(),
+                                          opts.timeout, opts.retry);
+            set.shape = shape;
+            let mut attempted = vec![false; set.endpoints.len()];
+            let mut errors = Vec::new();
+            if !set.reconnect(&mut attempted, &mut errors)
+                && !opts.degraded
+            {
+                return Err(format!("shard {i}: no live replica: {}",
+                                   errors.join("; ")));
             }
-            let (want_a, want_b) = shard_range(i, n, s);
-            if (a, b) != (want_a, want_b) {
-                return Err(format!(
-                    "shard {i} ({ep}) serves rows [{a}, {b}) but the \
-                     {s}-way partition of n={n} assigns [{want_a}, \
-                     {want_b}) — start it as shard {i} of {s}"));
+            if shape.is_none() {
+                shape = set.shape;
             }
-            conns.push(shard);
+            sets.push(set);
         }
-        let (n_total, d) = shape.unwrap();
+        let Some((n_total, d)) = shape else {
+            return Err("no shard of the ring is reachable — cannot learn \
+                        the dataset shape (degraded mode still needs at \
+                        least one live shard)"
+                .into());
+        };
+        // dead-at-connect shards learn the shape the live ones agreed
+        // on, so a replica that heals later is validated against it
+        for set in &mut sets {
+            set.shape = Some((n_total, d));
+        }
         Ok(RemoteEngine {
-            conns,
+            sets,
             n_total,
             d,
+            degraded: opts.degraded,
             partition: WavePartition::new(s),
         })
     }
 
+    /// Number of logical shards in the ring.
     pub fn n_shards(&self) -> usize {
-        self.conns.len()
+        self.sets.len()
     }
 
     /// The ring's global dataset shape, learned at handshake.
@@ -621,7 +943,7 @@ impl PullEngine for RemoteEngine {
         out_sum.resize(rows.len(), 0.0);
         out_sq.resize(rows.len(), 0.0);
         self.partition.split_rows(data.n, rows);
-        let results = fan_out(&mut self.conns, &self.partition,
+        let results = fan_out(&mut self.sets, &self.partition,
                               |shard, wave| {
             wire::encode_partial_sums(&mut shard.sendbuf, metric, query,
                                       &wave.rows, coord_ids);
@@ -642,7 +964,7 @@ impl PullEngine for RemoteEngine {
         out.clear();
         out.resize(rows.len(), 0.0);
         self.partition.split_rows(data.n, rows);
-        let results = fan_out(&mut self.conns, &self.partition,
+        let results = fan_out(&mut self.sets, &self.partition,
                               |shard, wave| {
             wire::encode_exact_dists(&mut shard.sendbuf, metric, query,
                                      &wave.rows);
@@ -670,13 +992,59 @@ impl PullEngine for RemoteEngine {
         out_sq.clear();
         out_sum.resize(total, 0.0);
         out_sq.resize(total, 0.0);
-        let results = fan_out(&mut self.conns, &self.partition,
+        let results = fan_out(&mut self.sets, &self.partition,
                               |shard, wave| {
             let sub: Vec<PullRequest> = wave.subrequests(reqs).collect();
             wire::encode_pull_batch(&mut shard.sendbuf, metric, &sub);
             shard.expect_sums(wave.rows.len())
         });
         self.scatter2(results, out_sum, out_sq);
+    }
+
+    /// In degraded mode, the global row ranges whose shards currently
+    /// have a live (or immediately reconnectable, backoff permitting)
+    /// replica; `None` when every shard is reachable, or when degraded
+    /// mode is off (then a dead shard panics the wave instead). Shards
+    /// are probed concurrently, so a healthy degraded-mode ring pays
+    /// ~one `Stats` round-trip of latency per coverage query, not S.
+    fn coverage(&mut self) -> Option<Coverage> {
+        if !self.degraded {
+            return None;
+        }
+        let oks: Vec<bool> = if self.sets.len() <= 1 {
+            self.sets.iter_mut().map(|s| s.probe()).collect()
+        } else {
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = self
+                    .sets
+                    .iter_mut()
+                    .map(|s| sc.spawn(move || s.probe()))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or(false))
+                    .collect()
+            })
+        };
+        let s = self.sets.len();
+        let mut live = Vec::new();
+        let mut full = true;
+        for (i, ok) in oks.into_iter().enumerate() {
+            let (a, b) = shard_range(i, self.n_total, s);
+            if a == b {
+                continue; // a zero-row shard loses nothing when it dies
+            }
+            if ok {
+                live.push((a as u32, b as u32));
+            } else {
+                full = false;
+            }
+        }
+        if full {
+            None
+        } else {
+            Some(Coverage { live, rows_total: self.n_total })
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -714,6 +1082,27 @@ mod tests {
         wire::encode_shutdown(&mut buf);
         assert_eq!(raw_round_trip(&mut stream, &buf), Message::Ack);
         assert!(srv.shutdown_requested());
+    }
+
+    #[test]
+    fn stats_op_reports_identity_range_and_connections() {
+        let ds = synthetic::gaussian_iid(10, 4, 8);
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 1, 3)
+            .unwrap(); // owns rows [3, 6)
+        let stats = endpoint_stats(&srv.endpoint(),
+                                   Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(stats.shard, 1);
+        assert_eq!(stats.of, 3);
+        assert_eq!((stats.n_total, stats.d), (10, 4));
+        assert_eq!((stats.row_start, stats.row_end), (3, 6));
+        assert!(stats.live_conns >= 1, "probe connection must be counted");
+        // a dead endpoint reports an error, not a hang
+        let dead = srv.endpoint();
+        drop(srv);
+        let err = endpoint_stats(&dead, Some(Duration::from_secs(5)))
+            .unwrap_err();
+        assert!(err.contains(&dead), "got: {err}");
     }
 
     #[test]
@@ -780,6 +1169,46 @@ mod tests {
     }
 
     #[test]
+    fn connect_prefers_earlier_replicas_but_tolerates_dead_ones() {
+        let ds = synthetic::gaussian_iid(8, 4, 6);
+        let (ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
+        // reserve a port that is then closed: a guaranteed-dead endpoint
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        // shard 0's primary is dead — connect must fall through to the
+        // live replica and waves must match the healthy ring bitwise
+        let specs = vec![format!("{dead}|{}", eps[0]), eps[1].clone()];
+        let mut eng = RemoteEngine::connect_with_timeout(
+            &specs, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(eng.shape(), (8, 4));
+        let mut healthy = RemoteEngine::connect_with_timeout(
+            &eps, Some(Duration::from_secs(5))).unwrap();
+        let q = ds.row_vec(0);
+        let rows: Vec<u32> = (0..8).collect();
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        let (mut s2, mut q2) = (Vec::new(), Vec::new());
+        eng.partial_sums(&ds, &q, &rows, &[0, 2], Metric::L2Sq, &mut s1,
+                         &mut q1);
+        healthy.partial_sums(&ds, &q, &rows, &[0, 2], Metric::L2Sq,
+                             &mut s2, &mut q2);
+        assert_eq!(s1, s2);
+        assert_eq!(q1, q2);
+        // degraded connect with only dead endpoints still fails: the
+        // dataset shape cannot be learned from nothing
+        let all_dead = vec![dead.clone(), dead];
+        let err = RemoteEngine::connect_opts(
+            &PlacementMap::parse(&all_dead).unwrap(),
+            RemoteOptions { timeout: Some(Duration::from_millis(500)),
+                            degraded: true,
+                            ..RemoteOptions::default() })
+            .unwrap_err();
+        assert!(err.contains("reachable"), "got: {err}");
+        drop(ring);
+    }
+
+    #[test]
     fn wave_against_a_mismatched_dataset_panics_with_context() {
         let ds = synthetic::gaussian_iid(8, 4, 5);
         let (_ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
@@ -787,6 +1216,7 @@ mod tests {
         assert_eq!(eng.shape(), (8, 4));
         assert_eq!(eng.n_shards(), 2);
         assert_eq!(eng.name(), "remote");
+        assert_eq!(eng.coverage(), None, "degraded off: never degraded");
         let wrong = synthetic::gaussian_iid(9, 4, 6);
         let q = wrong.row_vec(0);
         let err = std::panic::catch_unwind(

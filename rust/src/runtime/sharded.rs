@@ -25,6 +25,8 @@
 //! the arithmetic it would spread. The cutoff only moves work between
 //! the inline and pooled paths — results are identical either way.
 
+#![deny(missing_docs)]
+
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -72,6 +74,7 @@ pub struct ScopedPool {
 }
 
 impl ScopedPool {
+    /// Spawn a pool of `n_workers` persistent worker threads (> 0).
     pub fn new(n_workers: usize) -> ScopedPool {
         assert!(n_workers > 0);
         let shared = Arc::new(PoolShared {
@@ -97,6 +100,7 @@ impl ScopedPool {
         ScopedPool { shared, workers }
     }
 
+    /// Number of worker threads in the pool.
     pub fn n_workers(&self) -> usize {
         self.workers.len()
     }
@@ -209,6 +213,7 @@ impl<E: PullEngine + Clone + Send> ShardedEngine<E> {
         ShardedEngine { shards, partition: WavePartition::new(s), pool }
     }
 
+    /// Number of row shards (= pool workers) waves fan out across.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }

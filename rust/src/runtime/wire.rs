@@ -16,18 +16,35 @@
 //!   client prove the ring tiles the dataset with the same floor-boundary
 //!   partition the in-process sharded engine uses
 //!   (`runtime::partition::shard_range`).
+//! * `Stats` — the health op: like `Hello` it carries no body and may be
+//!   sent at any point on a connection. The server answers
+//!   [`Message::StatsReply`] with its shard identity (`shard` of `of`),
+//!   dataset shape, owned row range and live-connection count, so a
+//!   coordinator can discover how a ring is laid out (and size
+//!   `--remote` accordingly) by probing endpoints — see the
+//!   `bmonn ring-stats` subcommand.
 //! * `PartialSums` / `ExactDists` / `PullBatch` — one engine wave, rows
 //!   given as **global** ids; the server rebases them onto its local
 //!   row range and rejects anything outside it.
 //! * `Shutdown` — acked with [`Message::Ack`], then the server exits.
 //!
-//! Replies (shard server → coordinator): `HelloAck`, `Sums { sum, sq }`
-//! (for `PartialSums` and `PullBatch`, concatenated request-major),
-//! `Dists { vals }`, `Error { msg }`, `Ack`.
+//! Replies (shard server → coordinator): `HelloAck`, `StatsReply`,
+//! `Sums { sum, sq }` (for `PartialSums` and `PullBatch`, concatenated
+//! request-major), `Dists { vals }`, `Error { msg }`, `Ack`.
+//!
+//! An `Error` reply is also a failover trigger: the replicated client
+//! (`runtime::remote::RemoteEngine`) re-issues the sub-wave to the
+//! shard's next live replica (without blacklisting the answering
+//! server — its connection is healthy, only the request failed).
 //!
 //! All floats cross the wire via `to_le_bytes`/`from_le_bytes`, i.e. by
 //! exact bit pattern — the transport can never perturb the bitwise
 //! parity the engines are pinned to.
+//!
+//! The byte-level layout of every message is specified normatively in
+//! `docs/WIRE_PROTOCOL.md`.
+
+#![deny(missing_docs)]
 
 use std::io::{self, Read, Write};
 
@@ -49,6 +66,8 @@ const OP_DISTS: u8 = 7;
 const OP_ERROR: u8 = 8;
 const OP_SHUTDOWN: u8 = 9;
 const OP_ACK: u8 = 10;
+const OP_STATS: u8 = 11;
+const OP_STATS_REPLY: u8 = 12;
 
 fn metric_code(m: Metric) -> u8 {
     match m {
@@ -100,11 +119,14 @@ fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
     }
 }
 
+/// Encode a `Hello` handshake request (no body).
 pub fn encode_hello(out: &mut Vec<u8>) {
     out.clear();
     out.push(OP_HELLO);
 }
 
+/// Encode the `HelloAck` handshake reply: global dataset shape plus the
+/// row range `[row_start, row_end)` this server owns.
 pub fn encode_hello_ack(out: &mut Vec<u8>, n_total: u64, d: u64,
                         row_start: u64, row_end: u64) {
     out.clear();
@@ -115,6 +137,30 @@ pub fn encode_hello_ack(out: &mut Vec<u8>, n_total: u64, d: u64,
     put_u64(out, row_end);
 }
 
+/// Encode a `Stats` health request (no body).
+pub fn encode_stats(out: &mut Vec<u8>) {
+    out.clear();
+    out.push(OP_STATS);
+}
+
+/// Encode a `StatsReply`: shard identity (`shard` of `of`), dataset
+/// shape, owned row range, and the server's live-connection count.
+pub fn encode_stats_reply(out: &mut Vec<u8>, shard: u64, of: u64,
+                          n_total: u64, d: u64, row_start: u64,
+                          row_end: u64, live_conns: u64) {
+    out.clear();
+    out.push(OP_STATS_REPLY);
+    put_u64(out, shard);
+    put_u64(out, of);
+    put_u64(out, n_total);
+    put_u64(out, d);
+    put_u64(out, row_start);
+    put_u64(out, row_end);
+    put_u64(out, live_conns);
+}
+
+/// Encode a `PartialSums` wave request from borrowed slices (rows are
+/// global ids).
 pub fn encode_partial_sums(out: &mut Vec<u8>, metric: Metric,
                            query: &[f32], rows: &[u32],
                            coord_ids: &[u32]) {
@@ -126,6 +172,7 @@ pub fn encode_partial_sums(out: &mut Vec<u8>, metric: Metric,
     put_u32s(out, coord_ids);
 }
 
+/// Encode an `ExactDists` wave request from borrowed slices.
 pub fn encode_exact_dists(out: &mut Vec<u8>, metric: Metric, query: &[f32],
                           rows: &[u32]) {
     out.clear();
@@ -135,6 +182,9 @@ pub fn encode_exact_dists(out: &mut Vec<u8>, metric: Metric, query: &[f32],
     put_u32s(out, rows);
 }
 
+/// Encode a `PullBatch` wave request straight from the coordinator's
+/// borrowed [`PullRequest`] views (the hot path never copies a wave into
+/// an owned message first).
 pub fn encode_pull_batch(out: &mut Vec<u8>, metric: Metric,
                          reqs: &[PullRequest<'_>]) {
     out.clear();
@@ -162,12 +212,14 @@ pub fn encode_sums(out: &mut Vec<u8>, sum: &[f64], sq: &[f64]) {
     }
 }
 
+/// Encode a `Dists` reply (exact distances, one per requested row).
 pub fn encode_dists(out: &mut Vec<u8>, vals: &[f64]) {
     out.clear();
     out.push(OP_DISTS);
     put_f64s(out, vals);
 }
 
+/// Encode an `Error` reply carrying a human-readable message.
 pub fn encode_error(out: &mut Vec<u8>, msg: &str) {
     out.clear();
     out.push(OP_ERROR);
@@ -176,11 +228,13 @@ pub fn encode_error(out: &mut Vec<u8>, msg: &str) {
     out.extend_from_slice(bytes);
 }
 
+/// Encode a `Shutdown` request (no body); the server acks, then exits.
 pub fn encode_shutdown(out: &mut Vec<u8>) {
     out.clear();
     out.push(OP_SHUTDOWN);
 }
 
+/// Encode an `Ack` reply (no body).
 pub fn encode_ack(out: &mut Vec<u8>) {
     out.clear();
     out.push(OP_ACK);
@@ -193,8 +247,11 @@ pub fn encode_ack(out: &mut Vec<u8>) {
 /// One sub-request of a decoded [`Message::PullBatch`] wave.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireRequest {
+    /// the query vector this sub-request's bandit is serving
     pub query: Vec<f32>,
+    /// dataset rows to pull, as **global** row ids
     pub rows: Vec<u32>,
+    /// shared coordinate draws for every row of this sub-request
     pub coord_ids: Vec<u32>,
 }
 
@@ -202,22 +259,46 @@ pub struct WireRequest {
 /// slices via the `encode_*` helpers; `Message::encode` delegates to the
 /// same helpers so there is exactly one byte layout.
 #[derive(Clone, Debug, PartialEq)]
+#[allow(missing_docs)] // variant payloads are specified by the encoders
 pub enum Message {
+    /// Handshake request (no body).
     Hello,
+    /// Handshake reply: dataset shape + owned row range.
     HelloAck { n_total: u64, d: u64, row_start: u64, row_end: u64 },
+    /// Single-query partial-moment wave (global row ids).
     PartialSums {
         metric: Metric,
         query: Vec<f32>,
         rows: Vec<u32>,
         coord_ids: Vec<u32>,
     },
+    /// Exact-distance wave (global row ids).
     ExactDists { metric: Metric, query: Vec<f32>, rows: Vec<u32> },
+    /// Coalesced multi-query wave.
     PullBatch { metric: Metric, reqs: Vec<WireRequest> },
+    /// Reply to `PartialSums` / `PullBatch`: per-job (Σx, Σx²),
+    /// concatenated request-major.
     Sums { sum: Vec<f64>, sq: Vec<f64> },
+    /// Reply to `ExactDists`: one distance per requested row.
     Dists { vals: Vec<f64> },
+    /// Failure reply — also the client's failover trigger.
     Error { msg: String },
+    /// Stop-serving request (no body); acked, then the server exits.
     Shutdown,
+    /// Generic acknowledgement (no body).
     Ack,
+    /// Health request (no body).
+    Stats,
+    /// Health reply: shard identity, shape, row range, connection count.
+    StatsReply {
+        shard: u64,
+        of: u64,
+        n_total: u64,
+        d: u64,
+        row_start: u64,
+        row_end: u64,
+        live_conns: u64,
+    },
 }
 
 struct Cur<'a> {
@@ -307,6 +388,8 @@ impl Message {
             Message::Error { .. } => "error",
             Message::Shutdown => "shutdown",
             Message::Ack => "ack",
+            Message::Stats => "stats",
+            Message::StatsReply { .. } => "stats_reply",
         }
     }
 
@@ -340,6 +423,11 @@ impl Message {
             Message::Error { msg } => encode_error(out, msg),
             Message::Shutdown => encode_shutdown(out),
             Message::Ack => encode_ack(out),
+            Message::Stats => encode_stats(out),
+            Message::StatsReply {
+                shard, of, n_total, d, row_start, row_end, live_conns,
+            } => encode_stats_reply(out, *shard, *of, *n_total, *d,
+                                    *row_start, *row_end, *live_conns),
         }
     }
 
@@ -410,6 +498,16 @@ impl Message {
             }
             OP_SHUTDOWN => Message::Shutdown,
             OP_ACK => Message::Ack,
+            OP_STATS => Message::Stats,
+            OP_STATS_REPLY => Message::StatsReply {
+                shard: c.u64()?,
+                of: c.u64()?,
+                n_total: c.u64()?,
+                d: c.u64()?,
+                row_start: c.u64()?,
+                row_end: c.u64()?,
+                live_conns: c.u64()?,
+            },
             x => return Err(format!("unknown opcode {x}")),
         };
         c.done()?;
@@ -484,7 +582,17 @@ mod tests {
     }
 
     fn arb_msg(rng: &mut Rng) -> Message {
-        match rng.below(10) {
+        match rng.below(12) {
+            10 => Message::Stats,
+            11 => Message::StatsReply {
+                shard: rng.next_u64(),
+                of: rng.next_u64(),
+                n_total: rng.next_u64(),
+                d: rng.next_u64(),
+                row_start: rng.next_u64(),
+                row_end: rng.next_u64(),
+                live_conns: rng.next_u64(),
+            },
             0 => Message::Hello,
             1 => Message::HelloAck {
                 n_total: rng.next_u64(),

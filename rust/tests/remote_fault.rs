@@ -1,27 +1,39 @@
-//! Fault injection across the network boundary: killing a shard server
-//! mid-stream must surface as clean, prompt errors — never hung waiters
-//! — and the coordinator must heal once the shard is back.
+//! Fault injection across the network boundary.
 //!
+//! Unreplicated rings (single replica per shard): killing a shard
+//! server mid-stream must surface as clean, prompt errors — never hung
+//! waiters — and the coordinator must heal once the shard is back.
 //! Engine level: a dead shard turns the in-flight wave into a panic
 //! (caught by callers) within the I/O timeout; a fresh connect after the
-//! shard restarts is bitwise-correct again.
+//! shard restarts is bitwise-correct again. Coordinator level: the query
+//! server's worker catches that panic, answers the affected queries with
+//! error responses, and rebuilds (= reconnects) its engine — extending
+//! the PR 2 in-process worker-survival guarantee across the wire.
 //!
-//! Coordinator level: the query server's worker catches that panic,
-//! answers the affected queries with error responses, and rebuilds (=
-//! reconnects) its engine — extending the PR 2 in-process
-//! worker-survival guarantee across the wire. While the ring is down,
-//! queries get `engine unavailable` errors; after the shard restarts on
-//! the same endpoint, the same server answers correctly again.
+//! Replicated rings (`primary|replica` specs): killing any *single*
+//! endpoint mid-stream must produce **no query errors at all** — the
+//! sub-wave fails over to the shard's next replica and every answer
+//! stays bitwise-identical to solo `NativeEngine`. A blacklisted
+//! endpoint heals after a restart (the failover path reconnects to it
+//! once its backoff expires). And with **every** replica of a shard
+//! dead: degraded mode answers exact, coverage-annotated results over
+//! the surviving rows — through the engine, the drivers and the query
+//! server's JSON — while degraded-off keeps the hard-error contract.
 
 use std::time::{Duration, Instant};
 
 use bmonn::coordinator::arms::PullEngine;
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::knn::knn_point_dense;
 use bmonn::coordinator::server::{Client, Server, ServerConfig};
 use bmonn::data::{synthetic, DenseDataset, Metric};
+use bmonn::metrics::Counter;
 use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::placement::{PlacementMap, RetryPolicy};
 use bmonn::runtime::remote::{spawn_loopback_ring, RemoteEngine,
-                             ShardServer};
+                             RemoteOptions, ShardServer};
 use bmonn::util::json::Json;
+use bmonn::util::rng::Rng;
 
 /// Rebind a shard on the endpoint it died on (the listener socket may
 /// take a moment to become reusable).
@@ -154,5 +166,295 @@ fn coordinator_answers_errors_while_a_shard_is_down_then_heals() {
         .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
         .unwrap();
     assert_eq!(stats.get("queries").unwrap().as_usize(), Some(4));
+    srv.stop();
+}
+
+/// Build `primary|replica` specs for a 2×2 replicated loopback ring.
+fn replicated_specs(p_eps: &[String], r_eps: &[String]) -> Vec<String> {
+    p_eps
+        .iter()
+        .zip(r_eps)
+        .map(|(p, r)| format!("{p}|{r}"))
+        .collect()
+}
+
+/// Fast-backoff options so the tests never sit out long blacklists.
+fn fast_opts(degraded: bool) -> RemoteOptions {
+    RemoteOptions {
+        timeout: Some(Duration::from_secs(5)),
+        degraded,
+        retry: RetryPolicy {
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_millis(200),
+        },
+    }
+}
+
+#[test]
+fn killing_any_single_endpoint_mid_stream_yields_no_errors_bitwise() {
+    let ds = synthetic::gaussian_iid(64, 32, 51);
+    let q = ds.row_vec(0);
+    let rows: Vec<u32> = (0..64).collect();
+    let coords: Vec<u32> = (0..16).collect();
+    let (mut primaries, p_eps) = spawn_loopback_ring(&ds, 2).unwrap();
+    let (_replicas, r_eps) = spawn_loopback_ring(&ds, 2).unwrap();
+    let specs = replicated_specs(&p_eps, &r_eps);
+    let mut engine = RemoteEngine::connect_opts(
+        &PlacementMap::parse(&specs).unwrap(), fast_opts(false)).unwrap();
+    let mut solo = NativeEngine::default();
+    let (mut s0, mut q0) = (Vec::new(), Vec::new());
+    solo.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s0,
+                      &mut q0);
+    // kill shard 1's primary while waves keep flowing: EVERY wave must
+    // succeed — the sub-wave fails over to the replica mid-stream — and
+    // every answer must stay bitwise-identical to solo execution
+    let killer = std::thread::spawn({
+        let mut victim = primaries.remove(1);
+        move || {
+            std::thread::sleep(Duration::from_millis(50));
+            victim.stop();
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut waves = 0u32;
+    while Instant::now() < deadline && waves < 400 {
+        let (mut s, mut sq) = (Vec::new(), Vec::new());
+        engine.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s,
+                            &mut sq);
+        assert_eq!(s0, s, "wave {waves} diverged after the kill");
+        assert_eq!(q0, sq);
+        waves += 1;
+    }
+    killer.join().unwrap();
+    assert!(waves >= 10, "only {waves} waves ran — kill raced the test");
+    // the other wave kinds ride the same failover path
+    let mut exact_solo = Vec::new();
+    let mut exact_remote = Vec::new();
+    solo.exact_dists(&ds, &q, &rows, Metric::L1, &mut exact_solo);
+    engine.exact_dists(&ds, &q, &rows, Metric::L1, &mut exact_remote);
+    assert_eq!(exact_solo, exact_remote);
+    // now kill shard 0's primary too (a different single endpoint, mid
+    // stream): the replicas alone must carry the whole ring, bitwise
+    drop(primaries);
+    let (mut s, mut sq) = (Vec::new(), Vec::new());
+    engine.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s,
+                        &mut sq);
+    assert_eq!(s0, s, "replicas-only ring must stay bitwise");
+    assert_eq!(q0, sq);
+}
+
+#[test]
+fn blacklisted_primary_heals_after_restart() {
+    let ds = synthetic::gaussian_iid(40, 16, 91);
+    let (mut primaries, p_eps) = spawn_loopback_ring(&ds, 2).unwrap();
+    let (mut replicas, r_eps) = spawn_loopback_ring(&ds, 2).unwrap();
+    let specs = replicated_specs(&p_eps, &r_eps);
+    let mut engine = RemoteEngine::connect_opts(
+        &PlacementMap::parse(&specs).unwrap(), fast_opts(false)).unwrap();
+    let q = ds.row_vec(1);
+    let rows: Vec<u32> = (0..40).collect();
+    let coords: Vec<u32> = (0..8).collect();
+    let mut solo = NativeEngine::default();
+    let (mut s0, mut q0) = (Vec::new(), Vec::new());
+    solo.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s0,
+                      &mut q0);
+    // kill shard 0's primary: the wave fails over to the replica and
+    // the primary goes on the blacklist
+    let p0_endpoint = primaries[0].endpoint();
+    primaries[0].stop();
+    let (mut s, mut sq) = (Vec::new(), Vec::new());
+    engine.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut s,
+                        &mut sq);
+    assert_eq!(s0, s, "failover wave must stay bitwise");
+    // restart the primary on its old endpoint, then kill the replica:
+    // waves must return to the *healed* primary — the blacklist must
+    // not exclude it forever (its backoff expires, the reconnect heals)
+    let _revived = restart_shard(&p0_endpoint, &ds, 0, 2);
+    replicas[0].stop();
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let (mut s, mut sq) = (Vec::new(), Vec::new());
+                engine.partial_sums(&ds, &q, &rows, &coords,
+                                    Metric::L2Sq, &mut s, &mut sq);
+                (s, sq)
+            }));
+        match outcome {
+            Ok((s, sq)) => {
+                assert_eq!(s0, s, "healed primary must answer bitwise");
+                assert_eq!(q0, sq);
+                break;
+            }
+            Err(_) => {
+                // both endpoints momentarily blacklisted — retry until
+                // the primary's backoff expires and it heals
+                assert!(Instant::now() < deadline,
+                        "ring never healed back onto the restarted \
+                         primary");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[test]
+fn dead_shard_degrades_with_coverage_when_opted_in_and_panics_otherwise() {
+    let ds = synthetic::image_like(60, 32, 77);
+    let k = 3;
+    let params = BanditParams { k, delta: 0.01, ..Default::default() };
+    // --- degraded OFF: hard error once the shard's only replica dies --
+    {
+        let (mut ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+        let mut eng = RemoteEngine::connect_opts(
+            &PlacementMap::parse(&endpoints).unwrap(), fast_opts(false))
+            .unwrap();
+        ring[1].stop();
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng::new(3);
+                let mut c = Counter::new();
+                knn_point_dense(&ds, 5, Metric::L2Sq, &params, &mut eng,
+                                &mut rng, &mut c)
+            }))
+            .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("remote pull wave failed")
+                    || msg.contains("remote exact wave failed"),
+                "degraded-off must keep the hard-error contract: {msg}");
+    }
+    // --- degraded ON: coverage-annotated exact answers over survivors -
+    let (mut ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let mut eng = RemoteEngine::connect_opts(
+        &PlacementMap::parse(&endpoints).unwrap(), fast_opts(true))
+        .unwrap();
+    // healthy: full coverage, the bandit path runs, answers are bitwise
+    // equal to solo native execution under the same rng stream
+    assert_eq!(eng.coverage(), None, "healthy ring must not degrade");
+    let res = {
+        let mut rng = Rng::new(7);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 5, Metric::L2Sq, &params, &mut eng, &mut rng,
+                        &mut c)
+    };
+    assert!(res.coverage.is_none());
+    let solo_res = {
+        let mut solo = NativeEngine::default();
+        let mut rng = Rng::new(7);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 5, Metric::L2Sq, &params, &mut solo,
+                        &mut rng, &mut c)
+    };
+    assert_eq!(res.ids, solo_res.ids);
+    assert_eq!(res.dists, solo_res.dists);
+    // kill shard 1 (rows [30, 60)): queries must still ANSWER — exact
+    // top-k over the surviving rows with an explicit coverage annotation
+    ring[1].stop();
+    let res = {
+        let mut rng = Rng::new(8);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 5, Metric::L2Sq, &params, &mut eng, &mut rng,
+                        &mut c)
+    };
+    let cov = res.coverage.as_ref().expect("degraded answer must carry \
+                                            its coverage");
+    assert_eq!(cov.rows_total, 60);
+    assert_eq!(cov.rows_live(), 30);
+    assert_eq!(cov.live, vec![(0, 30)]);
+    assert!((cov.fraction() - 0.5).abs() < 1e-12);
+    assert_eq!(res.ids.len(), k);
+    assert!(res.ids.iter().all(|&r| r < 30),
+            "degraded ids must come from surviving rows: {:?}", res.ids);
+    // and they are exactly the top-k over surviving rows, computed with
+    // the same native exact kernel the shard servers run (bitwise)
+    let cand_rows: Vec<u32> = (0..30u32).filter(|&r| r != 5).collect();
+    let mut dvals = Vec::new();
+    {
+        let mut solo = NativeEngine::default();
+        solo.exact_dists(&ds, &ds.row_vec(5), &cand_rows, Metric::L2Sq,
+                         &mut dvals);
+    }
+    let mut cands: Vec<(f64, u32)> =
+        dvals.iter().copied().zip(cand_rows.iter().copied()).collect();
+    cands.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let want_ids: Vec<u32> = cands[..k].iter().map(|&(_, r)| r).collect();
+    let want_dists: Vec<f64> = cands[..k].iter().map(|&(d, _)| d).collect();
+    assert_eq!(res.ids, want_ids);
+    assert_eq!(res.dists, want_dists);
+    // shard restored: coverage returns to full and the bandit path is
+    // bitwise again (the probe reconnects past the healed blacklist)
+    let restored = restart_shard(&ring[1].endpoint(), &ds, 1, 2);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if eng.coverage().is_none() {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "coverage never healed after the shard restart");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let res = {
+        let mut rng = Rng::new(7);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 5, Metric::L2Sq, &params, &mut eng, &mut rng,
+                        &mut c)
+    };
+    assert!(res.coverage.is_none());
+    assert_eq!(res.ids, solo_res.ids);
+    assert_eq!(res.dists, solo_res.dists);
+    drop(restored);
+}
+
+#[test]
+fn coordinator_answers_degraded_queries_with_coverage_fields() {
+    let ds = synthetic::image_like(80, 64, 123);
+    let (mut ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        remote: endpoints.clone(),
+        degraded: true,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    let knn_req = |row: usize| {
+        Json::obj(vec![
+            ("op", Json::Str("knn".into())),
+            ("query", Json::f32_array(&ds.row_vec(row))),
+            ("k", Json::Num(3.0)),
+        ])
+    };
+    // healthy ring: plain full answers, no coverage fields
+    let resp = cl.request(&knn_req(5)).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert!(resp.get("coverage").is_none(),
+            "full answers must not be annotated");
+    // kill shard 0 (rows [0, 40)): the very next query must *answer*,
+    // over the surviving rows, with the coverage annotation — no error
+    // response at all (that is the degraded contract)
+    ring[0].stop();
+    let resp = cl.request(&knn_req(50)).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)),
+               "degraded query must succeed: {resp:?}");
+    let frac = resp.get("coverage").and_then(|v| v.as_f64()).unwrap();
+    assert!((frac - 0.5).abs() < 1e-9, "coverage {frac}");
+    assert_eq!(resp.get("rows_live").and_then(|v| v.as_usize()), Some(40));
+    assert_eq!(resp.get("rows_total").and_then(|v| v.as_usize()),
+               Some(80));
+    let ids: Vec<usize> = resp
+        .get("ids")
+        .and_then(|a| a.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap();
+    assert_eq!(ids.len(), 3);
+    assert!(ids.iter().all(|&r| (40..80).contains(&r)),
+            "degraded ids must come from the surviving shard: {ids:?}");
+    // stats: both queries counted, none lost
+    let stats = cl
+        .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+        .unwrap();
+    assert_eq!(stats.get("queries").unwrap().as_usize(), Some(2));
     srv.stop();
 }

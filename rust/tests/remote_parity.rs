@@ -199,6 +199,39 @@ fn empty_waves_produce_empty_outputs_without_traffic() {
 }
 
 #[test]
+fn replicated_rings_with_all_replicas_alive_are_bitwise() {
+    // full replication, nothing dead: the failover machinery must be
+    // invisible — connect prefers the first replica of each shard and
+    // answers stay bitwise-identical to solo execution
+    let ds = synthetic::gaussian_iid(33, 48, 21);
+    let (_primaries, p_eps) = spawn_loopback_ring(&ds, 3).unwrap();
+    let (_replicas, r_eps) = spawn_loopback_ring(&ds, 3).unwrap();
+    let specs: Vec<String> = p_eps
+        .iter()
+        .zip(&r_eps)
+        .map(|(p, r)| format!("{p}|{r}"))
+        .collect();
+    let mut remote = RemoteEngine::connect(&specs).unwrap();
+    assert_eq!(remote.n_shards(), 3);
+    let mut rng = Rng::new(22);
+    let query: Vec<f32> = (0..48).map(|_| rng.gaussian() as f32).collect();
+    let rows: Vec<u32> = (0..99).map(|_| rng.below(33) as u32).collect();
+    let coords: Vec<u32> =
+        (0..13).map(|_| rng.below(48) as u32).collect();
+    let mut solo = NativeEngine::default();
+    for metric in [Metric::L2Sq, Metric::L1] {
+        let (mut s0, mut q0) = (Vec::new(), Vec::new());
+        solo.partial_sums(&ds, &query, &rows, &coords, metric, &mut s0,
+                          &mut q0);
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        remote.partial_sums(&ds, &query, &rows, &coords, metric, &mut s1,
+                            &mut q1);
+        assert_eq!(s0, s1, "replicated ring sums {metric:?}");
+        assert_eq!(q0, q1, "replicated ring sqs {metric:?}");
+    }
+}
+
+#[test]
 fn batched_knn_driver_is_bitwise_identical_over_the_wire() {
     // end-to-end: the multi-query driver over a remote ring must produce
     // byte-identical answers, distances and unit accounting — the rng
