@@ -5,10 +5,14 @@
 //! round) plus a single-query latency sweep, on 1/2/4 local shards, **on
 //! a 2-shard TCP-loopback remote ring** (in-process `shard-serve`
 //! servers driven through `runtime::remote::RemoteEngine` — the tracked
-//! distributed data point), **and on a 2-shard failover rung** (a
+//! distributed data point), **on a 2-shard failover rung** (a
 //! replicated loopback ring whose primaries are all dead, so every wave
 //! reaches the data through the replica-failover path — pinning that
-//! failover steady-state costs the same as a healthy connection), and
+//! failover steady-state costs the same as a healthy connection), **and
+//! on a 2-shard multiplex rung** (two concurrent batch drivers sharing
+//! one `runtime::remote::RingClient`, the query server's pattern: their
+//! waves interleave on one connection per shard and the rung asserts
+//! the per-connection in-flight high-water mark reached ≥ 2), and
 //! emits the numbers as JSON for `BENCH_pull.json` so the perf
 //! trajectory has data points that survive across PRs:
 //!
@@ -125,7 +129,8 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
 /// Per-rung measurement row.
 struct ShardRun {
     shards: usize,
-    /// "local" | "tcp-loopback" | "tcp-remote"
+    /// "local" | "tcp-loopback" | "tcp-failover" | "tcp-multiplex" |
+    /// "tcp-remote"
     transport: &'static str,
     rows_per_s: f64,
     wall_per_round_us: f64,
@@ -134,6 +139,10 @@ struct ShardRun {
     batch_wall_ms: f64,
     solo_p50_us: f64,
     solo_p99_us: f64,
+    /// tcp-multiplex only: high-water mark of concurrently in-flight
+    /// sub-waves on one connection (asserted >= 2 — the pipelining
+    /// witness)
+    max_inflight: Option<u64>,
 }
 
 /// Workload shape shared by every rung.
@@ -211,11 +220,158 @@ where
         batch_wall_ms: batch_wall.as_secs_f64() * 1e3,
         solo_p50_us: lat.percentile(50.0).as_micros() as f64,
         solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        max_inflight: None,
+    })
+}
+
+/// The always-on multiplex rung: one shared [`remote::RingClient`] over
+/// a loopback ring, driven by (a) a deterministic two-waves-in-flight
+/// pipelining check through the split submit/complete API, and (b) two
+/// *concurrent* batch drivers on separate threads — the query server's
+/// sharing pattern — whose answers must both match the baseline. The
+/// client's per-connection in-flight high-water mark is recorded and
+/// must reach ≥ 2 (waves demonstrably overlap on one connection).
+fn measure_multiplex_rung(w: &Workload<'_>, endpoints: &[String],
+                          baseline_answers: &mut Option<Vec<Vec<u32>>>)
+                          -> Result<ShardRun, String> {
+    use std::sync::Arc;
+    let client = Arc::new(remote::RingClient::connect(endpoints)?);
+    // (a) deterministic overlap: submit two waves through the pipelined
+    // API before completing either — both are in flight on the same
+    // per-shard connection — and pin their results against local compute
+    {
+        let mut eng = remote::RemoteEngine::from_client(client.clone());
+        let mut local = crate::runtime::native::NativeEngine::default();
+        let q0 = w.data.row_vec(0);
+        let q1 = w.data.row_vec(1.min(w.data.n - 1));
+        // a large first wave (repeated rows x 512 coords, millions of
+        // coordinate ops) so its server-side compute comfortably
+        // outlasts the submit of the second — the overlap below is then
+        // reliable, not a race against a fast loopback server
+        let rows: Vec<u32> = (0..w.data.n as u32)
+            .cycle()
+            .take(w.data.n * 8)
+            .collect();
+        let coords: Vec<u32> = (0..w.data.d as u32)
+            .cycle()
+            .take(512)
+            .collect();
+        let t0 = eng.submit_partial_sums(w.data, &q0, &rows, &coords,
+                                         Metric::L2Sq);
+        let t1 = eng.submit_partial_sums(w.data, &q1, &rows, &coords,
+                                         Metric::L2Sq);
+        let (mut s1, mut sq1) = (Vec::new(), Vec::new());
+        eng.complete_sums(t1, &mut s1, &mut sq1);
+        let (mut s0, mut sq0) = (Vec::new(), Vec::new());
+        eng.complete_sums(t0, &mut s0, &mut sq0);
+        let (mut l0, mut lq0) = (Vec::new(), Vec::new());
+        let (mut l1, mut lq1) = (Vec::new(), Vec::new());
+        local.partial_sums(w.data, &q0, &rows, &coords, Metric::L2Sq,
+                           &mut l0, &mut lq0);
+        local.partial_sums(w.data, &q1, &rows, &coords, Metric::L2Sq,
+                           &mut l1, &mut lq1);
+        if s0 != l0 || sq0 != lq0 || s1 != l1 || sq1 != lq1 {
+            return Err("multiplex rung: pipelined submit/complete \
+                        answers diverged from local compute"
+                .into());
+        }
+    }
+    // (b) two concurrent batch drivers sharing the client, timed
+    let t0 = Instant::now();
+    let (res_a, res_b) = std::thread::scope(|sc| {
+        let spawn_driver = |_tag: usize| {
+            let client = client.clone();
+            sc.spawn(move || {
+                let mut engine = TimingEngine::new(
+                    remote::RemoteEngine::from_client(client));
+                let mut answers: Vec<Vec<u32>> = Vec::new();
+                for _ in 0..w.reps {
+                    let mut rng = Rng::new(w.seed + 1);
+                    let mut counter = Counter::new();
+                    let results = knn_batch_points_dense(
+                        w.data, w.points, Metric::L2Sq, w.params,
+                        &mut engine, &mut rng, &mut counter);
+                    answers =
+                        results.into_iter().map(|r| r.ids).collect();
+                }
+                (answers, engine.pull_wall, engine.pull_calls,
+                 engine.pull_jobs)
+            })
+        };
+        let ha = spawn_driver(0);
+        let hb = spawn_driver(1);
+        let ra = ha.join().map_err(|_| {
+            "multiplex driver A panicked mid-bench".to_string()
+        })?;
+        let rb = hb.join().map_err(|_| {
+            "multiplex driver B panicked mid-bench".to_string()
+        })?;
+        Ok::<_, String>((ra, rb))
+    })?;
+    let region_wall = t0.elapsed();
+    let (answers_a, wall_a, calls_a, jobs_a) = res_a;
+    let (answers_b, wall_b, calls_b, jobs_b) = res_b;
+    for (tag, answers) in [("A", &answers_a), ("B", &answers_b)] {
+        match baseline_answers {
+            None => *baseline_answers = Some(answers.clone()),
+            Some(base) => {
+                if base != answers {
+                    return Err(format!(
+                        "answers diverged on the tcp-multiplex rung \
+                         (driver {tag}) — refusing to report throughput \
+                         for a broken engine"));
+                }
+            }
+        }
+    }
+    let max_inflight = client.max_inflight_per_conn();
+    if max_inflight < 2 {
+        return Err(format!(
+            "multiplex rung: per-connection in-flight high-water mark is \
+             {max_inflight} — waves never overlapped on one connection"));
+    }
+    // rows/s under the SAME definition as every other rung — jobs per
+    // second of time spent inside pull_batch — so the tracked baseline
+    // stays comparable across transports. With two concurrent drivers
+    // that is the sum of each driver's own pull-phase rate (their pull
+    // windows overlap in wall time); the concurrent region's wall
+    // clock is reported separately as batch_wall_ms.
+    let jobs = jobs_a + jobs_b;
+    let rate_a = jobs_a as f64 / wall_a.as_secs_f64().max(1e-9);
+    let rate_b = jobs_b as f64 / wall_b.as_secs_f64().max(1e-9);
+    let pull_wall = wall_a + wall_b;
+    let rounds = calls_a + calls_b;
+    // solo latency through the shared client (unchanged path)
+    let mut solo_engine = remote::RemoteEngine::from_client(client.clone());
+    let mut lat = LatencyStats::default();
+    for (i, &q) in w.solo_points.iter().enumerate() {
+        let mut qrng = Rng::new(w.seed + 100 + i as u64);
+        let mut c = Counter::new();
+        let t = Instant::now();
+        let _ = knn_point_dense(w.data, q, Metric::L2Sq, w.params,
+                                &mut solo_engine, &mut qrng, &mut c);
+        lat.record(t.elapsed());
+    }
+    Ok(ShardRun {
+        shards: LOOPBACK_SHARDS,
+        transport: "tcp-multiplex",
+        rows_per_s: rate_a + rate_b,
+        wall_per_round_us: if rounds > 0 {
+            pull_wall.as_secs_f64() * 1e6 / rounds as f64
+        } else {
+            0.0
+        },
+        rounds,
+        jobs,
+        batch_wall_ms: region_wall.as_secs_f64() * 1e3,
+        solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+        solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        max_inflight: Some(max_inflight),
     })
 }
 
 fn run_json(r: &ShardRun) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("shards", Json::Num(r.shards as f64)),
         ("transport", Json::Str(r.transport.to_string())),
         ("pull_rows_per_s", Json::Num(r.rows_per_s)),
@@ -225,7 +381,11 @@ fn run_json(r: &ShardRun) -> Json {
         ("batch_wall_ms", Json::Num(r.batch_wall_ms)),
         ("solo_p50_us", Json::Num(r.solo_p50_us)),
         ("solo_p99_us", Json::Num(r.solo_p99_us)),
-    ])
+    ];
+    if let Some(mi) = r.max_inflight {
+        fields.push(("max_inflight", Json::Num(mi as f64)));
+    }
+    Json::obj(fields)
 }
 
 /// Run the baseline; returns the printable table plus the JSON document
@@ -308,6 +468,15 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             &mut baseline_answers,
         )?);
     }
+    {
+        // multiplex rung: two concurrent batch drivers share one
+        // RingClient over a fresh loopback ring — overlapping waves on
+        // one connection per shard, answers asserted identical to local
+        let (_ring, endpoints) =
+            remote::spawn_loopback_ring(&data, LOOPBACK_SHARDS)?;
+        remote_runs.push(measure_multiplex_rung(&w, &endpoints,
+                                                &mut baseline_answers)?);
+    }
     if !extra_remote.is_empty() {
         remote_runs.push(measure_rung(
             &w,
@@ -339,13 +508,20 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             fmt_f(r.solo_p99_us, 0),
         ]);
     }
+    let multiplex_hwm = remote_runs
+        .iter()
+        .find_map(|r| r.max_inflight)
+        .unwrap_or(0);
     rep.note(&format!(
         "workload: n={n} d={d} (shard-serve --synthetic \
          image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
          {solo_q} solo queries; pull-phase speedup at {} local shards vs \
          1: {speedup:.2}x; remote rungs: {LOOPBACK_SHARDS}-shard TCP \
          loopback ring + {LOOPBACK_SHARDS}-shard failover ring (dead \
-         primaries, replicas serve), answers asserted identical to local",
+         primaries, replicas serve) + {LOOPBACK_SHARDS}-shard multiplex \
+         ring (2 concurrent batch drivers, one shared RingClient, \
+         {multiplex_hwm} waves high-water on one connection), answers \
+         asserted identical to local",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
     let json = Json::obj(vec![
         ("workload", Json::obj(vec![
@@ -371,14 +547,23 @@ mod tests {
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
         let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 2);
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 3);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
         let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
-        assert_eq!(remote.len(), 2,
-                   "loopback + failover rungs always present");
+        assert_eq!(remote.len(), 3,
+                   "loopback + failover + multiplex rungs always present");
         assert_eq!(remote[1].get("transport").and_then(|v| v.as_str()),
                    Some("tcp-failover"));
+        assert_eq!(remote[2].get("transport").and_then(|v| v.as_str()),
+                   Some("tcp-multiplex"));
+        let mi = remote[2]
+            .get("max_inflight")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(mi >= 2.0,
+                "multiplex rung must witness >= 2 in-flight waves on one \
+                 connection, saw {mi}");
         for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())

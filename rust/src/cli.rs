@@ -117,13 +117,18 @@ SUBCOMMANDS
            [--remote SPECS] [--degraded] [--seed S]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
-           [--remote SPECS] [--degraded]
-           (with --remote this box coordinates a multi-machine ring: its
-           workers batch queries as usual but fan every pull wave over
-           the ring, failing over between replicas; with --degraded,
-           knn responses gain coverage/rows_live/rows_total fields
-           while part of the ring is down, instead of turning into
-           errors; workers reconnect if a whole shard dies)
+           [--remote SPECS] [--degraded] [--batch-wait-us T]
+           (with --remote this box coordinates a multi-machine ring: all
+           workers share ONE multiplexed ring client — one connection
+           per shard, concurrent tagged waves interleaved on it — so
+           independent batches overlap on the wire; sub-waves fail over
+           between replicas; with --degraded, knn responses gain
+           coverage/rows_live/rows_total fields while part of the ring
+           is down, instead of turning into errors; workers reconnect
+           if a whole shard dies. --batch-wait-us T lets a worker that
+           drained a non-full batch linger T microseconds for more
+           queries — fuller batches under light load, observable via
+           stats mean_batch/max_batch)
   shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
            --of S [--addr HOST:PORT]
            (loads rows [floor(I*n/S), floor((I+1)*n/S)) — the same
@@ -135,20 +140,26 @@ SUBCOMMANDS
            makes them replicas; a shutdown frame or ctrl-c stops it)
   ring-stats  --remote SPECS [--timeout-ms T]
            (probes every endpoint with the Stats wire op and prints
-           shard identity, row range, dataset shape and live-connection
-           count per replica, plus ring coverage; exits nonzero when
-           some shard has no live replica. The reported "of" from any
-           single endpoint tells you the ring size S, so a coordinator
-           can size --remote from one known endpoint)
+           shard identity, row range, dataset shape, dataset
+           fingerprint, live-connection count and the per-connection
+           concurrent-wave high-water mark per replica, plus ring
+           coverage; exits nonzero when some shard has no live replica
+           OR when a shard's replicas report divergent dataset
+           fingerprints (failover between them would change answers).
+           The reported of-value from any single endpoint tells you
+           the ring size S, so a coordinator can size --remote from
+           one known endpoint)
   bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1|pull>
            [--quick] [--seed S] [--out FILE] [--shards S]
            (--shards fans the figure benches' BMO runs out across S row
            shards; pull rejects it — it is the tracked pull-phase
            throughput baseline, always sweeping a fixed 1/2/4 shard
            ladder over the 1k x 256 batched workload plus a single-query
-           sweep, a 2-shard TCP-loopback remote rung and a 2-shard
+           sweep, a 2-shard TCP-loopback remote rung, a 2-shard
            failover rung (replicated ring with every primary dead, so
-           each wave takes the failover path), overwriting
+           each wave takes the failover path) and a 2-shard multiplex
+           rung (two concurrent batch drivers sharing one ring client;
+           asserts >= 2 waves in flight on one connection), overwriting
            --out [default BENCH_pull.json] with rows/s, wall per round
            and per-query p50/p99; --smoke shrinks it to a seconds-long
            CI check; --remote H:P,H:P adds a rung measured against your

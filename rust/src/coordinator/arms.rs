@@ -58,9 +58,65 @@ impl Coverage {
     }
 }
 
+/// Opaque handle to a wave submitted through the pipelined half of the
+/// [`PullEngine`] API ([`PullEngine::submit_pull_batch`] and friends).
+///
+/// Blocking engines resolve the wave eagerly at submit time and park the
+/// results inside the ticket ([`WaveTicket::ready_sums`] /
+/// [`WaveTicket::ready_dists`]); pipelined engines (the multiplexed
+/// remote ring client) return a [`WaveTicket::deferred`] key into their
+/// in-flight table and resolve it in `complete_*`. Either way the
+/// completed outputs are bitwise identical to the blocking call —
+/// submit/complete only moves *when* the caller blocks, never what is
+/// computed.
+#[derive(Debug)]
+pub struct WaveTicket {
+    /// eagerly computed results — `(vals, [])` for a dists wave
+    ready: Option<(Vec<f64>, Vec<f64>)>,
+    key: u64,
+}
+
+impl WaveTicket {
+    /// A ticket already carrying a sums wave's `(Σx, Σx²)` results.
+    pub fn ready_sums(sum: Vec<f64>, sq: Vec<f64>) -> WaveTicket {
+        WaveTicket { ready: Some((sum, sq)), key: 0 }
+    }
+
+    /// A ticket already carrying an exact-distance wave's results.
+    pub fn ready_dists(vals: Vec<f64>) -> WaveTicket {
+        WaveTicket { ready: Some((vals, Vec::new())), key: 0 }
+    }
+
+    /// A ticket whose results are still in flight; `key` indexes the
+    /// engine's own in-flight table.
+    pub fn deferred(key: u64) -> WaveTicket {
+        WaveTicket { ready: None, key }
+    }
+
+    /// The engine-private in-flight key of a deferred ticket.
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// Move out the eager results, if the wave was resolved at submit.
+    pub fn take_ready(&mut self) -> Option<(Vec<f64>, Vec<f64>)> {
+        self.ready.take()
+    }
+}
+
 /// Batched compute engine for dense pulls. Implementations:
 /// [`ScalarEngine`] (reference), `runtime::native::NativeEngine`
 /// (optimized hot path), `runtime::pjrt::PjrtEngine` (AOT artifact).
+///
+/// Every wave exists in two forms: the blocking calls
+/// (`partial_sums`/`exact_dists`/`pull_batch`) and the pipelined
+/// submit/complete split (`submit_* -> WaveTicket`, `complete_*`). The
+/// default submit resolves eagerly via the blocking call, so the split
+/// API is available on every engine with unchanged semantics; engines
+/// with real I/O in the middle (the remote ring) override it so the wave
+/// is on the wire when submit returns and the caller overlaps work with
+/// the round trip. `pipelined()` tells drivers whether the split
+/// actually buys overlap.
 pub trait PullEngine {
     /// For each row id, the sum and sum-of-squares over `coord_ids` of
     /// `metric.coord(data[row][j], query[j])` (raw partial moments, not
@@ -118,6 +174,96 @@ pub trait PullEngine {
         }
     }
 
+    /// Pipelined form of [`PullEngine::partial_sums`]: stage the wave
+    /// and return a ticket; the results materialize at
+    /// [`PullEngine::complete_sums`]. The default resolves eagerly (no
+    /// overlap, identical results).
+    fn submit_partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+    ) -> WaveTicket {
+        let (mut s, mut q) = (Vec::new(), Vec::new());
+        self.partial_sums(data, query, rows, coord_ids, metric, &mut s,
+                          &mut q);
+        WaveTicket::ready_sums(s, q)
+    }
+
+    /// Pipelined form of [`PullEngine::exact_dists`]; completed with
+    /// [`PullEngine::complete_dists`].
+    fn submit_exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+    ) -> WaveTicket {
+        let mut vals = Vec::new();
+        self.exact_dists(data, query, rows, metric, &mut vals);
+        WaveTicket::ready_dists(vals)
+    }
+
+    /// Pipelined form of [`PullEngine::pull_batch`]: stage the whole
+    /// multi-query wave and return a ticket; completed with
+    /// [`PullEngine::complete_sums`]. A pipelined engine has the wave on
+    /// the wire when this returns, so the caller can overlap per-query
+    /// bookkeeping with the round trip; several tickets may be in
+    /// flight at once and completed in any order.
+    fn submit_pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+    ) -> WaveTicket {
+        let (mut s, mut q) = (Vec::new(), Vec::new());
+        self.pull_batch(data, reqs, metric, &mut s, &mut q);
+        WaveTicket::ready_sums(s, q)
+    }
+
+    /// Resolve a sums-wave ticket (`submit_partial_sums` /
+    /// `submit_pull_batch`) into the caller's output buffers — blocking
+    /// until the wave's replies arrived, bitwise identical to the
+    /// blocking call that would have produced them.
+    fn complete_sums(&mut self, mut ticket: WaveTicket,
+                     out_sum: &mut Vec<f64>, out_sq: &mut Vec<f64>) {
+        match ticket.take_ready() {
+            Some((s, q)) => {
+                *out_sum = s;
+                *out_sq = q;
+            }
+            None => panic!(
+                "engine '{}' returned a deferred WaveTicket but does not \
+                 override complete_sums",
+                self.name()
+            ),
+        }
+    }
+
+    /// Resolve an exact-distance ticket (`submit_exact_dists`).
+    fn complete_dists(&mut self, mut ticket: WaveTicket,
+                      out: &mut Vec<f64>) {
+        match ticket.take_ready() {
+            Some((vals, _)) => *out = vals,
+            None => panic!(
+                "engine '{}' returned a deferred WaveTicket but does not \
+                 override complete_dists",
+                self.name()
+            ),
+        }
+    }
+
+    /// True when `submit_*` genuinely overlaps I/O with the caller
+    /// (the wave is in flight when submit returns). Drivers use this to
+    /// pick the split API only where it buys overlap — the blocking
+    /// calls reuse caller scratch buffers, which the eager default
+    /// ticket cannot.
+    fn pipelined(&self) -> bool {
+        false
+    }
+
     /// The rows this engine can answer right now. `None` (the default,
     /// and the only value local engines ever report) means the full
     /// dataset. A remote engine running in degraded mode returns
@@ -172,6 +318,49 @@ impl PullEngine for Box<dyn PullEngine + Send> {
         out_sq: &mut Vec<f64>,
     ) {
         (**self).pull_batch(data, reqs, metric, out_sum, out_sq)
+    }
+
+    fn submit_partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+    ) -> WaveTicket {
+        (**self).submit_partial_sums(data, query, rows, coord_ids, metric)
+    }
+
+    fn submit_exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+    ) -> WaveTicket {
+        (**self).submit_exact_dists(data, query, rows, metric)
+    }
+
+    fn submit_pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+    ) -> WaveTicket {
+        (**self).submit_pull_batch(data, reqs, metric)
+    }
+
+    fn complete_sums(&mut self, ticket: WaveTicket, out_sum: &mut Vec<f64>,
+                     out_sq: &mut Vec<f64>) {
+        (**self).complete_sums(ticket, out_sum, out_sq)
+    }
+
+    fn complete_dists(&mut self, ticket: WaveTicket, out: &mut Vec<f64>) {
+        (**self).complete_dists(ticket, out)
+    }
+
+    fn pipelined(&self) -> bool {
+        (**self).pipelined()
     }
 
     fn coverage(&mut self) -> Option<Coverage> {
@@ -664,6 +853,65 @@ mod tests {
         let mut c = Counter::new();
         assert_eq!(arms.pull(0, 10, &mut rng, &mut c), (0.0, 0.0));
         assert_eq!(arms.exact_mean(0, &mut c), 0.0);
+    }
+
+    #[test]
+    fn submit_complete_split_matches_blocking_calls_bitwise() {
+        // the default (eager) split API must be indistinguishable from
+        // the blocking calls on every wave kind, and tickets must be
+        // completable out of submission order
+        let ds = synthetic::gaussian_iid(10, 24, 12);
+        let q1 = ds.row_vec(0);
+        let q2 = ds.row_vec(1);
+        let rows: Vec<u32> = (0..10).collect();
+        let coords = vec![0u32, 5, 5, 23];
+        let mut eng = ScalarEngine;
+        let (mut s0, mut sq0) = (Vec::new(), Vec::new());
+        eng.partial_sums(&ds, &q1, &rows, &coords, Metric::L2Sq, &mut s0,
+                         &mut sq0);
+        let t = eng.submit_partial_sums(&ds, &q1, &rows, &coords,
+                                        Metric::L2Sq);
+        let (mut s1, mut sq1) = (Vec::new(), Vec::new());
+        eng.complete_sums(t, &mut s1, &mut sq1);
+        assert_eq!(s0, s1);
+        assert_eq!(sq0, sq1);
+        // two tickets in flight, completed in reverse order
+        let ta = eng.submit_exact_dists(&ds, &q1, &rows, Metric::L1);
+        let tb = eng.submit_exact_dists(&ds, &q2, &rows, Metric::L1);
+        let (mut da, mut db) = (Vec::new(), Vec::new());
+        eng.complete_dists(tb, &mut db);
+        eng.complete_dists(ta, &mut da);
+        let (mut wa, mut wb) = (Vec::new(), Vec::new());
+        eng.exact_dists(&ds, &q1, &rows, Metric::L1, &mut wa);
+        eng.exact_dists(&ds, &q2, &rows, Metric::L1, &mut wb);
+        assert_eq!(da, wa);
+        assert_eq!(db, wb);
+        // pull_batch ticket
+        let req = PullRequest { query: &q1, rows: &rows,
+                                coord_ids: &coords };
+        let (mut bs0, mut bq0) = (Vec::new(), Vec::new());
+        eng.pull_batch(&ds, &[req], Metric::L1, &mut bs0, &mut bq0);
+        let t = eng.submit_pull_batch(&ds, &[req], Metric::L1);
+        let (mut bs1, mut bq1) = (Vec::new(), Vec::new());
+        eng.complete_sums(t, &mut bs1, &mut bq1);
+        assert_eq!(bs0, bs1);
+        assert_eq!(bq0, bq1);
+        assert!(!eng.pipelined(), "scalar engine resolves at submit");
+    }
+
+    #[test]
+    fn boxed_engine_forwards_the_split_api() {
+        let ds = synthetic::gaussian_iid(6, 8, 3);
+        let q = ds.row_vec(0);
+        let rows: Vec<u32> = (0..6).collect();
+        let mut boxed: Box<dyn PullEngine + Send> = Box::new(ScalarEngine);
+        assert!(!boxed.pipelined());
+        let t = boxed.submit_exact_dists(&ds, &q, &rows, Metric::L2Sq);
+        let mut got = Vec::new();
+        boxed.complete_dists(t, &mut got);
+        let mut want = Vec::new();
+        ScalarEngine.exact_dists(&ds, &q, &rows, Metric::L2Sq, &mut want);
+        assert_eq!(got, want);
     }
 
     #[test]

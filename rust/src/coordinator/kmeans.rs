@@ -7,8 +7,8 @@
 //! k=100 on image data), not from n, so even small k sees large savings
 //! when d is big.
 
-use crate::coordinator::arms::{ArmSet, DenseArms, PullEngine};
-use crate::coordinator::bandit::{run_bmo_ucb, BanditParams};
+use crate::coordinator::arms::PullEngine;
+use crate::coordinator::bandit::BanditParams;
 use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{Counter, RunMetrics};
 use crate::util::rng::Rng;
@@ -113,8 +113,17 @@ pub fn assign_exact(data: &DenseDataset, centroids: &DenseDataset,
         .collect()
 }
 
-/// Bandit assignment step: each point runs a k-armed 1-NN bandit over the
-/// centroid set.
+/// Bandit assignment step: each point runs a 1-NN bandit over the
+/// centroid set — executed through the coalesced multi-query driver
+/// (`coordinator::knn::knn_batch_dense` with the centroid set as the
+/// dataset), so every lockstep round resolves all points' staged pulls
+/// in one `PullEngine::pull_batch` sweep of the centroid block. The
+/// centroid rows are shared across every point, which is the best-case
+/// workload for the row-major sweep: each centroid block is read once
+/// per round instead of once per point. Point `i` runs on the rng
+/// stream `rng.fork(i)` and its assignment is bitwise-identical to the
+/// per-point path (one `run_bmo_ucb` per point under the same fork) —
+/// pinned by `batched_assignment_is_bitwise_identical_to_per_point`.
 pub fn assign_bandit<E: PullEngine>(
     data: &DenseDataset,
     centroids: &DenseDataset,
@@ -124,18 +133,11 @@ pub fn assign_bandit<E: PullEngine>(
     rng: &mut Rng,
     counter: &mut Counter,
 ) -> Vec<usize> {
-    let rows: Vec<u32> = (0..centroids.n as u32).collect();
-    (0..data.n)
-        .map(|i| {
-            let mut qrng = rng.fork(i as u64);
-            let query = data.row_vec(i);
-            let mut arms =
-                DenseArms::new(centroids, &query, &rows, metric, engine);
-            let res = run_bmo_ucb(&mut arms, bandit.clone(), &mut qrng,
-                                  counter);
-            arms.arm_id(res.best[0].0) as usize
-        })
-        .collect()
+    // queries are the dataset's own rows — borrow, don't copy
+    let queries: Vec<&[f32]> = (0..data.n).map(|i| data.row(i)).collect();
+    let results = crate::coordinator::knn::knn_batch_dense(
+        centroids, &queries, metric, bandit, engine, rng, counter);
+    results.iter().map(|r| r.ids[0] as usize).collect()
 }
 
 /// Full BMO k-means: Lloyd iterations with bandit assignment.
@@ -291,11 +293,65 @@ pub fn wcss(data: &DenseDataset, centroids: &DenseDataset,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::arms::ScalarEngine;
+    use crate::coordinator::arms::{ArmSet, DenseArms, ScalarEngine};
+    use crate::coordinator::bandit::run_bmo_ucb;
     use crate::data::synthetic;
 
     fn small_params(k: usize) -> KMeansParams {
         KMeansParams { k, max_iters: 8, ..Default::default() }
+    }
+
+    /// The pre-refactor per-point assignment loop, kept as the
+    /// reference the batched path must match bitwise.
+    fn assign_per_point<E: PullEngine>(
+        data: &DenseDataset,
+        centroids: &DenseDataset,
+        metric: Metric,
+        bandit: &BanditParams,
+        engine: &mut E,
+        rng: &mut Rng,
+        counter: &mut Counter,
+    ) -> Vec<usize> {
+        let rows: Vec<u32> = (0..centroids.n as u32).collect();
+        (0..data.n)
+            .map(|i| {
+                let mut qrng = rng.fork(i as u64);
+                let query = data.row_vec(i);
+                let mut arms = DenseArms::new(centroids, &query, &rows,
+                                              metric, engine);
+                let res = run_bmo_ucb(&mut arms, bandit.clone(),
+                                      &mut qrng, counter);
+                arms.arm_id(res.best[0].0) as usize
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_assignment_is_bitwise_identical_to_per_point() {
+        // the coalesced assignment sweep must agree with the per-point
+        // bandit loop exactly — same assignments, same unit accounting
+        // — for both engines, because the batch driver forks the same
+        // per-point rng streams
+        let (ds, _) = synthetic::clustered(120, 96, 5, 0.3, 61);
+        let mut seed_rng = Rng::new(62);
+        let centroids = seed_centroids(&ds, 5, Metric::L2Sq, &mut seed_rng,
+                                       &mut Counter::new());
+        let bandit = small_params(5).bandit;
+        let mut e1 = ScalarEngine;
+        let mut rng1 = Rng::new(63);
+        let mut c1 = Counter::new();
+        let batched = assign_bandit(&ds, &centroids, Metric::L2Sq,
+                                    &bandit, &mut e1, &mut rng1, &mut c1);
+        let mut e2 = ScalarEngine;
+        let mut rng2 = Rng::new(63);
+        let mut c2 = Counter::new();
+        let per_point = assign_per_point(&ds, &centroids, Metric::L2Sq,
+                                         &bandit, &mut e2, &mut rng2,
+                                         &mut c2);
+        assert_eq!(batched, per_point);
+        assert_eq!(c1.get(), c2.get(), "unit accounting diverged");
+        // and the rng streams stayed in lockstep
+        assert_eq!(rng1.next_u64(), rng2.next_u64());
     }
 
     #[test]

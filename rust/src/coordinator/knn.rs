@@ -10,7 +10,12 @@
 //!   [`BmoUcb`] instances advanced in lockstep rounds over the shared
 //!   dataset, with every instance's staged coordinate pulls coalesced into
 //!   a single [`PullEngine::pull_batch`] pass per round — each data block
-//!   is swept once per round instead of once per query. Query `i` of a
+//!   is swept once per round instead of once per query. On a *pipelined*
+//!   engine (the multiplexed remote ring) the round's wave is submitted
+//!   first and the drivers overlap per-query result emission with the
+//!   in-flight round trip (`submit_pull_batch` / `complete_sums`); the
+//!   scheduling, rng streams and outputs are identical either way.
+//!   Query `i` of a
 //!   batch is answered with the rng stream `rng.fork(i as u64)` and is
 //!   bitwise-identical to the per-query path under that same stream, for
 //!   any batch size (the equivalence is pinned by `tests/property_knn`).
@@ -39,7 +44,7 @@
 use std::time::Instant;
 
 use crate::coordinator::arms::{ArmSet, Coverage, DenseArms, PullEngine,
-                               PullRequest, SparseArms};
+                               PullRequest, SparseArms, WaveTicket};
 use crate::coordinator::bandit::{run_bmo_ucb, BanditParams, BmoUcb,
                                  RoundAction};
 use crate::data::dense::{DenseDataset, Metric};
@@ -284,8 +289,11 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     let (mut out_sum, mut out_sq) = (Vec::new(), Vec::new());
     while remaining > 0 {
         // phase 1: advance every live bandit to its next staged pull (or
-        // completion), resolving exact evals and ragged pulls inline
+        // completion), resolving exact evals and ragged pulls inline;
+        // finished queries are only *recorded* here — their results are
+        // assembled later, while the round's wave is in flight
         let mut staged: Vec<StagedPull> = Vec::new();
+        let mut newly_done: Vec<usize> = Vec::new();
         for (si, slot) in slots.iter_mut().enumerate() {
             if slot.done {
                 continue;
@@ -295,18 +303,8 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
             match slot.bandit.begin_round(&mut arms, &mut slot.rng,
                                           &mut slot.counter) {
                 RoundAction::Done => {
-                    let res = slot.bandit.result(&slot.counter);
-                    results[si] = Some(KnnResult {
-                        ids: res.best.iter()
-                            .map(|&(a, _)| slot.rows[a])
-                            .collect(),
-                        dists: res.best.iter()
-                            .map(|&(_, th)| th * d)
-                            .collect(),
-                        metrics: res.metrics,
-                        coverage: None,
-                    });
                     slot.done = true;
+                    newly_done.push(si);
                 }
                 RoundAction::Pull { t } => {
                     let (rows, coords) = arms.stage_pull(
@@ -316,8 +314,14 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
                 }
             }
         }
-        // phase 2: one coalesced engine pass over every staged pull
-        if !staged.is_empty() {
+        // phase 2: put the coalesced wave on the engine. A pipelined
+        // engine (the remote ring) has every sub-wave on the wire when
+        // submit returns, so the per-query bookkeeping below overlaps
+        // the network round trip; blocking engines keep the plain call
+        // (it reuses the out_sum/out_sq scratch across rounds).
+        let ticket: Option<WaveTicket> = if staged.is_empty() {
+            None
+        } else {
             let reqs: Vec<PullRequest> = staged
                 .iter()
                 .map(|s| PullRequest {
@@ -326,10 +330,36 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
                     coord_ids: &s.coords,
                 })
                 .collect();
-            engine.pull_batch(data, &reqs, metric, &mut out_sum,
-                              &mut out_sq);
-            drop(reqs);
-            // phase 3: scatter the results back into each bandit
+            if engine.pipelined() {
+                Some(engine.submit_pull_batch(data, &reqs, metric))
+            } else {
+                engine.pull_batch(data, &reqs, metric, &mut out_sum,
+                                  &mut out_sq);
+                None
+            }
+        };
+        // overlapped with the in-flight wave: emit the results of the
+        // queries that finished this round
+        for &si in &newly_done {
+            let slot = &slots[si];
+            let res = slot.bandit.result(&slot.counter);
+            results[si] = Some(KnnResult {
+                ids: res.best.iter()
+                    .map(|&(a, _)| slot.rows[a])
+                    .collect(),
+                dists: res.best.iter()
+                    .map(|&(_, th)| th * d)
+                    .collect(),
+                metrics: res.metrics,
+                coverage: None,
+            });
+        }
+        // phase 3: collect the wave's replies and scatter them back
+        // into each bandit (per-query end_round accounting)
+        if !staged.is_empty() {
+            if let Some(t) = ticket {
+                engine.complete_sums(t, &mut out_sum, &mut out_sq);
+            }
             let mut off = 0usize;
             for s in &staged {
                 let m = s.rows.len();

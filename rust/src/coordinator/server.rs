@@ -15,8 +15,16 @@
 //!   bandit advances in lockstep and their per-round coordinate pulls are
 //!   coalesced into a single `PullEngine::pull_batch` sweep of the
 //!   dataset, so under concurrent load each data block is read once per
-//!   round instead of once per query.
-//! * Each worker owns its RNG and engine; counters and per-batch latency
+//!   round instead of once per query. With `batch_wait_us > 0`
+//!   (`[server] batch_wait_us` / `--batch-wait-us`) a worker that found
+//!   a non-full batch lingers that long for more arrivals — trading a
+//!   bounded p50 bump for fuller batches under light load; the realized
+//!   batch sizes are observable via `stats` (`mean_batch`/`max_batch`).
+//! * Each worker owns its RNG and engine. With `--remote`, all workers
+//!   share **one** multiplexed `runtime::remote::RingClient` (each
+//!   wraps it in its own cheap `RemoteEngine`), so independent batches
+//!   genuinely overlap on the one-connection-per-shard wire instead of
+//!   opening W×S sockets. Counters and per-batch latency
 //!   (`metrics::BatchStats`) merge into server totals for `stats`.
 //!
 //! Protocol (one JSON object per line):
@@ -47,6 +55,8 @@ use crate::coordinator::knn::knn_batch_dense;
 use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{BatchStats, Counter, LatencyStats};
 use crate::runtime::build_host_engine;
+use crate::runtime::placement::PlacementMap;
+use crate::runtime::remote::{RemoteEngine, RemoteOptions, RingClient};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -77,6 +87,13 @@ pub struct ServerConfig {
     /// surviving rows plus `coverage`/`rows_live`/`rows_total` fields
     /// instead of errors.
     pub degraded: bool,
+    /// adaptive wait-a-little batching (`[server] batch_wait_us` /
+    /// `--batch-wait-us`): a worker that drained a non-full batch waits
+    /// up to this many microseconds for more queries to arrive before
+    /// computing, trading a bounded latency bump for fuller coalesced
+    /// batches under light load. 0 (the default) keeps the
+    /// drain-immediately behavior.
+    pub batch_wait_us: u64,
 }
 
 impl Default for ServerConfig {
@@ -91,6 +108,7 @@ impl Default for ServerConfig {
             shards: 1,
             remote: Vec::new(),
             degraded: false,
+            batch_wait_us: 0,
         }
     }
 }
@@ -114,7 +132,74 @@ struct Shared {
     latencies: Mutex<LatencyStats>,
     /// per-worker-pass batch accounting
     batches: Mutex<BatchStats>,
+    /// the one multiplexed ring client every worker's `RemoteEngine`
+    /// shares when `config.remote` is set — connected lazily (the ring
+    /// may be down at startup) and dropped when a compute panic makes a
+    /// worker suspect it, so the next batch reconnects from scratch
+    ring: Mutex<Option<Arc<RingClient>>>,
     shutdown: AtomicBool,
+}
+
+/// Build a worker's engine. Local configurations build their own
+/// engine; remote ones connect (or reuse) the server-wide shared
+/// [`RingClient`] and wrap it in a per-worker [`RemoteEngine`], so all
+/// workers' waves multiplex onto one connection set.
+fn build_worker_engine(shared: &Shared, kind: EngineKind,
+                       ring_in_use: &mut Option<Arc<RingClient>>)
+                       -> Result<Box<dyn PullEngine + Send>, String> {
+    if shared.config.remote.is_empty() {
+        return build_host_engine(kind, shared.config.shards, &[],
+                                 shared.config.degraded);
+    }
+    let client = shared.ring.lock().unwrap().clone();
+    let client = match client {
+        Some(c) => c,
+        None => {
+            // connect WITHOUT holding the shared slot's mutex: during a
+            // ring outage every worker must fail (and answer "engine
+            // unavailable") after ~one connect-timeout window in
+            // parallel, not stacked behind one another's dial attempts
+            let map = PlacementMap::parse(&shared.config.remote)?;
+            let opts = RemoteOptions {
+                degraded: shared.config.degraded,
+                ..RemoteOptions::default()
+            };
+            let fresh = Arc::new(RingClient::connect_opts(&map, opts)?);
+            let mut ring = shared.ring.lock().unwrap();
+            match &*ring {
+                // another worker won the connect race: share its client
+                // (ours tears down on drop)
+                Some(c) => c.clone(),
+                None => {
+                    *ring = Some(fresh.clone());
+                    fresh
+                }
+            }
+        }
+    };
+    *ring_in_use = Some(client.clone());
+    Ok(Box::new(RemoteEngine::from_client(client)))
+}
+
+/// After a compute panic on a remote configuration, drop the shared
+/// ring client so the rebuild reconnects from scratch — but only if it
+/// is still the client this worker was computing with (another worker
+/// may have already reconnected a healthy one; discarding that would
+/// force a needless extra ring connect).
+fn invalidate_ring(shared: &Shared,
+                   ring_in_use: &Option<Arc<RingClient>>) {
+    if shared.config.remote.is_empty() {
+        return;
+    }
+    let mut ring = shared.ring.lock().unwrap();
+    let stale = match (&*ring, ring_in_use) {
+        (Some(cur), Some(mine)) => Arc::ptr_eq(cur, mine),
+        (Some(_), None) => false,
+        (None, _) => false,
+    };
+    if stale {
+        *ring = None;
+    }
 }
 
 /// Running server handle.
@@ -142,6 +227,7 @@ impl Server {
             total_queries: AtomicU64::new(0),
             latencies: Mutex::new(LatencyStats::default()),
             batches: Mutex::new(BatchStats::default()),
+            ring: Mutex::new(None),
             shutdown: AtomicBool::new(false),
         });
         let worker_handles = (0..n_workers)
@@ -202,33 +288,62 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
     // then the worker answers error responses (never hangs waiters) and
     // retries the connection on the next batch.
     let mut engine: Option<Box<dyn PullEngine + Send>> = None;
+    // the shared RingClient this worker's current engine wraps (remote
+    // configs only) — lets the panic path invalidate the shared client
+    // without clobbering a fresh one another worker reconnected
+    let mut ring_in_use: Option<Arc<RingClient>> = None;
     loop {
         let jobs: Vec<Job> = {
+            let batch_size = shared.config.batch_size.max(1);
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if !q.is_empty() {
-                    break;
+                while q.is_empty() {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let (guard, _) = shared
+                        .queue_cv
+                        .wait_timeout(q, Duration::from_millis(50))
+                        .unwrap();
+                    q = guard;
                 }
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    return;
+                // adaptive wait-a-little batching: the queue is
+                // non-empty but not full — linger briefly for more
+                // arrivals so light load still coalesces, instead of
+                // computing batches of one
+                if shared.config.batch_wait_us > 0 && q.len() < batch_size
+                {
+                    let deadline = Instant::now()
+                        + Duration::from_micros(
+                            shared.config.batch_wait_us);
+                    while q.len() < batch_size
+                        && !shared.shutdown.load(Ordering::SeqCst)
+                    {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        let (guard, _) = shared
+                            .queue_cv
+                            .wait_timeout(q, deadline - now)
+                            .unwrap();
+                        q = guard;
+                    }
                 }
-                let (guard, _) = shared
-                    .queue_cv
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap();
-                q = guard;
+                // the lock was released during waits: another worker
+                // may have drained the queue under us — go wait again
+                let take = q.len().min(batch_size);
+                if take > 0 {
+                    break q.drain(..take).collect();
+                }
             }
-            let take = q.len().min(shared.config.batch_size.max(1));
-            q.drain(..take).collect()
         };
         let t0 = Instant::now();
         let mut responses: Vec<Option<Json>> =
             (0..jobs.len()).map(|_| None).collect();
         let mut batch_units = 0u64;
         if engine.is_none() {
-            match build_host_engine(kind, shared.config.shards,
-                                    &shared.config.remote,
-                                    shared.config.degraded) {
+            match build_worker_engine(&shared, kind, &mut ring_in_use) {
                 Ok(e) => engine = Some(e),
                 Err(e) => {
                     let msg = format!("engine unavailable: {e}");
@@ -277,9 +392,16 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                                 Some(err_json("internal error: compute \
                                                panicked"));
                         }
-                        match build_host_engine(kind, shared.config.shards,
-                                                &shared.config.remote,
-                                                shared.config.degraded) {
+                        // a remote compute panic means the ring (or the
+                        // shared client's view of it) is suspect: drop
+                        // the shared client so the rebuild reconnects
+                        // from scratch — while the ring is down that
+                        // rebuild fails and the answers below say
+                        // "engine unavailable", exactly like a local
+                        // engine that cannot be built
+                        invalidate_ring(&shared, &ring_in_use);
+                        match build_worker_engine(&shared, kind,
+                                                  &mut ring_in_use) {
                             Ok(fresh) => *eng = fresh,
                             Err(e) => {
                                 // ring unreachable: answer the rest of
@@ -512,6 +634,8 @@ fn stats_json(shared: &Shared) -> Json {
          Json::Num(blat.percentile(99.0).as_micros() as f64)),
         ("workers",
          Json::Num(shared.config.n_workers.max(1) as f64)),
+        ("batch_wait_us",
+         Json::Num(shared.config.batch_wait_us as f64)),
     ])
 }
 

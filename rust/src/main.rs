@@ -407,6 +407,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         shards: cfg.shards,
         remote: cfg.remote.clone(),
         degraded: cfg.degraded,
+        batch_wait_us: args.flag_u64("batch-wait-us",
+                                     cfg.server_batch_wait_us)?,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
@@ -465,17 +467,26 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
     let mut covered_rows = 0usize;
     let mut n_total: Option<usize> = None;
     let mut dead_shards: Vec<usize> = Vec::new();
+    let mut divergent_shards: Vec<usize> = Vec::new();
     for shard in 0..map.n_shards() {
         let mut shard_live = false;
+        // dataset fingerprints of the correctly-identified live
+        // replicas of this shard: they must all agree, or the replicas
+        // are serving divergent data and failover would silently switch
+        // datasets mid-query (RemoteEngine refuses such a replica; this
+        // surfaces it at survey time)
+        let mut hashes: Vec<u64> = Vec::new();
         for (ri, ep) in map.replicas(shard).iter().enumerate() {
             match endpoint_stats(ep, Some(timeout)) {
                 Ok(st) => {
                     println!(
                         "shard {shard} replica {ri} {ep}: UP — serves \
                          shard {}/{} rows [{}, {}) of n={} d={}, {} live \
-                         conns",
+                         conns, fingerprint {:#018x}, max {} concurrent \
+                         waves/conn",
                         st.shard, st.of, st.row_start, st.row_end,
-                        st.n_total, st.d, st.live_conns);
+                        st.n_total, st.d, st.live_conns, st.data_hash,
+                        st.max_conn_waves);
                     if st.of != map.n_shards() || st.shard != shard {
                         // a mis-wired endpoint would fail RemoteEngine's
                         // handshake validation, so it does NOT count as
@@ -487,15 +498,34 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
                              server with matching --shard/--of (not \
                              counted as coverage)",
                             st.shard, st.of, map.n_shards());
-                    } else if !shard_live {
-                        shard_live = true;
-                        covered_rows += st.row_end - st.row_start;
-                        n_total = n_total.or(Some(st.n_total));
+                    } else {
+                        if !hashes.is_empty()
+                            && !hashes.contains(&st.data_hash)
+                        {
+                            println!(
+                                "  DIVERGENT: fingerprint {:#018x} \
+                                 disagrees with this shard's other \
+                                 replica(s) {:#018x} — the replicas are \
+                                 serving different data; reload them \
+                                 from one dataset",
+                                st.data_hash, hashes[0]);
+                        }
+                        hashes.push(st.data_hash);
+                        if !shard_live {
+                            shard_live = true;
+                            covered_rows += st.row_end - st.row_start;
+                            n_total = n_total.or(Some(st.n_total));
+                        }
                     }
                 }
                 Err(e) => println!("shard {shard} replica {ri} {ep}: \
                                     DOWN — {e}"),
             }
+        }
+        hashes.sort_unstable();
+        hashes.dedup();
+        if hashes.len() > 1 {
+            divergent_shards.push(shard);
         }
         if !shard_live {
             dead_shards.push(shard);
@@ -508,6 +538,13 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
             100.0 * covered_rows as f64 / n.max(1) as f64,
             map.n_shards() - dead_shards.len(),
             map.n_shards());
+    }
+    if !divergent_shards.is_empty() {
+        return Err(format!(
+            "ring inconsistent: shard(s) {divergent_shards:?} have \
+             replicas serving divergent dataset fingerprints — failover \
+             between them would change answers; reload the replicas \
+             from one dataset"));
     }
     if !dead_shards.is_empty() {
         return Err(format!(

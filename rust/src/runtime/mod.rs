@@ -7,15 +7,18 @@
 //! * [`sharded`] — multi-core wrapper fanning waves across contiguous
 //!   row shards on a persistent worker pool, bit-identical to the
 //!   wrapped engine run single-threaded;
-//! * [`wire`] — the length-prefixed binary protocol `PullRequest` waves
-//!   and replies travel over between machines;
+//! * [`wire`] — the wave-tagged (v2) length-prefixed binary protocol
+//!   `PullRequest` waves and replies travel over between machines;
 //! * [`placement`] — replica placement for the ring: ordered replica
 //!   lists per logical shard plus the per-endpoint backoff/blacklist
 //!   state the failover path uses;
 //! * [`remote`] — multi-machine wrapper: a `shard-serve` TCP server per
-//!   row shard (replicated at will) plus the [`remote::RemoteEngine`]
-//!   client fanning waves over the ring with transparent replica
-//!   failover, bit-identical to a local `NativeEngine`;
+//!   row shard (replicated at will, computing concurrent tagged waves
+//!   per connection), the shared multiplexed [`remote::RingClient`]
+//!   (one connection per shard per process, replies demultiplexed by
+//!   wave tag, per-sub-wave replica failover) and the
+//!   [`remote::RemoteEngine`] facade whose pipelined submit/complete
+//!   waves stay bit-identical to a local `NativeEngine`;
 //! * [`pjrt`] — the AOT JAX/Pallas artifacts, loaded from HLO text and
 //!   executed via the PJRT C API (`xla` crate) with device-resident data;
 //! * [`artifacts`] — the manifest that binds the two worlds together.

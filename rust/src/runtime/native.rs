@@ -415,4 +415,44 @@ mod tests {
         e.partial_sums(&ds, &q, &[1], &[], Metric::L2Sq, &mut s, &mut sq);
         assert_eq!(s, vec![0.0]);
     }
+
+    #[test]
+    fn submit_complete_tickets_match_blocking_waves_bitwise() {
+        // the split API on the native engine resolves eagerly at submit
+        // and must be byte-for-byte the blocking call, with tickets
+        // completable out of submission order
+        let ds = synthetic::gaussian_iid(12, 32, 21);
+        let q1 = ds.row_vec(0);
+        let q2 = ds.row_vec(1);
+        let rows: Vec<u32> = (0..12).collect();
+        let coords: Vec<u32> = vec![0, 7, 7, 31, 2];
+        let mut e = NativeEngine::default();
+        assert!(!e.pipelined());
+        let ta = e.submit_partial_sums(&ds, &q1, &rows, &coords,
+                                       Metric::L2Sq);
+        let tb = e.submit_exact_dists(&ds, &q2, &rows, Metric::L1);
+        let req = PullRequest { query: &q1, rows: &rows,
+                                coord_ids: &coords };
+        let tc = e.submit_pull_batch(&ds, &[req], Metric::L1);
+        // complete in reverse order
+        let (mut cs, mut cq) = (Vec::new(), Vec::new());
+        e.complete_sums(tc, &mut cs, &mut cq);
+        let mut bd = Vec::new();
+        e.complete_dists(tb, &mut bd);
+        let (mut as_, mut aq) = (Vec::new(), Vec::new());
+        e.complete_sums(ta, &mut as_, &mut aq);
+        let mut solo = NativeEngine::default();
+        let (mut ws, mut wq) = (Vec::new(), Vec::new());
+        solo.partial_sums(&ds, &q1, &rows, &coords, Metric::L2Sq, &mut ws,
+                          &mut wq);
+        assert_eq!(as_, ws);
+        assert_eq!(aq, wq);
+        let mut wd = Vec::new();
+        solo.exact_dists(&ds, &q2, &rows, Metric::L1, &mut wd);
+        assert_eq!(bd, wd);
+        let (mut wbs, mut wbq) = (Vec::new(), Vec::new());
+        solo.pull_batch(&ds, &[req], Metric::L1, &mut wbs, &mut wbq);
+        assert_eq!(cs, wbs);
+        assert_eq!(cq, wbq);
+    }
 }

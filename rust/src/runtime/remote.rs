@@ -1,85 +1,115 @@
 //! Network-distributed pull execution: fan engine waves over a
 //! **replicated ring** of TCP shard servers, each owning a contiguous
-//! row range of the dataset, with transparent failover between a
-//! shard's replicas and an opt-in degraded mode when a whole shard is
-//! unreachable.
+//! row range of the dataset, through a **multiplexed, pipelined** ring
+//! client — one connection per shard per process, many concurrent
+//! tagged waves in flight on each connection.
 //!
-//! Two halves:
+//! Three pieces:
 //!
 //! * [`ShardServer`] — the `bmonn shard-serve` backend. It holds rows
 //!   `[row_start, row_end)` of the global dataset and answers
 //!   `partial_sums` / `exact_dists` / `pull_batch` waves over the
-//!   length-prefixed binary protocol in [`crate::runtime::wire`],
-//!   computing with a per-connection `NativeEngine`. Rows travel as
-//!   global ids and are rebased locally; anything outside the owned
-//!   range is answered with a wire `Error`, never a crash. A `Stats`
-//!   frame (the health op) reports the server's shard identity, row
-//!   range and live-connection count without touching the compute path.
-//! * [`RemoteEngine`] — a [`PullEngine`] over a
-//!   [`crate::runtime::placement::PlacementMap`]: each logical shard has
-//!   an **ordered replica list** of endpoints and one live connection at
-//!   a time. Every wave is split with the same
+//!   wave-tagged binary protocol in [`crate::runtime::wire`]. Each
+//!   connection's compute waves run on their own threads (bounded by
+//!   [`MAX_CONN_WAVES`]), so several tagged waves of one connection
+//!   compute **concurrently** and replies may leave in any order — the
+//!   tag, not arrival order, routes them. Rows travel as global ids and
+//!   are rebased locally; anything invalid is answered with a wire
+//!   `Error`, never a crash. A `Stats` frame (the health op) reports
+//!   the server's shard identity, row range, dataset fingerprint and
+//!   live-connection count without touching the compute path. A v1
+//!   (untagged) client is answered with a clean v1-framed version error
+//!   and disconnected — never a hang or a panic.
+//! * [`RingClient`] — the shared, multiplexed client: **one connection
+//!   set per process**, safely shared by every thread (`Arc`). Each
+//!   logical shard has an ordered replica list
+//!   ([`crate::runtime::placement::PlacementMap`]), one live connection
+//!   at a time, a writer that interleaves sub-waves from many callers,
+//!   and a **demultiplexing reader thread** that routes replies by
+//!   `wave_id` to per-wave completion slots. Independent callers'
+//!   waves genuinely overlap on the wire (the per-connection in-flight
+//!   high-water mark is exported — `bench pull`'s multiplex rung
+//!   asserts ≥ 2).
+//! * [`RemoteEngine`] — a [`PullEngine`] over a shared [`RingClient`].
+//!   Every wave is split with the same
 //!   [`crate::runtime::partition::WavePartition`] the in-process
 //!   [`crate::runtime::sharded::ShardedEngine`] uses (one splitter,
-//!   shared code), sub-waves fan out concurrently on scoped threads, and
-//!   replies scatter back by slot — so remote output is **bitwise
+//!   shared code), and the split `submit_* -> WaveTicket` /
+//!   `complete_*` API is genuinely pipelined: sub-waves are on the
+//!   wire when submit returns, several waves may be in flight from one
+//!   caller, and completion order is free. The blocking calls are
+//!   implemented as submit + complete, so remote output is **bitwise
 //!   identical** to a single-threaded `NativeEngine` for any ring size
-//!   (`tests/remote_parity.rs` pins this case-for-case against
-//!   `tests/sharded_parity.rs`).
+//!   and any interleaving (`tests/remote_parity.rs`,
+//!   `tests/multiplex.rs`).
 //!
 //! **Ring contract.** Every replica of logical shard `i` of `S` must
-//! serve exactly `shard_range(i, n, S)` of the same dataset;
-//! [`RemoteEngine::connect_opts`] (and the failover path, lazily)
-//! verifies this against each server's handshake and refuses a replica
-//! that tiles the dataset any other way. The coordinator's dataset must
-//! match the ring's (n, d) — a mismatched wave panics with a clear
-//! message.
+//! serve exactly `shard_range(i, n, S)` of the same dataset. The
+//! handshake proves it: shape and row range are validated against the
+//! canonical partition, the protocol version must match, and the
+//! replica's **dataset fingerprint**
+//! ([`crate::runtime::wire::dataset_fingerprint`]) must agree with the
+//! fingerprint its shard-mates established — a replica serving
+//! divergent bytes is refused (and `bmonn ring-stats` reports it with a
+//! nonzero exit).
 //!
-//! **Failover.** An I/O error or corrupt reply on a sub-wave
-//! blacklists the replica it came from (exponential backoff,
-//! [`crate::runtime::placement::RetryPolicy`]); a wire `Error` reply
-//! fails over without blacklisting (the connection is healthy — only
-//! this request failed server-side). Either way the *same* sub-wave is
-//! transparently re-issued to the shard's next live replica — each
-//! endpoint is tried at most once per wave, so retries are bounded. Because every replica computes the same jobs with the same
-//! kernel, a failed-over wave is bitwise identical to a healthy one:
-//! killing any single endpoint of a replicated ring mid-stream yields
-//! no query errors at all (`tests/remote_fault.rs`). A blacklisted
-//! endpoint heals the moment a reconnect + handshake succeeds after its
-//! backoff window, so a restarted server rejoins automatically.
+//! **Failover.** Failover is **per sub-wave**: an I/O error, corrupt
+//! reply or timeout kills the connection it happened on, blacklists
+//! that replica (exponential backoff,
+//! [`crate::runtime::placement::RetryPolicy`]) and fails **only the
+//! sub-waves that were in flight on it** over to the shard's next live
+//! replica — each re-issues its identical staged payload, and each
+//! endpoint is tried at most once per sub-wave, so retries are bounded.
+//! A wire `Error` reply fails its one sub-wave over *without*
+//! blacklisting (the connection is healthy — only that request failed
+//! server-side). Because every replica computes the same jobs with the
+//! same kernel, a failed-over wave is bitwise identical to a healthy
+//! one: killing any single endpoint of a replicated ring mid-stream
+//! yields no query errors at all (`tests/remote_fault.rs`). A
+//! blacklisted endpoint heals the moment a reconnect + handshake
+//! succeeds after its backoff window.
 //!
 //! **Degraded mode.** With every replica of some shard dead, a wave
-//! touching that shard's rows still panics (promptly — reads carry a
+//! touching that shard's rows still panics (promptly — waits carry a
 //! timeout) and the query server answers errors, exactly as in the
 //! unreplicated ring. Opting in via `[engine] degraded = true` /
-//! `--degraded` changes that: `RemoteEngine::coverage` then reports
+//! `--degraded` changes that: [`RingClient::coverage`] then reports
 //! the surviving row ranges, and the k-NN drivers
 //! (`coordinator::knn`) answer **exact** top-k over the surviving rows
-//! only, threading a `coverage` annotation (rows answered / n) through
+//! only, threading a `coverage` annotation through
 //! [`crate::coordinator::knn::KnnResult`] and the query server's JSON
 //! responses instead of erroring.
 
 #![deny(missing_docs)]
 
+use std::collections::HashMap;
 use std::io;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
                ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::arms::{Coverage, PullEngine, PullRequest};
+use crate::coordinator::arms::{Coverage, PullEngine, PullRequest,
+                               WaveTicket};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::runtime::native::NativeEngine;
-use crate::runtime::partition::{shard_range, ShardWave, WavePartition};
+use crate::runtime::partition::{shard_range, WavePartition};
 use crate::runtime::placement::{EndpointState, PlacementMap, RetryPolicy};
 use crate::runtime::wire::{self, Message, WireRequest};
 
-/// Default per-connection read/write timeout: long enough for a big wave
-/// to compute server-side, short enough that a wedged peer can never
-/// strand a coordinator worker forever.
+/// Default per-connection I/O timeout: long enough for a big wave to
+/// compute server-side, short enough that a wedged peer can never
+/// strand a coordinator worker forever. Applied to connects, writes and
+/// per-wave reply waits (the demux reader itself blocks indefinitely —
+/// an expired waiter kills the connection, which unblocks it).
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Upper bound on concurrently computing waves per server connection.
+/// Further frames stay in the socket until a slot frees (TCP
+/// backpressure); results are unaffected, only scheduling.
+pub const MAX_CONN_WAVES: usize = 16;
 
 // ---------------------------------------------------------------------
 // shard server
@@ -93,11 +123,17 @@ struct ShardShared {
     /// shard identity reported by the `Stats` health op
     shard: u64,
     of: u64,
+    /// fingerprint of the served content (`wire::dataset_fingerprint`)
+    data_hash: u64,
     shutdown: AtomicBool,
     /// live connections (by id), shut down on stop so blocked I/O
     /// unblocks; each entry is removed when its handler thread exits, so
     /// a long-running server does not leak one fd per past connection
     conns: Mutex<Vec<(u64, TcpStream)>>,
+    /// high-water mark of concurrently computing waves on any one
+    /// connection — the server-side multiplexing witness, reported by
+    /// the `Stats` op
+    max_conn_waves: AtomicU64,
 }
 
 /// A running shard server (see module docs). Stops on drop; a wire
@@ -125,14 +161,18 @@ impl ShardServer {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let data_hash = wire::dataset_fingerprint(n_total, row_start,
+                                                  &local);
         let shared = Arc::new(ShardShared {
             local,
             n_total,
             row_start,
             shard: shard as u64,
             of: of as u64,
+            data_hash,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
+            max_conn_waves: AtomicU64::new(0),
         });
         let accept_shared = shared.clone();
         let accept_handle = std::thread::Builder::new()
@@ -143,7 +183,7 @@ impl ShardServer {
     }
 
     /// Slice shard `shard` of `n_shards` out of `data` (the same
-    /// floor-boundary partition `RemoteEngine` splits waves with) and
+    /// floor-boundary partition the ring client splits waves with) and
     /// serve it. Starting the same shard index on several machines
     /// creates replicas — any of them can serve the shard's sub-waves.
     pub fn start_shard_of(addr: &str, data: &DenseDataset, shard: usize,
@@ -189,7 +229,7 @@ impl Drop for ShardServer {
 
 /// Start one in-process shard server per shard of `data` on loopback
 /// ephemeral ports — the zero-infrastructure ring used by the parity
-/// tests and the `bench pull` distributed rung.
+/// tests and the `bench pull` distributed rungs.
 pub fn spawn_loopback_ring(data: &DenseDataset, n_shards: usize)
                            -> Result<(Vec<ShardServer>, Vec<String>), String> {
     let mut servers = Vec::with_capacity(n_shards);
@@ -239,114 +279,244 @@ fn accept_loop(listener: TcpListener, shared: Arc<ShardShared>) {
     }
 }
 
-/// One connection: framed request/reply until disconnect or `Shutdown`.
-/// A panic in the compute path answers with a wire `Error` and a fresh
-/// engine instead of dropping the connection.
-fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
-              -> io::Result<()> {
-    stream.set_nodelay(true)?;
-    let mut engine = NativeEngine::default();
-    let mut inbuf = Vec::new();
-    let mut outbuf = Vec::new();
-    let mut sums = Vec::new();
-    let mut sqs = Vec::new();
-    loop {
-        if wire::read_frame(&mut stream, &mut inbuf).is_err() {
-            return Ok(()); // disconnect, kill, or corrupt framing
-        }
-        let outcome =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                handle_frame(&shared, &mut engine, &inbuf, &mut outbuf,
-                             &mut sums, &mut sqs)
-            }));
-        let quit = match outcome {
-            Ok(q) => q,
-            Err(_) => {
-                engine = NativeEngine::default();
-                wire::encode_error(&mut outbuf,
-                                   "internal error: shard compute panicked");
-                false
-            }
-        };
-        wire::write_frame(&mut stream, &outbuf)?;
-        if quit {
-            return Ok(());
-        }
-    }
+fn write_locked(writer: &Mutex<TcpStream>, payload: &[u8])
+                -> io::Result<()> {
+    wire::write_frame(&mut *writer.lock().unwrap(), payload)
 }
 
-/// Decode + dispatch one request; returns true when the connection (and
-/// server) should wind down.
-fn handle_frame(sh: &ShardShared, engine: &mut NativeEngine, payload: &[u8],
-                out: &mut Vec<u8>, sums: &mut Vec<f64>, sqs: &mut Vec<f64>)
-                -> bool {
-    let msg = match Message::decode(payload) {
-        Err(e) => {
-            wire::encode_error(out, &format!("bad frame: {e}"));
-            return false;
-        }
-        Ok(m) => m,
-    };
-    match msg {
-        Message::Hello => wire::encode_hello_ack(
-            out,
-            sh.n_total as u64,
-            sh.local.d as u64,
-            sh.row_start as u64,
-            (sh.row_start + sh.local.n) as u64,
-        ),
-        Message::Stats => {
-            // the health op: identity + load, computed without touching
-            // the engine (safe to poll while waves are in flight)
-            let live_conns = sh.conns.lock().unwrap().len() as u64;
-            wire::encode_stats_reply(
-                out,
-                sh.shard,
-                sh.of,
-                sh.n_total as u64,
-                sh.local.d as u64,
-                sh.row_start as u64,
-                (sh.row_start + sh.local.n) as u64,
-                live_conns,
-            );
-        }
-        Message::Shutdown => {
-            sh.shutdown.store(true, Ordering::SeqCst);
-            wire::encode_ack(out);
-            return true;
-        }
-        Message::PartialSums { metric, query, rows, coord_ids } => {
-            match validate_and_rebase(sh, &query, &rows, Some(&coord_ids)) {
-                Err(e) => wire::encode_error(out, &e),
-                Ok(local_rows) => {
-                    engine.partial_sums(&sh.local, &query, &local_rows,
-                                        &coord_ids, metric, sums, sqs);
-                    wire::encode_sums(out, sums, sqs);
+/// Per-wave compute state, pooled per connection so a stream of small
+/// waves reuses engines and buffers instead of allocating per frame.
+#[derive(Default)]
+struct WaveScratch {
+    engine: NativeEngine,
+    sums: Vec<f64>,
+    sqs: Vec<f64>,
+    out: Vec<u8>,
+}
+
+/// Decoded compute waves of one connection awaiting a drainer thread,
+/// plus the count of drainers currently running. Guarded by one mutex
+/// so the spawn-or-enqueue decision is atomic.
+struct ConnWork {
+    queue: std::collections::VecDeque<Message>,
+    active: usize,
+}
+
+/// One connection: framed tagged request/reply until disconnect or
+/// `Shutdown`. Control ops (`Hello`/`Stats`/`Shutdown`) are answered
+/// inline on the read loop; compute waves go onto a bounded queue
+/// drained by up to [`MAX_CONN_WAVES`] threads, so several tagged
+/// waves of this connection compute concurrently and replies leave as
+/// they finish — possibly out of submission order. The read loop only
+/// blocks when the queue itself is full (memory backpressure), never
+/// on compute concurrency, so control ops queued behind a burst of
+/// compute frames stay responsive — a loaded connection must keep
+/// answering health probes (a timed-out probe would make the client
+/// treat a merely-busy server as dead). A panic in a wave's compute
+/// answers that wave with a wire `Error` and touches nothing else.
+fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
+              -> io::Result<()> {
+    /// decoded compute frames the read loop may buffer beyond the ones
+    /// actively computing, before it applies TCP backpressure
+    const MAX_QUEUED_WAVES: usize = 2 * MAX_CONN_WAVES;
+    stream.set_nodelay(true)?;
+    let writer = Mutex::new(stream.try_clone()?);
+    let mut inbuf = Vec::new();
+    let work = Mutex::new(ConnWork {
+        queue: std::collections::VecDeque::new(),
+        active: 0,
+    });
+    let space_cv = Condvar::new();
+    let scratch_pool: Mutex<Vec<WaveScratch>> = Mutex::new(Vec::new());
+    std::thread::scope(|sc| -> io::Result<()> {
+        loop {
+            if wire::read_frame(&mut stream, &mut inbuf).is_err() {
+                return Ok(()); // disconnect, kill, or corrupt framing
+            }
+            if wire::is_legacy_frame(&inbuf) {
+                // an old (v1) client: answer in the one format it can
+                // parse, then close — a clean version error, not a hang
+                let mut out = Vec::new();
+                wire::encode_legacy_error(&mut out, &format!(
+                    "protocol version mismatch: this server speaks wire \
+                     protocol v{} (wave-tagged frames); upgrade the \
+                     client", wire::PROTOCOL_VERSION));
+                let _ = write_locked(&writer, &out);
+                return Ok(());
+            }
+            let msg = match Message::decode(&inbuf) {
+                Err(e) => {
+                    let mut out = Vec::new();
+                    wire::encode_error(&mut out, wire::peek_wave_id(&inbuf),
+                                       &format!("bad frame: {e}"));
+                    write_locked(&writer, &out)?;
+                    continue;
+                }
+                Ok(m) => m,
+            };
+            match msg {
+                Message::Hello { wave_id, version } => {
+                    let mut out = Vec::new();
+                    if version == wire::PROTOCOL_VERSION {
+                        wire::encode_hello_ack(
+                            &mut out,
+                            wave_id,
+                            wire::PROTOCOL_VERSION,
+                            shared.n_total as u64,
+                            shared.local.d as u64,
+                            shared.row_start as u64,
+                            (shared.row_start + shared.local.n) as u64,
+                            shared.data_hash,
+                        );
+                    } else {
+                        wire::encode_error(&mut out, wave_id, &format!(
+                            "protocol version mismatch: client speaks \
+                             v{version}, this server speaks v{}",
+                            wire::PROTOCOL_VERSION));
+                    }
+                    write_locked(&writer, &out)?;
+                }
+                Message::Stats { wave_id } => {
+                    // the health op: identity + load, computed without
+                    // touching the compute path (safe to poll while
+                    // waves are in flight)
+                    let live_conns =
+                        shared.conns.lock().unwrap().len() as u64;
+                    let mut out = Vec::new();
+                    wire::encode_stats_reply(
+                        &mut out,
+                        wave_id,
+                        shared.shard,
+                        shared.of,
+                        shared.n_total as u64,
+                        shared.local.d as u64,
+                        shared.row_start as u64,
+                        (shared.row_start + shared.local.n) as u64,
+                        live_conns,
+                        shared.data_hash,
+                        shared.max_conn_waves.load(Ordering::SeqCst),
+                    );
+                    write_locked(&writer, &out)?;
+                }
+                Message::Shutdown { wave_id } => {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    let mut out = Vec::new();
+                    wire::encode_ack(&mut out, wave_id);
+                    let _ = write_locked(&writer, &out);
+                    return Ok(());
+                }
+                m @ (Message::PartialSums { .. }
+                | Message::ExactDists { .. }
+                | Message::PullBatch { .. }) => {
+                    let spawn_drainer = {
+                        let mut w = work.lock().unwrap();
+                        while w.queue.len() >= MAX_QUEUED_WAVES {
+                            w = space_cv.wait(w).unwrap();
+                        }
+                        w.queue.push_back(m);
+                        if w.active < MAX_CONN_WAVES {
+                            w.active += 1;
+                            shared.max_conn_waves.fetch_max(
+                                w.active as u64, Ordering::SeqCst);
+                            true
+                        } else {
+                            false
+                        }
+                    };
+                    if spawn_drainer {
+                        let shared = &shared;
+                        let writer = &writer;
+                        let work = &work;
+                        let space_cv = &space_cv;
+                        let scratch_pool = &scratch_pool;
+                        sc.spawn(move || {
+                            let mut scratch = scratch_pool
+                                .lock()
+                                .unwrap()
+                                .pop()
+                                .unwrap_or_default();
+                            loop {
+                                let msg = {
+                                    let mut w = work.lock().unwrap();
+                                    match w.queue.pop_front() {
+                                        Some(msg) => msg,
+                                        None => {
+                                            w.active -= 1;
+                                            break;
+                                        }
+                                    }
+                                };
+                                space_cv.notify_one();
+                                compute_wave(shared, msg, &mut scratch);
+                                let _ =
+                                    write_locked(writer, &scratch.out);
+                            }
+                            scratch_pool.lock().unwrap().push(scratch);
+                        });
+                    }
+                }
+                other => {
+                    let mut out = Vec::new();
+                    wire::encode_error(&mut out, other.wave_id(), &format!(
+                        "unexpected {} request", other.kind()));
+                    write_locked(&writer, &out)?;
                 }
             }
         }
-        Message::ExactDists { metric, query, rows } => {
-            match validate_and_rebase(sh, &query, &rows, None) {
-                Err(e) => wire::encode_error(out, &e),
-                Ok(local_rows) => {
-                    engine.exact_dists(&sh.local, &query, &local_rows,
-                                       metric, sums);
-                    wire::encode_dists(out, sums);
+    })
+}
+
+/// Resolve one compute wave into an encoded reply frame
+/// (`scratch.out`). Runs on its own thread with a pooled
+/// engine/buffer set; a panic answers a wire `Error` for this wave
+/// only and replaces the (possibly poisoned) scratch with a fresh one.
+fn compute_wave(sh: &ShardShared, msg: Message, scratch: &mut WaveScratch) {
+    let wave_id = msg.wave_id();
+    let outcome = std::panic::catch_unwind(
+        std::panic::AssertUnwindSafe(|| {
+            let WaveScratch { engine, sums, sqs, out } = scratch;
+            match msg {
+                Message::PartialSums { metric, query, rows, coord_ids,
+                                       .. } => {
+                    match validate_and_rebase(sh, &query, &rows,
+                                              Some(&coord_ids)) {
+                        Err(e) => wire::encode_error(out, wave_id, &e),
+                        Ok(local_rows) => {
+                            engine.partial_sums(&sh.local, &query,
+                                                &local_rows, &coord_ids,
+                                                metric, sums, sqs);
+                            wire::encode_sums(out, wave_id, sums, sqs);
+                        }
+                    }
                 }
+                Message::ExactDists { metric, query, rows, .. } => {
+                    match validate_and_rebase(sh, &query, &rows, None) {
+                        Err(e) => wire::encode_error(out, wave_id, &e),
+                        Ok(local_rows) => {
+                            engine.exact_dists(&sh.local, &query,
+                                               &local_rows, metric, sums);
+                            wire::encode_dists(out, wave_id, sums);
+                        }
+                    }
+                }
+                Message::PullBatch { metric, reqs, .. } => {
+                    match batch_compute(sh, engine, metric, &reqs, sums,
+                                        sqs) {
+                        Err(e) => wire::encode_error(out, wave_id, &e),
+                        Ok(()) => {
+                            wire::encode_sums(out, wave_id, sums, sqs)
+                        }
+                    }
+                }
+                other => wire::encode_error(out, wave_id, &format!(
+                    "unexpected {} request", other.kind())),
             }
-        }
-        Message::PullBatch { metric, reqs } => {
-            match batch_compute(sh, engine, metric, &reqs, sums, sqs) {
-                Err(e) => wire::encode_error(out, &e),
-                Ok(()) => wire::encode_sums(out, sums, sqs),
-            }
-        }
-        other => wire::encode_error(
-            out,
-            &format!("unexpected {} request", other.kind()),
-        ),
+        }));
+    if outcome.is_err() {
+        *scratch = WaveScratch::default();
+        wire::encode_error(&mut scratch.out, wave_id,
+                           "internal error: shard compute panicked");
     }
-    false
 }
 
 /// Check dims/coords and map global row ids onto this shard's local
@@ -410,8 +580,8 @@ fn batch_compute(sh: &ShardShared, engine: &mut NativeEngine,
 // ---------------------------------------------------------------------
 
 /// Health snapshot of one shard-server endpoint (the wire `Stats` op):
-/// what shard it serves, of which ring size, over which dataset, and how
-/// many connections it currently holds.
+/// what shard it serves, of which ring size, over which dataset, its
+/// dataset fingerprint and how many connections it currently holds.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EndpointStats {
     /// shard index this server was started as (`shard-serve --shard`)
@@ -429,11 +599,18 @@ pub struct EndpointStats {
     pub row_end: usize,
     /// connections the server currently holds (including this probe's)
     pub live_conns: usize,
+    /// fingerprint of the served rows — replicas of one shard must
+    /// agree on it (`bmonn ring-stats` exits nonzero on divergence)
+    pub data_hash: u64,
+    /// high-water mark of concurrently computing waves the server has
+    /// seen on any single connection (the multiplexing witness)
+    pub max_conn_waves: usize,
 }
 
 /// Probe one endpoint with the wire `Stats` health op over a fresh
 /// connection. Used by `bmonn ring-stats` to survey a ring's health and
-/// layout without issuing any compute.
+/// layout without issuing any compute. An old-protocol (v1) endpoint
+/// reports a clean version-mismatch error.
 pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
                       -> Result<EndpointStats, String> {
     let mut stream = connect_endpoint(endpoint, timeout)
@@ -442,7 +619,7 @@ pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
     stream.set_read_timeout(timeout).map_err(|e| e.to_string())?;
     stream.set_write_timeout(timeout).map_err(|e| e.to_string())?;
     let mut buf = Vec::new();
-    wire::encode_stats(&mut buf);
+    wire::encode_stats(&mut buf, 1);
     wire::write_frame(&mut stream, &buf)
         .map_err(|e| format!("{endpoint}: send failed: {e}"))?;
     wire::read_frame(&mut stream, &mut buf)
@@ -452,6 +629,7 @@ pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
     {
         Message::StatsReply {
             shard, of, n_total, d, row_start, row_end, live_conns,
+            data_hash, max_conn_waves, ..
         } => Ok(EndpointStats {
             shard: shard as usize,
             of: of as usize,
@@ -460,107 +638,253 @@ pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
             row_start: row_start as usize,
             row_end: row_end as usize,
             live_conns: live_conns as usize,
+            data_hash,
+            max_conn_waves: max_conn_waves as usize,
         }),
-        Message::Error { msg } => Err(format!("{endpoint}: {msg}")),
+        Message::Error { msg, .. } => Err(format!("{endpoint}: {msg}")),
         other => Err(format!("{endpoint}: unexpected {} reply",
                              other.kind())),
     }
 }
 
 // ---------------------------------------------------------------------
-// remote engine (client)
+// ring client (multiplexed)
 // ---------------------------------------------------------------------
 
-type ShardReply = Result<(Vec<f64>, Vec<f64>), String>;
-
-/// One framed request/reply on an established connection.
-fn round_trip(stream: &mut TcpStream, send: &[u8], recv: &mut Vec<u8>,
-              ep: &str) -> Result<Message, String> {
-    wire::write_frame(stream, send)
-        .map_err(|e| format!("{ep}: send failed: {e}"))?;
-    wire::read_frame(stream, recv)
-        .map_err(|e| format!("{ep}: recv failed: {e}"))?;
-    Message::decode(recv).map_err(|e| format!("{ep}: bad reply: {e}"))
+/// Completion slot of one in-flight tagged sub-wave.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
 }
 
-/// One logical shard's ordered replica endpoints, its single live
-/// connection (if any), per-endpoint blacklist state and reusable frame
-/// buffers. All failover logic lives here — the wave code above only
-/// stages a payload in `sendbuf` and calls `ReplicaSet::request`.
-struct ReplicaSet {
+enum SlotState {
+    Waiting,
+    Reply(Message),
+    /// the connection died (or was killed) before the reply arrived
+    Dead(String),
+}
+
+enum SlotWait {
+    Reply(Message),
+    Dead(String),
+    TimedOut,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { state: Mutex::new(SlotState::Waiting), cv: Condvar::new() }
+    }
+
+    fn fulfill(&self, m: Message) {
+        *self.state.lock().unwrap() = SlotState::Reply(m);
+        self.cv.notify_all();
+    }
+
+    fn fail(&self, e: &str) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, SlotState::Waiting) {
+            *st = SlotState::Dead(e.to_string());
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, timeout: Option<Duration>) -> SlotWait {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, SlotState::Waiting) {
+                SlotState::Reply(m) => return SlotWait::Reply(m),
+                SlotState::Dead(e) => return SlotWait::Dead(e),
+                SlotState::Waiting => {}
+            }
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return SlotWait::TimedOut;
+                    }
+                    let (g, _) =
+                        self.cv.wait_timeout(st, dl - now).unwrap();
+                    st = g;
+                }
+            }
+        }
+    }
+}
+
+/// One live multiplexed connection: a writer shared by every submitting
+/// caller, the demux reader's pending-slot table, and a dedicated
+/// shutdown handle so a wedged writer can never block the kill path.
+struct Conn {
+    ep_idx: usize,
+    endpoint: String,
+    writer: Mutex<TcpStream>,
+    shut: TcpStream,
+    pending: Mutex<HashMap<u64, Arc<Slot>>>,
+    dead: AtomicBool,
+}
+
+impl Conn {
+    /// Mark dead, unblock the reader, fail every in-flight slot — each
+    /// failed sub-wave then re-issues itself to the next replica.
+    /// Returns true for the call that actually performed the kill
+    /// (idempotent: later callers get false).
+    fn kill(&self, err: &str) -> bool {
+        if self.dead.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        let _ = self.shut.shutdown(Shutdown::Both);
+        let mut p = self.pending.lock().unwrap();
+        for (_, slot) in p.drain() {
+            slot.fail(err);
+        }
+        true
+    }
+}
+
+/// Per-endpoint blacklist state plus the shard's live connection.
+struct ShardInner {
+    states: Vec<EndpointState>,
+    conns: Vec<Option<Arc<Conn>>>,
+    /// dataset fingerprint every replica of this shard must serve —
+    /// adopted from the first successful handshake, then enforced on
+    /// every later one (failover targets and healed replicas included)
+    hash: Option<u64>,
+}
+
+/// One logical shard of the ring: ordered replica endpoints, blacklist
+/// bookkeeping, and the machinery to (re)establish the single live
+/// multiplexed connection.
+struct ShardState {
     shard: usize,
     n_shards: usize,
     endpoints: Vec<String>,
-    states: Vec<EndpointState>,
-    /// (endpoint index, stream) of the live connection
-    conn: Option<(usize, TcpStream)>,
-    sendbuf: Vec<u8>,
-    recvbuf: Vec<u8>,
     timeout: Option<Duration>,
     retry: RetryPolicy,
-    /// global (n, d) the ring serves — adopted from the first successful
-    /// handshake anywhere in the ring, then required of every later one
-    /// (including replicas that heal after a restart)
-    shape: Option<(usize, usize)>,
+    /// ring-global (n, d), shared by every shard of the client — set by
+    /// the first successful handshake anywhere in the ring
+    shape: Arc<Mutex<Option<(usize, usize)>>>,
+    next_wave: Arc<AtomicU64>,
+    /// ring-wide high-water mark of concurrently pending sub-waves on
+    /// any one connection (the client-side multiplexing witness)
+    max_inflight: Arc<AtomicU64>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    inner: Mutex<ShardInner>,
 }
 
-impl ReplicaSet {
-    fn new(shard: usize, n_shards: usize, endpoints: Vec<String>,
-           timeout: Option<Duration>, retry: RetryPolicy) -> ReplicaSet {
-        let n_eps = endpoints.len();
-        ReplicaSet {
-            shard,
-            n_shards,
-            endpoints,
-            states: vec![EndpointState::default(); n_eps],
-            conn: None,
-            sendbuf: Vec::new(),
-            recvbuf: Vec::new(),
-            timeout,
-            retry,
-            shape: None,
+impl ShardState {
+    /// Hand out a live connection on an endpoint not yet attempted by
+    /// this sub-wave: an existing healthy conn first (replica order),
+    /// else dial + handshake one, recording failures against the
+    /// per-endpoint backoff. The dial + handshake itself runs
+    /// **without** the shard lock — a slow or blackholed endpoint must
+    /// not stall other callers' submits on healthy connections, the
+    /// demux readers' kill path, or coverage probes.
+    fn get_conn(self: &Arc<Self>, attempted: &mut [bool],
+                errors: &mut Vec<String>) -> Option<Arc<Conn>> {
+        loop {
+            // under the lock: reuse a live conn, or pick a dial target
+            let target = {
+                let mut inner = self.inner.lock().unwrap();
+                let mut pick = None;
+                for i in 0..self.endpoints.len() {
+                    if attempted[i] {
+                        continue;
+                    }
+                    if let Some(c) = &inner.conns[i] {
+                        if !c.dead.load(Ordering::SeqCst) {
+                            attempted[i] = true;
+                            return Some(c.clone());
+                        }
+                        inner.conns[i] = None;
+                    }
+                }
+                for i in 0..self.endpoints.len() {
+                    if attempted[i]
+                        || !inner.states[i].eligible(Instant::now())
+                    {
+                        continue;
+                    }
+                    attempted[i] = true;
+                    pick = Some(i);
+                    break;
+                }
+                pick
+            };
+            let idx = target?;
+            match self.dial_endpoint(idx) {
+                Ok((stream, hash)) => match self
+                    .install_conn(idx, stream, hash)
+                {
+                    Ok(c) => return Some(c),
+                    Err(e) => errors.push(e),
+                },
+                Err(e) => {
+                    self.inner.lock().unwrap().states[idx]
+                        .record_failure(&self.retry, Instant::now());
+                    errors.push(e);
+                }
+            }
         }
     }
 
-    /// Dial endpoint `idx`, handshake, and verify it serves this shard's
-    /// exact row range of the ring's dataset. On success the connection
-    /// is installed and the endpoint's blacklist state heals.
-    fn try_endpoint(&mut self, idx: usize) -> Result<(), String> {
+    /// Dial endpoint `idx` and run the full handshake — version, ring
+    /// shape and canonical row range validated — returning the
+    /// configured stream and the replica's dataset fingerprint. Takes
+    /// no shard lock (the ring-global shape has its own).
+    fn dial_endpoint(&self, idx: usize)
+                     -> Result<(TcpStream, u64), String> {
         let ep = self.endpoints[idx].clone();
         let mut stream = connect_endpoint(&ep, self.timeout)
             .map_err(|e| format!("{ep}: connect failed: {e}"))?;
         stream.set_nodelay(true).map_err(|e| format!("{ep}: {e}"))?;
         stream
-            .set_read_timeout(self.timeout)
-            .map_err(|e| format!("{ep}: {e}"))?;
-        stream
             .set_write_timeout(self.timeout)
             .map_err(|e| format!("{ep}: {e}"))?;
-        // handshake on a scratch buffer: `sendbuf` may hold a wave
-        // payload mid-failover and must survive the reconnect
+        // the handshake is a plain blocking round-trip: bound its read
+        stream
+            .set_read_timeout(self.timeout)
+            .map_err(|e| format!("{ep}: {e}"))?;
+        let wid = self.next_wave.fetch_add(1, Ordering::SeqCst);
         let mut buf = Vec::new();
-        wire::encode_hello(&mut buf);
+        wire::encode_hello(&mut buf, wid, wire::PROTOCOL_VERSION);
         wire::write_frame(&mut stream, &buf)
             .map_err(|e| format!("{ep}: handshake send failed: {e}"))?;
         wire::read_frame(&mut stream, &mut buf)
             .map_err(|e| format!("{ep}: handshake recv failed: {e}"))?;
-        let (n, d, a, b) = match Message::decode(&buf)
+        let (version, n, d, a, b, hash) = match Message::decode(&buf)
             .map_err(|e| format!("{ep}: bad handshake reply: {e}"))?
         {
-            Message::HelloAck { n_total, d, row_start, row_end } => {
-                (n_total as usize, d as usize, row_start as usize,
-                 row_end as usize)
+            Message::HelloAck {
+                version, n_total, d, row_start, row_end, data_hash, ..
+            } => (version, n_total as usize, d as usize,
+                  row_start as usize, row_end as usize, data_hash),
+            Message::Error { msg, .. } => {
+                return Err(format!("{ep}: rejected the handshake: {msg}"))
             }
             other => {
                 return Err(format!("{ep}: unexpected {} handshake reply",
                                    other.kind()))
             }
         };
-        if let Some((n0, d0)) = self.shape {
-            if (n0, d0) != (n, d) {
-                return Err(format!(
-                    "{ep} serves n={n} d={d} but the ring serves n={n0} \
-                     d={d0} — every replica must load one dataset"));
+        if version != wire::PROTOCOL_VERSION {
+            return Err(format!(
+                "{ep}: speaks wire protocol v{version}; this build speaks \
+                 v{} — upgrade the peer", wire::PROTOCOL_VERSION));
+        }
+        {
+            let mut shape = self.shape.lock().unwrap();
+            match *shape {
+                Some((n0, d0)) if (n0, d0) != (n, d) => {
+                    return Err(format!(
+                        "{ep} serves n={n} d={d} but the ring serves \
+                         n={n0} d={d0} — every replica must load one \
+                         dataset"));
+                }
+                Some(_) => {}
+                None => *shape = Some((n, d)),
             }
         }
         let (wa, wb) = shard_range(self.shard, n, self.n_shards);
@@ -571,196 +895,464 @@ impl ReplicaSet {
                  shard {} of {}",
                 self.n_shards, self.shard, self.shard, self.n_shards));
         }
-        self.shape = Some((n, d));
-        self.states[idx].record_success();
-        self.conn = Some((idx, stream));
-        Ok(())
+        // multiplexed phase: the demux reader blocks in read_frame
+        // indefinitely; waiters enforce the timeout and kill the
+        // connection when it expires, which unblocks the reader
+        stream
+            .set_read_timeout(None)
+            .map_err(|e| format!("{ep}: {e}"))?;
+        Ok((stream, hash))
     }
 
-    /// Walk the replica list in order, skipping blacklisted endpoints
-    /// and those already attempted during this request, until one
-    /// connects. Failures are recorded (extending each endpoint's
-    /// backoff) and appended to `errors`.
-    fn reconnect(&mut self, attempted: &mut [bool],
-                 errors: &mut Vec<String>) -> bool {
-        for i in 0..self.endpoints.len() {
-            if attempted[i] || !self.states[i].eligible(Instant::now()) {
-                continue;
+    /// Validate the replica's fingerprint against its shard-mates' and
+    /// install the handshaken connection (spawning its demux reader).
+    /// If a concurrent caller installed a live connection to the same
+    /// endpoint first, the fresh socket is discarded and the
+    /// established one handed back.
+    fn install_conn(self: &Arc<Self>, idx: usize, stream: TcpStream,
+                    hash: u64) -> Result<Arc<Conn>, String> {
+        let ep = self.endpoints[idx].clone();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(c) = &inner.conns[idx] {
+            if !c.dead.load(Ordering::SeqCst) {
+                // lost a dial race: prefer the established connection
+                // (our fresh stream closes on drop)
+                return Ok(c.clone());
             }
-            attempted[i] = true;
-            match self.try_endpoint(i) {
-                Ok(()) => return true,
-                Err(e) => {
-                    self.states[i].record_failure(&self.retry,
-                                                  Instant::now());
-                    errors.push(e);
-                }
-            }
+            inner.conns[idx] = None;
         }
-        false
-    }
-
-    /// Try to have a live connection without violating any endpoint's
-    /// backoff — the degraded-mode coverage probe. An existing
-    /// connection is verified with a `Stats` round-trip (a dead peer's
-    /// socket looks open until I/O touches it, and stale coverage would
-    /// panic the wave that trusts it); only degraded mode pays this RTT,
-    /// once per shard per coverage query. Returns whether the shard is
-    /// reachable right now.
-    fn probe(&mut self) -> bool {
-        if self.conn.is_some() {
-            let (idx, stream) = self.conn.as_mut().unwrap();
-            let idx = *idx;
-            let mut send = Vec::new();
-            wire::encode_stats(&mut send);
-            let mut recv = Vec::new();
-            match round_trip(stream, &send, &mut recv,
-                             &self.endpoints[idx]) {
-                Ok(Message::StatsReply { .. }) => return true,
-                Ok(_) | Err(_) => {
-                    self.states[idx].record_failure(&self.retry,
-                                                    Instant::now());
-                    self.conn = None;
-                }
+        match inner.hash {
+            None => inner.hash = Some(hash),
+            Some(h0) if h0 != hash => {
+                inner.states[idx].record_failure(&self.retry,
+                                                 Instant::now());
+                return Err(format!(
+                    "{ep}: dataset fingerprint {hash:#018x} diverges from \
+                     shard {}'s established fingerprint {h0:#018x} — \
+                     every replica of a shard must serve identical data",
+                    self.shard));
             }
+            Some(_) => {}
         }
-        let mut attempted = vec![false; self.endpoints.len()];
-        let mut errors = Vec::new();
-        self.reconnect(&mut attempted, &mut errors)
-    }
-
-    /// Send the payload staged in `sendbuf` and return the decoded
-    /// reply, transparently failing over: an I/O error or corrupt reply
-    /// blacklists the current replica (the connection is unusable), a
-    /// wire `Error` reply fails over *without* blacklisting (the server
-    /// answered — the connection is healthy, only this request failed
-    /// server-side, so an unreplicated ring keeps working on the very
-    /// next wave). Every endpoint is attempted at most once per
-    /// request, so retries are bounded.
-    fn request(&mut self) -> Result<Message, String> {
-        let mut attempted = vec![false; self.endpoints.len()];
-        let mut errors: Vec<String> = Vec::new();
-        loop {
-            // need a connection on an endpoint not yet tried this wave
-            let reusable =
-                matches!(&self.conn, Some((idx, _)) if !attempted[*idx]);
-            if !reusable && !self.reconnect(&mut attempted, &mut errors) {
-                let detail = if errors.is_empty() {
-                    "all replicas are backed off after recent failures"
-                        .to_string()
-                } else {
-                    errors.join("; ")
-                };
-                return Err(format!("shard {}: no live replica: {detail}",
-                                   self.shard));
-            }
-            let (idx, stream) = self.conn.as_mut().unwrap();
-            let idx = *idx;
-            attempted[idx] = true;
-            match round_trip(stream, &self.sendbuf, &mut self.recvbuf,
-                             &self.endpoints[idx]) {
-                Ok(Message::Error { msg }) => {
-                    // server-side failure on a healthy connection: keep
-                    // the conn (and the endpoint's clean record), just
-                    // fail this request over to the next replica
-                    errors.push(format!("{}: {msg}", self.endpoints[idx]));
-                }
-                Ok(m) => return Ok(m),
-                Err(e) => {
-                    // I/O failure: the connection is gone — blacklist
-                    // the replica and fail over
-                    errors.push(e);
-                    self.states[idx].record_failure(&self.retry,
-                                                    Instant::now());
-                    self.conn = None;
-                }
-            }
+        let shut = stream.try_clone().map_err(|e| format!("{ep}: {e}"))?;
+        let reader_stream =
+            stream.try_clone().map_err(|e| format!("{ep}: {e}"))?;
+        let conn = Arc::new(Conn {
+            ep_idx: idx,
+            endpoint: ep.clone(),
+            writer: Mutex::new(stream),
+            shut,
+            pending: Mutex::new(HashMap::new()),
+            dead: AtomicBool::new(false),
+        });
+        let me = self.clone();
+        let rc = conn.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("bmonn-ring-s{}r{idx}", self.shard))
+            .spawn(move || reader_loop(me, rc, reader_stream))
+            .map_err(|e| format!("{ep}: spawning demux reader: {e}"))?;
+        {
+            // reap finished demux readers so a long-lived client with a
+            // flapping endpoint does not accumulate handles unboundedly
+            let mut readers = self.readers.lock().unwrap();
+            readers.retain(|h| !h.is_finished());
+            readers.push(handle);
         }
+        inner.states[idx].record_success();
+        inner.conns[idx] = Some(conn.clone());
+        Ok(conn)
     }
 
-    fn expect_sums(&mut self, expected: usize) -> ShardReply {
-        match self.request()? {
-            Message::Sums { sum, sq } => {
-                if sum.len() != expected {
-                    return Err(format!(
-                        "shard {}: {} results for {expected} requested rows",
-                        self.shard,
-                        sum.len()
-                    ));
-                }
-                Ok((sum, sq))
-            }
-            other => Err(format!("shard {}: unexpected {} reply",
-                                 self.shard, other.kind())),
+    /// Kill a connection and blacklist its endpoint (I/O failure path).
+    /// Only the first kill of a connection charges the endpoint's
+    /// backoff — the reader and a timed-out waiter may race here.
+    fn kill_conn(&self, conn: &Arc<Conn>, err: &str) {
+        let first = conn.kill(err);
+        let mut inner = self.inner.lock().unwrap();
+        if first {
+            inner.states[conn.ep_idx].record_failure(&self.retry,
+                                                     Instant::now());
         }
-    }
-
-    fn expect_dists(&mut self, expected: usize) -> Result<Vec<f64>, String> {
-        match self.request()? {
-            Message::Dists { vals } => {
-                if vals.len() != expected {
-                    return Err(format!(
-                        "shard {}: {} results for {expected} requested rows",
-                        self.shard,
-                        vals.len()
-                    ));
-                }
-                Ok(vals)
+        if let Some(cur) = &inner.conns[conn.ep_idx] {
+            if Arc::ptr_eq(cur, conn) {
+                inner.conns[conn.ep_idx] = None;
             }
-            other => Err(format!("shard {}: unexpected {} reply",
-                                 self.shard, other.kind())),
         }
     }
 }
 
-/// Run `per_shard` for every shard that owns part of the current wave.
-/// With more than one live sub-wave the round trips overlap on scoped
-/// threads; a single live sub-wave skips the spawn and runs inline.
-fn fan_out<F>(sets: &mut [ReplicaSet], part: &WavePartition,
-              per_shard: F) -> Vec<ShardReply>
-where
-    F: Fn(&mut ReplicaSet, &ShardWave) -> ShardReply + Sync,
-{
-    let live = (0..sets.len())
-        .filter(|&i| !part.wave(i).rows.is_empty())
-        .count();
-    if live <= 1 {
-        return sets
-            .iter_mut()
-            .enumerate()
-            .map(|(i, c)| {
-                let w = part.wave(i);
-                if w.rows.is_empty() {
-                    Ok((Vec::new(), Vec::new()))
-                } else {
-                    per_shard(c, w)
-                }
-            })
-            .collect();
-    }
-    let n = sets.len();
-    std::thread::scope(|sc| {
-        let per_shard = &per_shard;
-        // spawn only for shards that actually own work — an 8-endpoint
-        // ring serving a 2-shard wave pays 2 spawns, not 8
-        let handles: Vec<_> = sets
-            .iter_mut()
-            .enumerate()
-            .filter(|(i, _)| !part.wave(*i).rows.is_empty())
-            .map(|(i, c)| {
-                let w = part.wave(i);
-                (i, sc.spawn(move || per_shard(c, w)))
-            })
-            .collect();
-        let mut results: Vec<ShardReply> =
-            (0..n).map(|_| Ok((Vec::new(), Vec::new()))).collect();
-        for (i, h) in handles {
-            results[i] = h.join().unwrap_or_else(|_| {
-                Err("remote shard I/O thread panicked".into())
-            });
+/// Demultiplexing reader: one per live connection. Routes every reply
+/// frame to its wave's completion slot by tag; any read/decode failure
+/// or an unmatched tag kills the connection, which fails the in-flight
+/// sub-waves over to the next replica.
+fn reader_loop(shard: Arc<ShardState>, conn: Arc<Conn>,
+               mut stream: TcpStream) {
+    let mut buf = Vec::new();
+    loop {
+        if conn.dead.load(Ordering::SeqCst) {
+            return;
         }
-        results
-    })
+        if let Err(e) = wire::read_frame(&mut stream, &mut buf) {
+            shard.kill_conn(&conn,
+                            &format!("{}: recv failed: {e}", conn.endpoint));
+            return;
+        }
+        let msg = match Message::decode(&buf) {
+            Err(e) => {
+                shard.kill_conn(
+                    &conn,
+                    &format!("{}: bad reply: {e}", conn.endpoint));
+                return;
+            }
+            Ok(m) => m,
+        };
+        let wid = msg.wave_id();
+        let slot = conn.pending.lock().unwrap().remove(&wid);
+        match slot {
+            Some(s) => s.fulfill(msg),
+            None => {
+                shard.kill_conn(&conn, &format!(
+                    "{}: reply for unknown wave {wid} — stream out of \
+                     sync", conn.endpoint));
+                return;
+            }
+        }
+    }
+}
+
+/// One staged, in-flight sub-wave: the encoded payload (owned, so a
+/// failover can re-issue identical bytes), the per-endpoint attempt
+/// set bounding retries, and the completion slot of the current
+/// attempt. Created by [`RingClient::submit_to_shard`] — the frame is
+/// on the wire when that returns.
+struct SubWave {
+    shard: Arc<ShardState>,
+    wave_id: u64,
+    payload: Vec<u8>,
+    attempted: Vec<bool>,
+    errors: Vec<String>,
+    current: Option<(Arc<Conn>, Arc<Slot>)>,
+}
+
+impl SubWave {
+    fn submit(shard: Arc<ShardState>, wave_id: u64, payload: Vec<u8>)
+              -> SubWave {
+        let n = shard.endpoints.len();
+        let mut sw = SubWave {
+            shard,
+            wave_id,
+            payload,
+            attempted: vec![false; n],
+            errors: Vec::new(),
+            current: None,
+        };
+        // best effort: a submit-time failure (no live replica right
+        // now) is retried — and surfaced — at wait() time
+        sw.dispatch();
+        sw
+    }
+
+    /// Register the completion slot and put the payload on the wire of
+    /// the next eligible replica. Returns false when every replica has
+    /// been attempted or is backed off.
+    fn dispatch(&mut self) -> bool {
+        loop {
+            let Some(conn) =
+                self.shard.get_conn(&mut self.attempted, &mut self.errors)
+            else {
+                return false;
+            };
+            let slot = Arc::new(Slot::new());
+            {
+                let mut p = conn.pending.lock().unwrap();
+                if conn.dead.load(Ordering::SeqCst) {
+                    // died between handout and registration
+                    self.errors.push(format!(
+                        "{}: connection died before send", conn.endpoint));
+                    continue;
+                }
+                p.insert(self.wave_id, slot.clone());
+                self.shard
+                    .max_inflight
+                    .fetch_max(p.len() as u64, Ordering::SeqCst);
+            }
+            let sent = {
+                let mut w = conn.writer.lock().unwrap();
+                wire::write_frame(&mut *w, &self.payload)
+            };
+            match sent {
+                Ok(()) => {
+                    self.current = Some((conn, slot));
+                    return true;
+                }
+                Err(e) => {
+                    let msg =
+                        format!("{}: send failed: {e}", conn.endpoint);
+                    self.shard.kill_conn(&conn, &msg);
+                    self.errors.push(msg);
+                }
+            }
+        }
+    }
+
+    /// Block until this sub-wave's reply arrives, transparently failing
+    /// over: a dead connection or timeout blacklists the replica and
+    /// re-issues the identical payload to the next one; a wire `Error`
+    /// reply fails over without blacklisting (the connection is
+    /// healthy). Each endpoint is attempted at most once.
+    fn wait(mut self) -> Result<Message, String> {
+        loop {
+            let Some((conn, slot)) = self.current.take() else {
+                if !self.dispatch() {
+                    let detail = if self.errors.is_empty() {
+                        "all replicas are backed off after recent \
+                         failures"
+                            .to_string()
+                    } else {
+                        self.errors.join("; ")
+                    };
+                    return Err(format!("shard {}: no live replica: \
+                                        {detail}", self.shard.shard));
+                }
+                continue;
+            };
+            match slot.wait(self.shard.timeout) {
+                SlotWait::Reply(Message::Error { msg, .. }) => {
+                    // server-side failure on a healthy connection: keep
+                    // the conn (and the endpoint's clean record), fail
+                    // only this sub-wave over to the next replica
+                    self.errors
+                        .push(format!("{}: {msg}", conn.endpoint));
+                }
+                SlotWait::Reply(m) => return Ok(m),
+                SlotWait::Dead(e) => {
+                    // connection killed — blacklist already recorded
+                    self.errors.push(e);
+                }
+                SlotWait::TimedOut => {
+                    let e =
+                        format!("{}: request timed out", conn.endpoint);
+                    self.shard.kill_conn(&conn, &e);
+                    self.errors.push(e);
+                }
+            }
+        }
+    }
+}
+
+/// The shared, multiplexed ring client (see module docs): one
+/// connection set per process, safely shared by every worker thread via
+/// `Arc`. Sub-waves from any number of concurrent callers interleave on
+/// each shard's single connection and their replies are demultiplexed
+/// by wave tag. Construct once ([`RingClient::connect`] /
+/// [`RingClient::connect_opts`]) and hand clones of the `Arc` to every
+/// [`RemoteEngine`].
+pub struct RingClient {
+    shards: Vec<Arc<ShardState>>,
+    n_total: usize,
+    d: usize,
+    degraded: bool,
+    next_wave: Arc<AtomicU64>,
+    max_inflight: Arc<AtomicU64>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl RingClient {
+    /// Connect to a ring given one spec per shard (replicas separated by
+    /// `|` within a spec) with default options.
+    pub fn connect(endpoints: &[String]) -> Result<RingClient, String> {
+        Self::connect_opts(&PlacementMap::parse(endpoints)?,
+                           RemoteOptions::default())
+    }
+
+    /// Connect to every shard's first live replica of `placement`,
+    /// verifying version, shape, canonical row range and dataset
+    /// fingerprint per replica. Without `opts.degraded`, a shard with
+    /// no live replica fails the connect; with it, the shard starts out
+    /// down (its rows are excluded from [`RingClient::coverage`]) and
+    /// is re-probed as its endpoints' backoffs expire — at least one
+    /// shard must be reachable either way, to learn the dataset shape.
+    pub fn connect_opts(placement: &PlacementMap, opts: RemoteOptions)
+                        -> Result<RingClient, String> {
+        let s = placement.n_shards();
+        let shape = Arc::new(Mutex::new(None));
+        let next_wave = Arc::new(AtomicU64::new(1));
+        let max_inflight = Arc::new(AtomicU64::new(0));
+        let readers: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let mut shards: Vec<Arc<ShardState>> = Vec::with_capacity(s);
+        let mut fail: Option<String> = None;
+        for i in 0..s {
+            let eps = placement.replicas(i).to_vec();
+            let n_eps = eps.len();
+            let st = Arc::new(ShardState {
+                shard: i,
+                n_shards: s,
+                endpoints: eps,
+                timeout: opts.timeout,
+                retry: opts.retry,
+                shape: shape.clone(),
+                next_wave: next_wave.clone(),
+                max_inflight: max_inflight.clone(),
+                readers: readers.clone(),
+                inner: Mutex::new(ShardInner {
+                    states: vec![EndpointState::default(); n_eps],
+                    conns: vec![None; n_eps],
+                    hash: None,
+                }),
+            });
+            // eager connect: learns shape + fingerprint, and surfaces
+            // dead shards at startup unless degraded mode allows them
+            let mut attempted = vec![false; st.endpoints.len()];
+            let mut errors = Vec::new();
+            if st.get_conn(&mut attempted, &mut errors).is_none()
+                && !opts.degraded
+            {
+                fail = Some(format!("shard {i}: no live replica: {}",
+                                    errors.join("; ")));
+                shards.push(st);
+                break;
+            }
+            shards.push(st);
+        }
+        let resolved = *shape.lock().unwrap();
+        let fail = fail.or_else(|| match resolved {
+            Some(_) => None,
+            None => Some(
+                "no shard of the ring is reachable — cannot learn the \
+                 dataset shape (degraded mode still needs at least one \
+                 live shard)"
+                    .into(),
+            ),
+        });
+        if let Some(e) = fail {
+            // tear down whatever connected before the failure so no
+            // reader thread or socket outlives the failed construction
+            shutdown_shards(&shards, &readers);
+            return Err(e);
+        }
+        let (n_total, d) = resolved.unwrap();
+        Ok(RingClient {
+            shards,
+            n_total,
+            d,
+            degraded: opts.degraded,
+            next_wave,
+            max_inflight,
+            readers,
+        })
+    }
+
+    /// Number of logical shards in the ring.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The ring's global dataset shape, learned at handshake.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.n_total, self.d)
+    }
+
+    /// Whether this client was connected in degraded mode.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Ring-wide high-water mark of concurrently in-flight sub-waves on
+    /// any single connection — the client-side witness that waves
+    /// actually multiplex (`bench pull` asserts ≥ 2 on its rung).
+    pub fn max_inflight_per_conn(&self) -> u64 {
+        self.max_inflight.load(Ordering::SeqCst)
+    }
+
+    fn fresh_wave_id(&self) -> u64 {
+        self.next_wave.fetch_add(1, Ordering::SeqCst)
+    }
+
+    fn submit_to_shard(&self, shard: usize, wave_id: u64,
+                       payload: Vec<u8>) -> SubWave {
+        SubWave::submit(self.shards[shard].clone(), wave_id, payload)
+    }
+
+    /// Is shard `i` reachable right now? One tagged `Stats` round-trip
+    /// on the live connection (a dead peer's socket looks open until
+    /// I/O touches it), falling back to a backoff-respecting reconnect.
+    fn shard_live(&self, i: usize) -> bool {
+        let wid = self.fresh_wave_id();
+        let mut payload = Vec::new();
+        wire::encode_stats(&mut payload, wid);
+        let sub = self.submit_to_shard(i, wid, payload);
+        matches!(sub.wait(), Ok(Message::StatsReply { .. }))
+    }
+
+    /// In degraded mode, the global row ranges whose shards currently
+    /// have a live (or immediately reconnectable, backoff permitting)
+    /// replica; `None` when every shard is reachable, or when degraded
+    /// mode is off (then a dead shard panics the wave instead). Shards
+    /// are probed concurrently, so a healthy degraded-mode ring pays
+    /// ~one `Stats` round-trip of latency per coverage query, not S.
+    pub fn coverage(&self) -> Option<Coverage> {
+        if !self.degraded {
+            return None;
+        }
+        let s = self.shards.len();
+        let oks: Vec<bool> = if s <= 1 {
+            (0..s).map(|i| self.shard_live(i)).collect()
+        } else {
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = (0..s)
+                    .map(|i| sc.spawn(move || self.shard_live(i)))
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or(false))
+                    .collect()
+            })
+        };
+        let mut live = Vec::new();
+        let mut full = true;
+        for (i, ok) in oks.into_iter().enumerate() {
+            let (a, b) = shard_range(i, self.n_total, s);
+            if a == b {
+                continue; // a zero-row shard loses nothing when it dies
+            }
+            if ok {
+                live.push((a as u32, b as u32));
+            } else {
+                full = false;
+            }
+        }
+        if full {
+            None
+        } else {
+            Some(Coverage { live, rows_total: self.n_total })
+        }
+    }
+}
+
+/// Kill every live connection of `shards` and join the demux readers —
+/// shared by `Drop` and the failed-construction path of
+/// [`RingClient::connect_opts`].
+fn shutdown_shards(shards: &[Arc<ShardState>],
+                   readers: &Mutex<Vec<JoinHandle<()>>>) {
+    for st in shards {
+        let conns: Vec<Arc<Conn>> = {
+            let mut inner = st.inner.lock().unwrap();
+            inner.conns.iter_mut().filter_map(|c| c.take()).collect()
+        };
+        for c in conns {
+            c.kill("ring client closed");
+        }
+    }
+    for h in readers.lock().unwrap().drain(..) {
+        let _ = h.join();
+    }
+}
+
+impl Drop for RingClient {
+    fn drop(&mut self) {
+        shutdown_shards(&self.shards, &self.readers);
+    }
 }
 
 /// Dial one endpoint, honoring `timeout` during the connect phase too —
@@ -785,14 +1377,16 @@ fn connect_endpoint(ep: &str, timeout: Option<Duration>)
     }))
 }
 
-/// Connection options for [`RemoteEngine::connect_opts`].
+/// Connection options for [`RingClient::connect_opts`] /
+/// [`RemoteEngine::connect_opts`].
 #[derive(Clone, Copy, Debug)]
 pub struct RemoteOptions {
-    /// per-connection I/O timeout, applied to connects, reads and writes
-    /// (`None` = block forever; tests use short timeouts)
+    /// per-connection I/O timeout, applied to connects, writes and
+    /// per-wave reply waits (`None` = block forever; tests use short
+    /// timeouts)
     pub timeout: Option<Duration>,
     /// opt into degraded answers: with every replica of a shard dead,
-    /// `RemoteEngine::coverage` reports the surviving rows instead of
+    /// [`RingClient::coverage`] reports the surviving rows instead of
     /// waves panicking (`[engine] degraded` / `--degraded`)
     pub degraded: bool,
     /// per-endpoint backoff schedule for the failover blacklist
@@ -809,26 +1403,47 @@ impl Default for RemoteOptions {
     }
 }
 
-/// Networked [`PullEngine`] over a replicated ring of shard servers —
-/// see the module docs for the ring contract, determinism, failover and
-/// degraded-mode semantics.
-pub struct RemoteEngine {
-    sets: Vec<ReplicaSet>,
-    n_total: usize,
-    d: usize,
-    degraded: bool,
+// ---------------------------------------------------------------------
+// remote engine (a PullEngine over the shared ring client)
+// ---------------------------------------------------------------------
+
+enum WaveKind {
+    Sums,
+    Dists,
+}
+
+/// One wave this engine has submitted but not yet completed: its
+/// partition plan (owning the scatter slots) and the per-shard
+/// in-flight sub-waves.
+struct InflightWave {
     partition: WavePartition,
+    kind: WaveKind,
+    total: usize,
+    subs: Vec<Option<SubWave>>,
+}
+
+/// Networked [`PullEngine`] over a shared [`RingClient`] — see the
+/// module docs for the ring contract, determinism, failover and
+/// degraded-mode semantics. Cheap to construct per worker
+/// ([`RemoteEngine::from_client`]): the connection set lives in the
+/// shared client, so every worker's waves interleave on one socket per
+/// shard. The `submit_*`/`complete_*` half of the engine API is
+/// genuinely pipelined here: sub-waves are on the wire when submit
+/// returns and any number of waves may be in flight concurrently.
+pub struct RemoteEngine {
+    client: Arc<RingClient>,
+    /// recycled wave planners (one per concurrently in-flight wave)
+    spare_parts: Vec<WavePartition>,
+    inflight: HashMap<u64, InflightWave>,
+    next_key: u64,
 }
 
 impl RemoteEngine {
-    /// Connect to a ring given one spec per shard (replicas separated by
-    /// `|` within a spec), verify every reachable replica serves the
-    /// canonical floor-boundary partition, and fail unless each shard
-    /// has at least one live replica. Defaults: [`DEFAULT_IO_TIMEOUT`],
-    /// degraded off.
+    /// Connect a fresh [`RingClient`] to a ring given one spec per
+    /// shard (replicas separated by `|` within a spec) and wrap it.
+    /// Defaults: [`DEFAULT_IO_TIMEOUT`], degraded off.
     pub fn connect(endpoints: &[String]) -> Result<RemoteEngine, String> {
-        Self::connect_opts(&PlacementMap::parse(endpoints)?,
-                           RemoteOptions::default())
+        Ok(Self::from_client(Arc::new(RingClient::connect(endpoints)?)))
     }
 
     /// [`RemoteEngine::connect`] with an explicit per-connection I/O
@@ -841,88 +1456,87 @@ impl RemoteEngine {
                                            ..RemoteOptions::default() })
     }
 
-    /// Connect to every shard's first live replica of `placement` and
-    /// verify the ring tiles the dataset with the canonical
-    /// floor-boundary partition. Without `opts.degraded`, a shard with
-    /// no live replica fails the connect; with it, the shard starts out
-    /// down (its rows are excluded from `RemoteEngine::coverage`) and
-    /// is re-probed as its endpoints' backoffs expire — at least one
-    /// shard must be reachable either way, to learn the dataset shape.
+    /// Connect a fresh [`RingClient`] with explicit options and wrap it.
     pub fn connect_opts(placement: &PlacementMap, opts: RemoteOptions)
                         -> Result<RemoteEngine, String> {
-        let s = placement.n_shards();
-        let mut sets = Vec::with_capacity(s);
-        let mut shape: Option<(usize, usize)> = None;
-        for i in 0..s {
-            let mut set = ReplicaSet::new(i, s,
-                                          placement.replicas(i).to_vec(),
-                                          opts.timeout, opts.retry);
-            set.shape = shape;
-            let mut attempted = vec![false; set.endpoints.len()];
-            let mut errors = Vec::new();
-            if !set.reconnect(&mut attempted, &mut errors)
-                && !opts.degraded
-            {
-                return Err(format!("shard {i}: no live replica: {}",
-                                   errors.join("; ")));
-            }
-            if shape.is_none() {
-                shape = set.shape;
-            }
-            sets.push(set);
+        Ok(Self::from_client(Arc::new(RingClient::connect_opts(placement,
+                                                               opts)?)))
+    }
+
+    /// Wrap a shared ring client — the per-worker constructor: every
+    /// engine built from the same `Arc` multiplexes its waves onto the
+    /// same one-connection-per-shard set.
+    pub fn from_client(client: Arc<RingClient>) -> RemoteEngine {
+        RemoteEngine {
+            client,
+            spare_parts: Vec::new(),
+            inflight: HashMap::new(),
+            next_key: 1,
         }
-        let Some((n_total, d)) = shape else {
-            return Err("no shard of the ring is reachable — cannot learn \
-                        the dataset shape (degraded mode still needs at \
-                        least one live shard)"
-                .into());
-        };
-        // dead-at-connect shards learn the shape the live ones agreed
-        // on, so a replica that heals later is validated against it
-        for set in &mut sets {
-            set.shape = Some((n_total, d));
-        }
-        Ok(RemoteEngine {
-            sets,
-            n_total,
-            d,
-            degraded: opts.degraded,
-            partition: WavePartition::new(s),
-        })
+    }
+
+    /// The shared ring client this engine submits through.
+    pub fn client(&self) -> &Arc<RingClient> {
+        &self.client
     }
 
     /// Number of logical shards in the ring.
     pub fn n_shards(&self) -> usize {
-        self.sets.len()
+        self.client.n_shards()
     }
 
     /// The ring's global dataset shape, learned at handshake.
     pub fn shape(&self) -> (usize, usize) {
-        (self.n_total, self.d)
+        self.client.shape()
     }
 
     fn check_dataset(&self, data: &DenseDataset) {
+        let (n_total, d) = self.client.shape();
         assert!(
-            data.n == self.n_total && data.d == self.d,
+            data.n == n_total && data.d == d,
             "remote ring serves n={} d={} but this wave's dataset is n={} \
              d={} — every shard server must load the same dataset as the \
              coordinator",
-            self.n_total, self.d, data.n, data.d
+            n_total, d, data.n, data.d
         );
     }
 
-    fn scatter2(&self, results: Vec<ShardReply>, out_sum: &mut [f64],
-                out_sq: &mut [f64]) {
-        for (i, res) in results.into_iter().enumerate() {
-            match res {
-                Ok((sum, sq)) => {
-                    let w = self.partition.wave(i);
-                    w.scatter(&sum, out_sum);
-                    w.scatter(&sq, out_sq);
-                }
-                Err(e) => panic!("remote pull wave failed: {e}"),
+    fn take_partition(&mut self) -> WavePartition {
+        self.spare_parts
+            .pop()
+            .unwrap_or_else(|| WavePartition::new(self.client.n_shards()))
+    }
+
+    /// Fan the planned wave's per-shard payloads onto the wire and park
+    /// the in-flight state under a fresh ticket key. `encode` builds
+    /// shard `i`'s payload for the given wave id.
+    fn stage_wave<F>(&mut self, partition: WavePartition, kind: WaveKind,
+                     total: usize, mut encode: F) -> WaveTicket
+    where
+        F: FnMut(&WavePartition, usize, u64) -> Vec<u8>,
+    {
+        let s = self.client.n_shards();
+        let mut subs = Vec::with_capacity(s);
+        for i in 0..s {
+            if partition.wave(i).rows.is_empty() {
+                subs.push(None);
+                continue;
             }
+            let wid = self.client.fresh_wave_id();
+            let payload = encode(&partition, i, wid);
+            subs.push(Some(self.client.submit_to_shard(i, wid, payload)));
         }
+        let key = self.next_key;
+        self.next_key += 1;
+        self.inflight
+            .insert(key, InflightWave { partition, kind, total, subs });
+        WaveTicket::deferred(key)
+    }
+
+    fn take_inflight(&mut self, ticket: &WaveTicket) -> InflightWave {
+        self.inflight
+            .remove(&ticket.key())
+            .expect("unknown or already-completed remote WaveTicket")
     }
 }
 
@@ -937,19 +1551,9 @@ impl PullEngine for RemoteEngine {
         out_sum: &mut Vec<f64>,
         out_sq: &mut Vec<f64>,
     ) {
-        self.check_dataset(data);
-        out_sum.clear();
-        out_sq.clear();
-        out_sum.resize(rows.len(), 0.0);
-        out_sq.resize(rows.len(), 0.0);
-        self.partition.split_rows(data.n, rows);
-        let results = fan_out(&mut self.sets, &self.partition,
-                              |shard, wave| {
-            wire::encode_partial_sums(&mut shard.sendbuf, metric, query,
-                                      &wave.rows, coord_ids);
-            shard.expect_sums(wave.rows.len())
-        });
-        self.scatter2(results, out_sum, out_sq);
+        let t = self.submit_partial_sums(data, query, rows, coord_ids,
+                                         metric);
+        self.complete_sums(t, out_sum, out_sq);
     }
 
     fn exact_dists(
@@ -960,22 +1564,8 @@ impl PullEngine for RemoteEngine {
         metric: Metric,
         out: &mut Vec<f64>,
     ) {
-        self.check_dataset(data);
-        out.clear();
-        out.resize(rows.len(), 0.0);
-        self.partition.split_rows(data.n, rows);
-        let results = fan_out(&mut self.sets, &self.partition,
-                              |shard, wave| {
-            wire::encode_exact_dists(&mut shard.sendbuf, metric, query,
-                                     &wave.rows);
-            shard.expect_dists(wave.rows.len()).map(|v| (v, Vec::new()))
-        });
-        for (i, res) in results.into_iter().enumerate() {
-            match res {
-                Ok((vals, _)) => self.partition.wave(i).scatter(&vals, out),
-                Err(e) => panic!("remote exact wave failed: {e}"),
-            }
-        }
+        let t = self.submit_exact_dists(data, query, rows, metric);
+        self.complete_dists(t, out);
     }
 
     fn pull_batch(
@@ -986,65 +1576,150 @@ impl PullEngine for RemoteEngine {
         out_sum: &mut Vec<f64>,
         out_sq: &mut Vec<f64>,
     ) {
+        let t = self.submit_pull_batch(data, reqs, metric);
+        self.complete_sums(t, out_sum, out_sq);
+    }
+
+    fn submit_partial_sums(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        coord_ids: &[u32],
+        metric: Metric,
+    ) -> WaveTicket {
         self.check_dataset(data);
-        let total = self.partition.split_batch(data.n, reqs);
+        let mut partition = self.take_partition();
+        partition.split_rows(data.n, rows);
+        self.stage_wave(partition, WaveKind::Sums, rows.len(),
+                        |part, i, wid| {
+            let mut payload = Vec::new();
+            wire::encode_partial_sums(&mut payload, wid, metric, query,
+                                      &part.wave(i).rows, coord_ids);
+            payload
+        })
+    }
+
+    fn submit_exact_dists(
+        &mut self,
+        data: &DenseDataset,
+        query: &[f32],
+        rows: &[u32],
+        metric: Metric,
+    ) -> WaveTicket {
+        self.check_dataset(data);
+        let mut partition = self.take_partition();
+        partition.split_rows(data.n, rows);
+        self.stage_wave(partition, WaveKind::Dists, rows.len(),
+                        |part, i, wid| {
+            let mut payload = Vec::new();
+            wire::encode_exact_dists(&mut payload, wid, metric, query,
+                                     &part.wave(i).rows);
+            payload
+        })
+    }
+
+    fn submit_pull_batch(
+        &mut self,
+        data: &DenseDataset,
+        reqs: &[PullRequest<'_>],
+        metric: Metric,
+    ) -> WaveTicket {
+        self.check_dataset(data);
+        let mut partition = self.take_partition();
+        let total = partition.split_batch(data.n, reqs);
+        self.stage_wave(partition, WaveKind::Sums, total,
+                        |part, i, wid| {
+            let sub: Vec<PullRequest> =
+                part.wave(i).subrequests(reqs).collect();
+            let mut payload = Vec::new();
+            wire::encode_pull_batch(&mut payload, wid, metric, &sub);
+            payload
+        })
+    }
+
+    fn complete_sums(&mut self, mut ticket: WaveTicket,
+                     out_sum: &mut Vec<f64>, out_sq: &mut Vec<f64>) {
+        if let Some((s, q)) = ticket.take_ready() {
+            *out_sum = s;
+            *out_sq = q;
+            return;
+        }
+        let InflightWave { partition, kind, total, subs } =
+            self.take_inflight(&ticket);
+        assert!(matches!(kind, WaveKind::Sums),
+                "complete_sums on an exact-dists ticket");
         out_sum.clear();
         out_sq.clear();
         out_sum.resize(total, 0.0);
         out_sq.resize(total, 0.0);
-        let results = fan_out(&mut self.sets, &self.partition,
-                              |shard, wave| {
-            let sub: Vec<PullRequest> = wave.subrequests(reqs).collect();
-            wire::encode_pull_batch(&mut shard.sendbuf, metric, &sub);
-            shard.expect_sums(wave.rows.len())
-        });
-        self.scatter2(results, out_sum, out_sq);
+        for (i, sub) in subs.into_iter().enumerate() {
+            let Some(sub) = sub else { continue };
+            let wave = partition.wave(i);
+            match sub.wait() {
+                Ok(Message::Sums { sum, sq, .. }) => {
+                    if sum.len() != wave.rows.len() {
+                        panic!(
+                            "remote pull wave failed: shard {i}: {} \
+                             results for {} requested rows",
+                            sum.len(),
+                            wave.rows.len()
+                        );
+                    }
+                    wave.scatter(&sum, out_sum);
+                    wave.scatter(&sq, out_sq);
+                }
+                Ok(other) => panic!(
+                    "remote pull wave failed: shard {i}: unexpected {} \
+                     reply", other.kind()),
+                Err(e) => panic!("remote pull wave failed: {e}"),
+            }
+        }
+        self.spare_parts.push(partition);
     }
 
-    /// In degraded mode, the global row ranges whose shards currently
-    /// have a live (or immediately reconnectable, backoff permitting)
-    /// replica; `None` when every shard is reachable, or when degraded
-    /// mode is off (then a dead shard panics the wave instead). Shards
-    /// are probed concurrently, so a healthy degraded-mode ring pays
-    /// ~one `Stats` round-trip of latency per coverage query, not S.
+    fn complete_dists(&mut self, mut ticket: WaveTicket,
+                      out: &mut Vec<f64>) {
+        if let Some((vals, _)) = ticket.take_ready() {
+            *out = vals;
+            return;
+        }
+        let InflightWave { partition, kind, total, subs } =
+            self.take_inflight(&ticket);
+        assert!(matches!(kind, WaveKind::Dists),
+                "complete_dists on a sums ticket");
+        out.clear();
+        out.resize(total, 0.0);
+        for (i, sub) in subs.into_iter().enumerate() {
+            let Some(sub) = sub else { continue };
+            let wave = partition.wave(i);
+            match sub.wait() {
+                Ok(Message::Dists { vals, .. }) => {
+                    if vals.len() != wave.rows.len() {
+                        panic!(
+                            "remote exact wave failed: shard {i}: {} \
+                             results for {} requested rows",
+                            vals.len(),
+                            wave.rows.len()
+                        );
+                    }
+                    wave.scatter(&vals, out);
+                }
+                Ok(other) => panic!(
+                    "remote exact wave failed: shard {i}: unexpected {} \
+                     reply", other.kind()),
+                Err(e) => panic!("remote exact wave failed: {e}"),
+            }
+        }
+        self.spare_parts.push(partition);
+    }
+
+    fn pipelined(&self) -> bool {
+        true
+    }
+
     fn coverage(&mut self) -> Option<Coverage> {
-        if !self.degraded {
-            return None;
-        }
-        let oks: Vec<bool> = if self.sets.len() <= 1 {
-            self.sets.iter_mut().map(|s| s.probe()).collect()
-        } else {
-            std::thread::scope(|sc| {
-                let handles: Vec<_> = self
-                    .sets
-                    .iter_mut()
-                    .map(|s| sc.spawn(move || s.probe()))
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().unwrap_or(false))
-                    .collect()
-            })
-        };
-        let s = self.sets.len();
-        let mut live = Vec::new();
-        let mut full = true;
-        for (i, ok) in oks.into_iter().enumerate() {
-            let (a, b) = shard_range(i, self.n_total, s);
-            if a == b {
-                continue; // a zero-row shard loses nothing when it dies
-            }
-            if ok {
-                live.push((a as u32, b as u32));
-            } else {
-                full = false;
-            }
-        }
-        if full {
-            None
-        } else {
-            Some(Coverage { live, rows_total: self.n_total })
-        }
+        self.client.coverage()
     }
 
     fn name(&self) -> &'static str {
@@ -1065,27 +1740,94 @@ mod tests {
     }
 
     #[test]
-    fn handshake_reports_shape_and_shutdown_stops_the_server() {
+    fn handshake_reports_shape_hash_and_shutdown_stops_the_server() {
         let ds = synthetic::gaussian_iid(10, 8, 1);
         let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 1, 2)
             .unwrap();
         let mut stream = TcpStream::connect(srv.addr).unwrap();
         let mut buf = Vec::new();
-        wire::encode_hello(&mut buf);
+        wire::encode_hello(&mut buf, 5, wire::PROTOCOL_VERSION);
         match raw_round_trip(&mut stream, &buf) {
-            Message::HelloAck { n_total, d, row_start, row_end } => {
+            Message::HelloAck { wave_id, version, n_total, d, row_start,
+                                row_end, data_hash } => {
+                assert_eq!(wave_id, 5, "reply must echo the request tag");
+                assert_eq!(version, wire::PROTOCOL_VERSION);
                 assert_eq!((n_total, d), (10, 8));
                 assert_eq!((row_start, row_end), (5, 10));
+                // fingerprint matches a local recomputation of the slice
+                let (a, b) = shard_range(1, ds.n, 2);
+                let mut rows = Vec::new();
+                for r in a..b {
+                    rows.extend_from_slice(ds.row(r));
+                }
+                let local = DenseDataset::new(b - a, ds.d, rows);
+                assert_eq!(data_hash,
+                           wire::dataset_fingerprint(ds.n, a, &local));
             }
             other => panic!("unexpected {}", other.kind()),
         }
-        wire::encode_shutdown(&mut buf);
-        assert_eq!(raw_round_trip(&mut stream, &buf), Message::Ack);
+        // a mismatched version is rejected with a clean error
+        wire::encode_hello(&mut buf, 6, 999);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::Error { wave_id, msg } => {
+                assert_eq!(wave_id, 6);
+                assert!(msg.contains("version"), "got: {msg}");
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        wire::encode_shutdown(&mut buf, 7);
+        assert_eq!(raw_round_trip(&mut stream, &buf),
+                   Message::Ack { wave_id: 7 });
         assert!(srv.shutdown_requested());
     }
 
     #[test]
-    fn stats_op_reports_identity_range_and_connections() {
+    fn v1_clients_get_a_clean_legacy_version_error() {
+        let ds = synthetic::gaussian_iid(6, 4, 2);
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 1)
+            .unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        // a v1 Hello: bare opcode 1, no tag — exactly what a PR 3/4
+        // client would send
+        wire::write_frame(&mut stream, &[1u8]).unwrap();
+        let mut buf = Vec::new();
+        wire::read_frame(&mut stream, &mut buf).unwrap();
+        // the reply is v1-framed (op 8 | u32 len | msg) so the old
+        // client's decoder parses it as a clean Error
+        assert_eq!(buf[0], 8, "legacy error must use the v1 opcode");
+        let len =
+            u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize;
+        let msg = String::from_utf8_lossy(&buf[5..5 + len]);
+        assert!(msg.contains("version mismatch"), "got: {msg}");
+        // and the server closes the connection afterwards
+        assert!(wire::read_frame(&mut stream, &mut buf).is_err(),
+                "server must disconnect a v1 peer after the error");
+        drop(srv);
+    }
+
+    #[test]
+    fn client_rejects_v1_servers_with_a_version_error() {
+        // a fake v1 server: answers any frame with a v1-framed Error,
+        // which is what a real PR 4 server does for unknown opcodes
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            wire::read_frame(&mut s, &mut buf).unwrap();
+            let mut out = Vec::new();
+            wire::encode_legacy_error(&mut out, "bad frame: unknown \
+                                                 opcode 101");
+            wire::write_frame(&mut s, &out).unwrap();
+        });
+        let err = RemoteEngine::connect_with_timeout(
+            &[ep], Some(Duration::from_secs(5))).unwrap_err();
+        assert!(err.contains("version mismatch"), "got: {err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stats_op_reports_identity_range_hash_and_connections() {
         let ds = synthetic::gaussian_iid(10, 4, 8);
         let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 1, 3)
             .unwrap(); // owns rows [3, 6)
@@ -1097,6 +1839,14 @@ mod tests {
         assert_eq!((stats.n_total, stats.d), (10, 4));
         assert_eq!((stats.row_start, stats.row_end), (3, 6));
         assert!(stats.live_conns >= 1, "probe connection must be counted");
+        assert_ne!(stats.data_hash, 0);
+        // a replica serving the same slice reports the same fingerprint
+        let srv2 = ShardServer::start_shard_of("127.0.0.1:0", &ds, 1, 3)
+            .unwrap();
+        let stats2 = endpoint_stats(&srv2.endpoint(),
+                                    Some(Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(stats.data_hash, stats2.data_hash);
         // a dead endpoint reports an error, not a hang
         let dead = srv.endpoint();
         drop(srv);
@@ -1114,36 +1864,94 @@ mod tests {
         let q = vec![0.0f32; 6];
         let mut buf = Vec::new();
         // out-of-range row
-        wire::encode_partial_sums(&mut buf, Metric::L2Sq, &q, &[7], &[0]);
+        wire::encode_partial_sums(&mut buf, 11, Metric::L2Sq, &q, &[7],
+                                  &[0]);
         match raw_round_trip(&mut stream, &buf) {
-            Message::Error { msg } => assert!(msg.contains("row 7")),
+            Message::Error { wave_id, msg } => {
+                assert_eq!(wave_id, 11, "error must carry the wave tag");
+                assert!(msg.contains("row 7"));
+            }
             other => panic!("unexpected {}", other.kind()),
         }
         // wrong query dim
-        wire::encode_exact_dists(&mut buf, Metric::L1, &[1.0], &[0]);
+        wire::encode_exact_dists(&mut buf, 12, Metric::L1, &[1.0], &[0]);
         match raw_round_trip(&mut stream, &buf) {
-            Message::Error { msg } => assert!(msg.contains("dim")),
+            Message::Error { msg, .. } => assert!(msg.contains("dim")),
             other => panic!("unexpected {}", other.kind()),
         }
         // coordinate out of range
-        wire::encode_partial_sums(&mut buf, Metric::L1, &q, &[1], &[99]);
+        wire::encode_partial_sums(&mut buf, 13, Metric::L1, &q, &[1],
+                                  &[99]);
         match raw_round_trip(&mut stream, &buf) {
-            Message::Error { msg } => assert!(msg.contains("coordinate")),
+            Message::Error { msg, .. } => {
+                assert!(msg.contains("coordinate"))
+            }
             other => panic!("unexpected {}", other.kind()),
         }
-        // garbage payload: error reply, connection stays usable
+        // garbage payload (not a v1 opcode): error reply, connection
+        // stays usable
         match raw_round_trip(&mut stream, &[42, 1, 2]) {
-            Message::Error { msg } => assert!(msg.contains("bad frame")),
+            Message::Error { msg, .. } => {
+                assert!(msg.contains("bad frame"))
+            }
             other => panic!("unexpected {}", other.kind()),
         }
-        wire::encode_partial_sums(&mut buf, Metric::L1, &q, &[1], &[0]);
+        wire::encode_partial_sums(&mut buf, 14, Metric::L1, &q, &[1],
+                                  &[0]);
         match raw_round_trip(&mut stream, &buf) {
-            Message::Sums { sum, sq } => {
+            Message::Sums { wave_id, sum, sq } => {
+                assert_eq!(wave_id, 14);
                 assert_eq!(sum.len(), 1);
                 assert_eq!(sq.len(), 1);
             }
             other => panic!("unexpected {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn server_computes_tagged_waves_concurrently_and_out_of_order() {
+        // submit a LARGE wave then a tiny one on the same connection
+        // without reading; the tiny one finishes first, so the replies
+        // arrive out of submission order, routed by tag
+        let n = 192;
+        let d = 64;
+        let ds = synthetic::gaussian_iid(n, d, 33);
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 1)
+            .unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        let q = ds.row_vec(0);
+        let big_rows: Vec<u32> = (0..n as u32).cycle().take(64 * n)
+            .collect();
+        let big_coords: Vec<u32> = (0..d as u32).cycle().take(512)
+            .collect();
+        let mut big = Vec::new();
+        wire::encode_partial_sums(&mut big, 100, Metric::L2Sq, &q,
+                                  &big_rows, &big_coords);
+        let mut small = Vec::new();
+        wire::encode_partial_sums(&mut small, 101, Metric::L2Sq, &q,
+                                  &[3], &[0]);
+        wire::write_frame(&mut stream, &big).unwrap();
+        wire::write_frame(&mut stream, &small).unwrap();
+        let mut buf = Vec::new();
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..2 {
+            wire::read_frame(&mut stream, &mut buf).unwrap();
+            match Message::decode(&buf).unwrap() {
+                Message::Sums { wave_id, sum, .. } => {
+                    got.insert(wave_id, sum.len());
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        assert_eq!(got.get(&100), Some(&big_rows.len()));
+        assert_eq!(got.get(&101), Some(&1));
+        // the server witnessed >= 2 concurrent waves on one connection
+        let stats = endpoint_stats(&srv.endpoint(),
+                                   Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(stats.max_conn_waves >= 2,
+                "server saw max {} concurrent waves",
+                stats.max_conn_waves);
     }
 
     #[test]
@@ -1166,6 +1974,42 @@ mod tests {
         let err = RemoteEngine::connect(&eps).unwrap_err();
         assert!(err.contains("one dataset") || err.contains("partition"),
                 "got: {err}");
+    }
+
+    #[test]
+    fn divergent_replica_fingerprints_are_rejected() {
+        // two "replicas" of shard 0 of 1 serving the same shape but
+        // different bytes: the first connects, the second must be
+        // refused by the fingerprint check when failover reaches it
+        let ds_a = synthetic::gaussian_iid(8, 4, 11);
+        let ds_b = synthetic::gaussian_iid(8, 4, 12); // diverged content
+        let sa = ShardServer::start_shard_of("127.0.0.1:0", &ds_a, 0, 1)
+            .unwrap();
+        let sb = ShardServer::start_shard_of("127.0.0.1:0", &ds_b, 0, 1)
+            .unwrap();
+        let spec = vec![format!("{}|{}", sa.endpoint(), sb.endpoint())];
+        let mut eng = RemoteEngine::connect_with_timeout(
+            &spec, Some(Duration::from_secs(5))).unwrap();
+        // healthy primary: fine
+        let q = ds_a.row_vec(0);
+        let rows: Vec<u32> = (0..8).collect();
+        let (mut s, mut sq) = (Vec::new(), Vec::new());
+        eng.partial_sums(&ds_a, &q, &rows, &[0, 1], Metric::L2Sq, &mut s,
+                         &mut sq);
+        // kill the primary: failover reaches the divergent replica,
+        // whose handshake is refused — the wave fails with the
+        // fingerprint error rather than silently mixing datasets
+        drop(sa);
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let (mut s, mut sq) = (Vec::new(), Vec::new());
+                eng.partial_sums(&ds_a, &q, &rows, &[0, 1], Metric::L2Sq,
+                                 &mut s, &mut sq);
+            }))
+            .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("fingerprint"), "got: {msg}");
+        drop(sb);
     }
 
     #[test]
@@ -1198,11 +2042,12 @@ mod tests {
         // degraded connect with only dead endpoints still fails: the
         // dataset shape cannot be learned from nothing
         let all_dead = vec![dead.clone(), dead];
-        let err = RemoteEngine::connect_opts(
+        let err = RingClient::connect_opts(
             &PlacementMap::parse(&all_dead).unwrap(),
             RemoteOptions { timeout: Some(Duration::from_millis(500)),
                             degraded: true,
                             ..RemoteOptions::default() })
+            .map(|_| ())
             .unwrap_err();
         assert!(err.contains("reachable"), "got: {err}");
         drop(ring);
@@ -1216,6 +2061,7 @@ mod tests {
         assert_eq!(eng.shape(), (8, 4));
         assert_eq!(eng.n_shards(), 2);
         assert_eq!(eng.name(), "remote");
+        assert!(eng.pipelined());
         assert_eq!(eng.coverage(), None, "degraded off: never degraded");
         let wrong = synthetic::gaussian_iid(9, 4, 6);
         let q = wrong.row_vec(0);
@@ -1228,5 +2074,56 @@ mod tests {
             .unwrap_err();
         let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
         assert!(msg.contains("same dataset"), "got: {msg}");
+    }
+
+    #[test]
+    fn shared_client_multiplexes_concurrent_waves_on_one_connection() {
+        // two waves submitted before either completes: both pending on
+        // the same per-shard connection, completed in reverse order,
+        // bitwise identical to the solo engine
+        let ds = synthetic::gaussian_iid(24, 16, 44);
+        let (_ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
+        let client = Arc::new(RingClient::connect(&eps).unwrap());
+        let mut eng = RemoteEngine::from_client(client.clone());
+        let q1 = ds.row_vec(0);
+        let q2 = ds.row_vec(1);
+        // wave 1 is large (many repeated rows x many coords) so its
+        // server-side compute comfortably outlasts the microseconds it
+        // takes to submit wave 2 — the two are then reliably pending on
+        // the same connection at once
+        let rows: Vec<u32> =
+            (0..24u32).cycle().take(24 * 256).collect();
+        let coords: Vec<u32> =
+            (0..16u32).cycle().take(512).collect();
+        let t1 = eng.submit_partial_sums(&ds, &q1, &rows, &coords,
+                                         Metric::L2Sq);
+        let t2 = eng.submit_partial_sums(&ds, &q2, &rows, &coords,
+                                         Metric::L1);
+        // both waves are on the wire now — complete in reverse order
+        let (mut s2, mut sq2) = (Vec::new(), Vec::new());
+        eng.complete_sums(t2, &mut s2, &mut sq2);
+        let (mut s1, mut sq1) = (Vec::new(), Vec::new());
+        eng.complete_sums(t1, &mut s1, &mut sq1);
+        let mut solo = NativeEngine::default();
+        let (mut w1, mut wq1) = (Vec::new(), Vec::new());
+        let (mut w2, mut wq2) = (Vec::new(), Vec::new());
+        solo.partial_sums(&ds, &q1, &rows, &coords, Metric::L2Sq, &mut w1,
+                          &mut wq1);
+        solo.partial_sums(&ds, &q2, &rows, &coords, Metric::L1, &mut w2,
+                          &mut wq2);
+        assert_eq!(s1, w1);
+        assert_eq!(sq1, wq1);
+        assert_eq!(s2, w2);
+        assert_eq!(sq2, wq2);
+        assert!(client.max_inflight_per_conn() >= 2,
+                "two submitted waves must overlap on one connection \
+                 (high-water {})", client.max_inflight_per_conn());
+        // a second engine over the same client shares the connections
+        let mut eng2 = RemoteEngine::from_client(client.clone());
+        let mut d1 = Vec::new();
+        eng2.exact_dists(&ds, &q1, &rows, Metric::L2Sq, &mut d1);
+        let mut w = Vec::new();
+        solo.exact_dists(&ds, &q1, &rows, Metric::L2Sq, &mut w);
+        assert_eq!(d1, w);
     }
 }

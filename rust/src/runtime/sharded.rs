@@ -447,4 +447,40 @@ mod tests {
         let e = ShardedEngine::new(NativeEngine::default(), 0);
         assert_eq!(e.n_shards(), 1);
     }
+
+    #[test]
+    fn submit_complete_tickets_ride_the_pooled_path_bitwise() {
+        // the split API over the sharded engine: the default submit
+        // resolves through the pooled pull_batch, so a >threshold wave
+        // crosses the dispatch path and must still match the
+        // single-threaded engine exactly, with out-of-order completion
+        let n = 64;
+        let d = 128;
+        let ds = synthetic::gaussian_iid(n, d, 19);
+        let mut rng = Rng::new(20);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+        let rows: Vec<u32> =
+            (0..8 * n as u32).map(|i| i % n as u32).collect();
+        let coords: Vec<u32> =
+            (0..512).map(|_| rng.below(d) as u32).collect();
+        assert!(rows.len() * coords.len() >= MIN_PARALLEL_OPS);
+        let mut sharded = ShardedEngine::new(NativeEngine::default(), 3);
+        assert!(!sharded.pipelined(), "pool waves resolve at submit");
+        let t1 = sharded.submit_partial_sums(&ds, &q, &rows, &coords,
+                                             Metric::L2Sq);
+        let t2 = sharded.submit_exact_dists(&ds, &q, &rows, Metric::L1);
+        let mut d2 = Vec::new();
+        sharded.complete_dists(t2, &mut d2);
+        let (mut s1, mut q1) = (Vec::new(), Vec::new());
+        sharded.complete_sums(t1, &mut s1, &mut q1);
+        let mut solo = NativeEngine::default();
+        let (mut ws, mut wq) = (Vec::new(), Vec::new());
+        solo.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut ws,
+                          &mut wq);
+        assert_eq!(s1, ws);
+        assert_eq!(q1, wq);
+        let mut wd = Vec::new();
+        solo.exact_dists(&ds, &q, &rows, Metric::L1, &mut wd);
+        assert_eq!(d2, wd);
+    }
 }

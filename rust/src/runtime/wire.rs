@@ -1,41 +1,62 @@
-//! Length-prefixed binary wire protocol for network-distributed pull
-//! execution (`runtime::remote`).
+//! Length-prefixed binary wire protocol, **version 2**: every frame is
+//! tagged with a `wave_id`, which is what lets one connection carry many
+//! concurrent waves (`runtime::remote::RingClient` multiplexes sub-waves
+//! from many callers onto one connection per shard and demultiplexes the
+//! replies by tag — replies may arrive in any order).
 //!
 //! Framing: every message travels as `u32 payload_len (LE) | payload`,
-//! where `payload[0]` is an opcode byte and the rest is a fixed-layout
-//! little-endian body. [`read_frame`] rejects frames whose declared
-//! length exceeds [`MAX_FRAME`] *before* allocating, and
-//! [`Message::decode`] rejects truncated payloads, trailing garbage,
-//! unknown opcodes and bad metric codes with an `Err` — never a panic
-//! (property-tested below: every strict prefix of a valid payload fails
-//! to decode).
+//! where `payload[0]` is an opcode byte, `payload[1..9]` is the frame's
+//! little-endian `u64` **wave id**, and the rest is a fixed-layout
+//! little-endian body. A reply carries the wave id of the request it
+//! answers. [`read_frame`] rejects frames whose declared length exceeds
+//! [`MAX_FRAME`] *before* allocating, and [`Message::decode`] rejects
+//! truncated payloads, trailing garbage, unknown opcodes and bad metric
+//! codes with an `Err` — never a panic (property-tested below: every
+//! strict prefix of a valid payload fails to decode).
+//!
+//! **Version negotiation.** v1 (PR 3/4) frames were untagged and used
+//! opcodes 1–12; v2 frames use opcodes 101–112 and begin with the wave
+//! tag. A v2 decoder recognizes a v1 opcode and rejects it with a clean
+//! *version* error ([`Message::decode`], [`is_legacy_frame`]); a v2
+//! server answers a v1 frame with a **v1-framed** `Error`
+//! ([`encode_legacy_error`]) so an old client reads a clean protocol
+//! error instead of hanging or crashing on bytes it cannot parse. A v2
+//! client talking to a v1 server receives a v1 `Error { "unknown opcode
+//! …" }` reply, which its decoder likewise reports as a version
+//! mismatch. The `Hello`/`HelloAck` handshake additionally carries an
+//! explicit [`PROTOCOL_VERSION`] so future revisions can negotiate past
+//! the opcode split.
 //!
 //! Requests (coordinator → shard server):
-//! * `Hello` — handshake; the server answers [`Message::HelloAck`] with
-//!   the global dataset shape and the row range it owns, which lets the
-//!   client prove the ring tiles the dataset with the same floor-boundary
-//!   partition the in-process sharded engine uses
-//!   (`runtime::partition::shard_range`).
-//! * `Stats` — the health op: like `Hello` it carries no body and may be
-//!   sent at any point on a connection. The server answers
-//!   [`Message::StatsReply`] with its shard identity (`shard` of `of`),
-//!   dataset shape, owned row range and live-connection count, so a
-//!   coordinator can discover how a ring is laid out (and size
-//!   `--remote` accordingly) by probing endpoints — see the
+//! * `Hello` — handshake; carries the client's protocol version. The
+//!   server answers [`Message::HelloAck`] with its version, the global
+//!   dataset shape, the row range it owns and its **dataset
+//!   fingerprint** ([`dataset_fingerprint`]), which lets the client
+//!   prove the ring tiles the dataset with the same floor-boundary
+//!   partition the in-process sharded engine uses and that every
+//!   replica of a shard serves identical bytes.
+//! * `Stats` — the health op: may be sent at any point on a connection.
+//!   The server answers [`Message::StatsReply`] with its shard identity
+//!   (`shard` of `of`), dataset shape, owned row range,
+//!   live-connection count, dataset fingerprint and the high-water mark
+//!   of concurrent waves it has served on one connection — see the
 //!   `bmonn ring-stats` subcommand.
-//! * `PartialSums` / `ExactDists` / `PullBatch` — one engine wave, rows
-//!   given as **global** ids; the server rebases them onto its local
-//!   row range and rejects anything outside it.
+//! * `PartialSums` / `ExactDists` / `PullBatch` — one engine sub-wave,
+//!   rows given as **global** ids; the server rebases them onto its
+//!   local row range and rejects anything outside it. A server may
+//!   compute several tagged waves of one connection concurrently and
+//!   answer them out of submission order.
 //! * `Shutdown` — acked with [`Message::Ack`], then the server exits.
 //!
 //! Replies (shard server → coordinator): `HelloAck`, `StatsReply`,
 //! `Sums { sum, sq }` (for `PartialSums` and `PullBatch`, concatenated
-//! request-major), `Dists { vals }`, `Error { msg }`, `Ack`.
+//! request-major), `Dists { vals }`, `Error { msg }`, `Ack` — each
+//! tagged with the request's wave id.
 //!
 //! An `Error` reply is also a failover trigger: the replicated client
-//! (`runtime::remote::RemoteEngine`) re-issues the sub-wave to the
-//! shard's next live replica (without blacklisting the answering
-//! server — its connection is healthy, only the request failed).
+//! re-issues the sub-wave to the shard's next live replica (without
+//! blacklisting the answering server — its connection is healthy, only
+//! the request failed).
 //!
 //! All floats cross the wire via `to_le_bytes`/`from_le_bytes`, i.e. by
 //! exact bit pattern — the transport can never perturb the bitwise
@@ -49,25 +70,34 @@
 use std::io::{self, Read, Write};
 
 use crate::coordinator::arms::PullRequest;
-use crate::data::dense::Metric;
+use crate::data::dense::{DenseDataset, Metric};
+
+/// Wire protocol revision this build speaks. v1 frames (untagged,
+/// opcodes 1–12) are recognized and rejected with a clean version error.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Hard cap on a single frame's payload (1 GiB). A real wave is far
 /// smaller (a 4M-job reply is ~64 MiB); a length header beyond this is a
 /// corrupt or hostile stream and is rejected before any allocation.
 pub const MAX_FRAME: usize = 1 << 30;
 
-const OP_HELLO: u8 = 1;
-const OP_HELLO_ACK: u8 = 2;
-const OP_PARTIAL_SUMS: u8 = 3;
-const OP_EXACT_DISTS: u8 = 4;
-const OP_PULL_BATCH: u8 = 5;
-const OP_SUMS: u8 = 6;
-const OP_DISTS: u8 = 7;
-const OP_ERROR: u8 = 8;
-const OP_SHUTDOWN: u8 = 9;
-const OP_ACK: u8 = 10;
-const OP_STATS: u8 = 11;
-const OP_STATS_REPLY: u8 = 12;
+// v1 opcode range — recognized only to produce clean version errors.
+const V1_OP_MIN: u8 = 1;
+const V1_OP_MAX: u8 = 12;
+const V1_OP_ERROR: u8 = 8;
+
+const OP_HELLO: u8 = 101;
+const OP_HELLO_ACK: u8 = 102;
+const OP_PARTIAL_SUMS: u8 = 103;
+const OP_EXACT_DISTS: u8 = 104;
+const OP_PULL_BATCH: u8 = 105;
+const OP_SUMS: u8 = 106;
+const OP_DISTS: u8 = 107;
+const OP_ERROR: u8 = 108;
+const OP_SHUTDOWN: u8 = 109;
+const OP_ACK: u8 = 110;
+const OP_STATS: u8 = 111;
+const OP_STATS_REPLY: u8 = 112;
 
 fn metric_code(m: Metric) -> u8 {
     match m {
@@ -82,6 +112,57 @@ fn metric_from(code: u8) -> Result<Metric, String> {
         1 => Ok(Metric::L1),
         x => Err(format!("bad metric code {x}")),
     }
+}
+
+/// True when `payload` begins with a v1 (untagged) opcode — an
+/// old-version peer. A v2 server answers such a frame with
+/// [`encode_legacy_error`] so the old client reads a clean protocol
+/// error in a format it can parse.
+pub fn is_legacy_frame(payload: &[u8]) -> bool {
+    payload
+        .first()
+        .is_some_and(|&op| (V1_OP_MIN..=V1_OP_MAX).contains(&op))
+}
+
+/// Best-effort wave id of a frame whose body failed to decode: the tag
+/// occupies fixed bytes `[1, 9)`, so it usually survives body
+/// corruption. Returns 0 when the frame is too short to carry one.
+pub fn peek_wave_id(payload: &[u8]) -> u64 {
+    if payload.len() >= 9 {
+        u64::from_le_bytes(payload[1..9].try_into().unwrap())
+    } else {
+        0
+    }
+}
+
+/// FNV-1a 64 fingerprint of the dataset content a shard server holds:
+/// global shape, owned row range, and the exact f32 bit pattern of every
+/// local row. Replicas of one shard must agree on it (they serve the
+/// same rows of the same dataset); different shards of one ring
+/// legitimately differ (they hold different rows). Carried in
+/// `HelloAck`/`StatsReply`; the ring client refuses a replica whose
+/// fingerprint diverges from its shard-mates', and `bmonn ring-stats`
+/// reports divergence with a nonzero exit.
+pub fn dataset_fingerprint(n_total: usize, row_start: usize,
+                           local: &DenseDataset) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut eat = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    eat(n_total as u64);
+    eat(local.d as u64);
+    eat(row_start as u64);
+    eat(local.n as u64);
+    for &v in local.raw() {
+        h ^= v.to_bits() as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
 }
 
 // ---------------------------------------------------------------------
@@ -119,37 +200,48 @@ fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
     }
 }
 
-/// Encode a `Hello` handshake request (no body).
-pub fn encode_hello(out: &mut Vec<u8>) {
+fn put_head(out: &mut Vec<u8>, op: u8, wave_id: u64) {
     out.clear();
-    out.push(OP_HELLO);
+    out.push(op);
+    put_u64(out, wave_id);
 }
 
-/// Encode the `HelloAck` handshake reply: global dataset shape plus the
-/// row range `[row_start, row_end)` this server owns.
-pub fn encode_hello_ack(out: &mut Vec<u8>, n_total: u64, d: u64,
-                        row_start: u64, row_end: u64) {
-    out.clear();
-    out.push(OP_HELLO_ACK);
+/// Encode a `Hello` handshake request carrying the client's protocol
+/// version.
+pub fn encode_hello(out: &mut Vec<u8>, wave_id: u64, version: u32) {
+    put_head(out, OP_HELLO, wave_id);
+    put_u32(out, version);
+}
+
+/// Encode the `HelloAck` handshake reply: server protocol version,
+/// global dataset shape, the owned row range `[row_start, row_end)` and
+/// the server's dataset fingerprint.
+pub fn encode_hello_ack(out: &mut Vec<u8>, wave_id: u64, version: u32,
+                        n_total: u64, d: u64, row_start: u64, row_end: u64,
+                        data_hash: u64) {
+    put_head(out, OP_HELLO_ACK, wave_id);
+    put_u32(out, version);
     put_u64(out, n_total);
     put_u64(out, d);
     put_u64(out, row_start);
     put_u64(out, row_end);
+    put_u64(out, data_hash);
 }
 
-/// Encode a `Stats` health request (no body).
-pub fn encode_stats(out: &mut Vec<u8>) {
-    out.clear();
-    out.push(OP_STATS);
+/// Encode a `Stats` health request (no body beyond the tag).
+pub fn encode_stats(out: &mut Vec<u8>, wave_id: u64) {
+    put_head(out, OP_STATS, wave_id);
 }
 
 /// Encode a `StatsReply`: shard identity (`shard` of `of`), dataset
-/// shape, owned row range, and the server's live-connection count.
-pub fn encode_stats_reply(out: &mut Vec<u8>, shard: u64, of: u64,
-                          n_total: u64, d: u64, row_start: u64,
-                          row_end: u64, live_conns: u64) {
-    out.clear();
-    out.push(OP_STATS_REPLY);
+/// shape, owned row range, the server's live-connection count, its
+/// dataset fingerprint, and the high-water mark of concurrent waves it
+/// has computed on a single connection.
+pub fn encode_stats_reply(out: &mut Vec<u8>, wave_id: u64, shard: u64,
+                          of: u64, n_total: u64, d: u64, row_start: u64,
+                          row_end: u64, live_conns: u64, data_hash: u64,
+                          max_conn_waves: u64) {
+    put_head(out, OP_STATS_REPLY, wave_id);
     put_u64(out, shard);
     put_u64(out, of);
     put_u64(out, n_total);
@@ -157,15 +249,16 @@ pub fn encode_stats_reply(out: &mut Vec<u8>, shard: u64, of: u64,
     put_u64(out, row_start);
     put_u64(out, row_end);
     put_u64(out, live_conns);
+    put_u64(out, data_hash);
+    put_u64(out, max_conn_waves);
 }
 
 /// Encode a `PartialSums` wave request from borrowed slices (rows are
 /// global ids).
-pub fn encode_partial_sums(out: &mut Vec<u8>, metric: Metric,
+pub fn encode_partial_sums(out: &mut Vec<u8>, wave_id: u64, metric: Metric,
                            query: &[f32], rows: &[u32],
                            coord_ids: &[u32]) {
-    out.clear();
-    out.push(OP_PARTIAL_SUMS);
+    put_head(out, OP_PARTIAL_SUMS, wave_id);
     out.push(metric_code(metric));
     put_f32s(out, query);
     put_u32s(out, rows);
@@ -173,10 +266,9 @@ pub fn encode_partial_sums(out: &mut Vec<u8>, metric: Metric,
 }
 
 /// Encode an `ExactDists` wave request from borrowed slices.
-pub fn encode_exact_dists(out: &mut Vec<u8>, metric: Metric, query: &[f32],
-                          rows: &[u32]) {
-    out.clear();
-    out.push(OP_EXACT_DISTS);
+pub fn encode_exact_dists(out: &mut Vec<u8>, wave_id: u64, metric: Metric,
+                          query: &[f32], rows: &[u32]) {
+    put_head(out, OP_EXACT_DISTS, wave_id);
     out.push(metric_code(metric));
     put_f32s(out, query);
     put_u32s(out, rows);
@@ -185,10 +277,9 @@ pub fn encode_exact_dists(out: &mut Vec<u8>, metric: Metric, query: &[f32],
 /// Encode a `PullBatch` wave request straight from the coordinator's
 /// borrowed [`PullRequest`] views (the hot path never copies a wave into
 /// an owned message first).
-pub fn encode_pull_batch(out: &mut Vec<u8>, metric: Metric,
+pub fn encode_pull_batch(out: &mut Vec<u8>, wave_id: u64, metric: Metric,
                          reqs: &[PullRequest<'_>]) {
-    out.clear();
-    out.push(OP_PULL_BATCH);
+    put_head(out, OP_PULL_BATCH, wave_id);
     out.push(metric_code(metric));
     put_u32(out, reqs.len() as u32);
     for r in reqs {
@@ -199,10 +290,10 @@ pub fn encode_pull_batch(out: &mut Vec<u8>, metric: Metric,
 }
 
 /// `sum` and `sq` must have equal length (one shared count on the wire).
-pub fn encode_sums(out: &mut Vec<u8>, sum: &[f64], sq: &[f64]) {
+pub fn encode_sums(out: &mut Vec<u8>, wave_id: u64, sum: &[f64],
+                   sq: &[f64]) {
     assert_eq!(sum.len(), sq.len());
-    out.clear();
-    out.push(OP_SUMS);
+    put_head(out, OP_SUMS, wave_id);
     put_u32(out, sum.len() as u32);
     for &x in sum {
         out.extend_from_slice(&x.to_le_bytes());
@@ -213,31 +304,39 @@ pub fn encode_sums(out: &mut Vec<u8>, sum: &[f64], sq: &[f64]) {
 }
 
 /// Encode a `Dists` reply (exact distances, one per requested row).
-pub fn encode_dists(out: &mut Vec<u8>, vals: &[f64]) {
-    out.clear();
-    out.push(OP_DISTS);
+pub fn encode_dists(out: &mut Vec<u8>, wave_id: u64, vals: &[f64]) {
+    put_head(out, OP_DISTS, wave_id);
     put_f64s(out, vals);
 }
 
 /// Encode an `Error` reply carrying a human-readable message.
-pub fn encode_error(out: &mut Vec<u8>, msg: &str) {
+pub fn encode_error(out: &mut Vec<u8>, wave_id: u64, msg: &str) {
+    put_head(out, OP_ERROR, wave_id);
+    let bytes = msg.as_bytes();
+    put_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+/// Encode an `Error` in the **v1** layout (`op 8 | u32 len | bytes`) —
+/// the one frame a v2 server still emits in the old format, so a
+/// v1 client probing it reads a clean version-mismatch message instead
+/// of bytes it cannot parse.
+pub fn encode_legacy_error(out: &mut Vec<u8>, msg: &str) {
     out.clear();
-    out.push(OP_ERROR);
+    out.push(V1_OP_ERROR);
     let bytes = msg.as_bytes();
     put_u32(out, bytes.len() as u32);
     out.extend_from_slice(bytes);
 }
 
 /// Encode a `Shutdown` request (no body); the server acks, then exits.
-pub fn encode_shutdown(out: &mut Vec<u8>) {
-    out.clear();
-    out.push(OP_SHUTDOWN);
+pub fn encode_shutdown(out: &mut Vec<u8>, wave_id: u64) {
+    put_head(out, OP_SHUTDOWN, wave_id);
 }
 
 /// Encode an `Ack` reply (no body).
-pub fn encode_ack(out: &mut Vec<u8>) {
-    out.clear();
-    out.push(OP_ACK);
+pub fn encode_ack(out: &mut Vec<u8>, wave_id: u64) {
+    put_head(out, OP_ACK, wave_id);
 }
 
 // ---------------------------------------------------------------------
@@ -257,40 +356,58 @@ pub struct WireRequest {
 
 /// A decoded wire message (owned). Clients encode straight from borrowed
 /// slices via the `encode_*` helpers; `Message::encode` delegates to the
-/// same helpers so there is exactly one byte layout.
+/// same helpers so there is exactly one byte layout. Every variant
+/// carries the frame's `wave_id` tag.
 #[derive(Clone, Debug, PartialEq)]
 #[allow(missing_docs)] // variant payloads are specified by the encoders
 pub enum Message {
-    /// Handshake request (no body).
-    Hello,
-    /// Handshake reply: dataset shape + owned row range.
-    HelloAck { n_total: u64, d: u64, row_start: u64, row_end: u64 },
+    /// Handshake request: the client's protocol version.
+    Hello { wave_id: u64, version: u32 },
+    /// Handshake reply: server version, dataset shape, owned row range,
+    /// dataset fingerprint.
+    HelloAck {
+        wave_id: u64,
+        version: u32,
+        n_total: u64,
+        d: u64,
+        row_start: u64,
+        row_end: u64,
+        data_hash: u64,
+    },
     /// Single-query partial-moment wave (global row ids).
     PartialSums {
+        wave_id: u64,
         metric: Metric,
         query: Vec<f32>,
         rows: Vec<u32>,
         coord_ids: Vec<u32>,
     },
     /// Exact-distance wave (global row ids).
-    ExactDists { metric: Metric, query: Vec<f32>, rows: Vec<u32> },
+    ExactDists {
+        wave_id: u64,
+        metric: Metric,
+        query: Vec<f32>,
+        rows: Vec<u32>,
+    },
     /// Coalesced multi-query wave.
-    PullBatch { metric: Metric, reqs: Vec<WireRequest> },
+    PullBatch { wave_id: u64, metric: Metric, reqs: Vec<WireRequest> },
     /// Reply to `PartialSums` / `PullBatch`: per-job (Σx, Σx²),
     /// concatenated request-major.
-    Sums { sum: Vec<f64>, sq: Vec<f64> },
+    Sums { wave_id: u64, sum: Vec<f64>, sq: Vec<f64> },
     /// Reply to `ExactDists`: one distance per requested row.
-    Dists { vals: Vec<f64> },
+    Dists { wave_id: u64, vals: Vec<f64> },
     /// Failure reply — also the client's failover trigger.
-    Error { msg: String },
+    Error { wave_id: u64, msg: String },
     /// Stop-serving request (no body); acked, then the server exits.
-    Shutdown,
+    Shutdown { wave_id: u64 },
     /// Generic acknowledgement (no body).
-    Ack,
+    Ack { wave_id: u64 },
     /// Health request (no body).
-    Stats,
-    /// Health reply: shard identity, shape, row range, connection count.
+    Stats { wave_id: u64 },
+    /// Health reply: shard identity, shape, row range, connection
+    /// count, dataset fingerprint, per-connection wave high-water mark.
     StatsReply {
+        wave_id: u64,
         shard: u64,
         of: u64,
         n_total: u64,
@@ -298,6 +415,8 @@ pub enum Message {
         row_start: u64,
         row_end: u64,
         live_conns: u64,
+        data_hash: u64,
+        max_conn_waves: u64,
     },
 }
 
@@ -378,7 +497,7 @@ impl Message {
     /// Short tag for diagnostics (no payload dump).
     pub fn kind(&self) -> &'static str {
         match self {
-            Message::Hello => "hello",
+            Message::Hello { .. } => "hello",
             Message::HelloAck { .. } => "hello_ack",
             Message::PartialSums { .. } => "partial_sums",
             Message::ExactDists { .. } => "exact_dists",
@@ -386,10 +505,29 @@ impl Message {
             Message::Sums { .. } => "sums",
             Message::Dists { .. } => "dists",
             Message::Error { .. } => "error",
-            Message::Shutdown => "shutdown",
-            Message::Ack => "ack",
-            Message::Stats => "stats",
+            Message::Shutdown { .. } => "shutdown",
+            Message::Ack { .. } => "ack",
+            Message::Stats { .. } => "stats",
             Message::StatsReply { .. } => "stats_reply",
+        }
+    }
+
+    /// The frame's wave tag — what the demultiplexing reader routes
+    /// replies by.
+    pub fn wave_id(&self) -> u64 {
+        match self {
+            Message::Hello { wave_id, .. }
+            | Message::HelloAck { wave_id, .. }
+            | Message::PartialSums { wave_id, .. }
+            | Message::ExactDists { wave_id, .. }
+            | Message::PullBatch { wave_id, .. }
+            | Message::Sums { wave_id, .. }
+            | Message::Dists { wave_id, .. }
+            | Message::Error { wave_id, .. }
+            | Message::Shutdown { wave_id }
+            | Message::Ack { wave_id }
+            | Message::Stats { wave_id }
+            | Message::StatsReply { wave_id, .. } => *wave_id,
         }
     }
 
@@ -397,17 +535,22 @@ impl Message {
     /// `encode_*` helpers so both paths share one layout.
     pub fn encode(&self, out: &mut Vec<u8>) {
         match self {
-            Message::Hello => encode_hello(out),
-            Message::HelloAck { n_total, d, row_start, row_end } => {
-                encode_hello_ack(out, *n_total, *d, *row_start, *row_end)
+            Message::Hello { wave_id, version } => {
+                encode_hello(out, *wave_id, *version)
             }
-            Message::PartialSums { metric, query, rows, coord_ids } => {
-                encode_partial_sums(out, *metric, query, rows, coord_ids)
+            Message::HelloAck {
+                wave_id, version, n_total, d, row_start, row_end, data_hash,
+            } => encode_hello_ack(out, *wave_id, *version, *n_total, *d,
+                                  *row_start, *row_end, *data_hash),
+            Message::PartialSums { wave_id, metric, query, rows,
+                                   coord_ids } => {
+                encode_partial_sums(out, *wave_id, *metric, query, rows,
+                                    coord_ids)
             }
-            Message::ExactDists { metric, query, rows } => {
-                encode_exact_dists(out, *metric, query, rows)
+            Message::ExactDists { wave_id, metric, query, rows } => {
+                encode_exact_dists(out, *wave_id, *metric, query, rows)
             }
-            Message::PullBatch { metric, reqs } => {
+            Message::PullBatch { wave_id, metric, reqs } => {
                 let views: Vec<PullRequest> = reqs
                     .iter()
                     .map(|r| PullRequest {
@@ -416,37 +559,59 @@ impl Message {
                         coord_ids: &r.coord_ids,
                     })
                     .collect();
-                encode_pull_batch(out, *metric, &views);
+                encode_pull_batch(out, *wave_id, *metric, &views);
             }
-            Message::Sums { sum, sq } => encode_sums(out, sum, sq),
-            Message::Dists { vals } => encode_dists(out, vals),
-            Message::Error { msg } => encode_error(out, msg),
-            Message::Shutdown => encode_shutdown(out),
-            Message::Ack => encode_ack(out),
-            Message::Stats => encode_stats(out),
+            Message::Sums { wave_id, sum, sq } => {
+                encode_sums(out, *wave_id, sum, sq)
+            }
+            Message::Dists { wave_id, vals } => {
+                encode_dists(out, *wave_id, vals)
+            }
+            Message::Error { wave_id, msg } => {
+                encode_error(out, *wave_id, msg)
+            }
+            Message::Shutdown { wave_id } => encode_shutdown(out, *wave_id),
+            Message::Ack { wave_id } => encode_ack(out, *wave_id),
+            Message::Stats { wave_id } => encode_stats(out, *wave_id),
             Message::StatsReply {
-                shard, of, n_total, d, row_start, row_end, live_conns,
-            } => encode_stats_reply(out, *shard, *of, *n_total, *d,
-                                    *row_start, *row_end, *live_conns),
+                wave_id, shard, of, n_total, d, row_start, row_end,
+                live_conns, data_hash, max_conn_waves,
+            } => encode_stats_reply(out, *wave_id, *shard, *of, *n_total,
+                                    *d, *row_start, *row_end, *live_conns,
+                                    *data_hash, *max_conn_waves),
         }
     }
 
     /// Decode one payload. Rejects truncation, trailing bytes, unknown
-    /// opcodes and bad metric codes; never panics on malformed input.
+    /// opcodes, bad metric codes and v1 (untagged) frames — the latter
+    /// with an explicit version-mismatch error; never panics on
+    /// malformed input.
     pub fn decode(payload: &[u8]) -> Result<Message, String> {
         let mut c = Cur { b: payload, pos: 0 };
         let op = c.u8().map_err(|_| "empty frame".to_string())?;
+        if (V1_OP_MIN..=V1_OP_MAX).contains(&op) {
+            return Err(format!(
+                "protocol version mismatch: peer sent a v1 (untagged) \
+                 frame, opcode {op}; this build speaks wire protocol \
+                 v{PROTOCOL_VERSION} (wave-tagged frames) — upgrade the \
+                 peer"));
+        }
+        let wave_id = c.u64()?;
         let msg = match op {
-            OP_HELLO => Message::Hello,
+            OP_HELLO => Message::Hello { wave_id, version: c.u32()? },
             OP_HELLO_ACK => Message::HelloAck {
+                wave_id,
+                version: c.u32()?,
                 n_total: c.u64()?,
                 d: c.u64()?,
                 row_start: c.u64()?,
                 row_end: c.u64()?,
+                data_hash: c.u64()?,
             },
             OP_PARTIAL_SUMS => {
                 let metric = metric_from(c.u8()?)?;
                 Message::PartialSums {
+                    wave_id,
                     metric,
                     query: c.f32s()?,
                     rows: c.u32s()?,
@@ -456,6 +621,7 @@ impl Message {
             OP_EXACT_DISTS => {
                 let metric = metric_from(c.u8()?)?;
                 Message::ExactDists {
+                    wave_id,
                     metric,
                     query: c.f32s()?,
                     rows: c.u32s()?,
@@ -480,26 +646,28 @@ impl Message {
                         coord_ids: c.u32s()?,
                     });
                 }
-                Message::PullBatch { metric, reqs }
+                Message::PullBatch { wave_id, metric, reqs }
             }
             OP_SUMS => {
                 let n = c.u32()? as usize;
                 let sum = c.f64s_n(n)?;
                 let sq = c.f64s_n(n)?;
-                Message::Sums { sum, sq }
+                Message::Sums { wave_id, sum, sq }
             }
-            OP_DISTS => Message::Dists { vals: c.f64s()? },
+            OP_DISTS => Message::Dists { wave_id, vals: c.f64s()? },
             OP_ERROR => {
                 let n = c.u32()? as usize;
                 let bytes = c.take(n)?;
                 Message::Error {
+                    wave_id,
                     msg: String::from_utf8_lossy(bytes).into_owned(),
                 }
             }
-            OP_SHUTDOWN => Message::Shutdown,
-            OP_ACK => Message::Ack,
-            OP_STATS => Message::Stats,
+            OP_SHUTDOWN => Message::Shutdown { wave_id },
+            OP_ACK => Message::Ack { wave_id },
+            OP_STATS => Message::Stats { wave_id },
             OP_STATS_REPLY => Message::StatsReply {
+                wave_id,
                 shard: c.u64()?,
                 of: c.u64()?,
                 n_total: c.u64()?,
@@ -507,6 +675,8 @@ impl Message {
                 row_start: c.u64()?,
                 row_end: c.u64()?,
                 live_conns: c.u64()?,
+                data_hash: c.u64()?,
+                max_conn_waves: c.u64()?,
             },
             x => return Err(format!("unknown opcode {x}")),
         };
@@ -582,9 +752,11 @@ mod tests {
     }
 
     fn arb_msg(rng: &mut Rng) -> Message {
+        let wave_id = rng.next_u64();
         match rng.below(12) {
-            10 => Message::Stats,
+            10 => Message::Stats { wave_id },
             11 => Message::StatsReply {
+                wave_id,
                 shard: rng.next_u64(),
                 of: rng.next_u64(),
                 n_total: rng.next_u64(),
@@ -592,21 +764,29 @@ mod tests {
                 row_start: rng.next_u64(),
                 row_end: rng.next_u64(),
                 live_conns: rng.next_u64(),
+                data_hash: rng.next_u64(),
+                max_conn_waves: rng.next_u64(),
             },
-            0 => Message::Hello,
+            0 => Message::Hello { wave_id,
+                                  version: rng.below(1 << 30) as u32 },
             1 => Message::HelloAck {
+                wave_id,
+                version: rng.below(1 << 30) as u32,
                 n_total: rng.next_u64(),
                 d: rng.next_u64(),
                 row_start: rng.next_u64(),
                 row_end: rng.next_u64(),
+                data_hash: rng.next_u64(),
             },
             2 => Message::PartialSums {
+                wave_id,
                 metric: arb_metric(rng),
                 query: arb_f32s(rng),
                 rows: arb_u32s(rng),
                 coord_ids: arb_u32s(rng),
             },
             3 => Message::ExactDists {
+                wave_id,
                 metric: arb_metric(rng),
                 query: arb_f32s(rng),
                 rows: arb_u32s(rng),
@@ -614,6 +794,7 @@ mod tests {
             4 => {
                 let n = rng.below(5); // empty waves included
                 Message::PullBatch {
+                    wave_id,
                     metric: arb_metric(rng),
                     reqs: (0..n)
                         .map(|_| WireRequest {
@@ -627,19 +808,21 @@ mod tests {
             5 => {
                 let n = rng.below(16);
                 Message::Sums {
+                    wave_id,
                     sum: arb_f64s(rng, n),
                     sq: arb_f64s(rng, n),
                 }
             }
             6 => {
                 let n = rng.below(16);
-                Message::Dists { vals: arb_f64s(rng, n) }
+                Message::Dists { wave_id, vals: arb_f64s(rng, n) }
             }
             7 => Message::Error {
+                wave_id,
                 msg: format!("e{}", rng.below(1000)),
             },
-            8 => Message::Shutdown,
-            _ => Message::Ack,
+            8 => Message::Shutdown { wave_id },
+            _ => Message::Ack { wave_id },
         }
     }
 
@@ -654,6 +837,10 @@ mod tests {
                                      msg.kind()))?;
             crate::prop_assert!(got == msg,
                                 "{} did not round-trip", msg.kind());
+            crate::prop_assert!(got.wave_id() == msg.wave_id(),
+                                "{} wave tag did not survive", msg.kind());
+            crate::prop_assert!(peek_wave_id(&buf) == msg.wave_id(),
+                                "peek_wave_id disagrees with decode");
             Ok(())
         });
     }
@@ -697,9 +884,10 @@ mod tests {
         let rows = vec![7u32, 3];
         let coords = vec![0u32, 2, 2];
         let mut a = Vec::new();
-        encode_partial_sums(&mut a, Metric::L1, &query, &rows, &coords);
+        encode_partial_sums(&mut a, 42, Metric::L1, &query, &rows, &coords);
         let mut b = Vec::new();
         Message::PartialSums {
+            wave_id: 42,
             metric: Metric::L1,
             query: query.clone(),
             rows: rows.clone(),
@@ -709,8 +897,9 @@ mod tests {
         assert_eq!(a, b);
         let req = PullRequest { query: &query, rows: &rows,
                                 coord_ids: &coords };
-        encode_pull_batch(&mut a, Metric::L2Sq, &[req]);
+        encode_pull_batch(&mut a, 7, Metric::L2Sq, &[req]);
         Message::PullBatch {
+            wave_id: 7,
             metric: Metric::L2Sq,
             reqs: vec![WireRequest { query, rows, coord_ids: coords }],
         }
@@ -722,8 +911,51 @@ mod tests {
     fn bad_opcode_and_bad_metric_are_rejected() {
         assert!(Message::decode(&[]).is_err());
         assert!(Message::decode(&[99]).is_err());
-        // PartialSums with metric code 7
-        assert!(Message::decode(&[3, 7, 0, 0, 0, 0]).is_err());
+        // PartialSums with metric code 7 (tag present, body malformed)
+        let mut bad = Vec::new();
+        bad.push(103u8);
+        bad.extend_from_slice(&5u64.to_le_bytes());
+        bad.push(7); // bad metric
+        bad.extend_from_slice(&0u32.to_le_bytes());
+        assert!(Message::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn v1_frames_are_rejected_with_a_version_error() {
+        // every v1 opcode — including old Hello [1] and Error [8] — must
+        // produce the explicit version-mismatch error, not "unknown
+        // opcode" and never a panic
+        for op in 1u8..=12 {
+            let err = Message::decode(&[op]).unwrap_err();
+            assert!(err.contains("version mismatch"),
+                    "op {op}: got '{err}'");
+            assert!(err.contains("v1"), "op {op}: got '{err}'");
+        }
+        assert!(is_legacy_frame(&[1]));
+        assert!(is_legacy_frame(&[12, 0, 0]));
+        assert!(!is_legacy_frame(&[101]));
+        assert!(!is_legacy_frame(&[]));
+        // the legacy error frame a v2 server answers v1 peers with is
+        // valid v1 bytes: op 8, u32 len, message
+        let mut out = Vec::new();
+        encode_legacy_error(&mut out, "nope");
+        assert_eq!(out[0], 8);
+        assert_eq!(u32::from_le_bytes(out[1..5].try_into().unwrap()), 4);
+        assert_eq!(&out[5..], b"nope");
+        // and a v2 decoder reports it as a version mismatch too
+        assert!(Message::decode(&out).unwrap_err()
+                .contains("version mismatch"));
+    }
+
+    #[test]
+    fn peek_wave_id_survives_body_corruption() {
+        let mut buf = Vec::new();
+        encode_stats(&mut buf, 0xDEAD_BEEF);
+        buf.push(99); // trailing garbage: decode fails…
+        assert!(Message::decode(&buf).is_err());
+        // …but the tag is still recoverable for the error reply
+        assert_eq!(peek_wave_id(&buf), 0xDEAD_BEEF);
+        assert_eq!(peek_wave_id(&[101, 1]), 0, "short frame peeks as 0");
     }
 
     #[test]
@@ -753,14 +985,35 @@ mod tests {
         // bit patterns (negative zero, subnormals, inf) and compare bits
         let vals = vec![-0.0f64, f64::INFINITY, 1e-310, -3.5];
         let mut buf = Vec::new();
-        encode_dists(&mut buf, &vals);
+        encode_dists(&mut buf, 3, &vals);
         match Message::decode(&buf).unwrap() {
-            Message::Dists { vals: got } => {
+            Message::Dists { wave_id, vals: got } => {
+                assert_eq!(wave_id, 3);
                 for (a, b) in vals.iter().zip(&got) {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
             }
             other => panic!("unexpected {}", other.kind()),
         }
+    }
+
+    #[test]
+    fn dataset_fingerprint_tracks_content_shape_and_placement() {
+        use crate::data::synthetic;
+        let a = synthetic::gaussian_iid(6, 4, 1);
+        let b = synthetic::gaussian_iid(6, 4, 1);
+        let c = synthetic::gaussian_iid(6, 4, 2);
+        // identical content (replicas of one shard) agree
+        assert_eq!(dataset_fingerprint(12, 3, &a),
+                   dataset_fingerprint(12, 3, &b));
+        // different rows (a diverged replica) disagree
+        assert_ne!(dataset_fingerprint(12, 3, &a),
+                   dataset_fingerprint(12, 3, &c));
+        // same rows at a different placement disagree too — a replica
+        // serving the right bytes as the wrong shard is still wrong
+        assert_ne!(dataset_fingerprint(12, 3, &a),
+                   dataset_fingerprint(12, 0, &a));
+        assert_ne!(dataset_fingerprint(12, 3, &a),
+                   dataset_fingerprint(24, 3, &a));
     }
 }

@@ -151,6 +151,62 @@ fn big_pull_batch_wave_fans_out_concurrently_bitwise() {
 }
 
 #[test]
+fn pull_batch_case_matrix_through_in_flight_tickets_bitwise() {
+    // the same case matrix as pull_batch_bitwise_over_loopback_rings,
+    // but driven through the pipelined submit/complete API with every
+    // metric's wave submitted before any is completed — in-flight
+    // multiplexed waves must scatter exactly like blocking ones
+    for &n in SIZES {
+        let d = 64;
+        let ds = synthetic::gaussian_iid(n, d, 5000 + n as u64);
+        let mut rng = Rng::new(177 + n as u64);
+        let n_reqs = 4;
+        let queries: Vec<Vec<f32>> = (0..n_reqs)
+            .map(|_| (0..d).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let rowsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|i| {
+                let m = if i == 2 { 0 } else { 1 + rng.below(2 * n) };
+                (0..m).map(|_| rng.below(n) as u32).collect()
+            })
+            .collect();
+        let coordsets: Vec<Vec<u32>> = (0..n_reqs)
+            .map(|_| {
+                let t = 1 + rng.below(40);
+                (0..t).map(|_| rng.below(d) as u32).collect()
+            })
+            .collect();
+        for shards in 1..=3usize {
+            let (_servers, mut remote) = ring(&ds, shards);
+            let reqs: Vec<PullRequest> = (0..n_reqs)
+                .map(|i| PullRequest {
+                    query: &queries[i],
+                    rows: &rowsets[i],
+                    coord_ids: &coordsets[i],
+                })
+                .collect();
+            // submit one wave per metric, hold both in flight, then
+            // complete in reverse submission order
+            let t_l2 = remote.submit_pull_batch(&ds, &reqs, Metric::L2Sq);
+            let t_l1 = remote.submit_pull_batch(&ds, &reqs, Metric::L1);
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            remote.complete_sums(t_l1, &mut s1, &mut q1);
+            let (mut s2, mut q2) = (Vec::new(), Vec::new());
+            remote.complete_sums(t_l2, &mut s2, &mut q2);
+            let mut solo = NativeEngine::default();
+            let (mut w1, mut wq1) = (Vec::new(), Vec::new());
+            solo.pull_batch(&ds, &reqs, Metric::L1, &mut w1, &mut wq1);
+            let (mut w2, mut wq2) = (Vec::new(), Vec::new());
+            solo.pull_batch(&ds, &reqs, Metric::L2Sq, &mut w2, &mut wq2);
+            assert_eq!(s1, w1, "ticket sums n={n} ring={shards} l1");
+            assert_eq!(q1, wq1, "ticket sqs n={n} ring={shards} l1");
+            assert_eq!(s2, w2, "ticket sums n={n} ring={shards} l2");
+            assert_eq!(q2, wq2, "ticket sqs n={n} ring={shards} l2");
+        }
+    }
+}
+
+#[test]
 fn rings_larger_than_the_dataset_bitwise() {
     // n = 4 dataset rows served by up to 8 shard servers: most servers
     // own zero rows (and never see traffic), and row-repeats pile every

@@ -137,6 +137,53 @@ fn client_disconnecting_while_queued_does_not_derail_the_batch() {
 }
 
 #[test]
+fn wait_a_little_batching_coalesces_light_load() {
+    // with batch_wait_us set, a single worker that found a non-full
+    // batch lingers for more arrivals: several near-simultaneous
+    // queries from independent connections land in very few batches,
+    // and the realized batch sizes are visible via stats
+    let ds = synthetic::image_like(80, 64, 53);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 8,
+        batch_wait_us: 500_000, // 0.5s — generous vs. connect skew
+        ..Default::default()
+    };
+    let srv = Server::start(ds.clone(), cfg).unwrap();
+    let addr = srv.addr;
+    let n_clients = 4usize;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|i| {
+            let q = ds.row_vec(i * 7);
+            std::thread::spawn(move || {
+                let mut cl = Client::connect(&addr).unwrap();
+                let (ids, _, units) = cl.knn(&q, 2).unwrap();
+                assert_eq!(ids[0] as usize, i * 7);
+                assert!(units > 0);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut cl = Client::connect(&srv.addr).unwrap();
+    let st = stats(&mut cl);
+    assert_eq!(st.get("queries").unwrap().as_usize(), Some(n_clients));
+    let batches = st.get("batches").unwrap().as_f64().unwrap();
+    let mean_batch = st.get("mean_batch").unwrap().as_f64().unwrap();
+    // the lingering worker must have coalesced the burst: 4 queries in
+    // at most 2 batches (scheduling noise allowance), i.e. mean >= 2
+    assert!(batches <= 2.0,
+            "wait-a-little server split 4 concurrent queries into \
+             {batches} batches");
+    assert!(mean_batch >= 2.0, "mean batch {mean_batch}");
+    // the setting itself is observable
+    assert_eq!(st.get("batch_wait_us").and_then(|v| v.as_f64()),
+               Some(500_000.0));
+}
+
+#[test]
 fn malformed_json_and_protocol_roundtrips() {
     let ds = synthetic::image_like(40, 32, 43);
     let q = ds.row_vec(3);
