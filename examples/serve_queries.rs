@@ -1,4 +1,5 @@
-//! End-to-end serving driver (DESIGN.md experiment E12): start the query
+//! End-to-end serving driver (docs/ARCHITECTURE.md, "The query
+//! server"): start the query
 //! server on an image-like dataset, fire k-NN queries from concurrent
 //! clients, and report latency/throughput/accuracy plus the paper's
 //! coordinate-op gain — and the server's dynamic-batching stats, since

@@ -4,7 +4,7 @@ The hot path of BMO-NN is a *batched arm pull*: for a block of B candidate
 arms and T sampled coordinates, reduce the coordinate-wise distances
 ``rho(rows[b, c_t], query[c_t])`` to a per-arm partial sum. This is a
 gather + elementwise + row-reduce, i.e. bandwidth-bound; the TPU-shaped
-design (DESIGN.md §Hardware-Adaptation) therefore:
+design therefore:
 
   * pre-gathers the sampled coordinates into a dense ``[B, T]`` tile in the
     surrounding L2 jax graph (XLA gather is the HBM-side schedule), so the
@@ -18,8 +18,8 @@ design (DESIGN.md §Hardware-Adaptation) therefore:
 
 ``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
 custom-calls; numerics are validated through the interpret path against
-``ref.py`` and the real-TPU perf is estimated from the VMEM footprint in
-EXPERIMENTS.md §Perf.
+``ref.py`` and the real-TPU perf is estimated from the VMEM footprint
+(see docs/ARCHITECTURE.md, "The PJRT runtime").
 """
 
 import functools

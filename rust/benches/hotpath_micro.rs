@@ -1,6 +1,7 @@
-//! Microbenchmarks of the L3 hot path (EXPERIMENTS.md §Perf): per-engine
-//! pull throughput, bandit-loop overhead per round, and heap op costs.
-//! This is the profile driver for the performance pass.
+//! Microbenchmarks of the L3 hot path (docs/ARCHITECTURE.md, "Hot-path
+//! kernels and the pull engines"): per-engine pull throughput across the
+//! dispatched kernel tiers, bandit-loop overhead per round, and heap op
+//! costs. This is the profile driver for the performance pass.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -11,6 +12,7 @@ use bmonn::coordinator::knn::knn_point_dense;
 use bmonn::coordinator::BanditParams;
 use bmonn::data::{synthetic, Metric};
 use bmonn::metrics::Counter;
+use bmonn::runtime::kernels::KernelChoice;
 use bmonn::runtime::native::NativeEngine;
 use bmonn::util::rng::Rng;
 
@@ -55,7 +57,29 @@ fn main() {
         black_box(&s);
     });
     rep.row(vec!["native partial_sums 32x256".into(), fmt_f(ns, 0),
-                 fmt_f(ns / coord_ops, 2), "hot path".into()]);
+                 fmt_f(ns / coord_ops, 2),
+                 format!("hot path [{}]",
+                         native.kernel_tier().as_str())]);
+
+    // each kernel tier this host can run, forced explicitly — the
+    // scalar row is the dispatch-free anchor the SIMD rows are read
+    // against
+    for choice in [KernelChoice::Scalar, KernelChoice::Avx2,
+                   KernelChoice::Neon] {
+        let mut forced = match NativeEngine::with_options(choice, false) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        let tier = forced.kernel_tier().as_str();
+        let ns = bench(200, || {
+            forced.partial_sums(&data, &query, &rows, &coords,
+                                Metric::L2Sq, &mut s, &mut q);
+            black_box(&s);
+        });
+        rep.row(vec![format!("forced {tier} partial_sums 32x256"),
+                     fmt_f(ns, 0), fmt_f(ns / coord_ops, 2),
+                     "kernel tier".into()]);
+    }
 
     // exact distances
     let ns = bench(200, || {

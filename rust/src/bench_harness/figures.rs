@@ -1,4 +1,4 @@
-//! Figure runners: one function per paper figure/claim (DESIGN.md §5).
+//! Figure runners: one function per paper figure/claim.
 //!
 //! All runners are deterministic given `seed`, print the same series the
 //! paper reports (gain over exact computation in coordinate-wise distance
@@ -24,7 +24,8 @@ use crate::util::rng::Rng;
 
 fn bmo_params(k: usize) -> BanditParams {
     BanditParams { k, delta: 0.01, sigma: SigmaMode::Empirical,
-                   epsilon: 0.0, policy: PullPolicy::batched() }
+                   epsilon: 0.0, policy: PullPolicy::batched(),
+                   bias: 0.0 }
 }
 
 /// Per-algorithm stats over a set of queries.
@@ -69,7 +70,8 @@ fn run_bmo(w: &Workload, seed: u64, shards: usize) -> AlgoStats {
     // fans each round's pull wave across a row-sharded worker pool
     // (answers are bitwise-independent of the shard count)
     let mut engine = crate::runtime::build_host_engine(
-        EngineKind::Native, shards, &[], false)
+        EngineKind::Native, shards, &[], false,
+        crate::runtime::kernels::KernelChoice::Auto, false)
         .expect("native host engine");
     let mut rng = Rng::new(seed);
     let mut c = Counter::new();

@@ -1,6 +1,6 @@
 //! Benchmark harness: workload generators, sweep drivers and table
 //! printers that regenerate every table/figure of the paper's evaluation
-//! (DESIGN.md §5 maps experiment ids to figures).
+//! (each runner in [`figures`] names the figure it reproduces).
 //!
 //! The same runners back the `bmonn bench <fig>` CLI and the
 //! `cargo bench` targets; `quick=true` shrinks the workloads for CI.

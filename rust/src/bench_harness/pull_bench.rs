@@ -43,6 +43,7 @@ use crate::coordinator::knn::{knn_batch_points_dense, knn_point_dense};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::data::synthetic;
 use crate::metrics::{Counter, LatencyStats};
+use crate::runtime::kernels::{self, KernelChoice};
 use crate::runtime::{build_host_engine, remote};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -119,6 +120,11 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
 
     fn coverage(&mut self) -> Option<crate::coordinator::arms::Coverage> {
         self.inner.coverage()
+    }
+
+    fn quant_bias(&mut self, data: &DenseDataset, query: &[f32],
+                  metric: Metric) -> f64 {
+        self.inner.quant_bias(data, query, metric)
     }
 
     fn name(&self) -> &'static str {
@@ -370,6 +376,77 @@ fn measure_multiplex_rung(w: &Workload<'_>, endpoints: &[String],
     })
 }
 
+/// One row of the single-core kernel-tier rung: a forced kernel tier
+/// and its raw `partial_sums` throughput on one core (no sharding, no
+/// bandit loop — this isolates the dispatched row kernels themselves).
+struct KernelRun {
+    tier: &'static str,
+    rows_per_s: f64,
+    speedup_vs_scalar: f64,
+}
+
+/// Measure raw single-core `partial_sums` throughput per kernel tier:
+/// scalar always (the anchor the speedup column divides by), plus the
+/// auto-dispatched tier of this host when it differs. Cross-tier
+/// answers are checked against scalar at 1e-5 relative tolerance — the
+/// bitwise contract holds per tier, not across tiers (docs/CONFIG.md),
+/// but a tier drifting past the parity-test tolerance is a broken
+/// kernel, not a data point.
+fn measure_kernel_tiers(data: &DenseDataset, seed: u64, waves: usize)
+                        -> Result<Vec<KernelRun>, String> {
+    let mut rng = Rng::new(seed + 500);
+    let q: Vec<f32> =
+        (0..data.d).map(|_| rng.gaussian() as f32).collect();
+    let rows: Vec<u32> = (0..data.n as u32).collect();
+    let coords: Vec<u32> =
+        (0..64).map(|_| rng.below(data.d) as u32).collect();
+    let mut choices = vec![KernelChoice::Scalar];
+    if kernels::detect() != kernels::KernelTier::Scalar {
+        choices.push(KernelChoice::Auto);
+    }
+    let mut runs: Vec<KernelRun> = Vec::new();
+    let mut scalar_sums: Vec<f64> = Vec::new();
+    for choice in choices {
+        let mut engine =
+            crate::runtime::native::NativeEngine::with_options(choice,
+                                                               false)?;
+        let tier = engine.kernel_tier().as_str();
+        let (mut sums, mut sqs) = (Vec::new(), Vec::new());
+        // warm-up wave: page the dataset in before the clock starts
+        engine.partial_sums(data, &q, &rows, &coords, Metric::L2Sq,
+                            &mut sums, &mut sqs);
+        let t0 = Instant::now();
+        for _ in 0..waves {
+            engine.partial_sums(data, &q, &rows, &coords, Metric::L2Sq,
+                                &mut sums, &mut sqs);
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        if runs.is_empty() {
+            scalar_sums = sums.clone();
+        } else {
+            for (a, b) in scalar_sums.iter().zip(&sums) {
+                let tol = 1e-5 * a.abs().max(b.abs()).max(1.0);
+                if (a - b).abs() > tol {
+                    return Err(format!(
+                        "kernel rung: {tier} diverged from scalar \
+                         beyond tolerance ({a} vs {b})"));
+                }
+            }
+        }
+        let rows_per_s = (rows.len() * waves) as f64 / secs;
+        let speedup = match runs.first() {
+            Some(s) => rows_per_s / s.rows_per_s.max(1e-9),
+            None => 1.0,
+        };
+        runs.push(KernelRun {
+            tier,
+            rows_per_s,
+            speedup_vs_scalar: speedup,
+        });
+    }
+    Ok(runs)
+}
+
 fn run_json(r: &ShardRun) -> Json {
     let mut fields = vec![
         ("shards", Json::Num(r.shards as f64)),
@@ -420,7 +497,8 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             &w,
             shards,
             "local",
-            || build_host_engine(EngineKind::Native, shards, &[], false),
+            || build_host_engine(EngineKind::Native, shards, &[], false,
+                                 KernelChoice::Auto, false),
             &mut baseline_answers,
         )?);
     }
@@ -489,6 +567,11 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             &mut baseline_answers,
         )?);
     }
+    // --- single-core kernel-tier rung: raw partial_sums throughput per
+    // dispatched kernel (scalar anchor + this host's auto tier) --------
+    let kernel_waves = if smoke { 20 } else { 200 };
+    let kernel_runs = measure_kernel_tiers(&data, seed, kernel_waves)?;
+    let dispatched = kernel_runs.last().unwrap().tier;
     let speedup = local_runs.last().unwrap().rows_per_s
         / local_runs.first().unwrap().rows_per_s.max(1e-9);
     let mut rep = Report::new(
@@ -523,6 +606,15 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
          {multiplex_hwm} waves high-water on one connection), answers \
          asserted identical to local",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
+    let kernel_note = kernel_runs
+        .iter()
+        .map(|k| format!("{} {:.0} rows/s ({:.2}x)", k.tier,
+                         k.rows_per_s, k.speedup_vs_scalar))
+        .collect::<Vec<_>>()
+        .join(", ");
+    rep.note(&format!(
+        "dispatched kernel tier: {dispatched}; single-core partial_sums \
+         by tier: {kernel_note}"));
     let json = Json::obj(vec![
         ("workload", Json::obj(vec![
             ("n", Json::Num(n as f64)),
@@ -535,6 +627,15 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         ])),
         ("shards", Json::Arr(local_runs.iter().map(run_json).collect())),
         ("remote", Json::Arr(remote_runs.iter().map(run_json).collect())),
+        ("kernel_tiers", Json::Arr(kernel_runs
+            .iter()
+            .map(|k| Json::obj(vec![
+                ("tier", Json::Str(k.tier.to_string())),
+                ("pull_rows_per_s", Json::Num(k.rows_per_s)),
+                ("speedup_vs_scalar", Json::Num(k.speedup_vs_scalar)),
+            ]))
+            .collect())),
+        ("dispatched_tier", Json::Str(dispatched.to_string())),
         ("speedup_pull_max_vs_1", Json::Num(speedup)),
     ]);
     Ok((rep, json))
@@ -573,10 +674,30 @@ mod tests {
                     > 0.0);
             assert!(s.get("transport").and_then(|v| v.as_str()).is_some());
         }
+        // kernel-tier rung: scalar anchor always present and nonzero;
+        // the dispatched tier names a real tier
+        let tiers =
+            json.get("kernel_tiers").and_then(|s| s.as_arr()).unwrap();
+        assert!(!tiers.is_empty());
+        assert_eq!(tiers[0].get("tier").and_then(|v| v.as_str()),
+                   Some("scalar"));
+        for t in tiers {
+            let rps = t.get("pull_rows_per_s")
+                .and_then(|v| v.as_f64())
+                .unwrap();
+            assert!(rps > 0.0 && rps.is_finite(), "kernel rows/s {rps}");
+            assert!(t.get("speedup_vs_scalar")
+                        .and_then(|v| v.as_f64())
+                        .unwrap() > 0.0);
+        }
+        let dispatched =
+            json.get("dispatched_tier").and_then(|v| v.as_str()).unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&dispatched));
         // round-trips through the parser (what the CI step asserts)
         let text = json.to_string();
         let parsed = Json::parse(&text).unwrap();
         assert!(parsed.get("speedup_pull_max_vs_1").is_some());
+        assert!(parsed.get("kernel_tiers").is_some());
     }
 
     #[test]

@@ -101,7 +101,8 @@ SUBCOMMANDS
   knn      --data FILE [--query-idx I] [--k K] [--batch B] [--algo bmo|
            exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
            native|scalar|pjrt] [--shards S] [--remote SPECS]
-           [--degraded] [--epsilon E] [--delta D] [--seed S]
+           [--degraded] [--kernel auto|scalar|avx2|neon] [--quantized]
+           [--epsilon E] [--delta D] [--seed S]
            (--batch B > 1 answers B consecutive query points through the
            coalesced multi-query driver, bmo only; --shards S > 1 fans
            each pull wave across S contiguous row shards on a worker
@@ -112,12 +113,21 @@ SUBCOMMANDS
            (H:P|H:P) and sub-waves fail over between a shard's replicas
            transparently. --degraded answers with exact distances over
            the surviving rows — coverage-annotated — when every replica
-           of some shard is dead, instead of erroring)
+           of some shard is dead, instead of erroring. --kernel forces a
+           row-kernel tier for the native engine instead of the auto
+           CPU-feature dispatch; forcing a tier this host lacks is a
+           startup error. --quantized samples from an int8 shadow copy
+           and rescores candidates on exact f32, widening confidence
+           intervals by the quantization error bound; local engines
+           only. With --remote, pass --kernel to shard-serve instead —
+           both tune the process doing the computing)
   graph    --data FILE [--k K] [--metric l2|l1] [--shards S]
-           [--remote SPECS] [--degraded] [--seed S]
+           [--remote SPECS] [--degraded] [--kernel T] [--quantized]
+           [--seed S]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
-           [--remote SPECS] [--degraded] [--batch-wait-us T]
+           [--remote SPECS] [--degraded] [--kernel T] [--quantized]
+           [--batch-wait-us T]
            (with --remote this box coordinates a multi-machine ring: all
            workers share ONE multiplexed ring client — one connection
            per shard, concurrent tagged waves interleaved on it — so
@@ -130,14 +140,17 @@ SUBCOMMANDS
            queries — fuller batches under light load, observable via
            stats mean_batch/max_batch)
   shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
-           --of S [--addr HOST:PORT]
+           --of S [--addr HOST:PORT] [--kernel auto|scalar|avx2|neon]
            (loads rows [floor(I*n/S), floor((I+1)*n/S)) — the same
            floor-boundary partition --shards uses — and answers
            partial_sums / exact_dists / pull_batch waves over the
            length-prefixed binary wire protocol [runtime::wire]; a ring
            of S such servers, shard indices 0..S on matching endpoints,
            backs --remote, and starting shard I on several machines
-           makes them replicas; a shutdown frame or ctrl-c stops it)
+           makes them replicas; a shutdown frame or ctrl-c stops it.
+           --kernel forces this server's row-kernel tier — keep it
+           identical across a ring's replicas, or failover between
+           them may change float rounding)
   ring-stats  --remote SPECS [--timeout-ms T]
            (probes every endpoint with the Stats wire op and prints
            shard identity, row range, dataset shape, dataset
@@ -168,9 +181,9 @@ SUBCOMMANDS
            ladder or image:256:64:SEED for --smoke)
   selftest [--artifacts DIR]
 
-Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded
-pick the pull engine — see docs/CONFIG.md), --set section.key=value
-(repeatable via comma list), --seed N.
+Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded/
+kernel/quantized pick and tune the pull engine — see docs/CONFIG.md),
+--set section.key=value (repeatable via comma list), --seed N.
 ";
 
 #[cfg(test)]

@@ -11,6 +11,7 @@ use std::path::Path;
 
 use crate::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
 use crate::data::dense::Metric;
+use crate::runtime::kernels::KernelChoice;
 
 /// Flat key-value store parsed from a TOML-subset file.
 #[derive(Clone, Debug, Default)]
@@ -167,6 +168,20 @@ pub struct BmonnConfig {
     /// ring outage then surfaces as query errors, never silent partial
     /// answers.
     pub degraded: bool,
+    /// row-kernel tier for the native engine (`[engine] kernel` /
+    /// `--kernel auto|scalar|avx2|neon`): `auto` (default) dispatches on
+    /// the CPU features detected at engine construction; forcing a tier
+    /// the host lacks is a startup error, never a crash mid-query.
+    /// Results are bitwise-reproducible *per tier*; different tiers
+    /// agree only to the parity-test tolerance (see docs/CONFIG.md).
+    pub kernel: KernelChoice,
+    /// opt-in int8 sampling tier (`[engine] quantized` / `--quantized`):
+    /// the native engine samples coordinates from an int8 shadow copy
+    /// (4x less memory bandwidth) and rescores every candidate on the
+    /// exact f32 rows; the quantization error bound widens the bandit's
+    /// confidence intervals so the PAC guarantee still holds. Off by
+    /// default.
+    pub quantized: bool,
     pub artifact_dir: String,
     pub seed: u64,
     pub server_addr: String,
@@ -196,6 +211,8 @@ impl Default for BmonnConfig {
             shards: 1,
             remote: Vec::new(),
             degraded: false,
+            kernel: KernelChoice::Auto,
+            quantized: false,
             artifact_dir: "artifacts".into(),
             seed: 42,
             server_addr: "127.0.0.1:7878".into(),
@@ -251,6 +268,14 @@ impl BmonnConfig {
         if let Some(dg) = raw.get_bool("engine.degraded")? {
             cfg.degraded = dg;
         }
+        if let Some(kc) = raw.get("engine.kernel") {
+            cfg.kernel = KernelChoice::parse(kc).ok_or_else(|| {
+                format!("bad kernel '{kc}' (auto|scalar|avx2|neon)")
+            })?;
+        }
+        if let Some(qz) = raw.get_bool("engine.quantized")? {
+            cfg.quantized = qz;
+        }
         if let Some(a) = raw.get("engine.artifact_dir") {
             cfg.artifact_dir = a.to_string();
         }
@@ -279,6 +304,9 @@ impl BmonnConfig {
             sigma: self.sigma,
             epsilon: self.epsilon,
             policy: self.policy,
+            // estimate bias is an engine property, not a config knob:
+            // the drivers raise it from PullEngine::quant_bias per query
+            bias: 0.0,
         }
     }
 }
@@ -348,6 +376,21 @@ mod tests {
                    2500);
         let raw = RawConfig::parse("[server]\nbatch_wait_us = x\n")
             .unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn kernel_and_quantized_parse_and_default_off() {
+        let d = BmonnConfig::default();
+        assert_eq!(d.kernel, KernelChoice::Auto);
+        assert!(!d.quantized);
+        let raw = RawConfig::parse(
+            "[engine]\nkernel = scalar\nquantized = true\n").unwrap();
+        let cfg = BmonnConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.kernel, KernelChoice::Scalar);
+        assert!(cfg.quantized);
+        let raw =
+            RawConfig::parse("[engine]\nkernel = sse9\n").unwrap();
         assert!(BmonnConfig::from_raw(&raw).is_err());
     }
 

@@ -275,6 +275,22 @@ pub trait PullEngine {
         None
     }
 
+    /// Worst-case bias, in θ-units, that this engine's **sampled**
+    /// estimates (`partial_sums`/`pull_batch`) may carry against
+    /// `query` beyond sampling noise. `0.0` (the default — engines
+    /// computing on the exact f32 rows) means estimates are unbiased;
+    /// the quantized native tier reports its reconstruction-error
+    /// bound (`runtime::quant`). Drivers fold the value into
+    /// `BanditParams::bias` before a run, widening every non-exact
+    /// confidence half-width so UCB/LCB stay valid bounds on the true
+    /// θ and the PAC accounting absorbs the approximation. Exact
+    /// distances (`exact_dists`) are never biased.
+    fn quant_bias(&mut self, data: &DenseDataset, query: &[f32],
+                  metric: Metric) -> f64 {
+        let _ = (data, query, metric);
+        0.0
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -367,6 +383,11 @@ impl PullEngine for Box<dyn PullEngine + Send> {
         (**self).coverage()
     }
 
+    fn quant_bias(&mut self, data: &DenseDataset, query: &[f32],
+                  metric: Metric) -> f64 {
+        (**self).quant_bias(data, query, metric)
+    }
+
     fn name(&self) -> &'static str {
         (**self).name()
     }
@@ -432,7 +453,7 @@ impl PullEngine for ScalarEngine {
 ///
 /// Means are *normalized* distances θ ∈ [0, ~): θ_i = ρ(x_q, x_i)/d.
 /// Every sample charges the counter 1 unit; exact evaluation charges
-/// `exact_cost(arm)` units (DESIGN.md §7).
+/// `exact_cost(arm)` units (the [`crate::metrics`] accounting contract).
 pub trait ArmSet {
     fn n_arms(&self) -> usize;
 

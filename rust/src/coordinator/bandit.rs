@@ -73,6 +73,17 @@ pub struct BanditParams {
     pub epsilon: f64,
     /// pull-scheduling policy (faithful Algorithm 1 vs batched D-A)
     pub policy: PullPolicy,
+    /// worst-case systematic bias of sampled estimates, in θ-units —
+    /// nonzero when the engine computes pulls approximately (the int8
+    /// quantized tier reports its reconstruction-error bound through
+    /// `PullEngine::quant_bias`). Added to every non-exact confidence
+    /// half-width, so UCB/LCB remain valid bounds on the true θ and
+    /// both the elimination rule and the Theorem 2 PAC stop rule absorb
+    /// the approximation. Exact evaluations are never biased (their
+    /// intervals still collapse to 0), so runs stay correct and
+    /// terminating even when `bias` dwarfs ε — they just lose the
+    /// sampling shortcut for arms closer than the bias.
+    pub bias: f64,
 }
 
 impl Default for BanditParams {
@@ -83,6 +94,7 @@ impl Default for BanditParams {
             sigma: SigmaMode::Empirical,
             epsilon: 0.0,
             policy: PullPolicy::batched(),
+            bias: 0.0,
         }
     }
 }
@@ -262,7 +274,10 @@ impl BmoUcb {
         }
     }
 
-    /// Half-width C_{i,T_i} (Eq. 3).
+    /// Half-width C_{i,T_i} (Eq. 3), plus the engine's systematic
+    /// estimate bias (`BanditParams::bias`) for non-exact arms — the
+    /// sampling interval covers the noise, the bias term covers the
+    /// approximation, so mean ± ci still bounds the true θ.
     fn ci(&self, arm: usize) -> f64 {
         let st = &self.states[arm];
         if st.exact {
@@ -276,6 +291,7 @@ impl BmoUcb {
             return f64::INFINITY;
         }
         (2.0 * s2 * self.log_term / st.pulls as f64).sqrt()
+            + self.params.bias
     }
 
     fn lcb(&self, arm: usize) -> f64 {
@@ -556,7 +572,9 @@ impl BmoUcb {
         }
     }
 
-    /// Run to completion over `arms`. Charges `counter` per DESIGN.md §7.
+    /// Run to completion over `arms`. Charges `counter` one unit per
+    /// sampled coordinate and `exact_cost(arm)` per exact evaluation
+    /// (the [`crate::metrics`] accounting contract).
     pub fn run<A: ArmSet>(&mut self, arms: &mut A, rng: &mut Rng,
                           counter: &mut Counter) -> BanditResult {
         let mut sums: Vec<f64> = Vec::new();
@@ -634,6 +652,7 @@ mod tests {
             sigma: SigmaMode::Empirical,
             epsilon: 0.0,
             policy,
+            bias: 0.0,
         };
         let mut rng = Rng::new(seed + 1);
         let mut c = Counter::new();
@@ -718,6 +737,7 @@ mod tests {
             sigma: SigmaMode::Fixed(10.0),
             epsilon: 0.0,
             policy: PullPolicy::batched(),
+            bias: 0.0,
         };
         let mut rng = Rng::new(12);
         let mut c = Counter::new();

@@ -123,8 +123,13 @@ fn knn_dense_inner<E: PullEngine>(
     }
     let rows = DenseArms::<E>::candidates(data.n, exclude);
     let d = data.d as f64;
+    // approximate engines (quantized tier) report a worst-case estimate
+    // bias; widening the confidence half-widths by it keeps UCB/LCB
+    // valid bounds on the true θ, so the run's guarantees hold
+    let mut params = params.clone();
+    params.bias = params.bias.max(engine.quant_bias(data, query, metric));
     let mut arms = DenseArms::new(data, query, &rows, metric, engine);
-    let res = run_bmo_ucb(&mut arms, params.clone(), rng, counter);
+    let res = run_bmo_ucb(&mut arms, params, rng, counter);
     KnnResult {
         ids: res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect(),
         dists: res.best.iter().map(|&(_, th)| th * d).collect(),
@@ -270,10 +275,16 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
         assert_eq!(q.len(), data.d, "query {i} has wrong dimension");
         let qrng = rng.fork(i as u64);
         let rows = DenseArms::<E>::candidates(data.n, excludes[i]);
+        // same per-query bias widening as the solo driver — quant_bias
+        // depends only on (data, query, metric), so the batch stays
+        // bitwise-identical to solo runs
+        let mut qparams = params.clone();
+        qparams.bias =
+            qparams.bias.max(engine.quant_bias(data, q, metric));
         let bandit = {
             let arms_view =
                 DenseArms::new(data, q, &rows, metric, engine);
-            BmoUcb::new(&arms_view, params.clone())
+            BmoUcb::new(&arms_view, qparams)
         };
         slots.push(DenseSlot {
             rows,

@@ -34,6 +34,10 @@ pub fn pac_knn_point_dense<E: PullEngine>(
 }
 
 /// Check a PAC answer: every returned point's θ must be ≤ θ_(k) + ε.
+///
+/// Panics when `k` is 0 or exceeds the number of candidate rows
+/// (`data.n - 1` — the query itself is not its own neighbor): θ_(k)
+/// does not exist for such a `k`, so the check would be meaningless.
 pub fn is_eps_correct(
     data: &DenseDataset,
     q: usize,
@@ -42,6 +46,12 @@ pub fn is_eps_correct(
     k: usize,
     epsilon: f64,
 ) -> bool {
+    let candidates = data.n - (q < data.n) as usize;
+    assert!(k >= 1 && k <= candidates,
+            "is_eps_correct: k = {k} but the dataset has {candidates} \
+             candidate rows (n = {} minus the query itself) — θ_(k) \
+             is undefined",
+            data.n);
     let mut c = Counter::new();
     let d = data.d as f64;
     let mut thetas: Vec<f64> = (0..data.n)
@@ -106,6 +116,42 @@ mod tests {
             c_pac.get(),
             c_exact.get()
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "θ_(k) is undefined")]
+    fn oversized_k_is_rejected_not_an_index_panic() {
+        // regression: k > n-1 used to reach `thetas[k - 1]` and die with
+        // a bare slice-index panic; now it must fail the up-front
+        // validation with a message that names the actual limit
+        let ds = synthetic::gaussian_iid(6, 16, 37);
+        let res = KnnResult { ids: vec![1], dists: vec![0.0],
+                              metrics: Default::default(),
+                              coverage: None };
+        let _ = is_eps_correct(&ds, 0, Metric::L2Sq, &res, 6, 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "θ_(k) is undefined")]
+    fn zero_k_is_rejected() {
+        let ds = synthetic::gaussian_iid(6, 16, 38);
+        let res = KnnResult { ids: vec![1], dists: vec![0.0],
+                              metrics: Default::default(),
+                              coverage: None };
+        let _ = is_eps_correct(&ds, 0, Metric::L2Sq, &res, 0, 0.1);
+    }
+
+    #[test]
+    fn boundary_k_equal_to_candidate_count_is_accepted() {
+        // k = n - 1 is the largest well-defined order statistic; the
+        // check must run (and trivially pass when every point is
+        // returned) rather than trip the validation
+        let ds = synthetic::gaussian_iid(6, 16, 39);
+        let res = KnnResult { ids: vec![1, 2, 3, 4, 5],
+                              dists: vec![0.0; 5],
+                              metrics: Default::default(),
+                              coverage: None };
+        assert!(is_eps_correct(&ds, 0, Metric::L2Sq, &res, 5, 0.1));
     }
 
     #[test]

@@ -94,6 +94,14 @@ pub struct ServerConfig {
     /// batches under light load. 0 (the default) keeps the
     /// drain-immediately behavior.
     pub batch_wait_us: u64,
+    /// row-kernel tier every worker's native engine dispatches
+    /// (`[engine] kernel` / `--kernel`); forcing an unavailable tier
+    /// fails at server startup. Local engines only (with `remote`, the
+    /// shard servers own the kernels).
+    pub kernel: crate::runtime::kernels::KernelChoice,
+    /// opt-in int8 sampling tier for every worker's native engine
+    /// (`[engine] quantized` / `--quantized`); local engines only.
+    pub quantized: bool,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +117,8 @@ impl Default for ServerConfig {
             remote: Vec::new(),
             degraded: false,
             batch_wait_us: 0,
+            kernel: crate::runtime::kernels::KernelChoice::Auto,
+            quantized: false,
         }
     }
 }
@@ -149,7 +159,9 @@ fn build_worker_engine(shared: &Shared, kind: EngineKind,
                        -> Result<Box<dyn PullEngine + Send>, String> {
     if shared.config.remote.is_empty() {
         return build_host_engine(kind, shared.config.shards, &[],
-                                 shared.config.degraded);
+                                 shared.config.degraded,
+                                 shared.config.kernel,
+                                 shared.config.quantized);
     }
     let client = shared.ring.lock().unwrap().clone();
     let client = match client {
@@ -214,6 +226,14 @@ impl Server {
     /// Bind and start serving `data` in background threads.
     pub fn start(data: DenseDataset, config: ServerConfig)
                  -> std::io::Result<Server> {
+        // resolve the forced kernel tier now: a tier this host lacks
+        // must fail server startup, not every worker batch one "engine
+        // unavailable" reply at a time
+        if config.remote.is_empty() && config.native_engine {
+            crate::runtime::kernels::resolve(config.kernel).map_err(
+                |e| std::io::Error::new(std::io::ErrorKind::InvalidInput,
+                                        e))?;
+        }
         let listener = TcpListener::bind(&config.addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;

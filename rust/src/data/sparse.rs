@@ -6,7 +6,8 @@
 //!  * membership test "is coordinate j nonzero in row i" and value lookup
 //!    — O(1) via a per-row `HashMap` (the paper's "dictionary");
 //!  * sparsity-aware exact distance — O(|S_i| + |S_j|) sorted-merge, with
-//!    the cost counted as `|S_i| + |S_j|` units (DESIGN.md §7).
+//!    the cost counted as `|S_i| + |S_j|` units (the [`crate::metrics`]
+//!    accounting contract).
 
 use std::collections::HashMap;
 

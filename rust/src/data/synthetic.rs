@@ -1,5 +1,6 @@
 //! Synthetic dataset generators standing in for the paper's datasets
-//! (DESIGN.md §2 documents each substitution).
+//! (each generator's doc comment explains what property of the real
+//! dataset it substitutes for).
 //!
 //! * [`image_like`] — Tiny-ImageNet stand-in: smooth, channel-correlated
 //!   random fields. What BMO-NN is sensitive to is the *coordinate-wise

@@ -15,6 +15,7 @@ use bmonn::data::dense::Metric;
 use bmonn::data::{loader, synthetic};
 use bmonn::metrics::Counter;
 use bmonn::runtime::build_host_engine;
+use bmonn::runtime::kernels::KernelChoice;
 use bmonn::runtime::native::NativeEngine;
 use bmonn::runtime::partition::shard_range;
 use bmonn::runtime::remote::ShardServer;
@@ -64,6 +65,13 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
     }
     if args.flag_bool("degraded") {
         cfg.degraded = true;
+    }
+    if let Some(kc) = args.flag("kernel") {
+        cfg.kernel = KernelChoice::parse(kc)
+            .ok_or(format!("bad --kernel {kc} (auto|scalar|avx2|neon)"))?;
+    }
+    if args.flag_bool("quantized") {
+        cfg.quantized = true;
     }
     if let Some(a) = args.flag("artifacts") {
         cfg.artifact_dir = a.to_string();
@@ -193,7 +201,9 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
                     // shard-serve ring when --remote is given
                     let mut e = build_host_engine(kind, cfg.shards,
                                                   &cfg.remote,
-                                                  cfg.degraded)?;
+                                                  cfg.degraded,
+                                                  cfg.kernel,
+                                                  cfg.quantized)?;
                     knn_point_dense(&data, q, cfg.metric, &params, &mut e,
                                     &mut rng, &mut counter)
                 }
@@ -278,7 +288,8 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
         }
         kind => {
             let mut e = build_host_engine(kind, cfg.shards, &cfg.remote,
-                                          cfg.degraded)?;
+                                          cfg.degraded, cfg.kernel,
+                                          cfg.quantized)?;
             knn_batch_points_dense(data, &points, cfg.metric, &params,
                                    &mut e, &mut rng, &mut counter)
         }
@@ -329,7 +340,8 @@ fn cmd_graph(args: &Args) -> Result<(), String> {
         EngineKind::Native
     };
     let mut engine = build_host_engine(kind, cfg.shards, &cfg.remote,
-                                       cfg.degraded)?;
+                                       cfg.degraded, cfg.kernel,
+                                       cfg.quantized)?;
     let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
                             &mut engine, &mut rng, &mut counter);
     let exact_units = (data.n * (data.n - 1) * data.d) as u64;
@@ -371,7 +383,8 @@ fn cmd_kmeans(args: &Args) -> Result<(), String> {
     let mut rng = Rng::new(cfg.seed);
     let res = match algo {
         "bmo" => {
-            let mut engine = NativeEngine::default();
+            let mut engine =
+                NativeEngine::with_options(cfg.kernel, cfg.quantized)?;
             kmeans_bmo(&data, &params, &mut engine, &mut rng)
         }
         "exact" => kmeans_exact(&data, &params, &mut rng),
@@ -397,6 +410,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err("--degraded applies to --remote rings: local engines \
                     have no shards to lose".into());
     }
+    if !cfg.remote.is_empty()
+        && (cfg.kernel != KernelChoice::Auto || cfg.quantized)
+    {
+        return Err("--kernel/--quantized tune the engines doing the \
+                    computing: with --remote, pass --kernel to the \
+                    shard-serve processes (--quantized is local-only)"
+            .into());
+    }
     let sc = ServerConfig {
         addr: cfg.server_addr.clone(),
         metric: cfg.metric,
@@ -409,6 +430,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         degraded: cfg.degraded,
         batch_wait_us: args.flag_u64("batch-wait-us",
                                      cfg.server_batch_wait_us)?,
+        kernel: cfg.kernel,
+        quantized: cfg.quantized,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
@@ -428,6 +451,16 @@ fn cmd_shard_serve(args: &Args) -> Result<(), String> {
         return Err(format!("--shard {shard} out of range for --of {of}"));
     }
     let addr = args.flag("addr").unwrap_or("127.0.0.1:7979");
+    let kernel = match args.flag("kernel") {
+        None => KernelChoice::Auto,
+        Some(kc) => KernelChoice::parse(kc).ok_or(format!(
+            "bad --kernel {kc} (auto|scalar|avx2|neon)"))?,
+    };
+    if args.flag_bool("quantized") {
+        return Err("--quantized is a local-engine feature: shard \
+                    servers report no bias bound over the wire for the \
+                    coordinator's PAC accounting to absorb".into());
+    }
     let data = if let Some(path) = args.flag("data") {
         loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?
     } else if let Some(spec) = args.flag("synthetic") {
@@ -436,12 +469,14 @@ fn cmd_shard_serve(args: &Args) -> Result<(), String> {
         return Err("--data FILE or --synthetic image:N:D:SEED required"
             .into());
     };
-    let srv = ShardServer::start_shard_of(addr, &data, shard, of)
+    let srv = ShardServer::start_shard_of_with_kernel(addr, &data, shard,
+                                                      of, kernel)
         .map_err(|e| e.to_string())?;
     let (a, b) = shard_range(shard, data.n, of);
     println!("bmonn shard-serve: rows [{a}, {b}) of n={} d={} on {} \
-              (shard {shard}/{of}; ctrl-c or a shutdown frame stops it)",
-             data.n, data.d, srv.addr);
+              (shard {shard}/{of}, kernel {}; ctrl-c or a shutdown \
+              frame stops it)",
+             data.n, data.d, srv.addr, kernel.as_str());
     while !srv.shutdown_requested() {
         std::thread::sleep(std::time::Duration::from_millis(100));
     }

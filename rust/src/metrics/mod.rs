@@ -2,8 +2,9 @@
 //!
 //! Every algorithm in this repo (BMO-NN and all baselines) accounts its
 //! work in **coordinate-wise distance computations** through [`Counter`],
-//! following the accounting rules in DESIGN.md §7 (which mirror the
-//! paper's Appendix D). Wall-clock figures use [`Stopwatch`];
+//! mirroring the paper's Appendix D accounting: one unit per sampled
+//! coordinate, `d` (or `|S_i| + |S_j|` for sparse rows) per exact
+//! distance. Wall-clock figures use [`Stopwatch`];
 //! distributional figures (Fig 4c / Fig 7) use [`Histogram`].
 
 use std::collections::BTreeMap;

@@ -1,0 +1,1053 @@
+//! Hot-path row kernels behind runtime CPU-feature dispatch.
+//!
+//! Every pull wave bottoms out in four per-row kernels: sampled partial
+//! moments (Σx, Σx²) over gathered coordinates for ℓ2²/ℓ1, and exact
+//! full-row distances for the same two metrics. This module owns those
+//! kernels in three tiers:
+//!
+//! * **scalar** — the portable unrolled loops (previously inlined in
+//!   `runtime::native`), the fallback on any CPU and the tier the
+//!   cross-substrate bitwise-parity story is anchored on;
+//! * **avx2** — `std::arch::x86_64` 8-wide implementations (gathered
+//!   loads for the sampled kernels, contiguous loads for the exact
+//!   ones), compiled with `#[target_feature(enable = "avx2")]` and only
+//!   ever dispatched after `is_x86_feature_detected!("avx2")` succeeds;
+//! * **neon** — `std::arch::aarch64` 4-wide implementations (NEON is
+//!   baseline on aarch64, so these are safe code).
+//!
+//! The tier is selected **once, at engine construction** — either
+//! auto-detected ([`KernelChoice::Auto`]) or forced (`[engine] kernel` /
+//! `--kernel`), never per call — and a [`KernelSet`] of plain function
+//! pointers is installed in the engine. Within a fixed tier every kernel
+//! is a pure deterministic function of `(row, query-gather, coords)`,
+//! accumulating within one row only, so sharded / remote / multiplexed
+//! substrates that split waves by *row* stay bitwise-identical to solo
+//! execution per tier. Results are **not** bitwise-comparable across
+//! tiers (lane widths change the float summation order); the parity
+//! tests pin all tiers to `ScalarEngine` within a relative tolerance.
+//!
+//! **Accumulation error.** All tiers accumulate in f32 lanes for speed
+//! but spill to f64 every [`PARTIAL_SPILL_COORDS`] sampled coordinates
+//! ([`EXACT_SPILL_DIMS`] dimensions for the exact kernels), bounding the
+//! f32 rounding accumulation to a fixed-size block regardless of `t` or
+//! `d` — the adversarial large-`t` / large-magnitude property tests pin
+//! this against the f64 scalar reference.
+
+#![deny(missing_docs)]
+
+use crate::data::dense::Metric;
+
+/// Sampled-coordinate count per f32 accumulation block of the partial
+/// kernels; accumulated block sums spill into f64 at this boundary.
+pub const PARTIAL_SPILL_COORDS: usize = 32;
+
+/// Dimensions per f32 accumulation block of the exact kernels.
+pub const EXACT_SPILL_DIMS: usize = 64;
+
+/// A concrete kernel implementation tier, resolved from a
+/// [`KernelChoice`] at engine construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable unrolled scalar loops — always available.
+    Scalar,
+    /// 8-wide AVX2 (`x86_64` with runtime-detected `avx2`).
+    Avx2,
+    /// 4-wide NEON (`aarch64`; baseline feature there).
+    Neon,
+}
+
+impl KernelTier {
+    /// Stable lowercase name (config value / bench output).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        }
+    }
+}
+
+/// The configured kernel selection (`[engine] kernel` / `--kernel`):
+/// auto-detect the best available tier, or force a specific one —
+/// forcing is how deployments keep answers bitwise-identical across
+/// heterogeneous machines (every box pinned to the same tier).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Pick the best tier this CPU supports (the default).
+    #[default]
+    Auto,
+    /// Force the portable scalar tier.
+    Scalar,
+    /// Force AVX2; engine construction fails off-x86_64 or when the CPU
+    /// lacks the feature.
+    Avx2,
+    /// Force NEON; engine construction fails off-aarch64.
+    Neon,
+}
+
+impl KernelChoice {
+    /// Parse a config/CLI value (`auto|scalar|avx2|neon`).
+    pub fn parse(s: &str) -> Option<KernelChoice> {
+        match s {
+            "auto" => Some(KernelChoice::Auto),
+            "scalar" => Some(KernelChoice::Scalar),
+            "avx2" => Some(KernelChoice::Avx2),
+            "neon" => Some(KernelChoice::Neon),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (round-trips through [`KernelChoice::parse`]).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Avx2 => "avx2",
+            KernelChoice::Neon => "neon",
+        }
+    }
+}
+
+/// True when `tier`'s kernels may be executed on this machine.
+pub fn tier_available(tier: KernelTier) -> bool {
+    match tier {
+        KernelTier::Scalar => true,
+        KernelTier::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        KernelTier::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// The best tier this CPU supports (what [`KernelChoice::Auto`] picks).
+pub fn detect() -> KernelTier {
+    if tier_available(KernelTier::Avx2) {
+        KernelTier::Avx2
+    } else if tier_available(KernelTier::Neon) {
+        KernelTier::Neon
+    } else {
+        KernelTier::Scalar
+    }
+}
+
+/// Resolve a choice to a concrete tier, erroring when a forced tier is
+/// not executable on this machine (so a mis-pinned deployment fails at
+/// construction instead of silently computing on a different tier).
+pub fn resolve(choice: KernelChoice) -> Result<KernelTier, String> {
+    let tier = match choice {
+        KernelChoice::Auto => return Ok(detect()),
+        KernelChoice::Scalar => KernelTier::Scalar,
+        KernelChoice::Avx2 => KernelTier::Avx2,
+        KernelChoice::Neon => KernelTier::Neon,
+    };
+    if tier_available(tier) {
+        Ok(tier)
+    } else {
+        Err(format!(
+            "--kernel {}: tier not available on this CPU/arch (use \
+             --kernel auto, or pin a tier every machine supports)",
+            choice.as_str()
+        ))
+    }
+}
+
+/// Sampled partial-moment kernel: `(Σ v, Σ v²)` of
+/// `v = metric.coord(row[coords[i]], qg[i])` over all `i`. `qg` is the
+/// query pre-gathered at `coords` (same length).
+pub type PartialKernel = fn(&[f32], &[f32], &[u32]) -> (f64, f64);
+
+/// Exact full-row distance kernel (un-normalized).
+pub type ExactKernel = fn(&[f32], &[f32]) -> f64;
+
+/// The four kernels of one resolved tier, installed in an engine at
+/// construction. Plain `fn` pointers: dispatch happens once here, not
+/// per row.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelSet {
+    tier: KernelTier,
+    partial_l2: PartialKernel,
+    partial_l1: PartialKernel,
+    exact_l2: ExactKernel,
+    exact_l1: ExactKernel,
+}
+
+impl KernelSet {
+    /// The kernel set of a concrete tier. Panics if the tier is not
+    /// executable here — gate with [`resolve`] (which errors instead).
+    pub fn for_tier(tier: KernelTier) -> KernelSet {
+        assert!(
+            tier_available(tier),
+            "kernel tier {} not available on this machine",
+            tier.as_str()
+        );
+        match tier {
+            KernelTier::Scalar => KernelSet {
+                tier,
+                partial_l2: scalar::partial_row_l2,
+                partial_l1: scalar::partial_row_l1,
+                exact_l2: scalar::exact_row_l2,
+                exact_l1: scalar::exact_row_l1,
+            },
+            #[cfg(target_arch = "x86_64")]
+            KernelTier::Avx2 => KernelSet {
+                tier,
+                partial_l2: avx2::partial_row_l2,
+                partial_l1: avx2::partial_row_l1,
+                exact_l2: avx2::exact_row_l2,
+                exact_l1: avx2::exact_row_l1,
+            },
+            #[cfg(target_arch = "aarch64")]
+            KernelTier::Neon => KernelSet {
+                tier,
+                partial_l2: neon::partial_row_l2,
+                partial_l1: neon::partial_row_l1,
+                exact_l2: neon::exact_row_l2,
+                exact_l1: neon::exact_row_l1,
+            },
+            #[allow(unreachable_patterns)]
+            _ => unreachable!("tier_available gated"),
+        }
+    }
+
+    /// Kernel set for a choice — [`resolve`] + [`KernelSet::for_tier`].
+    pub fn for_choice(choice: KernelChoice) -> Result<KernelSet, String> {
+        Ok(KernelSet::for_tier(resolve(choice)?))
+    }
+
+    /// The auto-detected kernel set (what `NativeEngine::default` uses).
+    pub fn auto() -> KernelSet {
+        KernelSet::for_tier(detect())
+    }
+
+    /// The tier these kernels belong to.
+    pub fn tier(&self) -> KernelTier {
+        self.tier
+    }
+
+    /// The sampled partial-moment kernel for `metric`.
+    pub fn partial(&self, metric: Metric) -> PartialKernel {
+        match metric {
+            Metric::L2Sq => self.partial_l2,
+            Metric::L1 => self.partial_l1,
+        }
+    }
+
+    /// The exact full-row kernel for `metric`.
+    pub fn exact(&self, metric: Metric) -> ExactKernel {
+        match metric {
+            Metric::L2Sq => self.exact_l2,
+            Metric::L1 => self.exact_l1,
+        }
+    }
+}
+
+/// Validate a wave's sampled coordinates against the row length before
+/// any kernel runs. The scalar tier would panic on the first
+/// out-of-range index anyway; the SIMD tiers use unchecked gathered
+/// loads whose soundness rests on this check, so engines call it once
+/// per wave (O(t), amortized over the n·t kernel work).
+pub fn validate_coords(coords: &[u32], d: usize) {
+    for &j in coords {
+        assert!(
+            (j as usize) < d,
+            "sampled coordinate {j} out of range for dimension {d}"
+        );
+    }
+}
+
+/// The portable unrolled tier — fallback on every CPU and the reference
+/// the SIMD tiers' parity tests compare against (which in turn is pinned
+/// to the f64 `ScalarEngine` loops).
+pub(crate) mod scalar {
+    use super::{EXACT_SPILL_DIMS, PARTIAL_SPILL_COORDS};
+
+    /// 4-way-unrolled iterations between f64 spills.
+    const PARTIAL_SPILL_ITERS: usize = PARTIAL_SPILL_COORDS / 4;
+    /// 8-way-unrolled iterations between f64 spills.
+    const EXACT_SPILL_ITERS: usize = EXACT_SPILL_DIMS / 8;
+
+    pub(crate) fn partial_row_l2(row: &[f32], qg: &[f32], coords: &[u32])
+                                 -> (f64, f64) {
+        let mut s = 0f64;
+        let mut q = 0f64;
+        let mut s0 = 0f32;
+        let mut s1 = 0f32;
+        let mut s2 = 0f32;
+        let mut s3 = 0f32;
+        let mut q0 = 0f32;
+        let mut q1 = 0f32;
+        let mut q2 = 0f32;
+        let mut q3 = 0f32;
+        let chunks = coords.chunks_exact(4);
+        let rem = chunks.remainder();
+        let mut t = 0usize;
+        let mut iters = 0usize;
+        for c in chunks {
+            // indices validated at wave entry (j < d); qg is sequential
+            let d0 = row[c[0] as usize] - qg[t];
+            let d1 = row[c[1] as usize] - qg[t + 1];
+            let d2 = row[c[2] as usize] - qg[t + 2];
+            let d3 = row[c[3] as usize] - qg[t + 3];
+            t += 4;
+            let v0 = d0 * d0;
+            let v1 = d1 * d1;
+            let v2 = d2 * d2;
+            let v3 = d3 * d3;
+            s0 += v0;
+            s1 += v1;
+            s2 += v2;
+            s3 += v3;
+            q0 += v0 * v0;
+            q1 += v1 * v1;
+            q2 += v2 * v2;
+            q3 += v3 * v3;
+            iters += 1;
+            if iters == PARTIAL_SPILL_ITERS {
+                s += (s0 + s1) as f64 + (s2 + s3) as f64;
+                q += (q0 + q1) as f64 + (q2 + q3) as f64;
+                s0 = 0.0;
+                s1 = 0.0;
+                s2 = 0.0;
+                s3 = 0.0;
+                q0 = 0.0;
+                q1 = 0.0;
+                q2 = 0.0;
+                q3 = 0.0;
+                iters = 0;
+            }
+        }
+        s += (s0 + s1) as f64 + (s2 + s3) as f64;
+        q += (q0 + q1) as f64 + (q2 + q3) as f64;
+        for &j in rem {
+            let dv = (row[j as usize] - qg[t]) as f64;
+            t += 1;
+            let v = dv * dv;
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    pub(crate) fn partial_row_l1(row: &[f32], qg: &[f32], coords: &[u32])
+                                 -> (f64, f64) {
+        // 4-way unrolled accumulators, matching the ℓ2 kernel above
+        let mut s = 0f64;
+        let mut q = 0f64;
+        let mut s0 = 0f32;
+        let mut s1 = 0f32;
+        let mut s2 = 0f32;
+        let mut s3 = 0f32;
+        let mut q0 = 0f32;
+        let mut q1 = 0f32;
+        let mut q2 = 0f32;
+        let mut q3 = 0f32;
+        let chunks = coords.chunks_exact(4);
+        let rem = chunks.remainder();
+        let mut t = 0usize;
+        let mut iters = 0usize;
+        for c in chunks {
+            let v0 = (row[c[0] as usize] - qg[t]).abs();
+            let v1 = (row[c[1] as usize] - qg[t + 1]).abs();
+            let v2 = (row[c[2] as usize] - qg[t + 2]).abs();
+            let v3 = (row[c[3] as usize] - qg[t + 3]).abs();
+            t += 4;
+            s0 += v0;
+            s1 += v1;
+            s2 += v2;
+            s3 += v3;
+            q0 += v0 * v0;
+            q1 += v1 * v1;
+            q2 += v2 * v2;
+            q3 += v3 * v3;
+            iters += 1;
+            if iters == PARTIAL_SPILL_ITERS {
+                s += (s0 + s1) as f64 + (s2 + s3) as f64;
+                q += (q0 + q1) as f64 + (q2 + q3) as f64;
+                s0 = 0.0;
+                s1 = 0.0;
+                s2 = 0.0;
+                s3 = 0.0;
+                q0 = 0.0;
+                q1 = 0.0;
+                q2 = 0.0;
+                q3 = 0.0;
+                iters = 0;
+            }
+        }
+        s += (s0 + s1) as f64 + (s2 + s3) as f64;
+        q += (q0 + q1) as f64 + (q2 + q3) as f64;
+        for &j in rem {
+            let v = (row[j as usize] - qg[t]).abs() as f64;
+            t += 1;
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    /// Exact ℓ2² over full rows with 8-way unroll (no gather
+    /// indirection), f64 spill per [`EXACT_SPILL_DIMS`]-element block.
+    pub(crate) fn exact_row_l2(row: &[f32], query: &[f32]) -> f64 {
+        let mut s = 0f64;
+        let mut acc = [0f32; 8];
+        let n = row.len() / 8 * 8;
+        let (head_r, tail_r) = row.split_at(n);
+        let (head_q, tail_q) = query.split_at(n);
+        let mut iters = 0usize;
+        for (rc, qc) in head_r.chunks_exact(8).zip(head_q.chunks_exact(8))
+        {
+            for l in 0..8 {
+                let d = rc[l] - qc[l];
+                acc[l] += d * d;
+            }
+            iters += 1;
+            if iters == EXACT_SPILL_ITERS {
+                for a in &mut acc {
+                    s += *a as f64;
+                    *a = 0.0;
+                }
+                iters = 0;
+            }
+        }
+        for a in acc {
+            s += a as f64;
+        }
+        for (r, q) in tail_r.iter().zip(tail_q) {
+            let d = (r - q) as f64;
+            s += d * d;
+        }
+        s
+    }
+
+    pub(crate) fn exact_row_l1(row: &[f32], query: &[f32]) -> f64 {
+        let mut s = 0f64;
+        let mut acc = [0f32; 8];
+        let n = row.len() / 8 * 8;
+        let (head_r, tail_r) = row.split_at(n);
+        let (head_q, tail_q) = query.split_at(n);
+        let mut iters = 0usize;
+        for (rc, qc) in head_r.chunks_exact(8).zip(head_q.chunks_exact(8))
+        {
+            for l in 0..8 {
+                acc[l] += (rc[l] - qc[l]).abs();
+            }
+            iters += 1;
+            if iters == EXACT_SPILL_ITERS {
+                for a in &mut acc {
+                    s += *a as f64;
+                    *a = 0.0;
+                }
+                iters = 0;
+            }
+        }
+        for a in acc {
+            s += a as f64;
+        }
+        for (r, q) in tail_r.iter().zip(tail_q) {
+            s += (r - q).abs() as f64;
+        }
+        s
+    }
+}
+
+/// The AVX2 tier: 8-wide f32 arithmetic, f64 spill blocks matching the
+/// scalar tier's sizes. The sampled kernels gather row values with
+/// `vgatherdps` from the wave's coordinate ids; the exact kernels stream
+/// contiguous loads. Only dispatched after runtime feature detection.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{EXACT_SPILL_DIMS, PARTIAL_SPILL_COORDS};
+
+    /// 8-wide iterations between f64 spills of the partial kernels.
+    const PARTIAL_SPILL_ITERS: usize = PARTIAL_SPILL_COORDS / 8;
+    /// 8-wide iterations between f64 spills of the exact kernels.
+    const EXACT_SPILL_ITERS: usize = EXACT_SPILL_DIMS / 8;
+
+    /// Widen the 8 f32 lanes to f64 and add them into `acc` (4 f64
+    /// lanes; low and high halves summed lane-wise in a fixed order).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn spill(acc: __m256d, v: __m256) -> __m256d {
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(v));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v));
+        _mm256_add_pd(acc, _mm256_add_pd(lo, hi))
+    }
+
+    /// Sum the 4 f64 lanes in a fixed order: (l0+l2) + (l1+l3).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_pd(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v);
+        let hi = _mm256_extractf128_pd::<1>(v);
+        let pair = _mm_add_pd(lo, hi);
+        let swapped = _mm_unpackhi_pd(pair, pair);
+        _mm_cvtsd_f64(_mm_add_sd(pair, swapped))
+    }
+
+    /// One gathered 8-wide step shared by both partial kernels: the
+    /// element-wise difference `row[c[i]] - qg[t + i]`.
+    ///
+    /// # Safety
+    /// Requires AVX2 and every index in `c` in-bounds for `row`
+    /// (validated per wave by [`super::validate_coords`]), and
+    /// `qg[t..t + 8]` in-bounds (guaranteed: qg and coords have equal
+    /// length and `t` tracks the chunk offset).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather_diff(row: &[f32], qg: &[f32], c: &[u32], t: usize)
+                          -> __m256 {
+        let idx = _mm256_loadu_si256(c.as_ptr() as *const __m256i);
+        let r = _mm256_i32gather_ps::<4>(row.as_ptr(), idx);
+        let qv = _mm256_loadu_ps(qg.as_ptr().add(t));
+        _mm256_sub_ps(r, qv)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn partial_row_l2_impl(row: &[f32], qg: &[f32], coords: &[u32])
+                                  -> (f64, f64) {
+        let mut sacc = _mm256_setzero_pd();
+        let mut qacc = _mm256_setzero_pd();
+        let mut s32 = _mm256_setzero_ps();
+        let mut q32 = _mm256_setzero_ps();
+        let chunks = coords.chunks_exact(8);
+        let rem = chunks.remainder();
+        let mut t = 0usize;
+        let mut iters = 0usize;
+        for c in chunks {
+            let dv = gather_diff(row, qg, c, t);
+            t += 8;
+            let v = _mm256_mul_ps(dv, dv);
+            s32 = _mm256_add_ps(s32, v);
+            q32 = _mm256_add_ps(q32, _mm256_mul_ps(v, v));
+            iters += 1;
+            if iters == PARTIAL_SPILL_ITERS {
+                sacc = spill(sacc, s32);
+                qacc = spill(qacc, q32);
+                s32 = _mm256_setzero_ps();
+                q32 = _mm256_setzero_ps();
+                iters = 0;
+            }
+        }
+        sacc = spill(sacc, s32);
+        qacc = spill(qacc, q32);
+        let mut s = hsum_pd(sacc);
+        let mut q = hsum_pd(qacc);
+        for &j in rem {
+            let dv = (row[j as usize] - qg[t]) as f64;
+            t += 1;
+            let v = dv * dv;
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn partial_row_l1_impl(row: &[f32], qg: &[f32], coords: &[u32])
+                                  -> (f64, f64) {
+        let sign = _mm256_set1_ps(-0.0);
+        let mut sacc = _mm256_setzero_pd();
+        let mut qacc = _mm256_setzero_pd();
+        let mut s32 = _mm256_setzero_ps();
+        let mut q32 = _mm256_setzero_ps();
+        let chunks = coords.chunks_exact(8);
+        let rem = chunks.remainder();
+        let mut t = 0usize;
+        let mut iters = 0usize;
+        for c in chunks {
+            let dv = gather_diff(row, qg, c, t);
+            t += 8;
+            let v = _mm256_andnot_ps(sign, dv); // |dv|
+            s32 = _mm256_add_ps(s32, v);
+            q32 = _mm256_add_ps(q32, _mm256_mul_ps(v, v));
+            iters += 1;
+            if iters == PARTIAL_SPILL_ITERS {
+                sacc = spill(sacc, s32);
+                qacc = spill(qacc, q32);
+                s32 = _mm256_setzero_ps();
+                q32 = _mm256_setzero_ps();
+                iters = 0;
+            }
+        }
+        sacc = spill(sacc, s32);
+        qacc = spill(qacc, q32);
+        let mut s = hsum_pd(sacc);
+        let mut q = hsum_pd(qacc);
+        for &j in rem {
+            let v = (row[j as usize] - qg[t]).abs() as f64;
+            t += 1;
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn exact_row_l2_impl(row: &[f32], query: &[f32]) -> f64 {
+        let n = row.len() / 8 * 8;
+        let (head_r, tail_r) = row.split_at(n);
+        let (head_q, tail_q) = query.split_at(n);
+        let mut acc64 = _mm256_setzero_pd();
+        let mut acc = _mm256_setzero_ps();
+        let mut iters = 0usize;
+        for (rc, qc) in head_r.chunks_exact(8).zip(head_q.chunks_exact(8))
+        {
+            let r = _mm256_loadu_ps(rc.as_ptr());
+            let q = _mm256_loadu_ps(qc.as_ptr());
+            let d = _mm256_sub_ps(r, q);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            iters += 1;
+            if iters == EXACT_SPILL_ITERS {
+                acc64 = spill(acc64, acc);
+                acc = _mm256_setzero_ps();
+                iters = 0;
+            }
+        }
+        acc64 = spill(acc64, acc);
+        let mut s = hsum_pd(acc64);
+        for (r, q) in tail_r.iter().zip(tail_q) {
+            let d = (r - q) as f64;
+            s += d * d;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn exact_row_l1_impl(row: &[f32], query: &[f32]) -> f64 {
+        let sign = _mm256_set1_ps(-0.0);
+        let n = row.len() / 8 * 8;
+        let (head_r, tail_r) = row.split_at(n);
+        let (head_q, tail_q) = query.split_at(n);
+        let mut acc64 = _mm256_setzero_pd();
+        let mut acc = _mm256_setzero_ps();
+        let mut iters = 0usize;
+        for (rc, qc) in head_r.chunks_exact(8).zip(head_q.chunks_exact(8))
+        {
+            let r = _mm256_loadu_ps(rc.as_ptr());
+            let q = _mm256_loadu_ps(qc.as_ptr());
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_andnot_ps(sign, _mm256_sub_ps(r, q)),
+            );
+            iters += 1;
+            if iters == EXACT_SPILL_ITERS {
+                acc64 = spill(acc64, acc);
+                acc = _mm256_setzero_ps();
+                iters = 0;
+            }
+        }
+        acc64 = spill(acc64, acc);
+        let mut s = hsum_pd(acc64);
+        for (r, q) in tail_r.iter().zip(tail_q) {
+            s += (r - q).abs() as f64;
+        }
+        s
+    }
+
+    // Safe fn-pointer shims. SAFETY: `KernelSet::for_tier` only hands
+    // these out after `tier_available(Avx2)` (runtime detection)
+    // succeeded, and `validate_coords` bounds every gathered index per
+    // wave before the partial kernels run.
+
+    pub(super) fn partial_row_l2(row: &[f32], qg: &[f32], coords: &[u32])
+                                 -> (f64, f64) {
+        debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+        debug_assert_eq!(qg.len(), coords.len());
+        unsafe { partial_row_l2_impl(row, qg, coords) }
+    }
+
+    pub(super) fn partial_row_l1(row: &[f32], qg: &[f32], coords: &[u32])
+                                 -> (f64, f64) {
+        debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+        debug_assert_eq!(qg.len(), coords.len());
+        unsafe { partial_row_l1_impl(row, qg, coords) }
+    }
+
+    pub(super) fn exact_row_l2(row: &[f32], query: &[f32]) -> f64 {
+        debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+        unsafe { exact_row_l2_impl(row, query) }
+    }
+
+    pub(super) fn exact_row_l1(row: &[f32], query: &[f32]) -> f64 {
+        debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+        unsafe { exact_row_l1_impl(row, query) }
+    }
+}
+
+/// The NEON tier: 4-wide f32 arithmetic with the same f64 spill blocks.
+/// NEON is a baseline aarch64 feature, so this is safe code (gathers are
+/// four scalar indexed loads — aarch64 has no hardware f32 gather).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::{EXACT_SPILL_DIMS, PARTIAL_SPILL_COORDS};
+
+    /// 4-wide iterations between f64 spills of the partial kernels.
+    const PARTIAL_SPILL_ITERS: usize = PARTIAL_SPILL_COORDS / 4;
+    /// 4-wide iterations between f64 spills of the exact kernels.
+    const EXACT_SPILL_ITERS: usize = EXACT_SPILL_DIMS / 4;
+
+    /// Widen 4 f32 lanes to f64 and add into `acc` (2 f64 lanes).
+    #[inline(always)]
+    fn spill(acc: float64x2_t, v: float32x4_t) -> float64x2_t {
+        // SAFETY: NEON is baseline on aarch64.
+        unsafe {
+            let lo = vcvt_f64_f32(vget_low_f32(v));
+            let hi = vcvt_high_f64_f32(v);
+            vaddq_f64(acc, vaddq_f64(lo, hi))
+        }
+    }
+
+    #[inline(always)]
+    fn hsum(acc: float64x2_t) -> f64 {
+        unsafe { vaddvq_f64(acc) }
+    }
+
+    #[inline(always)]
+    fn gather4(row: &[f32], c: &[u32]) -> float32x4_t {
+        let g = [
+            row[c[0] as usize],
+            row[c[1] as usize],
+            row[c[2] as usize],
+            row[c[3] as usize],
+        ];
+        unsafe { vld1q_f32(g.as_ptr()) }
+    }
+
+    pub(super) fn partial_row_l2(row: &[f32], qg: &[f32], coords: &[u32])
+                                 -> (f64, f64) {
+        unsafe {
+            let mut sacc = vdupq_n_f64(0.0);
+            let mut qacc = vdupq_n_f64(0.0);
+            let mut s32 = vdupq_n_f32(0.0);
+            let mut q32 = vdupq_n_f32(0.0);
+            let chunks = coords.chunks_exact(4);
+            let rem = chunks.remainder();
+            let mut t = 0usize;
+            let mut iters = 0usize;
+            for c in chunks {
+                let r = gather4(row, c);
+                let q = vld1q_f32(qg.as_ptr().add(t));
+                t += 4;
+                let dv = vsubq_f32(r, q);
+                let v = vmulq_f32(dv, dv);
+                s32 = vaddq_f32(s32, v);
+                q32 = vaddq_f32(q32, vmulq_f32(v, v));
+                iters += 1;
+                if iters == PARTIAL_SPILL_ITERS {
+                    sacc = spill(sacc, s32);
+                    qacc = spill(qacc, q32);
+                    s32 = vdupq_n_f32(0.0);
+                    q32 = vdupq_n_f32(0.0);
+                    iters = 0;
+                }
+            }
+            sacc = spill(sacc, s32);
+            qacc = spill(qacc, q32);
+            let mut s = hsum(sacc);
+            let mut q = hsum(qacc);
+            for &j in rem {
+                let dv = (row[j as usize] - qg[t]) as f64;
+                t += 1;
+                let v = dv * dv;
+                s += v;
+                q += v * v;
+            }
+            (s, q)
+        }
+    }
+
+    pub(super) fn partial_row_l1(row: &[f32], qg: &[f32], coords: &[u32])
+                                 -> (f64, f64) {
+        unsafe {
+            let mut sacc = vdupq_n_f64(0.0);
+            let mut qacc = vdupq_n_f64(0.0);
+            let mut s32 = vdupq_n_f32(0.0);
+            let mut q32 = vdupq_n_f32(0.0);
+            let chunks = coords.chunks_exact(4);
+            let rem = chunks.remainder();
+            let mut t = 0usize;
+            let mut iters = 0usize;
+            for c in chunks {
+                let r = gather4(row, c);
+                let q = vld1q_f32(qg.as_ptr().add(t));
+                t += 4;
+                let v = vabsq_f32(vsubq_f32(r, q));
+                s32 = vaddq_f32(s32, v);
+                q32 = vaddq_f32(q32, vmulq_f32(v, v));
+                iters += 1;
+                if iters == PARTIAL_SPILL_ITERS {
+                    sacc = spill(sacc, s32);
+                    qacc = spill(qacc, q32);
+                    s32 = vdupq_n_f32(0.0);
+                    q32 = vdupq_n_f32(0.0);
+                    iters = 0;
+                }
+            }
+            sacc = spill(sacc, s32);
+            qacc = spill(qacc, q32);
+            let mut s = hsum(sacc);
+            let mut q = hsum(qacc);
+            for &j in rem {
+                let v = (row[j as usize] - qg[t]).abs() as f64;
+                t += 1;
+                s += v;
+                q += v * v;
+            }
+            (s, q)
+        }
+    }
+
+    pub(super) fn exact_row_l2(row: &[f32], query: &[f32]) -> f64 {
+        unsafe {
+            let n = row.len() / 4 * 4;
+            let (head_r, tail_r) = row.split_at(n);
+            let (head_q, tail_q) = query.split_at(n);
+            let mut acc64 = vdupq_n_f64(0.0);
+            let mut acc = vdupq_n_f32(0.0);
+            let mut iters = 0usize;
+            for (rc, qc) in
+                head_r.chunks_exact(4).zip(head_q.chunks_exact(4))
+            {
+                let d = vsubq_f32(vld1q_f32(rc.as_ptr()),
+                                  vld1q_f32(qc.as_ptr()));
+                acc = vaddq_f32(acc, vmulq_f32(d, d));
+                iters += 1;
+                if iters == EXACT_SPILL_ITERS {
+                    acc64 = spill(acc64, acc);
+                    acc = vdupq_n_f32(0.0);
+                    iters = 0;
+                }
+            }
+            acc64 = spill(acc64, acc);
+            let mut s = hsum(acc64);
+            for (r, q) in tail_r.iter().zip(tail_q) {
+                let d = (r - q) as f64;
+                s += d * d;
+            }
+            s
+        }
+    }
+
+    pub(super) fn exact_row_l1(row: &[f32], query: &[f32]) -> f64 {
+        unsafe {
+            let n = row.len() / 4 * 4;
+            let (head_r, tail_r) = row.split_at(n);
+            let (head_q, tail_q) = query.split_at(n);
+            let mut acc64 = vdupq_n_f64(0.0);
+            let mut acc = vdupq_n_f32(0.0);
+            let mut iters = 0usize;
+            for (rc, qc) in
+                head_r.chunks_exact(4).zip(head_q.chunks_exact(4))
+            {
+                acc = vaddq_f32(
+                    acc,
+                    vabsq_f32(vsubq_f32(vld1q_f32(rc.as_ptr()),
+                                        vld1q_f32(qc.as_ptr()))),
+                );
+                iters += 1;
+                if iters == EXACT_SPILL_ITERS {
+                    acc64 = spill(acc64, acc);
+                    acc = vdupq_n_f32(0.0);
+                    iters = 0;
+                }
+            }
+            acc64 = spill(acc64, acc);
+            let mut s = hsum(acc64);
+            for (r, q) in tail_r.iter().zip(tail_q) {
+                s += (r - q).abs() as f64;
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Rng;
+
+    /// f64 reference matching `ScalarEngine`'s summation exactly.
+    fn ref_partial(row: &[f32], qg: &[f32], coords: &[u32],
+                   metric: Metric) -> (f64, f64) {
+        let mut s = 0f64;
+        let mut q = 0f64;
+        for (i, &j) in coords.iter().enumerate() {
+            let v = metric.coord(row[j as usize], qg[i]) as f64;
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    fn ref_exact(row: &[f32], query: &[f32], metric: Metric) -> f64 {
+        row.iter()
+            .zip(query)
+            .map(|(&r, &q)| metric.coord(r, q) as f64)
+            .sum()
+    }
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * a.abs().max(b.abs()).max(1.0)
+    }
+
+    /// Every tier available on this machine (scalar always; plus the
+    /// auto-detected SIMD tier when it isn't scalar).
+    pub(crate) fn available_tiers() -> Vec<KernelTier> {
+        let mut tiers = vec![KernelTier::Scalar];
+        if detect() != KernelTier::Scalar {
+            tiers.push(detect());
+        }
+        tiers
+    }
+
+    #[test]
+    fn choice_parses_and_roundtrips() {
+        for c in [KernelChoice::Auto, KernelChoice::Scalar,
+                  KernelChoice::Avx2, KernelChoice::Neon]
+        {
+            assert_eq!(KernelChoice::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(KernelChoice::parse("sse9"), None);
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn auto_resolves_and_scalar_always_available() {
+        assert!(tier_available(KernelTier::Scalar));
+        let t = resolve(KernelChoice::Auto).unwrap();
+        assert!(tier_available(t));
+        assert_eq!(resolve(KernelChoice::Scalar).unwrap(),
+                   KernelTier::Scalar);
+        // a forced tier for the wrong architecture errors cleanly
+        #[cfg(target_arch = "x86_64")]
+        assert!(resolve(KernelChoice::Neon).is_err());
+        #[cfg(target_arch = "aarch64")]
+        assert!(resolve(KernelChoice::Avx2).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn coord_validation_rejects_out_of_range() {
+        validate_coords(&[0, 3, 7], 7);
+    }
+
+    /// Satellite harness: adversarial coordinate counts up to (and past)
+    /// d = 1024 with large-magnitude rows, pinning every available tier
+    /// against the f64 reference. The f32 accumulators only survive this
+    /// because of the bounded spill blocks — with unbounded f32
+    /// accumulation the ℓ2 second moment drifts past 1e-5 relative error
+    /// well before t = 4096 at these magnitudes.
+    #[test]
+    fn partial_kernels_hold_tolerance_at_large_t_and_magnitude() {
+        const TOL: f64 = 1e-5;
+        proptest::check(15, |rng: &mut Rng| {
+            let d = 1024 + rng.below(1024);
+            let scale = [1.0f32, 100.0, 1000.0][rng.below(3)];
+            let row: Vec<f32> = (0..d)
+                .map(|_| rng.gaussian() as f32 * scale)
+                .collect();
+            let query: Vec<f32> = (0..d)
+                .map(|_| rng.gaussian() as f32 * scale)
+                .collect();
+            // t from the unroll boundary up to 4 pulls past d
+            let t = [7, 63, 1023, d, 2 * d, 4 * d][rng.below(6)];
+            let coords: Vec<u32> =
+                (0..t).map(|_| rng.below(d) as u32).collect();
+            let qg: Vec<f32> =
+                coords.iter().map(|&j| query[j as usize]).collect();
+            for tier in available_tiers() {
+                let ks = KernelSet::for_tier(tier);
+                for metric in [Metric::L2Sq, Metric::L1] {
+                    let (s, q) = ks.partial(metric)(&row, &qg, &coords);
+                    let (rs, rq) = ref_partial(&row, &qg, &coords, metric);
+                    crate::prop_assert!(
+                        close(s, rs, TOL),
+                        "{metric:?} {} t={t} scale={scale} sum: {s} vs \
+                         {rs}",
+                        tier.as_str()
+                    );
+                    crate::prop_assert!(
+                        close(q, rq, TOL),
+                        "{metric:?} {} t={t} scale={scale} sq: {q} vs \
+                         {rq}",
+                        tier.as_str()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Exact kernels under the same adversarial regime: large d, large
+    /// magnitudes, dims straddling every tier's vector width.
+    #[test]
+    fn exact_kernels_hold_tolerance_at_large_d_and_magnitude() {
+        const TOL: f64 = 1e-5;
+        let mut rng = Rng::new(0x5EED);
+        for &d in &[1usize, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1023, 1024,
+                    1025, 2048]
+        {
+            let scale = 1000.0f32;
+            let row: Vec<f32> =
+                (0..d).map(|_| rng.gaussian() as f32 * scale).collect();
+            let query: Vec<f32> =
+                (0..d).map(|_| rng.gaussian() as f32 * scale).collect();
+            for tier in available_tiers() {
+                let ks = KernelSet::for_tier(tier);
+                for metric in [Metric::L2Sq, Metric::L1] {
+                    let got = ks.exact(metric)(&row, &query);
+                    let want = ref_exact(&row, &query, metric);
+                    assert!(
+                        close(got, want, TOL),
+                        "{metric:?} {} d={d}: {got} vs {want}",
+                        tier.as_str()
+                    );
+                }
+            }
+        }
+    }
+
+    /// SIMD-width boundary sweep: every tier must agree with the scalar
+    /// tier at lengths w−1, w, w+1 around each vector/unroll width.
+    #[test]
+    fn tiers_agree_across_chunk_boundaries() {
+        const TOL: f64 = 1e-5;
+        let mut rng = Rng::new(0xB0DA);
+        let d = 300;
+        let row: Vec<f32> =
+            (0..d).map(|_| rng.gaussian() as f32).collect();
+        let query: Vec<f32> =
+            (0..d).map(|_| rng.gaussian() as f32).collect();
+        let scalar = KernelSet::for_tier(KernelTier::Scalar);
+        for tier in available_tiers() {
+            let ks = KernelSet::for_tier(tier);
+            for &t in &[1usize, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33,
+                        63, 64, 65, 255, 256, 257]
+            {
+                let coords: Vec<u32> =
+                    (0..t).map(|_| rng.below(d) as u32).collect();
+                let qg: Vec<f32> =
+                    coords.iter().map(|&j| query[j as usize]).collect();
+                for metric in [Metric::L2Sq, Metric::L1] {
+                    let (s, q) = ks.partial(metric)(&row, &qg, &coords);
+                    let (rs, rq) =
+                        scalar.partial(metric)(&row, &qg, &coords);
+                    assert!(close(s, rs, TOL) && close(q, rq, TOL),
+                            "{metric:?} {} t={t}", tier.as_str());
+                }
+            }
+        }
+    }
+}

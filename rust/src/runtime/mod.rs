@@ -1,6 +1,13 @@
 //! Runtime layer: compute engines behind the coordinator's hot path.
 //!
-//! * [`native`] — optimized rust loops (wall-clock hot path, Fig 6);
+//! * [`kernels`] — the per-row hot-path kernels in three tiers
+//!   (portable scalar, AVX2, NEON) behind runtime CPU-feature dispatch
+//!   resolved once at engine construction;
+//! * [`quant`] — the opt-in int8 quantized sampling tier: per-row
+//!   affine shadow datasets for `partial_sums`/`pull_batch` waves, with
+//!   the error bound the PAC accounting absorbs;
+//! * [`native`] — optimized rust loops (wall-clock hot path, Fig 6),
+//!   wave mechanics over the dispatched kernels;
 //! * [`partition`] — the shared wave splitter: contiguous floor-boundary
 //!   row shards, slot bookkeeping, scatter-merge. Both sharded backends
 //!   below plan their waves here, so they provably split identically;
@@ -27,15 +34,18 @@
 //! (coordinator::arms) by parity tests.
 
 pub mod artifacts;
+pub mod kernels;
 pub mod native;
 pub mod partition;
 pub mod placement;
+pub mod quant;
 pub mod remote;
 pub mod sharded;
 pub mod wire;
 
 use crate::config::EngineKind;
 use crate::coordinator::arms::{PullEngine, ScalarEngine};
+use kernels::KernelChoice;
 
 /// Build the configured host-side pull engine.
 ///
@@ -57,8 +67,19 @@ use crate::coordinator::arms::{PullEngine, ScalarEngine};
 /// The PJRT engine is constructed separately by its callers (it needs an
 /// artifact dir + metric and aligns `round_pulls` to the artifact
 /// shape), so requesting it here is an error.
+///
+/// `kernel` (`[engine] kernel` / `--kernel`) forces the native engine's
+/// per-row kernel tier; `quantized` (`[engine] quantized` /
+/// `--quantized`) routes its sampled waves through the int8 shadow
+/// tier. Both tune the process doing the computing, so with a remote
+/// ring `kernel` must be set on the `shard-serve` side, and `quantized`
+/// is local-only (the wire protocol carries no bias bound for the
+/// coordinator's PAC accounting to absorb) — requesting either here
+/// alongside `--remote` is rejected rather than silently ignored, and
+/// both are meaningless for the f64 `ScalarEngine`.
 pub fn build_host_engine(kind: EngineKind, shards: usize,
-                         remote: &[String], degraded: bool)
+                         remote: &[String], degraded: bool,
+                         kernel: KernelChoice, quantized: bool)
                          -> Result<Box<dyn PullEngine + Send>, String> {
     let shards = shards.max(1);
     if !remote.is_empty() {
@@ -74,6 +95,20 @@ pub fn build_host_engine(kind: EngineKind, shards: usize,
                         with --engine native or drop the engine flag"
                 .into());
         }
+        if kernel != KernelChoice::Auto {
+            return Err("--kernel selects the tier of the process doing \
+                        the computing: pass it to shard-serve, not to a \
+                        --remote coordinator"
+                .into());
+        }
+        if quantized {
+            return Err("--quantized is a local-engine feature: the \
+                        coordinator must widen confidence intervals by \
+                        the engine's quantization error bound, and the \
+                        wire protocol carries no such bound — drop \
+                        --remote to use the quantized tier"
+                .into());
+        }
         let map = placement::PlacementMap::parse(remote)?;
         return Ok(Box::new(remote::RemoteEngine::connect_opts(
             &map,
@@ -86,16 +121,25 @@ pub fn build_host_engine(kind: EngineKind, shards: usize,
                     have no shards to lose"
             .into());
     }
+    if kind == EngineKind::Scalar
+        && (kernel != KernelChoice::Auto || quantized)
+    {
+        return Err("--kernel/--quantized tune the native engine; the \
+                    scalar engine is the f64 semantic reference and has \
+                    exactly one implementation"
+            .into());
+    }
     Ok(match kind {
         EngineKind::Scalar if shards == 1 => Box::new(ScalarEngine),
         EngineKind::Scalar => {
             Box::new(sharded::ShardedEngine::new(ScalarEngine, shards))
         }
         EngineKind::Native if shards == 1 => {
-            Box::new(native::NativeEngine::default())
+            Box::new(native::NativeEngine::with_options(kernel,
+                                                        quantized)?)
         }
         EngineKind::Native => Box::new(sharded::ShardedEngine::new(
-            native::NativeEngine::default(),
+            native::NativeEngine::with_options(kernel, quantized)?,
             shards,
         )),
         EngineKind::Pjrt => {

@@ -1,20 +1,43 @@
 //! Optimized native pull engine — the wall-clock hot path (Fig 6).
 //!
-//! Semantics identical to `ScalarEngine` (the parity tests enforce this);
-//! the difference is mechanical: 4-way unrolled accumulators in f32 (one
-//! f64 accumulation per row at the end), branch-free metric dispatch
-//! hoisted out of the inner loop, and a coordinate-major gather order that
-//! walks each data row once.
+//! Semantics identical to `ScalarEngine` (the parity tests enforce
+//! this); the difference is mechanical. The per-row arithmetic lives in
+//! [`runtime::kernels`](crate::runtime::kernels): a [`KernelSet`] of
+//! scalar / AVX2 / NEON implementations resolved **once at
+//! construction** (auto-detected or forced via `[engine] kernel`),
+//! never per call. This engine owns the wave mechanics around those
+//! kernels: the query is gathered at the round's sampled coordinates
+//! once per wave so the per-arm inner loop does ONE random load (row) +
+//! one sequential load (qg) per coordinate instead of two, and
+//! multi-query `pull_batch` waves are swept in dataset-row order.
+//!
+//! With the opt-in quantized tier (`[engine] quantized = true`) the
+//! sampled waves read an int8 shadow copy of the dataset instead
+//! ([`runtime::quant`](crate::runtime::quant)); `exact_dists` always
+//! scores on exact f32, and [`PullEngine::quant_bias`] reports the
+//! error bound the drivers fold into the confidence half-widths.
+
+use std::sync::Arc;
 
 use crate::coordinator::arms::{PullEngine, PullRequest};
 use crate::data::dense::{DenseDataset, Metric};
+use crate::runtime::kernels::{self, KernelChoice, KernelSet, KernelTier};
+use crate::runtime::quant::{self, QuantShadow};
 
-#[derive(Default, Clone, Debug)]
+#[derive(Clone, Debug)]
 pub struct NativeEngine {
+    /// the four per-row kernels of the tier resolved at construction
+    kernels: KernelSet,
+    /// route sampled waves through the int8 shadow dataset
+    quantized: bool,
+    /// lazily-bound shadow for the dataset this engine is serving,
+    /// keyed by buffer address (shards cloning this engine share the
+    /// underlying shadow through the process-wide cache)
+    shadow: Option<(usize, Arc<QuantShadow>)>,
     /// query values gathered at the round's sampled coordinates — built
     /// once per partial_sums call so the per-arm inner loop does ONE
     /// random load (row) + one sequential load (qg) per coordinate
-    /// instead of two random loads (§Perf iteration 2)
+    /// instead of two (docs/ARCHITECTURE.md, "Hot-path kernels")
     qg: Vec<f32>,
     /// (data row, request, output slot) jobs of the current pull_batch
     /// wave — engine scratch reused across rounds so the per-round
@@ -24,134 +47,51 @@ pub struct NativeEngine {
     offsets: Vec<usize>,
 }
 
-#[inline(always)]
-fn partial_row_l2(row: &[f32], qg: &[f32], coords: &[u32]) -> (f64, f64) {
-    let mut s0 = 0f32;
-    let mut s1 = 0f32;
-    let mut s2 = 0f32;
-    let mut s3 = 0f32;
-    let mut q0 = 0f32;
-    let mut q1 = 0f32;
-    let mut q2 = 0f32;
-    let mut q3 = 0f32;
-    let chunks = coords.chunks_exact(4);
-    let rem = chunks.remainder();
-    let mut t = 0usize;
-    for c in chunks {
-        // indices validated at sample time (j < d); qg is sequential
-        let d0 = row[c[0] as usize] - qg[t];
-        let d1 = row[c[1] as usize] - qg[t + 1];
-        let d2 = row[c[2] as usize] - qg[t + 2];
-        let d3 = row[c[3] as usize] - qg[t + 3];
-        t += 4;
-        let v0 = d0 * d0;
-        let v1 = d1 * d1;
-        let v2 = d2 * d2;
-        let v3 = d3 * d3;
-        s0 += v0;
-        s1 += v1;
-        s2 += v2;
-        s3 += v3;
-        q0 += v0 * v0;
-        q1 += v1 * v1;
-        q2 += v2 * v2;
-        q3 += v3 * v3;
+impl Default for NativeEngine {
+    /// Auto-detected kernel tier, quantized tier off.
+    fn default() -> Self {
+        NativeEngine::from_kernels(KernelSet::auto(), false)
     }
-    let mut s = (s0 + s1) as f64 + (s2 + s3) as f64;
-    let mut q = (q0 + q1) as f64 + (q2 + q3) as f64;
-    for &j in rem {
-        let d = (row[j as usize] - qg[t]) as f64;
-        t += 1;
-        let v = d * d;
-        s += v;
-        q += v * v;
-    }
-    (s, q)
 }
 
-#[inline(always)]
-fn partial_row_l1(row: &[f32], qg: &[f32], coords: &[u32]) -> (f64, f64) {
-    // 4-way unrolled accumulators, matching the ℓ2 kernel above
-    let mut s0 = 0f32;
-    let mut s1 = 0f32;
-    let mut s2 = 0f32;
-    let mut s3 = 0f32;
-    let mut q0 = 0f32;
-    let mut q1 = 0f32;
-    let mut q2 = 0f32;
-    let mut q3 = 0f32;
-    let chunks = coords.chunks_exact(4);
-    let rem = chunks.remainder();
-    let mut t = 0usize;
-    for c in chunks {
-        let v0 = (row[c[0] as usize] - qg[t]).abs();
-        let v1 = (row[c[1] as usize] - qg[t + 1]).abs();
-        let v2 = (row[c[2] as usize] - qg[t + 2]).abs();
-        let v3 = (row[c[3] as usize] - qg[t + 3]).abs();
-        t += 4;
-        s0 += v0;
-        s1 += v1;
-        s2 += v2;
-        s3 += v3;
-        q0 += v0 * v0;
-        q1 += v1 * v1;
-        q2 += v2 * v2;
-        q3 += v3 * v3;
+impl NativeEngine {
+    /// Engine with an explicit kernel choice (`[engine] kernel` /
+    /// `--kernel`) and quantized-tier switch. Errors when a forced
+    /// kernel tier is not executable on this machine.
+    pub fn with_options(kernel: KernelChoice, quantized: bool)
+                        -> Result<NativeEngine, String> {
+        Ok(NativeEngine::from_kernels(KernelSet::for_choice(kernel)?,
+                                      quantized))
     }
-    let mut s = (s0 + s1) as f64 + (s2 + s3) as f64;
-    let mut q = (q0 + q1) as f64 + (q2 + q3) as f64;
-    for &j in rem {
-        let v = (row[j as usize] - qg[t]).abs() as f64;
-        t += 1;
-        s += v;
-        q += v * v;
-    }
-    (s, q)
-}
 
-/// Exact ℓ2² over full rows with 8-way unroll (no gather indirection).
-#[inline(always)]
-fn exact_row_l2(row: &[f32], query: &[f32]) -> f64 {
-    let mut acc = [0f32; 8];
-    let n = row.len() / 8 * 8;
-    let (head_r, tail_r) = row.split_at(n);
-    let (head_q, tail_q) = query.split_at(n);
-    for (rc, qc) in head_r.chunks_exact(8).zip(head_q.chunks_exact(8)) {
-        for l in 0..8 {
-            let d = rc[l] - qc[l];
-            acc[l] += d * d;
+    fn from_kernels(kernels: KernelSet, quantized: bool) -> NativeEngine {
+        NativeEngine {
+            kernels,
+            quantized,
+            shadow: None,
+            qg: Vec::new(),
+            jobs: Vec::new(),
+            offsets: Vec::new(),
         }
     }
-    let mut s = 0f64;
-    for a in acc {
-        s += a as f64;
-    }
-    for (r, q) in tail_r.iter().zip(tail_q) {
-        let d = (r - q) as f64;
-        s += d * d;
-    }
-    s
-}
 
-#[inline(always)]
-fn exact_row_l1(row: &[f32], query: &[f32]) -> f64 {
-    let mut acc = [0f32; 8];
-    let n = row.len() / 8 * 8;
-    let (head_r, tail_r) = row.split_at(n);
-    let (head_q, tail_q) = query.split_at(n);
-    for (rc, qc) in head_r.chunks_exact(8).zip(head_q.chunks_exact(8)) {
-        for l in 0..8 {
-            acc[l] += (rc[l] - qc[l]).abs();
+    /// The kernel tier this engine dispatches to.
+    pub fn kernel_tier(&self) -> KernelTier {
+        self.kernels.tier()
+    }
+
+    /// Whether sampled waves read the int8 quantized shadow.
+    pub fn is_quantized(&self) -> bool {
+        self.quantized
+    }
+
+    /// Bind (build or fetch) the quantized shadow for `data`.
+    fn ensure_shadow(&mut self, data: &DenseDataset) {
+        let key = data.raw().as_ptr() as usize;
+        if !matches!(&self.shadow, Some((k, _)) if *k == key) {
+            self.shadow = Some((key, quant::shadow_for(data)));
         }
     }
-    let mut s = 0f64;
-    for a in acc {
-        s += a as f64;
-    }
-    for (r, q) in tail_r.iter().zip(tail_q) {
-        s += (r - q).abs() as f64;
-    }
-    s
 }
 
 impl PullEngine for NativeEngine {
@@ -165,36 +105,36 @@ impl PullEngine for NativeEngine {
         out_sum: &mut Vec<f64>,
         out_sq: &mut Vec<f64>,
     ) {
+        // one O(t) bounds pass per wave: the SIMD tiers' gathered loads
+        // are unchecked and rely on this
+        kernels::validate_coords(coord_ids, data.d);
         out_sum.clear();
         out_sq.clear();
         out_sum.reserve(rows.len());
         out_sq.reserve(rows.len());
-        // gather the query once: per-arm loops then do one random load per
-        // coordinate instead of two
+        // gather the query once: per-arm loops then do one random load
+        // per coordinate instead of two
         self.qg.clear();
         self.qg.reserve(coord_ids.len());
         for &j in coord_ids {
             self.qg.push(query[j as usize]);
         }
-        match metric {
-            Metric::L2Sq => {
-                for &r in rows {
-                    let (s, q) =
-                        partial_row_l2(data.row(r as usize), &self.qg,
-                                       coord_ids);
-                    out_sum.push(s);
-                    out_sq.push(q);
-                }
+        if self.quantized {
+            self.ensure_shadow(data);
+            let (_, shadow) = self.shadow.as_ref().unwrap();
+            for &r in rows {
+                let (s, q) = shadow.partial_row(r as usize, &self.qg,
+                                                coord_ids, metric);
+                out_sum.push(s);
+                out_sq.push(q);
             }
-            Metric::L1 => {
-                for &r in rows {
-                    let (s, q) =
-                        partial_row_l1(data.row(r as usize), &self.qg,
-                                       coord_ids);
-                    out_sum.push(s);
-                    out_sq.push(q);
-                }
-            }
+            return;
+        }
+        let kernel = self.kernels.partial(metric);
+        for &r in rows {
+            let (s, q) = kernel(data.row(r as usize), &self.qg, coord_ids);
+            out_sum.push(s);
+            out_sq.push(q);
         }
     }
 
@@ -206,19 +146,12 @@ impl PullEngine for NativeEngine {
         metric: Metric,
         out: &mut Vec<f64>,
     ) {
+        // always exact f32 — the quantized tier never touches rescoring
         out.clear();
         out.reserve(rows.len());
-        match metric {
-            Metric::L2Sq => {
-                for &r in rows {
-                    out.push(exact_row_l2(data.row(r as usize), query));
-                }
-            }
-            Metric::L1 => {
-                for &r in rows {
-                    out.push(exact_row_l1(data.row(r as usize), query));
-                }
-            }
+        let kernel = self.kernels.exact(metric);
+        for &r in rows {
+            out.push(kernel(data.row(r as usize), query));
         }
     }
 
@@ -228,8 +161,8 @@ impl PullEngine for NativeEngine {
     /// `partial_sums`), then the (row, request) jobs are sorted by row so
     /// the pass walks the dataset block-by-block: a data row pulled by
     /// many concurrent queries is loaded from memory once per round
-    /// instead of once per query. Per-job arithmetic reuses the unrolled
-    /// row kernels, so outputs are bit-identical to per-request
+    /// instead of once per query. Per-job arithmetic reuses the per-row
+    /// kernels, so outputs are bit-identical to per-request
     /// `partial_sums` calls.
     fn pull_batch(
         &mut self,
@@ -250,6 +183,7 @@ impl PullEngine for NativeEngine {
         self.offsets.clear();
         self.offsets.reserve(reqs.len());
         for r in reqs {
+            kernels::validate_coords(r.coord_ids, data.d);
             self.offsets.push(self.qg.len());
             for &j in r.coord_ids {
                 self.qg.push(r.query[j as usize]);
@@ -266,21 +200,38 @@ impl PullEngine for NativeEngine {
             }
         }
         self.jobs.sort_unstable_by_key(|&(row, _, _)| row);
+        if self.quantized {
+            self.ensure_shadow(data);
+            let (_, shadow) = self.shadow.as_ref().unwrap();
+            for &(row, ri, oi) in &self.jobs {
+                let r = &reqs[ri as usize];
+                let off = self.offsets[ri as usize];
+                let qg = &self.qg[off..off + r.coord_ids.len()];
+                let (s, q) = shadow.partial_row(row as usize, qg,
+                                                r.coord_ids, metric);
+                out_sum[oi as usize] = s;
+                out_sq[oi as usize] = q;
+            }
+            return;
+        }
+        let kernel = self.kernels.partial(metric);
         for &(row, ri, oi) in &self.jobs {
             let r = &reqs[ri as usize];
             let off = self.offsets[ri as usize];
             let qg = &self.qg[off..off + r.coord_ids.len()];
-            let (s, q) = match metric {
-                Metric::L2Sq => {
-                    partial_row_l2(data.row(row as usize), qg, r.coord_ids)
-                }
-                Metric::L1 => {
-                    partial_row_l1(data.row(row as usize), qg, r.coord_ids)
-                }
-            };
+            let (s, q) = kernel(data.row(row as usize), qg, r.coord_ids);
             out_sum[oi as usize] = s;
             out_sq[oi as usize] = q;
         }
+    }
+
+    fn quant_bias(&mut self, data: &DenseDataset, query: &[f32],
+                  metric: Metric) -> f64 {
+        if !self.quantized {
+            return 0.0;
+        }
+        self.ensure_shadow(data);
+        self.shadow.as_ref().unwrap().1.theta_bias(query, metric)
     }
 
     fn name(&self) -> &'static str {
@@ -348,7 +299,8 @@ mod tests {
     fn pull_batch_bitwise_matches_per_request_partial_sums() {
         // The row-major sweep may reorder the work but never the results:
         // each request's outputs must be bit-identical to a standalone
-        // partial_sums call.
+        // partial_sums call — on every available kernel tier and on the
+        // quantized tier.
         proptest::check(20, |rng: &mut Rng| {
             let n = 2 + rng.below(20);
             let d = 4 + rng.below(120);
@@ -377,28 +329,38 @@ mod tests {
                         coord_ids: &coordsets[i],
                     })
                     .collect();
-                let mut native = NativeEngine::default();
-                let (mut bs, mut bq) = (Vec::new(), Vec::new());
-                native.pull_batch(&ds, &reqs, metric, &mut bs, &mut bq);
-                let mut off = 0usize;
-                for i in 0..n_reqs {
-                    let (mut s, mut q) = (Vec::new(), Vec::new());
-                    let mut solo = NativeEngine::default();
-                    solo.partial_sums(&ds, &queries[i], &rowsets[i],
-                                      &coordsets[i], metric, &mut s,
-                                      &mut q);
-                    for (j, (&ss, &qq)) in s.iter().zip(&q).enumerate() {
-                        crate::prop_assert!(
-                            bs[off + j] == ss && bq[off + j] == qq,
-                            "req {i} row {j} {metric:?}: batch ({}, {}) \
-                             vs solo ({ss}, {qq})",
-                            bs[off + j], bq[off + j]
-                        );
+                for quantized in [false, true] {
+                    let mk = || {
+                        NativeEngine::with_options(KernelChoice::Auto,
+                                                   quantized)
+                            .unwrap()
+                    };
+                    let mut native = mk();
+                    let (mut bs, mut bq) = (Vec::new(), Vec::new());
+                    native.pull_batch(&ds, &reqs, metric, &mut bs,
+                                      &mut bq);
+                    let mut off = 0usize;
+                    for i in 0..n_reqs {
+                        let (mut s, mut q) = (Vec::new(), Vec::new());
+                        let mut solo = mk();
+                        solo.partial_sums(&ds, &queries[i], &rowsets[i],
+                                          &coordsets[i], metric, &mut s,
+                                          &mut q);
+                        for (j, (&ss, &qq)) in
+                            s.iter().zip(&q).enumerate()
+                        {
+                            crate::prop_assert!(
+                                bs[off + j] == ss && bq[off + j] == qq,
+                                "req {i} row {j} {metric:?} quant={} : \
+                                 batch ({}, {}) vs solo ({ss}, {qq})",
+                                quantized, bs[off + j], bq[off + j]
+                            );
+                        }
+                        off += s.len();
                     }
-                    off += s.len();
+                    crate::prop_assert!(off == bs.len(),
+                                        "output length mismatch");
                 }
-                crate::prop_assert!(off == bs.len(),
-                                    "output length mismatch");
             }
             Ok(())
         });
@@ -414,6 +376,85 @@ mod tests {
         assert!(s.is_empty());
         e.partial_sums(&ds, &q, &[1], &[], Metric::L2Sq, &mut s, &mut sq);
         assert_eq!(s, vec![0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_coordinate_rejected_before_kernels() {
+        let ds = synthetic::gaussian_iid(3, 8, 2);
+        let q = ds.row_vec(0);
+        let mut e = NativeEngine::default();
+        let (mut s, mut sq) = (Vec::new(), Vec::new());
+        e.partial_sums(&ds, &q, &[0, 1], &[3, 8], Metric::L2Sq, &mut s,
+                       &mut sq);
+    }
+
+    #[test]
+    fn forced_scalar_tier_and_quantized_construction() {
+        let e = NativeEngine::with_options(KernelChoice::Scalar, false)
+            .unwrap();
+        assert_eq!(e.kernel_tier(), KernelTier::Scalar);
+        assert!(!e.is_quantized());
+        let q = NativeEngine::with_options(KernelChoice::Auto, true)
+            .unwrap();
+        assert!(q.is_quantized());
+        // forcing a tier the architecture can't run errors cleanly
+        #[cfg(target_arch = "x86_64")]
+        assert!(NativeEngine::with_options(KernelChoice::Neon, false)
+            .is_err());
+        #[cfg(target_arch = "aarch64")]
+        assert!(NativeEngine::with_options(KernelChoice::Avx2, false)
+            .is_err());
+    }
+
+    #[test]
+    fn quantized_estimates_stay_within_reported_bias() {
+        // the engine-level version of the quant unit test: partial_sums
+        // per-pull estimates off the shadow stay within quant_bias of
+        // the exact-f32 engine's, and exact_dists is untouched
+        let mut rng = Rng::new(0x0555);
+        let n = 40;
+        let d = 96;
+        let mut ds = DenseDataset::zeros(n, d);
+        for r in 0..n {
+            for v in ds.row_mut(r) {
+                *v = rng.gaussian() as f32 * 50.0;
+            }
+        }
+        let query: Vec<f32> =
+            (0..d).map(|_| rng.gaussian() as f32 * 50.0).collect();
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let t = 64;
+        let coords: Vec<u32> =
+            (0..t).map(|_| rng.below(d) as u32).collect();
+        for metric in [Metric::L2Sq, Metric::L1] {
+            let mut exact = NativeEngine::default();
+            let mut quant =
+                NativeEngine::with_options(KernelChoice::Auto, true)
+                    .unwrap();
+            let bias = quant.quant_bias(&ds, &query, metric);
+            assert!(bias > 0.0, "quantized engine must report a bias");
+            assert_eq!(exact.quant_bias(&ds, &query, metric), 0.0);
+            let (mut s1, mut q1) = (Vec::new(), Vec::new());
+            let (mut s2, mut q2) = (Vec::new(), Vec::new());
+            exact.partial_sums(&ds, &query, &rows, &coords, metric,
+                               &mut s1, &mut q1);
+            quant.partial_sums(&ds, &query, &rows, &coords, metric,
+                               &mut s2, &mut q2);
+            let td = t as f64;
+            for i in 0..n {
+                assert!(
+                    (s1[i] / td - s2[i] / td).abs() <= bias + 1e-9,
+                    "{metric:?} row {i}: quantized estimate strayed \
+                     past the reported bias"
+                );
+            }
+            let mut e1 = Vec::new();
+            let mut e2 = Vec::new();
+            exact.exact_dists(&ds, &query, &rows, metric, &mut e1);
+            quant.exact_dists(&ds, &query, &rows, metric, &mut e2);
+            assert_eq!(e1, e2, "exact_dists must bypass quantization");
+        }
     }
 
     #[test]

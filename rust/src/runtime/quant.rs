@@ -1,0 +1,308 @@
+//! Opt-in int8 quantized sampling tier (`[engine] quantized = true`).
+//!
+//! A [`QuantShadow`] is an int8 affine (scale + zero-point per row)
+//! shadow copy of a [`DenseDataset`]: 4× smaller rows, so the random
+//! gathers of sampled pull waves touch 4× less memory. The shadow is
+//! used **only** for `partial_sums` / `pull_batch` waves — the bandit's
+//! noisy estimates, which already carry confidence intervals — while
+//! `exact_dists` (candidate rescoring, MAX_PULLS collapse, final
+//! answers) always reads the exact f32 rows. Per-value reconstruction
+//! error is bounded by `scale_r / 2`, and [`QuantShadow::theta_bias`]
+//! converts that into a worst-case per-coordinate estimate bias in
+//! θ-units which the caller adds to every confidence half-width via
+//! `BanditParams::bias` — the PAC accounting then absorbs quantization
+//! error exactly like sampling noise (see `coordinator::bandit`).
+//!
+//! Determinism: dequantize-and-accumulate runs in f64 per row, in
+//! coordinate order, with no lane-width dependence — so for the
+//! quantized tier, sharded / remote-less substrates that split waves by
+//! row stay bitwise-identical to solo, same as the f32 kernel tiers.
+//!
+//! Shadows are built once per dataset per process: a process-wide cache
+//! keyed by the dataset's buffer identity (pointer, shape, first/last
+//! value bits) hands out `Arc`s, so the per-shard engine clones of
+//! `ShardedEngine` share one shadow instead of quantizing the dataset
+//! once per shard.
+
+#![deny(missing_docs)]
+
+use std::fmt;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use crate::data::dense::{DenseDataset, Metric};
+
+/// Int8 affine shadow copy of a dense dataset: per row `r`,
+/// `x̂ = scale[r] · code + offset[r]` reconstructs the value to within
+/// `scale[r] / 2`.
+pub struct QuantShadow {
+    /// Row count (matches the source dataset).
+    pub n: usize,
+    /// Dimensions (matches the source dataset).
+    pub d: usize,
+    /// Row-major int8 codes, `n * d`.
+    codes: Vec<i8>,
+    /// Per-row dequantization scale.
+    scale: Vec<f32>,
+    /// Per-row dequantization offset (folds in the zero point).
+    offset: Vec<f32>,
+    /// Max `|x|` over the source dataset (for the ℓ2² bias bound).
+    max_abs: f32,
+    /// Max over rows of `scale_r / 2` — the per-value error bound.
+    max_err: f32,
+}
+
+impl QuantShadow {
+    /// Quantize `data`: per-row min/max affine mapping onto `[-128, 127]`.
+    /// Constant rows get `scale = 0` and reconstruct exactly.
+    pub fn build(data: &DenseDataset) -> QuantShadow {
+        let (n, d) = (data.n, data.d);
+        let mut codes = Vec::with_capacity(n * d);
+        let mut scale = Vec::with_capacity(n);
+        let mut offset = Vec::with_capacity(n);
+        let mut max_abs = 0f32;
+        let mut max_err = 0f32;
+        for r in 0..n {
+            let row = data.row(r);
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in row {
+                lo = lo.min(x);
+                hi = hi.max(x);
+                max_abs = max_abs.max(x.abs());
+            }
+            let sc = if d == 0 || hi <= lo { 0.0 } else { (hi - lo) / 255.0 };
+            if sc > 0.0 {
+                for &x in row {
+                    let u = ((x - lo) / sc).round();
+                    codes.push((u - 128.0).clamp(-128.0, 127.0) as i8);
+                }
+            } else {
+                codes.resize(codes.len() + d, 0);
+            }
+            scale.push(sc);
+            // x̂ = sc·code + offset with code = round((x − lo)/sc) − 128
+            // ⇒ offset = lo + 128·sc, |x̂ − x| ≤ sc/2
+            offset.push(if sc > 0.0 { lo + 128.0 * sc } else { lo });
+            max_err = max_err.max(sc / 2.0);
+        }
+        QuantShadow { n, d, codes, scale, offset, max_abs, max_err }
+    }
+
+    /// Reconstructed value `x̂` at `(row, col)` — test/debug helper.
+    pub fn reconstruct(&self, row: usize, col: usize) -> f32 {
+        self.scale[row] * self.codes[row * self.d + col] as f32
+            + self.offset[row]
+    }
+
+    /// The per-value reconstruction error bound `max_r scale_r / 2`.
+    pub fn max_err(&self) -> f32 {
+        self.max_err
+    }
+
+    /// Sampled partial moments `(Σ v, Σ v²)` of
+    /// `v = metric.coord(x̂[coords[i]], qg[i])` over the dequantized row.
+    /// f64 accumulation in coordinate order: deterministic and row-local,
+    /// so row-split substrates keep bitwise parity on this tier.
+    pub fn partial_row(&self, row: usize, qg: &[f32], coords: &[u32],
+                       metric: Metric) -> (f64, f64) {
+        let codes = &self.codes[row * self.d..(row + 1) * self.d];
+        let sc = self.scale[row];
+        let off = self.offset[row];
+        let mut s = 0f64;
+        let mut q = 0f64;
+        for (i, &j) in coords.iter().enumerate() {
+            let xh = sc * codes[j as usize] as f32 + off;
+            let v = metric.coord(xh, qg[i]) as f64;
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    /// Worst-case bias, in θ-units (per-coordinate distance), that
+    /// quantization can add to a sampled pull estimate against `query`.
+    ///
+    /// With per-value error `e = max_err`:
+    /// * ℓ1: `||x̂−q| − |x−q|| ≤ e` per coordinate;
+    /// * ℓ2²: `|(x̂−q)² − (x−q)²| = |x̂−x| · |x̂+x−2q|
+    ///   ≤ e · (2|x−q| + e) ≤ e · (2(A_data + A_q) + e)` where `A` are
+    ///   max absolute values of the data and the query.
+    ///
+    /// The caller folds this into `BanditParams::bias`, widening every
+    /// non-exact confidence interval: UCB/LCB stay valid bounds on the
+    /// true θ, so elimination and the PAC stop rule absorb the error.
+    pub fn theta_bias(&self, query: &[f32], metric: Metric) -> f64 {
+        let e = self.max_err as f64;
+        if e == 0.0 {
+            return 0.0;
+        }
+        match metric {
+            Metric::L1 => e,
+            Metric::L2Sq => {
+                let aq = query
+                    .iter()
+                    .fold(0f32, |m, &v| m.max(v.abs()))
+                    as f64;
+                let span = self.max_abs as f64 + aq;
+                e * (2.0 * span + e)
+            }
+        }
+    }
+}
+
+impl fmt::Debug for QuantShadow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("QuantShadow")
+            .field("n", &self.n)
+            .field("d", &self.d)
+            .field("max_abs", &self.max_abs)
+            .field("max_err", &self.max_err)
+            .finish()
+    }
+}
+
+/// Cache key: dataset buffer identity. The value-bit fingerprints guard
+/// against an address being reused by a different same-shape dataset
+/// after the original was dropped.
+type CacheKey = (usize, usize, usize, u32, u32);
+
+fn cache_key(data: &DenseDataset) -> CacheKey {
+    let raw = data.raw();
+    (
+        raw.as_ptr() as usize,
+        data.n,
+        data.d,
+        raw.first().map_or(0, |v| v.to_bits()),
+        raw.last().map_or(0, |v| v.to_bits()),
+    )
+}
+
+static CACHE: OnceLock<Mutex<Vec<(CacheKey, Weak<QuantShadow>)>>> =
+    OnceLock::new();
+
+/// The shared shadow for `data`: built on first request, then handed out
+/// as clones of one `Arc` for the dataset's lifetime (the cache holds
+/// `Weak`s and drops dead entries on every lookup).
+pub fn shadow_for(data: &DenseDataset) -> Arc<QuantShadow> {
+    let key = cache_key(data);
+    let cache = CACHE.get_or_init(|| Mutex::new(Vec::new()));
+    let mut guard = cache.lock().unwrap();
+    guard.retain(|(_, w)| w.strong_count() > 0);
+    if let Some((_, w)) = guard.iter().find(|(k, _)| *k == key) {
+        if let Some(shadow) = w.upgrade() {
+            return shadow;
+        }
+    }
+    let shadow = Arc::new(QuantShadow::build(data));
+    guard.push((key, Arc::downgrade(&shadow)));
+    shadow
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstruction_error_is_bounded_by_half_scale() {
+        let mut rng = Rng::new(0x0111);
+        for &scale in &[1.0f32, 100.0, 1000.0] {
+            let n = 20;
+            let d = 64;
+            let mut ds = DenseDataset::zeros(n, d);
+            for r in 0..n {
+                for v in ds.row_mut(r) {
+                    *v = rng.gaussian() as f32 * scale;
+                }
+            }
+            let sh = QuantShadow::build(&ds);
+            for r in 0..n {
+                for c in 0..d {
+                    let err = (sh.reconstruct(r, c) - ds.get(r, c)).abs();
+                    assert!(
+                        err <= sh.max_err() + 1e-6,
+                        "row {r} col {c}: err {err} > bound {}",
+                        sh.max_err()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn constant_and_tiny_rows_reconstruct_exactly() {
+        // constant row (scale = 0) and a d = 1 dataset
+        let ds = DenseDataset::new(2, 3,
+                                   vec![7.5, 7.5, 7.5, -2.0, 0.0, 2.0]);
+        let sh = QuantShadow::build(&ds);
+        for c in 0..3 {
+            assert_eq!(sh.reconstruct(0, c), 7.5);
+        }
+        let one = DenseDataset::new(1, 1, vec![42.0]);
+        let sh1 = QuantShadow::build(&one);
+        assert_eq!(sh1.reconstruct(0, 0), 42.0);
+        assert_eq!(sh1.max_err(), 0.0);
+    }
+
+    #[test]
+    fn theta_bias_bounds_observed_estimate_error() {
+        // empirical check of the bias algebra: the per-pull estimate off
+        // the shadow never strays from the exact-f32 estimate by more
+        // than theta_bias, across metrics, magnitudes and pull sizes
+        let mut rng = Rng::new(0x0222);
+        for &mag in &[1.0f32, 500.0] {
+            let n = 30;
+            let d = 128;
+            let mut ds = DenseDataset::zeros(n, d);
+            for r in 0..n {
+                for v in ds.row_mut(r) {
+                    *v = rng.gaussian() as f32 * mag;
+                }
+            }
+            let sh = QuantShadow::build(&ds);
+            let query: Vec<f32> =
+                (0..d).map(|_| rng.gaussian() as f32 * mag).collect();
+            for metric in [Metric::L2Sq, Metric::L1] {
+                let bias = sh.theta_bias(&query, metric);
+                for &t in &[1usize, 16, 128] {
+                    let coords: Vec<u32> =
+                        (0..t).map(|_| rng.below(d) as u32).collect();
+                    let qg: Vec<f32> = coords
+                        .iter()
+                        .map(|&j| query[j as usize])
+                        .collect();
+                    for r in 0..n {
+                        let (sq, _) =
+                            sh.partial_row(r, &qg, &coords, metric);
+                        let mut se = 0f64;
+                        for (i, &j) in coords.iter().enumerate() {
+                            se += metric.coord(ds.get(r, j as usize),
+                                               qg[i])
+                                as f64;
+                        }
+                        let td = t as f64;
+                        assert!(
+                            (sq / td - se / td).abs() <= bias + 1e-9,
+                            "{metric:?} mag={mag} t={t} row {r}: \
+                             |{} - {}| > {bias}",
+                            sq / td,
+                            se / td
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shadow_cache_shares_one_arc_per_dataset() {
+        let ds = synthetic::gaussian_iid(8, 16, 0x0333);
+        let a = shadow_for(&ds);
+        let b = shadow_for(&ds);
+        assert!(Arc::ptr_eq(&a, &b));
+        let other = synthetic::gaussian_iid(8, 16, 0x0444);
+        let c = shadow_for(&other);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+}

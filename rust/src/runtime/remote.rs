@@ -94,6 +94,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::arms::{Coverage, PullEngine, PullRequest,
                                WaveTicket};
 use crate::data::dense::{DenseDataset, Metric};
+use crate::runtime::kernels::{self, KernelChoice};
 use crate::runtime::native::NativeEngine;
 use crate::runtime::partition::{shard_range, WavePartition};
 use crate::runtime::placement::{EndpointState, PlacementMap, RetryPolicy};
@@ -123,6 +124,11 @@ struct ShardShared {
     /// shard identity reported by the `Stats` health op
     shard: u64,
     of: u64,
+    /// kernel tier this server's compute engines dispatch (`shard-serve
+    /// --kernel`; resolved — and therefore proven available — at
+    /// startup). Keep it identical across a shard's replicas: failover
+    /// between tiers would change float rounding.
+    kernel: KernelChoice,
     /// fingerprint of the served content (`wire::dataset_fingerprint`)
     data_hash: u64,
     shutdown: AtomicBool,
@@ -155,9 +161,25 @@ impl ShardServer {
     pub fn start(addr: &str, local: DenseDataset, n_total: usize,
                  row_start: usize, shard: usize, of: usize)
                  -> io::Result<ShardServer> {
+        Self::start_with_kernel(addr, local, n_total, row_start, shard,
+                                of, KernelChoice::Auto)
+    }
+
+    /// [`ShardServer::start`] with a forced row-kernel tier
+    /// (`shard-serve --kernel`). The tier is resolved against this
+    /// host's CPU features before the listener binds, so forcing an
+    /// unavailable tier fails startup — never a wave mid-query.
+    pub fn start_with_kernel(addr: &str, local: DenseDataset,
+                             n_total: usize, row_start: usize,
+                             shard: usize, of: usize,
+                             kernel: KernelChoice)
+                             -> io::Result<ShardServer> {
         assert!(row_start + local.n <= n_total,
                 "shard rows [{row_start}, {}) exceed n_total={n_total}",
                 row_start + local.n);
+        kernels::resolve(kernel).map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidInput, e)
+        })?;
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -169,6 +191,7 @@ impl ShardServer {
             row_start,
             shard: shard as u64,
             of: of as u64,
+            kernel,
             data_hash,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
@@ -188,13 +211,24 @@ impl ShardServer {
     /// creates replicas — any of them can serve the shard's sub-waves.
     pub fn start_shard_of(addr: &str, data: &DenseDataset, shard: usize,
                           n_shards: usize) -> io::Result<ShardServer> {
+        Self::start_shard_of_with_kernel(addr, data, shard, n_shards,
+                                         KernelChoice::Auto)
+    }
+
+    /// [`ShardServer::start_shard_of`] with a forced row-kernel tier —
+    /// see [`ShardServer::start_with_kernel`].
+    pub fn start_shard_of_with_kernel(addr: &str, data: &DenseDataset,
+                                      shard: usize, n_shards: usize,
+                                      kernel: KernelChoice)
+                                      -> io::Result<ShardServer> {
         let (a, b) = shard_range(shard, data.n, n_shards);
         let mut rows = Vec::with_capacity((b - a) * data.d);
         for r in a..b {
             rows.extend_from_slice(data.row(r));
         }
-        Self::start(addr, DenseDataset::new(b - a, data.d, rows), data.n, a,
-                    shard, n_shards)
+        Self::start_with_kernel(addr,
+                                DenseDataset::new(b - a, data.d, rows),
+                                data.n, a, shard, n_shards, kernel)
     }
 
     /// `host:port` string of the bound address.
@@ -286,12 +320,26 @@ fn write_locked(writer: &Mutex<TcpStream>, payload: &[u8])
 
 /// Per-wave compute state, pooled per connection so a stream of small
 /// waves reuses engines and buffers instead of allocating per frame.
-#[derive(Default)]
 struct WaveScratch {
     engine: NativeEngine,
     sums: Vec<f64>,
     sqs: Vec<f64>,
     out: Vec<u8>,
+}
+
+impl WaveScratch {
+    /// Fresh scratch whose engine dispatches the server's kernel tier.
+    /// The tier was resolved at server startup, so construction cannot
+    /// fail here.
+    fn fresh(kernel: KernelChoice) -> WaveScratch {
+        WaveScratch {
+            engine: NativeEngine::with_options(kernel, false)
+                .expect("kernel tier validated at server startup"),
+            sums: Vec::new(),
+            sqs: Vec::new(),
+            out: Vec::new(),
+        }
+    }
 }
 
 /// Decoded compute waves of one connection awaiting a drainer thread,
@@ -434,7 +482,9 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
                                 .lock()
                                 .unwrap()
                                 .pop()
-                                .unwrap_or_default();
+                                .unwrap_or_else(|| {
+                                    WaveScratch::fresh(shared.kernel)
+                                });
                             loop {
                                 let msg = {
                                     let mut w = work.lock().unwrap();
@@ -513,7 +563,7 @@ fn compute_wave(sh: &ShardShared, msg: Message, scratch: &mut WaveScratch) {
             }
         }));
     if outcome.is_err() {
-        *scratch = WaveScratch::default();
+        *scratch = WaveScratch::fresh(sh.kernel);
         wire::encode_error(&mut scratch.out, wave_id,
                            "internal error: shard compute panicked");
     }

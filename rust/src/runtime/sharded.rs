@@ -339,6 +339,14 @@ impl<E: PullEngine + Clone + Send> PullEngine for ShardedEngine<E> {
         }
     }
 
+    /// Shards are clones of one engine, so the bias is a property of the
+    /// inner engine, not of the split: ask shard 0 on behalf of all.
+    fn quant_bias(&mut self, data: &DenseDataset, query: &[f32],
+                  metric: Metric) -> f64 {
+        let st = self.shards[0].get_mut().unwrap();
+        st.engine.quant_bias(data, query, metric)
+    }
+
     fn name(&self) -> &'static str {
         "sharded"
     }
