@@ -12,7 +12,12 @@
 //! on a 2-shard multiplex rung** (two concurrent batch drivers sharing
 //! one `runtime::remote::RingClient`, the query server's pattern: their
 //! waves interleave on one connection per shard and the rung asserts
-//! the per-connection in-flight high-water mark reached ≥ 2), and
+//! the per-connection in-flight high-water mark reached ≥ 2), **and on
+//! a tcp-deadline rung** (a full query server over a loopback ring
+//! under expired deadline budgets and an admission-control overload
+//! burst — the rung asserts at least one query was shed, at least one
+//! answered `deadline_exceeded`, and reports end-to-end queries/s plus
+//! both counters in the JSON), and
 //! emits the numbers as JSON for `BENCH_pull.json` so the perf
 //! trajectory has data points that survive across PRs:
 //!
@@ -136,7 +141,7 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
 struct ShardRun {
     shards: usize,
     /// "local" | "tcp-loopback" | "tcp-failover" | "tcp-multiplex" |
-    /// "tcp-remote"
+    /// "tcp-deadline" | "tcp-remote"
     transport: &'static str,
     rows_per_s: f64,
     wall_per_round_us: f64,
@@ -149,6 +154,12 @@ struct ShardRun {
     /// sub-waves on one connection (asserted >= 2 — the pipelining
     /// witness)
     max_inflight: Option<u64>,
+    /// tcp-deadline only: queries the server shed at admission during
+    /// the rung's overload burst (asserted >= 1)
+    shed: Option<u64>,
+    /// tcp-deadline only: queries answered `deadline_exceeded`
+    /// (asserted >= 1 — the rung sends expired-budget probes)
+    deadline_exceeded: Option<u64>,
 }
 
 /// Workload shape shared by every rung.
@@ -227,6 +238,8 @@ where
         solo_p50_us: lat.percentile(50.0).as_micros() as f64,
         solo_p99_us: lat.percentile(99.0).as_micros() as f64,
         max_inflight: None,
+        shed: None,
+        deadline_exceeded: None,
     })
 }
 
@@ -373,6 +386,152 @@ fn measure_multiplex_rung(w: &Workload<'_>, endpoints: &[String],
         solo_p50_us: lat.percentile(50.0).as_micros() as f64,
         solo_p99_us: lat.percentile(99.0).as_micros() as f64,
         max_inflight: Some(max_inflight),
+        shed: None,
+        deadline_exceeded: None,
+    })
+}
+
+/// The always-on deadline/admission rung: a full query [`Server`] (one
+/// worker, wait-a-little batching, `max_queue = 1`, a generous 10 s
+/// default budget) coordinating a loopback shard ring — the whole PR 7
+/// robustness path under load:
+///
+/// 1. expired-budget probes (`deadline_ms: 1` against a 5 ms linger)
+///    must come back as structured `deadline_exceeded` answers;
+/// 2. a concurrent burst against the bounded queue must shed at least
+///    one query with an `overload` answer;
+/// 3. a sequential sweep with the default budget must answer every
+///    query `ok` — that sweep is the rung's reported throughput.
+///
+/// Unlike the other rungs this one reports **queries resolved per
+/// second end to end through the server** (not pull-phase rows/s): its
+/// subject is the admission/deadline machinery wrapped around compute,
+/// not the compute itself. Answer parity is not asserted here — worker
+/// RNGs are seeded per worker, not per workload; parity is pinned by
+/// the other rungs and the chaos suite.
+fn measure_deadline_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
+    use crate::coordinator::server::{Client, Server, ServerConfig};
+    let knn_req = |q: &[f32], k: usize, deadline_ms: Option<u64>| {
+        let mut fields = vec![
+            ("op", Json::Str("knn".into())),
+            ("query", Json::f32_array(q)),
+            ("k", Json::Num(k as f64)),
+        ];
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", Json::Num(ms as f64)));
+        }
+        Json::obj(fields)
+    };
+    let stats_req = Json::obj(vec![("op", Json::Str("stats".into()))]);
+    let (_ring, endpoints) =
+        remote::spawn_loopback_ring(w.data, LOOPBACK_SHARDS)?;
+    let sc = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        metric: Metric::L2Sq,
+        params: w.params.clone(),
+        n_workers: 1,
+        batch_size: 4,
+        remote: endpoints,
+        // the worker lingers 5 ms on every non-full batch: long enough
+        // that a 1 ms probe budget reliably expires in-queue and that a
+        // burst reliably finds the single queue slot occupied
+        batch_wait_us: 5_000,
+        deadline_ms: 10_000,
+        max_queue: 1,
+        ..ServerConfig::default()
+    };
+    let srv = Server::start(w.data.clone(), sc)
+        .map_err(|e| format!("deadline rung server: {e}"))?;
+    let addr = srv.addr;
+    let mut cl = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let q0 = w.data.row_vec(0);
+    // 1. expired budgets answer structurally, never hang
+    for _ in 0..3 {
+        let resp = cl
+            .request(&knn_req(&q0, w.params.k, Some(1)))
+            .map_err(|e| e.to_string())?;
+        if resp.get("kind").and_then(|v| v.as_str())
+            != Some("deadline_exceeded")
+        {
+            return Err(format!(
+                "deadline rung: 1ms budget against a 5ms linger must \
+                 expire, got {resp}"));
+        }
+    }
+    // 2. concurrent bursts against max_queue=1 until a shed registers
+    // (overwhelmingly round one; bounded so a broken admission path
+    // fails the bench instead of spinning)
+    let mut shed = 0u64;
+    for _ in 0..50 {
+        std::thread::scope(|sc| {
+            for _ in 0..8 {
+                sc.spawn(|| {
+                    if let Ok(mut c) = Client::connect(&addr) {
+                        for _ in 0..4 {
+                            let _ = c.request(&knn_req(&q0, w.params.k,
+                                                       None));
+                        }
+                    }
+                });
+            }
+        });
+        let stats =
+            cl.request(&stats_req).map_err(|e| e.to_string())?;
+        shed = stats
+            .get("shed")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64;
+        if shed > 0 {
+            break;
+        }
+    }
+    if shed == 0 {
+        return Err("deadline rung: 50 concurrent bursts against \
+                    max_queue=1 never shed a query — admission control \
+                    is not admitting-controlling".into());
+    }
+    // 3. throughput: sequential sweep under the generous default budget
+    let mut lat = LatencyStats::default();
+    let mut ok = 0u64;
+    let t0 = Instant::now();
+    for &p in w.solo_points {
+        let q = w.data.row_vec(p);
+        let t = Instant::now();
+        let resp = cl
+            .request(&knn_req(&q, w.params.k, None))
+            .map_err(|e| e.to_string())?;
+        lat.record(t.elapsed());
+        if resp.get("ok") == Some(&Json::Bool(true)) {
+            ok += 1;
+        } else {
+            return Err(format!(
+                "deadline rung: sequential query under a 10s budget \
+                 failed: {resp}"));
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = cl.request(&stats_req).map_err(|e| e.to_string())?;
+    let deadline_exceeded = stats
+        .get("deadline_exceeded")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64;
+    if deadline_exceeded == 0 {
+        return Err("deadline rung: stats lost the deadline_exceeded \
+                    count the probes produced".into());
+    }
+    Ok(ShardRun {
+        shards: LOOPBACK_SHARDS,
+        transport: "tcp-deadline",
+        rows_per_s: ok as f64 / wall.as_secs_f64().max(1e-9),
+        wall_per_round_us: wall.as_secs_f64() * 1e6 / ok.max(1) as f64,
+        rounds: ok,
+        jobs: ok,
+        batch_wall_ms: wall.as_secs_f64() * 1e3,
+        solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+        solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        max_inflight: None,
+        shed: Some(shed),
+        deadline_exceeded: Some(deadline_exceeded),
     })
 }
 
@@ -462,6 +621,12 @@ fn run_json(r: &ShardRun) -> Json {
     if let Some(mi) = r.max_inflight {
         fields.push(("max_inflight", Json::Num(mi as f64)));
     }
+    if let Some(s) = r.shed {
+        fields.push(("shed", Json::Num(s as f64)));
+    }
+    if let Some(de) = r.deadline_exceeded {
+        fields.push(("deadline_exceeded", Json::Num(de as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -498,7 +663,7 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             shards,
             "local",
             || build_host_engine(EngineKind::Native, shards, &[], false,
-                                 KernelChoice::Auto, false),
+                                 KernelChoice::Auto, false, None),
             &mut baseline_answers,
         )?);
     }
@@ -555,6 +720,9 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         remote_runs.push(measure_multiplex_rung(&w, &endpoints,
                                                 &mut baseline_answers)?);
     }
+    // deadline/admission rung: a full query server over a loopback ring
+    // under expired budgets and an overload burst (spawns its own ring)
+    remote_runs.push(measure_deadline_rung(&w)?);
     if !extra_remote.is_empty() {
         remote_runs.push(measure_rung(
             &w,
@@ -595,6 +763,10 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         .iter()
         .find_map(|r| r.max_inflight)
         .unwrap_or(0);
+    let (rung_shed, rung_exceeded) = remote_runs
+        .iter()
+        .find_map(|r| r.shed.zip(r.deadline_exceeded))
+        .unwrap_or((0, 0));
     rep.note(&format!(
         "workload: n={n} d={d} (shard-serve --synthetic \
          image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
@@ -604,7 +776,9 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
          primaries, replicas serve) + {LOOPBACK_SHARDS}-shard multiplex \
          ring (2 concurrent batch drivers, one shared RingClient, \
          {multiplex_hwm} waves high-water on one connection), answers \
-         asserted identical to local",
+         asserted identical to local; tcp-deadline rung reports \
+         end-to-end queries/s through a full query server and counted \
+         {rung_shed} shed / {rung_exceeded} deadline-exceeded answers",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
     let kernel_note = kernel_runs
         .iter()
@@ -648,12 +822,13 @@ mod tests {
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
         let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 3);
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 4);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
         let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
-        assert_eq!(remote.len(), 3,
-                   "loopback + failover + multiplex rungs always present");
+        assert_eq!(remote.len(), 4,
+                   "loopback + failover + multiplex + deadline rungs \
+                    always present");
         assert_eq!(remote[1].get("transport").and_then(|v| v.as_str()),
                    Some("tcp-failover"));
         assert_eq!(remote[2].get("transport").and_then(|v| v.as_str()),
@@ -665,6 +840,16 @@ mod tests {
         assert!(mi >= 2.0,
                 "multiplex rung must witness >= 2 in-flight waves on one \
                  connection, saw {mi}");
+        assert_eq!(remote[3].get("transport").and_then(|v| v.as_str()),
+                   Some("tcp-deadline"));
+        let shed = remote[3].get("shed").and_then(|v| v.as_f64()).unwrap();
+        let de = remote[3]
+            .get("deadline_exceeded")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(shed >= 1.0, "deadline rung must shed, saw {shed}");
+        assert!(de >= 1.0,
+                "deadline rung must expire probe budgets, saw {de}");
         for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())

@@ -102,7 +102,7 @@ SUBCOMMANDS
            exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
            native|scalar|pjrt] [--shards S] [--remote SPECS]
            [--degraded] [--kernel auto|scalar|avx2|neon] [--quantized]
-           [--epsilon E] [--delta D] [--seed S]
+           [--epsilon E] [--delta D] [--seed S] [--io-timeout-ms T]
            (--batch B > 1 answers B consecutive query points through the
            coalesced multi-query driver, bmo only; --shards S > 1 fans
            each pull wave across S contiguous row shards on a worker
@@ -120,14 +120,17 @@ SUBCOMMANDS
            and rescores candidates on exact f32, widening confidence
            intervals by the quantization error bound; local engines
            only. With --remote, pass --kernel to shard-serve instead —
-           both tune the process doing the computing)
+           both tune the process doing the computing. --io-timeout-ms
+           bounds the ring client's connects, writes and per-wave reply
+           waits, default 60000)
   graph    --data FILE [--k K] [--metric l2|l1] [--shards S]
            [--remote SPECS] [--degraded] [--kernel T] [--quantized]
-           [--seed S]
+           [--seed S] [--io-timeout-ms T]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
            [--remote SPECS] [--degraded] [--kernel T] [--quantized]
-           [--batch-wait-us T]
+           [--batch-wait-us T] [--deadline-ms D] [--max-queue Q]
+           [--io-timeout-ms T]
            (with --remote this box coordinates a multi-machine ring: all
            workers share ONE multiplexed ring client — one connection
            per shard, concurrent tagged waves interleaved on it — so
@@ -138,9 +141,18 @@ SUBCOMMANDS
            if a whole shard dies. --batch-wait-us T lets a worker that
            drained a non-full batch linger T microseconds for more
            queries — fuller batches under light load, observable via
-           stats mean_batch/max_batch)
+           stats mean_batch/max_batch. --deadline-ms D gives every query
+           an answer-by budget of D milliseconds from arrival — queue
+           wait, lockstep rounds and remote waves all charge against it
+           and an expired query gets a structured deadline_exceeded
+           error, never a hung worker; a request-level deadline_ms JSON
+           field overrides it per query. --max-queue Q sheds queries
+           arriving at a full queue with an overload error carrying a
+           retry_after_ms hint. Shed / expired counts surface via
+           stats. Both default to 0 = off)
   shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
            --of S [--addr HOST:PORT] [--kernel auto|scalar|avx2|neon]
+           [--io-timeout-ms T]
            (loads rows [floor(I*n/S), floor((I+1)*n/S)) — the same
            floor-boundary partition --shards uses — and answers
            partial_sums / exact_dists / pull_batch waves over the
@@ -150,8 +162,9 @@ SUBCOMMANDS
            makes them replicas; a shutdown frame or ctrl-c stops it.
            --kernel forces this server's row-kernel tier — keep it
            identical across a ring's replicas, or failover between
-           them may change float rounding)
-  ring-stats  --remote SPECS [--timeout-ms T]
+           them may change float rounding; --io-timeout-ms bounds its
+           reply writes, default 60000)
+  ring-stats  --remote SPECS [--io-timeout-ms T] [--timeout-ms T]
            (probes every endpoint with the Stats wire op and prints
            shard identity, row range, dataset shape, dataset
            fingerprint, live-connection count and the per-connection
@@ -182,8 +195,10 @@ SUBCOMMANDS
   selftest [--artifacts DIR]
 
 Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded/
-kernel/quantized pick and tune the pull engine — see docs/CONFIG.md),
---set section.key=value (repeatable via comma list), --seed N.
+kernel/quantized/io_timeout_ms pick and tune the pull engine, [server]
+deadline_ms/max_queue/batch_wait_us shape the query server — see
+docs/CONFIG.md and docs/OPERATIONS.md), --set section.key=value
+(repeatable via comma list), --seed N.
 ";
 
 #[cfg(test)]

@@ -182,6 +182,12 @@ pub struct BmonnConfig {
     /// confidence intervals so the PAC guarantee still holds. Off by
     /// default.
     pub quantized: bool,
+    /// per-connection I/O timeout in milliseconds for remote rings
+    /// (`[engine] io_timeout_ms` / `--io-timeout-ms`): bounds the ring
+    /// client's connects, writes and per-wave reply waits, so a dead
+    /// shard costs one timeout window before failover instead of a
+    /// hung socket. Must be > 0; local engines ignore it.
+    pub io_timeout_ms: u64,
     pub artifact_dir: String,
     pub seed: u64,
     pub server_addr: String,
@@ -195,6 +201,18 @@ pub struct BmonnConfig {
     /// batches under light load; 0 (default) drains immediately.
     /// Realized batch sizes are observable via the server's `stats` op.
     pub server_batch_wait_us: u64,
+    /// default per-query deadline budget in milliseconds (`[server]
+    /// deadline_ms` / `--deadline-ms`): the query server answers each
+    /// query within this long of arrival — queue wait, lockstep rounds
+    /// and remote waves included — or returns a structured
+    /// `deadline_exceeded` error. A request's own `deadline_ms` field
+    /// overrides it per query; 0 (default) disables the budget.
+    pub server_deadline_ms: u64,
+    /// admission bound on the query server's shared queue (`[server]
+    /// max_queue` / `--max-queue`): beyond this many queued queries,
+    /// new arrivals are shed immediately with an `overload` error and
+    /// a `retry_after_ms` hint. 0 (default) keeps the queue unbounded.
+    pub server_max_queue: usize,
 }
 
 impl Default for BmonnConfig {
@@ -213,12 +231,15 @@ impl Default for BmonnConfig {
             degraded: false,
             kernel: KernelChoice::Auto,
             quantized: false,
+            io_timeout_ms: 60_000,
             artifact_dir: "artifacts".into(),
             seed: 42,
             server_addr: "127.0.0.1:7878".into(),
             server_workers: 4,
             server_batch: 8,
             server_batch_wait_us: 0,
+            server_deadline_ms: 0,
+            server_max_queue: 0,
         }
     }
 }
@@ -276,6 +297,16 @@ impl BmonnConfig {
         if let Some(qz) = raw.get_bool("engine.quantized")? {
             cfg.quantized = qz;
         }
+        if let Some(t) = raw.get_u64("engine.io_timeout_ms")? {
+            if t == 0 {
+                return Err("engine.io_timeout_ms must be > 0: a zero \
+                            timeout would fail every wire operation \
+                            (unbounded waits are not offered — a dead \
+                            peer must cost one window, not a hang)"
+                    .into());
+            }
+            cfg.io_timeout_ms = t;
+        }
         if let Some(a) = raw.get("engine.artifact_dir") {
             cfg.artifact_dir = a.to_string();
         }
@@ -293,6 +324,12 @@ impl BmonnConfig {
         }
         if let Some(w) = raw.get_u64("server.batch_wait_us")? {
             cfg.server_batch_wait_us = w;
+        }
+        if let Some(d) = raw.get_u64("server.deadline_ms")? {
+            cfg.server_deadline_ms = d;
+        }
+        if let Some(m) = raw.get_usize("server.max_queue")? {
+            cfg.server_max_queue = m;
         }
         Ok(cfg)
     }
@@ -391,6 +428,32 @@ mod tests {
         assert!(cfg.quantized);
         let raw =
             RawConfig::parse("[engine]\nkernel = sse9\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn io_timeout_parses_and_rejects_zero() {
+        assert_eq!(BmonnConfig::default().io_timeout_ms, 60_000);
+        let raw =
+            RawConfig::parse("[engine]\nio_timeout_ms = 5000\n").unwrap();
+        assert_eq!(BmonnConfig::from_raw(&raw).unwrap().io_timeout_ms,
+                   5000);
+        let raw = RawConfig::parse("[engine]\nio_timeout_ms = 0\n")
+            .unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn deadline_and_queue_bound_parse_and_default_off() {
+        let d = BmonnConfig::default();
+        assert_eq!(d.server_deadline_ms, 0);
+        assert_eq!(d.server_max_queue, 0);
+        let raw = RawConfig::parse(
+            "[server]\ndeadline_ms = 250\nmax_queue = 64\n").unwrap();
+        let cfg = BmonnConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.server_deadline_ms, 250);
+        assert_eq!(cfg.server_max_queue, 64);
+        let raw = RawConfig::parse("[server]\nmax_queue = -3\n").unwrap();
         assert!(BmonnConfig::from_raw(&raw).is_err());
     }
 

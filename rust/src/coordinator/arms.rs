@@ -291,6 +291,20 @@ pub trait PullEngine {
         0.0
     }
 
+    /// Bound every subsequent wave by an absolute deadline: past it, an
+    /// engine with real I/O in the middle must stop waiting and fail the
+    /// wave with a `deadline exceeded` error
+    /// (`runtime::wire::is_deadline_error`) instead of running out its
+    /// full I/O timeout. `None` (the default state) removes the bound.
+    /// Local engines compute synchronously and ignore it — the batch
+    /// drivers enforce the budget *between* rounds for every engine, so
+    /// this hook only tightens the intra-wave waits. Drivers call it at
+    /// entry with their budget and implementations must treat each call
+    /// as replacing the previous bound.
+    fn set_deadline(&mut self, deadline: Option<std::time::Instant>) {
+        let _ = deadline;
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -386,6 +400,10 @@ impl PullEngine for Box<dyn PullEngine + Send> {
     fn quant_bias(&mut self, data: &DenseDataset, query: &[f32],
                   metric: Metric) -> f64 {
         (**self).quant_bias(data, query, metric)
+    }
+
+    fn set_deadline(&mut self, deadline: Option<std::time::Instant>) {
+        (**self).set_deadline(deadline)
     }
 
     fn name(&self) -> &'static str {

@@ -228,9 +228,34 @@ pub fn knn_batch_dense<E: PullEngine, Q: AsRef<[f32]>>(
     rng: &mut Rng,
     counter: &mut Counter,
 ) -> Vec<KnnResult> {
+    knn_batch_dense_deadline(data, queries, metric, params, engine, rng,
+                             counter, None)
+}
+
+/// [`knn_batch_dense`] under an absolute per-batch deadline budget (the
+/// query server's `deadline_ms` path). The budget is handed to the
+/// engine ([`PullEngine::set_deadline`]) so an engine with real I/O
+/// bounds each wave by the *remaining* budget, and it is re-checked
+/// between lockstep rounds for every engine. On expiry the driver
+/// panics with a message matched by
+/// `crate::runtime::wire::is_deadline_error` — the query server's
+/// `catch_unwind` turns that into a structured `deadline_exceeded`
+/// answer instead of a worker stall. `None` is exactly
+/// [`knn_batch_dense`].
+#[allow(clippy::too_many_arguments)]
+pub fn knn_batch_dense_deadline<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+    deadline: Option<Instant>,
+) -> Vec<KnnResult> {
     let excludes = vec![None; queries.len()];
     knn_batch_dense_inner(data, queries, &excludes, metric, params, engine,
-                          rng, counter)
+                          rng, counter, deadline)
 }
 
 /// Batched k-NN for in-dataset points (self excluded) — the figure
@@ -250,9 +275,10 @@ pub fn knn_batch_points_dense<E: PullEngine>(
     let excludes: Vec<Option<usize>> =
         points.iter().map(|&q| Some(q)).collect();
     knn_batch_dense_inner(data, &queries, &excludes, metric, params, engine,
-                          rng, counter)
+                          rng, counter, None)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     data: &DenseDataset,
     queries: &[Q],
@@ -262,8 +288,12 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     engine: &mut E,
     rng: &mut Rng,
     counter: &mut Counter,
+    deadline: Option<Instant>,
 ) -> Vec<KnnResult> {
     assert_eq!(queries.len(), excludes.len());
+    // hand the budget to the engine before anything that might touch
+    // the network — the coverage probe below must honor it too
+    engine.set_deadline(deadline);
     if let Some(cov) = engine.coverage() {
         return knn_degraded_dense(data, queries, excludes, metric,
                                   params.k, engine, &cov, counter);
@@ -298,7 +328,23 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
         (0..slots.len()).map(|_| None).collect();
     let mut remaining = slots.len();
     let (mut out_sum, mut out_sq) = (Vec::new(), Vec::new());
+    let mut rounds = 0u64;
     while remaining > 0 {
+        // between-round budget check: this is what bounds *local*
+        // engines too — an engine with real I/O additionally cuts its
+        // in-flight waits short via the deadline handed over above.
+        // The panic message is matched by
+        // `crate::runtime::wire::is_deadline_error`, which is how the
+        // query server tells a budget expiry from a real crash.
+        if deadline.is_some_and(|dl| Instant::now() >= dl) {
+            panic!(
+                "deadline exceeded: query budget exhausted after \
+                 {rounds} lockstep rounds with {remaining} of {} \
+                 queries unfinished",
+                slots.len()
+            );
+        }
+        rounds += 1;
         // phase 1: advance every live bandit to its next staged pull (or
         // completion), resolving exact evals and ragged pulls inline;
         // finished queries are only *recorded* here — their results are
@@ -710,6 +756,48 @@ mod tests {
         assert_eq!(c1.get(), c2.get());
         assert_eq!(solo.metrics.dist_computations,
                    batch[0].metrics.dist_computations);
+    }
+
+    #[test]
+    fn batch_deadline_generous_budget_is_bitwise_invisible() {
+        let ds = synthetic::image_like(50, 128, 31);
+        let q = ds.row_vec(5);
+        let mut e1 = ScalarEngine;
+        let mut b1 = Rng::new(32);
+        let mut c1 = Counter::new();
+        let plain = knn_batch_dense(&ds, &[q.clone()], Metric::L2Sq,
+                                    &params(3), &mut e1, &mut b1,
+                                    &mut c1);
+        let mut e2 = ScalarEngine;
+        let mut b2 = Rng::new(32);
+        let mut c2 = Counter::new();
+        let dl = Some(Instant::now() + std::time::Duration::from_secs(600));
+        let budgeted = knn_batch_dense_deadline(&ds, &[q], Metric::L2Sq,
+                                                &params(3), &mut e2,
+                                                &mut b2, &mut c2, dl);
+        assert_eq!(plain[0].ids, budgeted[0].ids);
+        assert_eq!(plain[0].dists, budgeted[0].dists);
+        assert_eq!(c1.get(), c2.get());
+    }
+
+    #[test]
+    fn batch_deadline_expired_budget_panics_classifiably() {
+        let ds = synthetic::image_like(30, 64, 41);
+        let q = ds.row_vec(2);
+        let dl = Some(Instant::now() - std::time::Duration::from_millis(1));
+        let payload = std::panic::catch_unwind(move || {
+            let mut engine = ScalarEngine;
+            let mut rng = Rng::new(42);
+            let mut c = Counter::new();
+            knn_batch_dense_deadline(&ds, &[q], Metric::L2Sq, &params(2),
+                                     &mut engine, &mut rng, &mut c, dl)
+        })
+        .expect_err("an expired budget must abort the batch");
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("budget panics carry a String payload");
+        assert!(crate::runtime::wire::is_deadline_error(msg),
+                "not classifiable as a deadline error: {msg}");
     }
 
     #[test]

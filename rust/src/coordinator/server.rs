@@ -27,8 +27,22 @@
 //!   opening W×S sockets. Counters and per-batch latency
 //!   (`metrics::BatchStats`) merge into server totals for `stats`.
 //!
+//! **Deadline budgets and admission control.** With `deadline_ms > 0`
+//! (`[server] deadline_ms` / `--deadline-ms`, overridable per request
+//! by a `deadline_ms` JSON field) every query carries an absolute
+//! budget from the moment it is parsed: queue wait, lockstep rounds and
+//! remote wave waits all charge against it, and on expiry the query is
+//! answered with a structured `deadline_exceeded` error (or, on a
+//! degraded ring, a coverage-annotated partial answer) instead of
+//! stalling a worker for a full I/O timeout. With `max_queue > 0`
+//! (`[server] max_queue` / `--max-queue`) a full shared queue sheds new
+//! queries immediately with an `overload` error carrying a
+//! `retry_after_ms` hint. Both outcomes are counted
+//! (`metrics::BatchStats`) and surfaced via `stats`.
+//!
 //! Protocol (one JSON object per line):
 //!   request:  {"op":"knn",   "query":[f32...], "k":5}
+//!             {"op":"knn",   "query":[...], "k":5, "deadline_ms":20}
 //!             {"op":"stats"}
 //!             {"op":"ping"}
 //!             {"op":"shutdown"}
@@ -38,8 +52,12 @@
 //!             computed over the surviving shards only)
 //!             {"ok":true, "queries":q, "units":u, "p50_us":_, "p99_us":_,
 //!              "batches":b, "mean_batch":_, "max_batch":_,
-//!              "batch_p50_us":_, "batch_p99_us":_, "workers":w}
+//!              "batch_p50_us":_, "batch_p99_us":_, "workers":w,
+//!              "shed":_, "deadline_exceeded":_}
 //!             {"ok":false, "error":"..."}
+//!             {"ok":false, "error":"...", "kind":"deadline_exceeded"}
+//!             {"ok":false, "error":"...", "kind":"overload",
+//!              "retry_after_ms":_}
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -51,11 +69,12 @@ use std::time::{Duration, Instant};
 use crate::config::EngineKind;
 use crate::coordinator::arms::PullEngine;
 use crate::coordinator::bandit::BanditParams;
-use crate::coordinator::knn::knn_batch_dense;
+use crate::coordinator::knn::knn_batch_dense_deadline;
+use crate::runtime::wire::is_deadline_error;
 use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{BatchStats, Counter, LatencyStats};
 use crate::runtime::build_host_engine;
-use crate::runtime::placement::PlacementMap;
+use crate::runtime::placement::{PlacementMap, RetryPolicy};
 use crate::runtime::remote::{RemoteEngine, RemoteOptions, RingClient};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -102,6 +121,24 @@ pub struct ServerConfig {
     /// opt-in int8 sampling tier for every worker's native engine
     /// (`[engine] quantized` / `--quantized`); local engines only.
     pub quantized: bool,
+    /// default per-query deadline budget in milliseconds (`[server]
+    /// deadline_ms` / `--deadline-ms`): each query must be answered
+    /// within this long of arriving — queue wait included — or it gets
+    /// a structured `deadline_exceeded` error. A request's own
+    /// `deadline_ms` JSON field overrides it per query. 0 (the
+    /// default) disables the budget.
+    pub deadline_ms: u64,
+    /// admission bound on the shared queue (`[server] max_queue` /
+    /// `--max-queue`): a query arriving while this many are already
+    /// queued is shed immediately with an `overload` error carrying a
+    /// `retry_after_ms` hint, instead of growing the queue (and every
+    /// queued query's latency) without bound. 0 (the default) keeps
+    /// the queue unbounded.
+    pub max_queue: usize,
+    /// per-connection I/O timeout in milliseconds for the workers'
+    /// shared ring client (`[engine] io_timeout_ms` /
+    /// `--io-timeout-ms`); remote configurations only. Must be > 0.
+    pub io_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -119,6 +156,9 @@ impl Default for ServerConfig {
             batch_wait_us: 0,
             kernel: crate::runtime::kernels::KernelChoice::Auto,
             quantized: false,
+            deadline_ms: 0,
+            max_queue: 0,
+            io_timeout_ms: 60_000,
         }
     }
 }
@@ -128,6 +168,9 @@ impl Default for ServerConfig {
 struct Job {
     query: Vec<f32>,
     k: usize,
+    /// absolute answer-by deadline, stamped at request arrival (server
+    /// default or the request's own `deadline_ms`); `None` = unbounded
+    deadline: Option<Instant>,
     done: Arc<(Mutex<Option<Json>>, Condvar)>,
 }
 
@@ -161,7 +204,7 @@ fn build_worker_engine(shared: &Shared, kind: EngineKind,
         return build_host_engine(kind, shared.config.shards, &[],
                                  shared.config.degraded,
                                  shared.config.kernel,
-                                 shared.config.quantized);
+                                 shared.config.quantized, None);
     }
     let client = shared.ring.lock().unwrap().clone();
     let client = match client {
@@ -174,6 +217,8 @@ fn build_worker_engine(shared: &Shared, kind: EngineKind,
             let map = PlacementMap::parse(&shared.config.remote)?;
             let opts = RemoteOptions {
                 degraded: shared.config.degraded,
+                timeout: Some(Duration::from_millis(
+                    shared.config.io_timeout_ms.max(1))),
                 ..RemoteOptions::default()
             };
             let fresh = Arc::new(RingClient::connect_opts(&map, opts)?);
@@ -362,12 +407,30 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
         let mut responses: Vec<Option<Json>> =
             (0..jobs.len()).map(|_| None).collect();
         let mut batch_units = 0u64;
+        // jobs whose budget ran out while queued are answered without
+        // compute — spending rounds on a query nobody can use anymore
+        // only steals budget from the live ones sharing its batch
+        let mut expired_in_queue = 0u64;
+        for (i, job) in jobs.iter().enumerate() {
+            if job.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                responses[i] = Some(deadline_json("queue wait"));
+                expired_in_queue += 1;
+            }
+        }
+        if expired_in_queue > 0 {
+            shared
+                .batches
+                .lock()
+                .unwrap()
+                .record_deadline_exceeded(expired_in_queue);
+        }
         if engine.is_none() {
             match build_worker_engine(&shared, kind, &mut ring_in_use) {
                 Ok(e) => engine = Some(e),
                 Err(e) => {
                     let msg = format!("engine unavailable: {e}");
-                    for r in responses.iter_mut() {
+                    for r in responses.iter_mut().filter(|r| r.is_none())
+                    {
                         *r = Some(err_json(&msg));
                     }
                 }
@@ -381,13 +444,23 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
             let mut by_k: std::collections::BTreeMap<usize, Vec<usize>> =
                 std::collections::BTreeMap::new();
             for (i, job) in jobs.iter().enumerate() {
-                by_k.entry(job.k).or_default().push(i);
+                // skip jobs already answered (expired in queue)
+                if responses[i].is_none() {
+                    by_k.entry(job.k).or_default().push(i);
+                }
             }
             'groups: for (k, idxs) in by_k {
                 let queries: Vec<&[f32]> = idxs
                     .iter()
                     .map(|&i| jobs[i].query.as_slice())
                     .collect();
+                // the group computes in lockstep, so it must answer by
+                // its *tightest* member's deadline — the budget the
+                // whole wave runs under
+                let deadline = idxs
+                    .iter()
+                    .filter_map(|&i| jobs[i].deadline)
+                    .min();
                 let mut params = shared.config.params.clone();
                 params.k = k;
                 let mut counter = Counter::new();
@@ -400,13 +473,37 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                 // remote engine reconnects to the ring)
                 let outcome = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
-                        knn_batch_dense(&shared.data, &queries,
-                                        shared.config.metric, &params,
-                                        eng, &mut rng, &mut counter)
+                        knn_batch_dense_deadline(
+                            &shared.data, &queries, shared.config.metric,
+                            &params, eng, &mut rng, &mut counter,
+                            deadline)
                     }));
                 let results = match outcome {
                     Ok(results) => results,
-                    Err(_) => {
+                    Err(payload) => {
+                        // a deadline-budget expiry travels the same
+                        // panic channel as a real crash but means the
+                        // opposite: the machinery worked, the budget
+                        // ran out. Answer a structured error and keep
+                        // the engine — the ring client killed exactly
+                        // the connection it stopped waiting on, and
+                        // the next batch's set_deadline clears any
+                        // abandoned waves.
+                        if panic_msg(&payload)
+                            .is_some_and(is_deadline_error)
+                        {
+                            shared
+                                .batches
+                                .lock()
+                                .unwrap()
+                                .record_deadline_exceeded(
+                                    idxs.len() as u64);
+                            for &i in &idxs {
+                                responses[i] =
+                                    Some(deadline_json("compute"));
+                            }
+                            continue;
+                        }
                         for &i in &idxs {
                             responses[i] =
                                 Some(err_json("internal error: compute \
@@ -490,12 +587,21 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
 }
 
 /// Enqueue a validated knn job and block until a worker answers (or the
-/// server shuts down under us).
-fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize) -> Json {
+/// server shuts down under us). With `max_queue > 0`, a full queue sheds
+/// the query right here — before it consumes a queue slot or a waiter —
+/// with an `overload` answer.
+fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize,
+                   deadline: Option<Instant>) -> Json {
     let done = Arc::new((Mutex::new(None), Condvar::new()));
     {
         let mut q = shared.queue.lock().unwrap();
-        q.push_back(Job { query, k, done: done.clone() });
+        let cap = shared.config.max_queue;
+        if cap > 0 && q.len() >= cap {
+            drop(q);
+            shared.batches.lock().unwrap().record_shed(1);
+            return overload_json(shared);
+        }
+        q.push_back(Job { query, k, deadline, done: done.clone() });
     }
     shared.queue_cv.notify_one();
     let (lock, cv) = &*done;
@@ -528,9 +634,18 @@ fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize) -> Json {
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     let mut handles = Vec::new();
+    // idle-poll backoff: a quiet listener decays from 5ms to 50ms polls
+    // (shutdown latency stays bounded by the cap) instead of burning a
+    // fixed-rate wakeup forever
+    let idle = RetryPolicy {
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(50),
+    };
+    let mut idle_polls = 0u32;
     while !shared.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                idle_polls = 0;
                 let s = shared.clone();
                 handles.push(std::thread::spawn(move || {
                     let _ = handle_conn(stream, s);
@@ -539,7 +654,8 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                 handles.retain(|h| !h.is_finished());
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(5));
+                idle_polls = idle_polls.saturating_add(1);
+                std::thread::sleep(idle.backoff(idle_polls));
             }
             Err(_) => break,
         }
@@ -625,8 +741,24 @@ fn handle_knn(req: &Json, shared: &Shared) -> Json {
     if k == 0 || k >= shared.data.n {
         return err_json("k out of range");
     }
+    // the budget clock starts here, at validation — queue wait counts.
+    // A request-level `deadline_ms` overrides the server default; the
+    // override cannot be 0 ("no budget") because an unbounded query in
+    // a budgeted deployment would defeat the operator's worst-case
+    // latency bound.
+    let deadline_ms = match req.get("deadline_ms") {
+        None => shared.config.deadline_ms,
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms >= 1.0 && ms == ms.trunc() => ms as u64,
+            _ => {
+                return err_json("deadline_ms must be an integer >= 1");
+            }
+        },
+    };
+    let deadline = (deadline_ms > 0)
+        .then(|| Instant::now() + Duration::from_millis(deadline_ms));
     let t0 = Instant::now();
-    let resp = submit_and_wait(shared, query, k);
+    let resp = submit_and_wait(shared, query, k, deadline);
     if resp.get("ok") == Some(&Json::Bool(true)) {
         shared.latencies.lock().unwrap().record(t0.elapsed());
     }
@@ -656,6 +788,9 @@ fn stats_json(shared: &Shared) -> Json {
          Json::Num(shared.config.n_workers.max(1) as f64)),
         ("batch_wait_us",
          Json::Num(shared.config.batch_wait_us as f64)),
+        ("shed", Json::Num(batches.shed() as f64)),
+        ("deadline_exceeded",
+         Json::Num(batches.deadline_exceeded() as f64)),
     ])
 }
 
@@ -664,6 +799,50 @@ fn err_json(msg: &str) -> Json {
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.to_string())),
     ])
+}
+
+/// Structured answer for a query whose deadline budget ran out, with
+/// `context` naming where the budget died ("queue wait" / "compute").
+fn deadline_json(context: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error",
+         Json::Str(format!("deadline exceeded: query budget exhausted \
+                            during {context}"))),
+        ("kind", Json::Str("deadline_exceeded".into())),
+    ])
+}
+
+/// Structured answer for a query shed at admission. The `retry_after_ms`
+/// hint is the observed p50 batch latency (roughly one queue drain), so
+/// well-behaved clients back off just long enough for the queue to make
+/// room.
+fn overload_json(shared: &Shared) -> Json {
+    let p50 = shared
+        .batches
+        .lock()
+        .unwrap()
+        .latency()
+        .percentile(50.0)
+        .as_millis() as u64;
+    let retry_after = if p50 == 0 { 50 } else { p50.max(1) };
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error",
+         Json::Str(format!("overloaded: queue full ({} queued)",
+                           shared.config.max_queue))),
+        ("kind", Json::Str("overload".into())),
+        ("retry_after_ms", Json::Num(retry_after as f64)),
+    ])
+}
+
+/// Extract the message from a caught panic payload (compute panics in
+/// this codebase carry `String` or `&str` payloads).
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> Option<&str> {
+    payload
+        .downcast_ref::<String>()
+        .map(|s| s.as_str())
+        .or_else(|| payload.downcast_ref::<&str>().copied())
 }
 
 /// Minimal blocking client for tests/examples.
@@ -793,6 +972,116 @@ mod tests {
         // malformed json
         let resp2 = cl.send_raw("{not json").unwrap();
         assert_eq!(resp2.get("ok"), Some(&Json::Bool(false)));
+        srv.stop();
+    }
+
+    #[test]
+    fn full_queue_sheds_with_retry_hint() {
+        // drive submit_and_wait directly against a hand-built Shared
+        // with no workers: one pre-queued job fills the bounded queue,
+        // so the next submit must shed immediately (it would hang
+        // forever waiting otherwise — no worker will ever answer)
+        let ds = synthetic::image_like(30, 16, 135);
+        let q = ds.row_vec(0);
+        let shared = Shared {
+            data: ds,
+            config: ServerConfig { max_queue: 1, ..Default::default() },
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            total_units: AtomicU64::new(0),
+            total_queries: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyStats::default()),
+            batches: Mutex::new(BatchStats::default()),
+            ring: Mutex::new(None),
+            shutdown: AtomicBool::new(false),
+        };
+        shared.queue.lock().unwrap().push_back(Job {
+            query: q.clone(),
+            k: 1,
+            deadline: None,
+            done: Arc::new((Mutex::new(None), Condvar::new())),
+        });
+        let resp = submit_and_wait(&shared, q, 1, None);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("kind").and_then(|k| k.as_str()),
+                   Some("overload"));
+        let hint = resp
+            .get("retry_after_ms")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(hint >= 1.0, "retry hint must be actionable: {hint}");
+        assert_eq!(shared.batches.lock().unwrap().shed(), 1);
+        // the shed query never consumed a queue slot
+        assert_eq!(shared.queue.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn expired_deadline_answers_structured_error() {
+        // batch_wait_us makes the worker linger 50ms on a non-full
+        // batch, so a 1ms request budget reliably expires in-queue and
+        // the pre-compute filter answers it
+        let ds = synthetic::image_like(40, 32, 136);
+        let q = ds.row_vec(3);
+        let cfg = ServerConfig {
+            batch_wait_us: 50_000,
+            ..free_port_config()
+        };
+        let mut srv = Server::start(ds, cfg).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let resp = cl
+            .request(&Json::obj(vec![
+                ("op", Json::Str("knn".into())),
+                ("query", Json::f32_array(&q)),
+                ("k", Json::Num(1.0)),
+                ("deadline_ms", Json::Num(1.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.get("kind").and_then(|k| k.as_str()),
+                   Some("deadline_exceeded"));
+        let stats = cl
+            .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+            .unwrap();
+        assert!(stats
+                    .get("deadline_exceeded")
+                    .and_then(|v| v.as_f64())
+                    .unwrap()
+                >= 1.0);
+        // a generous budget on the same server still answers normally
+        let resp2 = cl
+            .request(&Json::obj(vec![
+                ("op", Json::Str("knn".into())),
+                ("query", Json::f32_array(&q)),
+                ("k", Json::Num(1.0)),
+                ("deadline_ms", Json::Num(600_000.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp2.get("ok"), Some(&Json::Bool(true)));
+        srv.stop();
+    }
+
+    #[test]
+    fn zero_deadline_override_is_rejected() {
+        // per-request deadline_ms=0 would mean "unbounded", defeating
+        // the operator's budget — reject it at validation
+        let ds = synthetic::image_like(30, 16, 137);
+        let q = ds.row_vec(0);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let resp = cl
+            .request(&Json::obj(vec![
+                ("op", Json::Str("knn".into())),
+                ("query", Json::f32_array(&q)),
+                ("k", Json::Num(1.0)),
+                ("deadline_ms", Json::Num(0.0)),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp
+                    .get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap()
+                    .contains("deadline_ms"));
         srv.stop();
     }
 

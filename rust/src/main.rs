@@ -73,6 +73,14 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
     if args.flag_bool("quantized") {
         cfg.quantized = true;
     }
+    cfg.io_timeout_ms =
+        args.flag_u64("io-timeout-ms", cfg.io_timeout_ms)?;
+    if cfg.io_timeout_ms == 0 {
+        return Err("--io-timeout-ms must be > 0: a zero timeout would \
+                    fail every wire operation (unbounded waits are not \
+                    offered — a dead peer must cost one window, not a \
+                    hang)".into());
+    }
     if let Some(a) = args.flag("artifacts") {
         cfg.artifact_dir = a.to_string();
     }
@@ -199,11 +207,11 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
                     // scalar/native; sharded across a row-partitioned
                     // worker pool when --shards > 1, or fanned over a
                     // shard-serve ring when --remote is given
-                    let mut e = build_host_engine(kind, cfg.shards,
-                                                  &cfg.remote,
-                                                  cfg.degraded,
-                                                  cfg.kernel,
-                                                  cfg.quantized)?;
+                    let mut e = build_host_engine(
+                        kind, cfg.shards, &cfg.remote, cfg.degraded,
+                        cfg.kernel, cfg.quantized,
+                        Some(std::time::Duration::from_millis(
+                            cfg.io_timeout_ms)))?;
                     knn_point_dense(&data, q, cfg.metric, &params, &mut e,
                                     &mut rng, &mut counter)
                 }
@@ -287,9 +295,11 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
                                    &mut rng, &mut counter)
         }
         kind => {
-            let mut e = build_host_engine(kind, cfg.shards, &cfg.remote,
-                                          cfg.degraded, cfg.kernel,
-                                          cfg.quantized)?;
+            let mut e = build_host_engine(
+                kind, cfg.shards, &cfg.remote, cfg.degraded, cfg.kernel,
+                cfg.quantized,
+                Some(std::time::Duration::from_millis(
+                    cfg.io_timeout_ms)))?;
             knn_batch_points_dense(data, &points, cfg.metric, &params,
                                    &mut e, &mut rng, &mut counter)
         }
@@ -339,9 +349,10 @@ fn cmd_graph(args: &Args) -> Result<(), String> {
     } else {
         EngineKind::Native
     };
-    let mut engine = build_host_engine(kind, cfg.shards, &cfg.remote,
-                                       cfg.degraded, cfg.kernel,
-                                       cfg.quantized)?;
+    let mut engine = build_host_engine(
+        kind, cfg.shards, &cfg.remote, cfg.degraded, cfg.kernel,
+        cfg.quantized,
+        Some(std::time::Duration::from_millis(cfg.io_timeout_ms)))?;
     let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
                             &mut engine, &mut rng, &mut counter);
     let exact_units = (data.n * (data.n - 1) * data.d) as u64;
@@ -432,6 +443,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                                      cfg.server_batch_wait_us)?,
         kernel: cfg.kernel,
         quantized: cfg.quantized,
+        deadline_ms: args.flag_u64("deadline-ms",
+                                   cfg.server_deadline_ms)?,
+        max_queue: args.flag_usize("max-queue", cfg.server_max_queue)?,
+        io_timeout_ms: cfg.io_timeout_ms,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
@@ -469,8 +484,13 @@ fn cmd_shard_serve(args: &Args) -> Result<(), String> {
         return Err("--data FILE or --synthetic image:N:D:SEED required"
             .into());
     };
-    let srv = ShardServer::start_shard_of_with_kernel(addr, &data, shard,
-                                                      of, kernel)
+    let io_timeout_ms = args.flag_u64("io-timeout-ms", 60_000)?;
+    if io_timeout_ms == 0 {
+        return Err("--io-timeout-ms must be > 0".into());
+    }
+    let srv = ShardServer::start_shard_of_with_opts(
+        addr, &data, shard, of, kernel,
+        Some(std::time::Duration::from_millis(io_timeout_ms)))
         .map_err(|e| e.to_string())?;
     let (a, b) = shard_range(shard, data.n, of);
     println!("bmonn shard-serve: rows [{a}, {b}) of n={} d={} on {} \
@@ -496,7 +516,12 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
         .map(parse_endpoints)
         .ok_or("--remote SPECS required (one entry per shard; replicas \
                 separated by '|')")?;
-    let timeout_ms = args.flag_u64("timeout-ms", 5000)?;
+    // --io-timeout-ms is the ring-wide name for this knob; the probe's
+    // original --timeout-ms stays accepted as a legacy alias
+    let timeout_ms = match args.flag("io-timeout-ms") {
+        Some(_) => args.flag_u64("io-timeout-ms", 5000)?,
+        None => args.flag_u64("timeout-ms", 5000)?,
+    };
     let timeout = std::time::Duration::from_millis(timeout_ms.max(1));
     let map = PlacementMap::parse(&specs)?;
     let mut covered_rows = 0usize;

@@ -249,6 +249,8 @@ pub struct BatchStats {
     batches: u64,
     queries: u64,
     max_batch: u64,
+    shed: u64,
+    deadline_exceeded: u64,
     lat: LatencyStats,
 }
 
@@ -258,6 +260,27 @@ impl BatchStats {
         self.queries += batch_size as u64;
         self.max_batch = self.max_batch.max(batch_size as u64);
         self.lat.record(elapsed);
+    }
+
+    /// Record `n` queries shed at admission (queue depth over the bound).
+    pub fn record_shed(&mut self, n: u64) {
+        self.shed += n;
+    }
+
+    /// Record `n` queries that answered a `deadline_exceeded` error
+    /// (budget expired in the queue or mid-compute).
+    pub fn record_deadline_exceeded(&mut self, n: u64) {
+        self.deadline_exceeded += n;
+    }
+
+    /// Queries shed at admission since startup.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Queries that exceeded their deadline budget since startup.
+    pub fn deadline_exceeded(&self) -> u64 {
+        self.deadline_exceeded
     }
 
     pub fn batches(&self) -> u64 {
@@ -381,6 +404,16 @@ mod tests {
         assert_eq!(b.max_batch(), 8);
         assert!((b.mean_batch() - 13.0 / 3.0).abs() < 1e-12);
         assert_eq!(b.latency().count(), 3);
+        assert_eq!(b.shed(), 0);
+        assert_eq!(b.deadline_exceeded(), 0);
+        b.record_shed(2);
+        b.record_shed(1);
+        b.record_deadline_exceeded(4);
+        assert_eq!(b.shed(), 3);
+        assert_eq!(b.deadline_exceeded(), 4);
+        // overload accounting never perturbs the batch/latency series
+        assert_eq!(b.batches(), 3);
+        assert_eq!(b.queries(), 13);
     }
 
     #[test]

@@ -1,0 +1,559 @@
+//! Deterministic fault injection for the shard ring: a seeded,
+//! scripted TCP proxy that sits between a [`RingClient`] and a
+//! [`ShardServer`] and misbehaves on schedule.
+//!
+//! The failover/blacklist/degraded machinery (PRs 4–5) is the repo's
+//! robustness crown jewel, but hand-written kill scenarios only cover
+//! the faults someone thought of. A [`FaultProxy`] makes the network
+//! itself scriptable: point a ring client at `proxy.endpoint()` instead
+//! of the real shard server and the proxy forwards the wave-tagged
+//! frames while injecting the faults of its [`FaultPlan`] —
+//!
+//! * **delay** — hold a specific frame for a fixed or seeded-random
+//!   number of milliseconds before forwarding it (slow replica, GC
+//!   pause, cross-AZ hiccup);
+//! * **drop mid-frame** — forward the length header plus *half* the
+//!   payload, then sever both sides (process death at the worst
+//!   possible byte);
+//! * **corrupt** — flip a bit in the frame's opcode/tag region so the
+//!   receiver sees *detectably* bad bytes (the wire protocol carries
+//!   no payload checksum, so corrupting numeric payload bytes would be
+//!   silent — the proxy deliberately corrupts where the decoder or the
+//!   demux router must notice);
+//! * **blackhole** — accept connections, swallow every frame, answer
+//!   nothing (a live TCP endpoint whose process is wedged — the
+//!   failure mode only I/O timeouts can detect);
+//! * **partition until epoch** — blackhole until
+//!   [`FaultProxy::advance_epoch`] reaches a threshold, then heal (a
+//!   network partition with a scriptable end).
+//!
+//! Every random choice draws from one seeded [`Rng`], so a fault
+//! schedule replays exactly given the same seed and frame order.
+//! `tests/chaos.rs` drives seeded schedules over replicated rings and
+//! asserts the standing invariant: zero query errors and
+//! bitwise-identical answers while any replica of each shard survives;
+//! clean structured errors — never hangs — otherwise.
+//!
+//! [`RingClient`]: crate::runtime::remote::RingClient
+//! [`ShardServer`]: crate::runtime::remote::ShardServer
+
+#![deny(missing_docs)]
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::runtime::wire;
+use crate::util::rng::Rng;
+
+/// Which direction of the proxied byte stream a rule applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    /// client → server frames (requests)
+    ToServer,
+    /// server → client frames (replies)
+    ToClient,
+}
+
+fn dir_index(dir: Dir) -> usize {
+    match dir {
+        Dir::ToServer => 0,
+        Dir::ToClient => 1,
+    }
+}
+
+/// One scripted misbehavior, applied when its [`FaultRule`] matches.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultAction {
+    /// hold the frame for exactly this many milliseconds, then forward
+    Delay(u64),
+    /// hold the frame for a seeded-uniform duration in `[lo, hi]` ms
+    DelayRange(u64, u64),
+    /// forward the length header and half the payload, then sever the
+    /// connection — the receiver sees a truncated frame and EOF
+    DropMidFrame,
+    /// flip a bit in the opcode/tag region before forwarding, so the
+    /// receiver's decoder or demux router must reject the frame
+    Corrupt,
+}
+
+/// Bind a [`FaultAction`] to one frame of one direction. Frames are
+/// counted per direction from 0 across the proxy's whole lifetime
+/// (connections included), so a schedule survives reconnects.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRule {
+    /// direction the rule watches
+    pub dir: Dir,
+    /// per-direction frame index the rule fires on
+    pub frame: u64,
+    /// what to do to that frame
+    pub action: FaultAction,
+}
+
+/// A complete seeded fault schedule for one proxy. The default plan
+/// (seed 0, no rules, no blackhole, no partition) is a transparent
+/// proxy.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// seed for every random choice the schedule makes
+    pub seed: u64,
+    /// per-frame scripted actions
+    pub rules: Vec<FaultRule>,
+    /// start blackholed: accept, swallow, never answer (toggle at
+    /// runtime with [`FaultProxy::set_blackhole`])
+    pub blackhole: bool,
+    /// behave blackholed while `epoch() < this`; healing is scripted
+    /// by [`FaultProxy::advance_epoch`]
+    pub partition_until_epoch: Option<u64>,
+}
+
+struct ProxyShared {
+    upstream: String,
+    rules: Vec<FaultRule>,
+    blackhole: AtomicBool,
+    epoch: AtomicU64,
+    partition_until: Option<u64>,
+    /// per-direction frame counters (proxy lifetime, all connections)
+    frames: [AtomicU64; 2],
+    shutdown: AtomicBool,
+    rng: Mutex<Rng>,
+    /// every live socket (client and upstream sides), killed on stop
+    conns: Mutex<Vec<TcpStream>>,
+    pumps: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ProxyShared {
+    /// Is the proxy currently swallowing traffic (blackhole or an
+    /// unhealed partition)?
+    fn severed(&self) -> bool {
+        self.blackhole.load(Ordering::SeqCst)
+            || self
+                .partition_until
+                .is_some_and(|e| self.epoch.load(Ordering::SeqCst) < e)
+    }
+
+    fn register(&self, s: &TcpStream) {
+        if let Ok(c) = s.try_clone() {
+            self.conns.lock().unwrap().push(c);
+        }
+    }
+}
+
+/// A running fault-injection proxy (see module docs). Stops on drop.
+pub struct FaultProxy {
+    /// bound address of the proxy's listener (hand
+    /// [`FaultProxy::endpoint`] to the ring client as the shard's
+    /// endpoint)
+    pub addr: SocketAddr,
+    shared: Arc<ProxyShared>,
+    accept_handle: Option<JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    /// Start a proxy on a loopback ephemeral port, forwarding to
+    /// `upstream` (a shard server endpoint) under `plan`.
+    pub fn start(upstream: &str, plan: FaultPlan)
+                 -> io::Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(ProxyShared {
+            upstream: upstream.to_string(),
+            rules: plan.rules,
+            blackhole: AtomicBool::new(plan.blackhole),
+            epoch: AtomicU64::new(0),
+            partition_until: plan.partition_until_epoch,
+            frames: [AtomicU64::new(0), AtomicU64::new(0)],
+            shutdown: AtomicBool::new(false),
+            rng: Mutex::new(Rng::new(plan.seed)),
+            conns: Mutex::new(Vec::new()),
+            pumps: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("bmonn-fault-proxy".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .expect("spawn fault-proxy accept thread");
+        Ok(FaultProxy { addr, shared, accept_handle: Some(accept_handle) })
+    }
+
+    /// `host:port` string of the proxy's listener — what the ring
+    /// client should dial instead of the real shard server.
+    pub fn endpoint(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Toggle blackhole mode at runtime. Turning it on swallows every
+    /// frame of existing connections too; turning it off lets new
+    /// connections through (frames swallowed while severed are lost —
+    /// the client's timeout/failover machinery is what recovers them).
+    pub fn set_blackhole(&self, on: bool) {
+        self.shared.blackhole.store(on, Ordering::SeqCst);
+    }
+
+    /// Current partition epoch (starts at 0).
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Advance the partition epoch by one, returning the new value —
+    /// once it reaches the plan's `partition_until_epoch`, the
+    /// partition heals.
+    pub fn advance_epoch(&self) -> u64 {
+        self.shared.epoch.fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    /// Frames forwarded (or swallowed) so far in `dir`, across every
+    /// connection of the proxy's lifetime.
+    pub fn frames(&self, dir: Dir) -> u64 {
+        self.shared.frames[dir_index(dir)].load(Ordering::SeqCst)
+    }
+
+    /// Stop proxying: sever every live connection (both sides see EOF,
+    /// like a middlebox death) and join the worker threads.
+    pub fn stop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for s in self.shared.conns.lock().unwrap().iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.shared.pumps.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<ProxyShared>) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((client, _)) => {
+                shared.register(&client);
+                if shared.severed() {
+                    // accept-then-silence: hold the socket open and
+                    // swallow whatever arrives; no upstream is dialed,
+                    // so healing requires the client to reconnect
+                    // (exactly what failover does)
+                    let sh = shared.clone();
+                    let h = std::thread::spawn(move || {
+                        swallow_conn(client, &sh);
+                    });
+                    shared.pumps.lock().unwrap().push(h);
+                    continue;
+                }
+                let Ok(server) = TcpStream::connect(&shared.upstream)
+                else {
+                    // upstream down: sever the client (it sees EOF,
+                    // the same signal a dead shard server produces)
+                    let _ = client.shutdown(Shutdown::Both);
+                    continue;
+                };
+                shared.register(&server);
+                let (Ok(c2), Ok(s2)) =
+                    (client.try_clone(), server.try_clone())
+                else {
+                    let _ = client.shutdown(Shutdown::Both);
+                    let _ = server.shutdown(Shutdown::Both);
+                    continue;
+                };
+                let sh_a = shared.clone();
+                let sh_b = shared.clone();
+                let mut pumps = shared.pumps.lock().unwrap();
+                pumps.push(std::thread::spawn(move || {
+                    pump(client, s2, Dir::ToServer, &sh_a);
+                }));
+                pumps.push(std::thread::spawn(move || {
+                    pump(server, c2, Dir::ToClient, &sh_b);
+                }));
+                pumps.retain(|h| !h.is_finished());
+            }
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                // test harness: favor low, predictable accept latency
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for s in shared.conns.lock().unwrap().iter() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+}
+
+/// Hold a severed connection open, discarding whatever the client
+/// writes (its sends succeed — nothing ever answers), until the client
+/// hangs up or the proxy stops.
+fn swallow_conn(mut client: TcpStream, shared: &ProxyShared) {
+    let _ = client.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut sink = [0u8; 4096];
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match client.read(&mut sink) {
+            Ok(0) => return,
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Forward one direction of a proxied connection frame by frame,
+/// applying the schedule's matching rules. Exits (severing both sides)
+/// on any I/O error or a `DropMidFrame` rule.
+fn pump(mut src: TcpStream, mut dst: TcpStream, dir: Dir,
+        shared: &ProxyShared) {
+    let sever = |src: &TcpStream, dst: &TcpStream| {
+        let _ = src.shutdown(Shutdown::Both);
+        let _ = dst.shutdown(Shutdown::Both);
+    };
+    let mut header = [0u8; 4];
+    let mut payload = Vec::new();
+    loop {
+        if src.read_exact(&mut header).is_err() {
+            sever(&src, &dst);
+            return;
+        }
+        let len = u32::from_le_bytes(header) as usize;
+        if len > wire::MAX_FRAME {
+            sever(&src, &dst);
+            return;
+        }
+        payload.clear();
+        payload.resize(len, 0);
+        if src.read_exact(&mut payload).is_err() {
+            sever(&src, &dst);
+            return;
+        }
+        let idx = shared.frames[dir_index(dir)]
+            .fetch_add(1, Ordering::SeqCst);
+        let mut drop_mid_frame = false;
+        for rule in shared.rules.iter() {
+            if rule.dir != dir || rule.frame != idx {
+                continue;
+            }
+            match rule.action {
+                FaultAction::Delay(ms) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                FaultAction::DelayRange(lo, hi) => {
+                    let (lo, hi) = (lo.min(hi), lo.max(hi));
+                    let span = (hi - lo) as usize + 1;
+                    let ms = lo
+                        + shared.rng.lock().unwrap().below(span) as u64;
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                FaultAction::DropMidFrame => drop_mid_frame = true,
+                FaultAction::Corrupt => {
+                    // flip a bit where the receiver must notice: the
+                    // opcode (decoder rejects the frame) or the top
+                    // wave-tag byte (the demux router sees a reply for
+                    // a wave that cannot be pending). Payload bytes are
+                    // left alone — the protocol has no checksum, so
+                    // that corruption would be *silent*, which is a
+                    // protocol gap to test for, not a fault to inject.
+                    if payload.is_empty() {
+                        continue;
+                    }
+                    let flip_op =
+                        shared.rng.lock().unwrap().below(2) == 0;
+                    if flip_op || payload.len() < 9 {
+                        payload[0] ^= 0xFF;
+                    } else {
+                        payload[8] ^= 0xFF;
+                    }
+                }
+            }
+        }
+        if shared.severed() {
+            // swallowed: the frame counter advanced, nothing forwards
+            continue;
+        }
+        if drop_mid_frame {
+            let half = &payload[..len / 2];
+            let _ = dst.write_all(&header);
+            let _ = dst.write_all(half);
+            sever(&src, &dst);
+            return;
+        }
+        if dst.write_all(&header).is_err()
+            || dst.write_all(&payload).is_err()
+        {
+            sever(&src, &dst);
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    /// A minimal frame echo server: reads a frame, writes the same
+    /// payload back as a frame, until the peer hangs up.
+    fn echo_server() -> (String, JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            // serves connections one at a time until the test process
+            // exits — plenty for these scenarios
+            while let Ok((mut s, _)) = listener.accept() {
+                let mut buf = Vec::new();
+                loop {
+                    if wire::read_frame(&mut s, &mut buf).is_err() {
+                        break;
+                    }
+                    if wire::write_frame(&mut s, &buf).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        (ep, h)
+    }
+
+    fn round_trip(s: &mut TcpStream, payload: &[u8]) -> Vec<u8> {
+        wire::write_frame(s, payload).unwrap();
+        let mut buf = Vec::new();
+        wire::read_frame(s, &mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn clean_proxy_is_transparent_and_counts_frames() {
+        let (ep, _h) = echo_server();
+        let proxy =
+            FaultProxy::start(&ep, FaultPlan::default()).unwrap();
+        let mut s = TcpStream::connect(proxy.addr).unwrap();
+        let msg = vec![101u8, 1, 2, 3, 4, 5, 6, 7, 8, 9];
+        assert_eq!(round_trip(&mut s, &msg), msg);
+        assert_eq!(round_trip(&mut s, &msg), msg);
+        assert_eq!(proxy.frames(Dir::ToServer), 2);
+        assert_eq!(proxy.frames(Dir::ToClient), 2);
+    }
+
+    #[test]
+    fn delay_rule_holds_exactly_the_matching_frame() {
+        let (ep, _h) = echo_server();
+        let plan = FaultPlan {
+            rules: vec![FaultRule {
+                dir: Dir::ToServer,
+                frame: 1,
+                action: FaultAction::Delay(80),
+            }],
+            ..FaultPlan::default()
+        };
+        let proxy = FaultProxy::start(&ep, plan).unwrap();
+        let mut s = TcpStream::connect(proxy.addr).unwrap();
+        let msg = vec![9u8; 16];
+        let t0 = Instant::now();
+        round_trip(&mut s, &msg);
+        let first = t0.elapsed();
+        let t1 = Instant::now();
+        round_trip(&mut s, &msg);
+        let second = t1.elapsed();
+        assert!(second >= Duration::from_millis(80),
+                "delayed frame answered in {second:?}");
+        assert!(first < Duration::from_millis(80),
+                "undelayed frame took {first:?}");
+    }
+
+    #[test]
+    fn drop_mid_frame_severs_with_a_truncated_frame() {
+        let (ep, _h) = echo_server();
+        let plan = FaultPlan {
+            rules: vec![FaultRule {
+                dir: Dir::ToClient,
+                frame: 0,
+                action: FaultAction::DropMidFrame,
+            }],
+            ..FaultPlan::default()
+        };
+        let proxy = FaultProxy::start(&ep, plan).unwrap();
+        let mut s = TcpStream::connect(proxy.addr).unwrap();
+        wire::write_frame(&mut s, &[7u8; 32]).unwrap();
+        let mut buf = Vec::new();
+        assert!(wire::read_frame(&mut s, &mut buf).is_err(),
+                "a mid-frame drop must not deliver a whole frame");
+    }
+
+    #[test]
+    fn corruption_is_detectable_and_seed_deterministic() {
+        let received = |seed: u64| {
+            let (ep, _h) = echo_server();
+            let plan = FaultPlan {
+                seed,
+                rules: vec![FaultRule {
+                    dir: Dir::ToServer,
+                    frame: 0,
+                    action: FaultAction::Corrupt,
+                }],
+                ..FaultPlan::default()
+            };
+            let proxy = FaultProxy::start(&ep, plan).unwrap();
+            let mut s = TcpStream::connect(proxy.addr).unwrap();
+            round_trip(&mut s, &[42u8; 12])
+        };
+        let a = received(7);
+        assert_ne!(a, vec![42u8; 12], "corruption must alter the frame");
+        // only the opcode or the top tag byte may differ
+        let diffs: Vec<usize> = (0..12)
+            .filter(|&i| a[i] != 42)
+            .collect();
+        assert!(diffs == vec![0] || diffs == vec![8],
+                "corruption outside the header region: {diffs:?}");
+        assert_eq!(a, received(7), "same seed must corrupt identically");
+    }
+
+    #[test]
+    fn blackhole_accepts_swallows_and_heals_on_clear() {
+        let (ep, _h) = echo_server();
+        let plan =
+            FaultPlan { blackhole: true, ..FaultPlan::default() };
+        let proxy = FaultProxy::start(&ep, plan).unwrap();
+        let mut s = TcpStream::connect(proxy.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        wire::write_frame(&mut s, &[1u8; 8]).unwrap();
+        let mut buf = Vec::new();
+        let err = wire::read_frame(&mut s, &mut buf).unwrap_err();
+        assert!(matches!(err.kind(), io::ErrorKind::WouldBlock
+                                     | io::ErrorKind::TimedOut),
+                "a blackhole must time the reader out, not EOF: {err}");
+        // healing: clear the blackhole, reconnect (what failover does)
+        proxy.set_blackhole(false);
+        let mut s2 = TcpStream::connect(proxy.addr).unwrap();
+        assert_eq!(round_trip(&mut s2, &[2u8; 8]), vec![2u8; 8]);
+    }
+
+    #[test]
+    fn partition_heals_when_the_epoch_arrives() {
+        let (ep, _h) = echo_server();
+        let plan = FaultPlan {
+            partition_until_epoch: Some(1),
+            ..FaultPlan::default()
+        };
+        let proxy = FaultProxy::start(&ep, plan).unwrap();
+        let mut s = TcpStream::connect(proxy.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        wire::write_frame(&mut s, &[3u8; 8]).unwrap();
+        let mut buf = Vec::new();
+        assert!(wire::read_frame(&mut s, &mut buf).is_err(),
+                "partitioned proxy must answer nothing");
+        assert_eq!(proxy.advance_epoch(), 1);
+        let mut s2 = TcpStream::connect(proxy.addr).unwrap();
+        assert_eq!(round_trip(&mut s2, &[4u8; 8]), vec![4u8; 8]);
+    }
+}

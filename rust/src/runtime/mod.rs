@@ -19,6 +19,11 @@
 //! * [`placement`] — replica placement for the ring: ordered replica
 //!   lists per logical shard plus the per-endpoint backoff/blacklist
 //!   state the failover path uses;
+//! * [`fault`] — the deterministic fault-injection harness: a seeded,
+//!   scripted TCP proxy ([`fault::FaultProxy`]) that sits between a
+//!   ring client and a shard server and injects delays, mid-frame
+//!   drops, corruption, blackholes and partitions on schedule, so the
+//!   chaos tests exercise the failover machinery reproducibly;
 //! * [`remote`] — multi-machine wrapper: a `shard-serve` TCP server per
 //!   row shard (replicated at will, computing concurrent tagged waves
 //!   per connection), the shared multiplexed [`remote::RingClient`]
@@ -34,6 +39,7 @@
 //! (coordinator::arms) by parity tests.
 
 pub mod artifacts;
+pub mod fault;
 pub mod kernels;
 pub mod native;
 pub mod partition;
@@ -46,6 +52,7 @@ pub mod wire;
 use crate::config::EngineKind;
 use crate::coordinator::arms::{PullEngine, ScalarEngine};
 use kernels::KernelChoice;
+use std::time::Duration;
 
 /// Build the configured host-side pull engine.
 ///
@@ -77,9 +84,14 @@ use kernels::KernelChoice;
 /// coordinator's PAC accounting to absorb) — requesting either here
 /// alongside `--remote` is rejected rather than silently ignored, and
 /// both are meaningless for the f64 `ScalarEngine`.
+///
+/// `io_timeout` (`[engine] io_timeout_ms` / `--io-timeout-ms`) bounds
+/// the ring client's connects, writes and per-wave reply waits; local
+/// engines have no I/O and ignore it.
 pub fn build_host_engine(kind: EngineKind, shards: usize,
                          remote: &[String], degraded: bool,
-                         kernel: KernelChoice, quantized: bool)
+                         kernel: KernelChoice, quantized: bool,
+                         io_timeout: Option<Duration>)
                          -> Result<Box<dyn PullEngine + Send>, String> {
     let shards = shards.max(1);
     if !remote.is_empty() {
@@ -110,9 +122,12 @@ pub fn build_host_engine(kind: EngineKind, shards: usize,
                 .into());
         }
         let map = placement::PlacementMap::parse(remote)?;
+        let timeout =
+            io_timeout.or(Some(remote::DEFAULT_IO_TIMEOUT));
         return Ok(Box::new(remote::RemoteEngine::connect_opts(
             &map,
             remote::RemoteOptions { degraded,
+                                    timeout,
                                     ..remote::RemoteOptions::default() },
         )?));
     }

@@ -203,6 +203,78 @@ mod tests {
     }
 
     #[test]
+    fn backoff_saturates_at_the_cap_without_overflow() {
+        // huge consecutive-failure counts must clamp to the cap, never
+        // overflow the shift or the Duration multiply
+        let p = RetryPolicy {
+            backoff_base: Duration::from_secs(1),
+            backoff_max: Duration::from_secs(8),
+        };
+        for fails in [17u32, 31, 32, 64, 1_000, u32::MAX] {
+            assert_eq!(p.backoff(fails), Duration::from_secs(8),
+                       "fails = {fails}");
+        }
+        // monotone nondecreasing up to saturation
+        let mut prev = Duration::ZERO;
+        for fails in 1..64u32 {
+            let w = p.backoff(fails);
+            assert!(w >= prev, "backoff shrank at fails = {fails}");
+            prev = w;
+        }
+        // degenerate call: fails = 0 behaves like the first failure
+        assert_eq!(p.backoff(0), p.backoff(1));
+    }
+
+    #[test]
+    fn heal_then_stale_blacklist_restarts_from_base() {
+        // a reconnect heal racing a concurrent blacklist: the failure
+        // observed *after* the heal must restart the schedule at the
+        // base window, not resume the pre-heal doubled one
+        let policy = RetryPolicy {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(4),
+        };
+        let t0 = Instant::now();
+        let mut st = EndpointState::default();
+        st.record_failure(&policy, t0);
+        st.record_failure(&policy, t0);
+        st.record_failure(&policy, t0); // window now 400ms
+        assert!(!st.eligible(t0 + Duration::from_millis(399)));
+        st.record_success(); // reconnect heals completely
+        assert!(st.eligible(t0));
+        // the racing failure (e.g. a wave that was already in flight on
+        // the old dead conn) lands after the heal
+        st.record_failure(&policy, t0);
+        assert!(!st.eligible(t0 + Duration::from_millis(99)));
+        assert!(st.eligible(t0 + Duration::from_millis(100)),
+                "post-heal failure must blacklist for base, not 800ms");
+    }
+
+    #[test]
+    fn regressed_now_never_panics_and_keeps_the_state_sane() {
+        // explicit-`now` monotonicity: callers sample Instant::now() at
+        // different points, so a `now` older than a previous call's must
+        // be handled (no panic, no underflow), just with the window
+        // anchored at whatever `now` the caller passed
+        let policy = RetryPolicy {
+            backoff_base: Duration::from_millis(100),
+            backoff_max: Duration::from_secs(1),
+        };
+        let t0 = Instant::now();
+        let t_late = t0 + Duration::from_secs(10);
+        let mut st = EndpointState::default();
+        st.record_failure(&policy, t_late);
+        // probing with an older timestamp: still blacklisted, no panic
+        assert!(!st.eligible(t0));
+        // a regressed failure timestamp re-anchors the (doubled) window
+        // at the older now — eligible again sooner, but never panicking
+        st.record_failure(&policy, t0);
+        assert!(!st.eligible(t0 + Duration::from_millis(199)));
+        assert!(st.eligible(t0 + Duration::from_millis(200)));
+        assert!(st.eligible(t_late));
+    }
+
+    #[test]
     fn endpoint_state_blacklists_and_heals() {
         let policy = RetryPolicy {
             backoff_base: Duration::from_millis(100),

@@ -105,6 +105,8 @@ use crate::runtime::wire::{self, Message, WireRequest};
 /// strand a coordinator worker forever. Applied to connects, writes and
 /// per-wave reply waits (the demux reader itself blocks indefinitely —
 /// an expired waiter kills the connection, which unblocks it).
+/// Configurable via `[engine] io_timeout_ms` / `--io-timeout-ms`; this
+/// constant is only the fallback when neither is given.
 pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Upper bound on concurrently computing waves per server connection.
@@ -131,6 +133,11 @@ struct ShardShared {
     kernel: KernelChoice,
     /// fingerprint of the served content (`wire::dataset_fingerprint`)
     data_hash: u64,
+    /// write timeout applied to every accepted connection, so a peer
+    /// that stops reading its replies (full TCP buffers, wedged
+    /// process) cannot strand a drainer thread forever. Reads stay
+    /// unbounded — an idle-but-healthy coordinator is not an error.
+    io_timeout: Option<Duration>,
     shutdown: AtomicBool,
     /// live connections (by id), shut down on stop so blocked I/O
     /// unblocks; each entry is removed when its handler thread exits, so
@@ -174,6 +181,21 @@ impl ShardServer {
                              shard: usize, of: usize,
                              kernel: KernelChoice)
                              -> io::Result<ShardServer> {
+        Self::start_with_opts(addr, local, n_total, row_start, shard, of,
+                              kernel, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// [`ShardServer::start_with_kernel`] with an explicit per-
+    /// connection write timeout (`shard-serve --io-timeout-ms`; `None`
+    /// = block forever). Applied to reply writes only — see
+    /// `ShardShared::io_timeout`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_with_opts(addr: &str, local: DenseDataset,
+                           n_total: usize, row_start: usize,
+                           shard: usize, of: usize,
+                           kernel: KernelChoice,
+                           io_timeout: Option<Duration>)
+                           -> io::Result<ShardServer> {
         assert!(row_start + local.n <= n_total,
                 "shard rows [{row_start}, {}) exceed n_total={n_total}",
                 row_start + local.n);
@@ -193,6 +215,7 @@ impl ShardServer {
             of: of as u64,
             kernel,
             data_hash,
+            io_timeout,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
             max_conn_waves: AtomicU64::new(0),
@@ -221,14 +244,27 @@ impl ShardServer {
                                       shard: usize, n_shards: usize,
                                       kernel: KernelChoice)
                                       -> io::Result<ShardServer> {
+        Self::start_shard_of_with_opts(addr, data, shard, n_shards,
+                                       kernel, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// [`ShardServer::start_shard_of_with_kernel`] with an explicit
+    /// per-connection write timeout — see
+    /// [`ShardServer::start_with_opts`].
+    pub fn start_shard_of_with_opts(addr: &str, data: &DenseDataset,
+                                    shard: usize, n_shards: usize,
+                                    kernel: KernelChoice,
+                                    io_timeout: Option<Duration>)
+                                    -> io::Result<ShardServer> {
         let (a, b) = shard_range(shard, data.n, n_shards);
         let mut rows = Vec::with_capacity((b - a) * data.d);
         for r in a..b {
             rows.extend_from_slice(data.row(r));
         }
-        Self::start_with_kernel(addr,
-                                DenseDataset::new(b - a, data.d, rows),
-                                data.n, a, shard, n_shards, kernel)
+        Self::start_with_opts(addr,
+                              DenseDataset::new(b - a, data.d, rows),
+                              data.n, a, shard, n_shards, kernel,
+                              io_timeout)
     }
 
     /// `host:port` string of the bound address.
@@ -281,9 +317,19 @@ pub fn spawn_loopback_ring(data: &DenseDataset, n_shards: usize)
 fn accept_loop(listener: TcpListener, shared: Arc<ShardShared>) {
     let mut handles = Vec::new();
     let mut next_id = 0u64;
+    // idle-poll backoff: reuse the blacklist schedule so a quiet
+    // listener escalates 5 → 10 → 20 → 40 → 50 ms between polls
+    // instead of spinning at a fixed 5 ms forever; any accepted
+    // connection resets it, keeping accept latency low under load
+    let idle = RetryPolicy {
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(50),
+    };
+    let mut idle_polls = 0u32;
     while !shared.shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                idle_polls = 0;
                 let id = next_id;
                 next_id += 1;
                 if let Ok(clone) = stream.try_clone() {
@@ -298,7 +344,8 @@ fn accept_loop(listener: TcpListener, shared: Arc<ShardShared>) {
                 handles.retain(|h| !h.is_finished());
             }
             Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
+                idle_polls = idle_polls.saturating_add(1);
+                std::thread::sleep(idle.backoff(idle_polls));
             }
             Err(_) => break,
         }
@@ -368,6 +415,10 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
     /// actively computing, before it applies TCP backpressure
     const MAX_QUEUED_WAVES: usize = 2 * MAX_CONN_WAVES;
     stream.set_nodelay(true)?;
+    // bound reply writes so a peer that stops draining its socket
+    // cannot wedge drainer threads; reads stay unbounded (idle
+    // connections are healthy)
+    stream.set_write_timeout(shared.io_timeout)?;
     let writer = Mutex::new(stream.try_clone()?);
     let mut inbuf = Vec::new();
     let work = Mutex::new(ConnWork {
@@ -740,7 +791,13 @@ impl Slot {
     }
 
     fn wait(&self, timeout: Option<Duration>) -> SlotWait {
-        let deadline = timeout.map(|t| Instant::now() + t);
+        self.wait_until(timeout.map(|t| Instant::now() + t))
+    }
+
+    /// [`Slot::wait`] against an absolute deadline — the primitive the
+    /// budget-aware sub-wave wait builds on (the effective deadline is
+    /// the earlier of the I/O window and the query budget).
+    fn wait_until(&self, deadline: Option<Instant>) -> SlotWait {
         let mut st = self.state.lock().unwrap();
         loop {
             match std::mem::replace(&mut *st, SlotState::Waiting) {
@@ -1082,11 +1139,15 @@ struct SubWave {
     attempted: Vec<bool>,
     errors: Vec<String>,
     current: Option<(Arc<Conn>, Arc<Slot>)>,
+    /// absolute query-budget deadline: past it, `wait` stops failing
+    /// over and returns a [`wire::DEADLINE_ERROR`]-classified error
+    /// immediately instead of running out the per-attempt I/O timeout
+    deadline: Option<Instant>,
 }
 
 impl SubWave {
-    fn submit(shard: Arc<ShardState>, wave_id: u64, payload: Vec<u8>)
-              -> SubWave {
+    fn submit(shard: Arc<ShardState>, wave_id: u64, payload: Vec<u8>,
+              deadline: Option<Instant>) -> SubWave {
         let n = shard.endpoints.len();
         let mut sw = SubWave {
             shard,
@@ -1095,6 +1156,7 @@ impl SubWave {
             attempted: vec![false; n],
             errors: Vec::new(),
             current: None,
+            deadline,
         };
         // best effort: a submit-time failure (no live replica right
         // now) is retried — and surfaced — at wait() time
@@ -1145,13 +1207,36 @@ impl SubWave {
         }
     }
 
+    /// The query budget ran out: kill the current attempt's connection
+    /// (exactly like an I/O timeout — the reply may never come, and a
+    /// killed conn cannot leak its pending slot) and surface a
+    /// [`wire::is_deadline_error`]-classified error. No failover: there
+    /// is no budget left to spend on another replica.
+    fn deadline_error(&mut self) -> String {
+        if let Some((conn, _)) = self.current.take() {
+            let e = format!("{}: {}: query budget exhausted mid-wave",
+                            conn.endpoint, wire::DEADLINE_ERROR);
+            self.shard.kill_conn(&conn, &e);
+        }
+        format!("shard {}: {}: query budget exhausted",
+                self.shard.shard, wire::DEADLINE_ERROR)
+    }
+
     /// Block until this sub-wave's reply arrives, transparently failing
     /// over: a dead connection or timeout blacklists the replica and
     /// re-issues the identical payload to the next one; a wire `Error`
     /// reply fails over without blacklisting (the connection is
-    /// healthy). Each endpoint is attempted at most once.
+    /// healthy). Each endpoint is attempted at most once. A query
+    /// budget (`deadline`) bounds the whole wait: each attempt waits
+    /// until the earlier of its I/O window and the budget, and an
+    /// expired budget returns a deadline error instead of failing over.
     fn wait(mut self) -> Result<Message, String> {
         loop {
+            // budget gate: an exhausted query must neither dispatch
+            // nor keep waiting on anything
+            if self.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                return Err(self.deadline_error());
+            }
             let Some((conn, slot)) = self.current.take() else {
                 if !self.dispatch() {
                     let detail = if self.errors.is_empty() {
@@ -1166,7 +1251,14 @@ impl SubWave {
                 }
                 continue;
             };
-            match slot.wait(self.shard.timeout) {
+            // this attempt's wait bound: the earlier of the I/O window
+            // and the remaining query budget
+            let io_dl = self.shard.timeout.map(|t| Instant::now() + t);
+            let eff = match (io_dl, self.deadline) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            match slot.wait_until(eff) {
                 SlotWait::Reply(Message::Error { msg, .. }) => {
                     // server-side failure on a healthy connection: keep
                     // the conn (and the endpoint's clean record), fail
@@ -1180,6 +1272,12 @@ impl SubWave {
                     self.errors.push(e);
                 }
                 SlotWait::TimedOut => {
+                    if self.deadline
+                        .is_some_and(|dl| Instant::now() >= dl)
+                    {
+                        self.current = Some((conn, slot));
+                        return Err(self.deadline_error());
+                    }
                     let e =
                         format!("{}: request timed out", conn.endpoint);
                     self.shard.kill_conn(&conn, &e);
@@ -1320,18 +1418,22 @@ impl RingClient {
     }
 
     fn submit_to_shard(&self, shard: usize, wave_id: u64,
-                       payload: Vec<u8>) -> SubWave {
-        SubWave::submit(self.shards[shard].clone(), wave_id, payload)
+                       payload: Vec<u8>, deadline: Option<Instant>)
+                       -> SubWave {
+        SubWave::submit(self.shards[shard].clone(), wave_id, payload,
+                        deadline)
     }
 
     /// Is shard `i` reachable right now? One tagged `Stats` round-trip
     /// on the live connection (a dead peer's socket looks open until
     /// I/O touches it), falling back to a backoff-respecting reconnect.
-    fn shard_live(&self, i: usize) -> bool {
+    /// The probe honors the caller's query budget, so a coverage check
+    /// against a blackholed shard costs at most the remaining budget.
+    fn shard_live(&self, i: usize, deadline: Option<Instant>) -> bool {
         let wid = self.fresh_wave_id();
         let mut payload = Vec::new();
         wire::encode_stats(&mut payload, wid);
-        let sub = self.submit_to_shard(i, wid, payload);
+        let sub = self.submit_to_shard(i, wid, payload, deadline);
         matches!(sub.wait(), Ok(Message::StatsReply { .. }))
     }
 
@@ -1342,16 +1444,28 @@ impl RingClient {
     /// are probed concurrently, so a healthy degraded-mode ring pays
     /// ~one `Stats` round-trip of latency per coverage query, not S.
     pub fn coverage(&self) -> Option<Coverage> {
+        self.coverage_deadline(None)
+    }
+
+    /// [`RingClient::coverage`] with the probes bounded by a query
+    /// budget — the deadline-threading engine path. A probe cut off by
+    /// the budget counts its shard as down, which is the conservative
+    /// answer (the caller is about to answer degraded; claiming rows it
+    /// could not verify would be wrong).
+    pub fn coverage_deadline(&self, deadline: Option<Instant>)
+                             -> Option<Coverage> {
         if !self.degraded {
             return None;
         }
         let s = self.shards.len();
         let oks: Vec<bool> = if s <= 1 {
-            (0..s).map(|i| self.shard_live(i)).collect()
+            (0..s).map(|i| self.shard_live(i, deadline)).collect()
         } else {
             std::thread::scope(|sc| {
                 let handles: Vec<_> = (0..s)
-                    .map(|i| sc.spawn(move || self.shard_live(i)))
+                    .map(|i| {
+                        sc.spawn(move || self.shard_live(i, deadline))
+                    })
                     .collect();
                 handles
                     .into_iter()
@@ -1486,6 +1600,9 @@ pub struct RemoteEngine {
     spare_parts: Vec<WavePartition>,
     inflight: HashMap<u64, InflightWave>,
     next_key: u64,
+    /// query-budget deadline applied to every subsequent wave's waits
+    /// (`PullEngine::set_deadline`); `None` = I/O timeout only
+    deadline: Option<Instant>,
 }
 
 impl RemoteEngine {
@@ -1522,6 +1639,7 @@ impl RemoteEngine {
             spare_parts: Vec::new(),
             inflight: HashMap::new(),
             next_key: 1,
+            deadline: None,
         }
     }
 
@@ -1574,7 +1692,8 @@ impl RemoteEngine {
             }
             let wid = self.client.fresh_wave_id();
             let payload = encode(&partition, i, wid);
-            subs.push(Some(self.client.submit_to_shard(i, wid, payload)));
+            subs.push(Some(self.client.submit_to_shard(i, wid, payload,
+                                                       self.deadline)));
         }
         let key = self.next_key;
         self.next_key += 1;
@@ -1768,8 +1887,20 @@ impl PullEngine for RemoteEngine {
         true
     }
 
+    fn set_deadline(&mut self, deadline: Option<Instant>) {
+        self.deadline = deadline;
+        // hygiene: a query that panicked out of its batch driver can
+        // leave waves parked here; the next query must not inherit
+        // them (their sub-waves carry the *old* budget). Reclaim the
+        // planners, drop the sub-waves — a late reply just clears its
+        // pending slot when the demux reader routes it.
+        for (_, w) in self.inflight.drain() {
+            self.spare_parts.push(w.partition);
+        }
+    }
+
     fn coverage(&mut self) -> Option<Coverage> {
-        self.client.coverage()
+        self.client.coverage_deadline(self.deadline)
     }
 
     fn name(&self) -> &'static str {

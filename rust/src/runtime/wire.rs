@@ -135,6 +135,23 @@ pub fn peek_wave_id(payload: &[u8]) -> u64 {
     }
 }
 
+/// Marker every deadline-budget failure carries, so callers up the
+/// stack (the query server's panic handler, CLI drivers) can tell "the
+/// query ran out of its time budget" apart from "the ring is broken"
+/// without a typed error channel: wave errors travel as strings (and
+/// as panic payloads through `complete_sums`/`complete_dists`, whose
+/// trait signatures have no `Result`). Producers prefix their message
+/// with it; consumers classify with [`is_deadline_error`].
+pub const DEADLINE_ERROR: &str = "deadline exceeded";
+
+/// True when `msg` is (or wraps) a deadline-budget failure produced by
+/// a wave wait or a batch driver's between-round budget check. Matches
+/// anywhere in the string because engine layers wrap wave errors with
+/// context ("remote pull wave failed: deadline exceeded: ...").
+pub fn is_deadline_error(msg: &str) -> bool {
+    msg.contains(DEADLINE_ERROR)
+}
+
 /// FNV-1a 64 fingerprint of the dataset content a shard server holds:
 /// global shape, owned row range, and the exact f32 bit pattern of every
 /// local row. Replicas of one shard must agree on it (they serve the
@@ -732,6 +749,17 @@ mod tests {
     use super::*;
     use crate::util::proptest;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn deadline_errors_classify_through_wrapping() {
+        assert!(is_deadline_error(DEADLINE_ERROR));
+        assert!(is_deadline_error(
+            "remote pull wave failed: deadline exceeded: shard 1: \
+             query budget exhausted"));
+        assert!(!is_deadline_error("shard 1: no live replica: refused"));
+        assert!(!is_deadline_error("request timed out"));
+        assert!(!is_deadline_error(""));
+    }
 
     fn arb_f32s(rng: &mut Rng) -> Vec<f32> {
         let n = rng.below(20); // 0..=19 — empty slices included

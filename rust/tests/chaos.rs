@@ -1,0 +1,298 @@
+//! Deterministic chaos suite: seeded fault schedules over a replicated
+//! shard ring, driven through the in-process fault-injection proxy
+//! (`bmonn::runtime::fault`).
+//!
+//! The standing invariant under test:
+//!
+//!  * While every shard keeps at least one clean replica, a scripted
+//!    storm of delays, mid-frame drops and single-byte corruptions on
+//!    the primaries must produce **zero query errors** and answers
+//!    **bitwise-identical** to solo `NativeEngine` — sub-waves fail
+//!    over, the bandit never notices.
+//!  * With a shard fully blackholed, every query must resolve within
+//!    its deadline budget as a structured, classifiable error (never a
+//!    hang), and a degraded-mode engine must answer coverage-annotated
+//!    exact results over the surviving rows instead.
+//!  * A partition scripted to heal at a fault epoch
+//!    (`partition_until_epoch` + `advance_epoch`) must leave the ring
+//!    bitwise-identical to solo again once healed.
+//!
+//! Every random choice — the fault schedule and the query rng — derives
+//! from a seed, so a failure reproduces exactly. CI sweeps a fixed seed
+//! matrix; `BMONN_CHAOS_SEED=<u64>` pins a single seed for local
+//! bisection.
+
+use std::time::{Duration, Instant};
+
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::knn::{knn_batch_dense_deadline, knn_point_dense,
+                              KnnResult};
+use bmonn::data::{synthetic, DenseDataset, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::fault::{Dir, FaultAction, FaultPlan, FaultProxy,
+                            FaultRule};
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::placement::{PlacementMap, RetryPolicy};
+use bmonn::runtime::remote::{spawn_loopback_ring, RemoteEngine,
+                             RemoteOptions};
+use bmonn::runtime::wire::is_deadline_error;
+use bmonn::util::rng::Rng;
+
+/// Seeds to sweep: `BMONN_CHAOS_SEED` pins one, else the CI matrix's
+/// default trio.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("BMONN_CHAOS_SEED") {
+        Ok(s) => vec![s.trim().parse()
+            .expect("BMONN_CHAOS_SEED must be a u64")],
+        Err(_) => vec![1, 7, 42],
+    }
+}
+
+/// Short-timeout, fast-backoff options so blacklists heal within the
+/// test's patience instead of the production default's.
+fn fast_opts(degraded: bool, timeout: Duration) -> RemoteOptions {
+    RemoteOptions {
+        timeout: Some(timeout),
+        degraded,
+        retry: RetryPolicy {
+            backoff_base: Duration::from_millis(50),
+            backoff_max: Duration::from_millis(200),
+        },
+    }
+}
+
+/// `primary|replica` spec per shard.
+fn replicated_specs(p_eps: &[String], r_eps: &[String]) -> Vec<String> {
+    p_eps.iter().zip(r_eps).map(|(p, r)| format!("{p}|{r}")).collect()
+}
+
+/// Draw a scripted fault schedule from `rng`: ten rules spread over the
+/// first forty frames of either direction, mixing short delays (well
+/// under any timeout), mid-frame drops and single-byte corruptions.
+fn scripted_plan(rng: &mut Rng) -> FaultPlan {
+    let mut rules = Vec::new();
+    for _ in 0..10 {
+        let dir = if rng.below(2) == 0 {
+            Dir::ToServer
+        } else {
+            Dir::ToClient
+        };
+        let frame = rng.below(40) as u64;
+        let action = match rng.below(4) {
+            0 => FaultAction::Delay(1 + rng.below(20) as u64),
+            1 => FaultAction::DelayRange(1, 25),
+            2 => FaultAction::DropMidFrame,
+            _ => FaultAction::Corrupt,
+        };
+        rules.push(FaultRule { dir, frame, action });
+    }
+    FaultPlan { seed: rng.next_u64(), rules, ..Default::default() }
+}
+
+/// Reference answer from a solo in-process engine, rng seed `seed`.
+fn solo_answer(ds: &DenseDataset, q: usize, params: &BanditParams,
+               seed: u64) -> KnnResult {
+    let mut solo = NativeEngine::default();
+    let mut rng = Rng::new(seed);
+    let mut c = Counter::new();
+    knn_point_dense(ds, q, Metric::L2Sq, params, &mut solo, &mut rng,
+                    &mut c)
+}
+
+#[test]
+fn seeded_fault_schedules_with_live_replicas_stay_bitwise() {
+    let ds = synthetic::gaussian_iid(60, 16, 51);
+    let params = BanditParams { k: 5, delta: 0.01, ..Default::default() };
+    for seed in chaos_seeds() {
+        // primaries sit behind fault proxies; replicas are clean, so
+        // every sub-wave has a healthy endpoint to fail over to
+        let (_primaries, p_eps) = spawn_loopback_ring(&ds, 2).unwrap();
+        let (_replicas, r_eps) = spawn_loopback_ring(&ds, 2).unwrap();
+        let mut sched = Rng::new(seed);
+        let proxies: Vec<FaultProxy> = p_eps
+            .iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                FaultProxy::start(ep,
+                                  scripted_plan(&mut sched.fork(i as u64)))
+                    .unwrap()
+            })
+            .collect();
+        let proxy_eps: Vec<String> =
+            proxies.iter().map(|p| p.endpoint()).collect();
+        let specs = replicated_specs(&proxy_eps, &r_eps);
+        let mut eng = RemoteEngine::connect_opts(
+            &PlacementMap::parse(&specs).unwrap(),
+            fast_opts(false, Duration::from_secs(5)))
+            .unwrap();
+        for qi in 0..6usize {
+            let qseed = seed.wrapping_add(qi as u64 * 101);
+            let want = solo_answer(&ds, qi, &params, qseed);
+            let got = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    let mut rng = Rng::new(qseed);
+                    let mut c = Counter::new();
+                    knn_point_dense(&ds, qi, Metric::L2Sq, &params,
+                                    &mut eng, &mut rng, &mut c)
+                }));
+            match got {
+                Ok(res) => {
+                    assert_eq!(res.ids, want.ids,
+                               "seed {seed} query {qi}: ids diverged \
+                                under faults");
+                    assert_eq!(res.dists, want.dists,
+                               "seed {seed} query {qi}: dists diverged \
+                                under faults");
+                }
+                Err(e) => {
+                    let msg = e.downcast_ref::<String>().cloned()
+                        .unwrap_or_default();
+                    panic!("seed {seed} query {qi}: query errored with a \
+                            clean replica per shard: {msg}");
+                }
+            }
+        }
+        // the schedule must actually have been in the path: some
+        // request traffic flowed through a proxied primary
+        let fwd: u64 =
+            proxies.iter().map(|p| p.frames(Dir::ToServer)).sum();
+        assert!(fwd > 0,
+                "seed {seed}: no frames crossed the fault proxies — \
+                 the schedule was bypassed");
+    }
+}
+
+#[test]
+fn blackholed_shard_resolves_within_budget_or_degrades() {
+    let ds = synthetic::gaussian_iid(60, 16, 31);
+    let (_ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
+    let proxy =
+        FaultProxy::start(&eps[1], FaultPlan::default()).unwrap();
+    let specs = vec![eps[0].clone(), proxy.endpoint()];
+    let params = BanditParams { k: 5, delta: 0.01, ..Default::default() };
+
+    // --- degraded OFF, deadline budget ON: the 10s I/O window must
+    // never be the bound — the query budget is ---------------------
+    let mut eng = RemoteEngine::connect_opts(
+        &PlacementMap::parse(&specs).unwrap(),
+        fast_opts(false, Duration::from_secs(10)))
+        .unwrap();
+    // healthy ring first: bitwise parity through the idle proxy
+    let want = solo_answer(&ds, 3, &params, 5);
+    let res = {
+        let mut rng = Rng::new(5);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 3, Metric::L2Sq, &params, &mut eng,
+                        &mut rng, &mut c)
+    };
+    assert_eq!(res.ids, want.ids);
+    assert_eq!(res.dists, want.dists);
+    proxy.set_blackhole(true);
+    let mut saw_deadline = false;
+    for attempt in 0..3u64 {
+        let start = Instant::now();
+        let budget = start + Duration::from_millis(700);
+        let err = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let mut rng = Rng::new(100 + attempt);
+                let mut c = Counter::new();
+                knn_batch_dense_deadline(&ds, &[ds.row_vec(0)],
+                                         Metric::L2Sq, &params, &mut eng,
+                                         &mut rng, &mut c, Some(budget))
+            }))
+            .expect_err("a blackholed shard with no replica must not \
+                         produce an answer");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(is_deadline_error(&msg)
+                    || msg.contains("remote pull wave failed")
+                    || msg.contains("remote exact wave failed")
+                    || msg.contains("no live replica"),
+                "attempt {attempt}: unexpected panic payload: {msg}");
+        saw_deadline |= is_deadline_error(&msg);
+        // the structured failure must land promptly: bounded by the
+        // 700ms budget (plus scheduling slack), not the 10s I/O window
+        assert!(start.elapsed() < Duration::from_secs(5),
+                "attempt {attempt}: query took {:?} — the deadline \
+                 budget did not cut the wait", start.elapsed());
+    }
+    assert!(saw_deadline,
+            "no attempt was classified as a deadline error");
+
+    // --- degraded ON: coverage-annotated exact answers over the
+    // surviving rows, still prompt ---------------------------------
+    let mut eng = RemoteEngine::connect_opts(
+        &PlacementMap::parse(&specs).unwrap(),
+        fast_opts(true, Duration::from_millis(500)))
+        .unwrap();
+    let start = Instant::now();
+    let res = {
+        let mut rng = Rng::new(8);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 3, Metric::L2Sq, &params, &mut eng,
+                        &mut rng, &mut c)
+    };
+    let cov = res.coverage
+        .expect("degraded answer must carry a coverage annotation");
+    assert_eq!(cov.rows_total, 60);
+    assert!(cov.rows_live() > 0 && cov.fraction() < 1.0,
+            "coverage must reflect the dead shard: {cov:?}");
+    // shard 1 holds rows [30, 60): every answer id must be a survivor
+    for &id in &res.ids {
+        assert!(id < 30,
+                "answer id {id} lies in the blackholed shard's rows");
+    }
+    assert!(start.elapsed() < Duration::from_secs(8),
+            "degraded answer took {:?}", start.elapsed());
+}
+
+#[test]
+fn partitioned_shard_heals_on_epoch_advance_bitwise() {
+    let ds = synthetic::gaussian_iid(60, 16, 41);
+    let (_ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
+    let proxy = FaultProxy::start(
+        &eps[1],
+        FaultPlan { partition_until_epoch: Some(1),
+                    ..Default::default() })
+        .unwrap();
+    let specs = vec![eps[0].clone(), proxy.endpoint()];
+    let params = BanditParams { k: 5, delta: 0.01, ..Default::default() };
+    let mut eng = RemoteEngine::connect_opts(
+        &PlacementMap::parse(&specs).unwrap(),
+        fast_opts(true, Duration::from_millis(500)))
+        .unwrap();
+    let want = solo_answer(&ds, 7, &params, 9);
+    // partitioned: the degraded engine answers over shard 0 only
+    let res = {
+        let mut rng = Rng::new(9);
+        let mut c = Counter::new();
+        knn_point_dense(&ds, 7, Metric::L2Sq, &params, &mut eng,
+                        &mut rng, &mut c)
+    };
+    let cov = res.coverage
+        .expect("partitioned ring must answer degraded");
+    assert!(cov.fraction() < 1.0);
+    // script the heal: epoch 1 reaches partition_until_epoch, so the
+    // proxy starts forwarding fresh connections upstream
+    assert_eq!(proxy.advance_epoch(), 1);
+    // the client redials once the endpoint's blacklist backoff expires
+    // (<= 200ms with fast_opts); poll until full coverage returns, then
+    // the answer must be bitwise-identical to solo again
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let res = {
+            let mut rng = Rng::new(9);
+            let mut c = Counter::new();
+            knn_point_dense(&ds, 7, Metric::L2Sq, &params, &mut eng,
+                            &mut rng, &mut c)
+        };
+        if res.coverage.is_none() {
+            assert_eq!(res.ids, want.ids,
+                       "healed ring must be bitwise-identical to solo");
+            assert_eq!(res.dists, want.dists);
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "ring did not heal within 10s of the epoch advance");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
