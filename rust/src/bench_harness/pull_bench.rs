@@ -17,7 +17,13 @@
 //! under expired deadline budgets and an admission-control overload
 //! burst — the rung asserts at least one query was shed, at least one
 //! answered `deadline_exceeded`, and reports end-to-end queries/s plus
-//! both counters in the JSON), and
+//! both counters in the JSON), **and on an http-front rung** (the
+//! HTTP/1.1 front door over a loopback ring with the result cache on —
+//! the rung asserts a repeat query hits the cache byte-identically to
+//! its fresh compute, that an epoch bump invalidates the entry while
+//! the recompute still answers the same bytes, and that a saturation
+//! burst against `max_queue = 1` sheds with clean `429`s carrying
+//! `Retry-After`), and
 //! emits the numbers as JSON for `BENCH_pull.json` so the perf
 //! trajectory has data points that survive across PRs:
 //!
@@ -141,7 +147,7 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
 struct ShardRun {
     shards: usize,
     /// "local" | "tcp-loopback" | "tcp-failover" | "tcp-multiplex" |
-    /// "tcp-deadline" | "tcp-remote"
+    /// "tcp-deadline" | "http-front" | "tcp-remote"
     transport: &'static str,
     rows_per_s: f64,
     wall_per_round_us: f64,
@@ -160,6 +166,10 @@ struct ShardRun {
     /// tcp-deadline only: queries answered `deadline_exceeded`
     /// (asserted >= 1 — the rung sends expired-budget probes)
     deadline_exceeded: Option<u64>,
+    /// http-front only: result-cache hits the rung's repeat queries
+    /// produced (asserted >= 1, each byte-identical to the fresh
+    /// compute)
+    cache_hits: Option<u64>,
 }
 
 /// Workload shape shared by every rung.
@@ -240,6 +250,7 @@ where
         max_inflight: None,
         shed: None,
         deadline_exceeded: None,
+        cache_hits: None,
     })
 }
 
@@ -388,6 +399,7 @@ fn measure_multiplex_rung(w: &Workload<'_>, endpoints: &[String],
         max_inflight: Some(max_inflight),
         shed: None,
         deadline_exceeded: None,
+        cache_hits: None,
     })
 }
 
@@ -532,6 +544,190 @@ fn measure_deadline_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
         max_inflight: None,
         shed: Some(shed),
         deadline_exceeded: Some(deadline_exceeded),
+        cache_hits: None,
+    })
+}
+
+/// The always-on http-front rung: the full HTTP/1.1 front door over a
+/// loopback ring, with the result cache on.
+///
+/// Sequence: (1) a repeat query must hit the cache **byte-identically**
+/// to its fresh compute, and a `POST /admin/epoch-bump` must invalidate
+/// the entry while the recompute still answers the same bytes (seeded
+/// serving compute); (2) a saturation burst against `max_queue = 1`
+/// must produce clean `429`s carrying `Retry-After`; (3) a sequential
+/// sweep reports end-to-end HTTP queries/s with p50/p99. Like the
+/// deadline rung, throughput here includes HTTP framing, validation,
+/// queueing and batching — not just the pull phase.
+fn measure_http_front_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
+    use crate::coordinator::http::http_request;
+    use crate::coordinator::server::{Server, ServerConfig};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let knn_body = |q: &[f32], k: usize| {
+        Json::obj(vec![
+            ("query", Json::f32_array(q)),
+            ("k", Json::Num(k as f64)),
+        ])
+        .to_string()
+    };
+    let (_ring, endpoints) =
+        remote::spawn_loopback_ring(w.data, LOOPBACK_SHARDS)?;
+    let sc = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        metric: Metric::L2Sq,
+        params: w.params.clone(),
+        n_workers: 1,
+        batch_size: 4,
+        remote: endpoints,
+        // same shape as the deadline rung: the 5 ms linger keeps the
+        // single queue slot reliably occupied during the burst
+        batch_wait_us: 5_000,
+        deadline_ms: 10_000,
+        max_queue: 1,
+        http_port: Some(0),
+        cache_entries: 64,
+        ..ServerConfig::default()
+    };
+    let srv = Server::start(w.data.clone(), sc)
+        .map_err(|e| format!("http-front rung server: {e}"))?;
+    let http = srv
+        .http_addr
+        .ok_or("http-front rung: server did not bind an HTTP port")?;
+    // 1. cache correctness end to end: miss, byte-identical hit,
+    // epoch-flip invalidation, byte-identical recompute
+    let q0 = w.data.row_vec(0);
+    let body0 = knn_body(&q0, w.params.k);
+    let (s1, _, fresh) = http_request(&http, "POST", "/knn",
+                                      Some(&body0))
+        .map_err(|e| e.to_string())?;
+    if s1 != 200 {
+        return Err(format!(
+            "http-front rung: fresh query answered {s1}: {fresh}"));
+    }
+    let (s2, _, hit) = http_request(&http, "POST", "/knn", Some(&body0))
+        .map_err(|e| e.to_string())?;
+    if s2 != 200 || hit != fresh {
+        return Err(format!(
+            "http-front rung: cache hit must be byte-identical to the \
+             fresh compute (status {s2})"));
+    }
+    let (s3, _, _) =
+        http_request(&http, "POST", "/admin/epoch-bump", Some(""))
+            .map_err(|e| e.to_string())?;
+    if s3 != 200 {
+        return Err(format!("http-front rung: epoch bump answered {s3}"));
+    }
+    let (s4, _, recomputed) =
+        http_request(&http, "POST", "/knn", Some(&body0))
+            .map_err(|e| e.to_string())?;
+    if s4 != 200 || recomputed != fresh {
+        return Err(format!(
+            "http-front rung: the post-epoch-flip recompute must answer \
+             the same bytes as before the flip (status {s4}) — seeded \
+             serving compute is not deterministic"));
+    }
+    let (sm, _, metrics) = http_request(&http, "GET", "/metrics", None)
+        .map_err(|e| e.to_string())?;
+    if sm != 200 {
+        return Err(format!("http-front rung: /metrics answered {sm}"));
+    }
+    let metrics = Json::parse(metrics.trim())
+        .map_err(|e| format!("http-front rung: bad /metrics json: {e}"))?;
+    let cache_hits = metrics
+        .get("cache_hits")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64;
+    if cache_hits == 0 {
+        return Err("http-front rung: /metrics lost the cache hit the \
+                    repeat query produced".into());
+    }
+    // 2. saturation burst against max_queue=1 until clean 429s register
+    // (random queries so the cache cannot absorb the burst; bounded so
+    // a broken admission path fails the bench instead of spinning)
+    let sheds = AtomicU64::new(0);
+    let bad_retry_after = AtomicU64::new(0);
+    let mut rng = Rng::new(w.seed + 900);
+    'burst: for _ in 0..50 {
+        let bodies: Vec<String> = (0..32)
+            .map(|_| {
+                let q: Vec<f32> = (0..w.data.d)
+                    .map(|_| rng.gaussian() as f32)
+                    .collect();
+                knn_body(&q, w.params.k)
+            })
+            .collect();
+        std::thread::scope(|scope| {
+            for chunk in bodies.chunks(4) {
+                let sheds = &sheds;
+                let bad_retry_after = &bad_retry_after;
+                scope.spawn(move || {
+                    for body in chunk {
+                        let Ok((status, headers, _)) = http_request(
+                            &http, "POST", "/knn", Some(body))
+                        else {
+                            continue;
+                        };
+                        if status == 429 {
+                            sheds.fetch_add(1, Ordering::Relaxed);
+                            let ok_header = headers.iter().any(
+                                |(n, v)| n == "retry-after"
+                                    && v.parse::<u64>()
+                                        .is_ok_and(|s| s >= 1));
+                            if !ok_header {
+                                bad_retry_after
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if sheds.load(Ordering::Relaxed) > 0 {
+            break 'burst;
+        }
+    }
+    let shed = sheds.load(Ordering::Relaxed);
+    if shed == 0 {
+        return Err("http-front rung: 50 concurrent bursts against \
+                    max_queue=1 never answered a 429".into());
+    }
+    if bad_retry_after.load(Ordering::Relaxed) > 0 {
+        return Err("http-front rung: a 429 arrived without a usable \
+                    Retry-After header".into());
+    }
+    // 3. throughput: sequential sweep; every query must answer 200
+    let mut lat = LatencyStats::default();
+    let mut ok = 0u64;
+    let t0 = Instant::now();
+    for &p in w.solo_points {
+        let body = knn_body(&w.data.row_vec(p), w.params.k);
+        let t = Instant::now();
+        let (status, _, resp) =
+            http_request(&http, "POST", "/knn", Some(&body))
+                .map_err(|e| e.to_string())?;
+        lat.record(t.elapsed());
+        if status != 200 {
+            return Err(format!(
+                "http-front rung: sequential query answered {status}: \
+                 {resp}"));
+        }
+        ok += 1;
+    }
+    let wall = t0.elapsed();
+    Ok(ShardRun {
+        shards: LOOPBACK_SHARDS,
+        transport: "http-front",
+        rows_per_s: ok as f64 / wall.as_secs_f64().max(1e-9),
+        wall_per_round_us: wall.as_secs_f64() * 1e6 / ok.max(1) as f64,
+        rounds: ok,
+        jobs: ok,
+        batch_wall_ms: wall.as_secs_f64() * 1e3,
+        solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+        solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        max_inflight: None,
+        shed: Some(shed),
+        deadline_exceeded: None,
+        cache_hits: Some(cache_hits),
     })
 }
 
@@ -626,6 +822,9 @@ fn run_json(r: &ShardRun) -> Json {
     }
     if let Some(de) = r.deadline_exceeded {
         fields.push(("deadline_exceeded", Json::Num(de as f64)));
+    }
+    if let Some(ch) = r.cache_hits {
+        fields.push(("cache_hits", Json::Num(ch as f64)));
     }
     Json::obj(fields)
 }
@@ -723,6 +922,10 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
     // deadline/admission rung: a full query server over a loopback ring
     // under expired budgets and an overload burst (spawns its own ring)
     remote_runs.push(measure_deadline_rung(&w)?);
+    // http-front rung: the HTTP/1.1 front door + result cache over a
+    // loopback ring — byte-identical cache hits across an epoch flip,
+    // clean 429s under saturation, end-to-end HTTP queries/s
+    remote_runs.push(measure_http_front_rung(&w)?);
     if !extra_remote.is_empty() {
         remote_runs.push(measure_rung(
             &w,
@@ -767,6 +970,11 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         .iter()
         .find_map(|r| r.shed.zip(r.deadline_exceeded))
         .unwrap_or((0, 0));
+    let (http_shed, http_hits) = remote_runs
+        .iter()
+        .find(|r| r.transport == "http-front")
+        .and_then(|r| r.shed.zip(r.cache_hits))
+        .unwrap_or((0, 0));
     rep.note(&format!(
         "workload: n={n} d={d} (shard-serve --synthetic \
          image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
@@ -778,7 +986,11 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
          {multiplex_hwm} waves high-water on one connection), answers \
          asserted identical to local; tcp-deadline rung reports \
          end-to-end queries/s through a full query server and counted \
-         {rung_shed} shed / {rung_exceeded} deadline-exceeded answers",
+         {rung_shed} shed / {rung_exceeded} deadline-exceeded answers; \
+         http-front rung drives the HTTP/1.1 front door with the result \
+         cache on and counted {http_shed} clean 429s under saturation \
+         plus {http_hits} byte-identical cache hits across an epoch \
+         flip",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
     let kernel_note = kernel_runs
         .iter()
@@ -822,13 +1034,13 @@ mod tests {
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
         let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 4);
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 5);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
         let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
-        assert_eq!(remote.len(), 4,
-                   "loopback + failover + multiplex + deadline rungs \
-                    always present");
+        assert_eq!(remote.len(), 5,
+                   "loopback + failover + multiplex + deadline + \
+                    http-front rungs always present");
         assert_eq!(remote[1].get("transport").and_then(|v| v.as_str()),
                    Some("tcp-failover"));
         assert_eq!(remote[2].get("transport").and_then(|v| v.as_str()),
@@ -850,6 +1062,20 @@ mod tests {
         assert!(shed >= 1.0, "deadline rung must shed, saw {shed}");
         assert!(de >= 1.0,
                 "deadline rung must expire probe budgets, saw {de}");
+        assert_eq!(remote[4].get("transport").and_then(|v| v.as_str()),
+                   Some("http-front"));
+        let http_shed =
+            remote[4].get("shed").and_then(|v| v.as_f64()).unwrap();
+        let hits = remote[4]
+            .get("cache_hits")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(http_shed >= 1.0,
+                "http-front rung must answer clean 429s under \
+                 saturation, saw {http_shed}");
+        assert!(hits >= 1.0,
+                "http-front rung must witness a byte-identical cache \
+                 hit, saw {hits}");
         for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())

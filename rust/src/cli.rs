@@ -130,7 +130,7 @@ SUBCOMMANDS
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
            [--remote SPECS] [--degraded] [--kernel T] [--quantized]
            [--batch-wait-us T] [--deadline-ms D] [--max-queue Q]
-           [--io-timeout-ms T]
+           [--io-timeout-ms T] [--http-port P] [--cache-entries N]
            (with --remote this box coordinates a multi-machine ring: all
            workers share ONE multiplexed ring client — one connection
            per shard, concurrent tagged waves interleaved on it — so
@@ -149,7 +149,18 @@ SUBCOMMANDS
            field overrides it per query. --max-queue Q sheds queries
            arriving at a full queue with an overload error carrying a
            retry_after_ms hint. Shed / expired counts surface via
-           stats. Both default to 0 = off)
+           stats. Both default to 0 = off. --http-port P adds an
+           HTTP/1.1 front door on the same host: POST /knn speaks the
+           knn request body through the same validation, deadline and
+           admission path with real status codes — 200 ok, 400 bad
+           request, 429 overload with Retry-After, 504 deadline — and
+           GET /metrics returns the stats body; P=0 binds an ephemeral
+           port. --cache-entries N enables an N-entry LRU result cache
+           keyed on query/k/accuracy mode/dataset fingerprint/placement
+           epoch: repeat queries replay byte-identical answers without
+           touching the bandit, and the epoch-bump op [POST
+           /admin/epoch-bump] invalidates every cached answer after a
+           dataset or placement change. Hits/misses surface via stats)
   shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
            --of S [--addr HOST:PORT] [--kernel auto|scalar|avx2|neon]
            [--io-timeout-ms T]
@@ -185,7 +196,11 @@ SUBCOMMANDS
            failover rung (replicated ring with every primary dead, so
            each wave takes the failover path) and a 2-shard multiplex
            rung (two concurrent batch drivers sharing one ring client;
-           asserts >= 2 waves in flight on one connection), overwriting
+           asserts >= 2 waves in flight on one connection), a 2-shard
+           tcp-deadline rung and an http-front rung (a saturation burst
+           against a max_queue=1 HTTP front door over a loopback ring:
+           clean 429s, nonzero byte-identical cache hits, bounded p99),
+           overwriting
            --out [default BENCH_pull.json] with rows/s, wall per round
            and per-query p50/p99; --smoke shrinks it to a seconds-long
            CI check; --remote H:P,H:P adds a rung measured against your
@@ -196,8 +211,9 @@ SUBCOMMANDS
 
 Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded/
 kernel/quantized/io_timeout_ms pick and tune the pull engine, [server]
-deadline_ms/max_queue/batch_wait_us shape the query server — see
-docs/CONFIG.md and docs/OPERATIONS.md), --set section.key=value
+deadline_ms/max_queue/batch_wait_us/http_port/cache_entries shape the
+query server — see docs/CONFIG.md and docs/OPERATIONS.md),
+--set section.key=value
 (repeatable via comma list), --seed N.
 ";
 

@@ -213,6 +213,16 @@ pub struct BmonnConfig {
     /// new arrivals are shed immediately with an `overload` error and
     /// a `retry_after_ms` hint. 0 (default) keeps the queue unbounded.
     pub server_max_queue: usize,
+    /// HTTP front-door port (`[server] http_port` / `--http-port`):
+    /// when set the query server additionally serves `POST /knn` /
+    /// `GET /metrics` over HTTP/1.1 on the same host. Unset (default)
+    /// disables HTTP; 0 binds an ephemeral port.
+    pub server_http_port: Option<u16>,
+    /// LRU result-cache capacity in entries (`[server] cache_entries`
+    /// / `--cache-entries`): repeat queries replay their cached answer
+    /// byte-identically, keyed on query/k/accuracy-mode/dataset
+    /// fingerprint/placement epoch. 0 (default) disables the cache.
+    pub server_cache_entries: usize,
 }
 
 impl Default for BmonnConfig {
@@ -240,6 +250,8 @@ impl Default for BmonnConfig {
             server_batch_wait_us: 0,
             server_deadline_ms: 0,
             server_max_queue: 0,
+            server_http_port: None,
+            server_cache_entries: 0,
         }
     }
 }
@@ -330,6 +342,16 @@ impl BmonnConfig {
         }
         if let Some(m) = raw.get_usize("server.max_queue")? {
             cfg.server_max_queue = m;
+        }
+        if let Some(p) = raw.get_u64("server.http_port")? {
+            if p > u16::MAX as u64 {
+                return Err(format!(
+                    "server.http_port {p} exceeds the port range"));
+            }
+            cfg.server_http_port = Some(p as u16);
+        }
+        if let Some(c) = raw.get_usize("server.cache_entries")? {
+            cfg.server_cache_entries = c;
         }
         Ok(cfg)
     }
@@ -454,6 +476,21 @@ mod tests {
         assert_eq!(cfg.server_deadline_ms, 250);
         assert_eq!(cfg.server_max_queue, 64);
         let raw = RawConfig::parse("[server]\nmax_queue = -3\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn http_port_and_cache_entries_parse_and_default_off() {
+        let d = BmonnConfig::default();
+        assert_eq!(d.server_http_port, None);
+        assert_eq!(d.server_cache_entries, 0);
+        let raw = RawConfig::parse(
+            "[server]\nhttp_port = 8080\ncache_entries = 512\n").unwrap();
+        let cfg = BmonnConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.server_http_port, Some(8080));
+        assert_eq!(cfg.server_cache_entries, 512);
+        // out-of-range port is a config error, not a silent truncation
+        let raw = RawConfig::parse("[server]\nhttp_port = 70000\n").unwrap();
         assert!(BmonnConfig::from_raw(&raw).is_err());
     }
 

@@ -1,0 +1,283 @@
+//! Fingerprint-keyed LRU result cache for the serving front door.
+//!
+//! The cache sits *in front of* the worker pool: a hit returns the
+//! stored response without consuming a queue slot, a worker, or a
+//! single bandit pull. Correctness rests on two pillars:
+//!
+//! * **Keying** ([`CacheKey`]): an entry matches only for the same
+//!   query content (FNV-1a over the f32 bit patterns via
+//!   [`hash_query`], with the full bits double-checked on hit so a
+//!   hash collision can never serve a wrong answer), the same `k`, the
+//!   same accuracy mode (`epsilon`/`delta` bit patterns), the same
+//!   dataset fingerprint (`wire::dataset_fingerprint`, PR 5), and the
+//!   same placement epoch. Reloading data or bumping the epoch changes
+//!   the key, so stale entries are never *matched* again — they simply
+//!   age out of the LRU. Invalidation is free.
+//! * **Byte identity**: the server computes every query under a
+//!   content-derived rng seed
+//!   ([`crate::coordinator::knn::knn_batch_dense_seeded`]), so the
+//!   answer a hit replays is bitwise-identical to what a fresh compute
+//!   would produce. The cache can therefore never be observed — except
+//!   in the latency column and the `cache_hits` counter.
+//!
+//! Only full-coverage successes are inserted: degraded
+//! (coverage-annotated), deadline-exceeded, shed and error answers
+//! must always be recomputed (the server enforces this gate).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::util::json::Json;
+
+/// FNV-1a offset basis (64-bit), matching `wire::dataset_fingerprint`.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a prime (64-bit).
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `k` and the query's f32 bit patterns.
+///
+/// Doubles as the serving rng seed: the same function keys the cache
+/// *and* seeds `knn_batch_dense_seeded`, so "same key" and "same
+/// compute stream" are one property, not two that must be kept in sync.
+pub fn hash_query(query: &[f32], k: usize) -> u64 {
+    let mut h = FNV_OFFSET;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    };
+    for b in (k as u64).to_le_bytes() {
+        eat(b);
+    }
+    for v in query {
+        for b in v.to_bits().to_le_bytes() {
+            eat(b);
+        }
+    }
+    h
+}
+
+/// The full identity of a cached answer. Every field that can change
+/// the bytes of a correct response is part of the key.
+#[derive(Clone, Debug, Hash, PartialEq, Eq)]
+pub struct CacheKey {
+    /// [`hash_query`] over the query bits and `k`.
+    pub query_hash: u64,
+    /// Number of neighbors requested.
+    pub k: usize,
+    /// Bit pattern of the server's `epsilon` (accuracy mode).
+    pub eps_bits: u64,
+    /// Bit pattern of the server's `delta` (failure probability).
+    pub delta_bits: u64,
+    /// `wire::dataset_fingerprint` of the served dataset.
+    pub fingerprint: u64,
+    /// Placement epoch at lookup time; bumping it orphans every older
+    /// entry.
+    pub epoch: u64,
+}
+
+struct Entry {
+    /// Full query bit patterns — compared on hit so an FNV collision
+    /// degrades to a miss, never to a wrong answer.
+    query: Vec<u32>,
+    resp: Json,
+    stamp: u64,
+}
+
+/// A strict-LRU map from [`CacheKey`] to a stored response, with hit /
+/// miss / insertion / eviction counters surfaced in server stats.
+pub struct ResultCache {
+    cap: usize,
+    map: HashMap<CacheKey, Entry>,
+    /// Recency index: stamp → key, oldest stamp first.
+    lru: BTreeMap<u64, CacheKey>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl ResultCache {
+    /// A cache holding at most `cap` entries (`cap` floors at 1 — a
+    /// disabled cache is represented by *not constructing one*).
+    pub fn new(cap: usize) -> Self {
+        ResultCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up `key`, verifying the stored query bits against `query`.
+    /// A hit bumps the entry's recency and returns a clone of the
+    /// stored response; anything else counts a miss.
+    pub fn get(&mut self, key: &CacheKey, query: &[f32]) -> Option<Json> {
+        match self.map.get_mut(key) {
+            Some(e) if bits_equal(&e.query, query) => {
+                self.lru.remove(&e.stamp);
+                self.clock += 1;
+                e.stamp = self.clock;
+                self.lru.insert(e.stamp, key.clone());
+                self.hits += 1;
+                Some(e.resp.clone())
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store `resp` under `key`, evicting the least-recently-used entry
+    /// if the cache is at capacity.
+    pub fn insert(&mut self, key: CacheKey, query: &[f32], resp: Json) {
+        self.clock += 1;
+        let stamp = self.clock;
+        let entry = Entry {
+            query: query.iter().map(|v| v.to_bits()).collect(),
+            resp,
+            stamp,
+        };
+        if let Some(old) = self.map.insert(key.clone(), entry) {
+            // overwrite: drop the superseded recency slot
+            self.lru.remove(&old.stamp);
+        } else if self.map.len() > self.cap {
+            if let Some((&oldest, _)) = self.lru.iter().next() {
+                if let Some(victim) = self.lru.remove(&oldest) {
+                    self.map.remove(&victim);
+                    self.evictions += 1;
+                }
+            }
+        }
+        self.lru.insert(stamp, key);
+        self.insertions += 1;
+    }
+
+    /// Entries currently stored.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entries are stored.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Configured capacity in entries.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lookups answered from the cache since startup.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that fell through to compute since startup.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Entries stored since startup (including overwrites).
+    pub fn insertions(&self) -> u64 {
+        self.insertions
+    }
+
+    /// Entries displaced by capacity pressure since startup.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+fn bits_equal(stored: &[u32], query: &[f32]) -> bool {
+    stored.len() == query.len()
+        && stored.iter().zip(query).all(|(&b, v)| b == v.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tag: u64) -> CacheKey {
+        CacheKey { query_hash: tag, k: 3, eps_bits: 0, delta_bits: 0,
+                   fingerprint: 7, epoch: 0 }
+    }
+
+    fn resp(tag: u64) -> Json {
+        Json::obj(vec![("ok", Json::Bool(true)),
+                       ("tag", Json::Num(tag as f64))])
+    }
+
+    #[test]
+    fn hit_replays_the_stored_response_bytes() {
+        let mut c = ResultCache::new(4);
+        let q = [1.0f32, 2.0];
+        c.insert(key(1), &q, resp(1));
+        let got = c.get(&key(1), &q).expect("hit");
+        assert_eq!(got.to_string(), resp(1).to_string());
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 0);
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_used() {
+        let mut c = ResultCache::new(2);
+        let q = [0.5f32];
+        c.insert(key(1), &q, resp(1));
+        c.insert(key(2), &q, resp(2));
+        // touch 1 so 2 becomes the LRU victim
+        assert!(c.get(&key(1), &q).is_some());
+        c.insert(key(3), &q, resp(3));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&key(2), &q).is_none(), "LRU entry must be gone");
+        assert!(c.get(&key(1), &q).is_some());
+        assert!(c.get(&key(3), &q).is_some());
+    }
+
+    #[test]
+    fn hash_collision_degrades_to_a_miss() {
+        let mut c = ResultCache::new(4);
+        c.insert(key(9), &[1.0f32], resp(9));
+        // same key fields, different query bits: must not serve
+        assert!(c.get(&key(9), &[2.0f32]).is_none());
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn epoch_is_part_of_the_key() {
+        let mut c = ResultCache::new(4);
+        let q = [3.0f32];
+        c.insert(key(5), &q, resp(5));
+        let mut bumped = key(5);
+        bumped.epoch = 1;
+        assert!(c.get(&bumped, &q).is_none());
+        assert!(c.get(&key(5), &q).is_some());
+    }
+
+    #[test]
+    fn overwrite_does_not_leak_recency_slots() {
+        let mut c = ResultCache::new(2);
+        let q = [1.0f32];
+        c.insert(key(1), &q, resp(1));
+        c.insert(key(1), &q, resp(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.insertions(), 2);
+        let got = c.get(&key(1), &q).unwrap();
+        assert_eq!(got.to_string(), resp(2).to_string());
+    }
+
+    #[test]
+    fn query_hash_depends_on_content_and_k() {
+        let a = hash_query(&[1.0, 2.0], 3);
+        assert_eq!(a, hash_query(&[1.0, 2.0], 3));
+        assert_ne!(a, hash_query(&[1.0, 2.0], 4));
+        assert_ne!(a, hash_query(&[1.0, 2.5], 3));
+        // -0.0 and 0.0 differ bitwise → distinct streams and entries
+        assert_ne!(hash_query(&[0.0], 1), hash_query(&[-0.0], 1));
+    }
+}

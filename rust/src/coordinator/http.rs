@@ -1,0 +1,471 @@
+//! HTTP/1.1 front door for the query server — hand-rolled on `std`,
+//! matching the repo's zero-dependency stance.
+//!
+//! The HTTP listener is a second transport over the *same* serving
+//! path as the line protocol in [`crate::coordinator::server`]: `POST
+//! /knn` routes through the identical validation, deadline stamping,
+//! result cache and `max_queue` admission (`server::handle_knn`), and
+//! `GET /metrics` returns the identical `stats` body. What HTTP adds
+//! is a real status-code contract:
+//!
+//! | response | status |
+//! |---|---|
+//! | `ok: true` (including degraded/coverage answers) | `200` |
+//! | validation / parse errors | `400` |
+//! | `kind: "overload"` (queue full) | `429` + `Retry-After` |
+//! | `kind: "deadline_exceeded"` | `504` |
+//! | internal error / engine unavailable / shutting down | `500` |
+//! | unknown path | `404` |
+//! | wrong method on a known path | `405` + `Allow` |
+//! | oversized head or body | `431` / `413` |
+//!
+//! Endpoints: `POST /knn` (same JSON body as the `knn` op, minus the
+//! `op` field — it is implied by the path), `GET /metrics`, `GET
+//! /healthz`, `POST /admin/epoch-bump`. Bodies are JSON either way;
+//! `429` responses carry `Retry-After` in whole seconds (rounded up
+//! from the body's `retry_after_ms`, minimum 1). Connections are
+//! keep-alive by default (HTTP/1.1 semantics; `Connection: close`
+//! honored).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::server::{epoch_bump_json, handle_knn,
+                                 stats_json, Shared};
+use crate::runtime::placement::RetryPolicy;
+use crate::util::json::Json;
+
+/// Refuse request heads (request line + headers) larger than this.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Refuse request bodies larger than this (a 64k-dim f32 query in JSON
+/// text fits comfortably).
+const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Accept loop for the HTTP listener; structured like the line
+/// protocol's accept loop (nonblocking listener, decaying idle poll,
+/// one I/O thread per connection, joined on shutdown).
+pub(crate) fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut handles = Vec::new();
+    let idle = RetryPolicy {
+        backoff_base: Duration::from_millis(5),
+        backoff_max: Duration::from_millis(50),
+    };
+    let mut idle_polls = 0u32;
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                idle_polls = 0;
+                let s = shared.clone();
+                handles.push(std::thread::spawn(move || {
+                    let _ = handle_http_conn(stream, s);
+                }));
+                handles.retain(|h| !h.is_finished());
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                idle_polls = idle_polls.saturating_add(1);
+                std::thread::sleep(idle.backoff(idle_polls));
+            }
+            Err(_) => break,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// One parsed request.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    close: bool,
+}
+
+/// What request reading produced: a request, a client hangup, or a
+/// protocol-level refusal that still gets an HTTP answer.
+enum ReadOutcome {
+    Request(Request),
+    Closed,
+    /// (status, reason, message) — answered, then the connection closes
+    Refuse(u16, &'static str, String),
+}
+
+fn handle_http_conn(stream: TcpStream, shared: Arc<Shared>)
+                    -> std::io::Result<()> {
+    // short read timeout so connection threads notice shutdown instead
+    // of blocking forever while stop() joins them
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = stream;
+    let mut acc: Vec<u8> = Vec::new();
+    loop {
+        match read_request(&mut reader, &mut acc, &shared)? {
+            ReadOutcome::Closed => return Ok(()),
+            ReadOutcome::Refuse(status, reason, msg) => {
+                let body = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(msg)),
+                ]);
+                write_response(&mut writer, status, reason,
+                               &body.to_string(), &[], true)?;
+                return Ok(());
+            }
+            ReadOutcome::Request(req) => {
+                let close = req.close;
+                route(&mut writer, &req, &shared, close)?;
+                if close || shared.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// Read one request from the connection. `acc` carries bytes across
+/// calls (pipelined requests, partial reads).
+fn read_request(reader: &mut TcpStream, acc: &mut Vec<u8>,
+                shared: &Shared) -> std::io::Result<ReadOutcome> {
+    let mut chunk = [0u8; 4096];
+    // phase 1: accumulate the head (request line + headers)
+    let head_end = loop {
+        if let Some(pos) = find_head_end(acc) {
+            break pos;
+        }
+        if acc.len() > MAX_HEAD_BYTES {
+            return Ok(ReadOutcome::Refuse(
+                431, "Request Header Fields Too Large",
+                "request head too large".into()));
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => return Ok(ReadOutcome::Closed),
+            Ok(n) => acc.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return Ok(ReadOutcome::Closed);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    let head: Vec<u8> = acc.drain(..head_end.total).collect();
+    let head = String::from_utf8_lossy(&head[..head_end.head_len])
+        .into_owned();
+    let mut lines = head.split("\r\n").flat_map(|l| l.split('\n'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty()
+        || !version.starts_with("HTTP/1.")
+    {
+        return Ok(ReadOutcome::Refuse(400, "Bad Request",
+                                      "malformed request line".into()));
+    }
+    let mut content_length = 0usize;
+    // HTTP/1.0 closes by default, 1.1 keeps alive
+    let mut close = version == "HTTP/1.0";
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                let Ok(n) = value.parse::<usize>() else {
+                    return Ok(ReadOutcome::Refuse(
+                        400, "Bad Request",
+                        "bad content-length".into()));
+                };
+                content_length = n;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    close = true;
+                } else if v.contains("keep-alive") {
+                    close = false;
+                }
+            }
+            _ => {}
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Ok(ReadOutcome::Refuse(413, "Content Too Large",
+                                      "request body too large".into()));
+    }
+    // phase 2: accumulate the body
+    while acc.len() < content_length {
+        match reader.read(&mut chunk) {
+            Ok(0) => return Ok(ReadOutcome::Closed),
+            Ok(n) => acc.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return Ok(ReadOutcome::Closed);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let body: Vec<u8> = acc.drain(..content_length).collect();
+    // ignore any query string: routing is on the path alone
+    let path = target.split('?').next().unwrap_or("").to_string();
+    Ok(ReadOutcome::Request(Request { method, path, body, close }))
+}
+
+/// Where the head terminator was found: `head_len` bytes of head,
+/// `total` bytes to drain (head + terminator).
+struct HeadEnd {
+    head_len: usize,
+    total: usize,
+}
+
+fn find_head_end(acc: &[u8]) -> Option<HeadEnd> {
+    // standard CRLFCRLF, with bare LFLF tolerated for hand-rolled
+    // clients
+    if let Some(pos) = acc.windows(4).position(|w| w == b"\r\n\r\n") {
+        return Some(HeadEnd { head_len: pos, total: pos + 4 });
+    }
+    acc.windows(2)
+        .position(|w| w == b"\n\n")
+        .map(|pos| HeadEnd { head_len: pos, total: pos + 2 })
+}
+
+/// Dispatch one request and write its response.
+fn route(writer: &mut TcpStream, req: &Request, shared: &Shared,
+         close: bool) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/knn") => {
+            let body = String::from_utf8_lossy(&req.body);
+            match Json::parse(body.trim()) {
+                Err(e) => {
+                    let resp = Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::Str(format!("bad json: {e}"))),
+                    ]);
+                    write_response(writer, 400, "Bad Request",
+                                   &resp.to_string(), &[], close)
+                }
+                Ok(parsed) => {
+                    let resp = handle_knn(&parsed, shared);
+                    let (status, reason) = status_for(&resp);
+                    let mut extra: Vec<(&str, String)> = Vec::new();
+                    if status == 429 {
+                        extra.push(("Retry-After",
+                                    retry_after_secs(&resp)));
+                    }
+                    write_response(writer, status, reason,
+                                   &resp.to_string(), &extra, close)
+                }
+            }
+        }
+        ("GET", "/metrics") => write_response(
+            writer, 200, "OK", &stats_json(shared).to_string(), &[],
+            close),
+        ("GET", "/healthz") => write_response(
+            writer, 200, "OK",
+            &Json::obj(vec![("ok", Json::Bool(true))]).to_string(), &[],
+            close),
+        ("POST", "/admin/epoch-bump") => write_response(
+            writer, 200, "OK", &epoch_bump_json(shared).to_string(),
+            &[], close),
+        (_, "/knn") | (_, "/admin/epoch-bump") => method_not_allowed(
+            writer, "POST", close),
+        (_, "/metrics") | (_, "/healthz") => method_not_allowed(
+            writer, "GET", close),
+        _ => {
+            let resp = Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str("not found".into())),
+            ]);
+            write_response(writer, 404, "Not Found", &resp.to_string(),
+                           &[], close)
+        }
+    }
+}
+
+fn method_not_allowed(writer: &mut TcpStream, allow: &str, close: bool)
+                      -> std::io::Result<()> {
+    let resp = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("method not allowed".into())),
+    ]);
+    write_response(writer, 405, "Method Not Allowed", &resp.to_string(),
+                   &[("Allow", allow.to_string())], close)
+}
+
+/// Map a serving-path JSON answer onto the HTTP status contract.
+fn status_for(resp: &Json) -> (u16, &'static str) {
+    if resp.get("ok") == Some(&Json::Bool(true)) {
+        return (200, "OK");
+    }
+    match resp.get("kind").and_then(|k| k.as_str()) {
+        Some("overload") => (429, "Too Many Requests"),
+        Some("deadline_exceeded") => (504, "Gateway Timeout"),
+        _ => {
+            let msg = resp.get("error").and_then(|e| e.as_str())
+                .unwrap_or("");
+            // the server's fault, not the client's
+            if msg.starts_with("internal error")
+                || msg.starts_with("engine unavailable")
+                || msg.starts_with("server shutting down")
+            {
+                (500, "Internal Server Error")
+            } else {
+                (400, "Bad Request")
+            }
+        }
+    }
+}
+
+/// `Retry-After` is whole seconds — round the body's `retry_after_ms`
+/// hint up, floor 1 s (advertising 0 would invite an immediate retry
+/// storm).
+fn retry_after_secs(resp: &Json) -> String {
+    let ms = resp.get("retry_after_ms").and_then(|v| v.as_f64())
+        .unwrap_or(1000.0) as u64;
+    ms.div_ceil(1000).max(1).to_string()
+}
+
+fn write_response(writer: &mut TcpStream, status: u16, reason: &str,
+                  body: &str, extra: &[(&str, String)], close: bool)
+                  -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\n\
+         Content-Type: application/json\r\n\
+         Content-Length: {}\r\n",
+        body.len());
+    for (name, value) in extra {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    writer.write_all(head.as_bytes())?;
+    writer.write_all(body.as_bytes())?;
+    writer.flush()
+}
+
+/// Minimal blocking HTTP client for tests and the bench harness: one
+/// request per connection (`Connection: close`). Returns the status
+/// code, the response headers (names lowercased) and the body.
+pub fn http_request(addr: &SocketAddr, method: &str, path: &str,
+                    body: Option<&str>)
+                    -> std::io::Result<(u16, Vec<(String, String)>,
+                                        String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\n\
+         Host: bmonn\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\
+         \r\n{body}",
+        body.len());
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    parse_response(&raw).ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData,
+                            "malformed http response")
+    })
+}
+
+fn parse_response(raw: &[u8])
+                  -> Option<(u16, Vec<(String, String)>, String)> {
+    let end = find_head_end(raw)?;
+    let head = String::from_utf8_lossy(&raw[..end.head_len]).into_owned();
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next()?;
+    let status: u16 =
+        status_line.split_whitespace().nth(1)?.parse().ok()?;
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(n, v)| (n.trim().to_ascii_lowercase(),
+                       v.trim().to_string()))
+        .collect();
+    let body =
+        String::from_utf8_lossy(&raw[end.total..]).into_owned();
+    Some((status, headers, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn overload(ms: f64) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("kind", Json::Str("overload".into())),
+            ("retry_after_ms", Json::Num(ms)),
+        ])
+    }
+
+    #[test]
+    fn status_contract_maps_answer_kinds() {
+        let ok = Json::obj(vec![("ok", Json::Bool(true))]);
+        assert_eq!(status_for(&ok).0, 200);
+        assert_eq!(status_for(&overload(10.0)).0, 429);
+        let late = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("kind", Json::Str("deadline_exceeded".into())),
+        ]);
+        assert_eq!(status_for(&late).0, 504);
+        let bad = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str("k out of range".into())),
+        ]);
+        assert_eq!(status_for(&bad).0, 400);
+        let boom = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error",
+             Json::Str("internal error: compute panicked".into())),
+        ]);
+        assert_eq!(status_for(&boom).0, 500);
+    }
+
+    #[test]
+    fn retry_after_rounds_up_to_whole_seconds() {
+        assert_eq!(retry_after_secs(&overload(1.0)), "1");
+        assert_eq!(retry_after_secs(&overload(1000.0)), "1");
+        assert_eq!(retry_after_secs(&overload(1001.0)), "2");
+        assert_eq!(retry_after_secs(&overload(12_500.0)), "13");
+        // a pathological 0 hint must not advertise "retry now"
+        assert_eq!(retry_after_secs(&overload(0.0)), "1");
+    }
+
+    #[test]
+    fn head_end_accepts_crlf_and_bare_lf() {
+        let crlf = b"GET / HTTP/1.1\r\nHost: x\r\n\r\nBODY";
+        let e = find_head_end(crlf).unwrap();
+        assert_eq!(&crlf[e.total..], b"BODY");
+        let lf = b"GET / HTTP/1.1\nHost: x\n\nBODY";
+        let e = find_head_end(lf).unwrap();
+        assert_eq!(&lf[e.total..], b"BODY");
+        assert!(find_head_end(b"GET / HTTP/1.1\r\nHost:").is_none());
+    }
+
+    #[test]
+    fn response_parser_roundtrips() {
+        let raw = b"HTTP/1.1 429 Too Many Requests\r\n\
+                    Content-Type: application/json\r\n\
+                    Retry-After: 2\r\n\r\n{\"ok\": false}";
+        let (status, headers, body) = parse_response(raw).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, "{\"ok\": false}");
+        let ra = headers.iter().find(|(n, _)| n == "retry-after");
+        assert_eq!(ra.map(|(_, v)| v.as_str()), Some("2"));
+    }
+}

@@ -258,6 +258,35 @@ pub fn knn_batch_dense_deadline<E: PullEngine, Q: AsRef<[f32]>>(
                           rng, counter, deadline)
 }
 
+/// [`knn_batch_dense_deadline`] with **content-derived rng streams**:
+/// query `i` runs under `Rng::new(seeds[i])` instead of `rng.fork(i)`.
+///
+/// This is the query server's driver. With a caller-supplied seed
+/// derived from the request content (query bits + k), a query's answer
+/// — ids, dists *and* unit count — is bitwise-identical no matter
+/// which worker computes it, which batch it lands in, or which other
+/// queries share its lockstep wave (per-slot rng streams never
+/// interact; composition independence is pinned by
+/// `seeded_batch_is_composition_independent`). That reproducibility is
+/// what lets the serving-layer result cache promise that a cache hit
+/// is byte-identical to a fresh compute.
+#[allow(clippy::too_many_arguments)]
+pub fn knn_batch_dense_seeded<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    seeds: &[u64],
+    counter: &mut Counter,
+    deadline: Option<Instant>,
+) -> Vec<KnnResult> {
+    assert_eq!(queries.len(), seeds.len());
+    let excludes = vec![None; queries.len()];
+    knn_batch_dense_rngs(data, queries, &excludes, metric, params, engine,
+                         BatchRngs::Seeded(seeds), counter, deadline)
+}
+
 /// Batched k-NN for in-dataset points (self excluded) — the figure
 /// harness and graph-construction entry point.
 pub fn knn_batch_points_dense<E: PullEngine>(
@@ -278,6 +307,29 @@ pub fn knn_batch_points_dense<E: PullEngine>(
                           rng, counter, None)
 }
 
+/// How the batch driver derives query `i`'s private rng stream.
+enum BatchRngs<'a> {
+    /// The classic contract: `rng.fork(i)` per slot, in slot order.
+    /// Bitwise-equal to solo runs under `rng.fork(i)` for any batch
+    /// size, but the streams depend on the *parent* rng state and the
+    /// slot index, i.e. on batch composition.
+    Forked(&'a mut Rng),
+    /// Content-derived: `Rng::new(seeds[i])` per slot. The stream
+    /// depends only on the caller's seed, so a query's answer is
+    /// independent of batch composition — the serving determinism the
+    /// result cache relies on.
+    Seeded(&'a [u64]),
+}
+
+impl BatchRngs<'_> {
+    fn stream(&mut self, i: usize) -> Rng {
+        match self {
+            BatchRngs::Forked(rng) => rng.fork(i as u64),
+            BatchRngs::Seeded(seeds) => Rng::new(seeds[i]),
+        }
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     data: &DenseDataset,
@@ -287,6 +339,22 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     params: &BanditParams,
     engine: &mut E,
     rng: &mut Rng,
+    counter: &mut Counter,
+    deadline: Option<Instant>,
+) -> Vec<KnnResult> {
+    knn_batch_dense_rngs(data, queries, excludes, metric, params, engine,
+                         BatchRngs::Forked(rng), counter, deadline)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    excludes: &[Option<usize>],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    mut rngs: BatchRngs<'_>,
     counter: &mut Counter,
     deadline: Option<Instant>,
 ) -> Vec<KnnResult> {
@@ -303,7 +371,7 @@ fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
     for (i, q) in queries.iter().enumerate() {
         let q = q.as_ref();
         assert_eq!(q.len(), data.d, "query {i} has wrong dimension");
-        let qrng = rng.fork(i as u64);
+        let qrng = rngs.stream(i);
         let rows = DenseArms::<E>::candidates(data.n, excludes[i]);
         // same per-query bias widening as the solo driver — quant_bias
         // depends only on (data, query, metric), so the batch stays
@@ -850,6 +918,53 @@ mod tests {
             assert_eq!(s.ids, b.ids);
             assert_eq!(s.dists, b.dists);
         }
+    }
+
+    #[test]
+    fn seeded_batch_matches_solo_under_same_seed() {
+        let ds = synthetic::image_like(60, 256, 41);
+        let p = params(3);
+        let queries: Vec<Vec<f32>> =
+            (0..4).map(|i| ds.row_vec(i * 7)).collect();
+        let seeds: Vec<u64> = (0..4).map(|i| 0x5EEDu64 * 31 + i).collect();
+        let mut c = Counter::new();
+        let batch = knn_batch_dense_seeded(
+            &ds, &queries, Metric::L2Sq, &p, &mut ScalarEngine, &seeds,
+            &mut c, None);
+        for ((q, &seed), b) in queries.iter().zip(&seeds).zip(&batch) {
+            let mut rng = Rng::new(seed);
+            let mut sc = Counter::new();
+            let solo = knn_query_dense(&ds, q, Metric::L2Sq, &p,
+                                       &mut ScalarEngine, &mut rng,
+                                       &mut sc);
+            assert_eq!(solo.ids, b.ids);
+            assert_eq!(solo.dists, b.dists);
+            assert_eq!(solo.metrics.dist_computations,
+                       b.metrics.dist_computations);
+        }
+    }
+
+    #[test]
+    fn seeded_batch_is_composition_independent() {
+        // the serving determinism the result cache relies on: a query's
+        // full answer (ids, dists, unit count) must not depend on which
+        // other queries shared its batch
+        let ds = synthetic::image_like(60, 256, 43);
+        let p = params(3);
+        let q0 = ds.row_vec(5);
+        let q1 = ds.row_vec(33);
+        let mut c1 = Counter::new();
+        let alone = knn_batch_dense_seeded(
+            &ds, &[q0.clone()], Metric::L2Sq, &p, &mut ScalarEngine,
+            &[0xA11CE], &mut c1, None);
+        let mut c2 = Counter::new();
+        let shared = knn_batch_dense_seeded(
+            &ds, &[q1, q0], Metric::L2Sq, &p, &mut ScalarEngine,
+            &[0xB0B, 0xA11CE], &mut c2, None);
+        assert_eq!(alone[0].ids, shared[1].ids);
+        assert_eq!(alone[0].dists, shared[1].dists);
+        assert_eq!(alone[0].metrics.dist_computations,
+                   shared[1].metrics.dist_computations);
     }
 
     #[test]

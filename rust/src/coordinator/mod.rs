@@ -1,9 +1,11 @@
 //! L3 coordinator — the paper's system contribution: the BMO UCB bandit
 //! state machine, the Monte Carlo boxes, the k-NN / PAC / k-means drivers,
-//! and the query server.
+//! and the query server with its HTTP front door and result cache.
 
 pub mod arms;
 pub mod bandit;
+pub mod cache;
+pub mod http;
 pub mod kmeans;
 pub mod knn;
 pub mod pac;

@@ -58,6 +58,27 @@
 //!             {"ok":false, "error":"...", "kind":"deadline_exceeded"}
 //!             {"ok":false, "error":"...", "kind":"overload",
 //!              "retry_after_ms":_}
+//!   admin:    {"op":"epoch-bump"} → {"ok":true, "epoch":e}
+//!
+//! **HTTP front door.** With `http_port` set (`[server] http_port` /
+//! `--http-port`) the same validated request path is additionally served
+//! over HTTP/1.1 by [`crate::coordinator::http`]: `POST /knn` carries
+//! the `knn` request body (same fields, same validation, same deadline
+//! stamping and admission), `GET /metrics` returns the `stats` body,
+//! and overload/deadline answers map to real `429` (with `Retry-After`)
+//! and `504` status codes.
+//!
+//! **Result cache.** With `cache_entries > 0` (`[server] cache_entries`
+//! / `--cache-entries`) an LRU answer cache
+//! ([`crate::coordinator::cache`]) sits in front of the queue, keyed on
+//! (query bits, k, eps/delta mode, dataset fingerprint, placement
+//! epoch). Compute is seeded from the same query-content hash
+//! ([`crate::coordinator::knn::knn_batch_dense_seeded`]), which makes
+//! every answer bitwise-reproducible — so a hit replays exactly the
+//! bytes a fresh compute would produce, without consuming a queue slot
+//! or a bandit pull. Only full-coverage successes are cached; the
+//! `epoch-bump` op (or `POST /admin/epoch-bump`) invalidates every
+//! prior entry by changing the key.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -69,15 +90,15 @@ use std::time::{Duration, Instant};
 use crate::config::EngineKind;
 use crate::coordinator::arms::PullEngine;
 use crate::coordinator::bandit::BanditParams;
-use crate::coordinator::knn::knn_batch_dense_deadline;
-use crate::runtime::wire::is_deadline_error;
+use crate::coordinator::cache::{hash_query, CacheKey, ResultCache};
+use crate::coordinator::knn::knn_batch_dense_seeded;
+use crate::runtime::wire::{dataset_fingerprint, is_deadline_error};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{BatchStats, Counter, LatencyStats};
 use crate::runtime::build_host_engine;
 use crate::runtime::placement::{PlacementMap, RetryPolicy};
 use crate::runtime::remote::{RemoteEngine, RemoteOptions, RingClient};
 use crate::util::json::Json;
-use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -139,6 +160,19 @@ pub struct ServerConfig {
     /// shared ring client (`[engine] io_timeout_ms` /
     /// `--io-timeout-ms`); remote configurations only. Must be > 0.
     pub io_timeout_ms: u64,
+    /// HTTP front-door port (`[server] http_port` / `--http-port`):
+    /// when set, an HTTP/1.1 listener on the same host serves `POST
+    /// /knn`, `GET /metrics`, `GET /healthz` and `POST
+    /// /admin/epoch-bump` through the same validation, deadline and
+    /// admission path as the line protocol. `Some(0)` binds an
+    /// ephemeral port (tests); `None` (the default) disables HTTP.
+    pub http_port: Option<u16>,
+    /// LRU result-cache capacity in entries (`[server] cache_entries`
+    /// / `--cache-entries`): answers to full-coverage successful
+    /// queries are replayed byte-identically for repeat requests with
+    /// the same (query, k) under the same dataset fingerprint and
+    /// placement epoch. 0 (the default) disables the cache.
+    pub cache_entries: usize,
 }
 
 impl Default for ServerConfig {
@@ -159,6 +193,8 @@ impl Default for ServerConfig {
             deadline_ms: 0,
             max_queue: 0,
             io_timeout_ms: 60_000,
+            http_port: None,
+            cache_entries: 0,
         }
     }
 }
@@ -168,13 +204,20 @@ impl Default for ServerConfig {
 struct Job {
     query: Vec<f32>,
     k: usize,
+    /// rng seed for the compute stream — `cache::hash_query(query, k)`,
+    /// so identical requests get bitwise-identical answers no matter
+    /// which worker or batch serves them
+    seed: u64,
     /// absolute answer-by deadline, stamped at request arrival (server
     /// default or the request's own `deadline_ms`); `None` = unbounded
     deadline: Option<Instant>,
     done: Arc<(Mutex<Option<Json>>, Condvar)>,
 }
 
-struct Shared {
+/// Everything the accept/IO/worker/HTTP threads share. `pub(crate)` so
+/// the HTTP front door ([`crate::coordinator::http`]) can route into
+/// the same request path.
+pub(crate) struct Shared {
     data: DenseDataset,
     config: ServerConfig,
     queue: Mutex<VecDeque<Job>>,
@@ -190,7 +233,16 @@ struct Shared {
     /// may be down at startup) and dropped when a compute panic makes a
     /// worker suspect it, so the next batch reconnects from scratch
     ring: Mutex<Option<Arc<RingClient>>>,
-    shutdown: AtomicBool,
+    /// `wire::dataset_fingerprint` of the served dataset, computed once
+    /// at startup; part of every cache key (0 when the cache is off)
+    fingerprint: u64,
+    /// placement epoch: part of every cache key, so bumping it
+    /// (`epoch-bump` / `POST /admin/epoch-bump`) orphans all prior
+    /// cache entries without touching them
+    epoch: AtomicU64,
+    /// LRU answer cache (`None` when `cache_entries == 0`)
+    cache: Option<Mutex<ResultCache>>,
+    pub(crate) shutdown: AtomicBool,
 }
 
 /// Build a worker's engine. Local configurations build their own
@@ -262,8 +314,12 @@ fn invalidate_ring(shared: &Shared,
 /// Running server handle.
 pub struct Server {
     pub addr: std::net::SocketAddr,
+    /// bound address of the HTTP front door (`None` when `http_port`
+    /// was not configured)
+    pub http_addr: Option<std::net::SocketAddr>,
     shared: Arc<Shared>,
     accept_handle: Option<std::thread::JoinHandle<()>>,
+    http_handle: Option<std::thread::JoinHandle<()>>,
     worker_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -282,7 +338,29 @@ impl Server {
         let listener = TcpListener::bind(&config.addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        // the HTTP front door binds the same host as the line protocol
+        let http_listener = match config.http_port {
+            None => None,
+            Some(port) => {
+                let l = TcpListener::bind((addr.ip(), port))?;
+                l.set_nonblocking(true)?;
+                Some(l)
+            }
+        };
+        let http_addr = match &http_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
         let n_workers = config.n_workers.max(1);
+        // fingerprint once at startup — it keys every cache entry, and
+        // ring-stats surfaces the same value for cross-checking
+        let fingerprint = if config.cache_entries > 0 {
+            dataset_fingerprint(data.n, 0, &data)
+        } else {
+            0
+        };
+        let cache = (config.cache_entries > 0)
+            .then(|| Mutex::new(ResultCache::new(config.cache_entries)));
         let shared = Arc::new(Shared {
             data,
             config,
@@ -293,22 +371,33 @@ impl Server {
             latencies: Mutex::new(LatencyStats::default()),
             batches: Mutex::new(BatchStats::default()),
             ring: Mutex::new(None),
+            fingerprint,
+            epoch: AtomicU64::new(0),
+            cache,
             shutdown: AtomicBool::new(false),
         });
         let worker_handles = (0..n_workers)
-            .map(|w| {
+            .map(|_| {
                 let s = shared.clone();
-                std::thread::spawn(move || worker_loop(s, w as u64))
+                std::thread::spawn(move || worker_loop(s))
             })
             .collect();
         let accept_shared = shared.clone();
         let handle = std::thread::spawn(move || {
             accept_loop(listener, accept_shared);
         });
+        let http_handle = http_listener.map(|l| {
+            let s = shared.clone();
+            std::thread::spawn(move || {
+                crate::coordinator::http::accept_loop(l, s);
+            })
+        });
         Ok(Server {
             addr,
+            http_addr,
             shared,
             accept_handle: Some(handle),
+            http_handle,
             worker_handles,
         })
     }
@@ -317,6 +406,9 @@ impl Server {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.queue_cv.notify_all();
         if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.http_handle.take() {
             let _ = h.join();
         }
         for h in self.worker_handles.drain(..) {
@@ -341,8 +433,12 @@ impl Drop for Server {
 
 /// Compute worker: drain up to `batch_size` queued queries, resolve the
 /// wave with one batched multi-query bandit pass, publish responses.
-fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
-    let mut rng = Rng::new(0xBA7C4_ED ^ worker_id);
+///
+/// Each query computes under its own content-derived rng seed
+/// (`Job::seed`), so answers are bitwise-identical across workers,
+/// batch compositions and restarts — the property the result cache's
+/// byte-identity contract rests on.
+fn worker_loop(shared: Arc<Shared>) {
     let kind = if shared.config.native_engine {
         EngineKind::Native
     } else {
@@ -454,6 +550,8 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                     .iter()
                     .map(|&i| jobs[i].query.as_slice())
                     .collect();
+                let seeds: Vec<u64> =
+                    idxs.iter().map(|&i| jobs[i].seed).collect();
                 // the group computes in lockstep, so it must answer by
                 // its *tightest* member's deadline — the budget the
                 // whole wave runs under
@@ -473,9 +571,9 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
                 // remote engine reconnects to the ring)
                 let outcome = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
-                        knn_batch_dense_deadline(
+                        knn_batch_dense_seeded(
                             &shared.data, &queries, shared.config.metric,
-                            &params, eng, &mut rng, &mut counter,
+                            &params, eng, &seeds, &mut counter,
                             deadline)
                     }));
                 let results = match outcome {
@@ -590,7 +688,7 @@ fn worker_loop(shared: Arc<Shared>, worker_id: u64) {
 /// server shuts down under us). With `max_queue > 0`, a full queue sheds
 /// the query right here — before it consumes a queue slot or a waiter —
 /// with an `overload` answer.
-fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize,
+fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize, seed: u64,
                    deadline: Option<Instant>) -> Json {
     let done = Arc::new((Mutex::new(None), Condvar::new()));
     {
@@ -601,7 +699,7 @@ fn submit_and_wait(shared: &Shared, query: Vec<f32>, k: usize,
             shared.batches.lock().unwrap().record_shed(1);
             return overload_json(shared);
         }
-        q.push_back(Job { query, k, deadline, done: done.clone() });
+        q.push_back(Job { query, k, seed, deadline, done: done.clone() });
     }
     shared.queue_cv.notify_one();
     let (lock, cv) = &*done;
@@ -711,6 +809,7 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>)
                         Json::obj(vec![("ok", Json::Bool(true))])
                     }
                     Some("knn") => handle_knn(&req, &shared),
+                    Some("epoch-bump") => epoch_bump_json(&shared),
                     _ => err_json("unknown op"),
                 }
             }
@@ -724,8 +823,11 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>)
     }
 }
 
-/// Validate a knn request and route it through the worker pool.
-fn handle_knn(req: &Json, shared: &Shared) -> Json {
+/// Validate a knn request and route it through the result cache and the
+/// worker pool. Shared by the line protocol ([`handle_conn`]) and the
+/// HTTP front door (`POST /knn`), so both speak the same validation,
+/// deadline-stamping, admission and caching behavior.
+pub(crate) fn handle_knn(req: &Json, shared: &Shared) -> Json {
     let Some(qarr) = req.get("query").and_then(|q| q.as_arr()) else {
         return err_json("missing query");
     };
@@ -757,18 +859,71 @@ fn handle_knn(req: &Json, shared: &Shared) -> Json {
     };
     let deadline = (deadline_ms > 0)
         .then(|| Instant::now() + Duration::from_millis(deadline_ms));
+    // the same content hash seeds the compute stream and keys the
+    // cache: "same key" and "same answer bytes" are one property
+    let seed = hash_query(&query, k);
     let t0 = Instant::now();
-    let resp = submit_and_wait(shared, query, k, deadline);
+    let cache_key = shared.cache.as_ref().map(|_| CacheKey {
+        query_hash: seed,
+        k,
+        eps_bits: shared.config.params.epsilon.to_bits(),
+        delta_bits: shared.config.params.delta.to_bits(),
+        fingerprint: shared.fingerprint,
+        epoch: shared.epoch.load(Ordering::SeqCst),
+    });
+    // a hit skips the bandit entirely: answered before admission, so it
+    // costs no queue slot even on an overloaded server, and well within
+    // any deadline budget
+    if let (Some(cache), Some(key)) = (&shared.cache, &cache_key) {
+        if let Some(resp) = cache.lock().unwrap().get(key, &query) {
+            shared.latencies.lock().unwrap().record(t0.elapsed());
+            return resp;
+        }
+    }
+    let cached_query = cache_key.is_some().then(|| query.clone());
+    let resp = submit_and_wait(shared, query, k, seed, deadline);
     if resp.get("ok") == Some(&Json::Bool(true)) {
         shared.latencies.lock().unwrap().record(t0.elapsed());
+        // only full-coverage successes enter the cache: a degraded
+        // (coverage-annotated) answer depends on which shards happened
+        // to be alive, and error/overload/deadline answers must always
+        // be recomputed
+        if resp.get("coverage").is_none() {
+            if let (Some(cache), Some(key), Some(q)) =
+                (&shared.cache, cache_key, cached_query)
+            {
+                cache.lock().unwrap().insert(key, &q, resp.clone());
+            }
+        }
     }
     resp
 }
 
-fn stats_json(shared: &Shared) -> Json {
+/// Advance the placement epoch, orphaning every existing cache entry
+/// (their keys can no longer match). The `epoch-bump` op / `POST
+/// /admin/epoch-bump` — for operators rolling a dataset or placement
+/// change through a ring behind a warm front door.
+pub(crate) fn epoch_bump_json(shared: &Shared) -> Json {
+    let epoch = shared.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("epoch", Json::Num(epoch as f64)),
+    ])
+}
+
+/// The `stats` body, shared verbatim with `GET /metrics` on the HTTP
+/// front door — one set of counters, two transports.
+pub(crate) fn stats_json(shared: &Shared) -> Json {
     let lat = shared.latencies.lock().unwrap();
     let batches = shared.batches.lock().unwrap();
     let blat = batches.latency();
+    let (cache_hits, cache_misses, cache_len) = match &shared.cache {
+        Some(c) => {
+            let c = c.lock().unwrap();
+            (c.hits(), c.misses(), c.len())
+        }
+        None => (0, 0, 0),
+    };
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("queries",
@@ -791,6 +946,15 @@ fn stats_json(shared: &Shared) -> Json {
         ("shed", Json::Num(batches.shed() as f64)),
         ("deadline_exceeded",
          Json::Num(batches.deadline_exceeded() as f64)),
+        ("cache_hits", Json::Num(cache_hits as f64)),
+        ("cache_misses", Json::Num(cache_misses as f64)),
+        ("cache_entries", Json::Num(cache_len as f64)),
+        ("epoch",
+         Json::Num(shared.epoch.load(Ordering::SeqCst) as f64)),
+        // hex string: a u64 fingerprint does not survive the f64 JSON
+        // number type; same `{:#018x}` rendering as ring-stats
+        ("fingerprint",
+         Json::Str(format!("{:#018x}", shared.fingerprint))),
     ])
 }
 
@@ -817,6 +981,14 @@ fn deadline_json(context: &str) -> Json {
 /// hint is the observed p50 batch latency (roughly one queue drain), so
 /// well-behaved clients back off just long enough for the queue to make
 /// room.
+///
+/// Cold fallback: before any batch has completed there is no observed
+/// drain time, and a constant hint would be a lie in either direction.
+/// Derive it from what the operator configured instead — the batching
+/// linger (`batch_wait_us`, the floor any batch takes) and the deadline
+/// budget (`deadline_ms`, the worst case one admitted batch may
+/// legitimately run) — and only fall back to a generic 50 ms when
+/// neither knob is set.
 fn overload_json(shared: &Shared) -> Json {
     let p50 = shared
         .batches
@@ -825,7 +997,13 @@ fn overload_json(shared: &Shared) -> Json {
         .latency()
         .percentile(50.0)
         .as_millis() as u64;
-    let retry_after = if p50 == 0 { 50 } else { p50.max(1) };
+    let retry_after = if p50 > 0 {
+        p50
+    } else {
+        let linger_ms = shared.config.batch_wait_us.div_ceil(1000);
+        let derived = linger_ms.max(shared.config.deadline_ms);
+        if derived == 0 { 50 } else { derived }
+    };
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error",
@@ -983,25 +1161,16 @@ mod tests {
         // forever waiting otherwise — no worker will ever answer)
         let ds = synthetic::image_like(30, 16, 135);
         let q = ds.row_vec(0);
-        let shared = Shared {
-            data: ds,
-            config: ServerConfig { max_queue: 1, ..Default::default() },
-            queue: Mutex::new(VecDeque::new()),
-            queue_cv: Condvar::new(),
-            total_units: AtomicU64::new(0),
-            total_queries: AtomicU64::new(0),
-            latencies: Mutex::new(LatencyStats::default()),
-            batches: Mutex::new(BatchStats::default()),
-            ring: Mutex::new(None),
-            shutdown: AtomicBool::new(false),
-        };
+        let shared = test_shared(
+            ds, ServerConfig { max_queue: 1, ..Default::default() });
         shared.queue.lock().unwrap().push_back(Job {
             query: q.clone(),
             k: 1,
+            seed: 0,
             deadline: None,
             done: Arc::new((Mutex::new(None), Condvar::new())),
         });
-        let resp = submit_and_wait(&shared, q, 1, None);
+        let resp = submit_and_wait(&shared, q, 1, 0, None);
         assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
         assert_eq!(resp.get("kind").and_then(|k| k.as_str()),
                    Some("overload"));
@@ -1013,6 +1182,93 @@ mod tests {
         assert_eq!(shared.batches.lock().unwrap().shed(), 1);
         // the shed query never consumed a queue slot
         assert_eq!(shared.queue.lock().unwrap().len(), 1);
+    }
+
+    /// A workerless `Shared` for driving the admission path directly.
+    fn test_shared(data: DenseDataset, config: ServerConfig) -> Shared {
+        Shared {
+            data,
+            config,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            total_units: AtomicU64::new(0),
+            total_queries: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyStats::default()),
+            batches: Mutex::new(BatchStats::default()),
+            ring: Mutex::new(None),
+            fingerprint: 0,
+            epoch: AtomicU64::new(0),
+            cache: None,
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    #[test]
+    fn cold_retry_hint_derives_from_configured_knobs() {
+        // no batch has completed → no observed p50; the hint must come
+        // from the configured linger/deadline, not a constant
+        let ds = synthetic::image_like(30, 16, 138);
+        let linger = test_shared(
+            ds.clone(),
+            ServerConfig { max_queue: 1, batch_wait_us: 120_000,
+                           ..Default::default() });
+        let hint = overload_json(&linger)
+            .get("retry_after_ms").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(hint, 120.0, "hint should be the 120ms linger");
+
+        let budget = test_shared(
+            ds.clone(),
+            ServerConfig { max_queue: 1, deadline_ms: 7_000,
+                           ..Default::default() });
+        let hint = overload_json(&budget)
+            .get("retry_after_ms").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(hint, 7_000.0, "hint should be the deadline budget");
+
+        let bare = test_shared(
+            ds, ServerConfig { max_queue: 1, ..Default::default() });
+        let hint = overload_json(&bare)
+            .get("retry_after_ms").and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(hint, 50.0, "no signal at all → generic fallback");
+    }
+
+    #[test]
+    fn identical_requests_answer_identical_bytes() {
+        // seeded serving compute: with the cache OFF, repeating a
+        // request must still produce byte-identical responses across
+        // batches and workers — the property the cache contract (and
+        // the epoch-flip bitwise assertion) rests on
+        let ds = synthetic::image_like(60, 64, 139);
+        let q = ds.row_vec(7);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let req = Json::obj(vec![
+            ("op", Json::Str("knn".into())),
+            ("query", Json::f32_array(&q)),
+            ("k", Json::Num(3.0)),
+        ]);
+        let a = cl.request(&req).unwrap().to_string();
+        let b = cl.request(&req).unwrap().to_string();
+        assert_eq!(a, b, "serving compute must be deterministic");
+        srv.stop();
+    }
+
+    #[test]
+    fn epoch_bump_op_advances_epoch() {
+        let ds = synthetic::image_like(30, 16, 140);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let resp = cl
+            .request(&Json::obj(vec![
+                ("op", Json::Str("epoch-bump".into())),
+            ]))
+            .unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(resp.get("epoch").and_then(|v| v.as_usize()), Some(1));
+        let stats = cl
+            .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+            .unwrap();
+        assert_eq!(stats.get("epoch").and_then(|v| v.as_usize()), Some(1));
+        srv.stop();
     }
 
     #[test]

@@ -447,9 +447,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                                    cfg.server_deadline_ms)?,
         max_queue: args.flag_usize("max-queue", cfg.server_max_queue)?,
         io_timeout_ms: cfg.io_timeout_ms,
+        // Option semantics ("absent = no HTTP") don't fit flag_u64's
+        // default-value shape — parse by hand
+        http_port: match args.flag("http-port") {
+            None => cfg.server_http_port,
+            Some(p) => Some(p.parse::<u16>().map_err(|_| {
+                format!("bad --http-port {p} (expected 0..=65535)")
+            })?),
+        },
+        cache_entries: args.flag_usize("cache-entries",
+                                       cfg.server_cache_entries)?,
     };
     let srv = Server::start(data, sc).map_err(|e| e.to_string())?;
     println!("bmonn serving on {} (ctrl-c to stop)", srv.addr);
+    if let Some(http) = srv.http_addr {
+        println!("bmonn http front door on {http} \
+                  (POST /knn, GET /metrics)");
+    }
     loop {
         std::thread::sleep(std::time::Duration::from_secs(1));
     }

@@ -200,42 +200,104 @@ impl RunMetrics {
     }
 }
 
+/// Retained-sample window of [`LatencyStats`]: percentiles are read over
+/// the most recent this-many samples. Lifetime count and mean are exact
+/// regardless.
+pub const LATENCY_WINDOW: usize = 4096;
+
 /// Latency recorder for the serving driver (E12).
-#[derive(Clone, Debug, Default)]
+///
+/// Memory is O(window), not O(queries served): samples land in a
+/// fixed-capacity ring buffer (capacity [`LATENCY_WINDOW`] by default,
+/// overridable with [`LatencyStats::with_window`]), so a long-running
+/// server's percentiles track *recent* behavior and a week of traffic
+/// cannot grow the tracker. `count` and `mean` stay exact over the
+/// whole lifetime via running totals.
+///
+/// Percentiles use the nearest-rank definition
+/// (`index = ceil(p/100 · n)`, 1-based): p99 of two samples reads the
+/// *larger* one. The previous floor-index formula systematically read
+/// low on small sample counts — p99 of `{10, 1000}` reported 10.
+#[derive(Clone, Debug)]
 pub struct LatencyStats {
-    samples_us: Vec<u64>,
+    /// Most recent samples in ring order (not chronological once full).
+    window: Vec<u64>,
+    /// Next overwrite slot once `window` has reached capacity.
+    next: usize,
+    cap: usize,
+    /// Lifetime sample count, including overwritten samples.
+    total: u64,
+    /// Lifetime sum in µs, for the exact all-time mean.
+    sum_us: u128,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        Self::with_window(LATENCY_WINDOW)
+    }
 }
 
 impl LatencyStats {
+    /// A recorder retaining at most `cap` samples (`cap` floors at 1).
+    pub fn with_window(cap: usize) -> Self {
+        LatencyStats { window: Vec::new(), next: 0, cap: cap.max(1),
+                       total: 0, sum_us: 0 }
+    }
+
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        let us = d.as_micros() as u64;
+        self.total += 1;
+        self.sum_us += us as u128;
+        self.push_retained(us);
     }
 
+    fn push_retained(&mut self, us: u64) {
+        if self.window.len() < self.cap {
+            self.window.push(us);
+        } else {
+            self.window[self.next] = us;
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Fold `other` into `self`: lifetime totals add exactly; `other`'s
+    /// *retained* samples enter this window (subject to this capacity).
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        for &us in &other.window {
+            self.push_retained(us);
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
     }
 
+    /// Lifetime sample count (retained window may be smaller).
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.total as usize
     }
 
+    /// Samples currently retained for percentile reads (≤ the window).
+    pub fn retained(&self) -> usize {
+        self.window.len()
+    }
+
+    /// Nearest-rank percentile over the retained window.
     pub fn percentile(&self, p: f64) -> Duration {
-        if self.samples_us.is_empty() {
+        if self.window.is_empty() {
             return Duration::ZERO;
         }
-        let mut s = self.samples_us.clone();
+        let mut s = self.window.clone();
         s.sort_unstable();
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).floor() as usize;
-        Duration::from_micros(s[idx.min(s.len() - 1)])
+        let n = s.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        Duration::from_micros(s[rank.clamp(1, n) - 1])
     }
 
+    /// Exact lifetime mean (running sum, unaffected by the window).
     pub fn mean(&self) -> Duration {
-        if self.samples_us.is_empty() {
+        if self.total == 0 {
             return Duration::ZERO;
         }
-        Duration::from_micros(
-            self.samples_us.iter().sum::<u64>() / self.samples_us.len() as u64,
-        )
+        Duration::from_micros((self.sum_us / self.total as u128) as u64)
     }
 }
 
@@ -391,6 +453,47 @@ mod tests {
         assert_eq!(l.percentile(50.0), Duration::from_micros(50));
         assert_eq!(l.percentile(99.0), Duration::from_micros(99));
         assert_eq!(l.count(), 100);
+    }
+
+    #[test]
+    fn small_sample_p99_reads_the_tail() {
+        // floor-indexing read p99 of {10, 1000} as 10; nearest-rank
+        // must read the larger sample
+        let mut l = LatencyStats::default();
+        l.record(Duration::from_micros(10));
+        l.record(Duration::from_micros(1000));
+        assert_eq!(l.percentile(99.0), Duration::from_micros(1000));
+        assert_eq!(l.percentile(50.0), Duration::from_micros(10));
+    }
+
+    #[test]
+    fn latency_window_is_bounded_but_count_is_lifetime() {
+        let mut l = LatencyStats::with_window(8);
+        for i in 1..=100u64 {
+            l.record(Duration::from_micros(i));
+        }
+        assert_eq!(l.count(), 100);
+        assert_eq!(l.retained(), 8);
+        // window holds the most recent 8 samples: 93..=100
+        assert_eq!(l.percentile(1.0), Duration::from_micros(93));
+        assert_eq!(l.percentile(100.0), Duration::from_micros(100));
+        // mean stays exact over the lifetime, not the window
+        assert_eq!(l.mean(), Duration::from_micros(5050 / 100));
+    }
+
+    #[test]
+    fn latency_merge_adds_lifetimes_and_respects_window() {
+        let mut a = LatencyStats::with_window(4);
+        let mut b = LatencyStats::with_window(4);
+        for i in 1..=6u64 {
+            a.record(Duration::from_micros(i));
+            b.record(Duration::from_micros(10 * i));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 12);
+        assert_eq!(a.retained(), 4);
+        // the merged-in retained samples displaced a's window
+        assert_eq!(a.percentile(100.0), Duration::from_micros(60));
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! HTTP front-door integration: the serving path behind `--http-port`
+//! under real sockets — protocol round-trips with real status codes,
+//! the result cache's byte-identity and invalidation contracts, and
+//! the answers that must never be cached (deadline-exceeded, degraded
+//! coverage).
+
+use bmonn::coordinator::http::http_request;
+use bmonn::coordinator::server::{Server, ServerConfig};
+use bmonn::data::synthetic;
+use bmonn::runtime::remote::spawn_loopback_ring;
+use bmonn::util::json::Json;
+
+use std::net::SocketAddr;
+
+fn knn_body(q: &[f32], k: usize) -> String {
+    Json::obj(vec![
+        ("query", Json::f32_array(q)),
+        ("k", Json::Num(k as f64)),
+    ])
+    .to_string()
+}
+
+fn metrics(http: &SocketAddr) -> Json {
+    let (status, _, body) =
+        http_request(http, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200, "/metrics: {body}");
+    Json::parse(body.trim()).unwrap()
+}
+
+fn counter(m: &Json, key: &str) -> u64 {
+    m.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("/metrics lost {key}: {m}")) as u64
+}
+
+#[test]
+fn front_door_speaks_http_with_real_status_codes() {
+    let ds = synthetic::image_like(100, 32, 7);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        http_port: Some(0),
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.expect("http_port: Some(0) must bind");
+    // POST /knn: a valid query answers 200 with the knn response body
+    let (status, _, body) =
+        http_request(&http, "POST", "/knn",
+                     Some(&knn_body(&ds.row_vec(3), 3)))
+            .unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = Json::parse(body.trim()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    let ids: Vec<usize> = resp
+        .get("ids")
+        .and_then(|a| a.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+        .unwrap();
+    assert_eq!(ids[0], 3, "self row must be its own 1-NN");
+    // GET /metrics: the stats body, with the query above counted
+    let m = metrics(&http);
+    assert!(counter(&m, "queries") >= 1);
+    // GET /healthz answers 200
+    let (status, _, _) =
+        http_request(&http, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    // a malformed body is a 400, not a connection reset
+    let (status, _, body) =
+        http_request(&http, "POST", "/knn", Some("{not json")).unwrap();
+    assert_eq!(status, 400, "{body}");
+    // so is a structurally valid but invalid request (wrong dimension)
+    let (status, _, body) =
+        http_request(&http, "POST", "/knn",
+                     Some(&knn_body(&[1.0, 2.0], 3)))
+            .unwrap();
+    assert_eq!(status, 400, "{body}");
+    // unknown path: 404; wrong method on a known path: 405 with Allow
+    let (status, _, _) =
+        http_request(&http, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, headers, _) =
+        http_request(&http, "GET", "/knn", None).unwrap();
+    assert_eq!(status, 405);
+    assert!(headers.iter().any(|(n, v)| n == "allow" && v == "POST"),
+            "405 must name the allowed method: {headers:?}");
+    srv.stop();
+}
+
+#[test]
+fn cache_hit_replays_the_fresh_bytes_and_surfaces_in_metrics() {
+    let ds = synthetic::image_like(100, 32, 11);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 2,
+        batch_size: 4,
+        http_port: Some(0),
+        cache_entries: 8,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.unwrap();
+    let body = knn_body(&ds.row_vec(9), 3);
+    let (s1, _, fresh) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s1, 200, "{fresh}");
+    // the hit must be byte-identical to the fresh compute
+    let (s2, _, hit) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s2, 200);
+    assert_eq!(hit, fresh,
+               "cache hit must replay the stored bytes exactly");
+    // a different query is a miss, not a collision with the entry
+    let other = knn_body(&ds.row_vec(10), 3);
+    let (s3, _, fresh_other) =
+        http_request(&http, "POST", "/knn", Some(&other)).unwrap();
+    assert_eq!(s3, 200);
+    assert_ne!(fresh_other, fresh);
+    let m = metrics(&http);
+    assert_eq!(counter(&m, "cache_hits"), 1);
+    assert_eq!(counter(&m, "cache_misses"), 2);
+    assert_eq!(counter(&m, "cache_entries"), 2);
+    srv.stop();
+}
+
+#[test]
+fn epoch_bump_invalidates_but_the_recompute_answers_the_same_bytes() {
+    let ds = synthetic::image_like(100, 32, 13);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        http_port: Some(0),
+        cache_entries: 8,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.unwrap();
+    let body = knn_body(&ds.row_vec(4), 3);
+    let (s1, _, fresh) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s1, 200);
+    let (s2, _, _) =
+        http_request(&http, "POST", "/admin/epoch-bump", Some(""))
+            .unwrap();
+    assert_eq!(s2, 200);
+    let m = metrics(&http);
+    assert_eq!(counter(&m, "epoch"), 1, "bump must advance the epoch");
+    // the pre-bump entry never matches again: this is a recompute...
+    let (s3, _, recomputed) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s3, 200);
+    let m = metrics(&http);
+    assert_eq!(counter(&m, "cache_hits"), 0,
+               "the pre-bump entry must not serve post-bump queries");
+    assert_eq!(counter(&m, "cache_misses"), 2);
+    // ...and the seeded serving compute makes it answer the same bytes
+    // as before the flip (the dataset did not actually change here)
+    assert_eq!(recomputed, fresh,
+               "recompute across an epoch flip diverged from the \
+                original compute");
+    // the post-bump entry is cached under the new epoch
+    let (s4, _, hit) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s4, 200);
+    assert_eq!(hit, fresh);
+    assert_eq!(counter(&metrics(&http), "cache_hits"), 1);
+    srv.stop();
+}
+
+#[test]
+fn deadline_exceeded_answers_504_and_is_never_cached() {
+    let ds = synthetic::image_like(100, 32, 17);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        // the worker lingers 50ms on every non-full batch, so a 1ms
+        // request budget reliably expires in-queue
+        batch_wait_us: 50_000,
+        http_port: Some(0),
+        cache_entries: 8,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.unwrap();
+    let q = ds.row_vec(6);
+    let expired = Json::obj(vec![
+        ("query", Json::f32_array(&q)),
+        ("k", Json::Num(3.0)),
+        ("deadline_ms", Json::Num(1.0)),
+    ])
+    .to_string();
+    let (status, _, body) =
+        http_request(&http, "POST", "/knn", Some(&expired)).unwrap();
+    assert_eq!(status, 504, "1ms budget against a 50ms linger: {body}");
+    let resp = Json::parse(body.trim()).unwrap();
+    assert_eq!(resp.get("kind").and_then(|v| v.as_str()),
+               Some("deadline_exceeded"));
+    // the failure was not cached: the same query under a generous
+    // budget computes a real answer instead of replaying the 504
+    let m = metrics(&http);
+    assert_eq!(counter(&m, "cache_entries"), 0,
+               "a deadline_exceeded answer must never be cached");
+    let (status, _, body) =
+        http_request(&http, "POST", "/knn",
+                     Some(&knn_body(&q, 3)))
+            .unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(counter(&metrics(&http), "cache_entries"), 1);
+    srv.stop();
+}
+
+#[test]
+fn degraded_coverage_answers_are_never_cached() {
+    let ds = synthetic::image_like(80, 64, 23);
+    let (mut ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        remote: endpoints,
+        degraded: true,
+        http_port: Some(0),
+        cache_entries: 8,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.unwrap();
+    // healthy ring: a full answer, cached
+    let (s1, _, body) =
+        http_request(&http, "POST", "/knn",
+                     Some(&knn_body(&ds.row_vec(5), 3)))
+            .unwrap();
+    assert_eq!(s1, 200, "{body}");
+    assert!(Json::parse(body.trim()).unwrap().get("coverage").is_none());
+    assert_eq!(counter(&metrics(&http), "cache_entries"), 1);
+    // kill shard 0: degraded answers still 200, coverage-annotated —
+    // and they must not enter the cache
+    ring[0].stop();
+    let degraded_q = knn_body(&ds.row_vec(50), 3);
+    let (s2, _, body) =
+        http_request(&http, "POST", "/knn", Some(&degraded_q)).unwrap();
+    assert_eq!(s2, 200, "degraded query must answer: {body}");
+    let resp = Json::parse(body.trim()).unwrap();
+    let frac = resp.get("coverage").and_then(|v| v.as_f64()).unwrap();
+    assert!((frac - 0.5).abs() < 1e-9, "coverage {frac}");
+    let m = metrics(&http);
+    assert_eq!(counter(&m, "cache_entries"), 1,
+               "a coverage-annotated answer must never be cached");
+    // a repeat of the degraded query recomputes (miss), never hits
+    let hits_before = counter(&m, "cache_hits");
+    let (s3, _, _) =
+        http_request(&http, "POST", "/knn", Some(&degraded_q)).unwrap();
+    assert_eq!(s3, 200);
+    assert_eq!(counter(&metrics(&http), "cache_hits"), hits_before,
+               "degraded answers must be recomputed every time");
+    srv.stop();
+}
+
+#[test]
+fn overload_sheds_with_429_and_a_retry_after_header() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let ds = synthetic::image_like(100, 32, 29);
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        // a long linger keeps the single queue slot reliably occupied
+        batch_wait_us: 20_000,
+        max_queue: 1,
+        http_port: Some(0),
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.unwrap();
+    let sheds = AtomicU64::new(0);
+    let bad_header = AtomicU64::new(0);
+    'burst: for _ in 0..50 {
+        std::thread::scope(|sc| {
+            for t in 0..8 {
+                let sheds = &sheds;
+                let bad_header = &bad_header;
+                let ds = &ds;
+                sc.spawn(move || {
+                    for j in 0..4 {
+                        let row = (t * 13 + j * 7) % 100;
+                        let body = knn_body(&ds.row_vec(row), 3);
+                        let Ok((status, headers, _)) = http_request(
+                            &http, "POST", "/knn", Some(&body))
+                        else {
+                            continue;
+                        };
+                        if status == 429 {
+                            sheds.fetch_add(1, Ordering::Relaxed);
+                            let ok = headers.iter().any(|(n, v)| {
+                                n == "retry-after"
+                                    && v.parse::<u64>()
+                                        .is_ok_and(|s| s >= 1)
+                            });
+                            if !ok {
+                                bad_header
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        if sheds.load(Ordering::Relaxed) > 0 {
+            break 'burst;
+        }
+    }
+    assert!(sheds.load(Ordering::Relaxed) >= 1,
+            "50 bursts against max_queue=1 never answered a 429");
+    assert_eq!(bad_header.load(Ordering::Relaxed), 0,
+               "every 429 must carry a whole-second Retry-After");
+    srv.stop();
+}
