@@ -71,7 +71,7 @@ fn run_bmo(w: &Workload, seed: u64, shards: usize) -> AlgoStats {
     // (answers are bitwise-independent of the shard count)
     let mut engine = crate::runtime::build_host_engine(
         EngineKind::Native, shards, &[], false,
-        crate::runtime::kernels::KernelChoice::Auto, false, None)
+        crate::runtime::kernels::KernelChoice::Auto, false, false, None)
         .expect("native host engine");
     let mut rng = Rng::new(seed);
     let mut c = Counter::new();

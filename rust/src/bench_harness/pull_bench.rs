@@ -23,7 +23,11 @@
 //! its fresh compute, that an epoch bump invalidates the entry while
 //! the recompute still answers the same bytes, and that a saturation
 //! burst against `max_queue = 1` sheds with clean `429`s carrying
-//! `Retry-After`), and
+//! `Retry-After`), **and on a tcp-reshard rung** (the ring is doubled
+//! live mid-sweep: staging servers take a fingerprint-verified dataset
+//! transfer at the next placement epoch, an epoch-pinned client takes
+//! over, and every answer on both sides of the flip must stay
+//! bitwise-identical to the baseline), and
 //! emits the numbers as JSON for `BENCH_pull.json` so the perf
 //! trajectory has data points that survive across PRs:
 //!
@@ -147,7 +151,7 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
 struct ShardRun {
     shards: usize,
     /// "local" | "tcp-loopback" | "tcp-failover" | "tcp-multiplex" |
-    /// "tcp-deadline" | "http-front" | "tcp-remote"
+    /// "tcp-deadline" | "http-front" | "tcp-reshard" | "tcp-remote"
     transport: &'static str,
     rows_per_s: f64,
     wall_per_round_us: f64,
@@ -170,6 +174,12 @@ struct ShardRun {
     /// produced (asserted >= 1, each byte-identical to the fresh
     /// compute)
     cache_hits: Option<u64>,
+    /// tcp-reshard only: placement epoch the rung started on (the
+    /// pre-flip loopback ring)
+    epoch_from: Option<u64>,
+    /// tcp-reshard only: placement epoch after the live reshard
+    /// doubled the ring mid-sweep (always advances `epoch_from`)
+    epoch_to: Option<u64>,
 }
 
 /// Workload shape shared by every rung.
@@ -251,6 +261,8 @@ where
         shed: None,
         deadline_exceeded: None,
         cache_hits: None,
+        epoch_from: None,
+        epoch_to: None,
     })
 }
 
@@ -400,6 +412,8 @@ fn measure_multiplex_rung(w: &Workload<'_>, endpoints: &[String],
         shed: None,
         deadline_exceeded: None,
         cache_hits: None,
+        epoch_from: None,
+        epoch_to: None,
     })
 }
 
@@ -545,6 +559,8 @@ fn measure_deadline_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
         shed: Some(shed),
         deadline_exceeded: Some(deadline_exceeded),
         cache_hits: None,
+        epoch_from: None,
+        epoch_to: None,
     })
 }
 
@@ -728,6 +744,129 @@ fn measure_http_front_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
         shed: Some(shed),
         deadline_exceeded: None,
         cache_hits: Some(cache_hits),
+        epoch_from: None,
+        epoch_to: None,
+    })
+}
+
+/// The always-on reshard rung: the identical workload against a
+/// 2-shard loopback ring at placement epoch 0, except that halfway
+/// through the reps the ring is **doubled live**: four staging servers
+/// come up empty, [`remote::reshard_to`] streams each its row range as
+/// a 4-shard placement at epoch 1 (fingerprint-verified at commit), a
+/// fresh client connects pinned to `expect_epoch = 1`, the old servers
+/// are dropped, and the remaining reps run on the new ring. Every
+/// answer — before and after the flip — must be bitwise identical to
+/// the baseline, which is the whole point of an *elastic* ring: a
+/// topology change is invisible to query results. The rung records the
+/// epochs it flipped between for `BENCH_pull.json`.
+fn measure_reshard_rung(w: &Workload<'_>,
+                        baseline_answers: &mut Option<Vec<Vec<u32>>>)
+                        -> Result<ShardRun, String> {
+    use crate::runtime::placement::PlacementMap;
+    use std::sync::Arc;
+    let (old_ring, endpoints) =
+        remote::spawn_loopback_ring(w.data, LOOPBACK_SHARDS)?;
+    let mut old_ring = Some(old_ring);
+    let mut engine = TimingEngine::new(
+        remote::RemoteEngine::connect(&endpoints)
+            .map(|e| Box::new(e) as Box<dyn PullEngine + Send>)?);
+    let (epoch_from, epoch_to) = (0u64, 1u64);
+    let new_shards = LOOPBACK_SHARDS * 2;
+    let mut staged: Vec<remote::ShardServer> = Vec::new();
+    let mut batch_wall = Duration::ZERO;
+    let flip_at = (w.reps / 2).max(1);
+    for rep in 0..w.reps {
+        if rep == flip_at {
+            // double the ring live: empty staging servers take a
+            // fingerprint-verified transfer of the 4-shard placement
+            for i in 0..new_shards {
+                staged.push(remote::ShardServer::start_staging(
+                    "127.0.0.1:0", KernelChoice::Auto, None)
+                    .map_err(|e| format!(
+                        "reshard rung: staging server {i}: {e}"))?);
+            }
+            let specs: Vec<String> =
+                staged.iter().map(|s| s.endpoint()).collect();
+            let map = PlacementMap::parse(&specs)
+                .map_err(|e| format!("reshard rung: {e}"))?;
+            remote::reshard_to(w.data, &map, epoch_to, None)
+                .map_err(|e| format!("reshard rung: transfer: {e}"))?;
+            let client = Arc::new(remote::RingClient::connect_opts(
+                &map,
+                remote::RemoteOptions {
+                    expect_epoch: Some(epoch_to),
+                    ..remote::RemoteOptions::default()
+                })?);
+            if client.epoch() != epoch_to {
+                return Err(format!(
+                    "reshard rung: new ring reports epoch {} after the \
+                     flip to {epoch_to}", client.epoch()));
+            }
+            engine.inner =
+                Box::new(remote::RemoteEngine::from_client(client));
+            // drop the old placement entirely: every remaining answer
+            // can only come from the resharded ring
+            drop(old_ring.take());
+        }
+        let mut rng = Rng::new(w.seed + 1);
+        let mut counter = Counter::new();
+        let t0 = Instant::now();
+        let results = knn_batch_points_dense(w.data, w.points,
+                                             Metric::L2Sq, w.params,
+                                             &mut engine, &mut rng,
+                                             &mut counter);
+        batch_wall += t0.elapsed();
+        let answers: Vec<Vec<u32>> =
+            results.into_iter().map(|r| r.ids).collect();
+        match baseline_answers {
+            None => *baseline_answers = Some(answers),
+            Some(base) => {
+                if *base != answers {
+                    let side =
+                        if rep < flip_at { "before" } else { "after" };
+                    return Err(format!(
+                        "answers diverged on the tcp-reshard rung \
+                         {side} the epoch {epoch_from}→{epoch_to} flip \
+                         — refusing to report throughput for a broken \
+                         engine"));
+                }
+            }
+        }
+    }
+    let pull_secs = engine.pull_wall.as_secs_f64().max(1e-9);
+    let rows_per_s = engine.pull_jobs as f64 / pull_secs;
+    let wall_per_round_us = if engine.pull_calls > 0 {
+        engine.pull_wall.as_secs_f64() * 1e6 / engine.pull_calls as f64
+    } else {
+        0.0
+    };
+    // solo sweep through the post-flip ring (the new steady state)
+    let mut lat = LatencyStats::default();
+    for (i, &q) in w.solo_points.iter().enumerate() {
+        let mut qrng = Rng::new(w.seed + 100 + i as u64);
+        let mut c = Counter::new();
+        let t = Instant::now();
+        let _ = knn_point_dense(w.data, q, Metric::L2Sq, w.params,
+                                &mut engine.inner, &mut qrng, &mut c);
+        lat.record(t.elapsed());
+    }
+    Ok(ShardRun {
+        shards: new_shards,
+        transport: "tcp-reshard",
+        rows_per_s,
+        wall_per_round_us,
+        rounds: engine.pull_calls,
+        jobs: engine.pull_jobs,
+        batch_wall_ms: batch_wall.as_secs_f64() * 1e3,
+        solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+        solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        max_inflight: None,
+        shed: None,
+        deadline_exceeded: None,
+        cache_hits: None,
+        epoch_from: Some(epoch_from),
+        epoch_to: Some(epoch_to),
     })
 }
 
@@ -826,6 +965,12 @@ fn run_json(r: &ShardRun) -> Json {
     if let Some(ch) = r.cache_hits {
         fields.push(("cache_hits", Json::Num(ch as f64)));
     }
+    if let Some(e) = r.epoch_from {
+        fields.push(("epoch_from", Json::Num(e as f64)));
+    }
+    if let Some(e) = r.epoch_to {
+        fields.push(("epoch_to", Json::Num(e as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -862,7 +1007,7 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
             shards,
             "local",
             || build_host_engine(EngineKind::Native, shards, &[], false,
-                                 KernelChoice::Auto, false, None),
+                                 KernelChoice::Auto, false, false, None),
             &mut baseline_answers,
         )?);
     }
@@ -926,6 +1071,11 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
     // loopback ring — byte-identical cache hits across an epoch flip,
     // clean 429s under saturation, end-to-end HTTP queries/s
     remote_runs.push(measure_http_front_rung(&w)?);
+    // reshard rung: the ring doubles live mid-sweep — staging servers
+    // take a fingerprint-verified transfer at the next placement
+    // epoch, an epoch-pinned client takes over, and answers stay
+    // bitwise-identical on both sides of the flip
+    remote_runs.push(measure_reshard_rung(&w, &mut baseline_answers)?);
     if !extra_remote.is_empty() {
         remote_runs.push(measure_rung(
             &w,
@@ -975,6 +1125,11 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         .find(|r| r.transport == "http-front")
         .and_then(|r| r.shed.zip(r.cache_hits))
         .unwrap_or((0, 0));
+    let (re_from, re_to) = remote_runs
+        .iter()
+        .find(|r| r.transport == "tcp-reshard")
+        .and_then(|r| r.epoch_from.zip(r.epoch_to))
+        .unwrap_or((0, 0));
     rep.note(&format!(
         "workload: n={n} d={d} (shard-serve --synthetic \
          image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
@@ -990,7 +1145,9 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
          http-front rung drives the HTTP/1.1 front door with the result \
          cache on and counted {http_shed} clean 429s under saturation \
          plus {http_hits} byte-identical cache hits across an epoch \
-         flip",
+         flip; tcp-reshard rung doubled the ring live (placement epoch \
+         {re_from} -> {re_to}) with bitwise-identical answers on both \
+         sides of the flip",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
     let kernel_note = kernel_runs
         .iter()
@@ -1034,13 +1191,13 @@ mod tests {
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
         let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 5);
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 6);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
         let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
-        assert_eq!(remote.len(), 5,
+        assert_eq!(remote.len(), 6,
                    "loopback + failover + multiplex + deadline + \
-                    http-front rungs always present");
+                    http-front + reshard rungs always present");
         assert_eq!(remote[1].get("transport").and_then(|v| v.as_str()),
                    Some("tcp-failover"));
         assert_eq!(remote[2].get("transport").and_then(|v| v.as_str()),
@@ -1076,6 +1233,21 @@ mod tests {
         assert!(hits >= 1.0,
                 "http-front rung must witness a byte-identical cache \
                  hit, saw {hits}");
+        assert_eq!(remote[5].get("transport").and_then(|v| v.as_str()),
+                   Some("tcp-reshard"));
+        let e_from = remote[5]
+            .get("epoch_from")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        let e_to = remote[5]
+            .get("epoch_to")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert_eq!(e_from, 0.0,
+                   "reshard rung starts on the default epoch-0 ring");
+        assert!(e_to >= 1.0,
+                "reshard rung must advance the placement epoch, saw \
+                 {e_from} -> {e_to}");
         for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())

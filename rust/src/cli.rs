@@ -8,6 +8,7 @@
 //!   serve      — start the query server
 //!   shard-serve— serve one row shard of a dataset to remote coordinators
 //!   ring-stats — probe a shard-serve ring's health via the Stats wire op
+//!   reshard    — stream a dataset onto a new ring of staging servers
 //!   bench      — run a figure-reproduction experiment (fig3a, fig3b, ...)
 //!   selftest   — verify PJRT artifacts against host computation
 
@@ -161,8 +162,9 @@ SUBCOMMANDS
            touching the bandit, and the epoch-bump op [POST
            /admin/epoch-bump] invalidates every cached answer after a
            dataset or placement change. Hits/misses surface via stats)
-  shard-serve  (--data FILE | --synthetic image:N:D:SEED) --shard I
-           --of S [--addr HOST:PORT] [--kernel auto|scalar|avx2|neon]
+  shard-serve  (--data FILE | --synthetic image:N:D:SEED | --staging)
+           --shard I --of S [--addr HOST:PORT]
+           [--kernel auto|scalar|avx2|neon] [--epoch E]
            [--io-timeout-ms T]
            (loads rows [floor(I*n/S), floor((I+1)*n/S)) — the same
            floor-boundary partition --shards uses — and answers
@@ -173,8 +175,14 @@ SUBCOMMANDS
            makes them replicas; a shutdown frame or ctrl-c stops it.
            --kernel forces this server's row-kernel tier — keep it
            identical across a ring's replicas, or failover between
-           them may change float rounding; --io-timeout-ms bounds its
-           reply writes, default 60000)
+           them may change float rounding; --epoch E stamps E into the
+           handshake as this server's placement epoch (default 0) —
+           every endpoint of one placement must carry one epoch;
+           --staging starts the server EMPTY: it answers queries with
+           an error until a reshard/transfer installs a
+           fingerprint-verified dataset (and its epoch) over the wire,
+           then serves exactly like a --data server. --io-timeout-ms
+           bounds its reply writes, default 60000)
   ring-stats  --remote SPECS [--io-timeout-ms T] [--timeout-ms T]
            (probes every endpoint with the Stats wire op and prints
            shard identity, row range, dataset shape, dataset
@@ -185,7 +193,20 @@ SUBCOMMANDS
            fingerprints (failover between them would change answers).
            The reported of-value from any single endpoint tells you
            the ring size S, so a coordinator can size --remote from
-           one known endpoint)
+           one known endpoint; each endpoint's placement epoch is
+           printed too, and divergent epochs across the ring also
+           exit nonzero)
+  reshard  --data FILE --to SPECS [--epoch E] [--io-timeout-ms T]
+           (streams FILE's rows onto a new placement of STAGING shard
+           servers — SPECS is one entry per shard, comma-separated,
+           each optionally a |-separated replica list, every endpoint
+           started with shard-serve --staging — verifying each
+           installed shard against wire::dataset_fingerprint before it
+           can serve, and stamps placement epoch E [default 1] into
+           the new ring. A running query server does this live via the
+           reshard op / POST /admin/reshard instead, which also flips
+           its workers onto the new ring and auto-bumps the result
+           cache epoch; this subcommand only populates the servers)
   bench    <fig3a|fig3b|fig4a|fig4b|fig4c|fig5|fig7|prop1|cor1|thm1|pull>
            [--quick] [--seed S] [--out FILE] [--shards S]
            (--shards fans the figure benches' BMO runs out across S row
@@ -210,11 +231,10 @@ SUBCOMMANDS
   selftest [--artifacts DIR]
 
 Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded/
-kernel/quantized/io_timeout_ms pick and tune the pull engine, [server]
-deadline_ms/max_queue/batch_wait_us/http_port/cache_entries shape the
-query server — see docs/CONFIG.md and docs/OPERATIONS.md),
---set section.key=value
-(repeatable via comma list), --seed N.
+kernel/quantized/epoch/io_timeout_ms pick and tune the pull engine,
+[server] deadline_ms/max_queue/batch_wait_us/http_port/cache_entries
+shape the query server — see docs/CONFIG.md and docs/OPERATIONS.md),
+--set section.key=value (repeatable via comma list), --seed N.
 ";
 
 #[cfg(test)]

@@ -182,6 +182,15 @@ pub struct BmonnConfig {
     /// confidence intervals so the PAC guarantee still holds. Off by
     /// default.
     pub quantized: bool,
+    /// placement epoch served or expected (`[engine] epoch` /
+    /// `--epoch`): on `shard-serve` (flag only) the epoch the server
+    /// stamps into its handshake — a never-resharded ring serves 0,
+    /// the default; on a `--remote` query server a nonzero value pins
+    /// the initial ring connect so endpoints carrying any other epoch
+    /// are refused (restart a coordinator whose ring was resharded to
+    /// epoch E with `--epoch E`). 0 (the default) adopts whatever
+    /// single epoch the ring agrees on.
+    pub epoch: u64,
     /// per-connection I/O timeout in milliseconds for remote rings
     /// (`[engine] io_timeout_ms` / `--io-timeout-ms`): bounds the ring
     /// client's connects, writes and per-wave reply waits, so a dead
@@ -241,6 +250,7 @@ impl Default for BmonnConfig {
             degraded: false,
             kernel: KernelChoice::Auto,
             quantized: false,
+            epoch: 0,
             io_timeout_ms: 60_000,
             artifact_dir: "artifacts".into(),
             seed: 42,
@@ -308,6 +318,9 @@ impl BmonnConfig {
         }
         if let Some(qz) = raw.get_bool("engine.quantized")? {
             cfg.quantized = qz;
+        }
+        if let Some(e) = raw.get_u64("engine.epoch")? {
+            cfg.epoch = e;
         }
         if let Some(t) = raw.get_u64("engine.io_timeout_ms")? {
             if t == 0 {
@@ -450,6 +463,15 @@ mod tests {
         assert!(cfg.quantized);
         let raw =
             RawConfig::parse("[engine]\nkernel = sse9\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn epoch_parses_and_defaults_to_zero() {
+        assert_eq!(BmonnConfig::default().epoch, 0);
+        let raw = RawConfig::parse("[engine]\nepoch = 7\n").unwrap();
+        assert_eq!(BmonnConfig::from_raw(&raw).unwrap().epoch, 7);
+        let raw = RawConfig::parse("[engine]\nepoch = -1\n").unwrap();
         assert!(BmonnConfig::from_raw(&raw).is_err());
     }
 

@@ -21,7 +21,9 @@
 //!
 //! Endpoints: `POST /knn` (same JSON body as the `knn` op, minus the
 //! `op` field — it is implied by the path), `GET /metrics`, `GET
-//! /healthz`, `POST /admin/epoch-bump`. Bodies are JSON either way;
+//! /healthz`, `POST /admin/epoch-bump`, `POST /admin/reshard` (same
+//! body as the `reshard` op: `{"to":[spec,...], "epoch":e?}` — see
+//! [`crate::coordinator::server`]). Bodies are JSON either way;
 //! `429` responses carry `Retry-After` in whole seconds (rounded up
 //! from the body's `retry_after_ms`, minimum 1). Connections are
 //! keep-alive by default (HTTP/1.1 semantics; `Connection: close`
@@ -34,7 +36,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::server::{epoch_bump_json, handle_knn,
-                                 stats_json, Shared};
+                                 reshard_json, stats_json, Shared};
 use crate::runtime::placement::RetryPolicy;
 use crate::util::json::Json;
 
@@ -278,8 +280,27 @@ fn route(writer: &mut TcpStream, req: &Request, shared: &Shared,
         ("POST", "/admin/epoch-bump") => write_response(
             writer, 200, "OK", &epoch_bump_json(shared).to_string(),
             &[], close),
-        (_, "/knn") | (_, "/admin/epoch-bump") => method_not_allowed(
-            writer, "POST", close),
+        ("POST", "/admin/reshard") => {
+            let body = String::from_utf8_lossy(&req.body);
+            match Json::parse(body.trim()) {
+                Err(e) => {
+                    let resp = Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::Str(format!("bad json: {e}"))),
+                    ]);
+                    write_response(writer, 400, "Bad Request",
+                                   &resp.to_string(), &[], close)
+                }
+                Ok(parsed) => {
+                    let resp = reshard_json(&parsed, shared);
+                    let (status, reason) = status_for(&resp);
+                    write_response(writer, status, reason,
+                                   &resp.to_string(), &[], close)
+                }
+            }
+        }
+        (_, "/knn") | (_, "/admin/epoch-bump") | (_, "/admin/reshard") =>
+            method_not_allowed(writer, "POST", close),
         (_, "/metrics") | (_, "/healthz") => method_not_allowed(
             writer, "GET", close),
         _ => {

@@ -59,6 +59,9 @@
 //!             {"ok":false, "error":"...", "kind":"overload",
 //!              "retry_after_ms":_}
 //!   admin:    {"op":"epoch-bump"} → {"ok":true, "epoch":e}
+//!             {"op":"reshard", "to":["host:port",...], "epoch":e?}
+//!               → {"ok":true, "placement_epoch":_, "epoch":_,
+//!                  "shards":_}
 //!
 //! **HTTP front door.** With `http_port` set (`[server] http_port` /
 //! `--http-port`) the same validated request path is additionally served
@@ -79,6 +82,21 @@
 //! or a bandit pull. Only full-coverage successes are cached; the
 //! `epoch-bump` op (or `POST /admin/epoch-bump`) invalidates every
 //! prior entry by changing the key.
+//!
+//! **Elastic placement.** On a remote configuration the `reshard` op
+//! (or `POST /admin/reshard`) rebalances the ring under live traffic:
+//! it streams every shard's rows to a new placement of staging servers
+//! ([`crate::runtime::remote::reshard_to`] — each transfer is
+//! fingerprint-verified before the new server starts serving), opens a
+//! fresh [`RingClient`] with the new placement epoch pinned, and flips
+//! placement + shared ring client + result-cache epoch as one unit.
+//! Workers finish the batch in flight on the old client (the drain)
+//! and pick up the new one at their next batch boundary; the cache
+//! epoch bump happens automatically, so an answer computed on the old
+//! placement can never be replayed after the flip. Any failure before
+//! the flip leaves the old placement serving, untouched. `stats` /
+//! `GET /metrics` surface the current `placement_epoch` plus a
+//! per-endpoint `ring` health array for observability.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -97,7 +115,8 @@ use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{BatchStats, Counter, LatencyStats};
 use crate::runtime::build_host_engine;
 use crate::runtime::placement::{PlacementMap, RetryPolicy};
-use crate::runtime::remote::{RemoteEngine, RemoteOptions, RingClient};
+use crate::runtime::remote::{endpoint_stats, reshard_to, EndpointStats,
+                             RemoteEngine, RemoteOptions, RingClient};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -160,6 +179,13 @@ pub struct ServerConfig {
     /// shared ring client (`[engine] io_timeout_ms` /
     /// `--io-timeout-ms`); remote configurations only. Must be > 0.
     pub io_timeout_ms: u64,
+    /// placement epoch to pin the initial ring connect to (`[engine]
+    /// epoch` / `--epoch`, remote configurations only): nonzero makes
+    /// the workers refuse endpoints carrying any other epoch — for
+    /// restarting a coordinator whose ring was already resharded to a
+    /// known epoch. 0 (the default) adopts whatever single epoch the
+    /// ring agrees on; a live `reshard` op pins the new epoch itself.
+    pub epoch: u64,
     /// HTTP front-door port (`[server] http_port` / `--http-port`):
     /// when set, an HTTP/1.1 listener on the same host serves `POST
     /// /knn`, `GET /metrics`, `GET /healthz` and `POST
@@ -193,6 +219,7 @@ impl Default for ServerConfig {
             deadline_ms: 0,
             max_queue: 0,
             io_timeout_ms: 60_000,
+            epoch: 0,
             http_port: None,
             cache_entries: 0,
         }
@@ -214,6 +241,19 @@ struct Job {
     done: Arc<(Mutex<Option<Json>>, Condvar)>,
 }
 
+/// The worker-facing view of the ring: which endpoints to connect to
+/// and which placement epoch to demand at handshake. A completed
+/// `reshard` swaps both as one unit; `ServerConfig::remote` only seeds
+/// the initial value.
+struct Placement {
+    /// endpoint specs, one per shard (replicas `|`-separated)
+    endpoints: Vec<String>,
+    /// epoch pinned at connect time — `None` until the first reshard
+    /// (a fresh ring adopts whatever single epoch its endpoints agree
+    /// on, which is 0 for never-resharded servers)
+    epoch: Option<u64>,
+}
+
 /// Everything the accept/IO/worker/HTTP threads share. `pub(crate)` so
 /// the HTTP front door ([`crate::coordinator::http`]) can route into
 /// the same request path.
@@ -233,6 +273,10 @@ pub(crate) struct Shared {
     /// may be down at startup) and dropped when a compute panic makes a
     /// worker suspect it, so the next batch reconnects from scratch
     ring: Mutex<Option<Arc<RingClient>>>,
+    /// current ring placement (endpoints + pinned epoch), swapped
+    /// atomically by a completed `reshard` op — workers parse this, not
+    /// `config.remote`, when they (re)connect
+    placement: Mutex<Placement>,
     /// `wire::dataset_fingerprint` of the served dataset, computed once
     /// at startup; part of every cache key (0 when the cache is off)
     fingerprint: u64,
@@ -256,7 +300,7 @@ fn build_worker_engine(shared: &Shared, kind: EngineKind,
         return build_host_engine(kind, shared.config.shards, &[],
                                  shared.config.degraded,
                                  shared.config.kernel,
-                                 shared.config.quantized, None);
+                                 shared.config.quantized, false, None);
     }
     let client = shared.ring.lock().unwrap().clone();
     let client = match client {
@@ -265,12 +309,20 @@ fn build_worker_engine(shared: &Shared, kind: EngineKind,
             // connect WITHOUT holding the shared slot's mutex: during a
             // ring outage every worker must fail (and answer "engine
             // unavailable") after ~one connect-timeout window in
-            // parallel, not stacked behind one another's dial attempts
-            let map = PlacementMap::parse(&shared.config.remote)?;
+            // parallel, not stacked behind one another's dial attempts.
+            // The *current* placement is what we dial — after a reshard
+            // that is the new ring, with its epoch pinned so an
+            // old-placement endpoint can never rejoin.
+            let (specs, expect) = {
+                let p = shared.placement.lock().unwrap();
+                (p.endpoints.clone(), p.epoch)
+            };
+            let map = PlacementMap::parse(&specs)?;
             let opts = RemoteOptions {
                 degraded: shared.config.degraded,
                 timeout: Some(Duration::from_millis(
                     shared.config.io_timeout_ms.max(1))),
+                expect_epoch: expect,
                 ..RemoteOptions::default()
             };
             let fresh = Arc::new(RingClient::connect_opts(&map, opts)?);
@@ -361,6 +413,10 @@ impl Server {
         };
         let cache = (config.cache_entries > 0)
             .then(|| Mutex::new(ResultCache::new(config.cache_entries)));
+        let placement = Mutex::new(Placement {
+            endpoints: config.remote.clone(),
+            epoch: (config.epoch > 0).then_some(config.epoch),
+        });
         let shared = Arc::new(Shared {
             data,
             config,
@@ -371,6 +427,7 @@ impl Server {
             latencies: Mutex::new(LatencyStats::default()),
             batches: Mutex::new(BatchStats::default()),
             ring: Mutex::new(None),
+            placement,
             fingerprint,
             epoch: AtomicU64::new(0),
             cache,
@@ -499,6 +556,28 @@ fn worker_loop(shared: Arc<Shared>) {
                 }
             }
         };
+        // a completed reshard swapped the shared ring client: a worker
+        // holding an engine over the *old* client drains naturally (the
+        // wave it already started finished before this batch was
+        // drained) and notices here, at the batch boundary — dropping
+        // the stale engine so the rebuild below wraps the new
+        // placement. The old client's connections close when its last
+        // worker lets go of the Arc.
+        if !shared.config.remote.is_empty() && engine.is_some() {
+            let stale = match (&*shared.ring.lock().unwrap(),
+                               &ring_in_use) {
+                (Some(cur), Some(mine)) => !Arc::ptr_eq(cur, mine),
+                (Some(_), None) => true,
+                // shared slot empty (a panic path invalidated it):
+                // keep this engine — it may still be healthy, and the
+                // panic path rebuilds its own
+                (None, _) => false,
+            };
+            if stale {
+                engine = None;
+                ring_in_use = None;
+            }
+        }
         let t0 = Instant::now();
         let mut responses: Vec<Option<Json>> =
             (0..jobs.len()).map(|_| None).collect();
@@ -810,6 +889,7 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>)
                     }
                     Some("knn") => handle_knn(&req, &shared),
                     Some("epoch-bump") => epoch_bump_json(&shared),
+                    Some("reshard") => reshard_json(&req, &shared),
                     _ => err_json("unknown op"),
                 }
             }
@@ -911,6 +991,156 @@ pub(crate) fn epoch_bump_json(shared: &Shared) -> Json {
     ])
 }
 
+/// The `reshard` admin op (`POST /admin/reshard`): rebalance the ring
+/// under live traffic. Three phases, each of which leaves the old
+/// placement serving untouched if it fails:
+///
+/// 1. **Transfer** — stream every shard of the dataset to its staging
+///    target(s) ([`reshard_to`]) and fingerprint-verify each installed
+///    dataset against `wire::dataset_fingerprint` of the rows sent.
+/// 2. **Open** — connect a fresh [`RingClient`] to the new placement
+///    with the new epoch pinned (`expect_epoch`), so a leftover
+///    old-placement endpoint can never join the connection set.
+/// 3. **Flip** — swap placement, shared ring client and result-cache
+///    epoch as one unit. Workers drain the batch in flight on the old
+///    client and adopt the new one at their next batch boundary; the
+///    automatic cache-epoch bump orphans every entry computed on the
+///    old placement, no manual `epoch-bump` needed.
+///
+/// Request: `{"op":"reshard", "to":[spec,...], "epoch":e?}` — `to` is
+/// one endpoint spec per shard (replicas `|`-separated, targets must
+/// be staging servers: `shard-serve --staging`); `epoch` defaults to
+/// the current placement epoch + 1 and must advance it.
+pub(crate) fn reshard_json(req: &Json, shared: &Shared) -> Json {
+    if shared.config.remote.is_empty() {
+        return err_json("reshard requires a remote ring (--remote): a \
+                         local engine has no placement to change");
+    }
+    let Some(to) = req.get("to").and_then(|t| t.as_arr()) else {
+        return err_json("missing to: array of endpoint specs (one per \
+                         shard; replicas |-separated)");
+    };
+    let mut specs = Vec::with_capacity(to.len());
+    for v in to {
+        match v.as_str() {
+            Some(s) if !s.trim().is_empty() => specs.push(s.to_string()),
+            _ => return err_json("to entries must be non-empty strings"),
+        }
+    }
+    if specs.is_empty() {
+        return err_json("to must name at least one endpoint");
+    }
+    let cur = shared.placement.lock().unwrap().epoch.unwrap_or(0);
+    let epoch = match req.get("epoch") {
+        None => cur + 1,
+        Some(v) => match v.as_f64() {
+            Some(e) if e >= 0.0 && e == e.trunc() => e as u64,
+            _ => return err_json("epoch must be a non-negative integer"),
+        },
+    };
+    if epoch <= cur {
+        return err_json(&format!(
+            "epoch {epoch} does not advance the current placement \
+             epoch {cur} — each reshard must move forward"));
+    }
+    let map = match PlacementMap::parse(&specs) {
+        Ok(m) => m,
+        Err(e) => return err_json(&format!("bad placement: {e}")),
+    };
+    let timeout =
+        Some(Duration::from_millis(shared.config.io_timeout_ms.max(1)));
+    if let Err(e) = reshard_to(&shared.data, &map, epoch, timeout) {
+        return err_json(&format!(
+            "reshard aborted (old placement keeps serving): {e}"));
+    }
+    let opts = RemoteOptions {
+        degraded: shared.config.degraded,
+        timeout,
+        expect_epoch: Some(epoch),
+        ..RemoteOptions::default()
+    };
+    let fresh = match RingClient::connect_opts(&map, opts) {
+        Ok(c) => Arc::new(c),
+        Err(e) => {
+            return err_json(&format!(
+                "new placement verified but unreachable (old placement \
+                 keeps serving): {e}"));
+        }
+    };
+    {
+        let mut p = shared.placement.lock().unwrap();
+        p.endpoints = specs;
+        p.epoch = Some(epoch);
+    }
+    *shared.ring.lock().unwrap() = Some(fresh);
+    // the auto cache bump: stale hits across the flip are impossible
+    // even though the dataset fingerprint did not change
+    let cache_epoch = shared.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("placement_epoch", Json::Num(epoch as f64)),
+        ("epoch", Json::Num(cache_epoch as f64)),
+        ("shards", Json::Num(map.n_shards() as f64)),
+    ])
+}
+
+/// Probe every endpoint of the current placement concurrently (one
+/// short-lived stats connection each) and render per-endpoint health —
+/// the `ring` array of `stats` / `GET /metrics`. Local configurations
+/// report an empty array; an unreachable endpoint reports `ok:false`
+/// with the probe error instead of failing the whole stats call.
+fn ring_health_json(shared: &Shared) -> Json {
+    let endpoints: Vec<String> = shared
+        .placement
+        .lock()
+        .unwrap()
+        .endpoints
+        .iter()
+        .flat_map(|spec| spec.split('|').map(|e| e.trim().to_string()))
+        .collect();
+    let timeout =
+        Duration::from_millis(shared.config.io_timeout_ms.max(1));
+    let probes: Vec<Result<EndpointStats, String>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = endpoints
+                .iter()
+                .map(|ep| {
+                    scope.spawn(move || endpoint_stats(ep, Some(timeout)))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(
+                        |_| Err("stats probe panicked".into()))
+                })
+                .collect()
+        });
+    Json::Arr(
+        endpoints
+            .iter()
+            .zip(probes)
+            .map(|(ep, probe)| match probe {
+                Ok(st) => Json::obj(vec![
+                    ("endpoint", Json::Str(ep.clone())),
+                    ("ok", Json::Bool(true)),
+                    ("shard", Json::Num(st.shard as f64)),
+                    ("of", Json::Num(st.of as f64)),
+                    ("live_conns", Json::Num(st.live_conns as f64)),
+                    ("epoch", Json::Num(st.epoch as f64)),
+                    ("fingerprint",
+                     Json::Str(format!("{:#018x}", st.data_hash))),
+                ]),
+                Err(e) => Json::obj(vec![
+                    ("endpoint", Json::Str(ep.clone())),
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(e)),
+                ]),
+            })
+            .collect(),
+    )
+}
+
 /// The `stats` body, shared verbatim with `GET /metrics` on the HTTP
 /// front door — one set of counters, two transports.
 pub(crate) fn stats_json(shared: &Shared) -> Json {
@@ -955,6 +1185,13 @@ pub(crate) fn stats_json(shared: &Shared) -> Json {
         // number type; same `{:#018x}` rendering as ring-stats
         ("fingerprint",
          Json::Str(format!("{:#018x}", shared.fingerprint))),
+        // placement visibility: the epoch the workers' ring is pinned
+        // to (0 until the first reshard) and a live per-endpoint
+        // health probe of the current placement (empty when local)
+        ("placement_epoch",
+         Json::Num(shared.placement.lock().unwrap().epoch.unwrap_or(0)
+                   as f64)),
+        ("ring", ring_health_json(shared)),
     ])
 }
 
@@ -1186,6 +1423,10 @@ mod tests {
 
     /// A workerless `Shared` for driving the admission path directly.
     fn test_shared(data: DenseDataset, config: ServerConfig) -> Shared {
+        let placement = Mutex::new(Placement {
+            endpoints: config.remote.clone(),
+            epoch: (config.epoch > 0).then_some(config.epoch),
+        });
         Shared {
             data,
             config,
@@ -1196,11 +1437,43 @@ mod tests {
             latencies: Mutex::new(LatencyStats::default()),
             batches: Mutex::new(BatchStats::default()),
             ring: Mutex::new(None),
+            placement,
             fingerprint: 0,
             epoch: AtomicU64::new(0),
             cache: None,
             shutdown: AtomicBool::new(false),
         }
+    }
+
+    #[test]
+    fn reshard_validates_before_touching_the_network() {
+        // local engine: nothing to reshard
+        let ds = synthetic::image_like(30, 16, 141);
+        let local = test_shared(ds.clone(), ServerConfig::default());
+        let req = Json::obj(vec![
+            ("op", Json::Str("reshard".into())),
+            ("to", Json::Arr(vec![Json::Str("127.0.0.1:1".into())])),
+        ]);
+        let resp = reshard_json(&req, &local);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").and_then(|e| e.as_str()).unwrap()
+                    .contains("remote"));
+
+        // remote config, but the requested epoch does not advance the
+        // current placement epoch — rejected before any transfer
+        let remote = test_shared(
+            ds,
+            ServerConfig { remote: vec!["127.0.0.1:1".into()],
+                           ..Default::default() });
+        let req = Json::obj(vec![
+            ("op", Json::Str("reshard".into())),
+            ("to", Json::Arr(vec![Json::Str("127.0.0.1:1".into())])),
+            ("epoch", Json::Num(0.0)),
+        ]);
+        let resp = reshard_json(&req, &remote);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        assert!(resp.get("error").and_then(|e| e.as_str()).unwrap()
+                    .contains("advance"));
     }
 
     #[test]

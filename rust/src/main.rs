@@ -73,6 +73,7 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
     if args.flag_bool("quantized") {
         cfg.quantized = true;
     }
+    cfg.epoch = args.flag_u64("epoch", cfg.epoch)?;
     cfg.io_timeout_ms =
         args.flag_u64("io-timeout-ms", cfg.io_timeout_ms)?;
     if cfg.io_timeout_ms == 0 {
@@ -104,6 +105,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "serve" => cmd_serve(&args),
         "shard-serve" => cmd_shard_serve(&args),
         "ring-stats" => cmd_ring_stats(&args),
+        "reshard" => cmd_reshard(&args),
         "bench" => cmd_bench(&args),
         "selftest" => cmd_selftest(&args),
         other => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
@@ -156,6 +158,14 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
     let mut counter = Counter::new();
     // sparse path
     if path.ends_with(".bms") {
+        // --remote ships dense f32 rows only; route through the engine
+        // builder so the rejection is the same validated error every
+        // caller sees, instead of an undefined sparse-over-the-wire path
+        if !cfg.remote.is_empty() {
+            build_host_engine(cfg.engine, cfg.shards, &cfg.remote,
+                              cfg.degraded, cfg.kernel, cfg.quantized,
+                              true, None)?;
+        }
         let data =
             loader::load_sparse(Path::new(path)).map_err(|e| e.to_string())?;
         let res = match algo {
@@ -209,7 +219,7 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
                     // shard-serve ring when --remote is given
                     let mut e = build_host_engine(
                         kind, cfg.shards, &cfg.remote, cfg.degraded,
-                        cfg.kernel, cfg.quantized,
+                        cfg.kernel, cfg.quantized, false,
                         Some(std::time::Duration::from_millis(
                             cfg.io_timeout_ms)))?;
                     knn_point_dense(&data, q, cfg.metric, &params, &mut e,
@@ -297,7 +307,7 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
         kind => {
             let mut e = build_host_engine(
                 kind, cfg.shards, &cfg.remote, cfg.degraded, cfg.kernel,
-                cfg.quantized,
+                cfg.quantized, false,
                 Some(std::time::Duration::from_millis(
                     cfg.io_timeout_ms)))?;
             knn_batch_points_dense(data, &points, cfg.metric, &params,
@@ -351,7 +361,7 @@ fn cmd_graph(args: &Args) -> Result<(), String> {
     };
     let mut engine = build_host_engine(
         kind, cfg.shards, &cfg.remote, cfg.degraded, cfg.kernel,
-        cfg.quantized,
+        cfg.quantized, false,
         Some(std::time::Duration::from_millis(cfg.io_timeout_ms)))?;
     let g = knn_graph_dense(&data, cfg.metric, &cfg.bandit_params(),
                             &mut engine, &mut rng, &mut counter);
@@ -447,6 +457,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                                    cfg.server_deadline_ms)?,
         max_queue: args.flag_usize("max-queue", cfg.server_max_queue)?,
         io_timeout_ms: cfg.io_timeout_ms,
+        epoch: cfg.epoch,
         // Option semantics ("absent = no HTTP") don't fit flag_u64's
         // default-value shape — parse by hand
         http_port: match args.flag("http-port") {
@@ -490,26 +501,55 @@ fn cmd_shard_serve(args: &Args) -> Result<(), String> {
                     servers report no bias bound over the wire for the \
                     coordinator's PAC accounting to absorb".into());
     }
+    let io_timeout_ms = args.flag_u64("io-timeout-ms", 60_000)?;
+    if io_timeout_ms == 0 {
+        return Err("--io-timeout-ms must be > 0".into());
+    }
+    let timeout = Some(std::time::Duration::from_millis(io_timeout_ms));
+    let epoch = args.flag_u64("epoch", 0)?;
+    if args.flag_bool("staging") {
+        // staging servers learn shard identity, rows AND epoch from the
+        // transfer stream — flags that would pre-commit any of those
+        // are contradictions, not silently-ignored noise
+        if args.flag("data").is_some() || args.flag("synthetic").is_some()
+        {
+            return Err("--staging starts the server empty: drop \
+                        --data/--synthetic (a reshard transfer installs \
+                        the dataset, shard identity and epoch over the \
+                        wire)".into());
+        }
+        if args.flag("epoch").is_some() {
+            return Err("--staging takes its epoch from the transfer \
+                        stream (reshard --epoch): drop --epoch here"
+                .into());
+        }
+        let srv = ShardServer::start_staging(addr, kernel, timeout)
+            .map_err(|e| e.to_string())?;
+        println!("bmonn shard-serve: STAGING on {} (kernel {}) — \
+                  awaiting a transfer (bmonn reshard / POST \
+                  /admin/reshard); ctrl-c or a shutdown frame stops it",
+                 srv.addr, kernel.as_str());
+        while !srv.shutdown_requested() {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+        println!("shutdown requested, exiting");
+        return Ok(());
+    }
     let data = if let Some(path) = args.flag("data") {
         loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?
     } else if let Some(spec) = args.flag("synthetic") {
         parse_synthetic(spec)?
     } else {
-        return Err("--data FILE or --synthetic image:N:D:SEED required"
-            .into());
+        return Err("--data FILE, --synthetic image:N:D:SEED or \
+                    --staging required".into());
     };
-    let io_timeout_ms = args.flag_u64("io-timeout-ms", 60_000)?;
-    if io_timeout_ms == 0 {
-        return Err("--io-timeout-ms must be > 0".into());
-    }
     let srv = ShardServer::start_shard_of_with_opts(
-        addr, &data, shard, of, kernel,
-        Some(std::time::Duration::from_millis(io_timeout_ms)))
+        addr, &data, shard, of, kernel, timeout, epoch)
         .map_err(|e| e.to_string())?;
     let (a, b) = shard_range(shard, data.n, of);
     println!("bmonn shard-serve: rows [{a}, {b}) of n={} d={} on {} \
-              (shard {shard}/{of}, kernel {}; ctrl-c or a shutdown \
-              frame stops it)",
+              (shard {shard}/{of}, kernel {}, placement epoch {epoch}; \
+              ctrl-c or a shutdown frame stops it)",
              data.n, data.d, srv.addr, kernel.as_str());
     while !srv.shutdown_requested() {
         std::thread::sleep(std::time::Duration::from_millis(100));
@@ -542,6 +582,9 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
     let mut n_total: Option<usize> = None;
     let mut dead_shards: Vec<usize> = Vec::new();
     let mut divergent_shards: Vec<usize> = Vec::new();
+    // placement epochs seen across the whole ring: one placement must
+    // carry exactly one epoch, or a reshard is half-landed
+    let mut ring_epochs: Vec<u64> = Vec::new();
     for shard in 0..map.n_shards() {
         let mut shard_live = false;
         // dataset fingerprints of the correctly-identified live
@@ -556,11 +599,11 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
                     println!(
                         "shard {shard} replica {ri} {ep}: UP — serves \
                          shard {}/{} rows [{}, {}) of n={} d={}, {} live \
-                         conns, fingerprint {:#018x}, max {} concurrent \
-                         waves/conn",
+                         conns, fingerprint {:#018x}, epoch {}, max {} \
+                         concurrent waves/conn",
                         st.shard, st.of, st.row_start, st.row_end,
                         st.n_total, st.d, st.live_conns, st.data_hash,
-                        st.max_conn_waves);
+                        st.epoch, st.max_conn_waves);
                     if st.of != map.n_shards() || st.shard != shard {
                         // a mis-wired endpoint would fail RemoteEngine's
                         // handshake validation, so it does NOT count as
@@ -585,6 +628,7 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
                                 st.data_hash, hashes[0]);
                         }
                         hashes.push(st.data_hash);
+                        ring_epochs.push(st.epoch);
                         if !shard_live {
                             shard_live = true;
                             covered_rows += st.row_end - st.row_start;
@@ -620,6 +664,14 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
              between them would change answers; reload the replicas \
              from one dataset"));
     }
+    ring_epochs.sort_unstable();
+    ring_epochs.dedup();
+    if ring_epochs.len() > 1 {
+        return Err(format!(
+            "ring inconsistent: endpoints report divergent placement \
+             epochs {ring_epochs:?} — every endpoint of one placement \
+             must carry one epoch; finish or roll back the reshard"));
+    }
     if !dead_shards.is_empty() {
         return Err(format!(
             "ring unhealthy: shard(s) {dead_shards:?} have no live \
@@ -627,6 +679,44 @@ fn cmd_ring_stats(args: &Args) -> Result<(), String> {
              with --degraded)"));
     }
     println!("ring healthy: every shard has a live replica");
+    Ok(())
+}
+
+/// `reshard`: stream a dataset onto a new placement of STAGING shard
+/// servers (`shard-serve --staging`) and fingerprint-verify every
+/// installed shard before it can serve. This is the offline/populate
+/// half of the elastic-ring story — a live query server reshards
+/// itself (flipping its workers onto the new ring and auto-bumping the
+/// result-cache epoch) via the `reshard` op / `POST /admin/reshard`.
+fn cmd_reshard(args: &Args) -> Result<(), String> {
+    use bmonn::runtime::placement::PlacementMap;
+    use bmonn::runtime::remote::reshard_to;
+    let path = args.flag("data").ok_or("--data FILE required")?;
+    let specs = args
+        .flag("to")
+        .map(parse_endpoints)
+        .ok_or("--to SPECS required (one entry per shard; replicas \
+                separated by '|'; every endpoint a shard-serve \
+                --staging server)")?;
+    let epoch = args.flag_u64("epoch", 1)?;
+    let io_timeout_ms = args.flag_u64("io-timeout-ms", 60_000)?;
+    if io_timeout_ms == 0 {
+        return Err("--io-timeout-ms must be > 0".into());
+    }
+    let data =
+        loader::load_dense(Path::new(path)).map_err(|e| e.to_string())?;
+    let map = PlacementMap::parse(&specs)?;
+    let hashes = reshard_to(
+        &data, &map, epoch,
+        Some(std::time::Duration::from_millis(io_timeout_ms)))?;
+    for (shard, fp) in hashes.iter().enumerate() {
+        println!("shard {shard}/{}: installed and verified, fingerprint \
+                  {fp:#018x}",
+                 map.n_shards());
+    }
+    println!("reshard complete: n={} d={} over {} shard(s) at placement \
+              epoch {epoch}",
+             data.n, data.d, map.n_shards());
     Ok(())
 }
 

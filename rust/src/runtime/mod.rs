@@ -14,8 +14,9 @@
 //! * [`sharded`] — multi-core wrapper fanning waves across contiguous
 //!   row shards on a persistent worker pool, bit-identical to the
 //!   wrapped engine run single-threaded;
-//! * [`wire`] — the wave-tagged (v2) length-prefixed binary protocol
-//!   `PullRequest` waves and replies travel over between machines;
+//! * [`wire`] — the wave-tagged (v3, epoch-stamped) length-prefixed
+//!   binary protocol `PullRequest` waves, replies and dataset-transfer
+//!   streams travel over between machines;
 //! * [`placement`] — replica placement for the ring: ordered replica
 //!   lists per logical shard plus the per-endpoint backoff/blacklist
 //!   state the failover path uses;
@@ -85,16 +86,29 @@ use std::time::Duration;
 /// alongside `--remote` is rejected rather than silently ignored, and
 /// both are meaningless for the f64 `ScalarEngine`.
 ///
+/// `sparse` marks the caller's dataset as sparse (`.bms` inputs): the
+/// wire protocol ships dense f32 row blocks only, so `sparse` combined
+/// with `--remote` is a validated error instead of an undefined path —
+/// sparse queries stay on the local CSR engine.
+///
 /// `io_timeout` (`[engine] io_timeout_ms` / `--io-timeout-ms`) bounds
 /// the ring client's connects, writes and per-wave reply waits; local
 /// engines have no I/O and ignore it.
+#[allow(clippy::too_many_arguments)]
 pub fn build_host_engine(kind: EngineKind, shards: usize,
                          remote: &[String], degraded: bool,
                          kernel: KernelChoice, quantized: bool,
-                         io_timeout: Option<Duration>)
+                         sparse: bool, io_timeout: Option<Duration>)
                          -> Result<Box<dyn PullEngine + Send>, String> {
     let shards = shards.max(1);
     if !remote.is_empty() {
+        if sparse {
+            return Err("--remote serves dense datasets only: the wire \
+                        protocol ships dense f32 row blocks, and shard \
+                        servers have no CSR engine — drop --remote to \
+                        query sparse data locally"
+                .into());
+        }
         if shards > 1 {
             return Err("--shards and --remote are mutually exclusive: a \
                         remote ring is already sharded across its \

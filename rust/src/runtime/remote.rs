@@ -79,6 +79,24 @@
 //! only, threading a `coverage` annotation through
 //! [`crate::coordinator::knn::KnnResult`] and the query server's JSON
 //! responses instead of erroring.
+//!
+//! **Elasticity.** A placement is stamped with an **epoch** (wire v3):
+//! every `HelloAck`/`StatsReply` carries it, the client establishes it
+//! ring-wide exactly like the dataset shape, and a ring whose
+//! endpoints disagree on it is refused. To grow or rebalance a live
+//! ring, start **staging** servers ([`ShardServer::start_staging`] /
+//! `shard-serve --staging`) — empty processes that answer every op
+//! with a clean `staging` error — and stream each one its row range
+//! with [`transfer_shard`] / [`reshard_to`]: the receiver recomputes
+//! the [`wire::dataset_fingerprint`] over the bytes it landed and
+//! refuses the commit on any divergence, then atomically becomes a
+//! normal serving server at the new epoch. The coordinator
+//! (`coordinator/server.rs` reshard op) then connects a fresh
+//! [`RingClient`] with [`RemoteOptions::expect_epoch`] pinned to the
+//! new epoch and swaps it in; in-flight waves drain on the old
+//! client's connections (the old `Arc` lives until its last worker
+//! drops it), so the flip costs zero query errors
+//! (`tests/reshard.rs`).
 
 #![deny(missing_docs)]
 
@@ -87,7 +105,7 @@ use std::io;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream,
                ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -118,7 +136,12 @@ pub const MAX_CONN_WAVES: usize = 16;
 // shard server
 // ---------------------------------------------------------------------
 
-struct ShardShared {
+/// What a shard server is currently serving: the dataset slice plus
+/// the placement identity it stamps into every `HelloAck`/`StatsReply`.
+/// Installed exactly once — at startup for a normal server, at
+/// `TransferCommit` time for a staging server — so the compute path
+/// reads it lock-free.
+struct ServingState {
     /// this shard's rows only (global rows `[row_start, row_start + n)`)
     local: DenseDataset,
     n_total: usize,
@@ -126,13 +149,42 @@ struct ShardShared {
     /// shard identity reported by the `Stats` health op
     shard: u64,
     of: u64,
+    /// fingerprint of the served content (`wire::dataset_fingerprint`)
+    data_hash: u64,
+    /// placement epoch this server belongs to (`shard-serve --epoch`,
+    /// or the epoch of the transfer that installed it) — a client
+    /// refuses a ring whose endpoints disagree on it
+    epoch: u64,
+}
+
+/// A half-streamed transfer on a staging server: declared identity and
+/// row buffer accumulate here until `TransferCommit` verifies the
+/// fingerprint and installs them as the [`ServingState`]. A fresh
+/// `TransferBegin` replaces it wholesale, so a coordinator that
+/// flapped mid-stream simply restarts the transfer.
+struct PendingTransfer {
+    shard: u64,
+    of: u64,
+    n_total: usize,
+    d: usize,
+    row_start: usize,
+    row_end: usize,
+    epoch: u64,
+    rows: Vec<f32>,
+}
+
+struct ShardShared {
+    /// the installed dataset + placement identity. Empty on a staging
+    /// server until its transfer commits; handshake and compute ops
+    /// answer a clean `staging` wire `Error` until then.
+    serving: OnceLock<ServingState>,
+    /// the transfer currently streaming into a staging server, if any
+    staging: Mutex<Option<PendingTransfer>>,
     /// kernel tier this server's compute engines dispatch (`shard-serve
     /// --kernel`; resolved — and therefore proven available — at
     /// startup). Keep it identical across a shard's replicas: failover
     /// between tiers would change float rounding.
     kernel: KernelChoice,
-    /// fingerprint of the served content (`wire::dataset_fingerprint`)
-    data_hash: u64,
     /// write timeout applied to every accepted connection, so a peer
     /// that stops reading its replies (full TCP buffers, wedged
     /// process) cannot strand a drainer thread forever. Reads stay
@@ -182,39 +234,70 @@ impl ShardServer {
                              kernel: KernelChoice)
                              -> io::Result<ShardServer> {
         Self::start_with_opts(addr, local, n_total, row_start, shard, of,
-                              kernel, Some(DEFAULT_IO_TIMEOUT))
+                              kernel, Some(DEFAULT_IO_TIMEOUT), 0)
     }
 
     /// [`ShardServer::start_with_kernel`] with an explicit per-
     /// connection write timeout (`shard-serve --io-timeout-ms`; `None`
-    /// = block forever). Applied to reply writes only — see
-    /// `ShardShared::io_timeout`.
+    /// = block forever — applied to reply writes only, see
+    /// `ShardShared::io_timeout`) and placement epoch (`shard-serve
+    /// --epoch`; stamped into every `HelloAck`/`StatsReply`).
     #[allow(clippy::too_many_arguments)]
     pub fn start_with_opts(addr: &str, local: DenseDataset,
                            n_total: usize, row_start: usize,
                            shard: usize, of: usize,
                            kernel: KernelChoice,
-                           io_timeout: Option<Duration>)
+                           io_timeout: Option<Duration>,
+                           epoch: u64)
                            -> io::Result<ShardServer> {
         assert!(row_start + local.n <= n_total,
                 "shard rows [{row_start}, {}) exceed n_total={n_total}",
                 row_start + local.n);
+        let data_hash = wire::dataset_fingerprint(n_total, row_start,
+                                                  &local);
+        Self::start_inner(addr, kernel, io_timeout, Some(ServingState {
+            local,
+            n_total,
+            row_start,
+            shard: shard as u64,
+            of: of as u64,
+            data_hash,
+            epoch,
+        }))
+    }
+
+    /// Start an **empty** staging server (`shard-serve --staging`): it
+    /// holds no dataset and answers every handshake/compute op with a
+    /// clean `staging` wire `Error` until a coordinator streams it a
+    /// row range (`TransferBegin`/`TransferRows`/`TransferCommit`,
+    /// driven by [`transfer_shard`]) whose fingerprint verifies at
+    /// commit — at which point it atomically becomes a normal serving
+    /// server at the transferred placement epoch. This is how `bmonn
+    /// reshard` grows a ring without restarting any process.
+    pub fn start_staging(addr: &str, kernel: KernelChoice,
+                         io_timeout: Option<Duration>)
+                         -> io::Result<ShardServer> {
+        Self::start_inner(addr, kernel, io_timeout, None)
+    }
+
+    fn start_inner(addr: &str, kernel: KernelChoice,
+                   io_timeout: Option<Duration>,
+                   serving: Option<ServingState>)
+                   -> io::Result<ShardServer> {
         kernels::resolve(kernel).map_err(|e| {
             io::Error::new(io::ErrorKind::InvalidInput, e)
         })?;
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let data_hash = wire::dataset_fingerprint(n_total, row_start,
-                                                  &local);
+        let cell = OnceLock::new();
+        if let Some(sv) = serving {
+            let _ = cell.set(sv);
+        }
         let shared = Arc::new(ShardShared {
-            local,
-            n_total,
-            row_start,
-            shard: shard as u64,
-            of: of as u64,
+            serving: cell,
+            staging: Mutex::new(None),
             kernel,
-            data_hash,
             io_timeout,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
@@ -245,16 +328,18 @@ impl ShardServer {
                                       kernel: KernelChoice)
                                       -> io::Result<ShardServer> {
         Self::start_shard_of_with_opts(addr, data, shard, n_shards,
-                                       kernel, Some(DEFAULT_IO_TIMEOUT))
+                                       kernel, Some(DEFAULT_IO_TIMEOUT),
+                                       0)
     }
 
     /// [`ShardServer::start_shard_of_with_kernel`] with an explicit
-    /// per-connection write timeout — see
+    /// per-connection write timeout and placement epoch — see
     /// [`ShardServer::start_with_opts`].
     pub fn start_shard_of_with_opts(addr: &str, data: &DenseDataset,
                                     shard: usize, n_shards: usize,
                                     kernel: KernelChoice,
-                                    io_timeout: Option<Duration>)
+                                    io_timeout: Option<Duration>,
+                                    epoch: u64)
                                     -> io::Result<ShardServer> {
         let (a, b) = shard_range(shard, data.n, n_shards);
         let mut rows = Vec::with_capacity((b - a) * data.d);
@@ -264,7 +349,7 @@ impl ShardServer {
         Self::start_with_opts(addr,
                               DenseDataset::new(b - a, data.d, rows),
                               data.n, a, shard, n_shards, kernel,
-                              io_timeout)
+                              io_timeout, epoch)
     }
 
     /// `host:port` string of the bound address.
@@ -456,22 +541,27 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
             match msg {
                 Message::Hello { wave_id, version } => {
                     let mut out = Vec::new();
-                    if version == wire::PROTOCOL_VERSION {
-                        wire::encode_hello_ack(
-                            &mut out,
-                            wave_id,
-                            wire::PROTOCOL_VERSION,
-                            shared.n_total as u64,
-                            shared.local.d as u64,
-                            shared.row_start as u64,
-                            (shared.row_start + shared.local.n) as u64,
-                            shared.data_hash,
-                        );
-                    } else {
+                    if version != wire::PROTOCOL_VERSION {
                         wire::encode_error(&mut out, wave_id, &format!(
                             "protocol version mismatch: client speaks \
                              v{version}, this server speaks v{}",
                             wire::PROTOCOL_VERSION));
+                    } else if let Some(sv) = shared.serving.get() {
+                        wire::encode_hello_ack(
+                            &mut out,
+                            wave_id,
+                            wire::PROTOCOL_VERSION,
+                            sv.n_total as u64,
+                            sv.local.d as u64,
+                            sv.row_start as u64,
+                            (sv.row_start + sv.local.n) as u64,
+                            sv.data_hash,
+                            sv.epoch,
+                        );
+                    } else {
+                        wire::encode_error(&mut out, wave_id,
+                            "staging: no dataset installed — this \
+                             server is awaiting a transfer");
                     }
                     write_locked(&writer, &out)?;
                 }
@@ -479,22 +569,66 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
                     // the health op: identity + load, computed without
                     // touching the compute path (safe to poll while
                     // waves are in flight)
-                    let live_conns =
-                        shared.conns.lock().unwrap().len() as u64;
                     let mut out = Vec::new();
-                    wire::encode_stats_reply(
-                        &mut out,
-                        wave_id,
-                        shared.shard,
-                        shared.of,
-                        shared.n_total as u64,
-                        shared.local.d as u64,
-                        shared.row_start as u64,
-                        (shared.row_start + shared.local.n) as u64,
-                        live_conns,
-                        shared.data_hash,
-                        shared.max_conn_waves.load(Ordering::SeqCst),
-                    );
+                    if let Some(sv) = shared.serving.get() {
+                        let live_conns =
+                            shared.conns.lock().unwrap().len() as u64;
+                        wire::encode_stats_reply(
+                            &mut out,
+                            wave_id,
+                            sv.shard,
+                            sv.of,
+                            sv.n_total as u64,
+                            sv.local.d as u64,
+                            sv.row_start as u64,
+                            (sv.row_start + sv.local.n) as u64,
+                            live_conns,
+                            sv.data_hash,
+                            shared.max_conn_waves.load(Ordering::SeqCst),
+                            sv.epoch,
+                        );
+                    } else {
+                        wire::encode_error(&mut out, wave_id,
+                            "staging: no dataset installed — this \
+                             server is awaiting a transfer");
+                    }
+                    write_locked(&writer, &out)?;
+                }
+                Message::TransferBegin { wave_id, shard, of, n_total, d,
+                                         row_start, row_end, epoch } => {
+                    // transfer ops run inline on the read loop: a
+                    // staging server has no compute traffic to starve,
+                    // and strict frame-order processing is exactly
+                    // what a streamed row range wants
+                    let mut out = Vec::new();
+                    match begin_transfer(&shared, shard, of, n_total, d,
+                                         row_start, row_end, epoch) {
+                        Ok(()) => wire::encode_ack(&mut out, wave_id),
+                        Err(e) => {
+                            wire::encode_error(&mut out, wave_id, &e)
+                        }
+                    }
+                    write_locked(&writer, &out)?;
+                }
+                Message::TransferRows { wave_id, row_offset, data } => {
+                    let mut out = Vec::new();
+                    match accept_transfer_rows(&shared, row_offset,
+                                               &data) {
+                        Ok(()) => wire::encode_ack(&mut out, wave_id),
+                        Err(e) => {
+                            wire::encode_error(&mut out, wave_id, &e)
+                        }
+                    }
+                    write_locked(&writer, &out)?;
+                }
+                Message::TransferCommit { wave_id, data_hash } => {
+                    let mut out = Vec::new();
+                    match commit_transfer(&shared, data_hash) {
+                        Ok(()) => wire::encode_ack(&mut out, wave_id),
+                        Err(e) => {
+                            wire::encode_error(&mut out, wave_id, &e)
+                        }
+                    }
                     write_locked(&writer, &out)?;
                 }
                 Message::Shutdown { wave_id } => {
@@ -573,17 +707,23 @@ fn serve_conn(mut stream: TcpStream, shared: Arc<ShardShared>)
 /// only and replaces the (possibly poisoned) scratch with a fresh one.
 fn compute_wave(sh: &ShardShared, msg: Message, scratch: &mut WaveScratch) {
     let wave_id = msg.wave_id();
+    let Some(sv) = sh.serving.get() else {
+        wire::encode_error(&mut scratch.out, wave_id,
+                           "staging: no dataset installed — this server \
+                            is awaiting a transfer");
+        return;
+    };
     let outcome = std::panic::catch_unwind(
         std::panic::AssertUnwindSafe(|| {
             let WaveScratch { engine, sums, sqs, out } = scratch;
             match msg {
                 Message::PartialSums { metric, query, rows, coord_ids,
                                        .. } => {
-                    match validate_and_rebase(sh, &query, &rows,
+                    match validate_and_rebase(sv, &query, &rows,
                                               Some(&coord_ids)) {
                         Err(e) => wire::encode_error(out, wave_id, &e),
                         Ok(local_rows) => {
-                            engine.partial_sums(&sh.local, &query,
+                            engine.partial_sums(&sv.local, &query,
                                                 &local_rows, &coord_ids,
                                                 metric, sums, sqs);
                             wire::encode_sums(out, wave_id, sums, sqs);
@@ -591,17 +731,17 @@ fn compute_wave(sh: &ShardShared, msg: Message, scratch: &mut WaveScratch) {
                     }
                 }
                 Message::ExactDists { metric, query, rows, .. } => {
-                    match validate_and_rebase(sh, &query, &rows, None) {
+                    match validate_and_rebase(sv, &query, &rows, None) {
                         Err(e) => wire::encode_error(out, wave_id, &e),
                         Ok(local_rows) => {
-                            engine.exact_dists(&sh.local, &query,
+                            engine.exact_dists(&sv.local, &query,
                                                &local_rows, metric, sums);
                             wire::encode_dists(out, wave_id, sums);
                         }
                     }
                 }
                 Message::PullBatch { metric, reqs, .. } => {
-                    match batch_compute(sh, engine, metric, &reqs, sums,
+                    match batch_compute(sv, engine, metric, &reqs, sums,
                                         sqs) {
                         Err(e) => wire::encode_error(out, wave_id, &e),
                         Ok(()) => {
@@ -622,7 +762,7 @@ fn compute_wave(sh: &ShardShared, msg: Message, scratch: &mut WaveScratch) {
 
 /// Check dims/coords and map global row ids onto this shard's local
 /// `[0, local.n)` range.
-fn validate_and_rebase(sh: &ShardShared, query: &[f32], rows: &[u32],
+fn validate_and_rebase(sh: &ServingState, query: &[f32], rows: &[u32],
                        coord_ids: Option<&[u32]>)
                        -> Result<Vec<u32>, String> {
     if query.len() != sh.local.d {
@@ -651,7 +791,7 @@ fn validate_and_rebase(sh: &ShardShared, query: &[f32], rows: &[u32],
 /// Rebase and resolve a `PullBatch` wave with one engine pass; outputs
 /// land in `sums`/`sqs` concatenated request-major, exactly as
 /// [`PullEngine::pull_batch`] specifies.
-fn batch_compute(sh: &ShardShared, engine: &mut NativeEngine,
+fn batch_compute(sh: &ServingState, engine: &mut NativeEngine,
                  metric: Metric, reqs: &[WireRequest], sums: &mut Vec<f64>,
                  sqs: &mut Vec<f64>) -> Result<(), String> {
     let mut flat: Vec<u32> = Vec::new();
@@ -674,6 +814,124 @@ fn batch_compute(sh: &ShardShared, engine: &mut NativeEngine,
         .collect();
     engine.pull_batch(&sh.local, &views, metric, sums, sqs);
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// staging-side transfer handlers
+// ---------------------------------------------------------------------
+
+/// Validate a `TransferBegin` against the canonical partition and open
+/// (or restart) the staging buffer. Only a staging server accepts it —
+/// a serving server's placement is immutable (a ring grows by starting
+/// fresh staging processes, never by overwriting live ones).
+#[allow(clippy::too_many_arguments)]
+fn begin_transfer(sh: &ShardShared, shard: u64, of: u64, n_total: u64,
+                  d: u64, row_start: u64, row_end: u64, epoch: u64)
+                  -> Result<(), String> {
+    if sh.serving.get().is_some() {
+        return Err("transfers are accepted only by a staging server \
+                    (shard-serve --staging); this server already serves \
+                    a dataset"
+            .into());
+    }
+    if n_total == 0 || d == 0 {
+        return Err(format!(
+            "transfer declares an empty dataset (n={n_total}, d={d})"));
+    }
+    if of == 0 || shard >= of {
+        return Err(format!("transfer declares shard {shard} of {of}"));
+    }
+    let (n_us, d_us) = (n_total as usize, d as usize);
+    let (a, b) = (row_start as usize, row_end as usize);
+    if b < a || b > n_us {
+        return Err(format!(
+            "transfer rows [{a}, {b}) are not a slice of n={n_total}"));
+    }
+    let (wa, wb) = shard_range(shard as usize, n_us, of as usize);
+    if (a, b) != (wa, wb) {
+        return Err(format!(
+            "transfer rows [{a}, {b}) but the {of}-way partition of \
+             n={n_total} assigns [{wa}, {wb}) to shard {shard}"));
+    }
+    let floats = (b - a).checked_mul(d_us).ok_or_else(|| {
+        format!("transfer of {} rows x {d} dims overflows", b - a)
+    })?;
+    // a fresh begin replaces any half-streamed transfer, so a
+    // coordinator that flapped mid-stream restarts cleanly instead of
+    // corrupting the buffer
+    *sh.staging.lock().unwrap() = Some(PendingTransfer {
+        shard,
+        of,
+        n_total: n_us,
+        d: d_us,
+        row_start: a,
+        row_end: b,
+        epoch,
+        rows: vec![0.0; floats],
+    });
+    Ok(())
+}
+
+/// Land one `TransferRows` chunk into the staging buffer at its
+/// declared row offset (relative to the transfer's `row_start`).
+fn accept_transfer_rows(sh: &ShardShared, row_offset: u64, data: &[f32])
+                        -> Result<(), String> {
+    let mut staging = sh.staging.lock().unwrap();
+    let Some(p) = staging.as_mut() else {
+        return Err(
+            "no transfer in progress — send transfer_begin first".into());
+    };
+    if data.len() % p.d != 0 {
+        return Err(format!(
+            "transfer chunk of {} floats is not whole rows of d={}",
+            data.len(), p.d));
+    }
+    let rows_in = data.len() / p.d;
+    let off = row_offset as usize;
+    let range = p.row_end - p.row_start;
+    if off > range || rows_in > range - off {
+        return Err(format!(
+            "transfer chunk rows [{off}, {}) overflow the declared \
+             range of {range} rows",
+            off.saturating_add(rows_in)));
+    }
+    p.rows[off * p.d..(off + rows_in) * p.d].copy_from_slice(data);
+    Ok(())
+}
+
+/// Verify the streamed bytes against the coordinator's fingerprint and
+/// install them as the serving state. The pending transfer is consumed
+/// either way — a failed commit requires a full restart, the only
+/// honest recovery from a diverged stream.
+fn commit_transfer(sh: &ShardShared, data_hash: u64)
+                   -> Result<(), String> {
+    let Some(p) = sh.staging.lock().unwrap().take() else {
+        return Err(
+            "no transfer in progress — send transfer_begin first".into());
+    };
+    let local = DenseDataset::new(p.row_end - p.row_start, p.d, p.rows);
+    let fp = wire::dataset_fingerprint(p.n_total, p.row_start, &local);
+    if fp != data_hash {
+        return Err(format!(
+            "transfer fingerprint mismatch: received rows hash \
+             {fp:#018x} but the coordinator sent {data_hash:#018x} — \
+             restart the transfer"));
+    }
+    sh.serving
+        .set(ServingState {
+            local,
+            n_total: p.n_total,
+            row_start: p.row_start,
+            shard: p.shard,
+            of: p.of,
+            data_hash: fp,
+            epoch: p.epoch,
+        })
+        .map_err(|_| {
+            "another transfer already installed a dataset on this \
+             server"
+                .to_string()
+        })
 }
 
 // ---------------------------------------------------------------------
@@ -706,6 +964,10 @@ pub struct EndpointStats {
     /// high-water mark of concurrently computing waves the server has
     /// seen on any single connection (the multiplexing witness)
     pub max_conn_waves: usize,
+    /// placement epoch the server carries — every endpoint of a
+    /// placement must agree on it, and `bmonn reshard` verifies the
+    /// new ring reports the new epoch before any traffic flips
+    pub epoch: u64,
 }
 
 /// Probe one endpoint with the wire `Stats` health op over a fresh
@@ -730,7 +992,7 @@ pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
     {
         Message::StatsReply {
             shard, of, n_total, d, row_start, row_end, live_conns,
-            data_hash, max_conn_waves, ..
+            data_hash, max_conn_waves, epoch, ..
         } => Ok(EndpointStats {
             shard: shard as usize,
             of: of as usize,
@@ -741,11 +1003,148 @@ pub fn endpoint_stats(endpoint: &str, timeout: Option<Duration>)
             live_conns: live_conns as usize,
             data_hash,
             max_conn_waves: max_conn_waves as usize,
+            epoch,
         }),
         Message::Error { msg, .. } => Err(format!("{endpoint}: {msg}")),
         other => Err(format!("{endpoint}: unexpected {} reply",
                              other.kind())),
     }
+}
+
+// ---------------------------------------------------------------------
+// transfer drivers (client side of the reshard op)
+// ---------------------------------------------------------------------
+
+/// Rows per `TransferRows` frame when streaming a shard to a staging
+/// server — small enough to keep every frame far under the decoder's
+/// frame cap for any sane dimension, large enough that per-frame
+/// round-trip overhead is noise.
+const TRANSFER_CHUNK_ROWS: usize = 512;
+
+/// One blocking transfer round-trip: write the staged frame, read the
+/// reply, demand the matching `Ack`.
+fn transfer_step(stream: &mut TcpStream, buf: &mut Vec<u8>,
+                 endpoint: &str, wid: u64, what: &str)
+                 -> Result<(), String> {
+    wire::write_frame(stream, buf)
+        .map_err(|e| format!("{endpoint}: {what} send failed: {e}"))?;
+    wire::read_frame(stream, buf)
+        .map_err(|e| format!("{endpoint}: {what} recv failed: {e}"))?;
+    match Message::decode(buf)
+        .map_err(|e| format!("{endpoint}: bad {what} reply: {e}"))?
+    {
+        Message::Ack { wave_id } if wave_id == wid => Ok(()),
+        Message::Error { msg, .. } => {
+            Err(format!("{endpoint}: {what} rejected: {msg}"))
+        }
+        other => Err(format!("{endpoint}: unexpected {} reply to {what}",
+                             other.kind())),
+    }
+}
+
+/// Stream shard `shard` of `n_shards` of `data` to the staging server
+/// at `endpoint` and commit it at placement `epoch`. The transfer is
+/// verified end to end with [`wire::dataset_fingerprint`]: the
+/// receiver recomputes the fingerprint over the bytes it actually
+/// landed and refuses the commit on any divergence (a missing or
+/// corrupted chunk can never install). Returns the fingerprint the
+/// installed server now serves. The target must be a staging server
+/// ([`ShardServer::start_staging`] / `shard-serve --staging`) — a
+/// serving server refuses `TransferBegin`.
+pub fn transfer_shard(endpoint: &str, data: &DenseDataset, shard: usize,
+                      n_shards: usize, epoch: u64,
+                      timeout: Option<Duration>) -> Result<u64, String> {
+    let (a, b) = shard_range(shard, data.n, n_shards);
+    let mut stream = connect_endpoint(endpoint, timeout)
+        .map_err(|e| format!("{endpoint}: connect failed: {e}"))?;
+    stream.set_nodelay(true).map_err(|e| format!("{endpoint}: {e}"))?;
+    stream
+        .set_read_timeout(timeout)
+        .map_err(|e| format!("{endpoint}: {e}"))?;
+    stream
+        .set_write_timeout(timeout)
+        .map_err(|e| format!("{endpoint}: {e}"))?;
+    let mut wid = 1u64;
+    let mut buf = Vec::new();
+    wire::encode_transfer_begin(&mut buf, wid, shard as u64,
+                                n_shards as u64, data.n as u64,
+                                data.d as u64, a as u64, b as u64,
+                                epoch);
+    transfer_step(&mut stream, &mut buf, endpoint, wid,
+                  "transfer_begin")?;
+    let mut r = a;
+    while r < b {
+        let r1 = (r + TRANSFER_CHUNK_ROWS).min(b);
+        wid += 1;
+        wire::encode_transfer_rows(&mut buf, wid, (r - a) as u64,
+                                   &data.raw()[r * data.d..r1 * data.d]);
+        transfer_step(&mut stream, &mut buf, endpoint, wid,
+                      "transfer_rows")?;
+        r = r1;
+    }
+    let local = DenseDataset::new(
+        b - a, data.d, data.raw()[a * data.d..b * data.d].to_vec());
+    let fp = wire::dataset_fingerprint(data.n, a, &local);
+    wid += 1;
+    wire::encode_transfer_commit(&mut buf, wid, fp);
+    transfer_step(&mut stream, &mut buf, endpoint, wid,
+                  "transfer_commit")?;
+    Ok(fp)
+}
+
+/// Populate a whole new placement: stream every shard of `data` to
+/// each of its replicas in `to` (all staging servers) at placement
+/// `epoch`, then verify the installed ring endpoint by endpoint with
+/// the `Stats` op — identity, row range, fingerprint and epoch must
+/// all check out before the caller flips any traffic onto it. Returns
+/// the per-shard fingerprints. Nothing here mutates existing servers,
+/// so on any failure the old placement simply keeps serving.
+pub fn reshard_to(data: &DenseDataset, to: &PlacementMap, epoch: u64,
+                  timeout: Option<Duration>)
+                  -> Result<Vec<u64>, String> {
+    let s = to.n_shards();
+    let mut fps = Vec::with_capacity(s);
+    for shard in 0..s {
+        let mut fp = None;
+        for ep in to.replicas(shard) {
+            let f = transfer_shard(ep, data, shard, s, epoch, timeout)?;
+            if let Some(f0) = fp {
+                debug_assert_eq!(f0, f, "one slice, one fingerprint");
+            }
+            fp = Some(f);
+        }
+        fps.push(fp.expect("PlacementMap rejects empty replica lists"));
+    }
+    for shard in 0..s {
+        let (wa, wb) = shard_range(shard, data.n, s);
+        for ep in to.replicas(shard) {
+            let st = endpoint_stats(ep, timeout)?;
+            if st.shard != shard
+                || st.of != s
+                || st.n_total != data.n
+                || (st.row_start, st.row_end) != (wa, wb)
+            {
+                return Err(format!(
+                    "{ep}: serves shard {}/{} rows [{}, {}) after the \
+                     transfer, expected shard {shard}/{s} rows \
+                     [{wa}, {wb})",
+                    st.shard, st.of, st.row_start, st.row_end));
+            }
+            if st.data_hash != fps[shard] {
+                return Err(format!(
+                    "{ep}: fingerprint {:#018x} after the transfer, \
+                     expected {:#018x}",
+                    st.data_hash, fps[shard]));
+            }
+            if st.epoch != epoch {
+                return Err(format!(
+                    "{ep}: placement epoch {} after the transfer, \
+                     expected {epoch}",
+                    st.epoch));
+            }
+        }
+    }
+    Ok(fps)
 }
 
 // ---------------------------------------------------------------------
@@ -873,6 +1272,13 @@ struct ShardState {
     /// ring-global (n, d), shared by every shard of the client — set by
     /// the first successful handshake anywhere in the ring
     shape: Arc<Mutex<Option<(usize, usize)>>>,
+    /// ring-global placement epoch, established exactly like `shape`:
+    /// adopted from the first successful handshake, then enforced on
+    /// every later one — endpoints of one placement must agree
+    ring_epoch: Arc<Mutex<Option<u64>>>,
+    /// refuse endpoints that are not at this exact placement epoch
+    /// ([`RemoteOptions::expect_epoch`])
+    expect_epoch: Option<u64>,
     next_wave: Arc<AtomicU64>,
     /// ring-wide high-water mark of concurrently pending sub-waves on
     /// any one connection (the client-side multiplexing witness)
@@ -961,13 +1367,16 @@ impl ShardState {
             .map_err(|e| format!("{ep}: handshake send failed: {e}"))?;
         wire::read_frame(&mut stream, &mut buf)
             .map_err(|e| format!("{ep}: handshake recv failed: {e}"))?;
-        let (version, n, d, a, b, hash) = match Message::decode(&buf)
-            .map_err(|e| format!("{ep}: bad handshake reply: {e}"))?
+        let (version, n, d, a, b, hash, epoch) =
+            match Message::decode(&buf)
+                .map_err(|e| format!("{ep}: bad handshake reply: {e}"))?
         {
             Message::HelloAck {
-                version, n_total, d, row_start, row_end, data_hash, ..
+                version, n_total, d, row_start, row_end, data_hash,
+                epoch, ..
             } => (version, n_total as usize, d as usize,
-                  row_start as usize, row_end as usize, data_hash),
+                  row_start as usize, row_end as usize, data_hash,
+                  epoch),
             Message::Error { msg, .. } => {
                 return Err(format!("{ep}: rejected the handshake: {msg}"))
             }
@@ -980,6 +1389,27 @@ impl ShardState {
             return Err(format!(
                 "{ep}: speaks wire protocol v{version}; this build speaks \
                  v{} — upgrade the peer", wire::PROTOCOL_VERSION));
+        }
+        if let Some(want) = self.expect_epoch {
+            if epoch != want {
+                return Err(format!(
+                    "{ep}: placement epoch {epoch} but the coordinator \
+                     expects epoch {want} — is this endpoint part of the \
+                     old placement?"));
+            }
+        }
+        {
+            let mut e = self.ring_epoch.lock().unwrap();
+            match *e {
+                Some(e0) if e0 != epoch => {
+                    return Err(format!(
+                        "{ep}: placement epoch {epoch} diverges from the \
+                         ring's established epoch {e0} — every endpoint \
+                         of a placement must carry one epoch"));
+                }
+                Some(_) => {}
+                None => *e = Some(epoch),
+            }
         }
         {
             let mut shape = self.shape.lock().unwrap();
@@ -1300,6 +1730,7 @@ pub struct RingClient {
     n_total: usize,
     d: usize,
     degraded: bool,
+    ring_epoch: Arc<Mutex<Option<u64>>>,
     next_wave: Arc<AtomicU64>,
     max_inflight: Arc<AtomicU64>,
     readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
@@ -1324,6 +1755,7 @@ impl RingClient {
                         -> Result<RingClient, String> {
         let s = placement.n_shards();
         let shape = Arc::new(Mutex::new(None));
+        let ring_epoch = Arc::new(Mutex::new(None));
         let next_wave = Arc::new(AtomicU64::new(1));
         let max_inflight = Arc::new(AtomicU64::new(0));
         let readers: Arc<Mutex<Vec<JoinHandle<()>>>> =
@@ -1340,6 +1772,8 @@ impl RingClient {
                 timeout: opts.timeout,
                 retry: opts.retry,
                 shape: shape.clone(),
+                ring_epoch: ring_epoch.clone(),
+                expect_epoch: opts.expect_epoch,
                 next_wave: next_wave.clone(),
                 max_inflight: max_inflight.clone(),
                 readers: readers.clone(),
@@ -1385,10 +1819,18 @@ impl RingClient {
             n_total,
             d,
             degraded: opts.degraded,
+            ring_epoch,
             next_wave,
             max_inflight,
             readers,
         })
+    }
+
+    /// The placement epoch this ring established at handshake (every
+    /// endpoint must agree on it; 0 when no handshake has succeeded
+    /// yet, which is also the epoch of a never-resharded ring).
+    pub fn epoch(&self) -> u64 {
+        self.ring_epoch.lock().unwrap().unwrap_or(0)
     }
 
     /// Number of logical shards in the ring.
@@ -1555,6 +1997,12 @@ pub struct RemoteOptions {
     pub degraded: bool,
     /// per-endpoint backoff schedule for the failover blacklist
     pub retry: RetryPolicy,
+    /// refuse endpoints whose handshake reports a different placement
+    /// epoch (`None` = adopt whatever single epoch the ring reports).
+    /// The reshard path connects the new ring with the new epoch
+    /// pinned, so a leftover old-placement endpoint can never sneak
+    /// into the new connection set.
+    pub expect_epoch: Option<u64>,
 }
 
 impl Default for RemoteOptions {
@@ -1563,6 +2011,7 @@ impl Default for RemoteOptions {
             timeout: Some(DEFAULT_IO_TIMEOUT),
             degraded: false,
             retry: RetryPolicy::default(),
+            expect_epoch: None,
         }
     }
 }
@@ -1930,11 +2379,13 @@ mod tests {
         wire::encode_hello(&mut buf, 5, wire::PROTOCOL_VERSION);
         match raw_round_trip(&mut stream, &buf) {
             Message::HelloAck { wave_id, version, n_total, d, row_start,
-                                row_end, data_hash } => {
+                                row_end, data_hash, epoch } => {
                 assert_eq!(wave_id, 5, "reply must echo the request tag");
                 assert_eq!(version, wire::PROTOCOL_VERSION);
                 assert_eq!((n_total, d), (10, 8));
                 assert_eq!((row_start, row_end), (5, 10));
+                assert_eq!(epoch, 0,
+                           "a never-resharded server serves epoch 0");
                 // fingerprint matches a local recomputation of the slice
                 let (a, b) = shard_range(1, ds.n, 2);
                 let mut rows = Vec::new();
@@ -2005,6 +2456,173 @@ mod tests {
             &[ep], Some(Duration::from_secs(5))).unwrap_err();
         assert!(err.contains("version mismatch"), "got: {err}");
         h.join().unwrap();
+    }
+
+    #[test]
+    fn v2_clients_get_a_clean_version_error_in_v2_framing() {
+        // a v2 client's Hello is byte-identical to a v3 one except for
+        // the version field, and the Error frame the gate answers with
+        // kept its v2 opcode and layout — so the old client decodes a
+        // clean version error in its own framing, mirroring the v1
+        // rejection path one protocol generation later
+        let ds = synthetic::gaussian_iid(6, 4, 2);
+        let srv = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 1)
+            .unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        let mut buf = Vec::new();
+        wire::encode_hello(&mut buf, 3, 2);
+        match raw_round_trip(&mut stream, &buf) {
+            Message::Error { wave_id, msg } => {
+                assert_eq!(wave_id, 3, "error must carry the wave tag \
+                                        a v2 peer demultiplexes on");
+                assert!(msg.contains("version mismatch"), "got: {msg}");
+                assert!(msg.contains("v3"), "got: {msg}");
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn client_rejects_v2_servers_with_a_version_error() {
+        // a fake v2 server: answers the handshake with a retired-opcode
+        // (102) HelloAck in the old epochless layout — exactly what a
+        // real PR 5–8 server sends. The v3 client must refuse it with
+        // a version error, not misparse the epochless payload.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = Vec::new();
+            wire::read_frame(&mut s, &mut buf).unwrap();
+            let wid = wire::peek_wave_id(&buf);
+            let mut out = vec![102u8];
+            for v in [wid, 2, 8, 4, 0, 8] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&0xfeedu64.to_le_bytes());
+            wire::write_frame(&mut s, &out).unwrap();
+        });
+        let err = RemoteEngine::connect_with_timeout(
+            &[ep], Some(Duration::from_secs(5))).unwrap_err();
+        assert!(err.contains("version mismatch"), "got: {err}");
+        assert!(err.contains("v2"), "got: {err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn staging_transfer_installs_a_fingerprint_verified_server() {
+        let ds = synthetic::gaussian_iid(20, 6, 9);
+        let t = Some(Duration::from_secs(5));
+        let stg = ShardServer::start_staging("127.0.0.1:0",
+                                             KernelChoice::Auto, t)
+            .unwrap();
+        let ep = stg.endpoint();
+        // before the transfer: probes answer a clean staging error,
+        // never a hang or a crash
+        let err = endpoint_stats(&ep, t).unwrap_err();
+        assert!(err.contains("staging"), "got: {err}");
+        // rows must be preceded by a begin
+        {
+            let mut stream = TcpStream::connect(stg.addr).unwrap();
+            let mut buf = Vec::new();
+            wire::encode_transfer_rows(&mut buf, 1, 0, &[1.0; 6]);
+            match raw_round_trip(&mut stream, &buf) {
+                Message::Error { msg, .. } => {
+                    assert!(msg.contains("transfer_begin"), "got: {msg}")
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+            // a begin that contradicts the canonical partition is
+            // refused too
+            wire::encode_transfer_begin(&mut buf, 2, 1, 2, 20, 6, 0, 10,
+                                        7);
+            match raw_round_trip(&mut stream, &buf) {
+                Message::Error { msg, .. } => {
+                    assert!(msg.contains("partition"), "got: {msg}")
+                }
+                other => panic!("unexpected {}", other.kind()),
+            }
+        }
+        // the real transfer: shard 1 of 2 at epoch 7
+        let fp = transfer_shard(&ep, &ds, 1, 2, 7, t).unwrap();
+        let st = endpoint_stats(&ep, t).unwrap();
+        assert_eq!((st.shard, st.of), (1, 2));
+        assert_eq!((st.row_start, st.row_end), shard_range(1, 20, 2));
+        assert_eq!(st.data_hash, fp);
+        assert_eq!(st.epoch, 7);
+        // the installed placement is immutable — a second transfer is
+        // refused like on any serving server
+        let err = transfer_shard(&ep, &ds, 1, 2, 8, t).unwrap_err();
+        assert!(err.contains("staging server"), "got: {err}");
+        drop(stg);
+    }
+
+    #[test]
+    fn reshard_to_populates_a_ring_that_matches_solo_bitwise() {
+        let ds = synthetic::gaussian_iid(24, 8, 13);
+        let t = Some(Duration::from_secs(5));
+        let stg: Vec<ShardServer> = (0..2)
+            .map(|_| {
+                ShardServer::start_staging("127.0.0.1:0",
+                                           KernelChoice::Auto, t)
+                    .unwrap()
+            })
+            .collect();
+        let eps: Vec<String> =
+            stg.iter().map(|s| s.endpoint()).collect();
+        let placement = PlacementMap::parse(&eps).unwrap();
+        let fps = reshard_to(&ds, &placement, 3, t).unwrap();
+        assert_eq!(fps.len(), 2);
+        // connect with the new epoch pinned: waves match solo bitwise
+        let client = Arc::new(RingClient::connect_opts(
+            &placement,
+            RemoteOptions { timeout: t,
+                            expect_epoch: Some(3),
+                            ..RemoteOptions::default() })
+            .unwrap());
+        assert_eq!(client.epoch(), 3);
+        let mut eng = RemoteEngine::from_client(client);
+        let q = ds.row_vec(0);
+        let rows: Vec<u32> = (0..24).collect();
+        let (mut s, mut sq) = (Vec::new(), Vec::new());
+        eng.partial_sums(&ds, &q, &rows, &[0, 3], Metric::L2Sq, &mut s,
+                         &mut sq);
+        let mut solo = NativeEngine::default();
+        let (mut ws, mut wq) = (Vec::new(), Vec::new());
+        solo.partial_sums(&ds, &q, &rows, &[0, 3], Metric::L2Sq,
+                          &mut ws, &mut wq);
+        assert_eq!(s, ws);
+        assert_eq!(sq, wq);
+        // pinning the wrong epoch refuses the ring
+        let err = RingClient::connect_opts(
+            &placement,
+            RemoteOptions { timeout: t,
+                            expect_epoch: Some(2),
+                            ..RemoteOptions::default() })
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.contains("expects epoch 2"), "got: {err}");
+    }
+
+    #[test]
+    fn mixed_epoch_rings_are_refused() {
+        // shard 0 at epoch 0 (plain startup), shard 1 at epoch 5 (via
+        // transfer): one placement, two epochs — the client must refuse
+        // rather than serve a placement that is half old, half new
+        let ds = synthetic::gaussian_iid(10, 4, 21);
+        let t = Some(Duration::from_secs(5));
+        let s0 = ShardServer::start_shard_of("127.0.0.1:0", &ds, 0, 2)
+            .unwrap();
+        let stg = ShardServer::start_staging("127.0.0.1:0",
+                                             KernelChoice::Auto, t)
+            .unwrap();
+        transfer_shard(&stg.endpoint(), &ds, 1, 2, 5, t).unwrap();
+        let eps = vec![s0.endpoint(), stg.endpoint()];
+        let err = RemoteEngine::connect_with_timeout(&eps, t)
+            .map(|_| ())
+            .unwrap_err();
+        assert!(err.contains("epoch"), "got: {err}");
+        assert!(err.contains("diverges"), "got: {err}");
     }
 
     #[test]

@@ -1,8 +1,11 @@
-//! Length-prefixed binary wire protocol, **version 2**: every frame is
+//! Length-prefixed binary wire protocol, **version 3**: every frame is
 //! tagged with a `wave_id`, which is what lets one connection carry many
 //! concurrent waves (`runtime::remote::RingClient` multiplexes sub-waves
 //! from many callers onto one connection per shard and demultiplexes the
-//! replies by tag — replies may arrive in any order).
+//! replies by tag — replies may arrive in any order), and every
+//! handshake/health reply is stamped with the serving **placement
+//! epoch** so a coordinator can prove which placement generation an
+//! endpoint belongs to while the ring is resharded live.
 //!
 //! Framing: every message travels as `u32 payload_len (LE) | payload`,
 //! where `payload[0]` is an opcode byte, `payload[1..9]` is the frame's
@@ -15,17 +18,31 @@
 //! strict prefix of a valid payload fails to decode).
 //!
 //! **Version negotiation.** v1 (PR 3/4) frames were untagged and used
-//! opcodes 1–12; v2 frames use opcodes 101–112 and begin with the wave
-//! tag. A v2 decoder recognizes a v1 opcode and rejects it with a clean
-//! *version* error ([`Message::decode`], [`is_legacy_frame`]); a v2
-//! server answers a v1 frame with a **v1-framed** `Error`
-//! ([`encode_legacy_error`]) so an old client reads a clean protocol
-//! error instead of hanging or crashing on bytes it cannot parse. A v2
-//! client talking to a v1 server receives a v1 `Error { "unknown opcode
-//! …" }` reply, which its decoder likewise reports as a version
-//! mismatch. The `Hello`/`HelloAck` handshake additionally carries an
-//! explicit [`PROTOCOL_VERSION`] so future revisions can negotiate past
-//! the opcode split.
+//! opcodes 1–12; v2 (PR 5) frames use opcodes 101–112 and begin with
+//! the wave tag. A v3 decoder recognizes a v1 opcode and rejects it
+//! with a clean *version* error ([`Message::decode`],
+//! [`is_legacy_frame`]); a v3 server answers a v1 frame with a
+//! **v1-framed** `Error` ([`encode_legacy_error`]) so an old client
+//! reads a clean protocol error instead of hanging or crashing on bytes
+//! it cannot parse. A client talking to a v1 server receives a v1
+//! `Error { "unknown opcode …" }` reply, which its decoder likewise
+//! reports as a version mismatch.
+//!
+//! v3 negotiates with the explicit version field the v2 handshake
+//! introduced for exactly this purpose: `Hello` keeps opcode 101 and
+//! its layout, and every message whose layout is unchanged keeps its
+//! v2 opcode. The two messages that *grew* — `HelloAck` and
+//! `StatsReply` now carry the placement epoch — moved to fresh opcodes
+//! (113/114; layouts never change under an existing opcode), their
+//! retired v2 opcodes (102/112) are rejected with an explicit
+//! version-mismatch error, and the transfer ops (115–117) are new. The
+//! negotiation is therefore symmetric and clean in both directions: a
+//! v2 **client** sends `Hello { version: 2 }`, which a v3 server
+//! rejects with a tagged `Error` naming both versions — in framing a
+//! v2 peer parses, since the `Error` layout is identical across
+//! v2/v3; a v3 **client** announcing `version: 3` to a v2 server gets
+//! the same mismatch `Error` back from the v2 version gate and refuses
+//! the endpoint with an upgrade message.
 //!
 //! Requests (coordinator → shard server):
 //! * `Hello` — handshake; carries the client's protocol version. The
@@ -46,9 +63,19 @@
 //!   local row range and rejects anything outside it. A server may
 //!   compute several tagged waves of one connection concurrently and
 //!   answer them out of submission order.
+//! * `TransferBegin` / `TransferRows` / `TransferCommit` — the reshard
+//!   stream (v3): a coordinator announces a shard assignment to a
+//!   **staging** server (one started without a dataset), streams the
+//!   row range to it in chunks, and commits with the expected
+//!   [`dataset_fingerprint`] — the server recomputes the fingerprint
+//!   over the bytes it actually received and installs the dataset only
+//!   on a match, answering `Ack` (or `Error` on mismatch, so a corrupt
+//!   transfer can never start serving). Servers already serving a
+//!   dataset answer transfer requests with `Error`.
 //! * `Shutdown` — acked with [`Message::Ack`], then the server exits.
 //!
-//! Replies (shard server → coordinator): `HelloAck`, `StatsReply`,
+//! Replies (shard server → coordinator): `HelloAck`, `StatsReply`
+//! (both stamped with the serving placement epoch),
 //! `Sums { sum, sq }` (for `PartialSums` and `PullBatch`, concatenated
 //! request-major), `Dists { vals }`, `Error { msg }`, `Ack` — each
 //! tagged with the request's wave id.
@@ -73,8 +100,10 @@ use crate::coordinator::arms::PullRequest;
 use crate::data::dense::{DenseDataset, Metric};
 
 /// Wire protocol revision this build speaks. v1 frames (untagged,
-/// opcodes 1–12) are recognized and rejected with a clean version error.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// opcodes 1–12) and the retired v2 reply opcodes (102/112 — their
+/// layouts grew an epoch field and moved to 113/114) are recognized and
+/// rejected with a clean version error.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// Hard cap on a single frame's payload (1 GiB). A real wave is far
 /// smaller (a 4M-job reply is ~64 MiB); a length header beyond this is a
@@ -86,8 +115,13 @@ const V1_OP_MIN: u8 = 1;
 const V1_OP_MAX: u8 = 12;
 const V1_OP_ERROR: u8 = 8;
 
+// Retired v2 reply opcodes. Their messages gained an epoch field in
+// v3, and a changed layout always moves to a fresh opcode — these are
+// recognized only to produce clean version errors, never reused.
+const V2_OP_HELLO_ACK: u8 = 102;
+const V2_OP_STATS_REPLY: u8 = 112;
+
 const OP_HELLO: u8 = 101;
-const OP_HELLO_ACK: u8 = 102;
 const OP_PARTIAL_SUMS: u8 = 103;
 const OP_EXACT_DISTS: u8 = 104;
 const OP_PULL_BATCH: u8 = 105;
@@ -97,7 +131,11 @@ const OP_ERROR: u8 = 108;
 const OP_SHUTDOWN: u8 = 109;
 const OP_ACK: u8 = 110;
 const OP_STATS: u8 = 111;
-const OP_STATS_REPLY: u8 = 112;
+const OP_HELLO_ACK: u8 = 113;
+const OP_STATS_REPLY: u8 = 114;
+const OP_TRANSFER_BEGIN: u8 = 115;
+const OP_TRANSFER_ROWS: u8 = 116;
+const OP_TRANSFER_COMMIT: u8 = 117;
 
 fn metric_code(m: Metric) -> u8 {
     match m {
@@ -231,11 +269,12 @@ pub fn encode_hello(out: &mut Vec<u8>, wave_id: u64, version: u32) {
 }
 
 /// Encode the `HelloAck` handshake reply: server protocol version,
-/// global dataset shape, the owned row range `[row_start, row_end)` and
-/// the server's dataset fingerprint.
+/// global dataset shape, the owned row range `[row_start, row_end)`,
+/// the server's dataset fingerprint and the placement epoch it serves.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_hello_ack(out: &mut Vec<u8>, wave_id: u64, version: u32,
                         n_total: u64, d: u64, row_start: u64, row_end: u64,
-                        data_hash: u64) {
+                        data_hash: u64, epoch: u64) {
     put_head(out, OP_HELLO_ACK, wave_id);
     put_u32(out, version);
     put_u64(out, n_total);
@@ -243,6 +282,7 @@ pub fn encode_hello_ack(out: &mut Vec<u8>, wave_id: u64, version: u32,
     put_u64(out, row_start);
     put_u64(out, row_end);
     put_u64(out, data_hash);
+    put_u64(out, epoch);
 }
 
 /// Encode a `Stats` health request (no body beyond the tag).
@@ -252,12 +292,14 @@ pub fn encode_stats(out: &mut Vec<u8>, wave_id: u64) {
 
 /// Encode a `StatsReply`: shard identity (`shard` of `of`), dataset
 /// shape, owned row range, the server's live-connection count, its
-/// dataset fingerprint, and the high-water mark of concurrent waves it
-/// has computed on a single connection.
+/// dataset fingerprint, the high-water mark of concurrent waves it
+/// has computed on a single connection, and the placement epoch it
+/// serves.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_stats_reply(out: &mut Vec<u8>, wave_id: u64, shard: u64,
                           of: u64, n_total: u64, d: u64, row_start: u64,
                           row_end: u64, live_conns: u64, data_hash: u64,
-                          max_conn_waves: u64) {
+                          max_conn_waves: u64, epoch: u64) {
     put_head(out, OP_STATS_REPLY, wave_id);
     put_u64(out, shard);
     put_u64(out, of);
@@ -268,6 +310,51 @@ pub fn encode_stats_reply(out: &mut Vec<u8>, wave_id: u64, shard: u64,
     put_u64(out, live_conns);
     put_u64(out, data_hash);
     put_u64(out, max_conn_waves);
+    put_u64(out, epoch);
+}
+
+/// Encode a `TransferBegin` request: the shard assignment the streamed
+/// rows are for — identity `shard` of `of`, global dataset shape, the
+/// row range about to be streamed (which must be exactly the
+/// floor-boundary range of that shard), and the placement epoch the
+/// target will serve once committed. A fresh `TransferBegin` replaces
+/// any half-streamed transfer on the target, so a flapped stream is
+/// restarted from scratch, never resumed into a corrupt buffer.
+#[allow(clippy::too_many_arguments)]
+pub fn encode_transfer_begin(out: &mut Vec<u8>, wave_id: u64, shard: u64,
+                             of: u64, n_total: u64, d: u64, row_start: u64,
+                             row_end: u64, epoch: u64) {
+    put_head(out, OP_TRANSFER_BEGIN, wave_id);
+    put_u64(out, shard);
+    put_u64(out, of);
+    put_u64(out, n_total);
+    put_u64(out, d);
+    put_u64(out, row_start);
+    put_u64(out, row_end);
+    put_u64(out, epoch);
+}
+
+/// Encode a `TransferRows` chunk: `row_offset` rows into the announced
+/// range, then the chunk's f32 values (whole rows; `data.len()` must be
+/// a multiple of the announced `d`). Floats cross by bit pattern like
+/// every other frame — the installed dataset fingerprints identically
+/// to the source.
+pub fn encode_transfer_rows(out: &mut Vec<u8>, wave_id: u64,
+                            row_offset: u64, data: &[f32]) {
+    put_head(out, OP_TRANSFER_ROWS, wave_id);
+    put_u64(out, row_offset);
+    put_f32s(out, data);
+}
+
+/// Encode a `TransferCommit` request carrying the sender's
+/// [`dataset_fingerprint`] of the streamed range. The target recomputes
+/// the fingerprint over what it received and installs the dataset only
+/// on a match (`Ack`); a mismatch answers `Error` and discards the
+/// staged rows.
+pub fn encode_transfer_commit(out: &mut Vec<u8>, wave_id: u64,
+                              data_hash: u64) {
+    put_head(out, OP_TRANSFER_COMMIT, wave_id);
+    put_u64(out, data_hash);
 }
 
 /// Encode a `PartialSums` wave request from borrowed slices (rows are
@@ -381,7 +468,7 @@ pub enum Message {
     /// Handshake request: the client's protocol version.
     Hello { wave_id: u64, version: u32 },
     /// Handshake reply: server version, dataset shape, owned row range,
-    /// dataset fingerprint.
+    /// dataset fingerprint, serving placement epoch.
     HelloAck {
         wave_id: u64,
         version: u32,
@@ -390,6 +477,7 @@ pub enum Message {
         row_start: u64,
         row_end: u64,
         data_hash: u64,
+        epoch: u64,
     },
     /// Single-query partial-moment wave (global row ids).
     PartialSums {
@@ -422,7 +510,8 @@ pub enum Message {
     /// Health request (no body).
     Stats { wave_id: u64 },
     /// Health reply: shard identity, shape, row range, connection
-    /// count, dataset fingerprint, per-connection wave high-water mark.
+    /// count, dataset fingerprint, per-connection wave high-water mark,
+    /// serving placement epoch.
     StatsReply {
         wave_id: u64,
         shard: u64,
@@ -434,7 +523,27 @@ pub enum Message {
         live_conns: u64,
         data_hash: u64,
         max_conn_waves: u64,
+        epoch: u64,
     },
+    /// Reshard stream announcement: the shard assignment (identity,
+    /// shape, row range, target epoch) the following `TransferRows`
+    /// chunks belong to. Replaces any pending transfer on the target.
+    TransferBegin {
+        wave_id: u64,
+        shard: u64,
+        of: u64,
+        n_total: u64,
+        d: u64,
+        row_start: u64,
+        row_end: u64,
+        epoch: u64,
+    },
+    /// One chunk of streamed rows at `row_offset` rows into the
+    /// announced range (whole rows; length a multiple of `d`).
+    TransferRows { wave_id: u64, row_offset: u64, data: Vec<f32> },
+    /// Commit request: the sender's fingerprint of the streamed range.
+    /// The target verifies and installs (`Ack`) or rejects (`Error`).
+    TransferCommit { wave_id: u64, data_hash: u64 },
 }
 
 struct Cur<'a> {
@@ -526,6 +635,9 @@ impl Message {
             Message::Ack { .. } => "ack",
             Message::Stats { .. } => "stats",
             Message::StatsReply { .. } => "stats_reply",
+            Message::TransferBegin { .. } => "transfer_begin",
+            Message::TransferRows { .. } => "transfer_rows",
+            Message::TransferCommit { .. } => "transfer_commit",
         }
     }
 
@@ -544,7 +656,10 @@ impl Message {
             | Message::Shutdown { wave_id }
             | Message::Ack { wave_id }
             | Message::Stats { wave_id }
-            | Message::StatsReply { wave_id, .. } => *wave_id,
+            | Message::StatsReply { wave_id, .. }
+            | Message::TransferBegin { wave_id, .. }
+            | Message::TransferRows { wave_id, .. }
+            | Message::TransferCommit { wave_id, .. } => *wave_id,
         }
     }
 
@@ -557,8 +672,9 @@ impl Message {
             }
             Message::HelloAck {
                 wave_id, version, n_total, d, row_start, row_end, data_hash,
+                epoch,
             } => encode_hello_ack(out, *wave_id, *version, *n_total, *d,
-                                  *row_start, *row_end, *data_hash),
+                                  *row_start, *row_end, *data_hash, *epoch),
             Message::PartialSums { wave_id, metric, query, rows,
                                    coord_ids } => {
                 encode_partial_sums(out, *wave_id, *metric, query, rows,
@@ -592,17 +708,27 @@ impl Message {
             Message::Stats { wave_id } => encode_stats(out, *wave_id),
             Message::StatsReply {
                 wave_id, shard, of, n_total, d, row_start, row_end,
-                live_conns, data_hash, max_conn_waves,
+                live_conns, data_hash, max_conn_waves, epoch,
             } => encode_stats_reply(out, *wave_id, *shard, *of, *n_total,
                                     *d, *row_start, *row_end, *live_conns,
-                                    *data_hash, *max_conn_waves),
+                                    *data_hash, *max_conn_waves, *epoch),
+            Message::TransferBegin {
+                wave_id, shard, of, n_total, d, row_start, row_end, epoch,
+            } => encode_transfer_begin(out, *wave_id, *shard, *of, *n_total,
+                                       *d, *row_start, *row_end, *epoch),
+            Message::TransferRows { wave_id, row_offset, data } => {
+                encode_transfer_rows(out, *wave_id, *row_offset, data)
+            }
+            Message::TransferCommit { wave_id, data_hash } => {
+                encode_transfer_commit(out, *wave_id, *data_hash)
+            }
         }
     }
 
     /// Decode one payload. Rejects truncation, trailing bytes, unknown
-    /// opcodes, bad metric codes and v1 (untagged) frames — the latter
-    /// with an explicit version-mismatch error; never panics on
-    /// malformed input.
+    /// opcodes, bad metric codes, v1 (untagged) frames and retired v2
+    /// reply opcodes — the version'd rejections with an explicit
+    /// version-mismatch error; never panics on malformed input.
     pub fn decode(payload: &[u8]) -> Result<Message, String> {
         let mut c = Cur { b: payload, pos: 0 };
         let op = c.u8().map_err(|_| "empty frame".to_string())?;
@@ -612,6 +738,13 @@ impl Message {
                  frame, opcode {op}; this build speaks wire protocol \
                  v{PROTOCOL_VERSION} (wave-tagged frames) — upgrade the \
                  peer"));
+        }
+        if op == V2_OP_HELLO_ACK || op == V2_OP_STATS_REPLY {
+            return Err(format!(
+                "protocol version mismatch: peer sent retired v2 opcode \
+                 {op} (its layout gained a placement epoch in v3); this \
+                 build speaks wire protocol v{PROTOCOL_VERSION} — \
+                 upgrade the peer"));
         }
         let wave_id = c.u64()?;
         let msg = match op {
@@ -624,6 +757,7 @@ impl Message {
                 row_start: c.u64()?,
                 row_end: c.u64()?,
                 data_hash: c.u64()?,
+                epoch: c.u64()?,
             },
             OP_PARTIAL_SUMS => {
                 let metric = metric_from(c.u8()?)?;
@@ -694,6 +828,29 @@ impl Message {
                 live_conns: c.u64()?,
                 data_hash: c.u64()?,
                 max_conn_waves: c.u64()?,
+                epoch: c.u64()?,
+            },
+            OP_TRANSFER_BEGIN => Message::TransferBegin {
+                wave_id,
+                shard: c.u64()?,
+                of: c.u64()?,
+                n_total: c.u64()?,
+                d: c.u64()?,
+                row_start: c.u64()?,
+                row_end: c.u64()?,
+                epoch: c.u64()?,
+            },
+            OP_TRANSFER_ROWS => Message::TransferRows {
+                wave_id,
+                row_offset: c.u64()?,
+                // f32s() pays allocation only as received bytes justify
+                // it (`take` bounds the count), same as every other
+                // vector field — a forged chunk count cannot allocate
+                data: c.f32s()?,
+            },
+            OP_TRANSFER_COMMIT => Message::TransferCommit {
+                wave_id,
+                data_hash: c.u64()?,
             },
             x => return Err(format!("unknown opcode {x}")),
         };
@@ -781,7 +938,7 @@ mod tests {
 
     fn arb_msg(rng: &mut Rng) -> Message {
         let wave_id = rng.next_u64();
-        match rng.below(12) {
+        match rng.below(15) {
             10 => Message::Stats { wave_id },
             11 => Message::StatsReply {
                 wave_id,
@@ -794,6 +951,26 @@ mod tests {
                 live_conns: rng.next_u64(),
                 data_hash: rng.next_u64(),
                 max_conn_waves: rng.next_u64(),
+                epoch: rng.next_u64(),
+            },
+            12 => Message::TransferBegin {
+                wave_id,
+                shard: rng.next_u64(),
+                of: rng.next_u64(),
+                n_total: rng.next_u64(),
+                d: rng.next_u64(),
+                row_start: rng.next_u64(),
+                row_end: rng.next_u64(),
+                epoch: rng.next_u64(),
+            },
+            13 => Message::TransferRows {
+                wave_id,
+                row_offset: rng.next_u64(),
+                data: arb_f32s(rng),
+            },
+            14 => Message::TransferCommit {
+                wave_id,
+                data_hash: rng.next_u64(),
             },
             0 => Message::Hello { wave_id,
                                   version: rng.below(1 << 30) as u32 },
@@ -805,6 +982,7 @@ mod tests {
                 row_start: rng.next_u64(),
                 row_end: rng.next_u64(),
                 data_hash: rng.next_u64(),
+                epoch: rng.next_u64(),
             },
             2 => Message::PartialSums {
                 wave_id,
@@ -973,6 +1151,79 @@ mod tests {
         // and a v2 decoder reports it as a version mismatch too
         assert!(Message::decode(&out).unwrap_err()
                 .contains("version mismatch"));
+    }
+
+    #[test]
+    fn retired_v2_frames_are_rejected_with_a_version_error() {
+        // the two v2 reply opcodes whose layouts grew an epoch field:
+        // their old opcodes must answer an explicit version mismatch —
+        // not "unknown opcode", and crucially not "truncated frame"
+        // (the check runs before the wave-tag parse, so even a bare
+        // opcode byte from a confused v2 peer names the real problem)
+        for op in [102u8, 112] {
+            for frame in [vec![op], {
+                let mut f = vec![op];
+                f.extend_from_slice(&7u64.to_le_bytes());
+                f.extend_from_slice(&[0u8; 48]);
+                f
+            }] {
+                let err = Message::decode(&frame).unwrap_err();
+                assert!(err.contains("version mismatch"),
+                        "op {op}: got '{err}'");
+                assert!(err.contains("v2"), "op {op}: got '{err}'");
+            }
+        }
+        // the v3 replacements decode fine (not caught by the check)
+        let mut buf = Vec::new();
+        encode_hello_ack(&mut buf, 1, PROTOCOL_VERSION, 10, 4, 0, 5, 9, 2);
+        match Message::decode(&buf).unwrap() {
+            Message::HelloAck { epoch, .. } => assert_eq!(epoch, 2),
+            other => panic!("unexpected {}", other.kind()),
+        }
+        encode_stats_reply(&mut buf, 1, 0, 2, 10, 4, 0, 5, 1, 9, 3, 7);
+        match Message::decode(&buf).unwrap() {
+            Message::StatsReply { epoch, .. } => assert_eq!(epoch, 7),
+            other => panic!("unexpected {}", other.kind()),
+        }
+        // retired opcodes are not "legacy" (v1) frames — the v1 error
+        // framing is reserved for actual v1 peers
+        assert!(!is_legacy_frame(&[102]));
+        assert!(!is_legacy_frame(&[112]));
+    }
+
+    #[test]
+    fn transfer_stream_roundtrips_with_exact_float_bits() {
+        // the reshard stream moves dataset bytes; like Dists, odd f32
+        // bit patterns must survive exactly or the fingerprint check
+        // at commit would reject a correct transfer
+        let vals = vec![-0.0f32, f32::INFINITY, 1e-42, -3.5];
+        let mut buf = Vec::new();
+        encode_transfer_rows(&mut buf, 9, 128, &vals);
+        match Message::decode(&buf).unwrap() {
+            Message::TransferRows { wave_id, row_offset, data } => {
+                assert_eq!((wave_id, row_offset), (9, 128));
+                for (a, b) in vals.iter().zip(&data) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        encode_transfer_begin(&mut buf, 5, 3, 4, 100, 16, 75, 100, 2);
+        match Message::decode(&buf).unwrap() {
+            Message::TransferBegin { shard, of, row_start, row_end,
+                                     epoch, .. } => {
+                assert_eq!((shard, of), (3, 4));
+                assert_eq!((row_start, row_end, epoch), (75, 100, 2));
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
+        encode_transfer_commit(&mut buf, 11, 0xfeed);
+        match Message::decode(&buf).unwrap() {
+            Message::TransferCommit { wave_id, data_hash } => {
+                assert_eq!((wave_id, data_hash), (11, 0xfeed));
+            }
+            other => panic!("unexpected {}", other.kind()),
+        }
     }
 
     #[test]

@@ -16,6 +16,12 @@
 //!  * A partition scripted to heal at a fault epoch
 //!    (`partition_until_epoch` + `advance_epoch`) must leave the ring
 //!    bitwise-identical to solo again once healed.
+//!  * Resharding mid-partition: while a shard of the old placement is
+//!    partitioned (degraded coverage is the fallback), a transfer onto
+//!    flapping staging targets fails cleanly without touching the old
+//!    placement, a transfer onto healthy targets completes while the
+//!    partition heals via `advance_epoch`, and the flip onto the new
+//!    placement epoch is bitwise-identical to solo.
 //!
 //! Every random choice — the fault schedule and the query rng — derives
 //! from a seed, so a failure reproduces exactly. CI sweeps a fixed seed
@@ -31,10 +37,12 @@ use bmonn::data::{synthetic, DenseDataset, Metric};
 use bmonn::metrics::Counter;
 use bmonn::runtime::fault::{Dir, FaultAction, FaultPlan, FaultProxy,
                             FaultRule};
+use bmonn::runtime::kernels::KernelChoice;
 use bmonn::runtime::native::NativeEngine;
 use bmonn::runtime::placement::{PlacementMap, RetryPolicy};
-use bmonn::runtime::remote::{spawn_loopback_ring, RemoteEngine,
-                             RemoteOptions};
+use bmonn::runtime::remote::{reshard_to, spawn_loopback_ring,
+                             RemoteEngine, RemoteOptions, RingClient,
+                             ShardServer};
 use bmonn::runtime::wire::is_deadline_error;
 use bmonn::util::rng::Rng;
 
@@ -58,6 +66,7 @@ fn fast_opts(degraded: bool, timeout: Duration) -> RemoteOptions {
             backoff_base: Duration::from_millis(50),
             backoff_max: Duration::from_millis(200),
         },
+        ..RemoteOptions::default()
     }
 }
 
@@ -294,5 +303,147 @@ fn partitioned_shard_heals_on_epoch_advance_bitwise() {
         assert!(Instant::now() < deadline,
                 "ring did not heal within 10s of the epoch advance");
         std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Start `n` empty staging servers on loopback ephemeral ports.
+fn staging_ring(n: usize) -> (Vec<ShardServer>, Vec<String>) {
+    let mut servers = Vec::with_capacity(n);
+    let mut eps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = ShardServer::start_staging("127.0.0.1:0",
+                                           KernelChoice::Auto,
+                                           Some(Duration::from_secs(5)))
+            .expect("staging server");
+        eps.push(s.endpoint());
+        servers.push(s);
+    }
+    (servers, eps)
+}
+
+#[test]
+fn reshard_mid_partition_heals_and_flips_bitwise() {
+    let ds = synthetic::gaussian_iid(60, 16, 61);
+    let params = BanditParams { k: 5, delta: 0.01, ..Default::default() };
+    for seed in chaos_seeds() {
+        // old placement: 2 shards, shard 1 partitioned until fault
+        // epoch 1 — mid-partition, degraded coverage is the fallback
+        let (_old_ring, eps) = spawn_loopback_ring(&ds, 2).unwrap();
+        let proxy = FaultProxy::start(
+            &eps[1],
+            FaultPlan { partition_until_epoch: Some(1),
+                        ..Default::default() })
+            .unwrap();
+        let specs = vec![eps[0].clone(), proxy.endpoint()];
+        let mut eng = RemoteEngine::connect_opts(
+            &PlacementMap::parse(&specs).unwrap(),
+            fast_opts(true, Duration::from_millis(500)))
+            .unwrap();
+        let qseed = seed.wrapping_add(7);
+        let res = {
+            let mut rng = Rng::new(qseed);
+            let mut c = Counter::new();
+            knn_point_dense(&ds, 7, Metric::L2Sq, &params, &mut eng,
+                            &mut rng, &mut c)
+        };
+        let cov = res.coverage
+            .expect("partitioned ring must answer degraded");
+        assert!(cov.fraction() < 1.0);
+        // attempt 1: the transfer targets sit behind a seeded fault
+        // schedule plus a guaranteed mid-chunk severance — the reshard
+        // must fail cleanly, and the old (partitioned, degraded)
+        // placement must keep serving untouched
+        let mut sched = Rng::new(seed);
+        let (_flappy, f_eps) = staging_ring(2);
+        let flappy_proxies: Vec<FaultProxy> = f_eps
+            .iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                let mut plan =
+                    scripted_plan(&mut sched.fork(i as u64));
+                plan.rules.push(FaultRule {
+                    dir: Dir::ToServer,
+                    frame: 1,
+                    action: FaultAction::DropMidFrame,
+                });
+                FaultProxy::start(ep, plan).unwrap()
+            })
+            .collect();
+        let f_specs: Vec<String> =
+            flappy_proxies.iter().map(|p| p.endpoint()).collect();
+        let err = reshard_to(&ds, &PlacementMap::parse(&f_specs).unwrap(),
+                             1, Some(Duration::from_secs(5)))
+            .expect_err("a severed transfer stream must fail the \
+                         reshard");
+        assert!(!err.is_empty());
+        let res = {
+            let mut rng = Rng::new(qseed);
+            let mut c = Counter::new();
+            knn_point_dense(&ds, 7, Metric::L2Sq, &params, &mut eng,
+                            &mut rng, &mut c)
+        };
+        assert!(res.coverage.is_some(),
+                "seed {seed}: the failed reshard must leave the old \
+                 placement serving (degraded, but answering)");
+        // attempt 2: healthy targets; the partition heals via
+        // advance_epoch while this transfer is in flight
+        let (_staged, new_eps) = staging_ring(4);
+        let new_map = PlacementMap::parse(&new_eps).unwrap();
+        let fps = std::thread::scope(|sc| {
+            let h = sc.spawn(|| {
+                reshard_to(&ds, &new_map, 1,
+                           Some(Duration::from_secs(5)))
+            });
+            assert_eq!(proxy.advance_epoch(), 1);
+            h.join().expect("transfer thread")
+        })
+        .expect("reshard onto healthy staging servers");
+        assert_eq!(fps.len(), 4);
+        // flip: an epoch-pinned client on the new placement answers
+        // bitwise-identical to solo
+        let client = RingClient::connect_opts(
+            &new_map,
+            RemoteOptions {
+                timeout: Some(Duration::from_secs(5)),
+                expect_epoch: Some(1),
+                ..RemoteOptions::default()
+            })
+            .expect("connect to the resharded ring");
+        assert_eq!(client.epoch(), 1);
+        let mut fresh =
+            RemoteEngine::from_client(std::sync::Arc::new(client));
+        for qi in 0..4usize {
+            let s = seed.wrapping_add(qi as u64 * 131);
+            let want = solo_answer(&ds, qi, &params, s);
+            let got = {
+                let mut rng = Rng::new(s);
+                let mut c = Counter::new();
+                knn_point_dense(&ds, qi, Metric::L2Sq, &params,
+                                &mut fresh, &mut rng, &mut c)
+            };
+            assert_eq!(got.ids, want.ids,
+                       "seed {seed} query {qi}: post-flip ids diverged");
+            assert_eq!(got.dists, want.dists,
+                       "seed {seed} query {qi}: post-flip dists \
+                        diverged");
+        }
+        // and the healed old placement returns to full coverage — the
+        // epoch advance reached it while the transfer streamed
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let res = {
+                let mut rng = Rng::new(qseed);
+                let mut c = Counter::new();
+                knn_point_dense(&ds, 7, Metric::L2Sq, &params, &mut eng,
+                                &mut rng, &mut c)
+            };
+            if res.coverage.is_none() {
+                break;
+            }
+            assert!(Instant::now() < deadline,
+                    "seed {seed}: old ring did not heal within 10s of \
+                     the epoch advance");
+            std::thread::sleep(Duration::from_millis(100));
+        }
     }
 }

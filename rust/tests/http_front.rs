@@ -260,6 +260,49 @@ fn degraded_coverage_answers_are_never_cached() {
 }
 
 #[test]
+fn metrics_reports_placement_epoch_and_per_endpoint_ring_health() {
+    let ds = synthetic::image_like(80, 32, 31);
+    let (mut ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        remote: endpoints,
+        http_port: Some(0),
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.unwrap();
+    // the current placement epoch plus one health row per endpoint,
+    // live-probed: identity, connection count, epoch and fingerprint
+    let m = metrics(&http);
+    assert_eq!(counter(&m, "placement_epoch"), 0,
+               "a ring started without --epoch serves epoch 0");
+    let rows = m.get("ring").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(rows.len(), 2, "one health row per endpoint: {m}");
+    for (i, ep) in rows.iter().enumerate() {
+        assert_eq!(ep.get("ok"), Some(&Json::Bool(true)), "{ep}");
+        assert_eq!(ep.get("shard").and_then(|v| v.as_usize()), Some(i));
+        assert_eq!(ep.get("of").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(ep.get("epoch").and_then(|v| v.as_usize()), Some(0));
+        assert!(ep.get("endpoint").and_then(|v| v.as_str()).is_some(),
+                "health row must name its endpoint: {ep}");
+        assert!(ep.get("fingerprint").and_then(|v| v.as_str()).is_some(),
+                "health row must carry the dataset fingerprint: {ep}");
+    }
+    // a dead endpoint surfaces as ok:false with its error — the probe
+    // fails fast instead of wedging /metrics
+    ring[1].stop();
+    let m = metrics(&http);
+    let rows = m.get("ring").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(rows[0].get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(rows[1].get("ok"), Some(&Json::Bool(false)));
+    assert!(rows[1].get("error").and_then(|v| v.as_str()).is_some(),
+            "a failed probe must say why: {}", rows[1]);
+    srv.stop();
+}
+
+#[test]
 fn overload_sheds_with_429_and_a_retry_after_header() {
     use std::sync::atomic::{AtomicU64, Ordering};
     let ds = synthetic::image_like(100, 32, 29);

@@ -253,6 +253,7 @@ fn endpoint_death_with_submitted_tickets_fails_over_bitwise() {
             backoff_base: Duration::from_millis(50),
             backoff_max: Duration::from_millis(200),
         },
+        ..RemoteOptions::default()
     };
     let mut eng = RemoteEngine::connect_opts(
         &PlacementMap::parse(&specs).unwrap(), opts).unwrap();

@@ -8,17 +8,26 @@
 //! 2. The batched multi-query driver is bitwise-identical (ids, dists,
 //!    unit counts) to the per-query path under the documented rng
 //!    contract (query `i` of a batch ≡ solo run under `rng.fork(i)`),
-//!    for batch size 1 and larger batches alike.
+//!    for batch size 1 and larger batches alike — on the dense path
+//!    *and* on the sparse path (`knn_batch_sparse` vs
+//!    `knn_point_sparse`).
+//! 3. Host-engine validation: `--remote` serves dense datasets only,
+//!    so building a remote engine for sparse queries is a validated
+//!    error, never a wire surprise.
 
 use bmonn::baselines::exact;
+use bmonn::config::EngineKind;
 use bmonn::coordinator::bandit::{BanditParams, PullPolicy, SigmaMode};
-use bmonn::coordinator::knn::{knn_batch_dense, knn_point_dense,
-                              knn_point_sparse, knn_query_dense, KnnResult};
+use bmonn::coordinator::knn::{knn_batch_dense, knn_batch_sparse,
+                              knn_point_dense, knn_point_sparse,
+                              knn_query_dense, KnnResult};
 use bmonn::coordinator::arms::ScalarEngine;
 use bmonn::data::{synthetic, Metric};
 use bmonn::metrics::Counter;
 use bmonn::prop_assert_eq;
+use bmonn::runtime::kernels::KernelChoice;
 use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::build_host_engine;
 use bmonn::util::proptest;
 use bmonn::util::rng::Rng;
 
@@ -77,6 +86,76 @@ fn exact_pull_regime_equals_bruteforce_sparse() {
         prop_assert_eq!(res.ids, truth.ids, "sparse n={n} d={d}");
         Ok(())
     });
+}
+
+#[test]
+fn sparse_batch_bitwise_identical_to_per_query() {
+    proptest::check(8, |rng| {
+        let n = 8 + rng.below(24);
+        let d = 60 + rng.below(100);
+        let ds = synthetic::rna_like(n, d, 0.2, rng.next_u64());
+        let mut params = exact_pull_params(2);
+        // sparse MAX_PULLS is |S_q|+|S_i|, often below the dense init —
+        // keep init within every arm's cap
+        params.policy.init_pulls = 1;
+        let points: Vec<usize> = (0..4).map(|i| (i * 3) % n).collect();
+        let seed = rng.next_u64();
+        // per-query: query i under rng.fork(i) — the documented contract
+        let mut base = Rng::new(seed);
+        let mut solo_units = 0u64;
+        let solo: Vec<KnnResult> = points
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                let mut qrng = base.fork(i as u64);
+                let mut c = Counter::new();
+                let out = knn_point_sparse(&ds, q, Metric::L1, &params,
+                                           &mut qrng, &mut c);
+                solo_units += c.get();
+                out
+            })
+            .collect();
+        let mut base = Rng::new(seed);
+        let mut c = Counter::new();
+        let batch = knn_batch_sparse(&ds, &points, Metric::L1, &params,
+                                     &mut base, &mut c);
+        prop_assert_eq!(batch.len(), solo.len(), "sparse n={n} d={d}");
+        for (i, (s, b)) in solo.iter().zip(&batch).enumerate() {
+            prop_assert_eq!(&s.ids, &b.ids,
+                            "sparse batch ids diverged (n={n} d={d} \
+                             query {i})");
+            // f64 equality on purpose: the lockstep driver must be
+            // bit-identical to the per-query run, not merely close
+            prop_assert_eq!(&s.dists, &b.dists,
+                            "sparse batch dists diverged (n={n} d={d} \
+                             query {i})");
+            prop_assert_eq!(s.metrics.dist_computations,
+                            b.metrics.dist_computations,
+                            "sparse unit accounting diverged (n={n} \
+                             d={d} query {i})");
+        }
+        prop_assert_eq!(solo_units, c.get(),
+                        "sparse shared counter diverged (n={n} d={d})");
+        Ok(())
+    });
+}
+
+#[test]
+fn build_host_engine_rejects_remote_sparse_queries() {
+    // the check is pure validation: the endpoint is never dialed, so an
+    // unroutable spec is fine here
+    let remote = vec!["127.0.0.1:1".to_string()];
+    let err = build_host_engine(EngineKind::Native, 1, &remote, false,
+                                KernelChoice::Auto, false, true, None)
+        .map(|_| ())
+        .expect_err("--remote with sparse data must be refused");
+    assert!(err.contains("dense"),
+            "the refusal must explain the dense-only wire: {err}");
+    // the same sparse data with no ring builds a local engine normally
+    build_host_engine(EngineKind::Native, 1, &[], false,
+                      KernelChoice::Auto, false, true, None)
+        .map(|_| ())
+        .expect("sparse queries without --remote use the local engine");
 }
 
 /// Solo answers under the batch driver's rng contract.

@@ -187,6 +187,7 @@ fn fast_opts(degraded: bool) -> RemoteOptions {
             backoff_base: Duration::from_millis(50),
             backoff_max: Duration::from_millis(200),
         },
+        ..RemoteOptions::default()
     }
 }
 

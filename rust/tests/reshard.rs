@@ -1,0 +1,383 @@
+//! Elastic shard ring: live resharding under real sockets.
+//!
+//! The ring must be able to *change shape under traffic*: staging
+//! servers come up empty, a coordinator streams each its row range
+//! (`TransferBegin`/`TransferRows`/`TransferCommit`), the installed
+//! placement is verified fingerprint-by-fingerprint, and clients flip
+//! onto it at the next placement epoch — with **zero query errors and
+//! bitwise-identical answers on both sides of the flip**. The old
+//! placement is never mutated, so any mid-transfer failure leaves it
+//! serving untouched.
+//!
+//! Covered here, end to end:
+//! * doubling a 2-shard ring to 4 shards while a query workload keeps
+//!   running against the old placement — every answer before, during
+//!   and after the transfer stays bitwise-identical to solo
+//!   `NativeEngine`;
+//! * the coordinator's `reshard` admin op: the placement flips, the
+//!   result-cache epoch auto-bumps (an old-epoch cache entry can never
+//!   serve a post-flip query), and traffic drains onto the new ring;
+//! * a flapping transfer target (seeded `FaultProxy` severs the stream
+//!   mid-chunk): the failed transfer surfaces as a clean error and a
+//!   retry restarts from scratch — never resuming into a corrupt
+//!   buffer;
+//! * a commit whose fingerprint disagrees with the received bytes is
+//!   refused and discards the staged rows;
+//! * epoch hygiene: a client pinned to the wrong placement epoch is
+//!   refused at connect, and a serving server refuses `TransferBegin`.
+
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::http::http_request;
+use bmonn::coordinator::knn::knn_point_dense;
+use bmonn::coordinator::server::{Server, ServerConfig};
+use bmonn::data::{synthetic, DenseDataset, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::fault::{Dir, FaultAction, FaultPlan, FaultProxy,
+                            FaultRule};
+use bmonn::runtime::kernels::KernelChoice;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::placement::PlacementMap;
+use bmonn::runtime::remote::{endpoint_stats, reshard_to,
+                             spawn_loopback_ring, transfer_shard,
+                             RemoteEngine, RemoteOptions, RingClient,
+                             ShardServer};
+use bmonn::runtime::wire::{self, Message};
+use bmonn::util::json::Json;
+use bmonn::util::rng::Rng;
+
+const TIMEOUT: Option<Duration> = Some(Duration::from_secs(5));
+
+fn opts(expect_epoch: Option<u64>) -> RemoteOptions {
+    RemoteOptions {
+        timeout: TIMEOUT,
+        expect_epoch,
+        ..RemoteOptions::default()
+    }
+}
+
+/// Start `n` empty staging servers on loopback ephemeral ports.
+fn staging_ring(n: usize) -> (Vec<ShardServer>, Vec<String>) {
+    let mut servers = Vec::with_capacity(n);
+    let mut eps = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = ShardServer::start_staging("127.0.0.1:0",
+                                           KernelChoice::Auto, TIMEOUT)
+            .expect("staging server");
+        eps.push(s.endpoint());
+        servers.push(s);
+    }
+    (servers, eps)
+}
+
+/// Reference answer: solo `NativeEngine` under the same seeded rng
+/// stream every substrate must reproduce bitwise.
+fn solo_answer(ds: &DenseDataset, q: usize, params: &BanditParams,
+               seed: u64) -> (Vec<u32>, Vec<f64>) {
+    let mut solo = NativeEngine::default();
+    let mut rng = Rng::new(seed);
+    let mut c = Counter::new();
+    let r = knn_point_dense(ds, q, Metric::L2Sq, params, &mut solo,
+                            &mut rng, &mut c);
+    (r.ids, r.dists)
+}
+
+fn remote_answer(ds: &DenseDataset, q: usize, params: &BanditParams,
+                 seed: u64, eng: &mut RemoteEngine) -> (Vec<u32>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let mut c = Counter::new();
+    let r = knn_point_dense(ds, q, Metric::L2Sq, params, eng, &mut rng,
+                            &mut c);
+    (r.ids, r.dists)
+}
+
+#[test]
+fn ring_doubles_mid_workload_with_zero_errors_and_bitwise_answers() {
+    let ds = synthetic::image_like(96, 32, 41);
+    let params = BanditParams { k: 3, delta: 0.01, ..Default::default() };
+    let queries: Vec<usize> = (0..12).map(|i| (i * 11) % 96).collect();
+    let solo: Vec<(Vec<u32>, Vec<f64>)> = queries
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| solo_answer(&ds, q, &params, 1000 + i as u64))
+        .collect();
+    // old placement: a 2-shard ring at the default placement epoch 0
+    let (old_ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let old_map = PlacementMap::parse(&endpoints).unwrap();
+    let engine =
+        RemoteEngine::connect_opts(&old_map, opts(Some(0))).unwrap();
+    // new placement: double the shard count onto empty staging servers
+    let (staged, new_eps) = staging_ring(4);
+    let new_map = PlacementMap::parse(&new_eps).unwrap();
+    // the workload keeps querying the OLD placement while the transfer
+    // streams — resharding must cause zero query errors, and every
+    // answer must stay bitwise-identical to solo execution
+    let done = AtomicBool::new(false);
+    let (engine, waves, fps) = std::thread::scope(|sc| {
+        let driver = sc.spawn(|| {
+            let mut engine = engine;
+            let mut waves = 0u64;
+            while !done.load(Ordering::Relaxed) || waves == 0 {
+                for (i, &q) in queries.iter().enumerate() {
+                    let got = remote_answer(&ds, q, &params,
+                                            1000 + i as u64, &mut engine);
+                    assert_eq!(got, solo[i],
+                               "query {q} diverged mid-transfer");
+                }
+                waves += 1;
+            }
+            (engine, waves)
+        });
+        let fps = reshard_to(&ds, &new_map, 1, TIMEOUT)
+            .expect("reshard onto staging servers");
+        done.store(true, Ordering::Relaxed);
+        let (engine, waves) = driver.join().expect("workload driver");
+        (engine, waves, fps)
+    });
+    assert!(waves >= 1, "the workload never ran during the transfer");
+    // the transfer verified fingerprints endpoint by endpoint; pin the
+    // first shard's against an independent local computation
+    assert_eq!(fps.len(), 4);
+    let rows = ds.raw()[..24 * ds.d].to_vec();
+    let slice0 = DenseDataset::new(24, ds.d, rows);
+    assert_eq!(fps[0], wire::dataset_fingerprint(ds.n, 0, &slice0),
+               "shard 0 fingerprint must match the source bytes");
+    // flip: connect pinned to the new epoch, then drop the old ring
+    // entirely — the remaining answers can only come from the new
+    // placement, and they must still be bitwise-identical
+    let client =
+        Arc::new(RingClient::connect_opts(&new_map, opts(Some(1)))
+            .expect("connect to the resharded ring"));
+    assert_eq!(client.epoch(), 1, "new ring must agree on epoch 1");
+    let mut fresh = RemoteEngine::from_client(client);
+    drop(engine);
+    drop(old_ring);
+    for (i, &q) in queries.iter().enumerate() {
+        let got =
+            remote_answer(&ds, q, &params, 1000 + i as u64, &mut fresh);
+        assert_eq!(got, solo[i], "query {q} diverged after the flip");
+    }
+    // every new endpoint serves its slice at the new epoch
+    for (shard, ep) in new_eps.iter().enumerate() {
+        let st = endpoint_stats(ep, TIMEOUT).unwrap();
+        assert_eq!((st.shard, st.of, st.epoch), (shard, 4, 1));
+        assert_eq!(st.data_hash, fps[shard]);
+    }
+    drop(staged);
+}
+
+#[test]
+fn coordinator_reshard_flips_placement_and_auto_bumps_the_cache() {
+    let ds = synthetic::image_like(80, 32, 53);
+    let (old_ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        n_workers: 1,
+        batch_size: 4,
+        remote: endpoints,
+        http_port: Some(0),
+        cache_entries: 8,
+        ..Default::default()
+    };
+    let mut srv = Server::start(ds.clone(), cfg).unwrap();
+    let http = srv.http_addr.expect("http_port: Some(0) must bind");
+    let metrics = |label: &str| {
+        let (status, _, body) =
+            http_request(&http, "GET", "/metrics", None).unwrap();
+        assert_eq!(status, 200, "{label}: {body}");
+        Json::parse(body.trim()).unwrap()
+    };
+    let counter = |m: &Json, key: &str| {
+        m.get(key)
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("/metrics lost {key}: {m}"))
+            as u64
+    };
+    let body = Json::obj(vec![
+        ("query", Json::f32_array(&ds.row_vec(5))),
+        ("k", Json::Num(3.0)),
+    ])
+    .to_string();
+    // fresh compute, then a byte-identical cache hit at cache epoch 0
+    let (s1, _, fresh) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s1, 200, "{fresh}");
+    let (s2, _, hit) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s2, 200);
+    assert_eq!(hit, fresh, "cache hit must replay the stored bytes");
+    let m = metrics("pre-reshard");
+    assert_eq!(counter(&m, "cache_hits"), 1);
+    assert_eq!(counter(&m, "epoch"), 0);
+    assert_eq!(counter(&m, "placement_epoch"), 0);
+    let ring = m.get("ring").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(ring.len(), 2, "per-endpoint health for both shards");
+    for ep in ring {
+        assert_eq!(ep.get("ok"), Some(&Json::Bool(true)), "{ep}");
+        assert_eq!(ep.get("epoch").and_then(|v| v.as_usize()), Some(0));
+    }
+    // double the ring through the admin op
+    let (staged, new_eps) = staging_ring(4);
+    let reshard_body = Json::obj(vec![
+        ("to",
+         Json::Arr(new_eps.iter()
+             .map(|e| Json::Str(e.clone()))
+             .collect())),
+        ("epoch", Json::Num(2.0)),
+    ])
+    .to_string();
+    let (s3, _, resp) =
+        http_request(&http, "POST", "/admin/reshard",
+                     Some(&reshard_body))
+            .unwrap();
+    assert_eq!(s3, 200, "reshard must succeed: {resp}");
+    let resp = Json::parse(resp.trim()).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(resp.get("placement_epoch").and_then(|v| v.as_usize()),
+               Some(2));
+    // the flip auto-bumped the result-cache epoch: the pre-flip entry
+    // can never serve again — no manual /admin/epoch-bump involved
+    let m = metrics("post-reshard");
+    assert_eq!(counter(&m, "placement_epoch"), 2);
+    assert_eq!(counter(&m, "epoch"), 1,
+               "a completed reshard must auto-bump the cache epoch");
+    let ring = m.get("ring").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(ring.len(), 4, "health now reports the new placement");
+    for ep in ring {
+        assert_eq!(ep.get("ok"), Some(&Json::Bool(true)), "{ep}");
+        assert_eq!(ep.get("epoch").and_then(|v| v.as_usize()), Some(2));
+    }
+    // the same query recomputes (a miss under the new epoch) and the
+    // seeded serving compute answers the same bytes as before the flip
+    let hits_before = counter(&m, "cache_hits");
+    let (s4, _, recomputed) =
+        http_request(&http, "POST", "/knn", Some(&body)).unwrap();
+    assert_eq!(s4, 200, "{recomputed}");
+    assert_eq!(recomputed, fresh,
+               "the post-flip recompute must answer the same bytes — \
+                the dataset did not change, only its placement");
+    assert_eq!(counter(&metrics("post-flip repeat"), "cache_hits"),
+               hits_before,
+               "an old-epoch cache entry served a post-flip query");
+    // the old placement is fully drained: with its servers gone,
+    // queries keep answering through the new ring
+    drop(old_ring);
+    let other = Json::obj(vec![
+        ("query", Json::f32_array(&ds.row_vec(9))),
+        ("k", Json::Num(3.0)),
+    ])
+    .to_string();
+    let (s5, _, post) =
+        http_request(&http, "POST", "/knn", Some(&other)).unwrap();
+    assert_eq!(s5, 200,
+               "query after dropping the old ring must be served by \
+                the new placement: {post}");
+    let post = Json::parse(post.trim()).unwrap();
+    assert_eq!(post.get("ok"), Some(&Json::Bool(true)));
+    drop(staged);
+    srv.stop();
+}
+
+#[test]
+fn flapping_transfer_target_fails_cleanly_and_a_retry_installs() {
+    let ds = synthetic::gaussian_iid(1200, 16, 77);
+    let (staged, eps) = staging_ring(1);
+    // sever the stream mid-chunk on the second TransferRows frame: the
+    // transfer dies with a clean error, nothing half-installs
+    let plan = FaultPlan {
+        seed: 9,
+        rules: vec![FaultRule {
+            dir: Dir::ToServer,
+            frame: 2,
+            action: FaultAction::DropMidFrame,
+        }],
+        ..Default::default()
+    };
+    let mut proxy = FaultProxy::start(&eps[0], plan).unwrap();
+    let err = transfer_shard(&proxy.endpoint(), &ds, 0, 1, 3, TIMEOUT)
+        .expect_err("a severed stream must fail the transfer");
+    assert!(err.contains("transfer"), "unexpected error: {err}");
+    let st = endpoint_stats(&eps[0], TIMEOUT)
+        .expect_err("a flapped target must still be staging");
+    assert!(st.contains("staging"), "unexpected error: {st}");
+    // the retry restarts from scratch (a fresh TransferBegin replaces
+    // the half-streamed state) and installs the verified dataset
+    let fp = transfer_shard(&proxy.endpoint(), &ds, 0, 1, 3, TIMEOUT)
+        .expect("retry after the flap");
+    let st = endpoint_stats(&eps[0], TIMEOUT).unwrap();
+    assert_eq!((st.shard, st.of, st.epoch), (0, 1, 3));
+    assert_eq!(st.n_total, 1200);
+    assert_eq!(st.data_hash, fp);
+    assert_eq!(fp, wire::dataset_fingerprint(ds.n, 0, &ds),
+               "installed fingerprint must match the source bytes");
+    proxy.stop();
+    drop(staged);
+}
+
+#[test]
+fn commit_with_diverged_fingerprint_is_refused() {
+    let ds = synthetic::gaussian_iid(8, 4, 3);
+    let (staged, eps) = staging_ring(1);
+    let mut stream = TcpStream::connect(&eps[0]).unwrap();
+    stream.set_read_timeout(TIMEOUT).unwrap();
+    stream.set_write_timeout(TIMEOUT).unwrap();
+    let mut buf = Vec::new();
+    let step = |stream: &mut TcpStream, buf: &mut Vec<u8>| {
+        wire::write_frame(stream, buf).unwrap();
+        let mut rep = Vec::new();
+        wire::read_frame(stream, &mut rep).unwrap();
+        Message::decode(&rep).unwrap()
+    };
+    wire::encode_transfer_begin(&mut buf, 1, 0, 1, 8, 4, 0, 8, 5);
+    assert!(matches!(step(&mut stream, &mut buf),
+                     Message::Ack { wave_id: 1 }));
+    wire::encode_transfer_rows(&mut buf, 2, 0, ds.raw());
+    assert!(matches!(step(&mut stream, &mut buf),
+                     Message::Ack { wave_id: 2 }));
+    // commit claims a fingerprint the received bytes do not hash to:
+    // the target must refuse and discard the staged rows
+    let fp = wire::dataset_fingerprint(ds.n, 0, &ds);
+    wire::encode_transfer_commit(&mut buf, 3, fp ^ 1);
+    match step(&mut stream, &mut buf) {
+        Message::Error { msg, .. } => {
+            assert!(msg.contains("fingerprint mismatch"),
+                    "unexpected refusal: {msg}");
+        }
+        other => panic!("commit with a bad hash must be refused, got \
+                         {other:?}"),
+    }
+    let st = endpoint_stats(&eps[0], TIMEOUT)
+        .expect_err("a refused commit must leave the target staging");
+    assert!(st.contains("staging"), "unexpected error: {st}");
+    // a correct transfer afterwards installs normally
+    let got = transfer_shard(&eps[0], &ds, 0, 1, 5, TIMEOUT).unwrap();
+    assert_eq!(got, fp);
+    assert_eq!(endpoint_stats(&eps[0], TIMEOUT).unwrap().epoch, 5);
+    drop(staged);
+}
+
+#[test]
+fn epoch_pinned_connect_refuses_the_wrong_placement() {
+    let ds = synthetic::gaussian_iid(40, 8, 11);
+    let (_ring, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let map = PlacementMap::parse(&endpoints).unwrap();
+    let err = RingClient::connect_opts(&map, opts(Some(3)))
+        .expect_err("an epoch-0 ring must refuse an epoch-3 pin");
+    assert!(err.contains("placement epoch"), "unexpected error: {err}");
+    // unpinned connects adopt whatever single epoch the ring agrees on
+    let client = RingClient::connect_opts(&map, opts(None)).unwrap();
+    assert_eq!(client.epoch(), 0);
+}
+
+#[test]
+fn serving_servers_refuse_transfers() {
+    let ds = synthetic::gaussian_iid(40, 8, 13);
+    let (_ring, endpoints) = spawn_loopback_ring(&ds, 1).unwrap();
+    let err = transfer_shard(&endpoints[0], &ds, 0, 1, 1, TIMEOUT)
+        .expect_err("a serving server must refuse TransferBegin");
+    assert!(err.contains("staging server"), "unexpected error: {err}");
+}
