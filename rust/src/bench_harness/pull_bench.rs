@@ -27,7 +27,13 @@
 //! live mid-sweep: staging servers take a fingerprint-verified dataset
 //! transfer at the next placement epoch, an epoch-pinned client takes
 //! over, and every answer on both sides of the flip must stay
-//! bitwise-identical to the baseline), and
+//! bitwise-identical to the baseline), **and on a tcp-speculate rung**
+//! (the identical workload twice over a loopback ring, cross-round
+//! speculation off then on — round t+1's predicted pull wave overlaps
+//! round t's retirement, answers must stay bitwise-identical both
+//! ways, and the rung asserts at least one speculated pull was
+//! confirmed while the caller-visible work counter stays identical),
+//! and
 //! emits the numbers as JSON for `BENCH_pull.json` so the perf
 //! trajectory has data points that survive across PRs:
 //!
@@ -151,7 +157,8 @@ impl<E: PullEngine> PullEngine for TimingEngine<E> {
 struct ShardRun {
     shards: usize,
     /// "local" | "tcp-loopback" | "tcp-failover" | "tcp-multiplex" |
-    /// "tcp-deadline" | "http-front" | "tcp-reshard" | "tcp-remote"
+    /// "tcp-deadline" | "http-front" | "tcp-reshard" | "tcp-speculate"
+    /// | "tcp-remote"
     transport: &'static str,
     rows_per_s: f64,
     wall_per_round_us: f64,
@@ -180,6 +187,10 @@ struct ShardRun {
     /// tcp-reshard only: placement epoch after the live reshard
     /// doubled the ring mid-sweep (always advances `epoch_from`)
     epoch_to: Option<u64>,
+    /// tcp-speculate only: speculated per-query pulls whose prediction
+    /// matched the real round and whose results were consumed in place
+    /// of a fresh wave (asserted >= 1 — the overlap witness)
+    spec_confirmed: Option<u64>,
 }
 
 /// Workload shape shared by every rung.
@@ -263,6 +274,7 @@ where
         cache_hits: None,
         epoch_from: None,
         epoch_to: None,
+        spec_confirmed: None,
     })
 }
 
@@ -414,6 +426,7 @@ fn measure_multiplex_rung(w: &Workload<'_>, endpoints: &[String],
         cache_hits: None,
         epoch_from: None,
         epoch_to: None,
+        spec_confirmed: None,
     })
 }
 
@@ -561,6 +574,7 @@ fn measure_deadline_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
         cache_hits: None,
         epoch_from: None,
         epoch_to: None,
+        spec_confirmed: None,
     })
 }
 
@@ -746,6 +760,7 @@ fn measure_http_front_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
         cache_hits: Some(cache_hits),
         epoch_from: None,
         epoch_to: None,
+        spec_confirmed: None,
     })
 }
 
@@ -867,6 +882,156 @@ fn measure_reshard_rung(w: &Workload<'_>,
         cache_hits: None,
         epoch_from: Some(epoch_from),
         epoch_to: Some(epoch_to),
+        spec_confirmed: None,
+    })
+}
+
+/// One batched pass of the speculate rung's workload: the shared
+/// workload points under the rung's scaled pull policy, one rep,
+/// returning (answer ids, speculation counters, caller-visible
+/// `Counter` charge).
+fn speculate_pass<E: PullEngine>(
+    w: &Workload<'_>,
+    params: &BanditParams,
+    engine: &mut E,
+    speculate: bool,
+) -> (Vec<Vec<u32>>, crate::coordinator::knn::SpecStats, u64) {
+    use crate::coordinator::knn::{knn_batch_points_dense_opts,
+                                  BatchOptions};
+    let mut rng = Rng::new(w.seed + 1);
+    let mut counter = Counter::new();
+    let opts = BatchOptions { deadline: None, speculate };
+    let (results, spec) = knn_batch_points_dense_opts(
+        w.data, w.points, Metric::L2Sq, params, engine, &mut rng,
+        &mut counter, opts);
+    (results.into_iter().map(|r| r.ids).collect(), spec, counter.get())
+}
+
+/// The always-on speculate rung: the same batched workload over a
+/// fresh loopback ring, run twice through the batch driver's options
+/// API — speculation off, then on — on a bare [`remote::RemoteEngine`]
+/// (no timing wrapper: the wrapper forwards only the blocking engine
+/// subset, which would mask `PullEngine::pipelined` and render
+/// speculation inert). Speculation only engages while arms still have
+/// several uniform `round_pulls`-sized waves of cap headroom, so the
+/// rung scales its own pull policy to the dataset (`round_pulls =
+/// d/8`) instead of inheriting the baseline's — the smoke shape's
+/// `round_pulls = d` caps every arm straight after the init wave —
+/// and therefore pins its answers against a local single-shard
+/// reference computed under the identical policy rather than the
+/// shared baseline.
+///
+/// The rung asserts the off and on passes both answer
+/// bitwise-identically to the local reference, that the off pass
+/// reports all-zero speculation counters, that the on pass confirmed
+/// at least one speculated pull (the overlap witness serialized as
+/// `spec_confirmed`), that `speculated == confirmed + discarded`, and
+/// that the caller-visible `Counter` charge is identical on vs off —
+/// speculative work never bills the caller.
+///
+/// Unlike the pull-phase rungs this one reports **end-to-end batch
+/// numbers**: `rows_per_s` is Counter work units per second of batch
+/// wall with speculation on, `wall_per_round_us` is mean batch wall
+/// per rep, and `rounds`/`jobs` are reps / Counter units — its subject
+/// is whole-batch wall clock moved by overlapping round t+1's wave
+/// with round t's retirement, not the pull kernels underneath.
+fn measure_speculate_rung(w: &Workload<'_>) -> Result<ShardRun, String> {
+    use crate::coordinator::knn::SpecStats;
+    let mut params = w.params.clone();
+    params.policy.round_pulls = (w.data.d as u64 / 8).max(1);
+    let (_ring, endpoints) =
+        remote::spawn_loopback_ring(w.data, LOOPBACK_SHARDS)?;
+    // local single-shard reference under the rung's own pull policy
+    let mut local = crate::runtime::native::NativeEngine::default();
+    let (ref_answers, ref_spec, _ref_jobs) =
+        speculate_pass(w, &params, &mut local, false);
+    if ref_spec != SpecStats::default() {
+        return Err(format!(
+            "speculate rung: local blocking reference reported nonzero \
+             speculation counters {ref_spec:?}"));
+    }
+    let pass = |speculate: bool| -> Result<
+        (Vec<Vec<u32>>, Duration, SpecStats, u64), String> {
+        let mut engine = remote::RemoteEngine::connect(&endpoints)?;
+        let mut wall = Duration::ZERO;
+        let mut answers: Vec<Vec<u32>> = Vec::new();
+        let mut spec = SpecStats::default();
+        let mut jobs = 0u64;
+        for _ in 0..w.reps {
+            let t0 = Instant::now();
+            let (a, s, j) =
+                speculate_pass(w, &params, &mut engine, speculate);
+            wall += t0.elapsed();
+            spec.merge(&s);
+            jobs += j;
+            answers = a;
+        }
+        Ok((answers, wall, spec, jobs))
+    };
+    let (off_answers, _off_wall, off_spec, off_jobs) = pass(false)?;
+    let (on_answers, on_wall, on_spec, on_jobs) = pass(true)?;
+    if off_answers != ref_answers {
+        return Err("answers diverged on the tcp-speculate rung \
+                    (speculation off vs local reference) — refusing to \
+                    report throughput for a broken engine"
+            .into());
+    }
+    if on_answers != ref_answers {
+        return Err("answers diverged between speculation on and the \
+                    local reference on the tcp-speculate rung — \
+                    speculation must be bitwise-invisible"
+            .into());
+    }
+    if off_spec != SpecStats::default() {
+        return Err(format!(
+            "speculate rung: speculation-off pass reported nonzero \
+             speculation counters {off_spec:?}"));
+    }
+    if on_spec.confirmed == 0 {
+        return Err(format!(
+            "speculate rung: no speculated pull was ever confirmed \
+             ({on_spec:?}) — the overlap path never engaged"));
+    }
+    if on_spec.speculated != on_spec.confirmed + on_spec.discarded {
+        return Err(format!(
+            "speculate rung: counter invariant broke: {on_spec:?}"));
+    }
+    if on_jobs != off_jobs {
+        return Err(format!(
+            "speculate rung: caller-visible Counter charge differs on \
+             ({on_jobs}) vs off ({off_jobs}) — speculative waves must \
+             never bill the caller"));
+    }
+    // solo latency through the same ring (standard sweep; speculation
+    // is a batch-driver feature, solo queries take the ordinary path)
+    let mut solo_engine = remote::RemoteEngine::connect(&endpoints)?;
+    let mut lat = LatencyStats::default();
+    for (i, &q) in w.solo_points.iter().enumerate() {
+        let mut qrng = Rng::new(w.seed + 100 + i as u64);
+        let mut c = Counter::new();
+        let t = Instant::now();
+        let _ = knn_point_dense(w.data, q, Metric::L2Sq, w.params,
+                                &mut solo_engine, &mut qrng, &mut c);
+        lat.record(t.elapsed());
+    }
+    Ok(ShardRun {
+        shards: LOOPBACK_SHARDS,
+        transport: "tcp-speculate",
+        rows_per_s: on_jobs as f64 / on_wall.as_secs_f64().max(1e-9),
+        wall_per_round_us: on_wall.as_secs_f64() * 1e6
+            / (w.reps as f64).max(1.0),
+        rounds: w.reps as u64,
+        jobs: on_jobs,
+        batch_wall_ms: on_wall.as_secs_f64() * 1e3,
+        solo_p50_us: lat.percentile(50.0).as_micros() as f64,
+        solo_p99_us: lat.percentile(99.0).as_micros() as f64,
+        max_inflight: None,
+        shed: None,
+        deadline_exceeded: None,
+        cache_hits: None,
+        epoch_from: None,
+        epoch_to: None,
+        spec_confirmed: Some(on_spec.confirmed),
     })
 }
 
@@ -970,6 +1135,9 @@ fn run_json(r: &ShardRun) -> Json {
     }
     if let Some(e) = r.epoch_to {
         fields.push(("epoch_to", Json::Num(e as f64)));
+    }
+    if let Some(sc) = r.spec_confirmed {
+        fields.push(("spec_confirmed", Json::Num(sc as f64)));
     }
     Json::obj(fields)
 }
@@ -1076,6 +1244,13 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
     // epoch, an epoch-pinned client takes over, and answers stay
     // bitwise-identical on both sides of the flip
     remote_runs.push(measure_reshard_rung(&w, &mut baseline_answers)?);
+    // speculate rung: the same workload points twice over a fresh
+    // loopback ring — speculation off then on, under the rung's own
+    // d-scaled pull policy — answers bitwise-identical to a local
+    // reference both ways, at least one speculated pull confirmed, and
+    // the caller's Counter charged identically on vs off (speculative
+    // work is never billed)
+    remote_runs.push(measure_speculate_rung(&w)?);
     if !extra_remote.is_empty() {
         remote_runs.push(measure_rung(
             &w,
@@ -1130,6 +1305,11 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
         .find(|r| r.transport == "tcp-reshard")
         .and_then(|r| r.epoch_from.zip(r.epoch_to))
         .unwrap_or((0, 0));
+    let spec_confirmed = remote_runs
+        .iter()
+        .find(|r| r.transport == "tcp-speculate")
+        .and_then(|r| r.spec_confirmed)
+        .unwrap_or(0);
     rep.note(&format!(
         "workload: n={n} d={d} (shard-serve --synthetic \
          image:{n}:{d}:{seed}), {batch} batched queries x{reps} reps + \
@@ -1147,7 +1327,9 @@ pub fn run_pull_bench(smoke: bool, seed: u64, extra_remote: &[String])
          plus {http_hits} byte-identical cache hits across an epoch \
          flip; tcp-reshard rung doubled the ring live (placement epoch \
          {re_from} -> {re_to}) with bitwise-identical answers on both \
-         sides of the flip",
+         sides of the flip; tcp-speculate rung ran the workload with \
+         cross-round speculation off then on, answers bitwise-identical \
+         both ways, {spec_confirmed} speculated pulls confirmed",
         SHARD_COUNTS[SHARD_COUNTS.len() - 1]));
     let kernel_note = kernel_runs
         .iter()
@@ -1191,13 +1373,14 @@ mod tests {
     #[test]
     fn smoke_bench_reports_consistent_nonzero_numbers() {
         let (rep, json) = run_pull_bench(true, 7, &[]).unwrap();
-        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 6);
+        assert_eq!(rep.rows.len(), SHARD_COUNTS.len() + 7);
         let shards = json.get("shards").and_then(|s| s.as_arr()).unwrap();
         assert_eq!(shards.len(), SHARD_COUNTS.len());
         let remote = json.get("remote").and_then(|s| s.as_arr()).unwrap();
-        assert_eq!(remote.len(), 6,
+        assert_eq!(remote.len(), 7,
                    "loopback + failover + multiplex + deadline + \
-                    http-front + reshard rungs always present");
+                    http-front + reshard + speculate rungs always \
+                    present");
         assert_eq!(remote[1].get("transport").and_then(|v| v.as_str()),
                    Some("tcp-failover"));
         assert_eq!(remote[2].get("transport").and_then(|v| v.as_str()),
@@ -1248,6 +1431,15 @@ mod tests {
         assert!(e_to >= 1.0,
                 "reshard rung must advance the placement epoch, saw \
                  {e_from} -> {e_to}");
+        assert_eq!(remote[6].get("transport").and_then(|v| v.as_str()),
+                   Some("tcp-speculate"));
+        let sc = remote[6]
+            .get("spec_confirmed")
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(sc >= 1.0,
+                "speculate rung must confirm at least one speculated \
+                 pull, saw {sc}");
         for s in shards.iter().chain(remote) {
             let rps = s.get("pull_rows_per_s")
                 .and_then(|v| v.as_f64())

@@ -103,7 +103,8 @@ SUBCOMMANDS
            exact|lsh|kgraph|ngt|uniform] [--metric l2|l1] [--engine
            native|scalar|pjrt] [--shards S] [--remote SPECS]
            [--degraded] [--kernel auto|scalar|avx2|neon] [--quantized]
-           [--epsilon E] [--delta D] [--seed S] [--io-timeout-ms T]
+           [--speculate] [--epsilon E] [--delta D] [--seed S]
+           [--io-timeout-ms T]
            (--batch B > 1 answers B consecutive query points through the
            coalesced multi-query driver, bmo only; --shards S > 1 fans
            each pull wave across S contiguous row shards on a worker
@@ -121,17 +122,23 @@ SUBCOMMANDS
            and rescores candidates on exact f32, widening confidence
            intervals by the quantization error bound; local engines
            only. With --remote, pass --kernel to shard-serve instead —
-           both tune the process doing the computing. --io-timeout-ms
-           bounds the ring client's connects, writes and per-wave reply
-           waits, default 60000)
+           both tune the process doing the computing. --speculate
+           overlaps round t+1's predicted pull wave with round t's
+           retirement on pipelined (remote) engines — answers stay
+           bitwise-identical, mispredicted waves are abandoned without
+           spending failover attempts or deadline budget; local
+           blocking engines ignore it. --io-timeout-ms bounds the ring
+           client's connects, writes and per-wave reply waits, default
+           60000)
   graph    --data FILE [--k K] [--metric l2|l1] [--shards S]
            [--remote SPECS] [--degraded] [--kernel T] [--quantized]
            [--seed S] [--io-timeout-ms T]
   kmeans   --data FILE [--clusters K] [--iters I] [--algo bmo|exact]
   serve    --data FILE [--addr HOST:PORT] [--config FILE] [--shards S]
            [--remote SPECS] [--degraded] [--kernel T] [--quantized]
-           [--batch-wait-us T] [--deadline-ms D] [--max-queue Q]
-           [--io-timeout-ms T] [--http-port P] [--cache-entries N]
+           [--speculate] [--batch-wait-us T] [--deadline-ms D]
+           [--max-queue Q] [--io-timeout-ms T] [--http-port P]
+           [--cache-entries N]
            (with --remote this box coordinates a multi-machine ring: all
            workers share ONE multiplexed ring client — one connection
            per shard, concurrent tagged waves interleaved on it — so
@@ -161,7 +168,13 @@ SUBCOMMANDS
            epoch: repeat queries replay byte-identical answers without
            touching the bandit, and the epoch-bump op [POST
            /admin/epoch-bump] invalidates every cached answer after a
-           dataset or placement change. Hits/misses surface via stats)
+           dataset or placement change. Hits/misses surface via stats.
+           --speculate turns on cross-round wave pipelining for
+           --remote rings: workers overlap each round's retirement with
+           the next round's predicted wave, abandoning mispredictions;
+           answers are bitwise-identical either way, and speculated /
+           confirmed / discarded wave counts surface via stats and
+           GET /metrics)
   shard-serve  (--data FILE | --synthetic image:N:D:SEED | --staging)
            --shard I --of S [--addr HOST:PORT]
            [--kernel auto|scalar|avx2|neon] [--epoch E]
@@ -231,7 +244,8 @@ SUBCOMMANDS
   selftest [--artifacts DIR]
 
 Common flags: --config FILE (TOML; [engine] kind/shards/remote/degraded/
-kernel/quantized/epoch/io_timeout_ms pick and tune the pull engine,
+kernel/quantized/speculate/epoch/io_timeout_ms pick and tune the pull
+engine,
 [server] deadline_ms/max_queue/batch_wait_us/http_port/cache_entries
 shape the query server — see docs/CONFIG.md and docs/OPERATIONS.md),
 --set section.key=value (repeatable via comma list), --seed N.

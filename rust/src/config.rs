@@ -182,6 +182,17 @@ pub struct BmonnConfig {
     /// confidence intervals so the PAC guarantee still holds. Off by
     /// default.
     pub quantized: bool,
+    /// speculative cross-round wave pipelining (`[engine] speculate` /
+    /// `--speculate`, pipelined engines only): after submitting round
+    /// t's pull wave the batch driver predicts round t+1's likely pull
+    /// set from a throwaway rng lane and submits it early, overlapping
+    /// the next wave's network/compute latency with round t's
+    /// retirement. Confirmed predictions are reused; mispredictions are
+    /// abandoned without consuming failover attempts or deadline
+    /// budget. Answers are bitwise-identical with the flag on or off;
+    /// off (the default) is byte-for-byte today's lockstep behavior.
+    /// Blocking (non-pipelined) engines ignore the flag.
+    pub speculate: bool,
     /// placement epoch served or expected (`[engine] epoch` /
     /// `--epoch`): on `shard-serve` (flag only) the epoch the server
     /// stamps into its handshake — a never-resharded ring serves 0,
@@ -250,6 +261,7 @@ impl Default for BmonnConfig {
             degraded: false,
             kernel: KernelChoice::Auto,
             quantized: false,
+            speculate: false,
             epoch: 0,
             io_timeout_ms: 60_000,
             artifact_dir: "artifacts".into(),
@@ -318,6 +330,9 @@ impl BmonnConfig {
         }
         if let Some(qz) = raw.get_bool("engine.quantized")? {
             cfg.quantized = qz;
+        }
+        if let Some(sp) = raw.get_bool("engine.speculate")? {
+            cfg.speculate = sp;
         }
         if let Some(e) = raw.get_u64("engine.epoch")? {
             cfg.epoch = e;
@@ -463,6 +478,19 @@ mod tests {
         assert!(cfg.quantized);
         let raw =
             RawConfig::parse("[engine]\nkernel = sse9\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn speculate_flag_parses_and_defaults_off() {
+        assert!(!BmonnConfig::default().speculate);
+        let raw =
+            RawConfig::parse("[engine]\nspeculate = true\n").unwrap();
+        assert!(BmonnConfig::from_raw(&raw).unwrap().speculate);
+        let raw = RawConfig::parse("[engine]\nspeculate = 0\n").unwrap();
+        assert!(!BmonnConfig::from_raw(&raw).unwrap().speculate);
+        let raw =
+            RawConfig::parse("[engine]\nspeculate = soon\n").unwrap();
         assert!(BmonnConfig::from_raw(&raw).is_err());
     }
 

@@ -305,6 +305,22 @@ pub trait PullEngine {
         let _ = deadline;
     }
 
+    /// Abandon an in-flight wave without waiting for its results — the
+    /// completion-side filter of speculative execution. The speculative
+    /// batch driver submits a predicted round-t+1 wave before round t
+    /// retires; when the prediction misses, it abandons the ticket
+    /// instead of completing it, so a discarded wave consumes **no**
+    /// failover attempts and **no** deadline budget (those are only
+    /// spent while *waiting* on a wave). Eager engines resolved the wave
+    /// at submit, so the default just drops the ticket's parked results;
+    /// a pipelined engine must drop its in-flight bookkeeping for
+    /// `ticket.key()` and let the late reply be discarded by its demux
+    /// layer. Abandoning is always safe: the wave's computation is pure
+    /// and its results are simply never observed.
+    fn abandon_wave(&mut self, ticket: WaveTicket) {
+        drop(ticket);
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -404,6 +420,10 @@ impl PullEngine for Box<dyn PullEngine + Send> {
 
     fn set_deadline(&mut self, deadline: Option<std::time::Instant>) {
         (**self).set_deadline(deadline)
+    }
+
+    fn abandon_wave(&mut self, ticket: WaveTicket) {
+        (**self).abandon_wave(ticket)
     }
 
     fn name(&self) -> &'static str {
@@ -936,6 +956,33 @@ mod tests {
         assert_eq!(bs0, bs1);
         assert_eq!(bq0, bq1);
         assert!(!eng.pipelined(), "scalar engine resolves at submit");
+    }
+
+    #[test]
+    fn abandon_wave_discards_eager_tickets_without_side_effects() {
+        // abandoning must not disturb other in-flight tickets, and an
+        // eager engine stays fully usable afterwards
+        let ds = synthetic::gaussian_iid(6, 16, 19);
+        let q = ds.row_vec(0);
+        let rows: Vec<u32> = (1..6).collect();
+        let coords = vec![0u32, 3, 15];
+        let mut eng = ScalarEngine;
+        let keep = eng.submit_partial_sums(&ds, &q, &rows, &coords,
+                                           Metric::L2Sq);
+        let toss = eng.submit_partial_sums(&ds, &q, &rows, &coords,
+                                           Metric::L1);
+        eng.abandon_wave(toss);
+        let (mut s, mut sq) = (Vec::new(), Vec::new());
+        eng.complete_sums(keep, &mut s, &mut sq);
+        let (mut ws, mut wsq) = (Vec::new(), Vec::new());
+        eng.partial_sums(&ds, &q, &rows, &coords, Metric::L2Sq, &mut ws,
+                         &mut wsq);
+        assert_eq!(s, ws);
+        assert_eq!(sq, wsq);
+        // boxed forwarding line
+        let mut boxed: Box<dyn PullEngine + Send> = Box::new(ScalarEngine);
+        let t = boxed.submit_exact_dists(&ds, &q, &rows, Metric::L1);
+        boxed.abandon_wave(t);
     }
 
     #[test]

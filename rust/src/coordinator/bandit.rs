@@ -401,6 +401,74 @@ impl BmoUcb {
         &self.pending
     }
 
+    /// Predict a **superset** of the likely round-t+1 uniform pull set,
+    /// for speculative cross-round pipelining. Call between a
+    /// [`BmoUcb::begin_round`] that returned [`RoundAction::Pull`] and the
+    /// matching [`BmoUcb::end_round`]; returns `(arms, t)` — candidate
+    /// arms for the *next* staged pull and its uniform pull count — or
+    /// `None` when the next round is unpredictable (init round in flight,
+    /// run finished, or no candidate has `t` pulls of cap headroom).
+    ///
+    /// The prediction is the current pending arms (UCB arm state drifts
+    /// little between rounds, so most survive selection again) plus the
+    /// heap's current lowest-LCB arms — the exact candidates the next
+    /// selection will pop first — each filtered for cap headroom so a
+    /// speculated pull can never overshoot `max_pulls`. A superset is the
+    /// right shape because a speculative wave's per-row results are
+    /// position-independent: the driver confirms by matching the real
+    /// round's rows as a *subset* of the speculated rows and gathers
+    /// through the permutation, so over-predicting costs only wasted
+    /// shard work, never correctness.
+    ///
+    /// Observably pure: heap reads pop fresh entries and re-push
+    /// identical keys (pop order is uniquely determined by the strict
+    /// total order on `(lcb, version, arm)`), no arm state changes, and
+    /// no rng is drawn — so calling this never perturbs the run and
+    /// speculation-off stays byte-for-byte identical.
+    pub fn predict_next_pull<A: ArmSet>(&mut self, arms: &A)
+                                        -> Option<(Vec<usize>, u64)> {
+        if self.finished || self.init_heap_pending || self.pending.is_empty()
+        {
+            return None;
+        }
+        let t = self.params.policy.round_pulls;
+        if t == 0 {
+            return None;
+        }
+        let mut pred: Vec<usize> = Vec::new();
+        // pending arms: headroom after the in-flight pull lands
+        for &a in &self.pending {
+            let left = arms
+                .max_pulls(a)
+                .saturating_sub(self.states[a].pulls)
+                .saturating_sub(self.pending_t);
+            if left >= t {
+                pred.push(a);
+            }
+        }
+        // the heap's current lowest-LCB arms — what the next selection
+        // pops first (read via pop-fresh + re-push of identical keys)
+        let mut popped: Vec<usize> = Vec::new();
+        while popped.len() < self.params.policy.round_arms {
+            match self.pop_fresh() {
+                Some(a) => popped.push(a),
+                None => break,
+            }
+        }
+        for &a in &popped {
+            self.push_heap(a);
+        }
+        for &a in &popped {
+            if self.states[a].exact {
+                continue;
+            }
+            if arms.max_pulls(a).saturating_sub(self.states[a].pulls) >= t {
+                pred.push(a);
+            }
+        }
+        if pred.is_empty() { None } else { Some((pred, t)) }
+    }
+
     /// Advance scheduling until the run either completes or needs a
     /// uniform batch pull executed by the caller.
     ///
@@ -791,6 +859,150 @@ mod tests {
         let got: std::collections::HashSet<u32> =
             res.best.iter().map(|&(a, _)| arms.arm_id(a)).collect();
         assert_eq!(got, [1u32, 2u32].into_iter().collect());
+    }
+
+    #[test]
+    fn peek_fresh_lcb_skips_stale_and_removed_entries() {
+        let ds = synthetic::gaussian_iid(4, 32, 21);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(4, Some(0));
+        let arms =
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
+        let mut b = BmoUcb::new(&arms, BanditParams::default());
+        // seed arms with distinct means and positive variance so LCBs are
+        // finite and ordered: mean = arm index, sample variance = 16/15
+        for a in 0..3usize {
+            let m = a as f64;
+            b.record_samples(a, 16, 16.0 * m, 16.0 * m * m + 16.0);
+        }
+        for a in 0..3 {
+            b.push_heap(a);
+        }
+        // arm 0 has the lowest LCB; make its heap entry stale by bumping
+        // its version, then push the fresh replacement
+        let stale_len = b.heap.len();
+        b.record_samples(0, 16, 0.0, 16.0);
+        b.push_heap(0);
+        assert_eq!(b.heap.len(), stale_len + 1);
+        let want = b.lcb(0);
+        assert_eq!(b.peek_fresh_lcb(), want, "fresh LCB of arm 0");
+        // the stale arm-0 entry must have been dropped by the peek
+        assert_eq!(b.heap.len(), stale_len, "stale entry popped");
+        // removed arms are skipped even when their entry is fresh
+        b.states[0].removed = true;
+        let peeked = b.peek_fresh_lcb();
+        assert_eq!(peeked, b.lcb(1).min(b.lcb(2)),
+                   "removed arm 0 skipped");
+        // exhausted heap peeks +infinity
+        while b.pop_fresh().is_some() {}
+        assert_eq!(b.peek_fresh_lcb(), f64::INFINITY);
+    }
+
+    #[test]
+    fn emit_condition_tie_at_ucb_equals_second_lcb() {
+        let ds = synthetic::gaussian_iid(3, 32, 22);
+        let mut engine = ScalarEngine;
+        let query = ds.row_vec(0);
+        let rows = DenseArms::<ScalarEngine>::candidates(3, Some(0));
+        let arms =
+            DenseArms::new(&ds, &query, &rows, Metric::L2Sq, &mut engine);
+        let params = BanditParams {
+            sigma: SigmaMode::Fixed(1.0),
+            ..Default::default()
+        };
+        let mut b = BmoUcb::new(&arms, params);
+        // non-exact arm with mean 0: ucb = ci exactly (Fixed sigma)
+        b.record_samples(0, 16, 0.0, 0.0);
+        let c = b.ci(0);
+        assert!(c.is_finite() && c > 0.0);
+        assert_eq!(b.ucb(0), c);
+        // non-exact tie ucb == second_lcb: NOT separable (strict <) —
+        // the intervals still touch, so emitting would be unsound
+        assert!(!b.emit_condition(0, c), "non-exact tie must not emit");
+        // strictly below: emits
+        assert!(b.emit_condition(0, c + 1e-9));
+        // exact arm: interval is a point, so a tie means the competitor
+        // cannot be strictly better — emitting is correct (the paper's
+        // θ_(k)=θ_(k+1) remark)
+        b.set_exact(0, 0.5);
+        assert_eq!(b.ucb(0), 0.5);
+        assert!(b.emit_condition(0, 0.5), "exact tie must emit");
+        assert!(!b.emit_condition(0, 0.5 - 1e-9),
+                "exact arm above second LCB must not emit");
+    }
+
+    #[test]
+    fn predict_next_pull_does_not_perturb_the_run() {
+        // Driving a run with predict_next_pull called after every staged
+        // pull must produce bitwise-identical results and pull counts to
+        // a run that never predicts.
+        fn drive(seed: u64, predict: bool)
+                 -> (Vec<(usize, f64)>, Vec<u64>, u64) {
+            let ds = synthetic::gaussian_means(40, 256, 4.0, 1.0, seed);
+            let mut engine = ScalarEngine;
+            let query = ds.row_vec(0);
+            let rows = DenseArms::<ScalarEngine>::candidates(40, Some(0));
+            let mut arms = DenseArms::new(&ds, &query, &rows, Metric::L2Sq,
+                                          &mut engine);
+            let params = BanditParams {
+                k: 3,
+                policy: PullPolicy {
+                    init_pulls: 16,
+                    round_arms: 8,
+                    round_pulls: 32,
+                },
+                ..Default::default()
+            };
+            let mut b = BmoUcb::new(&arms, params);
+            let mut rng = Rng::new(seed + 100);
+            let mut c = Counter::new();
+            let mut sums = Vec::new();
+            let mut sqs = Vec::new();
+            let mut predictions = 0u64;
+            loop {
+                match b.begin_round(&mut arms, &mut rng, &mut c) {
+                    RoundAction::Done => break,
+                    RoundAction::Pull { t } => {
+                        if predict {
+                            if let Some((pred, pt)) =
+                                b.predict_next_pull(&arms)
+                            {
+                                predictions += 1;
+                                assert_eq!(pt, 32);
+                                // every pending arm with headroom is in
+                                // the predicted superset
+                                for &a in b.pending_arms() {
+                                    if arms.max_pulls(a)
+                                        >= b.states[a].pulls + 2 * pt
+                                    {
+                                        assert!(pred.contains(&a));
+                                    }
+                                }
+                                // predicted arms all have cap headroom
+                                for &a in &pred {
+                                    assert!(!b.states[a].exact);
+                                    assert!(b.states[a].pulls + pt
+                                            <= arms.max_pulls(a));
+                                }
+                            }
+                        }
+                        arms.pull_batch(b.pending_arms(), t, &mut rng,
+                                        &mut c, &mut sums, &mut sqs);
+                        b.end_round(&sums, &sqs);
+                    }
+                }
+            }
+            if predict {
+                assert!(predictions > 0, "no predictions exercised");
+            }
+            let res = b.result(&c);
+            (res.best, res.pulls_per_arm, c.get())
+        }
+        for seed in 0..3 {
+            assert_eq!(drive(seed, true), drive(seed, false),
+                       "seed {seed}");
+        }
     }
 
     #[test]

@@ -27,7 +27,9 @@
 //! `429` responses carry `Retry-After` in whole seconds (rounded up
 //! from the body's `retry_after_ms`, minimum 1). Connections are
 //! keep-alive by default (HTTP/1.1 semantics; `Connection: close`
-//! honored).
+//! honored). Every route's request wall-clock lands in its own
+//! per-route latency window, surfaced as the `routes` object of
+//! `GET /metrics`.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -36,7 +38,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::server::{epoch_bump_json, handle_knn,
-                                 reshard_json, stats_json, Shared};
+                                 record_route, reshard_json, stats_json,
+                                 Shared};
 use crate::runtime::placement::RetryPolicy;
 use crate::util::json::Json;
 
@@ -242,9 +245,31 @@ fn find_head_end(acc: &[u8]) -> Option<HeadEnd> {
         .map(|pos| HeadEnd { head_len: pos, total: pos + 2 })
 }
 
-/// Dispatch one request and write its response.
+/// Dispatch one request and write its response, recording the
+/// request's wall-clock (parse-to-write) under its route label in the
+/// server's per-route latency windows (`stats` / `GET /metrics`
+/// `routes` object). Unknown paths and wrong methods pool under
+/// "other" — the label set is static, so hostile paths cannot grow the
+/// metrics map.
 fn route(writer: &mut TcpStream, req: &Request, shared: &Shared,
          close: bool) -> std::io::Result<()> {
+    let t0 = std::time::Instant::now();
+    let label: &'static str =
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/knn") => "POST /knn",
+            ("GET", "/metrics") => "GET /metrics",
+            ("GET", "/healthz") => "GET /healthz",
+            ("POST", "/admin/epoch-bump") => "POST /admin/epoch-bump",
+            ("POST", "/admin/reshard") => "POST /admin/reshard",
+            _ => "other",
+        };
+    let result = dispatch(writer, req, shared, close);
+    record_route(shared, label, t0.elapsed());
+    result
+}
+
+fn dispatch(writer: &mut TcpStream, req: &Request, shared: &Shared,
+            close: bool) -> std::io::Result<()> {
     match (req.method.as_str(), req.path.as_str()) {
         ("POST", "/knn") => {
             let body = String::from_utf8_lossy(&req.body);

@@ -14,7 +14,12 @@
 //!   engine (the multiplexed remote ring) the round's wave is submitted
 //!   first and the drivers overlap per-query result emission with the
 //!   in-flight round trip (`submit_pull_batch` / `complete_sums`); the
-//!   scheduling, rng streams and outputs are identical either way.
+//!   scheduling, rng streams and outputs are identical either way. With
+//!   [`BatchOptions::speculate`] the drivers additionally pipeline
+//!   *across* rounds on a pipelined engine: a predicted round-t+1 wave
+//!   is submitted before round t retires and confirmed or discarded
+//!   when the real round t+1 is staged — same answers, less wall-clock
+//!   (see [`SpecStats`] and `BmoUcb::predict_next_pull`).
 //!   Query `i` of a
 //!   batch is answered with the rng stream `rng.fork(i as u64)` and is
 //!   bitwise-identical to the per-query path under that same stream, for
@@ -192,11 +197,67 @@ fn knn_degraded_dense<E: PullEngine, Q: AsRef<[f32]>>(
     results
 }
 
+/// Per-batch execution options of the dense lockstep drivers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchOptions {
+    /// absolute per-batch deadline budget (see
+    /// [`knn_batch_dense_deadline`]); `None` = unbounded
+    pub deadline: Option<Instant>,
+    /// speculative cross-round pipelining: submit a predicted round-t+1
+    /// wave before round t retires, confirm or discard it when the real
+    /// round t+1 is staged. Only effective on a pipelined engine
+    /// ([`PullEngine::pipelined`]); answers are bitwise-identical either
+    /// way, speculation only moves wall-clock.
+    pub speculate: bool,
+}
+
+/// Speculation accounting of one batch: how many speculated per-query
+/// pulls were submitted, and of those how many were confirmed (their
+/// results consumed in place of a real wave slot) vs discarded
+/// (prediction missed; wave abandoned). `speculated ==
+/// confirmed + discarded` always holds once a batch returns.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// speculated per-query pulls submitted ahead of confirmation
+    pub speculated: u64,
+    /// speculated pulls whose prediction matched the real round and
+    /// whose results were folded into arm state
+    pub confirmed: u64,
+    /// speculated pulls discarded because the real round diverged
+    pub discarded: u64,
+}
+
+impl SpecStats {
+    /// Fold another batch's counters into this one.
+    pub fn merge(&mut self, other: &SpecStats) {
+        self.speculated += other.speculated;
+        self.confirmed += other.confirmed;
+        self.discarded += other.discarded;
+    }
+}
+
 /// One query's staged pull within a multi-query round.
 struct StagedPull {
     slot: usize,
     rows: Vec<u32>,
     coords: Vec<u32>,
+}
+
+/// One query's speculated round-t+1 pull inside an in-flight speculative
+/// wave: the predicted superset rows, the coordinate draws its rng lane
+/// produced, and this entry's offset into the wave's result buffers.
+struct SpecEntry {
+    slot: usize,
+    rows: Vec<u32>,
+    coords: Vec<u32>,
+    off: usize,
+}
+
+/// A speculative wave in flight: the engine ticket plus the per-query
+/// entries needed to confirm or discard it next round.
+struct SpecWave {
+    ticket: WaveTicket,
+    entries: Vec<SpecEntry>,
 }
 
 /// Per-query state of the batch driver (the query vector itself stays in
@@ -253,9 +314,28 @@ pub fn knn_batch_dense_deadline<E: PullEngine, Q: AsRef<[f32]>>(
     counter: &mut Counter,
     deadline: Option<Instant>,
 ) -> Vec<KnnResult> {
+    knn_batch_dense_opts(data, queries, metric, params, engine, rng,
+                         counter, BatchOptions { deadline, speculate: false })
+        .0
+}
+
+/// [`knn_batch_dense_deadline`] with full [`BatchOptions`] (deadline +
+/// speculative pipelining) and per-batch [`SpecStats`] accounting.
+/// `BatchOptions::default()` is exactly [`knn_batch_dense`].
+#[allow(clippy::too_many_arguments)]
+pub fn knn_batch_dense_opts<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+    opts: BatchOptions,
+) -> (Vec<KnnResult>, SpecStats) {
     let excludes = vec![None; queries.len()];
-    knn_batch_dense_inner(data, queries, &excludes, metric, params, engine,
-                          rng, counter, deadline)
+    knn_batch_dense_rngs(data, queries, &excludes, metric, params, engine,
+                         BatchRngs::Forked(rng), counter, opts)
 }
 
 /// [`knn_batch_dense_deadline`] with **content-derived rng streams**:
@@ -281,10 +361,32 @@ pub fn knn_batch_dense_seeded<E: PullEngine, Q: AsRef<[f32]>>(
     counter: &mut Counter,
     deadline: Option<Instant>,
 ) -> Vec<KnnResult> {
+    knn_batch_dense_seeded_opts(data, queries, metric, params, engine,
+                                seeds, counter,
+                                BatchOptions { deadline, speculate: false })
+        .0
+}
+
+/// [`knn_batch_dense_seeded`] with full [`BatchOptions`] and per-batch
+/// [`SpecStats`] — the query server's driver when `[engine] speculate`
+/// is on. The per-slot answers are bitwise-identical for every
+/// `speculate` setting (the speculative lane draws from a *clone* of
+/// the slot rng, so the slot's own stream never moves).
+#[allow(clippy::too_many_arguments)]
+pub fn knn_batch_dense_seeded_opts<E: PullEngine, Q: AsRef<[f32]>>(
+    data: &DenseDataset,
+    queries: &[Q],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    seeds: &[u64],
+    counter: &mut Counter,
+    opts: BatchOptions,
+) -> (Vec<KnnResult>, SpecStats) {
     assert_eq!(queries.len(), seeds.len());
     let excludes = vec![None; queries.len()];
     knn_batch_dense_rngs(data, queries, &excludes, metric, params, engine,
-                         BatchRngs::Seeded(seeds), counter, deadline)
+                         BatchRngs::Seeded(seeds), counter, opts)
 }
 
 /// Batched k-NN for in-dataset points (self excluded) — the figure
@@ -298,13 +400,31 @@ pub fn knn_batch_points_dense<E: PullEngine>(
     rng: &mut Rng,
     counter: &mut Counter,
 ) -> Vec<KnnResult> {
+    knn_batch_points_dense_opts(data, points, metric, params, engine, rng,
+                                counter, BatchOptions::default())
+        .0
+}
+
+/// [`knn_batch_points_dense`] with full [`BatchOptions`] and per-batch
+/// [`SpecStats`] — the bench harness's speculation rung drives this.
+#[allow(clippy::too_many_arguments)]
+pub fn knn_batch_points_dense_opts<E: PullEngine>(
+    data: &DenseDataset,
+    points: &[usize],
+    metric: Metric,
+    params: &BanditParams,
+    engine: &mut E,
+    rng: &mut Rng,
+    counter: &mut Counter,
+    opts: BatchOptions,
+) -> (Vec<KnnResult>, SpecStats) {
     // query vectors are the dataset's own rows — borrow, don't copy
     let queries: Vec<&[f32]> =
         points.iter().map(|&q| data.row(q)).collect();
     let excludes: Vec<Option<usize>> =
         points.iter().map(|&q| Some(q)).collect();
-    knn_batch_dense_inner(data, &queries, &excludes, metric, params, engine,
-                          rng, counter, None)
+    knn_batch_dense_rngs(data, &queries, &excludes, metric, params, engine,
+                         BatchRngs::Forked(rng), counter, opts)
 }
 
 /// How the batch driver derives query `i`'s private rng stream.
@@ -330,22 +450,27 @@ impl BatchRngs<'_> {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn knn_batch_dense_inner<E: PullEngine, Q: AsRef<[f32]>>(
-    data: &DenseDataset,
-    queries: &[Q],
-    excludes: &[Option<usize>],
-    metric: Metric,
-    params: &BanditParams,
-    engine: &mut E,
-    rng: &mut Rng,
-    counter: &mut Counter,
-    deadline: Option<Instant>,
-) -> Vec<KnnResult> {
-    knn_batch_dense_rngs(data, queries, excludes, metric, params, engine,
-                         BatchRngs::Forked(rng), counter, deadline)
-}
-
+/// The lockstep batch driver all dense batch entry points funnel into.
+///
+/// **Speculative cross-round pipelining** (`opts.speculate`, effective
+/// only on a pipelined engine): after round t's real wave is submitted,
+/// the driver asks each live bandit for a predicted round-t+1 pull
+/// superset ([`BmoUcb::predict_next_pull`]), stages it against a *clone*
+/// of the slot's rng (the slot's own stream never moves) and a throwaway
+/// counter, and submits the speculative wave before round t retires.
+/// When round t+1's real pull is staged, each slot's entry is confirmed
+/// iff its coordinate draws match exactly and the real rows are a subset
+/// of the speculated rows — then the speculative results are gathered
+/// through the row permutation instead of submitting a real wave slot
+/// for that query. Mismatched entries are discarded and their wave
+/// abandoned ([`PullEngine::abandon_wave`]) without consuming failover
+/// attempts or deadline budget. Confirmation relies on the engine
+/// contract that per-row results depend only on (row, coords, query,
+/// metric) — never on which other rows share the wave — which is what
+/// `PullEngine::pull_batch`'s "results as if per-request
+/// `partial_sums`" clause already guarantees and the parity matrix
+/// pins. Scheduling, rng streams and outputs are bitwise-identical
+/// with speculation on or off; only wall-clock moves.
 #[allow(clippy::too_many_arguments)]
 fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
     data: &DenseDataset,
@@ -356,16 +481,22 @@ fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
     engine: &mut E,
     mut rngs: BatchRngs<'_>,
     counter: &mut Counter,
-    deadline: Option<Instant>,
-) -> Vec<KnnResult> {
+    opts: BatchOptions,
+) -> (Vec<KnnResult>, SpecStats) {
     assert_eq!(queries.len(), excludes.len());
+    let deadline = opts.deadline;
     // hand the budget to the engine before anything that might touch
     // the network — the coverage probe below must honor it too
     engine.set_deadline(deadline);
     if let Some(cov) = engine.coverage() {
-        return knn_degraded_dense(data, queries, excludes, metric,
-                                  params.k, engine, &cov, counter);
+        return (knn_degraded_dense(data, queries, excludes, metric,
+                                   params.k, engine, &cov, counter),
+                SpecStats::default());
     }
+    // speculation needs the submit/complete split to buy overlap; on a
+    // blocking engine the flag is structurally inert (no spec wave is
+    // ever built), keeping the hot loop byte-for-byte today's behavior
+    let speculate = opts.speculate && engine.pipelined();
     let d = data.d as f64;
     let mut slots: Vec<DenseSlot> = Vec::with_capacity(queries.len());
     for (i, q) in queries.iter().enumerate() {
@@ -396,6 +527,9 @@ fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
         (0..slots.len()).map(|_| None).collect();
     let mut remaining = slots.len();
     let (mut out_sum, mut out_sq) = (Vec::new(), Vec::new());
+    let (mut spec_sum, mut spec_sq) = (Vec::new(), Vec::new());
+    let mut spec_prev: Option<SpecWave> = None;
+    let mut stats = SpecStats::default();
     let mut rounds = 0u64;
     while remaining > 0 {
         // between-round budget check: this is what bounds *local*
@@ -439,20 +573,62 @@ fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
                 }
             }
         }
-        // phase 2: put the coalesced wave on the engine. A pipelined
-        // engine (the remote ring) has every sub-wave on the wire when
-        // submit returns, so the per-query bookkeeping below overlaps
-        // the network round trip; blocking engines keep the plain call
+        // phase 1.5 (speculation): match each staged pull against the
+        // speculative wave submitted last round. A slot confirms iff
+        // its entry's coordinate draws are identical (the slot rng
+        // advanced exactly as the speculative clone did — no inline
+        // ragged pulls or exact evals intervened) and the real rows are
+        // a subset of the speculated superset; `hits[i]` then carries
+        // the entry index and the row permutation to gather through.
+        // Pure comparison — no I/O, no rng, no arm state touched.
+        let hits: Vec<Option<(usize, Vec<usize>)>> = match &spec_prev {
+            None => (0..staged.len()).map(|_| None).collect(),
+            Some(w) => staged
+                .iter()
+                .map(|s| {
+                    let ei = w.entries
+                        .iter()
+                        .position(|e| e.slot == s.slot)?;
+                    let e = &w.entries[ei];
+                    if e.coords != s.coords {
+                        return None;
+                    }
+                    let pos: std::collections::HashMap<u32, usize> = e
+                        .rows
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &r)| (r, j))
+                        .collect();
+                    let mut perm = Vec::with_capacity(s.rows.len());
+                    for &r in &s.rows {
+                        perm.push(*pos.get(&r)?);
+                    }
+                    Some((ei, perm))
+                })
+                .collect(),
+        };
+        // phase 2: put the coalesced wave on the engine — only the
+        // slots the speculation missed (with full confirmation the
+        // round needs no real wave at all). A pipelined engine (the
+        // remote ring) has every sub-wave on the wire when submit
+        // returns, so the per-query bookkeeping below overlaps the
+        // network round trip; blocking engines keep the plain call
         // (it reuses the out_sum/out_sq scratch across rounds).
-        let ticket: Option<WaveTicket> = if staged.is_empty() {
+        let misses: Vec<usize> = (0..staged.len())
+            .filter(|&i| hits[i].is_none())
+            .collect();
+        let ticket: Option<WaveTicket> = if misses.is_empty() {
             None
         } else {
-            let reqs: Vec<PullRequest> = staged
+            let reqs: Vec<PullRequest> = misses
                 .iter()
-                .map(|s| PullRequest {
-                    query: queries[s.slot].as_ref(),
-                    rows: &s.rows,
-                    coord_ids: &s.coords,
+                .map(|&i| {
+                    let s = &staged[i];
+                    PullRequest {
+                        query: queries[s.slot].as_ref(),
+                        rows: &s.rows,
+                        coord_ids: &s.coords,
+                    }
                 })
                 .collect();
             if engine.pipelined() {
@@ -462,6 +638,54 @@ fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
                                   &mut out_sq);
                 None
             }
+        };
+        // phase 2.5 (speculation): predict round t+1 and put its wave
+        // on the wire while round t is still in flight — this is the
+        // overlap that removes the per-round round trip from the
+        // critical path. The speculative staging draws from a *clone*
+        // of each slot's rng and charges a throwaway counter, so the
+        // slot's own stream and accounting never move and
+        // speculation-off stays byte-for-byte identical.
+        let spec_next: Option<SpecWave> = if speculate && !staged.is_empty()
+        {
+            let mut entries: Vec<SpecEntry> = Vec::new();
+            let mut off = 0usize;
+            for s in &staged {
+                let slot = &mut slots[s.slot];
+                let mut arms = DenseArms::new(data, queries[s.slot].as_ref(),
+                                              &slot.rows, metric, engine);
+                if let Some((pred, t)) =
+                    slot.bandit.predict_next_pull(&arms)
+                {
+                    let mut spec_rng = slot.rng.clone();
+                    let mut scrap = Counter::new();
+                    let (rows, coords) = arms.stage_pull(&pred, t,
+                                                         &mut spec_rng,
+                                                         &mut scrap);
+                    let n_rows = rows.len();
+                    entries.push(SpecEntry { slot: s.slot, rows, coords,
+                                             off });
+                    off += n_rows;
+                }
+            }
+            if entries.is_empty() {
+                None
+            } else {
+                let reqs: Vec<PullRequest> = entries
+                    .iter()
+                    .map(|e| PullRequest {
+                        query: queries[e.slot].as_ref(),
+                        rows: &e.rows,
+                        coord_ids: &e.coords,
+                    })
+                    .collect();
+                let spec_ticket =
+                    engine.submit_pull_batch(data, &reqs, metric);
+                stats.speculated += entries.len() as u64;
+                Some(SpecWave { ticket: spec_ticket, entries })
+            }
+        } else {
+            None
         };
         // overlapped with the in-flight wave: emit the results of the
         // queries that finished this round
@@ -479,26 +703,73 @@ fn knn_batch_dense_rngs<E: PullEngine, Q: AsRef<[f32]>>(
                 coverage: None,
             });
         }
-        // phase 3: collect the wave's replies and scatter them back
-        // into each bandit (per-query end_round accounting)
+        // phase 3: collect the waves' replies and scatter them back
+        // into each bandit (per-query end_round accounting). Confirmed
+        // slots gather from the speculative wave through their row
+        // permutation (per-row results are position-independent, see
+        // the fn docs); missed slots consume the real wave in order.
         if !staged.is_empty() {
             if let Some(t) = ticket {
                 engine.complete_sums(t, &mut out_sum, &mut out_sq);
             }
+            let confirmed = hits.iter().flatten().count() as u64;
+            let spec_entries: Option<Vec<SpecEntry>> =
+                if let Some(w) = spec_prev.take() {
+                    stats.confirmed += confirmed;
+                    stats.discarded += w.entries.len() as u64 - confirmed;
+                    if confirmed > 0 {
+                        engine.complete_sums(w.ticket, &mut spec_sum,
+                                             &mut spec_sq);
+                        Some(w.entries)
+                    } else {
+                        engine.abandon_wave(w.ticket);
+                        None
+                    }
+                } else {
+                    None
+                };
             let mut off = 0usize;
-            for s in &staged {
-                let m = s.rows.len();
-                slots[s.slot].bandit.end_round(&out_sum[off..off + m],
-                                               &out_sq[off..off + m]);
-                off += m;
+            let (mut gsum, mut gsq) = (Vec::new(), Vec::new());
+            for (i, s) in staged.iter().enumerate() {
+                match &hits[i] {
+                    Some((ei, perm)) => {
+                        let e = &spec_entries.as_ref().unwrap()[*ei];
+                        gsum.clear();
+                        gsq.clear();
+                        for &j in perm {
+                            gsum.push(spec_sum[e.off + j]);
+                            gsq.push(spec_sq[e.off + j]);
+                        }
+                        slots[s.slot].bandit.end_round(&gsum, &gsq);
+                    }
+                    None => {
+                        let m = s.rows.len();
+                        slots[s.slot].bandit.end_round(
+                            &out_sum[off..off + m],
+                            &out_sq[off..off + m]);
+                        off += m;
+                    }
+                }
             }
+        } else if let Some(w) = spec_prev.take() {
+            // every slot went Done before consuming the speculation:
+            // the final round never staged, discard the orphan wave
+            stats.discarded += w.entries.len() as u64;
+            engine.abandon_wave(w.ticket);
         }
+        spec_prev = spec_next;
         remaining = slots.iter().filter(|s| !s.done).count();
+    }
+    debug_assert!(spec_prev.is_none(),
+                  "a speculative wave outlived the lockstep loop");
+    if let Some(w) = spec_prev.take() {
+        stats.discarded += w.entries.len() as u64;
+        engine.abandon_wave(w.ticket);
     }
     for slot in &slots {
         counter.add(slot.counter.get());
     }
-    results.into_iter().map(|r| r.unwrap()).collect()
+    (results.into_iter().map(|r| r.unwrap()).collect(), stats)
 }
 
 /// k-NN of an in-dataset point — sparse box (§IV-A).
@@ -965,6 +1236,154 @@ mod tests {
         assert_eq!(alone[0].dists, shared[1].dists);
         assert_eq!(alone[0].metrics.dist_computations,
                    shared[1].metrics.dist_computations);
+    }
+
+    /// [`ScalarEngine`] that *claims* to be pipelined: the eager default
+    /// submit/complete/abandon machinery then drives the speculative
+    /// driver paths (predict, confirm-with-gather, discard-and-abandon)
+    /// without a network in the loop.
+    struct PipelinedScalar;
+
+    impl PullEngine for PipelinedScalar {
+        fn partial_sums(
+            &mut self,
+            data: &DenseDataset,
+            query: &[f32],
+            rows: &[u32],
+            coord_ids: &[u32],
+            metric: Metric,
+            out_sum: &mut Vec<f64>,
+            out_sq: &mut Vec<f64>,
+        ) {
+            ScalarEngine.partial_sums(data, query, rows, coord_ids, metric,
+                                      out_sum, out_sq)
+        }
+
+        fn exact_dists(
+            &mut self,
+            data: &DenseDataset,
+            query: &[f32],
+            rows: &[u32],
+            metric: Metric,
+            out: &mut Vec<f64>,
+        ) {
+            ScalarEngine.exact_dists(data, query, rows, metric, out)
+        }
+
+        fn pipelined(&self) -> bool {
+            true
+        }
+
+        fn name(&self) -> &'static str {
+            "pipelined-scalar"
+        }
+    }
+
+    #[test]
+    fn speculation_is_bitwise_invisible_with_live_hit_and_miss_paths() {
+        // speculation on vs off must agree bitwise on every answer and
+        // every unit count, while genuinely exercising both the
+        // confirm (gather-through-permutation) and the discard
+        // (abandon-wave) paths across seeds
+        let ds = synthetic::image_like(60, 400, 51);
+        let p = BanditParams {
+            k: 5,
+            delta: 0.01,
+            policy: PullPolicy {
+                init_pulls: 32,
+                round_arms: 32,
+                round_pulls: 64,
+            },
+            ..Default::default()
+        };
+        let mut total = SpecStats::default();
+        for seed in 0u64..3 {
+            let points: Vec<usize> = (0..3)
+                .map(|i| (seed as usize * 11 + i * 7) % 60)
+                .collect();
+            let mut r1 = Rng::new(seed);
+            let mut c1 = Counter::new();
+            let (off, s_off) = knn_batch_points_dense_opts(
+                &ds, &points, Metric::L2Sq, &p, &mut PipelinedScalar,
+                &mut r1, &mut c1, BatchOptions::default());
+            assert_eq!(s_off, SpecStats::default(),
+                       "speculation-off must count nothing");
+            let mut r2 = Rng::new(seed);
+            let mut c2 = Counter::new();
+            let (on, s_on) = knn_batch_points_dense_opts(
+                &ds, &points, Metric::L2Sq, &p, &mut PipelinedScalar,
+                &mut r2, &mut c2,
+                BatchOptions { speculate: true, ..Default::default() });
+            for (a, b) in off.iter().zip(&on) {
+                assert_eq!(a.ids, b.ids, "seed {seed}");
+                assert_eq!(a.dists, b.dists, "seed {seed}");
+                assert_eq!(a.metrics.dist_computations,
+                           b.metrics.dist_computations, "seed {seed}");
+            }
+            assert_eq!(c1.get(), c2.get(), "seed {seed}");
+            assert_eq!(s_on.speculated, s_on.confirmed + s_on.discarded,
+                       "counter invariant: {s_on:?}");
+            total.merge(&s_on);
+        }
+        assert!(total.speculated > 0, "no speculative pulls submitted");
+        assert!(total.confirmed > 0, "prediction never confirmed: {total:?}");
+        assert!(total.discarded > 0, "prediction never missed: {total:?}");
+    }
+
+    #[test]
+    fn speculate_flag_is_inert_on_blocking_engines() {
+        // a non-pipelined engine must see the identical call sequence
+        // whether or not the flag is set — no speculative waves exist
+        let ds = synthetic::image_like(40, 128, 53);
+        let queries: Vec<Vec<f32>> =
+            (0..3).map(|i| ds.row_vec(i * 9)).collect();
+        let p = params(3);
+        let mut r1 = Rng::new(54);
+        let mut c1 = Counter::new();
+        let (off, s_off) = knn_batch_dense_opts(
+            &ds, &queries, Metric::L2Sq, &p, &mut ScalarEngine, &mut r1,
+            &mut c1, BatchOptions::default());
+        let mut r2 = Rng::new(54);
+        let mut c2 = Counter::new();
+        let (on, s_on) = knn_batch_dense_opts(
+            &ds, &queries, Metric::L2Sq, &p, &mut ScalarEngine, &mut r2,
+            &mut c2, BatchOptions { speculate: true, ..Default::default() });
+        assert_eq!(s_off, SpecStats::default());
+        assert_eq!(s_on, SpecStats::default(),
+                   "blocking engine must never speculate");
+        for (a, b) in off.iter().zip(&on) {
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.dists, b.dists);
+        }
+        assert_eq!(c1.get(), c2.get());
+    }
+
+    #[test]
+    fn seeded_speculation_matches_solo_under_same_seed() {
+        // the serving path: seeded streams + speculation must still be
+        // bitwise-identical to the solo per-query runs the result cache
+        // relies on
+        let ds = synthetic::image_like(60, 256, 41);
+        let p = params(3);
+        let queries: Vec<Vec<f32>> =
+            (0..4).map(|i| ds.row_vec(i * 7)).collect();
+        let seeds: Vec<u64> = (0..4).map(|i| 0x5EEDu64 * 31 + i).collect();
+        let mut c = Counter::new();
+        let (batch, stats) = knn_batch_dense_seeded_opts(
+            &ds, &queries, Metric::L2Sq, &p, &mut PipelinedScalar, &seeds,
+            &mut c, BatchOptions { speculate: true, ..Default::default() });
+        assert_eq!(stats.speculated, stats.confirmed + stats.discarded);
+        for ((q, &seed), b) in queries.iter().zip(&seeds).zip(&batch) {
+            let mut rng = Rng::new(seed);
+            let mut sc = Counter::new();
+            let solo = knn_query_dense(&ds, q, Metric::L2Sq, &p,
+                                       &mut ScalarEngine, &mut rng,
+                                       &mut sc);
+            assert_eq!(solo.ids, b.ids);
+            assert_eq!(solo.dists, b.dists);
+            assert_eq!(solo.metrics.dist_computations,
+                       b.metrics.dist_computations);
+        }
     }
 
     #[test]

@@ -53,7 +53,10 @@
 //!             {"ok":true, "queries":q, "units":u, "p50_us":_, "p99_us":_,
 //!              "batches":b, "mean_batch":_, "max_batch":_,
 //!              "batch_p50_us":_, "batch_p99_us":_, "workers":w,
-//!              "shed":_, "deadline_exceeded":_}
+//!              "shed":_, "deadline_exceeded":_, "speculated":_,
+//!              "spec_confirmed":_, "spec_discarded":_,
+//!              "routes":{"op:knn":{"count":_, "mean_us":_, "p50_us":_,
+//!              "p99_us":_}, ...}}
 //!             {"ok":false, "error":"..."}
 //!             {"ok":false, "error":"...", "kind":"deadline_exceeded"}
 //!             {"ok":false, "error":"...", "kind":"overload",
@@ -98,7 +101,7 @@
 //! `GET /metrics` surface the current `placement_epoch` plus a
 //! per-endpoint `ring` health array for observability.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -109,7 +112,7 @@ use crate::config::EngineKind;
 use crate::coordinator::arms::PullEngine;
 use crate::coordinator::bandit::BanditParams;
 use crate::coordinator::cache::{hash_query, CacheKey, ResultCache};
-use crate::coordinator::knn::knn_batch_dense_seeded;
+use crate::coordinator::knn::{knn_batch_dense_seeded_opts, BatchOptions};
 use crate::runtime::wire::{dataset_fingerprint, is_deadline_error};
 use crate::data::dense::{DenseDataset, Metric};
 use crate::metrics::{BatchStats, Counter, LatencyStats};
@@ -179,6 +182,15 @@ pub struct ServerConfig {
     /// shared ring client (`[engine] io_timeout_ms` /
     /// `--io-timeout-ms`); remote configurations only. Must be > 0.
     pub io_timeout_ms: u64,
+    /// speculative cross-round wave pipelining (`[engine] speculate` /
+    /// `--speculate`): workers overlap each bandit round's retirement
+    /// with the next round's predicted pull wave on pipelined (remote)
+    /// engines, abandoning mispredicted waves without consuming
+    /// failover attempts or deadline budget. Answers stay
+    /// bitwise-identical; speculated/confirmed/discarded pull counts
+    /// surface via `stats` / `GET /metrics`. Off by default; inert on
+    /// local (blocking) engines.
+    pub speculate: bool,
     /// placement epoch to pin the initial ring connect to (`[engine]
     /// epoch` / `--epoch`, remote configurations only): nonzero makes
     /// the workers refuse endpoints carrying any other epoch — for
@@ -219,6 +231,7 @@ impl Default for ServerConfig {
             deadline_ms: 0,
             max_queue: 0,
             io_timeout_ms: 60_000,
+            speculate: false,
             epoch: 0,
             http_port: None,
             cache_entries: 0,
@@ -266,6 +279,13 @@ pub(crate) struct Shared {
     total_queries: AtomicU64,
     /// per-query latency, enqueue → response ready (includes queue wait)
     latencies: Mutex<LatencyStats>,
+    /// per-route/per-op latency windows, keyed by route label ("POST
+    /// /knn", "GET /metrics", ... for the HTTP front door; "op:knn",
+    /// "op:stats", ... for the line protocol). Each value is its own
+    /// [`LatencyStats`] ring window, so a slow admin op can never skew
+    /// the serving percentiles and vice versa; surfaced as the
+    /// `routes` object of `stats` / `GET /metrics`.
+    route_lat: Mutex<BTreeMap<&'static str, LatencyStats>>,
     /// per-worker-pass batch accounting
     batches: Mutex<BatchStats>,
     /// the one multiplexed ring client every worker's `RemoteEngine`
@@ -425,6 +445,7 @@ impl Server {
             total_units: AtomicU64::new(0),
             total_queries: AtomicU64::new(0),
             latencies: Mutex::new(LatencyStats::default()),
+            route_lat: Mutex::new(BTreeMap::new()),
             batches: Mutex::new(BatchStats::default()),
             ring: Mutex::new(None),
             placement,
@@ -648,15 +669,26 @@ fn worker_loop(shared: Arc<Shared>) {
                 // the affected queries with an error, and rebuild the
                 // engine (its internals may be poisoned mid-wave; a
                 // remote engine reconnects to the ring)
+                let opts = BatchOptions {
+                    deadline,
+                    speculate: shared.config.speculate,
+                };
                 let outcome = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
-                        knn_batch_dense_seeded(
+                        knn_batch_dense_seeded_opts(
                             &shared.data, &queries, shared.config.metric,
-                            &params, eng, &seeds, &mut counter,
-                            deadline)
+                            &params, eng, &seeds, &mut counter, opts)
                     }));
                 let results = match outcome {
-                    Ok(results) => results,
+                    Ok((results, spec)) => {
+                        if spec.speculated > 0 {
+                            shared.batches.lock().unwrap()
+                                .record_speculation(spec.speculated,
+                                                    spec.confirmed,
+                                                    spec.discarded);
+                        }
+                        results
+                    }
                     Err(payload) => {
                         // a deadline-budget expiry travels the same
                         // panic channel as a real crash but means the
@@ -876,24 +908,35 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>)
                 Err(e) => return Err(e),
             }
         };
-        let resp = match Json::parse(line.trim()) {
-            Err(e) => err_json(&format!("bad json: {e}")),
-            Ok(req) => {
-                match req.get("op").and_then(|o| o.as_str()) {
-                    Some("ping") => Json::obj(vec![("ok", Json::Bool(true))]),
-                    Some("stats") => stats_json(&shared),
-                    Some("shutdown") => {
-                        shared.shutdown.store(true, Ordering::SeqCst);
-                        shared.queue_cv.notify_all();
-                        Json::obj(vec![("ok", Json::Bool(true))])
+        let t0 = Instant::now();
+        let (label, resp): (&'static str, Json) =
+            match Json::parse(line.trim()) {
+                Err(e) => ("op:other",
+                           err_json(&format!("bad json: {e}"))),
+                Ok(req) => {
+                    match req.get("op").and_then(|o| o.as_str()) {
+                        Some("ping") => {
+                            ("op:ping",
+                             Json::obj(vec![("ok", Json::Bool(true))]))
+                        }
+                        Some("stats") => ("op:stats", stats_json(&shared)),
+                        Some("shutdown") => {
+                            shared.shutdown.store(true, Ordering::SeqCst);
+                            shared.queue_cv.notify_all();
+                            ("op:shutdown",
+                             Json::obj(vec![("ok", Json::Bool(true))]))
+                        }
+                        Some("knn") => ("op:knn",
+                                        handle_knn(&req, &shared)),
+                        Some("epoch-bump") => ("op:epoch-bump",
+                                               epoch_bump_json(&shared)),
+                        Some("reshard") => ("op:reshard",
+                                            reshard_json(&req, &shared)),
+                        _ => ("op:other", err_json("unknown op")),
                     }
-                    Some("knn") => handle_knn(&req, &shared),
-                    Some("epoch-bump") => epoch_bump_json(&shared),
-                    Some("reshard") => reshard_json(&req, &shared),
-                    _ => err_json("unknown op"),
                 }
-            }
-        };
+            };
+        record_route(&shared, label, t0.elapsed());
         writer.write_all(resp.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -1141,6 +1184,43 @@ fn ring_health_json(shared: &Shared) -> Json {
     )
 }
 
+/// Record one request's wall-clock under its route/op label ("POST
+/// /knn" for HTTP, "op:knn" for the line protocol, ...). Labels are
+/// `&'static str` by construction, so client input can never grow the
+/// map; each label owns an independent [`LatencyStats`] ring window.
+pub(crate) fn record_route(shared: &Shared, label: &'static str,
+                           elapsed: Duration) {
+    shared
+        .route_lat
+        .lock()
+        .unwrap()
+        .entry(label)
+        .or_default()
+        .record(elapsed);
+}
+
+/// The `routes` object of `stats`: per-route/per-op latency summaries
+/// over each label's retained window, plus lifetime counts.
+fn routes_json(shared: &Shared) -> Json {
+    let rl = shared.route_lat.lock().unwrap();
+    Json::obj(
+        rl.iter()
+            .map(|(label, l)| {
+                (*label,
+                 Json::obj(vec![
+                     ("count", Json::Num(l.count() as f64)),
+                     ("mean_us",
+                      Json::Num(l.mean().as_micros() as f64)),
+                     ("p50_us",
+                      Json::Num(l.percentile(50.0).as_micros() as f64)),
+                     ("p99_us",
+                      Json::Num(l.percentile(99.0).as_micros() as f64)),
+                 ]))
+            })
+            .collect(),
+    )
+}
+
 /// The `stats` body, shared verbatim with `GET /metrics` on the HTTP
 /// front door — one set of counters, two transports.
 pub(crate) fn stats_json(shared: &Shared) -> Json {
@@ -1176,6 +1256,16 @@ pub(crate) fn stats_json(shared: &Shared) -> Json {
         ("shed", Json::Num(batches.shed() as f64)),
         ("deadline_exceeded",
          Json::Num(batches.deadline_exceeded() as f64)),
+        // speculative pipelining accounting (all 0 with --speculate
+        // off or a local engine): speculated == confirmed + discarded
+        ("speculated", Json::Num(batches.speculated() as f64)),
+        ("spec_confirmed",
+         Json::Num(batches.spec_confirmed() as f64)),
+        ("spec_discarded",
+         Json::Num(batches.spec_discarded() as f64)),
+        // per-route/per-op latency windows (line-protocol ops carry an
+        // "op:" prefix; HTTP routes their method + path)
+        ("routes", routes_json(shared)),
         ("cache_hits", Json::Num(cache_hits as f64)),
         ("cache_misses", Json::Num(cache_misses as f64)),
         ("cache_entries", Json::Num(cache_len as f64)),
@@ -1372,6 +1462,45 @@ mod tests {
     }
 
     #[test]
+    fn stats_surface_route_latencies_and_speculation_counters() {
+        let ds = synthetic::image_like(40, 64, 142);
+        let q = ds.row_vec(5);
+        let mut srv = Server::start(ds, free_port_config()).unwrap();
+        let mut cl = Client::connect(&srv.addr).unwrap();
+        let _ = cl
+            .request(&Json::obj(vec![("op", Json::Str("ping".into()))]))
+            .unwrap();
+        let _ = cl.knn(&q, 2).unwrap();
+        let stats = cl
+            .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+            .unwrap();
+        // local engine, speculation off: all three counters pinned at 0
+        for f in ["speculated", "spec_confirmed", "spec_discarded"] {
+            assert_eq!(stats.get(f).and_then(|v| v.as_f64()), Some(0.0),
+                       "{f} should be 0 on a local server");
+        }
+        // every line-protocol op served so far has its own latency
+        // window under an "op:" label
+        let routes = stats.get("routes").expect("routes object");
+        for op in ["op:ping", "op:knn"] {
+            let r = routes.get(op)
+                .unwrap_or_else(|| panic!("missing route {op}"));
+            assert_eq!(r.get("count").and_then(|v| v.as_usize()), Some(1),
+                       "{op} count");
+            assert!(r.get("p99_us").and_then(|v| v.as_f64()).is_some());
+            assert!(r.get("mean_us").and_then(|v| v.as_f64()).is_some());
+        }
+        // the stats op that produced this body is itself recorded only
+        // for *prior* calls; a second read must show it
+        let stats2 = cl
+            .request(&Json::obj(vec![("op", Json::Str("stats".into()))]))
+            .unwrap();
+        let r = stats2.get("routes").unwrap().get("op:stats").unwrap();
+        assert!(r.get("count").and_then(|v| v.as_usize()).unwrap() >= 1);
+        srv.stop();
+    }
+
+    #[test]
     fn rejects_bad_requests() {
         let ds = synthetic::image_like(30, 32, 133);
         let mut srv = Server::start(ds, free_port_config()).unwrap();
@@ -1435,6 +1564,7 @@ mod tests {
             total_units: AtomicU64::new(0),
             total_queries: AtomicU64::new(0),
             latencies: Mutex::new(LatencyStats::default()),
+            route_lat: Mutex::new(BTreeMap::new()),
             batches: Mutex::new(BatchStats::default()),
             ring: Mutex::new(None),
             placement,

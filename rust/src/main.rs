@@ -73,6 +73,9 @@ fn load_config(args: &Args) -> Result<BmonnConfig, String> {
     if args.flag_bool("quantized") {
         cfg.quantized = true;
     }
+    if args.flag_bool("speculate") {
+        cfg.speculate = true;
+    }
     cfg.epoch = args.flag_u64("epoch", cfg.epoch)?;
     cfg.io_timeout_ms =
         args.flag_u64("io-timeout-ms", cfg.io_timeout_ms)?;
@@ -284,13 +287,15 @@ fn cmd_knn(args: &Args) -> Result<(), String> {
 /// coalesced multi-query driver (the server's execution path).
 fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
                  q0: usize, batch: usize) -> Result<(), String> {
-    use bmonn::coordinator::knn::knn_batch_points_dense;
+    use bmonn::coordinator::knn::{knn_batch_points_dense_opts,
+                                  BatchOptions};
     let points: Vec<usize> =
         (q0..q0 + batch).map(|i| i % data.n).collect();
     let params = cfg.bandit_params();
     let mut rng = Rng::new(cfg.seed);
     let mut counter = Counter::new();
-    let results = match cfg.engine {
+    let opts = BatchOptions { deadline: None, speculate: cfg.speculate };
+    let (results, spec) = match cfg.engine {
         EngineKind::Pjrt => {
             if cfg.shards > 1 || !cfg.remote.is_empty() {
                 return Err("--shards/--remote apply to host engines \
@@ -301,8 +306,9 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
                     .map_err(|e| e.to_string())?;
             let mut p = params.clone();
             p.policy.round_pulls = e.round_pulls();
-            knn_batch_points_dense(data, &points, cfg.metric, &p, &mut e,
-                                   &mut rng, &mut counter)
+            knn_batch_points_dense_opts(data, &points, cfg.metric, &p,
+                                        &mut e, &mut rng, &mut counter,
+                                        opts)
         }
         kind => {
             let mut e = build_host_engine(
@@ -310,10 +316,16 @@ fn cmd_knn_batch(cfg: &BmonnConfig, data: &bmonn::data::DenseDataset,
                 cfg.quantized, false,
                 Some(std::time::Duration::from_millis(
                     cfg.io_timeout_ms)))?;
-            knn_batch_points_dense(data, &points, cfg.metric, &params,
-                                   &mut e, &mut rng, &mut counter)
+            knn_batch_points_dense_opts(data, &points, cfg.metric,
+                                        &params, &mut e, &mut rng,
+                                        &mut counter, opts)
         }
     };
+    if spec.speculated > 0 {
+        println!("speculation: {} pulls speculated, {} confirmed, {} \
+                  discarded",
+                 spec.speculated, spec.confirmed, spec.discarded);
+    }
     for (&q, res) in points.iter().zip(&results) {
         println!("query {q}:");
         print_answer(&res.ids, &res.dists,
@@ -457,6 +469,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                                    cfg.server_deadline_ms)?,
         max_queue: args.flag_usize("max-queue", cfg.server_max_queue)?,
         io_timeout_ms: cfg.io_timeout_ms,
+        speculate: cfg.speculate,
         epoch: cfg.epoch,
         // Option semantics ("absent = no HTTP") don't fit flag_u64's
         // default-value shape — parse by hand

@@ -313,6 +313,9 @@ pub struct BatchStats {
     max_batch: u64,
     shed: u64,
     deadline_exceeded: u64,
+    speculated: u64,
+    spec_confirmed: u64,
+    spec_discarded: u64,
     lat: LatencyStats,
 }
 
@@ -333,6 +336,33 @@ impl BatchStats {
     /// (budget expired in the queue or mid-compute).
     pub fn record_deadline_exceeded(&mut self, n: u64) {
         self.deadline_exceeded += n;
+    }
+
+    /// Record one batched pass's speculative-pipelining outcome:
+    /// `speculated` per-query pulls submitted early, of which
+    /// `confirmed` matched the real round (their results were reused)
+    /// and the rest were discarded. `speculated == confirmed +
+    /// discarded` always; all three stay 0 with speculation off.
+    pub fn record_speculation(&mut self, speculated: u64, confirmed: u64,
+                              discarded: u64) {
+        self.speculated += speculated;
+        self.spec_confirmed += confirmed;
+        self.spec_discarded += discarded;
+    }
+
+    /// Speculative per-query pulls submitted ahead of their round.
+    pub fn speculated(&self) -> u64 {
+        self.speculated
+    }
+
+    /// Speculative pulls whose prediction matched and were reused.
+    pub fn spec_confirmed(&self) -> u64 {
+        self.spec_confirmed
+    }
+
+    /// Speculative pulls abandoned on misprediction.
+    pub fn spec_discarded(&self) -> u64 {
+        self.spec_discarded
     }
 
     /// Queries shed at admission since startup.
@@ -517,6 +547,24 @@ mod tests {
         // overload accounting never perturbs the batch/latency series
         assert_eq!(b.batches(), 3);
         assert_eq!(b.queries(), 13);
+    }
+
+    #[test]
+    fn batch_stats_speculation_counters() {
+        let mut b = BatchStats::default();
+        assert_eq!((b.speculated(), b.spec_confirmed(),
+                    b.spec_discarded()),
+                   (0, 0, 0));
+        b.record_speculation(10, 4, 6);
+        b.record_speculation(5, 5, 0);
+        assert_eq!(b.speculated(), 15);
+        assert_eq!(b.spec_confirmed(), 9);
+        assert_eq!(b.spec_discarded(), 6);
+        assert_eq!(b.speculated(),
+                   b.spec_confirmed() + b.spec_discarded());
+        // speculation accounting never perturbs the batch series
+        assert_eq!(b.batches(), 0);
+        assert_eq!(b.queries(), 0);
     }
 
     #[test]

@@ -2348,6 +2348,17 @@ impl PullEngine for RemoteEngine {
         }
     }
 
+    fn abandon_wave(&mut self, ticket: WaveTicket) {
+        // discard a speculative wave that missed: reclaim the planner,
+        // drop the sub-waves without waiting on them. `SubWave::wait` is
+        // where failover attempts and deadline budget are spent, so an
+        // abandoned wave consumes neither; the shard's late reply just
+        // clears its pending demux slot when the reader routes it.
+        if let Some(w) = self.inflight.remove(&ticket.key()) {
+            self.spare_parts.push(w.partition);
+        }
+    }
+
     fn coverage(&mut self) -> Option<Coverage> {
         self.client.coverage_deadline(self.deadline)
     }

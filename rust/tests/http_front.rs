@@ -85,6 +85,19 @@ fn front_door_speaks_http_with_real_status_codes() {
     assert_eq!(status, 405);
     assert!(headers.iter().any(|(n, v)| n == "allow" && v == "POST"),
             "405 must name the allowed method: {headers:?}");
+    // per-route latency windows: every route exercised above has its
+    // own row, and unknown paths / wrong methods pool under "other"
+    let m = metrics(&http);
+    let routes = m.get("routes").expect("routes object in /metrics");
+    for r in ["POST /knn", "GET /metrics", "GET /healthz", "other"] {
+        let row = routes.get(r)
+            .unwrap_or_else(|| panic!("missing route {r}: {m}"));
+        assert!(row.get("count").and_then(|v| v.as_usize()).unwrap()
+                    >= 1,
+                "route {r} recorded nothing");
+        assert!(row.get("p99_us").and_then(|v| v.as_f64()).is_some());
+        assert!(row.get("mean_us").and_then(|v| v.as_f64()).is_some());
+    }
     srv.stop();
 }
 

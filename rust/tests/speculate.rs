@@ -1,0 +1,196 @@
+//! Speculative cross-round pipelining parity matrix: `--speculate`
+//! must be **bitwise-invisible** on every engine substrate. The same
+//! batched k-NN workload runs solo (single-threaded `NativeEngine`),
+//! locally sharded (`build_host_engine`), over remote loopback rings
+//! (`RemoteEngine`, the pipelined substrate where speculation actually
+//! engages), and multiplexed (two engines sharing one `RingClient`,
+//! including concurrently on separate threads) — each with speculation
+//! off and on — and every run's ids, distances and caller-visible
+//! `Counter` charge must equal the solo speculation-off reference
+//! exactly. Blocking substrates must additionally report all-zero
+//! speculation counters even when asked to speculate, and pipelined
+//! runs must uphold `speculated == confirmed + discarded` while
+//! actually confirming waves (the overlap is real, not vacuous).
+
+use std::sync::Arc;
+
+use bmonn::config::EngineKind;
+use bmonn::coordinator::arms::PullEngine;
+use bmonn::coordinator::bandit::BanditParams;
+use bmonn::coordinator::knn::{knn_batch_points_dense_opts, BatchOptions,
+                              KnnResult, SpecStats};
+use bmonn::data::{synthetic, DenseDataset, Metric};
+use bmonn::metrics::Counter;
+use bmonn::runtime::build_host_engine;
+use bmonn::runtime::kernels::KernelChoice;
+use bmonn::runtime::native::NativeEngine;
+use bmonn::runtime::remote::{spawn_loopback_ring, RemoteEngine,
+                             RingClient};
+use bmonn::util::rng::Rng;
+
+/// The matrix workload: several uniform 32-pull rounds fit under the
+/// 192-coordinate cap after the 32-pull init wave, so cross-round
+/// speculation has rounds to predict (the default 256-pull rounds
+/// would cap every arm straight after init and leave speculation
+/// nothing to do).
+fn workload() -> (DenseDataset, Vec<usize>, BanditParams) {
+    let ds = synthetic::image_like(150, 192, 55);
+    let points: Vec<usize> = (0..12).map(|i| i * 11 % 150).collect();
+    let mut params = BanditParams { k: 3, ..Default::default() };
+    params.policy.round_pulls = 32;
+    (ds, points, params)
+}
+
+/// One batched run under a fresh seed-56 rng stream, returning the
+/// results plus speculation counters and the caller's Counter charge.
+fn run<E: PullEngine>(ds: &DenseDataset, points: &[usize],
+                      params: &BanditParams, engine: &mut E,
+                      speculate: bool)
+                      -> (Vec<KnnResult>, SpecStats, u64) {
+    let mut rng = Rng::new(56);
+    let mut c = Counter::new();
+    let opts = BatchOptions { deadline: None, speculate };
+    let (res, spec) = knn_batch_points_dense_opts(
+        ds, points, Metric::L2Sq, params, engine, &mut rng, &mut c,
+        opts);
+    (res, spec, c.get())
+}
+
+fn assert_bitwise(tag: &str, base: &[KnnResult], got: &[KnnResult]) {
+    assert_eq!(base.len(), got.len(), "{tag}: result count diverged");
+    for (b, g) in base.iter().zip(got) {
+        assert_eq!(b.ids, g.ids, "{tag}: ids diverged");
+        assert_eq!(b.dists, g.dists, "{tag}: dists diverged");
+    }
+}
+
+#[test]
+fn blocking_substrates_answer_identically_and_never_speculate() {
+    let (ds, points, params) = workload();
+    let mut solo = NativeEngine::default();
+    let (base, base_spec, base_units) =
+        run(&ds, &points, &params, &mut solo, false);
+    assert_eq!(base_spec, SpecStats::default(),
+               "speculation off must leave all counters at zero");
+    // solo with the flag raised: NativeEngine is blocking, so the flag
+    // must be inert — same answers, same units, zero counters
+    let mut solo_on = NativeEngine::default();
+    let (got, spec, units) =
+        run(&ds, &points, &params, &mut solo_on, true);
+    assert_bitwise("solo speculate=on", &base, &got);
+    assert_eq!(units, base_units, "solo speculate=on: units diverged");
+    assert_eq!(spec, SpecStats::default(),
+               "a blocking engine must never speculate");
+    // locally sharded engines, off and on
+    for shards in [2usize, 3] {
+        for speculate in [false, true] {
+            let mut engine = build_host_engine(
+                EngineKind::Native, shards, &[], false,
+                KernelChoice::Auto, false, false, None)
+                .unwrap();
+            let (got, spec, units) =
+                run(&ds, &points, &params, &mut engine, speculate);
+            let tag = format!("sharded={shards} speculate={speculate}");
+            assert_bitwise(&tag, &base, &got);
+            assert_eq!(units, base_units, "{tag}: units diverged");
+            assert_eq!(spec, SpecStats::default(),
+                       "{tag}: local shard pools are blocking — the \
+                        flag must be inert");
+        }
+    }
+}
+
+#[test]
+fn remote_rings_answer_identically_with_speculation_off_and_on() {
+    let (ds, points, params) = workload();
+    let mut solo = NativeEngine::default();
+    let (base, _, base_units) =
+        run(&ds, &points, &params, &mut solo, false);
+    for shards in [2usize, 3] {
+        let (_servers, endpoints) =
+            spawn_loopback_ring(&ds, shards).unwrap();
+        // off: the pipelined engine must not speculate uninvited
+        let mut engine = RemoteEngine::connect(&endpoints).unwrap();
+        let (got, spec, units) =
+            run(&ds, &points, &params, &mut engine, false);
+        assert_bitwise(&format!("ring={shards} speculate=off"), &base,
+                       &got);
+        assert_eq!(units, base_units,
+                   "ring={shards} speculate=off: units diverged");
+        assert_eq!(spec, SpecStats::default(),
+                   "ring={shards}: speculation off must leave all \
+                    counters at zero");
+        // on: bitwise-identical answers, real confirmed overlap, and
+        // the accounting invariant
+        let mut engine = RemoteEngine::connect(&endpoints).unwrap();
+        let (got, spec, units) =
+            run(&ds, &points, &params, &mut engine, true);
+        assert_bitwise(&format!("ring={shards} speculate=on"), &base,
+                       &got);
+        assert_eq!(units, base_units,
+                   "ring={shards} speculate=on: speculative waves must \
+                    never bill the caller's Counter");
+        assert!(spec.speculated > 0,
+                "ring={shards}: the workload has uniform rounds to \
+                 predict, yet nothing was speculated");
+        assert!(spec.confirmed > 0,
+                "ring={shards}: no speculated pull was ever confirmed \
+                 — the overlap path never engaged ({spec:?})");
+        assert_eq!(spec.speculated, spec.confirmed + spec.discarded,
+                   "ring={shards}: speculation accounting broke \
+                    ({spec:?})");
+    }
+}
+
+#[test]
+fn multiplexed_engines_sharing_one_client_stay_bitwise_under_speculation()
+{
+    let (ds, points, params) = workload();
+    let mut solo = NativeEngine::default();
+    let (base, _, base_units) =
+        run(&ds, &points, &params, &mut solo, false);
+    let (_servers, endpoints) = spawn_loopback_ring(&ds, 2).unwrap();
+    let client = Arc::new(RingClient::connect(&endpoints).unwrap());
+    // back-to-back: a speculating engine and a non-speculating engine
+    // run over the same per-shard connections — abandoned speculative
+    // waves from the first must never corrupt the second's demux
+    let mut eng_on = RemoteEngine::from_client(client.clone());
+    let mut eng_off = RemoteEngine::from_client(client.clone());
+    let (got_on, spec_on, units_on) =
+        run(&ds, &points, &params, &mut eng_on, true);
+    let (got_off, spec_off, units_off) =
+        run(&ds, &points, &params, &mut eng_off, false);
+    assert_bitwise("multiplexed speculate=on", &base, &got_on);
+    assert_bitwise("multiplexed speculate=off", &base, &got_off);
+    assert_eq!(units_on, base_units);
+    assert_eq!(units_off, base_units);
+    assert!(spec_on.confirmed > 0,
+            "multiplexed: speculation never confirmed ({spec_on:?})");
+    assert_eq!(spec_on.speculated,
+               spec_on.confirmed + spec_on.discarded);
+    assert_eq!(spec_off, SpecStats::default());
+    // concurrent: both drivers speculate at once on the shared client —
+    // interleaved tagged waves (including abandoned ones) must leave
+    // both answer streams bitwise-intact
+    let (res_a, res_b) = std::thread::scope(|sc| {
+        let spawn_driver = || {
+            let client = client.clone();
+            let (ds, points, params) = (&ds, &points, &params);
+            sc.spawn(move || {
+                let mut engine = RemoteEngine::from_client(client);
+                run(ds, points, params, &mut engine, true)
+            })
+        };
+        let ha = spawn_driver();
+        let hb = spawn_driver();
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    for (tag, (got, spec, units)) in
+        [("concurrent driver A", &res_a), ("concurrent driver B", &res_b)]
+    {
+        assert_bitwise(tag, &base, got);
+        assert_eq!(*units, base_units, "{tag}: units diverged");
+        assert_eq!(spec.speculated, spec.confirmed + spec.discarded,
+                   "{tag}: speculation accounting broke ({spec:?})");
+    }
+}
